@@ -1,0 +1,54 @@
+//! Ablation: the §III-B n-selection rule. Sweeps n across and beyond the
+//! recommended band on both videos and verifies the band's defining
+//! properties: below ⌈10/μ⌉ the output misses the 10 FPS perception
+//! floor; at ⌈λ/μ⌉ dropping (nearly) vanishes; beyond it extra devices
+//! only add idle capacity (diminishing mAP returns per stick).
+
+use eva::coordinator::{nselect, SchedulerKind};
+use eva::device::link::LinkProfile;
+use eva::device::{DetectorModelId, Fleet};
+use eva::experiments::common::{online_map, saturated_fps};
+use eva::util::table::{f, pct, Table};
+use eva::video::{generate, presets};
+
+fn main() {
+    let spec = presets::eth_sunnyday(31);
+    let clip = generate(&spec, None);
+    let model = DetectorModelId::Yolov3;
+    let mu = 2.5;
+    let band = nselect::recommended_range(spec.fps, mu);
+    println!("λ = {}, μ = {mu} -> band [{}, {}]\n", spec.fps, band.lo, band.hi);
+    assert_eq!((band.lo, band.hi), (4, 6)); // paper §III-B
+
+    let mut t = Table::new(
+        "n-selection ablation (ETH-Sunnyday, YOLOv3)",
+        &["n", "in band", "σ_P", "drop %", "mAP %", "idle capacity (FPS)"],
+    );
+    let mut results = Vec::new();
+    for n in 1..=8usize {
+        let fleet = Fleet::ncs2_sticks(n, model, LinkProfile::usb3());
+        let cap = saturated_fps(&clip, &fleet, SchedulerKind::Fcfs, 100 + n as u64);
+        let (map, drop) = online_map(&clip, &fleet, SchedulerKind::Fcfs, 200 + n as u64);
+        let idle = (cap - spec.fps).max(0.0);
+        t.row(vec![
+            format!("{n}"),
+            if band.contains(n) { "*".into() } else { "".into() },
+            f(cap, 1),
+            f(drop * 100.0, 1),
+            pct(map),
+            f(idle, 1),
+        ]);
+        results.push((n, cap, drop, map));
+    }
+    print!("{}", t.render());
+
+    // Below the band: capacity under the 10 FPS perception floor.
+    assert!(results[2].1 < nselect::PERCEPTION_FLOOR_FPS); // n = 3
+    assert!(results[3].1 >= nselect::PERCEPTION_FLOOR_FPS - 0.5); // n = 4
+    // At the conservative point: (almost) no drops.
+    assert!(results[5].2 < 0.08, "n=6 drop {}", results[5].2); // n = 6
+    // Beyond the band: mAP gain per stick collapses (< 1 point).
+    let gain = results[7].3 - results[5].3;
+    assert!(gain < 0.02, "n 6->8 mAP gain {gain:.3}");
+    println!("shape OK: floor at ⌈10/μ⌉, drops vanish at ⌈λ/μ⌉, diminishing returns beyond");
+}

@@ -1,0 +1,36 @@
+//! Regenerates the Figure 2/3 study: zero-drop vs online-with-dropping on
+//! ETH-Sunnyday with a single NCS2-class YOLOv3, including the per-frame
+//! staleness/alignment of frames 64–67, and checks §II-B's numbers: the
+//! online run drops ≈5 frames per processed frame and loses double-digit
+//! mAP (paper: 86.9 % -> 66.1 %).
+
+use eva::experiments::dropping;
+
+fn main() {
+    let (table, study) = dropping::fig2_3(29);
+    print!("{}", table.render());
+
+    // Zero-drop baseline near the paper's 86.9%.
+    assert!(
+        (study.map_zero_drop - 0.869).abs() < 0.08,
+        "zero-drop {:.3}",
+        study.map_zero_drop
+    );
+    // Dropping costs >= 10 mAP points (paper: ~21).
+    let delta = study.map_zero_drop - study.map_online_single;
+    assert!(delta > 0.10, "mAP delta {delta:.3}");
+    // Drop rate ≈ (λ-μ)/λ = (14-2.5)/14 ≈ 0.82.
+    assert!(
+        (study.online_drop_rate - 0.82).abs() < 0.06,
+        "drop rate {:.3}",
+        study.online_drop_rate
+    );
+    // Frames 64..67: mostly stale and increasingly misaligned.
+    let stale = study
+        .focus_frames
+        .iter()
+        .filter(|(_, s, _)| s.is_some())
+        .count();
+    assert!(stale >= 3, "{stale}/4 stale");
+    println!("shape OK: ~82% drops, double-digit mAP loss, stale frames misaligned");
+}

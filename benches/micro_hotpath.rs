@@ -1,0 +1,110 @@
+//! Micro-benchmarks of the L3 hot paths: DES event loop, scheduler
+//! dispatch, sequence synchronizer, NMS, mAP evaluation, clip generation.
+//! These feed EXPERIMENTS.md §Perf (before/after iteration log).
+
+use eva::coordinator::source::FrameWindow;
+use eva::coordinator::sync::{Fate, Synchronizer};
+use eva::coordinator::{run_online, RunConfig, SchedulerKind, SourceMode};
+use eva::device::link::LinkProfile;
+use eva::device::{DetectorModelId, Fleet};
+use eva::eval::{evaluate_map, nms};
+use eva::experiments::common::quality_detectors;
+use eva::types::{BBox, Detection, GtBox};
+use eva::util::benchkit::{black_box, Bench};
+use eva::util::Rng;
+use eva::video::{generate, presets};
+
+fn random_dets(rng: &mut Rng, n: usize) -> Vec<Detection> {
+    (0..n)
+        .map(|_| Detection {
+            bbox: BBox::new(rng.f32(), rng.f32(), 0.05 + 0.2 * rng.f32(), 0.05 + 0.2 * rng.f32()),
+            class_id: rng.below(3) as usize,
+            score: rng.f32(),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::standard();
+
+    // Full online DES run (the unit of every table cell).
+    let clip = generate(&presets::eth_sunnyday(1), None);
+    let fleet = Fleet::ncs2_sticks(7, DetectorModelId::Yolov3, LinkProfile::usb3());
+    b.run("des: online run (354 frames, 7 devices)", Some(354.0), || {
+        let cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Paced, 3);
+        run_online(&clip, &fleet, quality_detectors(&fleet, "eth_sunnyday", 4), &cfg)
+            .metrics
+            .frames_processed
+    });
+
+    // Synchronizer under heavy reorder.
+    b.run("sync: 10k frames, reversed completion", Some(10_000.0), || {
+        let mut s = Synchronizer::new();
+        let mut emitted = 0usize;
+        for chunk in (0..10_000u64).collect::<Vec<_>>().chunks(50) {
+            for &fid in chunk.iter().rev() {
+                emitted += s
+                    .resolve(fid, Fate::Processed { detections: vec![], device: 0 }, fid as f64, |f| f as f64)
+                    .len();
+            }
+        }
+        emitted
+    });
+
+    // Frame window arrive/pull cycle.
+    b.run("window: 100k arrive+pull", Some(100_000.0), || {
+        let mut w = FrameWindow::new(8);
+        let mut pulled = 0usize;
+        for f in 0..100_000u64 {
+            w.arrive(f);
+            if f % 2 == 0 {
+                pulled += usize::from(w.pull().is_some());
+            }
+        }
+        pulled
+    });
+
+    // NMS on realistic candidate sets.
+    let mut rng = Rng::new(9);
+    let dets100: Vec<Detection> = random_dets(&mut rng, 100);
+    b.run("nms: 100 candidates", Some(100.0), || {
+        nms(black_box(dets100.clone()), 0.45).len()
+    });
+    let dets1k: Vec<Detection> = random_dets(&mut rng, 1000);
+    b.run("nms: 1000 candidates", Some(1000.0), || {
+        nms(black_box(dets1k.clone()), 0.45).len()
+    });
+
+    // mAP evaluation over a full clip's worth of frames.
+    let gts: Vec<Vec<GtBox>> = (0..525)
+        .map(|_| {
+            (0..5)
+                .map(|i| GtBox {
+                    bbox: BBox::new(rng.f32(), rng.f32(), 0.1, 0.2),
+                    class_id: i % 3,
+                    track_id: i as u32,
+                })
+                .collect()
+        })
+        .collect();
+    let dets: Vec<Vec<Detection>> = gts
+        .iter()
+        .map(|g| {
+            g.iter()
+                .map(|gt| Detection { bbox: gt.bbox, class_id: gt.class_id, score: rng.f32() })
+                .collect()
+        })
+        .collect();
+    let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+    b.run("map: 525 frames x 5 objects", Some(525.0), || {
+        evaluate_map(&dets, &gt_refs, 3, 0.5).map
+    });
+
+    // Clip generation (metadata only vs rastered).
+    b.run("video: generate ETH clip (metadata)", Some(354.0), || {
+        generate(&presets::eth_sunnyday(5), None).len()
+    });
+    b.run("video: generate 96px clip (rastered, 60f)", Some(60.0), || {
+        generate(&presets::tiny_clip(96, 60, 10.0, 5), Some(96)).len()
+    });
+}

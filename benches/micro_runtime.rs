@@ -1,0 +1,51 @@
+//! Micro-benchmarks of the PJRT runtime path: artifact compile time and
+//! per-frame inference latency for both TinyDet variants (the real-work
+//! numbers behind the edge_serving example), plus input marshalling.
+//! Skips gracefully when artifacts are not built.
+
+use std::path::PathBuf;
+
+use eva::runtime::{load_manifest, ModelSpec};
+use eva::util::benchkit::{black_box, Bench};
+use eva::util::Rng;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    let Ok(manifest) = load_manifest(&dir) else {
+        println!("artifacts not built (run `make artifacts`); skipping runtime bench");
+        return;
+    };
+    let mut b = Bench::standard();
+
+    for name in ["essd", "eyolo"] {
+        let Some(meta) = manifest.get(name) else { continue };
+        let spec = ModelSpec::new(meta.clone());
+
+        // Compile time (paid once per worker at startup).
+        let mut built = None;
+        b.run(&format!("pjrt: build+compile {name}"), None, || {
+            built = Some(spec.build().unwrap());
+        });
+        let rt = built.unwrap();
+
+        // Input marshalling.
+        let rgb = vec![128u8; rt.meta().input_len()];
+        b.run(&format!("pjrt: pixels->input {name}"), Some(1.0), || {
+            rt.pixels_to_input(black_box(&rgb)).unwrap().len()
+        });
+
+        // Per-frame inference.
+        let mut rng = Rng::new(1);
+        let input: Vec<f32> = (0..rt.meta().input_len()).map(|_| rng.f32()).collect();
+        let m = b.run(&format!("pjrt: infer {name} (1 frame)"), Some(1.0), || {
+            rt.infer(black_box(&input)).unwrap().len()
+        });
+        let fps = 1.0 / m.mean.as_secs_f64();
+        println!(
+            "  -> {name}: {:.1} frames/s single-replica ({} MFLOPs/frame, {:.2} GFLOP/s)",
+            fps,
+            rt.meta().flops_per_frame / 1_000_000,
+            rt.meta().flops_per_frame as f64 * fps / 1e9,
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Regenerates Table X (Python vs C++ implementation scaling) and checks
+//! the motivating shape for this Rust coordinator: the GIL-bound
+//! implementation plateaus near 9.8 FPS from n = 3 on, while the
+//! compiled implementation scales ~7× to n = 7 (paper: 32.4), with
+//! Python slightly ahead at n = 1 (4.8 vs 4.5).
+
+use eva::experiments::lang;
+
+fn main() {
+    let (table, results) = lang::table10(23);
+    print!("{}", table.render());
+
+    let (_, py1, cpp1) = results[0];
+    assert!((py1 - 4.8).abs() < 0.4, "py n=1 {py1} (paper 4.8)");
+    assert!((cpp1 - 4.5).abs() < 0.4, "cpp n=1 {cpp1} (paper 4.5)");
+    assert!(py1 > cpp1, "python wins at n=1 (C++ sync overhead)");
+
+    for (n, py, _) in &results[2..] {
+        assert!((py - 9.8).abs() < 0.8, "py n={n} {py} (paper plateau ~9.7)");
+    }
+    let (_, _, cpp7) = results[6];
+    assert!(cpp7 > 28.0, "cpp n=7 {cpp7} (paper 32.4)");
+    let scaling = cpp7 / cpp1;
+    assert!(scaling > 6.0, "cpp scaling {scaling:.1}x (paper ~7x)");
+    println!("shape OK: GIL plateau ≈9.8; compiled scales ~7x");
+}

@@ -1,0 +1,49 @@
+//! Regenerates Table IV (parallel detection on ETH-Sunnyday) and checks
+//! the paper's shape: near-linear σ_P scaling (≈6.9× at n = 7), online
+//! single-device mAP far below the zero-drop baseline, and recovery to
+//! baseline within the §III-B band n ∈ [4, 6].
+
+use eva::experiments::parallel;
+use eva::util::benchkit::Bench;
+
+fn main() {
+    let (table, sweeps) = parallel::table4(7);
+    print!("{}", table.render());
+
+    // Shape assertions (paper values quoted in comments).
+    for s in &sweeps {
+        let mu = s.baseline.0;
+        let speedup = s.by_n[6].1 / s.by_n[0].1; // paper: 6.96x / 6.92x
+        assert!(
+            speedup > 6.0 && speedup < 7.5,
+            "{}: 7-stick speedup {speedup:.2}",
+            s.model.label()
+        );
+        // Linear region: each extra stick adds ≈ μ.
+        for (n, fps, _) in &s.by_n {
+            let ideal = mu * *n as f64;
+            assert!(
+                (fps - ideal).abs() / ideal < 0.1,
+                "{} n={n}: σ_P {fps:.1} vs ideal {ideal:.1}",
+                s.model.label()
+            );
+        }
+        // Dropping hurts; parallelism recovers (paper: 66.1 -> 86.9).
+        assert!(s.single_map < s.baseline.1 - 0.05);
+        let recovered = s.by_n[5].2; // n = 6
+        assert!(
+            (recovered - s.baseline.1).abs() < 0.06,
+            "{}: n=6 mAP {recovered:.3} vs baseline {:.3}",
+            s.model.label(),
+            s.baseline.1
+        );
+    }
+    println!("shape OK: linear scaling, ~6.9x at n=7, mAP recovery by n=6");
+
+    // Timing: how fast the whole table regenerates (DES speed).
+    let mut b = Bench::standard();
+    b.run("table4: full sweep (28 runs)", Some(28.0), || {
+        let (_, s) = parallel::table4(7);
+        s.len()
+    });
+}

@@ -1,0 +1,26 @@
+//! Regenerates Table VI (power efficiency) and checks the paper's
+//! ordering: NCS2 ≫ GPU > fast CPU > slow CPU in FPS/Watt, with the
+//! paper's exact figure of merit for NCS2 (1.25).
+
+use eva::experiments::energy;
+
+fn main() {
+    let (table, rows) = energy::table6();
+    print!("{}", table.render());
+
+    assert!((rows[0].fps_per_watt - 1.25).abs() < 1e-9); // NCS2, paper 1.25
+    assert!((rows[3].fps_per_watt - 0.14).abs() < 0.01); // Titan X, paper 0.14
+    assert!((rows[2].fps_per_watt - 0.11).abs() < 0.01); // fast CPU, paper 0.11
+    assert!(rows[1].fps_per_watt < 0.04); // slow CPU, paper 0.03
+    assert!(
+        rows[0].fps_per_watt > rows[3].fps_per_watt
+            && rows[3].fps_per_watt > rows[2].fps_per_watt
+            && rows[2].fps_per_watt > rows[1].fps_per_watt
+    );
+    println!("shape OK: NCS2 most energy-efficient (1.25 FPS/W), GPU > CPU");
+
+    let (tj, rows) = energy::joules_per_frame_comparison();
+    print!("{}", tj.render());
+    let stick = rows[0].1;
+    assert!(rows.iter().skip(3).all(|(_, j)| stick < *j));
+}

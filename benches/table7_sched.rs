@@ -1,0 +1,48 @@
+//! Regenerates Table VII (RR vs FCFS on homogeneous and heterogeneous
+//! fleets) and checks its three findings:
+//!   1. NCS2-only: RR ≈ FCFS (both ≈ n·μ);
+//!   2. fast CPU + sticks: FCFS ≫ RR (29 vs 20.1 at n = 7);
+//!   3. slow CPU + sticks: RR collapses (3.4 at n = 7) while FCFS gets
+//!      sticks + 0.4 (17.9).
+//! Also prints the all-scheduler ablation (WRR + proportional).
+
+use eva::coordinator::SchedulerKind;
+use eva::experiments::sched::{self, FleetFamily};
+
+fn main() {
+    let (table, sweeps) = sched::table7(17);
+    print!("{}", table.render());
+
+    let get = |k: SchedulerKind, f: FleetFamily, n: usize| -> f64 {
+        sweeps
+            .iter()
+            .find(|s| s.scheduler == k && s.family == f)
+            .and_then(|s| s.by_n[n].1)
+            .unwrap_or(f64::NAN)
+    };
+    use FleetFamily::*;
+    use SchedulerKind::*;
+
+    // (1) homogeneous: similar (RR's barrier pays max-of-n service-time
+    // jitter per round, a few percent behind work-conserving FCFS).
+    for n in [1usize, 4, 7] {
+        let rr = get(RoundRobin, Ncs2Only, n);
+        let fc = get(Fcfs, Ncs2Only, n);
+        assert!((rr - fc).abs() / fc < 0.08, "n={n}: rr {rr} fcfs {fc}");
+    }
+    // (2) fast CPU: FCFS ≈ 13.5 + 2.5n; RR ≈ 2.5(n+1).
+    let fc7 = get(Fcfs, FastCpuPlusNcs2, 7);
+    let rr7 = get(RoundRobin, FastCpuPlusNcs2, 7);
+    assert!((fc7 - 31.0).abs() < 2.5, "fcfs fast+7: {fc7} (paper 29.0)");
+    assert!((rr7 - 19.8).abs() < 1.5, "rr fast+7: {rr7} (paper 20.1)");
+    assert!(fc7 > rr7 + 6.0);
+    // (3) slow CPU: RR collapses to ≈ (n+1)/2.5s-round pace.
+    let rr_slow7 = get(RoundRobin, SlowCpuPlusNcs2, 7);
+    let fc_slow7 = get(Fcfs, SlowCpuPlusNcs2, 7);
+    assert!((rr_slow7 - 3.2).abs() < 0.5, "rr slow+7 {rr_slow7} (paper 3.4)");
+    assert!((fc_slow7 - 17.9).abs() < 1.2, "fcfs slow+7 {fc_slow7} (paper 17.9)");
+    println!("shape OK: RR==FCFS homogeneous; FCFS wins heterogeneous; RR straggler collapse");
+
+    let (ablation, _) = sched::scheduler_ablation(18);
+    print!("{}", ablation.render());
+}

@@ -1,0 +1,41 @@
+//! Regenerates Table IX (USB 2.0 vs 3.0) and checks the signature shape:
+//! USB 3.0 scales linearly for both models; USB 2.0 costs ~0.3-0.5 FPS at
+//! n = 1 and caps YOLOv3 (larger payload) near 8 FPS at n ≥ 5 while
+//! SSD300 keeps scaling to 13+ at n = 7. Also prints the Table VIII link
+//! projection extension.
+
+use eva::device::link::LinkProfile;
+use eva::device::DetectorModelId;
+use eva::experiments::links;
+
+fn main() {
+    let (table, sweeps) = links::table9(19);
+    print!("{}", table.render());
+
+    let find = |m: DetectorModelId, l: &str| {
+        sweeps
+            .iter()
+            .find(|s| s.model == m && s.link.name == l)
+            .unwrap()
+    };
+    let yolo2 = find(DetectorModelId::Yolov3, "USB 2.0");
+    let yolo3 = find(DetectorModelId::Yolov3, "USB 3.0");
+    let ssd2 = find(DetectorModelId::Ssd300, "USB 2.0");
+
+    // n = 1 rates (paper: 1.9 / 2.5 / 2.0).
+    assert!((yolo2.by_n[0].1 - 1.9).abs() < 0.15, "{}", yolo2.by_n[0].1);
+    assert!((yolo3.by_n[0].1 - 2.5).abs() < 0.15, "{}", yolo3.by_n[0].1);
+    assert!((ssd2.by_n[0].1 - 2.0).abs() < 0.15, "{}", ssd2.by_n[0].1);
+    // YOLO USB2 plateau at ~8 (paper: 8.1 / 8.0 / 8.1 for n = 5..7).
+    for i in 4..7 {
+        assert!((yolo2.by_n[i].1 - 8.0).abs() < 0.7, "n={} {}", i + 1, yolo2.by_n[i].1);
+    }
+    // SSD USB2 keeps growing to ~13 (paper 13.2).
+    assert!((ssd2.by_n[6].1 - 13.4).abs() < 1.0, "{}", ssd2.by_n[6].1);
+    // USB3 linear to 17+ (paper 17.3).
+    assert!((yolo3.by_n[6].1 - 17.3).abs() < 0.8, "{}", yolo3.by_n[6].1);
+    println!("shape OK: USB2 plateau for YOLO at ~8 FPS, SSD scales, USB3 linear");
+
+    let (proj, _) = links::link_projection(20);
+    print!("{}", proj.render());
+}

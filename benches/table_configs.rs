@@ -1,0 +1,36 @@
+//! Regenerates the configuration tables: I (videos), II (models),
+//! III (edge servers) and VIII (link bandwidths), asserting the paper's
+//! constants survive in the registries.
+
+use eva::experiments::configs;
+
+fn main() {
+    let t1 = configs::table1();
+    print!("{}", t1.render());
+    let r1 = t1.render();
+    assert!(r1.contains("525") && r1.contains("354"));
+    assert!(r1.contains("1920x1080") && r1.contains("640x480"));
+
+    let t2 = configs::table2();
+    print!("{}", t2.render());
+    let r2 = t2.render();
+    assert!(r2.contains("300x300x3") && r2.contains("416x416x3"));
+    assert!(r2.contains("51MB") && r2.contains("119MB"));
+
+    if let Some(t) = configs::table2_tinydet(std::path::Path::new("artifacts")) {
+        print!("{}", t.render());
+    } else {
+        println!("(TinyDet manifest not built; run `make artifacts`)");
+    }
+
+    let t3 = configs::table3();
+    print!("{}", t3.render());
+
+    let t8 = configs::table8();
+    print!("{}", t8.render());
+    let r8 = t8.render();
+    for link in ["USB 2.0", "USB 3.0", "10 Gigabit Ethernet", "WiFi 6", "4G", "5G"] {
+        assert!(r8.contains(link), "{link}");
+    }
+    println!("config tables OK");
+}

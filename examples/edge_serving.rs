@@ -1,0 +1,115 @@
+//! End-to-end serving driver (the repo's required full-stack proof):
+//! loads the AOT-compiled TinyDet (L1 Pallas matmul inside, L2 JAX graph,
+//! compiled once at build time), generates a real synthetic clip with
+//! pixels, and serves it through the L3 real-time pipeline — paced
+//! ingestion, FCFS worker pool, sequence synchronizer — reporting
+//! latency, throughput, drop rate and measured mAP.
+//!
+//! Run `make artifacts` first, then:
+//!
+//! ```sh
+//! cargo run --release --example edge_serving            # defaults
+//! EVA_WORKERS=4 EVA_FPS=30 cargo run --release --example edge_serving
+//! ```
+//!
+//! Python is NOT on this path: the binary only reads artifacts/*.hlo.txt.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+use eva::detector::pjrt::PjrtDetectorFactory;
+use eva::detector::Detector;
+use eva::experiments::common::map_against;
+use eva::runtime::{load_manifest, ModelSpec};
+use eva::server::{serve, ServeConfig};
+use eva::video::{generate, presets};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let model: String = env_or("EVA_MODEL", "essd".to_string());
+    let workers: usize = env_or("EVA_WORKERS", 3);
+    let fps: f64 = env_or("EVA_FPS", 20.0);
+    let frames: u32 = env_or("EVA_FRAMES", 120);
+    let seed: u64 = env_or("EVA_SEED", 7);
+    // Emulated accelerator service time (ms): real TinyDet inference takes
+    // ~3 ms on this host CPU, so without a throttle λ ≪ μ and the paper's
+    // regime never appears. 150 ms ≈ a 6.7 FPS NCS2-class device (the
+    // paper's substitution, DESIGN.md §3). Set 0 to disable.
+    let throttle_ms: u64 = env_or("EVA_THROTTLE_MS", 150);
+
+    let dir = PathBuf::from(env_or("EVA_ARTIFACTS", "artifacts".to_string()));
+    let manifest = load_manifest(&dir)
+        .map_err(|e| anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    let meta = manifest
+        .get(&model)
+        .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?
+        .clone();
+    println!(
+        "model {}: input {}x{}, grid {}x{}, {} params, {:.1} MFLOPs/frame",
+        meta.name,
+        meta.input_size,
+        meta.input_size,
+        meta.grid,
+        meta.grid,
+        meta.params,
+        meta.flops_per_frame as f64 / 1e6,
+    );
+
+    let mut factory = PjrtDetectorFactory::new(ModelSpec::new(meta.clone()));
+    if throttle_ms > 0 {
+        factory = factory
+            .with_min_service(std::time::Duration::from_millis(throttle_ms));
+        println!(
+            "emulated accelerator: ≥{throttle_ms} ms/frame (μ ≈ {:.1} FPS per replica)",
+            1000.0 / throttle_ms as f64
+        );
+    }
+    let size = meta.input_size;
+    println!("generating clip: {frames} frames @ {fps} FPS, {size}x{size}, seed {seed}");
+    let mut spec = presets::tiny_clip(size, frames, fps, seed);
+    // Street-scene object speeds (so stale boxes misalign measurably).
+    spec.min_speed = 0.35;
+    spec.max_speed = 0.80;
+    let clip = generate(&spec, Some(size));
+
+    // Serve single-replica first (the paper's "single AI hardware"
+    // baseline), then the parallel pool.
+    for (label, w) in [("single replica", 1usize), ("parallel pool", workers)] {
+        let cfg = ServeConfig {
+            workers: w,
+            window: None,
+            paced: true,
+        };
+        let report = serve(&clip, &cfg, |worker| {
+            let det = factory.build()?;
+            if worker == 0 {
+                println!("  [worker 0] {} ready", det.label());
+            }
+            Ok(Box::new(det) as Box<dyn Detector>)
+        })?;
+        let mut m = report.metrics;
+        let dets: Vec<Vec<eva::types::Detection>> =
+            report.records.iter().map(|r| r.detections.clone()).collect();
+        let map = map_against(&clip, &dets);
+        println!("\n== {label} (workers = {w}) ==");
+        println!("  {}", m.summary());
+        println!(
+            "  throughput {:.1} FPS over {:.2}s wall, mAP {:.1}%",
+            m.frames_processed as f64 / report.wall.as_secs_f64(),
+            report.wall.as_secs_f64(),
+            map * 100.0
+        );
+        for (i, (frames, mean)) in report.worker_stats.iter().enumerate() {
+            if *frames > 0 {
+                println!("  worker {i}: {frames} frames, mean inference {:.1} ms", mean * 1e3);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,141 @@
+"""AOT pipeline: train TinyDet variants, lower to HLO text, emit manifest.
+
+Runs once via ``make artifacts``. Emits, per variant:
+
+  artifacts/<name>.hlo.txt     — HLO text of the full inference graph
+                                 (Pallas conv path, weights baked as
+                                 constants, in-graph decode)
+  artifacts/<name>.weights.npz — trained weights (cache: retrain is skipped
+                                 when present unless --retrain)
+  artifacts/manifest.json      — shapes/grid/decode metadata for the Rust
+                                 runtime
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids.
+See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import matmul as pallas_matmul
+from .model import CLASSES, VARIANTS, TinyDetConfig, flops_estimate, make_inference_fn, num_params
+from .train import train
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is REQUIRED: the default HLO printer
+    # elides big constants ("{...}"), and the text parser then reads the
+    # baked TinyDet weights back as zeros — the artifact would silently
+    # predict nothing but head biases.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def save_weights(path: str, params) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_weights(path: str):
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}
+
+
+def sanity_check(params, cfg: TinyDetConfig) -> float:
+    """Pallas vs reference inference paths must agree on a random frame."""
+    from .model import forward
+
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.uniform(0, 1, (1, cfg.input_size, cfg.input_size, 3)),
+                    jnp.float32)
+    out_p = forward(params, x, cfg, use_pallas=True)
+    out_r = forward(params, x, cfg, use_pallas=False)
+    err = float(jnp.max(jnp.abs(out_p - out_r)))
+    if err > 1e-3:
+        raise AssertionError(f"pallas/ref divergence {err} for {cfg.name}")
+    return err
+
+
+def build_variant(name: str, out_dir: str, steps: int, retrain: bool) -> dict:
+    cfg = VARIANTS[name]
+    wpath = os.path.join(out_dir, f"{name}.weights.npz")
+    if os.path.exists(wpath) and not retrain:
+        print(f"[aot] {name}: reusing cached weights {wpath}", flush=True)
+        params = load_weights(wpath)
+    else:
+        print(f"[aot] {name}: training {steps} steps ...", flush=True)
+        params = train(cfg, steps=steps)
+        save_weights(wpath, params)
+
+    err = sanity_check(params, cfg)
+    print(f"[aot] {name}: pallas-vs-ref max|err| = {err:.2e}", flush=True)
+
+    infer = make_inference_fn(params, cfg, use_pallas=True)
+    spec = jax.ShapeDtypeStruct((1, cfg.input_size, cfg.input_size, 3), jnp.float32)
+    t0 = time.time()
+    lowered = jax.jit(infer).lower(spec)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    print(f"[aot] {name}: wrote {len(text)} chars to {hlo_path} "
+          f"({time.time() - t0:.1f}s)", flush=True)
+
+    return {
+        "name": name,
+        "hlo": f"{name}.hlo.txt",
+        "input_shape": [1, cfg.input_size, cfg.input_size, 3],
+        "input_size": cfg.input_size,
+        "grid": cfg.grid,
+        "num_classes": cfg.num_classes,
+        "classes": CLASSES,
+        "out_rows": cfg.out_rows,
+        "out_cols": cfg.out_cols,
+        "row_layout": ["objectness", "cx", "cy", "w", "h", "class_probs..."],
+        "params": num_params(params),
+        "flops_per_frame": flops_estimate(cfg),
+        "pallas_blocks": {
+            "bm": pallas_matmul.DEFAULT_BM,
+            "bn": pallas_matmul.DEFAULT_BN,
+            "bk": pallas_matmul.DEFAULT_BK,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="TinyDet AOT pipeline")
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--steps", type=int, default=400, help="training steps")
+    ap.add_argument("--retrain", action="store_true", help="ignore weight cache")
+    ap.add_argument("--variants", default="essd,eyolo")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name in args.variants.split(","):
+        entries.append(build_variant(name.strip(), out_dir, args.steps, args.retrain))
+
+    manifest = {"format": 1, "models": entries}
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mpath}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Conv2D lowered to im2col + the Pallas tiled matmul.
+
+This is the TPU re-think of the paper's VPU conv workload (DESIGN.md §4):
+instead of per-SHAVE-slice scheduling, patches are gathered once (im2col is
+a pure data-movement op that XLA fuses) and the entire FLOP budget of the
+layer funnels through the single MXU-shaped Pallas matmul in ``matmul.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as pallas_matmul
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """NHWC image -> (N*OH*OW, KH*KW*C) patch matrix (VALID padding)."""
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            patches.append(sl)
+    stacked = jnp.stack(patches, axis=3)  # (N, OH, OW, KH*KW, C)
+    return stacked.reshape(n * oh * ow, kh * kw * c)
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """NHWC conv2d, VALID padding, via im2col + Pallas matmul.
+
+    Args:
+      x: ``(N, H, W, Cin)`` input.
+      w: ``(KH, KW, Cin, Cout)`` HWIO filter.
+      stride: spatial stride.
+
+    Returns:
+      ``(N, OH, OW, Cout)`` fp32 output.
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    if cin != cin2:
+        raise ValueError(f"conv2d channel mismatch: {x.shape} vs {w.shape}")
+    oh = (h - kh) // stride + 1
+    ow = (wdt - kw) // stride + 1
+
+    cols = im2col(x, kh, kw, stride)  # (N*OH*OW, KH*KW*Cin)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = pallas_matmul.matmul(cols, wmat)  # (N*OH*OW, Cout)
+    return out.reshape(n, oh, ow, cout)
+
+
+def conv2d_same(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """SAME-padded conv2d built on :func:`conv2d`.
+
+    Pads spatially so that ``OH = ceil(H / stride)`` (TensorFlow SAME rule).
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, _, _ = w.shape
+    oh = -(-h // stride)
+    ow = -(-wdt // stride)
+    pad_h = max((oh - 1) * stride + kh - h, 0)
+    pad_w = max((ow - 1) * stride + kw - wdt, 0)
+    x = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pad_h // 2, pad_h - pad_h // 2),
+            (pad_w // 2, pad_w - pad_w // 2),
+            (0, 0),
+        ),
+    )
+    return conv2d(x, w, stride)

@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: tiled matmul for the TinyDet conv/dense hot path.
+
+This is the compute hot-spot of the whole detector: every convolution is
+lowered to im2col + this matmul (see ``conv.py``), so a single well-tiled
+kernel covers the entire inference FLOP budget.
+
+TPU adaptation of the paper's VPU workload (DESIGN.md §4): the grid tiles
+``(M, K) x (K, N)`` into ``(BM, BK) @ (BK, BN)`` blocks shaped for the MXU
+systolic array — the lane dimension (last axis) is a multiple of 128 and the
+sublane dimension a multiple of 8 whenever the problem size allows.  The
+``BlockSpec`` index maps express the HBM->VMEM schedule; accumulation over
+the K grid axis happens in a VMEM scratch-free accumulator pattern (output
+block revisited across k steps), which Mosaic double-buffers on real TPUs.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the AOT
+artifact runs anywhere (including the Rust PJRT client).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes.  Chosen for MXU friendliness (128-lane, 8-sublane)
+# while staying well inside VMEM:  fp32 footprint per step =
+# BM*BK + BK*BN + BM*BN floats = (128*128)*3*4B = 192 KiB << 16 MiB VMEM.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j].
+
+    The output block is revisited for every k; on the first visit it is
+    zero-initialised.  fp32 accumulation regardless of input dtype (MXU
+    accumulates in fp32).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, pref: int, unit: int) -> int:
+    """Largest block <= pref that divides dim, preferring multiples of unit.
+
+    Pallas (interpret mode included) wants the grid to cover the array
+    exactly; rather than padding inside the kernel we pick a divisor block.
+    Preference order: multiples of ``unit`` (MXU lane/sublane alignment),
+    then any divisor.
+    """
+    if dim <= pref:
+        return dim
+    best = 1
+    for b in range(pref, 0, -1):
+        if dim % b == 0:
+            if b % unit == 0:
+                return b
+            if best == 1:
+                best = b
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """Pallas tiled matmul: ``x @ y`` with fp32 accumulation.
+
+    Args:
+      x: ``(M, K)`` array (fp32 or bf16).
+      y: ``(K, N)`` array (same dtype family).
+      bm/bn/bk: preferred block sizes; shrunk to exact divisors of the
+        problem dims (MXU-aligned when possible).
+
+    Returns:
+      ``(M, N)`` fp32 array.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+
+    bm = _pick_block(m, bm, 8)
+    bn = _pick_block(n, bn, 128)
+    bk = _pick_block(k, bk, 128)
+    grid = (m // bm, n // bn, k // bk)
+
+    kernel = functools.partial(_matmul_kernel, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (for DESIGN/EXPERIMENTS §Perf)."""
+    return dtype_bytes * (bm * bk + bk * bn) + 4 * (bm * bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU lanes busy, assuming 128x128 systolic tiles.
+
+    Utilization is the ratio of useful MACs to MACs issued when each
+    (bm, bk)x(bk, bn) block is zero-padded up to 8x128-aligned tiles.
+    """
+    def up(v: int, u: int) -> int:
+        return ((v + u - 1) // u) * u
+
+    useful = m * n * k
+    padded = up(bm, 8) * up(bn, 128) * up(bk, 128)
+    steps = (m // bm) * (n // bn) * (k // bk)
+    issued = padded * steps
+    return useful / issued if issued else 0.0

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: ``python/tests/test_kernel.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these references to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference ``x @ y`` with fp32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def im2col_ref(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """Reference im2col: NHWC image -> (N*OH*OW, KH*KW*C) patch matrix."""
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            patches.append(sl)
+    # list of (N, OH, OW, C) -> (N, OH, OW, KH*KW, C)
+    stacked = jnp.stack(patches, axis=3)
+    return stacked.reshape(n * oh * ow, kh * kw * c)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Reference NHWC conv2d (VALID padding) via lax.conv_general_dilated.
+
+    ``w`` is HWIO: (KH, KW, Cin, Cout).
+    """
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

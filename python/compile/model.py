@@ -1,0 +1,207 @@
+"""L2: TinyDet — single-shot grid detector in JAX, calling the L1 kernels.
+
+TinyDet is the edge-scale stand-in for the paper's SSD300/YOLOv3 (DESIGN.md
+§3): a real conv detector, trained at build time on the synthetic object
+distribution that the Rust video substrate generates, then AOT-lowered to
+HLO text and served by the Rust coordinator via PJRT.
+
+Two variants mirror the paper's two models:
+
+  * ``essd``  — 96x96 input, 3-stage backbone, 12x12 grid  (SSD300 analog)
+  * ``eyolo`` — 128x128 input, 4-stage backbone, 16x16 grid (YOLOv3 analog,
+                ~2x the FLOPs of ``essd``, mirroring the input-size ratio)
+
+Architecture (anchor-free, one box per grid cell):
+
+  backbone: [conv3x3 s2 + leaky_relu] per stage      (SAME padding)
+  head:     conv3x3 s1 -> (G, G, 5 + C)
+  decode:   in-graph sigmoid/softmax + cell offsets ->
+            (G*G, 5 + C) rows = [score, cx, cy, w, h, p_class...]
+            with cx/cy/w/h normalised to [0, 1] image coordinates.
+
+The decode lives inside the lowered HLO so the Rust hot path only
+thresholds + runs NMS. Every conv funnels through the Pallas matmul
+(``kernels/conv.py``); training uses the pure-jnp reference path
+(``use_pallas=False``) for speed — pytest asserts the two paths agree, so
+weights transfer exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as pallas_conv
+from .kernels import ref as kref
+
+# Object classes shared with the Rust video substrate (rust/src/video).
+CLASSES: List[str] = ["person", "cyclist", "car"]
+NUM_CLASSES = len(CLASSES)
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyDetConfig:
+    """Static architecture description for one TinyDet variant."""
+
+    name: str
+    input_size: int                 # square input, pixels
+    channels: tuple                 # backbone stage widths (all stride 2)
+    extra_convs: int                # stride-1 3x3 convs after the backbone
+    head_channels: int              # width of the pre-head conv
+    num_classes: int = NUM_CLASSES
+
+    @property
+    def grid(self) -> int:
+        return self.input_size // (2 ** len(self.channels))
+
+    @property
+    def out_rows(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def out_cols(self) -> int:
+        return 5 + self.num_classes
+
+
+VARIANTS: Dict[str, TinyDetConfig] = {
+    # SSD300 analog: smaller input, shallower.
+    "essd": TinyDetConfig(
+        name="essd", input_size=96, channels=(16, 32, 64), extra_convs=0,
+        head_channels=64,
+    ),
+    # YOLOv3 analog: larger input, deeper (~2x essd FLOPs).
+    "eyolo": TinyDetConfig(
+        name="eyolo", input_size=128, channels=(24, 48, 96), extra_convs=2,
+        head_channels=96,
+    ),
+}
+
+
+def leaky_relu(x: jax.Array) -> jax.Array:
+    return jnp.where(x >= 0, x, 0.1 * x)
+
+
+def init_params(cfg: TinyDetConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    """He-initialised parameters for a TinyDet variant."""
+    params: Dict[str, jax.Array] = {}
+    cin = 3
+    idx = 0
+
+    def conv_init(k, kh, kw, ci, co):
+        scale = jnp.sqrt(2.0 / (kh * kw * ci))
+        return jax.random.normal(k, (kh, kw, ci, co), jnp.float32) * scale
+
+    for co in cfg.channels:
+        key, sub = jax.random.split(key)
+        params[f"w{idx}"] = conv_init(sub, 3, 3, cin, co)
+        params[f"b{idx}"] = jnp.zeros((co,), jnp.float32)
+        cin = co
+        idx += 1
+    for _ in range(cfg.extra_convs):
+        key, sub = jax.random.split(key)
+        params[f"w{idx}"] = conv_init(sub, 3, 3, cin, cin)
+        params[f"b{idx}"] = jnp.zeros((cin,), jnp.float32)
+        idx += 1
+    key, sub = jax.random.split(key)
+    params[f"w{idx}"] = conv_init(sub, 3, 3, cin, cfg.head_channels)
+    params[f"b{idx}"] = jnp.zeros((cfg.head_channels,), jnp.float32)
+    idx += 1
+    key, sub = jax.random.split(key)
+    params[f"w{idx}"] = conv_init(sub, 1, 1, cfg.head_channels, cfg.out_cols)
+    # Bias the objectness logit negative so early training predicts "empty".
+    bias = jnp.zeros((cfg.out_cols,), jnp.float32).at[0].set(-4.0)
+    params[f"b{idx}"] = bias
+    return params
+
+
+def num_params(params: Dict[str, jax.Array]) -> int:
+    return int(sum(p.size for p in params.values()))
+
+
+def _conv_same(x, w, stride, use_pallas: bool):
+    if use_pallas:
+        return pallas_conv.conv2d_same(x, w, stride)
+    # Reference path: SAME-padded lax conv (fast; used in training).
+    kh, kw = w.shape[0], w.shape[1]
+    h, wd = x.shape[1], x.shape[2]
+    oh = -(-h // stride)
+    ow = -(-wd // stride)
+    pad_h = max((oh - 1) * stride + kh - h, 0)
+    pad_w = max((ow - 1) * stride + kw - wd, 0)
+    x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                    (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    return kref.conv2d_ref(x, w, stride)
+
+
+def raw_head(params: Dict[str, jax.Array], x: jax.Array, cfg: TinyDetConfig,
+             use_pallas: bool = True) -> jax.Array:
+    """Backbone + head logits: (N, S, S, 3) -> (N, G, G, 5+C)."""
+    idx = 0
+    for _ in cfg.channels:
+        x = _conv_same(x, params[f"w{idx}"], 2, use_pallas) + params[f"b{idx}"]
+        x = leaky_relu(x)
+        idx += 1
+    for _ in range(cfg.extra_convs):
+        x = _conv_same(x, params[f"w{idx}"], 1, use_pallas) + params[f"b{idx}"]
+        x = leaky_relu(x)
+        idx += 1
+    x = _conv_same(x, params[f"w{idx}"], 1, use_pallas) + params[f"b{idx}"]
+    x = leaky_relu(x)
+    idx += 1
+    x = _conv_same(x, params[f"w{idx}"], 1, use_pallas) + params[f"b{idx}"]
+    return x
+
+
+def decode(logits: jax.Array, cfg: TinyDetConfig) -> jax.Array:
+    """In-graph decode: (N, G, G, 5+C) logits -> (N, G*G, 5+C) detections.
+
+    Output row layout: [objectness, cx, cy, w, h, class_probs...] with all
+    geometry normalised to [0, 1] image coordinates. This runs inside the
+    AOT artifact so the Rust side only thresholds + NMS.
+    """
+    n, g, _, _ = logits.shape
+    obj = jax.nn.sigmoid(logits[..., 0:1])
+    txy = jax.nn.sigmoid(logits[..., 1:3])
+    twh = jax.nn.sigmoid(logits[..., 3:5])
+    cls = jax.nn.softmax(logits[..., 5:], axis=-1)
+
+    ys, xs = jnp.meshgrid(jnp.arange(g), jnp.arange(g), indexing="ij")
+    cell = jnp.stack([xs, ys], axis=-1).astype(jnp.float32)  # (G, G, 2) as (x, y)
+    cxy = (cell + txy) / g
+    out = jnp.concatenate([obj, cxy, twh, cls], axis=-1)
+    return out.reshape(n, g * g, cfg.out_cols)
+
+
+def forward(params: Dict[str, jax.Array], x: jax.Array, cfg: TinyDetConfig,
+            use_pallas: bool = True) -> jax.Array:
+    """Full inference: image batch -> decoded detection rows."""
+    return decode(raw_head(params, x, cfg, use_pallas), cfg)
+
+
+def make_inference_fn(params: Dict[str, jax.Array], cfg: TinyDetConfig,
+                      use_pallas: bool = True) -> Callable[[jax.Array], tuple]:
+    """Close over trained weights (baked as HLO constants when lowered)."""
+
+    def infer(x: jax.Array):
+        return (forward(params, x, cfg, use_pallas=use_pallas),)
+
+    return infer
+
+
+def flops_estimate(cfg: TinyDetConfig) -> int:
+    """Analytic MAC count for one frame (for DESIGN.md cost calibration)."""
+    total = 0
+    s = cfg.input_size
+    cin = 3
+    for co in cfg.channels:
+        s = -(-s // 2)
+        total += s * s * 3 * 3 * cin * co
+        cin = co
+    for _ in range(cfg.extra_convs):
+        total += s * s * 3 * 3 * cin * cin
+    total += s * s * 3 * 3 * cin * cfg.head_channels
+    total += s * s * cfg.head_channels * cfg.out_cols
+    return 2 * total

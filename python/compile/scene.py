@@ -1,0 +1,113 @@
+"""Synthetic scene generator for TinyDet training.
+
+Mirrors the Rust video substrate (``rust/src/video``): textured background
+plus solid-ish rectangles of three object classes with class-specific aspect
+ratios and colours. Keeping the two generators statistically aligned is what
+makes the build-time-trained TinyDet work on the Rust-generated clips in the
+end-to-end serving example.
+
+Class appearance contract (shared with rust/src/video/objects.rs):
+  person  — tall  (aspect h/w ~ 2.6), reddish   (r high, g/b low)
+  cyclist — square (aspect ~ 1.1),    bluish    (b high)
+  car     — wide  (aspect ~ 0.45),    greenish  (g high)
+Background: low-frequency grayish noise in [0.25, 0.65].
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .model import NUM_CLASSES
+
+# (aspect h/w, base colour rgb) per class — keep in sync with Rust.
+CLASS_APPEARANCE = [
+    (2.6, (0.85, 0.25, 0.20)),   # person
+    (1.1, (0.25, 0.30, 0.85)),   # cyclist
+    (0.45, (0.20, 0.80, 0.30)),  # car
+]
+
+
+def render_background(rng: np.random.Generator, size: int) -> np.ndarray:
+    """Low-frequency grayish noise background, (S, S, 3) float32 in [0,1]."""
+    coarse = rng.uniform(0.25, 0.65, size=(size // 8 + 1, size // 8 + 1))
+    idx = np.arange(size) / 8.0
+    xi = np.clip(idx.astype(np.int32), 0, coarse.shape[0] - 2)
+    fx = (idx - xi).astype(np.float32)
+    row = coarse[xi, :] * (1 - fx)[:, None] + coarse[xi + 1, :] * fx[:, None]
+    col = row[:, xi] * (1 - fx)[None, :] + row[:, xi + 1] * fx[None, :]
+    img = np.repeat(col[:, :, None], 3, axis=2).astype(np.float32)
+    img += rng.normal(0, 0.02, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def draw_object(
+    img: np.ndarray,
+    rng: np.random.Generator,
+    cls: int,
+    cx: float,
+    cy: float,
+    height: float,
+) -> Tuple[float, float, float, float]:
+    """Rasterise one object; returns its (cx, cy, w, h) in [0,1] coords."""
+    size = img.shape[0]
+    aspect, colour = CLASS_APPEARANCE[cls]
+    h = height
+    w = h / aspect
+    x0 = int(round((cx - w / 2) * size))
+    x1 = int(round((cx + w / 2) * size))
+    y0 = int(round((cy - h / 2) * size))
+    y1 = int(round((cy + h / 2) * size))
+    x0c, x1c = max(x0, 0), min(x1, size)
+    y0c, y1c = max(y0, 0), min(y1, size)
+    if x1c <= x0c or y1c <= y0c:
+        return (cx, cy, w, h)
+    shade = rng.uniform(0.75, 1.15)
+    block = np.array(colour, np.float32) * shade
+    img[y0c:y1c, x0c:x1c, :] = np.clip(
+        block[None, None, :]
+        + rng.normal(0, 0.04, (y1c - y0c, x1c - x0c, 3)).astype(np.float32),
+        0.0,
+        1.0,
+    )
+    # Darker border helps localisation.
+    if y1c - y0c > 2 and x1c - x0c > 2:
+        img[y0c, x0c:x1c, :] *= 0.5
+        img[y1c - 1, x0c:x1c, :] *= 0.5
+        img[y0c:y1c, x0c, :] *= 0.5
+        img[y0c:y1c, x1c - 1, :] *= 0.5
+    return (cx, cy, w, h)
+
+
+def make_scene(
+    rng: np.random.Generator, size: int, max_objects: int = 4
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One training scene.
+
+    Returns:
+      image:  (S, S, 3) float32 in [0, 1]
+      boxes:  (max_objects, 6) float32 rows [valid, cls, cx, cy, w, h]
+    """
+    img = render_background(rng, size)
+    n = int(rng.integers(1, max_objects + 1))
+    boxes = np.zeros((max_objects, 6), np.float32)
+    for i in range(n):
+        cls = int(rng.integers(0, NUM_CLASSES))
+        height = float(rng.uniform(0.18, 0.45))
+        cx = float(rng.uniform(0.12, 0.88))
+        cy = float(rng.uniform(0.12, 0.88))
+        cx2, cy2, w, h = draw_object(img, rng, cls, cx, cy, height)
+        boxes[i] = [1.0, float(cls), cx2, cy2, w, h]
+    return img, boxes
+
+
+def make_batch(
+    rng: np.random.Generator, batch: int, size: int, max_objects: int = 4
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Batch of scenes: (B, S, S, 3) images + (B, max_objects, 6) boxes."""
+    imgs = np.zeros((batch, size, size, 3), np.float32)
+    boxes = np.zeros((batch, max_objects, 6), np.float32)
+    for b in range(batch):
+        imgs[b], boxes[b] = make_scene(rng, size, max_objects)
+    return imgs, boxes

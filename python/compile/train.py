@@ -1,0 +1,127 @@
+"""Build-time training loop for TinyDet.
+
+Runs once inside ``make artifacts`` (python never on the request path).
+Training uses the pure-jnp reference conv path for speed; the AOT-lowered
+inference graph uses the Pallas kernels with the same weights (pytest
+asserts the two paths agree numerically).
+
+Loss (YOLO-lite, anchor-free, one box per cell):
+  * objectness: BCE, cell positive iff an object's centre falls in it;
+  * box: squared error on (sigmoid-space cx, cy in-cell offsets and w, h)
+    for positive cells;
+  * class: cross-entropy for positive cells.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import scene
+from .model import TinyDetConfig, init_params, raw_head
+
+MAX_OBJECTS = 4
+
+
+def build_targets(boxes: np.ndarray, grid: int, num_classes: int) -> Tuple[np.ndarray, ...]:
+    """Per-cell training targets from (B, M, 6) [valid, cls, cx, cy, w, h].
+
+    Returns (obj, txy, twh, cls_onehot) with shapes
+    (B,G,G,1), (B,G,G,2), (B,G,G,2), (B,G,G,C).
+    Later objects overwrite earlier ones in the rare same-cell collision.
+    """
+    b = boxes.shape[0]
+    obj = np.zeros((b, grid, grid, 1), np.float32)
+    txy = np.zeros((b, grid, grid, 2), np.float32)
+    twh = np.zeros((b, grid, grid, 2), np.float32)
+    cls = np.zeros((b, grid, grid, num_classes), np.float32)
+    for i in range(b):
+        for row in boxes[i]:
+            valid, c, cx, cy, w, h = row
+            if valid < 0.5:
+                continue
+            gx = min(int(cx * grid), grid - 1)
+            gy = min(int(cy * grid), grid - 1)
+            obj[i, gy, gx, 0] = 1.0
+            txy[i, gy, gx] = [cx * grid - gx, cy * grid - gy]
+            twh[i, gy, gx] = [w, h]
+            cls[i, gy, gx] = 0.0
+            cls[i, gy, gx, int(c)] = 1.0
+    return obj, txy, twh, cls
+
+
+def detection_loss(params, imgs, obj_t, txy_t, twh_t, cls_t, cfg: TinyDetConfig):
+    """Scalar loss over a batch (reference conv path for speed)."""
+    logits = raw_head(params, imgs, cfg, use_pallas=False)
+    obj_l = logits[..., 0:1]
+    txy_l = jax.nn.sigmoid(logits[..., 1:3])
+    twh_l = jax.nn.sigmoid(logits[..., 3:5])
+    cls_l = logits[..., 5:]
+
+    # Objectness BCE with positive-cell upweighting (grids are mostly empty).
+    pos_weight = 8.0
+    bce = jnp.maximum(obj_l, 0) - obj_l * obj_t + jnp.log1p(jnp.exp(-jnp.abs(obj_l)))
+    w = 1.0 + (pos_weight - 1.0) * obj_t
+    loss_obj = jnp.mean(bce * w)
+
+    mask = obj_t
+    npos = jnp.maximum(jnp.sum(mask), 1.0)
+    loss_box = jnp.sum(mask * ((txy_l - txy_t) ** 2 + 4.0 * (twh_l - twh_t) ** 2)) / npos
+
+    logp = jax.nn.log_softmax(cls_l, axis=-1)
+    loss_cls = -jnp.sum(mask * jnp.sum(cls_t * logp, axis=-1, keepdims=True)) / npos
+
+    return loss_obj + 2.0 * loss_box + 0.5 * loss_cls
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(params, opt, imgs, obj_t, txy_t, twh_t, cls_t, cfg: TinyDetConfig, lr: float):
+    loss, grads = jax.value_and_grad(detection_loss)(
+        params, imgs, obj_t, txy_t, twh_t, cls_t, cfg
+    )
+    t = opt["t"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mhat, vhat
+    )
+    return params, {"m": m, "v": v, "t": t}, loss
+
+
+def train(
+    cfg: TinyDetConfig,
+    steps: int = 400,
+    batch: int = 16,
+    lr: float = 1e-3,
+    seed: int = 7,
+    verbose: bool = True,
+) -> Dict[str, jax.Array]:
+    """Train a TinyDet variant; returns trained params."""
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    t0 = time.time()
+    for step in range(steps):
+        imgs, boxes = scene.make_batch(rng, batch, cfg.input_size, MAX_OBJECTS)
+        obj_t, txy_t, twh_t, cls_t = build_targets(boxes, cfg.grid, cfg.num_classes)
+        params, opt, loss = train_step(
+            params, opt, jnp.asarray(imgs), jnp.asarray(obj_t), jnp.asarray(txy_t),
+            jnp.asarray(twh_t), jnp.asarray(cls_t), cfg, lr,
+        )
+        if verbose and (step % 50 == 0 or step == steps - 1):
+            print(f"[train:{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return params

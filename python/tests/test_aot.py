@@ -1,0 +1,83 @@
+"""AOT pipeline tests: HLO text emission, weight round-trip, manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import load_weights, sanity_check, save_weights, to_hlo_text
+from compile.model import TinyDetConfig, init_params, make_inference_fn
+
+TINY = TinyDetConfig(name="tiny", input_size=32, channels=(8, 16), extra_convs=0,
+                     head_channels=16)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_is_parsable_text():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    infer = make_inference_fn(params, TINY, use_pallas=False)
+    spec = jax.ShapeDtypeStruct((1, 32, 32, 3), jnp.float32)
+    text = to_hlo_text(jax.jit(infer).lower(spec))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Weights are baked: in the ENTRY computation there is exactly one
+    # parameter (the image). Subcomputations (pad/reduce) may have more.
+    entry = text[text.index("ENTRY"):]
+    assert "parameter(0)" in entry
+    assert "parameter(1)" not in entry
+
+
+def test_weight_save_load_roundtrip(tmp_path):
+    params = init_params(TINY, jax.random.PRNGKey(3))
+    p = str(tmp_path / "w.npz")
+    save_weights(p, params)
+    loaded = load_weights(p)
+    assert set(loaded) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(loaded[k]))
+
+
+def test_sanity_check_passes_for_fresh_params():
+    params = init_params(TINY, jax.random.PRNGKey(1))
+    err = sanity_check(params, TINY)
+    assert err < 1e-3
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_contract():
+    """The manifest the Rust runtime parses must stay on-contract."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    names = {m["name"] for m in manifest["models"]}
+    assert {"essd", "eyolo"} <= names
+    for m in manifest["models"]:
+        assert os.path.exists(os.path.join(ARTIFACTS, m["hlo"]))
+        assert m["input_shape"][0] == 1 and m["input_shape"][3] == 3
+        assert m["out_rows"] == m["grid"] ** 2
+        assert m["out_cols"] == 5 + m["num_classes"]
+        assert m["row_layout"][0] == "objectness"
+        assert m["params"] > 0 and m["flops_per_frame"] > 0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_artifact_hlo_single_param_entry():
+    """Every artifact takes exactly one parameter (the frame)."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    for m in manifest["models"]:
+        with open(os.path.join(ARTIFACTS, m["hlo"])) as f:
+            text = f.read()
+        entry = text[text.index("ENTRY"):]
+        assert "parameter(0)" in entry
+        assert "parameter(1)" not in entry

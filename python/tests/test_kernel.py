@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the core
+correctness signal for everything the AOT artifact computes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as pconv
+from compile.kernels import matmul as pmat
+from compile.kernels import ref
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------- matmul --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_fp32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), jnp.float32)
+    y = _rand(rng, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        pmat.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_bf16(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), jnp.bfloat16)
+    y = _rand(rng, (k, n), jnp.bfloat16)
+    out = pmat.matmul(x, y)
+    assert out.dtype == jnp.float32  # fp32 accumulate
+    np.testing.assert_allclose(
+        out, ref.matmul_ref(x, y), rtol=2e-2, atol=2e-2
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 128, 256]),
+    k=st.sampled_from([16, 128, 384]),
+    n=st.sampled_from([8, 128, 256]),
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([32, 128]),
+    bk=st.sampled_from([16, 128]),
+)
+def test_matmul_block_shape_invariance(m, k, n, bm, bn, bk):
+    """Result must not depend on the chosen tiling."""
+    rng = np.random.default_rng(m * 7 + k * 3 + n)
+    x = _rand(rng, (m, k), jnp.float32)
+    y = _rand(rng, (k, n), jnp.float32)
+    out = pmat.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    # Accumulation order differs across tilings: fp32 noise only.
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-3, atol=5e-4)
+
+
+def test_matmul_shape_mismatch_raises():
+    x = jnp.zeros((4, 5), jnp.float32)
+    y = jnp.zeros((6, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        pmat.matmul(x, y)
+
+
+def test_matmul_identity():
+    x = jnp.eye(32, dtype=jnp.float32)
+    y = jnp.arange(32 * 8, dtype=jnp.float32).reshape(32, 8)
+    np.testing.assert_allclose(pmat.matmul(x, y), y, rtol=1e-6)
+
+
+def test_matmul_zeros():
+    x = jnp.zeros((16, 24), jnp.float32)
+    y = jnp.zeros((24, 8), jnp.float32)
+    np.testing.assert_array_equal(pmat.matmul(x, y), jnp.zeros((16, 8)))
+
+
+# ------------------------------------------------------------ block picker --
+
+@settings(max_examples=60, deadline=None)
+@given(dim=st.integers(1, 2048), pref=st.sampled_from([8, 64, 128, 256]))
+def test_pick_block_divides(dim, pref):
+    b = pmat._pick_block(dim, pref, 8)
+    assert 1 <= b <= max(dim, 1)
+    assert dim % b == 0
+    assert b <= max(pref, dim if dim <= pref else pref)
+
+
+def test_pick_block_prefers_aligned():
+    # 256 has divisor 128 which is 128-aligned.
+    assert pmat._pick_block(256, 128, 128) == 128
+    # dim smaller than pref -> whole dim.
+    assert pmat._pick_block(40, 128, 8) == 40
+
+
+# ------------------------------------------------------------------- conv --
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(6, 24),
+    w=st.integers(6, 24),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    n=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_lax(h, w, cin, cout, k, stride, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, h, w, cin), jnp.float32)
+    wt = _rand(rng, (k, k, cin, cout), jnp.float32)
+    out = pconv.conv2d(x, wt, stride)
+    np.testing.assert_allclose(
+        out, ref.conv2d_ref(x, wt, stride), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_matches_ref(h, k, stride, seed):
+    if h < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (2, h, h, 3), jnp.float32)
+    np.testing.assert_array_equal(
+        pconv.im2col(x, k, k, stride), ref.im2col_ref(x, k, k, stride)
+    )
+
+
+def test_conv2d_same_output_shape():
+    x = jnp.zeros((1, 15, 15, 3), jnp.float32)
+    w = jnp.zeros((3, 3, 3, 4), jnp.float32)
+    assert pconv.conv2d_same(x, w, 2).shape == (1, 8, 8, 4)
+    assert pconv.conv2d_same(x, w, 1).shape == (1, 15, 15, 4)
+
+
+def test_conv2d_channel_mismatch_raises():
+    x = jnp.zeros((1, 8, 8, 3), jnp.float32)
+    w = jnp.zeros((3, 3, 4, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        pconv.conv2d(x, w)
+
+
+# ----------------------------------------------------- perf estimators ----
+
+def test_vmem_footprint_within_budget():
+    """Default blocks must fit comfortably in 16 MiB VMEM."""
+    b = pmat.vmem_footprint_bytes(pmat.DEFAULT_BM, pmat.DEFAULT_BN, pmat.DEFAULT_BK)
+    assert b < 16 * 1024 * 1024 // 4  # < 1/4 of VMEM: double-buffer headroom
+
+
+def test_mxu_utilization_perfect_when_aligned():
+    u = pmat.mxu_utilization_estimate(256, 256, 256, 128, 128, 128)
+    assert abs(u - 1.0) < 1e-9
+
+
+def test_mxu_utilization_degrades_when_misaligned():
+    u = pmat.mxu_utilization_estimate(100, 100, 100, 50, 50, 50)
+    assert 0 < u < 0.5

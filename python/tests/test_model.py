@@ -1,0 +1,107 @@
+"""L2 correctness: TinyDet shapes, decode invariants, pallas/ref agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    NUM_CLASSES,
+    VARIANTS,
+    TinyDetConfig,
+    decode,
+    flops_estimate,
+    forward,
+    init_params,
+    num_params,
+    raw_head,
+)
+
+# A miniature config so tests run in milliseconds.
+TINY = TinyDetConfig(name="tiny", input_size=32, channels=(8, 16), extra_convs=0,
+                     head_channels=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+def test_variant_registry_shapes():
+    essd, eyolo = VARIANTS["essd"], VARIANTS["eyolo"]
+    assert essd.input_size == 96 and essd.grid == 12
+    assert eyolo.input_size == 128 and eyolo.grid == 16
+    assert essd.out_cols == 5 + NUM_CLASSES
+    # eyolo must cost more than essd (mirrors YOLOv3 > SSD300).
+    assert flops_estimate(eyolo) > 1.5 * flops_estimate(essd)
+
+
+def test_init_params_shapes(tiny_params):
+    assert tiny_params["w0"].shape == (3, 3, 3, 8)
+    assert tiny_params["b0"].shape == (8,)
+    assert num_params(tiny_params) > 0
+    # Objectness bias initialised negative.
+    assert float(tiny_params[f"b{2 + TINY.extra_convs + 1}"][0]) == pytest.approx(-4.0)
+
+
+def test_raw_head_shape(tiny_params):
+    x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+    out = raw_head(tiny_params, x, TINY, use_pallas=False)
+    assert out.shape == (2, TINY.grid, TINY.grid, TINY.out_cols)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_decode_ranges(tiny_params, seed):
+    """Decoded geometry and probabilities live in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+    out = np.asarray(forward(tiny_params, x, TINY, use_pallas=False))[0]
+    assert out.shape == (TINY.out_rows, TINY.out_cols)
+    assert (out[:, 0] >= 0).all() and (out[:, 0] <= 1).all()       # objectness
+    assert (out[:, 1:5] >= 0).all() and (out[:, 1:5] <= 1).all()   # geometry
+    probs = out[:, 5:]
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, rtol=1e-4)  # softmax
+
+
+def test_decode_cell_offsets():
+    """A logit grid of zeros decodes to cell-centred boxes."""
+    g = 4
+    cfg = TinyDetConfig(name="t", input_size=16, channels=(8, 16), extra_convs=0,
+                        head_channels=8)
+    logits = jnp.zeros((1, g, g, cfg.out_cols), jnp.float32)
+    out = np.asarray(decode(logits, cfg))[0]
+    # sigmoid(0) = 0.5 -> centre of each cell.
+    cx = out[:, 1].reshape(g, g)
+    cy = out[:, 2].reshape(g, g)
+    for row in range(g):
+        for col in range(g):
+            assert cx[row, col] == pytest.approx((col + 0.5) / g)
+            assert cy[row, col] == pytest.approx((row + 0.5) / g)
+
+
+def test_pallas_and_ref_paths_agree(tiny_params):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+    out_p = forward(tiny_params, x, TINY, use_pallas=True)
+    out_r = forward(tiny_params, x, TINY, use_pallas=False)
+    np.testing.assert_allclose(out_p, out_r, rtol=1e-4, atol=1e-5)
+
+
+def test_forward_batch_independence(tiny_params):
+    """Each batch element is processed independently."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+    b = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+    ab = jnp.concatenate([a, b], axis=0)
+    out_ab = forward(tiny_params, ab, TINY, use_pallas=False)
+    out_a = forward(tiny_params, a, TINY, use_pallas=False)
+    np.testing.assert_allclose(out_ab[0], out_a[0], rtol=1e-5, atol=1e-6)
+
+
+def test_flops_estimate_positive_and_monotone():
+    assert flops_estimate(TINY) > 0
+    bigger = TinyDetConfig(name="b", input_size=64, channels=(8, 16),
+                           extra_convs=0, head_channels=16)
+    assert flops_estimate(bigger) > flops_estimate(TINY)

@@ -1,0 +1,65 @@
+"""Scene-generator tests: bounds, determinism, class appearance contract."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.scene import CLASS_APPEARANCE, draw_object, make_batch, make_scene, render_background
+
+
+def test_background_bounds_and_shape():
+    rng = np.random.default_rng(0)
+    img = render_background(rng, 64)
+    assert img.shape == (64, 64, 3)
+    assert img.min() >= 0.0 and img.max() <= 1.0
+    # Grayish: channels identical up to the per-pixel noise.
+    assert np.abs(img[..., 0] - img[..., 1]).max() < 0.15
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), size=st.sampled_from([32, 64, 96]))
+def test_make_scene_valid(seed, size):
+    rng = np.random.default_rng(seed)
+    img, boxes = make_scene(rng, size)
+    assert img.shape == (size, size, 3)
+    assert img.min() >= 0.0 and img.max() <= 1.0
+    assert boxes.shape == (4, 6)
+    valid = boxes[boxes[:, 0] > 0.5]
+    assert len(valid) >= 1
+    assert (valid[:, 1] >= 0).all() and (valid[:, 1] < len(CLASS_APPEARANCE)).all()
+    assert (valid[:, 2:4] >= 0).all() and (valid[:, 2:4] <= 1).all()
+
+
+def test_determinism_same_seed():
+    a_img, a_box = make_scene(np.random.default_rng(42), 48)
+    b_img, b_box = make_scene(np.random.default_rng(42), 48)
+    np.testing.assert_array_equal(a_img, b_img)
+    np.testing.assert_array_equal(a_box, b_box)
+
+
+def test_draw_object_colours_match_contract():
+    """Drawn pixels must be dominated by the class colour channel."""
+    dominant = {0: 0, 1: 2, 2: 1}  # person->R, cyclist->B, car->G
+    for cls, dom in dominant.items():
+        rng = np.random.default_rng(5)
+        img = np.full((64, 64, 3), 0.5, np.float32)
+        cx, cy, w, h = draw_object(img, rng, cls, 0.5, 0.5, 0.4)
+        x0, x1 = int((cx - w / 4) * 64), int((cx + w / 4) * 64)
+        y0, y1 = int((cy - h / 4) * 64), int((cy + h / 4) * 64)
+        patch = img[y0:y1, x0:x1]
+        means = patch.reshape(-1, 3).mean(axis=0)
+        assert means.argmax() == dom, (cls, means)
+
+
+def test_draw_object_clips_offscreen():
+    rng = np.random.default_rng(1)
+    img = np.full((32, 32, 3), 0.5, np.float32)
+    # Mostly off-screen object must not crash and must keep bounds.
+    draw_object(img, rng, 2, 0.02, 0.02, 0.4)
+    assert img.min() >= 0.0 and img.max() <= 1.0
+
+
+def test_make_batch_shapes():
+    rng = np.random.default_rng(0)
+    imgs, boxes = make_batch(rng, 3, 32)
+    assert imgs.shape == (3, 32, 32, 3)
+    assert boxes.shape == (3, 4, 6)

@@ -1,0 +1,587 @@
+//! Virtual-time pipeline: binds source → scheduler → (hub) → devices →
+//! synchronizer on the DES kernel.
+//!
+//! One run simulates the full online workflow of Figure 1b: frames arrive
+//! at λ, the scheduler assigns them to the n parallel model replicas
+//! (crossing the shared USB hub when the device needs it), each completed
+//! frame's detections come from the per-replica [`Detector`] backend, and
+//! the sequence synchronizer restores temporal order — dropped frames
+//! reuse the latest processed detections. mAP is then computed over *all*
+//! frames by [`crate::eval::evaluate_map`], exactly as the paper measures.
+//!
+//! The optional `gil_serial_time` models Table X's Python prototype: every
+//! dispatch first acquires a global serial resource for that long
+//! (GIL-held pre/post-processing), capping effective parallelism at
+//! `1 / gil_serial_time` regardless of fleet size.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::policy::{SchedulePolicy, SchedulerKind};
+use crate::coordinator::source::FrameWindow;
+use crate::coordinator::sync::{Fate, Synchronizer};
+use crate::detector::Detector;
+use crate::device::energy::EnergyMeter;
+use crate::device::Fleet;
+use crate::sim::EventQueue;
+use crate::types::{FrameId, OutputRecord};
+use crate::util::stats::Percentiles;
+use crate::util::Rng;
+use crate::video::Clip;
+
+/// How frames are offered to the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SourceMode {
+    /// Live stream at the clip's λ; bounded freshness window -> drops.
+    /// This is the mode that produces the paper's mAP columns.
+    Paced,
+    /// All frames available immediately; measures processing capacity
+    /// σ_P — the paper's "Detection FPS" columns (they exceed λ).
+    Saturated,
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub scheduler: SchedulerKind,
+    pub mode: SourceMode,
+    /// Freshness window (paced mode); defaults to the fleet size.
+    pub window: Option<usize>,
+    /// Serial coordination cost per frame (Table X GIL model).
+    pub gil_serial_time: Option<f64>,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    pub fn new(scheduler: SchedulerKind, mode: SourceMode, seed: u64) -> RunConfig {
+        RunConfig {
+            scheduler,
+            mode,
+            window: None,
+            gil_serial_time: None,
+            seed,
+        }
+    }
+}
+
+/// Result of one online run.
+pub struct OnlineRun {
+    pub records: Vec<OutputRecord>,
+    pub metrics: RunMetrics,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    /// A frame arrives from the paced stream.
+    Arrival(FrameId),
+    /// The GIL slice for (frame, device) finished.
+    GilDone(FrameId, usize),
+    /// The hub transfer for (frame, device) finished.
+    HubTransferDone(FrameId, usize),
+    /// Detection service finished on a device.
+    ServiceDone(FrameId, usize),
+}
+
+#[derive(Debug, Default)]
+struct DeviceState {
+    /// Frame currently owned by the device (gil wait / transfer / service).
+    current: Option<FrameId>,
+    /// Engine-side FIFO of policy-assigned frames (WRR rounds).
+    assigned: VecDeque<FrameId>,
+    /// Drawn service time of the in-flight frame.
+    pending_service: f64,
+    busy_seconds: f64,
+    frames_done: u64,
+}
+
+impl DeviceState {
+    fn idle(&self) -> bool {
+        self.current.is_none() && self.assigned.is_empty()
+    }
+}
+
+/// Shared serialising FIFO resource (USB hub / GIL).
+#[derive(Debug, Default)]
+struct SerialResource {
+    busy: bool,
+    queue: VecDeque<(FrameId, usize)>,
+}
+
+impl SerialResource {
+    /// Acquire for (fid, dev): returns true if acquired now, false if
+    /// queued behind the current holder.
+    fn acquire(&mut self, fid: FrameId, dev: usize) -> bool {
+        if self.busy {
+            self.queue.push_back((fid, dev));
+            false
+        } else {
+            self.busy = true;
+            true
+        }
+    }
+
+    /// Release; returns the next waiter (now the holder), if any.
+    fn release(&mut self) -> Option<(FrameId, usize)> {
+        let next = self.queue.pop_front();
+        self.busy = next.is_some();
+        next
+    }
+}
+
+/// Run the zero-drop offline reference (Figure 1a): every frame processed
+/// sequentially by one detector. Returns per-frame detections.
+pub fn run_offline(clip: &Clip, detector: &mut dyn Detector) -> Vec<Vec<crate::types::Detection>> {
+    clip.frames.iter().map(|f| detector.detect(f)).collect()
+}
+
+struct Engine<'a> {
+    clip: &'a Clip,
+    fleet: &'a Fleet,
+    detectors: Vec<Box<dyn Detector>>,
+    config: &'a RunConfig,
+    policy: Box<dyn SchedulePolicy>,
+    window: FrameWindow,
+    queue: EventQueue<Event>,
+    devices: Vec<DeviceState>,
+    hub: SerialResource,
+    gil: SerialResource,
+    sync: Synchronizer,
+    latency: Percentiles,
+    energy: EnergyMeter,
+    rng: Rng,
+    last_resolution_time: f64,
+}
+
+impl<'a> Engine<'a> {
+    fn capture_ts(&self, fid: FrameId) -> f64 {
+        fid as f64 / self.clip.fps()
+    }
+
+    fn resolve(&mut self, fid: FrameId, fate: Fate, now: f64) {
+        let fps = self.clip.fps();
+        let out = self.sync.resolve(fid, fate, now, |f| f as f64 / fps);
+        self.last_resolution_time = self.last_resolution_time.max(now);
+        for r in out {
+            self.latency.push((r.emit_ts - r.capture_ts).max(0.0));
+        }
+    }
+
+    /// Ask the policy for new assignments and start free devices.
+    fn poll_policy(&mut self, now: f64) {
+        let idle: Vec<bool> = self.devices.iter().map(|d| d.idle()).collect();
+        let dispatches = self.policy.poll(now, &idle, &mut self.window);
+        for d in dispatches {
+            self.devices[d.device].assigned.push_back(d.fid);
+        }
+        for dev in 0..self.devices.len() {
+            self.maybe_start(dev);
+        }
+    }
+
+    /// If `dev` is free and has an assigned frame, begin its journey:
+    /// GIL slice → hub transfer (USB devices) → service.
+    fn maybe_start(&mut self, dev: usize) {
+        if self.devices[dev].current.is_some() {
+            return;
+        }
+        let Some(fid) = self.devices[dev].assigned.pop_front() else {
+            return;
+        };
+        self.devices[dev].current = Some(fid);
+
+        if let Some(t_gil) = self.config.gil_serial_time {
+            if self.gil.acquire(fid, dev) {
+                self.queue.schedule_in(t_gil, Event::GilDone(fid, dev));
+            }
+            return;
+        }
+        self.enter_hub_or_service(fid, dev);
+    }
+
+    fn enter_hub_or_service(&mut self, fid: FrameId, dev: usize) {
+        let needs_hub =
+            self.fleet.devices[dev].kind.needs_link() && self.fleet.hub.is_some();
+        if needs_hub {
+            if self.hub.acquire(fid, dev) {
+                let t = self.hub_transfer_time(dev);
+                self.queue.schedule_in(t, Event::HubTransferDone(fid, dev));
+            }
+        } else {
+            self.start_service(fid, dev);
+        }
+    }
+
+    fn hub_transfer_time(&self, dev: usize) -> f64 {
+        let bytes = self.fleet.devices[dev].model.wire_bytes();
+        self.fleet.hub.as_ref().expect("hub").transfer_time(bytes)
+    }
+
+    fn start_service(&mut self, fid: FrameId, dev: usize) {
+        let t = self.fleet.devices[dev].sample_service_time(&mut self.rng);
+        self.devices[dev].pending_service = t;
+        self.queue.schedule_in(t, Event::ServiceDone(fid, dev));
+    }
+
+    fn handle(&mut self, now: f64, event: Event) {
+        match event {
+            Event::Arrival(fid) => {
+                if let Some(evicted) = self.window.arrive(fid).evicted {
+                    self.resolve(evicted, Fate::Dropped, now);
+                }
+                self.poll_policy(now);
+            }
+            Event::GilDone(fid, dev) => {
+                if let Some((nfid, ndev)) = self.gil.release() {
+                    let t_gil = self.config.gil_serial_time.unwrap_or(0.0);
+                    self.queue.schedule_in(t_gil, Event::GilDone(nfid, ndev));
+                }
+                self.enter_hub_or_service(fid, dev);
+            }
+            Event::HubTransferDone(fid, dev) => {
+                if let Some((nfid, ndev)) = self.hub.release() {
+                    let t = self.hub_transfer_time(ndev);
+                    self.queue.schedule_in(t, Event::HubTransferDone(nfid, ndev));
+                }
+                self.start_service(fid, dev);
+            }
+            Event::ServiceDone(fid, dev) => {
+                let service = self.devices[dev].pending_service;
+                self.devices[dev].busy_seconds += service;
+                self.devices[dev].frames_done += 1;
+                self.energy.record_busy(dev, service);
+                self.policy.on_complete(dev, service, now);
+                let detections = self.detectors[dev].detect(&self.clip.frames[fid as usize]);
+                self.devices[dev].current = None;
+                self.resolve(
+                    fid,
+                    Fate::Processed {
+                        detections,
+                        device: dev,
+                    },
+                    now,
+                );
+                self.maybe_start(dev);
+                self.poll_policy(now);
+            }
+        }
+    }
+}
+
+/// Run the online parallel-detection pipeline in virtual time.
+///
+/// `detectors` must provide one backend per fleet device (replica order).
+pub fn run_online(
+    clip: &Clip,
+    fleet: &Fleet,
+    detectors: Vec<Box<dyn Detector>>,
+    config: &RunConfig,
+) -> OnlineRun {
+    let n = fleet.len();
+    assert!(n > 0, "empty fleet");
+    assert_eq!(detectors.len(), n, "one detector per device");
+
+    let num_frames = clip.len() as u64;
+    let rates: Vec<f64> = fleet.devices.iter().map(|d| d.rate()).collect();
+
+    let window_size = match config.mode {
+        SourceMode::Paced => config.window.unwrap_or(n).max(1),
+        SourceMode::Saturated => num_frames.max(1) as usize,
+    };
+
+    let mut engine = Engine {
+        clip,
+        fleet,
+        detectors,
+        config,
+        policy: config.scheduler.build(&rates),
+        window: FrameWindow::new(window_size),
+        queue: EventQueue::new(),
+        devices: (0..n).map(|_| DeviceState::default()).collect(),
+        hub: SerialResource::default(),
+        gil: SerialResource::default(),
+        sync: Synchronizer::new(),
+        latency: Percentiles::new(),
+        energy: EnergyMeter::new(&fleet.devices.iter().map(|d| d.kind).collect::<Vec<_>>()),
+        rng: Rng::new(config.seed ^ 0x5EED_C0DE),
+        last_resolution_time: 0.0,
+    };
+
+    match config.mode {
+        SourceMode::Paced => {
+            for fid in 0..num_frames {
+                engine
+                    .queue
+                    .schedule(engine.capture_ts(fid), Event::Arrival(fid));
+            }
+        }
+        SourceMode::Saturated => {
+            for fid in 0..num_frames {
+                engine.window.arrive(fid);
+            }
+        }
+    }
+
+    // Initial kick (saturated mode has no arrival events).
+    engine.poll_policy(0.0);
+
+    while let Some((now, event)) = engine.queue.pop() {
+        engine.handle(now, event);
+    }
+
+    // Anything still in the window could never be scheduled: dropped tail.
+    let t_end = engine.last_resolution_time.max(clip.spec.duration());
+    let leftovers = engine.window.drain_remaining();
+    for fid in leftovers {
+        engine.resolve(fid, Fate::Dropped, t_end);
+    }
+
+    let records: Vec<OutputRecord> = engine.sync.emitted().to_vec();
+    assert_eq!(
+        records.len() as u64,
+        num_frames,
+        "every frame must get exactly one output record"
+    );
+
+    let frames_processed = records.iter().filter(|r| !r.was_dropped()).count() as u64;
+    let frames_dropped = num_frames - frames_processed;
+    let makespan = match config.mode {
+        SourceMode::Saturated => engine.last_resolution_time,
+        SourceMode::Paced => clip.spec.duration().max(engine.last_resolution_time),
+    };
+
+    let metrics = RunMetrics {
+        frames_total: num_frames,
+        frames_processed,
+        frames_dropped,
+        makespan,
+        stream_duration: clip.spec.duration(),
+        device_busy: engine.devices.iter().map(|d| d.busy_seconds).collect(),
+        device_frames: engine.devices.iter().map(|d| d.frames_done).collect(),
+        latency: engine.latency,
+        max_reorder_depth: engine.sync.max_pending(),
+        energy: engine.energy,
+    };
+
+    OnlineRun { records, metrics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detector::quality::{QualityModelDetector, QualityProfile};
+    use crate::device::link::LinkProfile;
+    use crate::device::{DetectorModelId, DeviceInstance, DeviceKind, Fleet};
+    use crate::eval::evaluate_map;
+    use crate::types::{Detection, GtBox, CLASSES};
+    use crate::video::{generate, presets};
+
+    fn detectors_for(fleet: &Fleet, video: &str, seed: u64) -> Vec<Box<dyn Detector>> {
+        fleet
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                Box::new(QualityModelDetector::new(
+                    QualityProfile::calibrated(d.model, video),
+                    seed + 1000 * i as u64,
+                )) as Box<dyn Detector>
+            })
+            .collect()
+    }
+
+    fn eth_fleet(n: usize) -> Fleet {
+        Fleet::ncs2_sticks(n, DetectorModelId::Yolov3, LinkProfile::usb3())
+    }
+
+    #[test]
+    fn saturated_capacity_scales_linearly() {
+        // Table IV shape: σ_P ≈ n × 2.5 for YOLOv3 on NCS2/USB3.
+        let clip = generate(&presets::eth_sunnyday(1), None);
+        for n in [1usize, 4, 7] {
+            let fleet = eth_fleet(n);
+            let cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Saturated, 9);
+            let run = run_online(&clip, &fleet, detectors_for(&fleet, "eth_sunnyday", 5), &cfg);
+            let fps = run.metrics.processing_fps();
+            let ideal = 2.5 * n as f64;
+            assert!(
+                (fps - ideal).abs() / ideal < 0.08,
+                "n={n}: fps {fps} vs ideal {ideal}"
+            );
+            assert_eq!(run.metrics.frames_dropped, 0);
+        }
+    }
+
+    #[test]
+    fn paced_single_device_drops_heavily() {
+        // λ=14, μ=2.5: ~82% of frames dropped (paper §II).
+        let clip = generate(&presets::eth_sunnyday(2), None);
+        let fleet = eth_fleet(1);
+        let cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Paced, 4);
+        let run = run_online(&clip, &fleet, detectors_for(&fleet, "eth_sunnyday", 6), &cfg);
+        let dpp = run.metrics.drops_per_processed();
+        assert!(
+            (dpp - 4.6).abs() < 1.0,
+            "drops per processed {dpp} (expect ≈ 14/2.5 - 1 = 4.6)"
+        );
+        // Processing rate is pinned at ~μ.
+        let fps = run.metrics.processing_fps();
+        assert!((fps - 2.5).abs() < 0.3, "fps {fps}");
+    }
+
+    #[test]
+    fn paced_n6_barely_drops() {
+        // σ_P = 15 ≥ λ = 14: near-zero dropping.
+        let clip = generate(&presets::eth_sunnyday(3), None);
+        let fleet = eth_fleet(6);
+        let cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Paced, 4);
+        let run = run_online(&clip, &fleet, detectors_for(&fleet, "eth_sunnyday", 6), &cfg);
+        assert!(
+            run.metrics.drop_rate() < 0.05,
+            "drop rate {}",
+            run.metrics.drop_rate()
+        );
+    }
+
+    #[test]
+    fn map_recovers_with_parallelism() {
+        // The headline result: mAP(n=1, dropping) << mAP(n=6) ≈ zero-drop.
+        let spec = presets::eth_sunnyday(4);
+        let clip = generate(&spec, None);
+        let gt: Vec<&[GtBox]> = clip.frames.iter().map(|f| f.ground_truth.as_slice()).collect();
+
+        let mut zero_drop_det = QualityModelDetector::new(
+            QualityProfile::calibrated(DetectorModelId::Yolov3, "eth_sunnyday"),
+            77,
+        );
+        let offline: Vec<Vec<Detection>> = run_offline(&clip, &mut zero_drop_det);
+        let map_offline = evaluate_map(&offline, &gt, CLASSES.len(), 0.5).map;
+
+        let mut maps = Vec::new();
+        for n in [1usize, 6] {
+            let fleet = eth_fleet(n);
+            let cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Paced, 21);
+            let run = run_online(&clip, &fleet, detectors_for(&fleet, "eth_sunnyday", 33), &cfg);
+            let dets: Vec<Vec<Detection>> =
+                run.records.iter().map(|r| r.detections.clone()).collect();
+            maps.push(evaluate_map(&dets, &gt, CLASSES.len(), 0.5).map);
+        }
+        let (map1, map6) = (maps[0], maps[1]);
+        assert!(
+            map1 + 0.06 < map_offline,
+            "single-device dropping must hurt: {map1} vs offline {map_offline}"
+        );
+        assert!(
+            (map6 - map_offline).abs() < 0.07,
+            "n=6 must recover: {map6} vs offline {map_offline}"
+        );
+    }
+
+    #[test]
+    fn rr_barrier_vs_fcfs_on_heterogeneous_fleet() {
+        // Table VII shape: FCFS ≈ Σμ, RR ≈ (n+1) × slowest rate.
+        let clip = generate(&presets::eth_sunnyday(5), None);
+        let fleet = Fleet::cpu_plus_sticks(
+            DeviceKind::FastCpu,
+            7,
+            DetectorModelId::Yolov3,
+            LinkProfile::usb3(),
+        );
+        let fcfs = run_online(
+            &clip,
+            &fleet,
+            detectors_for(&fleet, "eth_sunnyday", 1),
+            &RunConfig::new(SchedulerKind::Fcfs, SourceMode::Saturated, 2),
+        );
+        let rr = run_online(
+            &clip,
+            &fleet,
+            detectors_for(&fleet, "eth_sunnyday", 1),
+            &RunConfig::new(SchedulerKind::RoundRobin, SourceMode::Saturated, 2),
+        );
+        let fcfs_fps = fcfs.metrics.processing_fps();
+        let rr_fps = rr.metrics.processing_fps();
+        assert!((fcfs_fps - 31.0).abs() < 2.5, "fcfs {fcfs_fps} (paper 29)");
+        assert!((rr_fps - 20.0).abs() < 2.0, "rr {rr_fps} (paper 20.1)");
+        assert!(fcfs_fps > rr_fps + 5.0);
+    }
+
+    #[test]
+    fn usb2_hub_caps_yolo_throughput() {
+        // Table IX shape: YOLOv3 on USB 2.0 plateaus near 8 FPS.
+        let clip = generate(&presets::adl_rundle6(6), None);
+        let fleet = Fleet::ncs2_sticks(7, DetectorModelId::Yolov3, LinkProfile::usb2());
+        let run = run_online(
+            &clip,
+            &fleet,
+            detectors_for(&fleet, "adl_rundle6", 3),
+            &RunConfig::new(SchedulerKind::Fcfs, SourceMode::Saturated, 8),
+        );
+        let fps = run.metrics.processing_fps();
+        assert!((fps - 8.0).abs() < 0.6, "usb2 plateau fps {fps}");
+    }
+
+    #[test]
+    fn gil_caps_parallelism() {
+        // Table X shape: with a 102 ms serial slice, throughput caps ≈9.8.
+        let clip = generate(&presets::adl_rundle6(7), None);
+        let mut fleet = Fleet {
+            devices: (0..7)
+                .map(|i| {
+                    DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, 4.8)
+                })
+                .collect(),
+            hub: Some(LinkProfile::usb3()),
+        };
+        for d in fleet.devices.iter_mut() {
+            d.jitter_cv = 0.02;
+        }
+        let mut cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Saturated, 3);
+        cfg.gil_serial_time = Some(1.0 / 9.8);
+        let run = run_online(&clip, &fleet, detectors_for(&fleet, "adl_rundle6", 4), &cfg);
+        let fps = run.metrics.processing_fps();
+        assert!((fps - 9.8).abs() < 0.7, "gil fps {fps}");
+    }
+
+    #[test]
+    fn every_frame_has_exactly_one_record_in_order() {
+        let clip = generate(&presets::eth_sunnyday(8), None);
+        let fleet = eth_fleet(3);
+        let cfg = RunConfig::new(SchedulerKind::RoundRobin, SourceMode::Paced, 11);
+        let run = run_online(&clip, &fleet, detectors_for(&fleet, "eth_sunnyday", 2), &cfg);
+        assert_eq!(run.records.len(), clip.len());
+        for (i, r) in run.records.iter().enumerate() {
+            assert_eq!(r.frame_id, i as u64);
+        }
+        // Conservation: processed + dropped = total.
+        assert_eq!(
+            run.metrics.frames_processed + run.metrics.frames_dropped,
+            run.metrics.frames_total
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let clip = generate(&presets::eth_sunnyday(9), None);
+        let fleet = eth_fleet(4);
+        let cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Paced, 42);
+        let a = run_online(&clip, &fleet, detectors_for(&fleet, "eth_sunnyday", 5), &cfg);
+        let b = run_online(&clip, &fleet, detectors_for(&fleet, "eth_sunnyday", 5), &cfg);
+        assert_eq!(a.metrics.frames_processed, b.metrics.frames_processed);
+        assert_eq!(a.records.len(), b.records.len());
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.stale_from, rb.stale_from);
+            assert_eq!(ra.detections.len(), rb.detections.len());
+        }
+    }
+
+    #[test]
+    fn offline_reference_has_zero_drops_by_construction() {
+        let clip = generate(&presets::eth_sunnyday(10), None);
+        let mut det = QualityModelDetector::new(
+            QualityProfile::calibrated(DetectorModelId::Yolov3, "eth_sunnyday"),
+            1,
+        );
+        let dets = run_offline(&clip, &mut det);
+        assert_eq!(dets.len(), clip.len());
+    }
+}

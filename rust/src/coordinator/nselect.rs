@@ -1,0 +1,126 @@
+//! Choosing the parallel-detection parameter *n* (§III-B).
+//!
+//! Given input rate λ and per-model rate μ, the conservative choice is
+//! `n = ⌈λ/μ⌉` (guarantees σ_P = n·μ ≥ λ: zero dropping in the ideal
+//! linear-scaling case). Because 10–30 FPS is comfortable for human
+//! perception of street scenes, the paper relaxes the lower bound to
+//! `⌈10/μ⌉` when λ > 12, giving the near-real-time band
+//! `n ∈ [⌈10/μ⌉, ⌈λ/μ⌉]`.
+
+/// The perception floor used for the relaxed bound (FPS).
+pub const PERCEPTION_FLOOR_FPS: f64 = 10.0;
+
+/// Input-rate threshold above which the relaxed band applies.
+pub const RELAXATION_THRESHOLD_FPS: f64 = 12.0;
+
+/// Inclusive range of recommended n.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl NRange {
+    pub fn contains(&self, n: usize) -> bool {
+        n >= self.lo && n <= self.hi
+    }
+}
+
+/// Conservative setting: smallest n with n·μ ≥ λ.
+pub fn conservative_n(lambda: f64, mu: f64) -> usize {
+    assert!(lambda > 0.0 && mu > 0.0);
+    (lambda / mu).ceil() as usize
+}
+
+/// The paper's recommended band (§III-B).
+///
+/// For λ > 12 FPS: `[⌈10/μ⌉, ⌈λ/μ⌉]`; otherwise the band collapses to the
+/// conservative single point `⌈λ/μ⌉`.
+pub fn recommended_range(lambda: f64, mu: f64) -> NRange {
+    let hi = conservative_n(lambda, mu);
+    let lo = if lambda > RELAXATION_THRESHOLD_FPS {
+        ((PERCEPTION_FLOOR_FPS / mu).ceil() as usize).min(hi)
+    } else {
+        hi
+    };
+    NRange { lo, hi }
+}
+
+/// Pick n within the band given how many devices are actually available;
+/// `None` if even `available` devices cannot reach the perception floor.
+pub fn pick_n(lambda: f64, mu: f64, available: usize) -> Option<usize> {
+    let range = recommended_range(lambda, mu);
+    if available >= range.lo {
+        Some(range.hi.min(available))
+    } else {
+        None
+    }
+}
+
+/// Expected parallel rate under ideal linear scaling: σ_P = n·μ.
+pub fn ideal_sigma_p(n: usize, mu: f64) -> f64 {
+    n as f64 * mu
+}
+
+/// Heterogeneous form: σ_P = Σ μᵢ.
+pub fn ideal_sigma_p_hetero(rates: &[f64]) -> f64 {
+    rates.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_eth_yolo() {
+        // §III-B: λ=14, μ=2.5 -> band [⌈10/2.5⌉, ⌈14/2.5⌉] = [4, 6].
+        let r = recommended_range(14.0, 2.5);
+        assert_eq!(r, NRange { lo: 4, hi: 6 });
+        assert!(r.contains(4) && r.contains(6) && !r.contains(7));
+        assert_eq!(ideal_sigma_p(4, 2.5), 10.0);
+        assert_eq!(ideal_sigma_p(6, 2.5), 15.0);
+    }
+
+    #[test]
+    fn paper_example_adl() {
+        // §IV-A: SSD λ=30, μ=2.3 -> [5, 14]; YOLO μ=2.5 -> [4, 12].
+        assert_eq!(recommended_range(30.0, 2.3), NRange { lo: 5, hi: 14 });
+        assert_eq!(recommended_range(30.0, 2.5), NRange { lo: 4, hi: 12 });
+    }
+
+    #[test]
+    fn slow_streams_use_conservative_point() {
+        // λ = 10 <= 12: no relaxation.
+        let r = recommended_range(10.0, 2.5);
+        assert_eq!(r, NRange { lo: 4, hi: 4 });
+    }
+
+    #[test]
+    fn conservative_covers_lambda() {
+        for &(lambda, mu) in &[(14.0, 2.5), (30.0, 2.3), (24.0, 5.0), (30.0, 13.5)] {
+            let n = conservative_n(lambda, mu);
+            assert!(n as f64 * mu >= lambda);
+            assert!((n - 1) as f64 * mu < lambda);
+        }
+    }
+
+    #[test]
+    fn pick_n_respects_availability() {
+        // ETH YOLO with 7 sticks available: hi = 6.
+        assert_eq!(pick_n(14.0, 2.5, 7), Some(6));
+        // Only 5 available: clamp.
+        assert_eq!(pick_n(14.0, 2.5, 5), Some(5));
+        // Fewer than the floor: refuse.
+        assert_eq!(pick_n(14.0, 2.5, 3), None);
+    }
+
+    #[test]
+    fn band_lo_never_exceeds_hi() {
+        for lam in [12.5, 14.0, 20.0, 30.0, 60.0] {
+            for mu in [0.4, 2.3, 2.5, 9.0, 13.5, 35.0] {
+                let r = recommended_range(lam, mu);
+                assert!(r.lo <= r.hi, "λ={lam} μ={mu}: {r:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! Parallel-detection scheduling policies (§III-C).
+//!
+//! All four of the paper's schedulers implement [`SchedulePolicy`]:
+//!
+//! * [`RoundRobin`] — the paper's baseline. Calibrated against Table VII
+//!   as a **lockstep/barrier** round: one frame per model per round, the
+//!   next round starts when every model in the round finished. (This is
+//!   the only reading consistent with the measured 20.1 FPS for
+//!   FastCPU + 7×NCS2 — 8 frames per 0.4 s round — and with RR's collapse
+//!   to 3.4 FPS behind a 0.4 FPS straggler.)
+//! * [`WeightedRoundRobin`] — static weights ∝ configured device rates;
+//!   device *i* receives wᵢ frames per round.
+//! * [`Fcfs`] — work-conserving: the next frame goes to the first model
+//!   that becomes available. The paper's default scheduler.
+//! * [`Proportional`] — performance-aware: like WRR, but the weights are
+//!   recomputed every round from EWMA-estimated service rates, adapting
+//!   to runtime conditions rather than compile-time configuration.
+//!
+//! Policies receive the engine's device-idle view and the bounded frame
+//! window, and return dispatch batches; per-device FIFO queues in the
+//! engine let a policy hand one device several frames (WRR rounds).
+
+use crate::coordinator::source::FrameWindow;
+use crate::types::FrameId;
+use crate::util::stats::Ewma;
+
+/// Scheduler selector (CLI / experiment surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    RoundRobin,
+    WeightedRoundRobin,
+    Fcfs,
+    Proportional,
+}
+
+impl SchedulerKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::RoundRobin => "round-robin",
+            SchedulerKind::WeightedRoundRobin => "weighted-round-robin",
+            SchedulerKind::Fcfs => "fcfs",
+            SchedulerKind::Proportional => "proportional",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(SchedulerKind::RoundRobin),
+            "wrr" | "weighted-round-robin" | "weighted" => Some(SchedulerKind::WeightedRoundRobin),
+            "fcfs" | "first-come-first-serve" => Some(SchedulerKind::Fcfs),
+            "prop" | "proportional" | "performance-aware" => Some(SchedulerKind::Proportional),
+            _ => None,
+        }
+    }
+
+    /// Instantiate a policy for a fleet with the given per-device
+    /// configured rates.
+    pub fn build(&self, rates: &[f64]) -> Box<dyn SchedulePolicy> {
+        match self {
+            SchedulerKind::RoundRobin => Box::new(RoundRobin::new(rates.len())),
+            SchedulerKind::WeightedRoundRobin => Box::new(WeightedRoundRobin::new(rates)),
+            SchedulerKind::Fcfs => Box::new(Fcfs::new(rates.len())),
+            SchedulerKind::Proportional => Box::new(Proportional::new(rates.len())),
+        }
+    }
+}
+
+/// One frame-to-device assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch {
+    pub device: usize,
+    pub fid: FrameId,
+}
+
+/// A scheduling policy. `idle[i]` is true iff device *i* has no current
+/// frame **and** no engine-queued assignments.
+pub trait SchedulePolicy: Send {
+    fn kind(&self) -> SchedulerKind;
+
+    /// Invoked by the engine after every state change (frame arrival,
+    /// service completion). Pull frames from `window` and return the
+    /// assignments to apply.
+    fn poll(&mut self, now: f64, idle: &[bool], window: &mut FrameWindow) -> Vec<Dispatch>;
+
+    /// Observation hook: device finished a frame in `service_time` secs.
+    fn on_complete(&mut self, _device: usize, _service_time: f64, _now: f64) {}
+}
+
+// ------------------------------------------------------------------ RR --
+
+/// Lockstep round-robin (see module docs for the Table VII calibration).
+pub struct RoundRobin {
+    n: usize,
+    /// Rotation offset so assignment order rotates across rounds.
+    next_start: usize,
+}
+
+impl RoundRobin {
+    pub fn new(n: usize) -> RoundRobin {
+        assert!(n > 0);
+        RoundRobin { n, next_start: 0 }
+    }
+}
+
+impl SchedulePolicy for RoundRobin {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::RoundRobin
+    }
+
+    fn poll(&mut self, _now: f64, idle: &[bool], window: &mut FrameWindow) -> Vec<Dispatch> {
+        // Barrier: a new round starts only when the whole fleet is idle.
+        if !idle.iter().all(|&i| i) || window.is_empty() {
+            return Vec::new();
+        }
+        let frames = window.pull_up_to(self.n);
+        let start = self.next_start;
+        self.next_start = (self.next_start + frames.len()) % self.n;
+        frames
+            .into_iter()
+            .enumerate()
+            .map(|(k, fid)| Dispatch {
+                device: (start + k) % self.n,
+                fid,
+            })
+            .collect()
+    }
+}
+
+// ----------------------------------------------------------------- WRR --
+
+/// Static weighted round-robin: device *i* gets wᵢ frames per round,
+/// wᵢ ∝ configured rate (min weight 1).
+pub struct WeightedRoundRobin {
+    weights: Vec<usize>,
+}
+
+impl WeightedRoundRobin {
+    pub fn new(rates: &[f64]) -> WeightedRoundRobin {
+        WeightedRoundRobin {
+            weights: weights_from_rates(rates),
+        }
+    }
+
+    pub fn weights(&self) -> &[usize] {
+        &self.weights
+    }
+}
+
+/// Integer weights ∝ rates, normalised so the slowest device gets 1.
+/// Capped at 32 per device to bound round length behind extreme skew.
+pub fn weights_from_rates(rates: &[f64]) -> Vec<usize> {
+    assert!(!rates.is_empty());
+    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-9);
+    rates
+        .iter()
+        .map(|r| ((r / min).round() as usize).clamp(1, 32))
+        .collect()
+}
+
+impl SchedulePolicy for WeightedRoundRobin {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::WeightedRoundRobin
+    }
+
+    fn poll(&mut self, _now: f64, idle: &[bool], window: &mut FrameWindow) -> Vec<Dispatch> {
+        if !idle.iter().all(|&i| i) || window.is_empty() {
+            return Vec::new();
+        }
+        dispatch_weighted_round(&self.weights, window)
+    }
+}
+
+/// Shared WRR/proportional round construction: interleave devices by
+/// weight (largest-remaining-weight first) so early frames spread across
+/// devices rather than piling onto device 0.
+fn dispatch_weighted_round(weights: &[usize], window: &mut FrameWindow) -> Vec<Dispatch> {
+    let total: usize = weights.iter().sum();
+    let frames = window.pull_up_to(total);
+    let mut remaining = weights.to_vec();
+    let mut out = Vec::with_capacity(frames.len());
+    for fid in frames {
+        // Device with the most remaining quota (ties -> lowest index).
+        let dev = remaining
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .unwrap();
+        if remaining[dev] == 0 {
+            break; // round quota exhausted
+        }
+        remaining[dev] -= 1;
+        out.push(Dispatch { device: dev, fid });
+    }
+    out
+}
+
+// ---------------------------------------------------------------- FCFS --
+
+/// First-come-first-serve: assign the oldest waiting frame to the
+/// lowest-indexed idle device; work-conserving, no barrier.
+pub struct Fcfs {
+    n: usize,
+}
+
+impl Fcfs {
+    pub fn new(n: usize) -> Fcfs {
+        assert!(n > 0);
+        Fcfs { n }
+    }
+}
+
+impl SchedulePolicy for Fcfs {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Fcfs
+    }
+
+    fn poll(&mut self, _now: f64, idle: &[bool], window: &mut FrameWindow) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        for dev in 0..self.n {
+            if !idle[dev] || out.iter().any(|d: &Dispatch| d.device == dev) {
+                continue;
+            }
+            match window.pull() {
+                Some(fid) => out.push(Dispatch { device: dev, fid }),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+// -------------------------------------------------------- Proportional --
+
+/// Performance-aware proportional scheduler: weighted rounds whose
+/// weights come from EWMA-estimated service rates (recomputed every
+/// round), so it adapts to runtime conditions (§III-C).
+pub struct Proportional {
+    estimators: Vec<Ewma>,
+    /// Rounds completed (weights stay uniform until every device has at
+    /// least one observation).
+    observed: Vec<bool>,
+}
+
+impl Proportional {
+    pub fn new(n: usize) -> Proportional {
+        assert!(n > 0);
+        Proportional {
+            estimators: (0..n).map(|_| Ewma::new(0.25)).collect(),
+            observed: vec![false; n],
+        }
+    }
+
+    /// Current weight vector (1s until all devices observed).
+    pub fn current_weights(&self) -> Vec<usize> {
+        if !self.observed.iter().all(|&o| o) {
+            return vec![1; self.estimators.len()];
+        }
+        let rates: Vec<f64> = self
+            .estimators
+            .iter()
+            .map(|e| 1.0 / e.get_or(1.0).max(1e-9))
+            .collect();
+        weights_from_rates(&rates)
+    }
+}
+
+impl SchedulePolicy for Proportional {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Proportional
+    }
+
+    fn poll(&mut self, _now: f64, idle: &[bool], window: &mut FrameWindow) -> Vec<Dispatch> {
+        if !idle.iter().all(|&i| i) || window.is_empty() {
+            return Vec::new();
+        }
+        let weights = self.current_weights();
+        dispatch_weighted_round(&weights, window)
+    }
+
+    fn on_complete(&mut self, device: usize, service_time: f64, _now: f64) {
+        self.estimators[device].push(service_time);
+        self.observed[device] = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window_with(frames: u64) -> FrameWindow {
+        let mut w = FrameWindow::new(frames.max(1) as usize);
+        for f in 0..frames {
+            w.arrive(f);
+        }
+        w
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            SchedulerKind::RoundRobin,
+            SchedulerKind::WeightedRoundRobin,
+            SchedulerKind::Fcfs,
+            SchedulerKind::Proportional,
+        ] {
+            assert_eq!(SchedulerKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(SchedulerKind::parse("rr"), Some(SchedulerKind::RoundRobin));
+        assert!(SchedulerKind::parse("sjf").is_none());
+    }
+
+    #[test]
+    fn rr_waits_for_full_barrier() {
+        let mut rr = RoundRobin::new(3);
+        let mut w = window_with(5);
+        // One device still busy -> no dispatch at all.
+        let d = rr.poll(0.0, &[true, false, true], &mut w);
+        assert!(d.is_empty());
+        assert_eq!(w.len(), 5);
+    }
+
+    #[test]
+    fn rr_round_assigns_one_frame_per_device() {
+        let mut rr = RoundRobin::new(3);
+        let mut w = window_with(5);
+        let d = rr.poll(0.0, &[true, true, true], &mut w);
+        assert_eq!(d.len(), 3);
+        let mut devices: Vec<usize> = d.iter().map(|x| x.device).collect();
+        devices.sort_unstable();
+        assert_eq!(devices, vec![0, 1, 2]);
+        let fids: Vec<u64> = d.iter().map(|x| x.fid).collect();
+        assert_eq!(fids, vec![0, 1, 2]); // oldest first
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn rr_rotation_advances_across_rounds() {
+        let mut rr = RoundRobin::new(3);
+        let mut w = window_with(2);
+        let d1 = rr.poll(0.0, &[true, true, true], &mut w);
+        assert_eq!(d1.len(), 2);
+        assert_eq!(d1[0].device, 0);
+        assert_eq!(d1[1].device, 1);
+        let mut w2 = window_with(1);
+        let d2 = rr.poll(1.0, &[true, true, true], &mut w2);
+        // Rotation continues at device 2.
+        assert_eq!(d2[0].device, 2);
+    }
+
+    #[test]
+    fn wrr_weights_proportional_to_rates() {
+        // Fast CPU (13.5) + 2 sticks (2.5): weights [5, 1, 1].
+        let wrr = WeightedRoundRobin::new(&[13.5, 2.5, 2.5]);
+        assert_eq!(wrr.weights(), &[5, 1, 1]);
+    }
+
+    #[test]
+    fn wrr_round_respects_weights() {
+        let mut wrr = WeightedRoundRobin::new(&[5.0, 2.5]); // weights [2, 1]
+        let mut w = window_with(3);
+        let d = wrr.poll(0.0, &[true, true], &mut w);
+        assert_eq!(d.len(), 3);
+        let dev0 = d.iter().filter(|x| x.device == 0).count();
+        let dev1 = d.iter().filter(|x| x.device == 1).count();
+        assert_eq!((dev0, dev1), (2, 1));
+    }
+
+    #[test]
+    fn wrr_short_window_spreads_across_devices() {
+        // With fewer frames than the round quota, frames must not pile
+        // onto device 0 only.
+        let mut wrr = WeightedRoundRobin::new(&[5.0, 5.0]); // weights [1, 1]
+        let mut w = window_with(2);
+        let d = wrr.poll(0.0, &[true, true], &mut w);
+        let devs: Vec<usize> = d.iter().map(|x| x.device).collect();
+        assert!(devs.contains(&0) && devs.contains(&1), "{devs:?}");
+    }
+
+    #[test]
+    fn fcfs_dispatches_to_all_idle_devices() {
+        let mut f = Fcfs::new(3);
+        let mut w = window_with(2);
+        let d = f.poll(0.0, &[true, false, true], &mut w);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0], Dispatch { device: 0, fid: 0 });
+        assert_eq!(d[1], Dispatch { device: 2, fid: 1 });
+    }
+
+    #[test]
+    fn fcfs_no_barrier() {
+        // One idle device gets work even while others are busy.
+        let mut f = Fcfs::new(3);
+        let mut w = window_with(1);
+        let d = f.poll(0.0, &[false, true, false], &mut w);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].device, 1);
+    }
+
+    #[test]
+    fn fcfs_stops_when_window_empty() {
+        let mut f = Fcfs::new(4);
+        let mut w = FrameWindow::new(4);
+        assert!(f.poll(0.0, &[true; 4], &mut w).is_empty());
+    }
+
+    #[test]
+    fn proportional_starts_uniform_then_adapts() {
+        let mut p = Proportional::new(2);
+        assert_eq!(p.current_weights(), vec![1, 1]);
+        // Device 0 is 4x faster (service 0.1 vs 0.4).
+        for _ in 0..8 {
+            p.on_complete(0, 0.1, 0.0);
+            p.on_complete(1, 0.4, 0.0);
+        }
+        assert_eq!(p.current_weights(), vec![4, 1]);
+    }
+
+    #[test]
+    fn proportional_round_uses_learned_weights() {
+        let mut p = Proportional::new(2);
+        for _ in 0..8 {
+            p.on_complete(0, 0.1, 0.0);
+            p.on_complete(1, 0.4, 0.0);
+        }
+        let mut w = window_with(5);
+        let d = p.poll(0.0, &[true, true], &mut w);
+        assert_eq!(d.len(), 5);
+        let dev0 = d.iter().filter(|x| x.device == 0).count();
+        assert_eq!(dev0, 4);
+    }
+
+    #[test]
+    fn weights_capped() {
+        let w = weights_from_rates(&[1000.0, 1.0]);
+        assert_eq!(w, vec![32, 1]);
+    }
+}

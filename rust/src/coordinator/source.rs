@@ -1,0 +1,140 @@
+//! Frame source with the bounded freshness window that produces the
+//! paper's "random frame dropping".
+//!
+//! In *paced* mode frames become available at the stream rate λ; the
+//! source keeps at most `window` unclaimed frames — when a new frame
+//! arrives while the window is full, the **oldest** unclaimed frame is
+//! dropped (live-video semantics: stale frames are worthless). Schedulers
+//! pull the oldest unclaimed frame, so what they process is fresh and what
+//! they miss is recorded as dropped.
+//!
+//! In *saturated* mode every frame is available immediately and nothing
+//! drops — this measures pure processing capacity σ_P (how the paper's
+//! "Detection FPS" columns behave; they exceed λ for large n).
+
+use crate::types::FrameId;
+use std::collections::VecDeque;
+
+/// Outcome of offering a new arrival to the window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    /// Frame evicted (dropped) to make room, if the window was full.
+    pub evicted: Option<FrameId>,
+}
+
+/// Bounded in-order frame window.
+#[derive(Debug, Clone)]
+pub struct FrameWindow {
+    window: usize,
+    pending: VecDeque<FrameId>,
+}
+
+impl FrameWindow {
+    /// `window` must be ≥ 1.
+    pub fn new(window: usize) -> FrameWindow {
+        assert!(window >= 1, "frame window must hold at least one frame");
+        FrameWindow {
+            window,
+            pending: VecDeque::with_capacity(window + 1),
+        }
+    }
+
+    /// A frame arrives from the stream.
+    pub fn arrive(&mut self, fid: FrameId) -> Arrival {
+        self.pending.push_back(fid);
+        if self.pending.len() > self.window {
+            Arrival {
+                evicted: self.pending.pop_front(),
+            }
+        } else {
+            Arrival { evicted: None }
+        }
+    }
+
+    /// Pull the oldest unclaimed frame.
+    pub fn pull(&mut self) -> Option<FrameId> {
+        self.pending.pop_front()
+    }
+
+    /// Pull up to `k` oldest unclaimed frames (lockstep rounds).
+    pub fn pull_up_to(&mut self, k: usize) -> Vec<FrameId> {
+        let take = k.min(self.pending.len());
+        self.pending.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drain everything left (end of stream -> dropped tail).
+    pub fn drain_remaining(&mut self) -> Vec<FrameId> {
+        self.pending.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_within_window_do_not_evict() {
+        let mut w = FrameWindow::new(3);
+        assert_eq!(w.arrive(0).evicted, None);
+        assert_eq!(w.arrive(1).evicted, None);
+        assert_eq!(w.arrive(2).evicted, None);
+        assert_eq!(w.len(), 3);
+    }
+
+    #[test]
+    fn overflow_evicts_oldest() {
+        let mut w = FrameWindow::new(2);
+        w.arrive(0);
+        w.arrive(1);
+        let a = w.arrive(2);
+        assert_eq!(a.evicted, Some(0));
+        assert_eq!(w.pull(), Some(1));
+        assert_eq!(w.pull(), Some(2));
+        assert_eq!(w.pull(), None);
+    }
+
+    #[test]
+    fn pull_is_fifo() {
+        let mut w = FrameWindow::new(5);
+        for f in 0..4 {
+            w.arrive(f);
+        }
+        assert_eq!(w.pull(), Some(0));
+        assert_eq!(w.pull(), Some(1));
+    }
+
+    #[test]
+    fn pull_up_to_takes_oldest_block() {
+        let mut w = FrameWindow::new(10);
+        for f in 0..6 {
+            w.arrive(f);
+        }
+        assert_eq!(w.pull_up_to(4), vec![0, 1, 2, 3]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.pull_up_to(10), vec![4, 5]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn drain_remaining_empties() {
+        let mut w = FrameWindow::new(4);
+        w.arrive(7);
+        w.arrive(8);
+        assert_eq!(w.drain_remaining(), vec![7, 8]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_window_rejected() {
+        FrameWindow::new(0);
+    }
+}

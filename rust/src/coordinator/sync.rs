@@ -1,0 +1,251 @@
+//! The sequence synchronizer (§III-C).
+//!
+//! Parallel detection completes frames out of order (a frame on a fast
+//! device overtakes an earlier frame on a slow one). The synchronizer is
+//! a reorder buffer keyed by frame id: an output record for frame *f* is
+//! emitted only once the fates of all frames < *f* are known, restoring
+//! the input stream's temporal order.
+//!
+//! Dropped frames are emitted too — carrying the detections of the latest
+//! *emitted processed* frame ("the detection results from the latest
+//! processed frame will be reused as the detection approximation for this
+//! dropped frame"), which is exactly the stale-box mechanism behind the
+//! paper's mAP degradation.
+
+use crate::types::{Detection, FrameId, OutputRecord, Seconds};
+use std::collections::BTreeMap;
+
+/// Fate of one frame, reported by the engine.
+#[derive(Debug, Clone)]
+pub enum Fate {
+    Processed {
+        detections: Vec<Detection>,
+        device: usize,
+    },
+    Dropped,
+}
+
+/// Reorder buffer + stale-fill.
+#[derive(Debug, Default)]
+pub struct Synchronizer {
+    /// Next frame id to emit.
+    next: FrameId,
+    /// Resolved-but-not-yet-emittable fates.
+    pending: BTreeMap<FrameId, (Fate, Seconds)>,
+    /// Detections + id of the last *processed* frame emitted.
+    last_processed: Option<(FrameId, Vec<Detection>)>,
+    emitted: Vec<OutputRecord>,
+    /// High-water mark of the reorder buffer (metrics).
+    max_pending: usize,
+}
+
+impl Synchronizer {
+    pub fn new() -> Synchronizer {
+        Synchronizer::default()
+    }
+
+    /// Report frame `fid`'s fate at time `now`; `capture_ts(fid)` supplies
+    /// capture timestamps for emitted records. Returns the records that
+    /// became emittable (in order), as a borrowed slice of the emitted
+    /// log — no cloning on the hot path (§Perf iteration 3).
+    pub fn resolve<F>(
+        &mut self,
+        fid: FrameId,
+        fate: Fate,
+        now: Seconds,
+        capture_ts: F,
+    ) -> &[OutputRecord]
+    where
+        F: Fn(FrameId) -> Seconds,
+    {
+        assert!(
+            fid >= self.next,
+            "frame {fid} resolved twice (already emitted)"
+        );
+        let prev = self.pending.insert(fid, (fate, now));
+        assert!(prev.is_none(), "frame {fid} resolved twice");
+        self.max_pending = self.max_pending.max(self.pending.len());
+
+        let first_new = self.emitted.len();
+        while let Some(entry) = self.pending.remove(&self.next) {
+            let (fate, resolve_ts) = entry;
+            let fid = self.next;
+            // Emit time: a record leaves when it is resolved AND all
+            // predecessors have left; with in-order pops that is simply
+            // max(resolve time, previous emit time).
+            let emit_ts = self
+                .emitted
+                .last()
+                .map(|r| resolve_ts.max(r.emit_ts))
+                .unwrap_or(resolve_ts);
+            let record = match fate {
+                Fate::Processed { detections, device } => {
+                    self.last_processed = Some((fid, detections.clone()));
+                    OutputRecord {
+                        frame_id: fid,
+                        capture_ts: capture_ts(fid),
+                        emit_ts,
+                        detections,
+                        stale_from: None,
+                        processed_by: Some(device),
+                    }
+                }
+                Fate::Dropped => {
+                    let (src, dets) = match &self.last_processed {
+                        Some((src, dets)) => (*src, dets.clone()),
+                        None => (fid, Vec::new()), // nothing to reuse yet
+                    };
+                    OutputRecord {
+                        frame_id: fid,
+                        capture_ts: capture_ts(fid),
+                        emit_ts,
+                        detections: dets,
+                        stale_from: Some(src),
+                        processed_by: None,
+                    }
+                }
+            };
+            self.emitted.push(record);
+            self.next += 1;
+        }
+        &self.emitted[first_new..]
+    }
+
+    /// All records emitted so far (in frame order).
+    pub fn emitted(&self) -> &[OutputRecord] {
+        &self.emitted
+    }
+
+    /// Frames whose fate is resolved but that are still blocked on
+    /// predecessors.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn max_pending(&self) -> usize {
+        self.max_pending
+    }
+
+    /// Next frame id the synchronizer is waiting for.
+    pub fn next_expected(&self) -> FrameId {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::BBox;
+
+    fn det(cx: f32) -> Detection {
+        Detection {
+            bbox: BBox::new(cx, 0.5, 0.1, 0.1),
+            class_id: 0,
+            score: 0.9,
+        }
+    }
+
+    fn ts(fid: FrameId) -> Seconds {
+        fid as f64 / 10.0
+    }
+
+    #[test]
+    fn in_order_completions_emit_immediately() {
+        let mut s = Synchronizer::new();
+        let r = s.resolve(0, Fate::Processed { detections: vec![det(0.1)], device: 0 }, 1.0, ts);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].frame_id, 0);
+        let r = s.resolve(1, Fate::Processed { detections: vec![det(0.2)], device: 1 }, 2.0, ts);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].frame_id, 1);
+    }
+
+    #[test]
+    fn out_of_order_completion_is_held() {
+        let mut s = Synchronizer::new();
+        // Frame 1 finishes before frame 0.
+        let r = s.resolve(1, Fate::Processed { detections: vec![det(0.2)], device: 1 }, 1.0, ts);
+        assert!(r.is_empty());
+        assert_eq!(s.pending_len(), 1);
+        let r = s.resolve(0, Fate::Processed { detections: vec![det(0.1)], device: 0 }, 2.0, ts);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].frame_id, 0);
+        assert_eq!(r[1].frame_id, 1);
+        // Frame 1's emit time is gated by frame 0's (2.0).
+        assert!(r[1].emit_ts >= 2.0);
+    }
+
+    #[test]
+    fn dropped_frame_reuses_latest_processed() {
+        let mut s = Synchronizer::new();
+        s.resolve(0, Fate::Processed { detections: vec![det(0.3)], device: 0 }, 1.0, ts);
+        let r = s.resolve(1, Fate::Dropped, 1.1, ts);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].stale_from, Some(0));
+        assert_eq!(r[0].detections.len(), 1);
+        assert!((r[0].detections[0].bbox.cx - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn drop_before_any_processing_is_empty() {
+        let mut s = Synchronizer::new();
+        let r = s.resolve(0, Fate::Dropped, 0.5, ts);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].detections.is_empty());
+        assert!(r[0].was_dropped());
+    }
+
+    #[test]
+    fn stale_fill_uses_emission_order_not_resolution_order() {
+        let mut s = Synchronizer::new();
+        // Frame 1 (processed) resolves first, then frame 0 (processed),
+        // then frame 2 (dropped): the drop must reuse frame 1's boxes
+        // (latest processed in emission order).
+        s.resolve(1, Fate::Processed { detections: vec![det(0.7)], device: 0 }, 1.0, ts);
+        s.resolve(0, Fate::Processed { detections: vec![det(0.1)], device: 1 }, 2.0, ts);
+        let r = s.resolve(2, Fate::Dropped, 2.1, ts);
+        assert_eq!(r[0].stale_from, Some(1));
+        assert!((r[0].detections[0].bbox.cx - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "resolved twice")]
+    fn double_resolution_panics() {
+        let mut s = Synchronizer::new();
+        s.resolve(0, Fate::Dropped, 0.1, ts);
+        s.resolve(0, Fate::Dropped, 0.2, ts);
+    }
+
+    #[test]
+    fn emit_times_monotone() {
+        let mut s = Synchronizer::new();
+        let mut all: Vec<OutputRecord> = Vec::new();
+        // Scrambled completion order.
+        for (fid, t) in [(2u64, 1.0), (0, 3.0), (1, 2.0), (4, 3.5), (3, 6.0)] {
+            let emitted = s.resolve(
+                fid,
+                Fate::Processed { detections: vec![], device: 0 },
+                t,
+                ts,
+            );
+            all.extend(emitted.iter().cloned());
+        }
+        assert_eq!(all.len(), 5);
+        for w in all.windows(2) {
+            assert!(w[1].emit_ts >= w[0].emit_ts);
+            assert_eq!(w[1].frame_id, w[0].frame_id + 1);
+        }
+    }
+
+    #[test]
+    fn max_pending_tracks_high_water() {
+        let mut s = Synchronizer::new();
+        s.resolve(3, Fate::Dropped, 0.1, ts);
+        s.resolve(2, Fate::Dropped, 0.2, ts);
+        s.resolve(1, Fate::Dropped, 0.3, ts);
+        assert_eq!(s.max_pending(), 3);
+        s.resolve(0, Fate::Dropped, 0.4, ts);
+        assert_eq!(s.pending_len(), 0);
+        assert_eq!(s.next_expected(), 4);
+    }
+}

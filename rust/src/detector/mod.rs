@@ -1,0 +1,34 @@
+//! Detector backends.
+//!
+//! Two implementations of one trait feed the same coordinator:
+//!
+//! * [`quality::QualityModelDetector`] — calibrated statistical model of a
+//!   well-trained detector (jitter / misses / false positives / class
+//!   confusion), used for paper-scale experiments where we do not own the
+//!   authors' SSD300/YOLOv3 weights (DESIGN.md §3). It needs only frame
+//!   *geometry* (ground truth), so metadata-only frames suffice and whole
+//!   tables run in milliseconds of virtual time.
+//! * [`pjrt::PjrtDetector`] — real TinyDet inference through the XLA PJRT
+//!   runtime (L1 Pallas kernels inside), used by the live serving path.
+//!
+//! Either way, mAP under frame dropping is *computed* downstream by
+//! [`crate::eval`], never assumed.
+
+pub mod quality;
+pub mod pjrt;
+
+use crate::types::{Detection, Frame};
+
+/// A detector replica: consumes one frame, produces detections.
+/// `&mut self` because backends keep per-replica RNG / buffers.
+///
+/// Deliberately NOT `Send`: the PJRT backend wraps an `Rc`-based client.
+/// Serving workers construct their detector *inside* the worker thread
+/// from a `Send + Clone` factory instead of moving detectors across
+/// threads (see [`crate::server`]).
+pub trait Detector {
+    fn detect(&mut self, frame: &Frame) -> Vec<Detection>;
+
+    /// Human-readable backend label (metrics/logs).
+    fn label(&self) -> String;
+}

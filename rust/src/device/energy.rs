@@ -1,0 +1,99 @@
+//! Energy accounting (Table VI): TDP-based power model with busy/idle
+//! tracking per device.
+
+use crate::device::DeviceKind;
+
+/// Accumulates busy time per device and converts to energy.
+#[derive(Debug, Clone)]
+pub struct EnergyMeter {
+    entries: Vec<EnergyEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EnergyEntry {
+    pub kind: DeviceKind,
+    pub busy_seconds: f64,
+}
+
+impl EnergyMeter {
+    pub fn new(kinds: &[DeviceKind]) -> EnergyMeter {
+        EnergyMeter {
+            entries: kinds
+                .iter()
+                .map(|&kind| EnergyEntry {
+                    kind,
+                    busy_seconds: 0.0,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn record_busy(&mut self, device: usize, seconds: f64) {
+        self.entries[device].busy_seconds += seconds;
+    }
+
+    /// Energy burned while busy, in joules (TDP × busy time).
+    pub fn busy_joules(&self) -> f64 {
+        self.entries
+            .iter()
+            .map(|e| e.kind.tdp_watts() * e.busy_seconds)
+            .sum()
+    }
+
+    /// Worst-case energy over a wall-clock window (all devices at TDP the
+    /// whole time — the paper's TDP-based comparison).
+    pub fn window_joules(&self, wall_seconds: f64) -> f64 {
+        self.entries
+            .iter()
+            .map(|e| e.kind.tdp_watts() * wall_seconds)
+            .sum()
+    }
+
+    pub fn total_busy_seconds(&self) -> f64 {
+        self.entries.iter().map(|e| e.busy_seconds).sum()
+    }
+
+    pub fn entries(&self) -> &[EnergyEntry] {
+        &self.entries
+    }
+}
+
+/// Table VI's figure of merit: detection FPS per watt of TDP.
+pub fn fps_per_watt(fps: f64, kind: DeviceKind) -> f64 {
+    fps / kind.tdp_watts()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_fps_per_watt() {
+        // Paper: NCS2 1.25, slow CPU 0.03, fast CPU 0.11, GPU 0.14.
+        assert!((fps_per_watt(2.5, DeviceKind::Ncs2) - 1.25).abs() < 1e-9);
+        assert!((fps_per_watt(0.4, DeviceKind::SlowCpu) - 0.0267).abs() < 0.002);
+        assert!((fps_per_watt(13.5, DeviceKind::FastCpu) - 0.108).abs() < 0.002);
+        assert!((fps_per_watt(35.0, DeviceKind::TitanX) - 0.14).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ncs2_most_efficient() {
+        let eff = [
+            fps_per_watt(2.5, DeviceKind::Ncs2),
+            fps_per_watt(0.4, DeviceKind::SlowCpu),
+            fps_per_watt(13.5, DeviceKind::FastCpu),
+            fps_per_watt(35.0, DeviceKind::TitanX),
+        ];
+        assert!(eff[0] > eff[1] && eff[0] > eff[2] && eff[0] > eff[3]);
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let mut m = EnergyMeter::new(&[DeviceKind::Ncs2, DeviceKind::Ncs2]);
+        m.record_busy(0, 10.0);
+        m.record_busy(1, 5.0);
+        assert_eq!(m.total_busy_seconds(), 15.0);
+        assert_eq!(m.busy_joules(), 2.0 * 15.0);
+        assert_eq!(m.window_joules(10.0), 2.0 * 2.0 * 10.0);
+    }
+}

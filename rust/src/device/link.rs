@@ -1,0 +1,176 @@
+//! Connection-interface model: Table VIII's bandwidth registry and the
+//! shared-hub transfer behaviour behind Table IX.
+//!
+//! A USB hub is a *shared, serialising* resource: all sticks' frame
+//! transfers are queued on one bus. Effective bandwidth is nominal ×
+//! efficiency; the USB 2.0 efficiency is back-solved from Table IX's
+//! single-stick slowdown (see module docs in [`crate::device`]).
+
+/// A (possibly shared) transfer link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkProfile {
+    pub name: &'static str,
+    /// Nominal bandwidth in bits/second (marketing number, Table VIII).
+    pub nominal_bps: f64,
+    /// Achievable fraction of nominal for bulk frame payloads.
+    pub efficiency: f64,
+    /// Fixed per-transfer overhead in seconds (setup/ack).
+    pub per_transfer_overhead: f64,
+}
+
+impl LinkProfile {
+    pub fn effective_bps(&self) -> f64 {
+        self.nominal_bps * self.efficiency
+    }
+
+    /// Time for one frame payload to cross the link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.per_transfer_overhead + (bytes as f64 * 8.0) / self.effective_bps()
+    }
+
+    /// USB 2.0: 480 Mbps nominal; ≈66 Mbps effective for OpenVINO-style
+    /// inference payloads (back-solved from Table IX: YOLOv3 2.5 -> 1.9
+    /// FPS at n = 1 ⇒ ≈126 ms extra per 8.3 Mb frame).
+    pub fn usb2() -> LinkProfile {
+        LinkProfile {
+            name: "USB 2.0",
+            nominal_bps: 480e6,
+            efficiency: 0.1375, // -> 66 Mbps effective
+            per_transfer_overhead: 0.0,
+        }
+    }
+
+    /// USB 3.0: 5 Gbps nominal; bulk transfers reach ~80 %.
+    pub fn usb3() -> LinkProfile {
+        LinkProfile {
+            name: "USB 3.0",
+            nominal_bps: 5e9,
+            efficiency: 0.8,
+            per_transfer_overhead: 0.0,
+        }
+    }
+
+    pub fn ethernet_1g() -> LinkProfile {
+        LinkProfile {
+            name: "Ethernet",
+            nominal_bps: 1e9,
+            efficiency: 0.9,
+            per_transfer_overhead: 0.0002,
+        }
+    }
+
+    pub fn ethernet_10g() -> LinkProfile {
+        LinkProfile {
+            name: "10 Gigabit Ethernet",
+            nominal_bps: 10e9,
+            efficiency: 0.9,
+            per_transfer_overhead: 0.0002,
+        }
+    }
+
+    pub fn wifi6() -> LinkProfile {
+        LinkProfile {
+            name: "WiFi 6",
+            nominal_bps: 10e9,
+            efficiency: 0.35,
+            per_transfer_overhead: 0.001,
+        }
+    }
+
+    pub fn cellular_4g() -> LinkProfile {
+        LinkProfile {
+            name: "4G (peak)",
+            nominal_bps: 1e9,
+            efficiency: 0.25,
+            per_transfer_overhead: 0.01,
+        }
+    }
+
+    pub fn cellular_5g() -> LinkProfile {
+        LinkProfile {
+            name: "5G (peak)",
+            nominal_bps: 20e9,
+            efficiency: 0.4,
+            per_transfer_overhead: 0.002,
+        }
+    }
+
+    /// Table VIII's full registry, in the paper's column order.
+    pub fn registry() -> Vec<LinkProfile> {
+        vec![
+            LinkProfile::usb2(),
+            LinkProfile::usb3(),
+            LinkProfile::ethernet_1g(),
+            LinkProfile::ethernet_10g(),
+            LinkProfile::wifi6(),
+            LinkProfile::cellular_4g(),
+            LinkProfile::cellular_5g(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<LinkProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "usb2" | "usb2.0" | "usb 2.0" => Some(LinkProfile::usb2()),
+            "usb3" | "usb3.0" | "usb 3.0" => Some(LinkProfile::usb3()),
+            "eth" | "ethernet" => Some(LinkProfile::ethernet_1g()),
+            "10gbe" | "eth10g" => Some(LinkProfile::ethernet_10g()),
+            "wifi6" => Some(LinkProfile::wifi6()),
+            "4g" => Some(LinkProfile::cellular_4g()),
+            "5g" => Some(LinkProfile::cellular_5g()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DetectorModelId;
+
+    #[test]
+    fn table8_nominal_bandwidths() {
+        assert_eq!(LinkProfile::usb2().nominal_bps, 480e6);
+        assert_eq!(LinkProfile::usb3().nominal_bps, 5e9);
+        assert_eq!(LinkProfile::ethernet_10g().nominal_bps, 10e9);
+        assert_eq!(LinkProfile::cellular_5g().nominal_bps, 20e9);
+        assert_eq!(LinkProfile::registry().len(), 7);
+    }
+
+    #[test]
+    fn usb2_reproduces_single_stick_slowdown() {
+        // YOLOv3 FP16 payload over USB 2.0 must cost ≈126 ms so that
+        // 1 / (0.4 + 0.126) ≈ 1.9 FPS (Table IX, n = 1).
+        let t = LinkProfile::usb2().transfer_time(DetectorModelId::Yolov3.wire_bytes());
+        let fps = 1.0 / (0.4 + t);
+        assert!((t - 0.126).abs() < 0.005, "transfer {t}");
+        assert!((fps - 1.9).abs() < 0.05, "fps {fps}");
+    }
+
+    #[test]
+    fn usb2_ssd_single_stick() {
+        // SSD300: 1 / (1/2.3 + transfer) ≈ 2.0 FPS (Table IX, n = 1).
+        let t = LinkProfile::usb2().transfer_time(DetectorModelId::Ssd300.wire_bytes());
+        let fps = 1.0 / (1.0 / 2.3 + t);
+        assert!((fps - 2.0).abs() < 0.06, "fps {fps}");
+    }
+
+    #[test]
+    fn usb2_saturation_rate_near_8fps_for_yolo() {
+        // Bus capacity / per-frame bits ⇒ the Table IX plateau (~8 FPS).
+        let link = LinkProfile::usb2();
+        let cap = link.effective_bps() / (DetectorModelId::Yolov3.wire_bytes() as f64 * 8.0);
+        assert!((cap - 7.95).abs() < 0.2, "cap {cap}");
+    }
+
+    #[test]
+    fn usb3_transfer_negligible() {
+        let t = LinkProfile::usb3().transfer_time(DetectorModelId::Yolov3.wire_bytes());
+        assert!(t < 0.003, "usb3 transfer {t}");
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(LinkProfile::by_name("usb2").unwrap().name, "USB 2.0");
+        assert!(LinkProfile::by_name("carrier-pigeon").is_none());
+    }
+}

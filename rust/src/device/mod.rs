@@ -1,0 +1,311 @@
+//! Edge device, AI-accelerator, link and energy models.
+//!
+//! Calibration constants come straight from the paper (DESIGN.md §7):
+//! service rates from Tables IV–VII, TDP from Table VI, link bandwidths
+//! from Table VIII, and the USB 2.0 *effective* bandwidth is derived from
+//! Table IX's single-stick slowdown (2.5 -> 1.9 FPS for YOLOv3 implies
+//! ≈126 ms of extra per-frame transfer, i.e. ≈66 Mbps effective for the
+//! 1 MB FP16 YOLO payload — which then also predicts the n≈5 plateau).
+
+pub mod link;
+pub mod energy;
+
+use crate::util::Rng;
+
+/// Kinds of compute devices in the paper's testbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Intel Neural Compute Stick 2 (Movidius VPU, via USB).
+    Ncs2,
+    /// Fast edge server CPU (Intel i7-10700K).
+    FastCpu,
+    /// Slow edge server CPU (AMD A6-9225).
+    SlowCpu,
+    /// Discrete GPU (GTX Titan X) — energy comparison only.
+    TitanX,
+}
+
+impl DeviceKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeviceKind::Ncs2 => "Intel NCS2",
+            DeviceKind::FastCpu => "Fast CPU (i7-10700K)",
+            DeviceKind::SlowCpu => "Slow CPU (A6-9225)",
+            DeviceKind::TitanX => "GPU (GTX TITAN X)",
+        }
+    }
+
+    /// Thermal design power in watts (Table VI).
+    pub fn tdp_watts(&self) -> f64 {
+        match self {
+            DeviceKind::Ncs2 => 2.0,
+            DeviceKind::FastCpu => 125.0,
+            DeviceKind::SlowCpu => 15.0,
+            DeviceKind::TitanX => 250.0,
+        }
+    }
+
+    /// Whether frames must cross an external link (USB hub) to reach the
+    /// device. CPUs consume frames from host memory.
+    pub fn needs_link(&self) -> bool {
+        matches!(self, DeviceKind::Ncs2)
+    }
+
+    /// Calibrated zero-drop detection rate μ (frames/second) for a model
+    /// (Tables IV–VII). `None` if the paper gives no figure and the
+    /// combination is unused.
+    pub fn service_rate(&self, model: DetectorModelId) -> f64 {
+        use DetectorModelId::*;
+        match (self, model) {
+            (DeviceKind::Ncs2, Ssd300) => 2.3,
+            (DeviceKind::Ncs2, Yolov3) => 2.5,
+            (DeviceKind::FastCpu, Yolov3) => 13.5,
+            // SSD300 ≈ 0.92× YOLOv3's per-frame cost ratio on CPU (derived
+            // from the NCS2 ratio 2.3/2.5); not reported in the paper.
+            (DeviceKind::FastCpu, Ssd300) => 12.4,
+            (DeviceKind::SlowCpu, Yolov3) => 0.4,
+            (DeviceKind::SlowCpu, Ssd300) => 0.37,
+            (DeviceKind::TitanX, Yolov3) => 35.0,
+            (DeviceKind::TitanX, Ssd300) => 46.0,
+        }
+    }
+}
+
+/// The two paper models (paper-scale profiles; the PJRT TinyDet variants
+/// `essd`/`eyolo` stand in for them on the live path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DetectorModelId {
+    Ssd300,
+    Yolov3,
+}
+
+impl DetectorModelId {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DetectorModelId::Ssd300 => "SSD300",
+            DetectorModelId::Yolov3 => "YOLOv3",
+        }
+    }
+
+    /// Square input size in pixels (Table II).
+    pub fn input_size(&self) -> u32 {
+        match self {
+            DetectorModelId::Ssd300 => 300,
+            DetectorModelId::Yolov3 => 416,
+        }
+    }
+
+    /// Bytes shipped to the accelerator per frame: FP16 blob (Table II's
+    /// models are FP16-quantised for NCS2).
+    pub fn wire_bytes(&self) -> u64 {
+        crate::types::Frame::wire_bytes(self.input_size(), 2)
+    }
+
+    /// Model file size in MB (Table II).
+    pub fn model_size_mb(&self) -> u32 {
+        match self {
+            DetectorModelId::Ssd300 => 51,
+            DetectorModelId::Yolov3 => 119,
+        }
+    }
+
+    pub fn backbone(&self) -> &'static str {
+        match self {
+            DetectorModelId::Ssd300 => "VGG-16",
+            DetectorModelId::Yolov3 => "DarkNet-53",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DetectorModelId> {
+        match s.to_ascii_lowercase().as_str() {
+            "ssd" | "ssd300" | "essd" => Some(DetectorModelId::Ssd300),
+            "yolo" | "yolov3" | "eyolo" => Some(DetectorModelId::Yolov3),
+            _ => None,
+        }
+    }
+}
+
+/// One concrete device instance in a fleet (e.g. "NCS2 stick #3").
+#[derive(Debug, Clone)]
+pub struct DeviceInstance {
+    pub kind: DeviceKind,
+    pub model: DetectorModelId,
+    /// Index within the fleet (stable replica id).
+    pub replica: usize,
+    /// Service-time jitter coefficient of variation (0 = deterministic).
+    pub jitter_cv: f64,
+    /// Overrides the calibrated `service_rate` when set (used e.g. by the
+    /// Table X language-runtime experiment, whose prototype ran faster
+    /// per-stick than the Table V configuration).
+    pub rate_override: Option<f64>,
+}
+
+impl DeviceInstance {
+    pub fn new(kind: DeviceKind, model: DetectorModelId, replica: usize) -> DeviceInstance {
+        DeviceInstance {
+            kind,
+            model,
+            replica,
+            jitter_cv: 0.015,
+            rate_override: None,
+        }
+    }
+
+    /// Device with an explicit service rate (frames/second).
+    pub fn with_rate(kind: DeviceKind, model: DetectorModelId, replica: usize, rate: f64) -> DeviceInstance {
+        let mut d = DeviceInstance::new(kind, model, replica);
+        d.rate_override = Some(rate);
+        d
+    }
+
+    /// Effective service rate μ (frames/second).
+    pub fn rate(&self) -> f64 {
+        self.rate_override
+            .unwrap_or_else(|| self.kind.service_rate(self.model))
+    }
+
+    /// Mean per-frame compute time (excludes link transfer).
+    pub fn mean_service_time(&self) -> f64 {
+        1.0 / self.rate()
+    }
+
+    /// Draw one service time (lognormal-ish jitter around the mean).
+    pub fn sample_service_time(&self, rng: &mut Rng) -> f64 {
+        let mean = self.mean_service_time();
+        if self.jitter_cv <= 0.0 {
+            return mean;
+        }
+        let noisy = mean * (1.0 + self.jitter_cv * rng.normal());
+        noisy.max(0.25 * mean)
+    }
+}
+
+/// A fleet: the devices participating in parallel detection, plus the
+/// shared link (if any) that frames traverse to reach USB devices.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub devices: Vec<DeviceInstance>,
+    pub hub: Option<link::LinkProfile>,
+}
+
+impl Fleet {
+    /// `n` homogeneous NCS2 sticks behind a hub (the paper's baseline).
+    pub fn ncs2_sticks(n: usize, model: DetectorModelId, hub: link::LinkProfile) -> Fleet {
+        Fleet {
+            devices: (0..n)
+                .map(|i| DeviceInstance::new(DeviceKind::Ncs2, model, i))
+                .collect(),
+            hub: Some(hub),
+        }
+    }
+
+    /// CPU + `n` NCS2 sticks (Table VII's heterogeneous setup).
+    pub fn cpu_plus_sticks(
+        cpu: DeviceKind,
+        n: usize,
+        model: DetectorModelId,
+        hub: link::LinkProfile,
+    ) -> Fleet {
+        let mut devices = vec![DeviceInstance::new(cpu, model, 0)];
+        devices.extend((0..n).map(|i| DeviceInstance::new(DeviceKind::Ncs2, model, i + 1)));
+        Fleet {
+            devices,
+            hub: Some(hub),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Mean single-model service rate μ across the fleet (used by the
+    /// n-selection rule when devices are homogeneous).
+    pub fn mean_rate(&self) -> f64 {
+        if self.devices.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .devices
+            .iter()
+            .map(|d| d.rate())
+            .sum();
+        sum / self.devices.len() as f64
+    }
+
+    /// Aggregate ideal rate Σμᵢ (§III-B's σ_P upper bound).
+    pub fn aggregate_rate(&self) -> f64 {
+        self.devices
+            .iter()
+            .map(|d| d.rate())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::link::LinkProfile;
+
+    #[test]
+    fn table6_tdp_values() {
+        assert_eq!(DeviceKind::Ncs2.tdp_watts(), 2.0);
+        assert_eq!(DeviceKind::SlowCpu.tdp_watts(), 15.0);
+        assert_eq!(DeviceKind::FastCpu.tdp_watts(), 125.0);
+        assert_eq!(DeviceKind::TitanX.tdp_watts(), 250.0);
+    }
+
+    #[test]
+    fn calibrated_rates_match_paper() {
+        assert_eq!(DeviceKind::Ncs2.service_rate(DetectorModelId::Yolov3), 2.5);
+        assert_eq!(DeviceKind::Ncs2.service_rate(DetectorModelId::Ssd300), 2.3);
+        assert_eq!(DeviceKind::FastCpu.service_rate(DetectorModelId::Yolov3), 13.5);
+        assert_eq!(DeviceKind::SlowCpu.service_rate(DetectorModelId::Yolov3), 0.4);
+        assert_eq!(DeviceKind::TitanX.service_rate(DetectorModelId::Yolov3), 35.0);
+    }
+
+    #[test]
+    fn table2_model_specs() {
+        assert_eq!(DetectorModelId::Yolov3.input_size(), 416);
+        assert_eq!(DetectorModelId::Ssd300.input_size(), 300);
+        assert_eq!(DetectorModelId::Yolov3.wire_bytes(), 2 * 519_168);
+        assert_eq!(DetectorModelId::Yolov3.model_size_mb(), 119);
+        assert_eq!(DetectorModelId::Ssd300.model_size_mb(), 51);
+    }
+
+    #[test]
+    fn service_time_sampling_positive_and_near_mean() {
+        let d = DeviceInstance::new(DeviceKind::Ncs2, DetectorModelId::Yolov3, 0);
+        let mut rng = Rng::new(5);
+        let n = 10_000;
+        let mean: f64 = (0..n).map(|_| d.sample_service_time(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.4).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn fleet_builders() {
+        let f = Fleet::ncs2_sticks(7, DetectorModelId::Yolov3, LinkProfile::usb3());
+        assert_eq!(f.len(), 7);
+        assert!((f.aggregate_rate() - 17.5).abs() < 1e-9);
+        assert!((f.mean_rate() - 2.5).abs() < 1e-9);
+
+        let h = Fleet::cpu_plus_sticks(
+            DeviceKind::FastCpu,
+            7,
+            DetectorModelId::Yolov3,
+            LinkProfile::usb3(),
+        );
+        assert_eq!(h.len(), 8);
+        assert!((h.aggregate_rate() - (13.5 + 17.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_model_names() {
+        assert_eq!(DetectorModelId::parse("YOLOv3"), Some(DetectorModelId::Yolov3));
+        assert_eq!(DetectorModelId::parse("ssd"), Some(DetectorModelId::Ssd300));
+        assert_eq!(DetectorModelId::parse("resnet"), None);
+    }
+}

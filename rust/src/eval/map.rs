@@ -1,0 +1,282 @@
+//! VOC-style mean average precision over a whole clip.
+//!
+//! Matching is the standard protocol: per class, detections across all
+//! frames are ranked by confidence; each is greedily matched to the
+//! highest-IoU unmatched ground-truth box *in its frame* (TP if
+//! IoU ≥ `iou_thresh`, else FP); AP is the area under the
+//! precision-envelope/recall curve (VOC 2010+ all-point interpolation);
+//! mAP averages over classes that have ground truth.
+
+use crate::types::{Detection, GtBox};
+
+/// Per-class and aggregate AP results.
+#[derive(Debug, Clone)]
+pub struct MapResult {
+    /// AP per class id (None when the class has no ground truth).
+    pub per_class: Vec<Option<f64>>,
+    pub map: f64,
+    pub total_gt: usize,
+    pub total_dets: usize,
+}
+
+/// Evaluate mAP for `detections[frame]` against `ground_truth[frame]`.
+///
+/// The two slices must have the same length (one entry per video frame —
+/// dropped frames included, carrying their reused detections).
+pub fn evaluate_map(
+    detections: &[Vec<Detection>],
+    ground_truth: &[&[GtBox]],
+    num_classes: usize,
+    iou_thresh: f32,
+) -> MapResult {
+    assert_eq!(
+        detections.len(),
+        ground_truth.len(),
+        "detections and ground truth must cover the same frames"
+    );
+
+    let total_dets = detections.iter().map(|d| d.len()).sum();
+    let total_gt = ground_truth.iter().map(|g| g.len()).sum();
+
+    let mut per_class: Vec<Option<f64>> = Vec::with_capacity(num_classes);
+    for class_id in 0..num_classes {
+        per_class.push(class_ap(detections, ground_truth, class_id, iou_thresh));
+    }
+
+    let present: Vec<f64> = per_class.iter().filter_map(|x| *x).collect();
+    let map = if present.is_empty() {
+        0.0
+    } else {
+        present.iter().sum::<f64>() / present.len() as f64
+    };
+
+    MapResult {
+        per_class,
+        map,
+        total_gt,
+        total_dets,
+    }
+}
+
+fn class_ap(
+    detections: &[Vec<Detection>],
+    ground_truth: &[&[GtBox]],
+    class_id: usize,
+    iou_thresh: f32,
+) -> Option<f64> {
+    // Collect class GT count and per-frame GT indices.
+    let npos: usize = ground_truth
+        .iter()
+        .map(|g| g.iter().filter(|gt| gt.class_id == class_id).count())
+        .sum();
+    if npos == 0 {
+        return None;
+    }
+
+    // (score, frame, det) for this class, ranked by confidence.
+    let mut ranked: Vec<(f32, usize, &Detection)> = Vec::new();
+    for (f, dets) in detections.iter().enumerate() {
+        for d in dets.iter().filter(|d| d.class_id == class_id) {
+            ranked.push((d.score, f, d));
+        }
+    }
+    ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+
+    // Greedy matching; GT may be claimed once.
+    let mut claimed: Vec<Vec<bool>> = ground_truth
+        .iter()
+        .map(|g| vec![false; g.len()])
+        .collect();
+    let mut tps: Vec<bool> = Vec::with_capacity(ranked.len());
+    for (_, f, d) in &ranked {
+        let gts = ground_truth[*f];
+        let mut best = -1.0f32;
+        let mut best_i = usize::MAX;
+        for (i, gt) in gts.iter().enumerate() {
+            if gt.class_id != class_id || claimed[*f][i] {
+                continue;
+            }
+            let iou = d.bbox.iou(&gt.bbox);
+            if iou > best {
+                best = iou;
+                best_i = i;
+            }
+        }
+        if best >= iou_thresh && best_i != usize::MAX {
+            claimed[*f][best_i] = true;
+            tps.push(true);
+        } else {
+            tps.push(false);
+        }
+    }
+
+    // Precision/recall curve + all-point interpolated AP.
+    let mut tp_cum = 0usize;
+    let mut fp_cum = 0usize;
+    let mut recalls: Vec<f64> = Vec::with_capacity(tps.len());
+    let mut precisions: Vec<f64> = Vec::with_capacity(tps.len());
+    for &is_tp in &tps {
+        if is_tp {
+            tp_cum += 1;
+        } else {
+            fp_cum += 1;
+        }
+        recalls.push(tp_cum as f64 / npos as f64);
+        precisions.push(tp_cum as f64 / (tp_cum + fp_cum) as f64);
+    }
+
+    // Precision envelope (monotone non-increasing from the right).
+    for i in (0..precisions.len().saturating_sub(1)).rev() {
+        if precisions[i] < precisions[i + 1] {
+            precisions[i] = precisions[i + 1];
+        }
+    }
+
+    // Integrate over recall steps.
+    let mut ap = 0.0;
+    let mut prev_r = 0.0;
+    for i in 0..recalls.len() {
+        let dr = recalls[i] - prev_r;
+        if dr > 0.0 {
+            ap += dr * precisions[i];
+            prev_r = recalls[i];
+        }
+    }
+    Some(ap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{BBox, Detection, GtBox};
+
+    fn gt(cx: f32, cy: f32, s: f32, class_id: usize) -> GtBox {
+        GtBox {
+            bbox: BBox::new(cx, cy, s, s),
+            class_id,
+            track_id: 0,
+        }
+    }
+
+    fn det(cx: f32, cy: f32, s: f32, class_id: usize, score: f32) -> Detection {
+        Detection {
+            bbox: BBox::new(cx, cy, s, s),
+            class_id,
+            score,
+        }
+    }
+
+    #[test]
+    fn perfect_detections_give_map_one() {
+        let gts = vec![vec![gt(0.5, 0.5, 0.2, 0), gt(0.2, 0.2, 0.1, 1)]];
+        let dets = vec![vec![det(0.5, 0.5, 0.2, 0, 0.9), det(0.2, 0.2, 0.1, 1, 0.8)]];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let r = evaluate_map(&dets, &gt_refs, 3, 0.5);
+        assert!((r.map - 1.0).abs() < 1e-9, "map = {}", r.map);
+        assert_eq!(r.per_class[2], None); // class 2 has no GT
+    }
+
+    #[test]
+    fn no_detections_give_zero() {
+        let gts = vec![vec![gt(0.5, 0.5, 0.2, 0)]];
+        let dets = vec![vec![]];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let r = evaluate_map(&dets, &gt_refs, 3, 0.5);
+        assert_eq!(r.map, 0.0);
+    }
+
+    #[test]
+    fn misaligned_box_is_fp() {
+        let gts = vec![vec![gt(0.5, 0.5, 0.2, 0)]];
+        // Far-off detection: IoU < 0.5.
+        let dets = vec![vec![det(0.8, 0.8, 0.2, 0, 0.9)]];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let r = evaluate_map(&dets, &gt_refs, 3, 0.5);
+        assert_eq!(r.map, 0.0);
+    }
+
+    #[test]
+    fn duplicate_detections_counted_once() {
+        let gts = vec![vec![gt(0.5, 0.5, 0.2, 0)]];
+        let dets = vec![vec![
+            det(0.5, 0.5, 0.2, 0, 0.9),
+            det(0.5, 0.5, 0.2, 0, 0.8), // duplicate -> FP
+        ]];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let r = evaluate_map(&dets, &gt_refs, 3, 0.5);
+        // recall hits 1.0 at precision 1.0 first, so AP stays 1.0 for the class.
+        assert!((r.map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_scored_fp_ranked_after_tp_keeps_ap() {
+        // FP with lower score than all TPs: AP unaffected (classic VOC property).
+        let gts = vec![vec![gt(0.3, 0.3, 0.2, 0), gt(0.7, 0.7, 0.2, 0)]];
+        let dets = vec![vec![
+            det(0.3, 0.3, 0.2, 0, 0.9),
+            det(0.7, 0.7, 0.2, 0, 0.85),
+            det(0.1, 0.9, 0.1, 0, 0.1),
+        ]];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let r = evaluate_map(&dets, &gt_refs, 3, 0.5);
+        assert!((r.map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_scored_fp_reduces_ap() {
+        let gts = vec![vec![gt(0.3, 0.3, 0.2, 0)]];
+        let dets = vec![vec![
+            det(0.9, 0.9, 0.1, 0, 0.95), // confident FP ranked first
+            det(0.3, 0.3, 0.2, 0, 0.5),
+        ]];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let r = evaluate_map(&dets, &gt_refs, 3, 0.5);
+        assert!(r.map < 1.0 && r.map > 0.0);
+        assert!((r.map - 0.5).abs() < 1e-9); // precision 1/2 at recall 1
+    }
+
+    #[test]
+    fn cross_frame_ranking() {
+        // Two frames, one GT each; detector confident+right on frame 0,
+        // confident+wrong on frame 1.
+        let gts = vec![vec![gt(0.4, 0.4, 0.2, 0)], vec![gt(0.6, 0.6, 0.2, 0)]];
+        let dets = vec![
+            vec![det(0.4, 0.4, 0.2, 0, 0.9)],
+            vec![det(0.1, 0.1, 0.1, 0, 0.95)],
+        ];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let r = evaluate_map(&dets, &gt_refs, 3, 0.5);
+        // Ranked: FP(0.95), TP(0.9). Precisions: 0, 1/2. Recall reaches 0.5.
+        assert!((r.map - 0.25).abs() < 1e-9, "map = {}", r.map);
+    }
+
+    #[test]
+    #[should_panic(expected = "same frames")]
+    fn frame_count_mismatch_panics() {
+        let gts: Vec<Vec<GtBox>> = vec![vec![]];
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        evaluate_map(&[vec![], vec![]], &gt_refs, 3, 0.5);
+    }
+
+    #[test]
+    fn stale_detections_degrade_map() {
+        // The paper's core mechanism: boxes from frame t reused at t+k
+        // lose IoU as the object moves. 10 frames, object moving right.
+        let mut gts: Vec<Vec<GtBox>> = Vec::new();
+        let mut fresh: Vec<Vec<Detection>> = Vec::new();
+        let mut stale: Vec<Vec<Detection>> = Vec::new();
+        for f in 0..10 {
+            let cx = 0.2 + 0.06 * f as f32;
+            gts.push(vec![gt(cx, 0.5, 0.15, 0)]);
+            fresh.push(vec![det(cx, 0.5, 0.15, 0, 0.9)]);
+            // stale: reuse frame 0's detection for frames 0..4, frame 5's for 5..9
+            let src = if f < 5 { 0.2 } else { 0.2 + 0.06 * 5.0 };
+            stale.push(vec![det(src, 0.5, 0.15, 0, 0.9)]);
+        }
+        let gt_refs: Vec<&[GtBox]> = gts.iter().map(|g| g.as_slice()).collect();
+        let fresh_map = evaluate_map(&fresh, &gt_refs, 3, 0.5).map;
+        let stale_map = evaluate_map(&stale, &gt_refs, 3, 0.5).map;
+        assert!((fresh_map - 1.0).abs() < 1e-9);
+        assert!(stale_map < fresh_map, "stale {stale_map} < fresh {fresh_map}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Detection evaluation: greedy NMS and VOC-style mAP.
+//!
+//! The paper reports mAP over *all frames of the input video* — dropped
+//! frames are evaluated with their reused (stale) detections, which is
+//! exactly what couples frame dropping to accuracy (§II). The evaluator
+//! here consumes the synchronizer's [`OutputRecord`] stream plus the
+//! clip's ground truth and computes that number.
+
+pub mod nms;
+pub mod map;
+
+pub use map::{evaluate_map, MapResult};
+pub use nms::nms;

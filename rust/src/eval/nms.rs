@@ -1,0 +1,98 @@
+//! Greedy class-aware non-maximum suppression.
+//!
+//! The paper's post-processing step (§II-B): detectors emit one candidate
+//! per grid cell; NMS keeps the highest-scoring box among mutual overlaps.
+
+use crate::types::Detection;
+
+/// Greedy NMS: sort by score descending, suppress same-class boxes with
+/// IoU above `iou_thresh`. Returns kept detections in score order.
+pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    let mut kept: Vec<Detection> = Vec::with_capacity(dets.len().min(16));
+    'outer: for d in dets {
+        for k in &kept {
+            if k.class_id == d.class_id && k.bbox.iou(&d.bbox) > iou_thresh {
+                continue 'outer;
+            }
+        }
+        kept.push(d);
+    }
+    kept
+}
+
+/// Threshold + NMS convenience used by detector backends.
+pub fn postprocess(dets: Vec<Detection>, score_thresh: f32, iou_thresh: f32) -> Vec<Detection> {
+    let filtered: Vec<Detection> = dets.into_iter().filter(|d| d.score >= score_thresh).collect();
+    nms(filtered, iou_thresh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::BBox;
+
+    fn det(cx: f32, cy: f32, s: f32, class_id: usize, score: f32) -> Detection {
+        Detection {
+            bbox: BBox::new(cx, cy, s, s),
+            class_id,
+            score,
+        }
+    }
+
+    #[test]
+    fn suppresses_overlapping_same_class() {
+        let dets = vec![
+            det(0.5, 0.5, 0.2, 0, 0.9),
+            det(0.51, 0.5, 0.2, 0, 0.8), // overlaps first
+            det(0.9, 0.9, 0.1, 0, 0.7),  // far away
+        ];
+        let kept = nms(dets, 0.45);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].score, 0.9);
+        assert_eq!(kept[1].score, 0.7);
+    }
+
+    #[test]
+    fn keeps_overlapping_different_classes() {
+        let dets = vec![det(0.5, 0.5, 0.2, 0, 0.9), det(0.5, 0.5, 0.2, 1, 0.8)];
+        assert_eq!(nms(dets, 0.45).len(), 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(nms(vec![], 0.5).is_empty());
+    }
+
+    #[test]
+    fn keeps_highest_score_of_cluster() {
+        let dets = vec![
+            det(0.5, 0.5, 0.2, 2, 0.6),
+            det(0.5, 0.5, 0.2, 2, 0.95),
+            det(0.5, 0.5, 0.2, 2, 0.7),
+        ];
+        let kept = nms(dets, 0.45);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.95);
+    }
+
+    #[test]
+    fn postprocess_thresholds_first() {
+        let dets = vec![det(0.5, 0.5, 0.2, 0, 0.3), det(0.2, 0.2, 0.1, 0, 0.8)];
+        let kept = postprocess(dets, 0.5, 0.45);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.8);
+    }
+
+    #[test]
+    fn nms_is_idempotent() {
+        let dets = vec![
+            det(0.5, 0.5, 0.2, 0, 0.9),
+            det(0.52, 0.5, 0.2, 0, 0.8),
+            det(0.1, 0.1, 0.05, 1, 0.6),
+        ];
+        let once = nms(dets, 0.45);
+        let twice = nms(once.clone(), 0.45);
+        assert_eq!(once, twice);
+    }
+}

@@ -1,0 +1,119 @@
+//! Shared experiment plumbing: run one (fleet, scheduler, video, model)
+//! cell in both modes and evaluate mAP.
+
+use crate::coordinator::{run_offline, run_online, RunConfig, SchedulerKind, SourceMode};
+use crate::detector::quality::{QualityModelDetector, QualityProfile};
+use crate::detector::Detector;
+use crate::device::{DetectorModelId, Fleet};
+use crate::eval::evaluate_map;
+use crate::types::{Detection, GtBox, CLASSES};
+use crate::video::Clip;
+
+/// Measured numbers for one table cell.
+#[derive(Debug, Clone, Copy)]
+pub struct CellOutcome {
+    /// Saturated processing capacity σ_P (the paper's "Detection FPS").
+    pub fps: f64,
+    /// mAP of the paced online run (dropped frames included).
+    pub map: f64,
+    /// Drop rate of the paced run.
+    pub drop_rate: f64,
+}
+
+/// Per-replica quality-model detectors for a fleet on a given video.
+pub fn quality_detectors(fleet: &Fleet, video: &str, seed: u64) -> Vec<Box<dyn Detector>> {
+    fleet
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            Box::new(QualityModelDetector::new(
+                QualityProfile::calibrated(d.model, video),
+                seed.wrapping_add(7919 * (i as u64 + 1)),
+            )) as Box<dyn Detector>
+        })
+        .collect()
+}
+
+/// mAP of a set of per-frame detections against a clip's ground truth.
+pub fn map_against(clip: &Clip, dets: &[Vec<Detection>]) -> f64 {
+    let gt: Vec<&[GtBox]> = clip
+        .frames
+        .iter()
+        .map(|f| f.ground_truth.as_slice())
+        .collect();
+    evaluate_map(dets, &gt, CLASSES.len(), 0.5).map
+}
+
+/// Zero-frame-dropping offline reference (Figure 1a): σ = μ and the
+/// detector's intrinsic mAP.
+pub fn zero_drop_baseline(clip: &Clip, model: DetectorModelId, seed: u64) -> (f64, f64) {
+    let mut det = QualityModelDetector::new(
+        QualityProfile::calibrated(model, &clip.spec.name),
+        seed,
+    );
+    let dets = run_offline(clip, &mut det);
+    let mu = crate::device::DeviceKind::Ncs2.service_rate(model);
+    (mu, map_against(clip, &dets))
+}
+
+/// Saturated capacity σ_P of a fleet (Detection-FPS column).
+pub fn saturated_fps(clip: &Clip, fleet: &Fleet, scheduler: SchedulerKind, seed: u64) -> f64 {
+    let cfg = RunConfig::new(scheduler, SourceMode::Saturated, seed);
+    let run = run_online(
+        clip,
+        fleet,
+        quality_detectors(fleet, &clip.spec.name, seed),
+        &cfg,
+    );
+    run.metrics.processing_fps()
+}
+
+/// Online paced run: mAP over all frames (stale fills included) + drop rate.
+pub fn online_map(clip: &Clip, fleet: &Fleet, scheduler: SchedulerKind, seed: u64) -> (f64, f64) {
+    let cfg = RunConfig::new(scheduler, SourceMode::Paced, seed);
+    let run = run_online(
+        clip,
+        fleet,
+        quality_detectors(fleet, &clip.spec.name, seed),
+        &cfg,
+    );
+    let dets: Vec<Vec<Detection>> = run.records.iter().map(|r| r.detections.clone()).collect();
+    (map_against(clip, &dets), run.metrics.drop_rate())
+}
+
+/// Full cell: capacity + online quality.
+pub fn run_cell(clip: &Clip, fleet: &Fleet, scheduler: SchedulerKind, seed: u64) -> CellOutcome {
+    let fps = saturated_fps(clip, fleet, scheduler, seed);
+    let (map, drop_rate) = online_map(clip, fleet, scheduler, seed);
+    CellOutcome {
+        fps,
+        map,
+        drop_rate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::link::LinkProfile;
+    use crate::video::{generate, presets};
+
+    #[test]
+    fn cell_outcome_sane() {
+        let clip = generate(&presets::eth_sunnyday(1), None);
+        let fleet = Fleet::ncs2_sticks(4, DetectorModelId::Yolov3, LinkProfile::usb3());
+        let cell = run_cell(&clip, &fleet, SchedulerKind::Fcfs, 3);
+        assert!(cell.fps > 8.0 && cell.fps < 12.0, "fps {}", cell.fps);
+        assert!(cell.map > 0.5 && cell.map <= 1.0, "map {}", cell.map);
+        assert!(cell.drop_rate > 0.0 && cell.drop_rate < 0.6);
+    }
+
+    #[test]
+    fn zero_drop_matches_calibration() {
+        let clip = generate(&presets::eth_sunnyday(2), None);
+        let (mu, map) = zero_drop_baseline(&clip, DetectorModelId::Yolov3, 5);
+        assert_eq!(mu, 2.5);
+        assert!((map - 0.869).abs() < 0.08, "map {map}");
+    }
+}

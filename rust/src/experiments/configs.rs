@@ -1,0 +1,140 @@
+//! Tables I, II, III, VIII: configuration registries, rendered in the
+//! paper's layouts (these are the setup tables; the numbers are the
+//! calibrated constants the dynamic experiments consume).
+
+use crate::device::link::LinkProfile;
+use crate::device::{DetectorModelId, DeviceKind};
+use crate::util::table::Table;
+use crate::video::presets;
+
+/// Table I: the two test videos.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I: Two Test Videos (synthetic analogs, DESIGN.md §3)",
+        &["Video Name", "ADL-Rundle-6", "ETH-Sunnyday"],
+    );
+    let adl = presets::adl_rundle6(0);
+    let eth = presets::eth_sunnyday(0);
+    t.row(vec![
+        "Video FPS".into(),
+        format!("{}", adl.fps),
+        format!("{}", eth.fps),
+    ]);
+    t.row(vec![
+        "#Frames".into(),
+        format!("{}", adl.num_frames),
+        format!("{}", eth.num_frames),
+    ]);
+    t.row(vec![
+        "Resolution".into(),
+        format!("{}x{}", adl.width, adl.height),
+        format!("{}x{}", eth.width, eth.height),
+    ]);
+    t.row(vec![
+        "Camera".into(),
+        "static".into(),
+        "moving".into(),
+    ]);
+    t
+}
+
+/// Table II: the two object detection models (paper-scale profiles).
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table II: Two Object Detection Models",
+        &["Model", "Backbone", "Input Size", "Model Size", "Data Type"],
+    );
+    for m in [DetectorModelId::Ssd300, DetectorModelId::Yolov3] {
+        t.row(vec![
+            m.label().to_string(),
+            m.backbone().to_string(),
+            format!("{0}x{0}x3", m.input_size()),
+            format!("{}MB", m.model_size_mb()),
+            "FP16".into(),
+        ]);
+    }
+    t
+}
+
+/// Table II-bis: the TinyDet stand-ins actually served via PJRT, read
+/// from the artifact manifest when available.
+pub fn table2_tinydet(artifact_dir: &std::path::Path) -> Option<Table> {
+    let manifest = crate::runtime::load_manifest(artifact_dir).ok()?;
+    let mut t = Table::new(
+        "TinyDet variants (PJRT-served stand-ins)",
+        &["Model", "Input", "Grid", "Params", "MFLOPs/frame"],
+    );
+    for m in &manifest.models {
+        t.row(vec![
+            m.name.clone(),
+            format!("{0}x{0}x3", m.input_size),
+            format!("{0}x{0}", m.grid),
+            format!("{}", m.params),
+            format!("{:.1}", m.flops_per_frame as f64 / 1e6),
+        ]);
+    }
+    Some(t)
+}
+
+/// Table III: edge server configurations.
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table III: Edge Server Configuration",
+        &["Edge Server", "Fast", "Slow"],
+    );
+    t.row(vec!["CPU".into(), "Intel i7-10700K".into(), "AMD A6-9225".into()]);
+    t.row(vec!["CPU Frequency".into(), "3.8GHz".into(), "2.6GHz".into()]);
+    t.row(vec!["CPU #Cores".into(), "8".into(), "2".into()]);
+    t.row(vec!["Main Memory Size".into(), "24GB".into(), "12GB".into()]);
+    t.row(vec![
+        "TDP (model)".into(),
+        format!("{}W", DeviceKind::FastCpu.tdp_watts()),
+        format!("{}W", DeviceKind::SlowCpu.tdp_watts()),
+    ]);
+    t
+}
+
+/// Table VIII: connection-interface bandwidths.
+pub fn table8() -> Table {
+    let mut t = Table::new(
+        "Table VIII: Comparison of Bandwidth for Different Interfaces",
+        &["Port", "Nominal Bandwidth", "Modelled Effective"],
+    );
+    for link in LinkProfile::registry() {
+        t.row(vec![
+            link.name.to_string(),
+            format!("{:.1} Gbps", link.nominal_bps / 1e9),
+            format!("{:.2} Gbps", link.effective_bps() / 1e9),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_paper_values() {
+        let r = table1().render();
+        assert!(r.contains("30") && r.contains("14"));
+        assert!(r.contains("525") && r.contains("354"));
+        assert!(r.contains("1920x1080") && r.contains("640x480"));
+    }
+
+    #[test]
+    fn table2_has_both_models() {
+        let r = table2().render();
+        assert!(r.contains("SSD300") && r.contains("YOLOv3"));
+        assert!(r.contains("VGG-16") && r.contains("DarkNet-53"));
+        assert!(r.contains("51MB") && r.contains("119MB"));
+    }
+
+    #[test]
+    fn table8_has_all_links() {
+        let r = table8().render();
+        for name in ["USB 2.0", "USB 3.0", "Ethernet", "WiFi 6", "4G", "5G"] {
+            assert!(r.contains(name), "{name}");
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Table VI: power efficiency of the detection hardware.
+
+use crate::device::energy::fps_per_watt;
+use crate::device::{DetectorModelId, DeviceKind};
+use crate::util::table::{f, Table};
+
+/// Structured Table VI row.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyRow {
+    pub kind: DeviceKind,
+    pub tdp: f64,
+    pub fps: f64,
+    pub fps_per_watt: f64,
+}
+
+/// The paper's four execution environments running YOLOv3 (zero-drop μ).
+pub fn rows() -> Vec<EnergyRow> {
+    [
+        DeviceKind::Ncs2,
+        DeviceKind::SlowCpu,
+        DeviceKind::FastCpu,
+        DeviceKind::TitanX,
+    ]
+    .into_iter()
+    .map(|kind| {
+        let fps = kind.service_rate(DetectorModelId::Yolov3);
+        EnergyRow {
+            kind,
+            tdp: kind.tdp_watts(),
+            fps,
+            fps_per_watt: fps_per_watt(fps, kind),
+        }
+    })
+    .collect()
+}
+
+/// Table VI in the paper's layout.
+pub fn table6() -> (Table, Vec<EnergyRow>) {
+    let rs = rows();
+    let mut t = Table::new(
+        "Table VI: Power Efficiency of Different Hardware (YOLOv3, zero-drop)",
+        &["Device", "TDP (W)", "Detection FPS", "FPS / Watt"],
+    );
+    for r in &rs {
+        t.row(vec![
+            r.kind.label().to_string(),
+            f(r.tdp, 0),
+            f(r.fps, 1),
+            f(r.fps_per_watt, 2),
+        ]);
+    }
+    (t, rs)
+}
+
+/// Extension: joules per processed frame for an n-stick fleet vs a GPU —
+/// the energy argument §IV-B makes qualitatively, quantified.
+pub fn joules_per_frame_comparison() -> (Table, Vec<(String, f64)>) {
+    let mut t = Table::new(
+        "Energy per processed frame (busy-power model)",
+        &["Configuration", "J / frame"],
+    );
+    let mut out = Vec::new();
+    // n sticks: each frame costs (1/2.5 s) × 2 W on one stick.
+    for n in [1usize, 4, 7] {
+        let j = (1.0 / 2.5) * DeviceKind::Ncs2.tdp_watts();
+        let name = format!("{n}× NCS2 (YOLOv3)");
+        t.row(vec![name.clone(), f(j, 2)]);
+        out.push((name, j));
+    }
+    let gpu = (1.0 / 35.0) * DeviceKind::TitanX.tdp_watts();
+    t.row(vec!["GTX TITAN X (YOLOv3)".to_string(), f(gpu, 2)]);
+    out.push(("GTX TITAN X (YOLOv3)".to_string(), gpu));
+    let fast = (1.0 / 13.5) * DeviceKind::FastCpu.tdp_watts();
+    t.row(vec!["Fast CPU (YOLOv3)".to_string(), f(fast, 2)]);
+    out.push(("Fast CPU (YOLOv3)".to_string(), fast));
+    (t, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_matches_paper() {
+        let rs = rows();
+        let ncs2 = &rs[0];
+        assert_eq!(ncs2.tdp, 2.0);
+        assert!((ncs2.fps_per_watt - 1.25).abs() < 1e-9);
+        // Ordering: NCS2 > GPU > fast CPU > slow CPU.
+        assert!(rs[0].fps_per_watt > rs[3].fps_per_watt);
+        assert!(rs[3].fps_per_watt > rs[2].fps_per_watt);
+        assert!(rs[2].fps_per_watt > rs[1].fps_per_watt);
+    }
+
+    #[test]
+    fn stick_cheaper_per_frame_than_gpu_and_cpu() {
+        let (_, rows) = joules_per_frame_comparison();
+        let stick = rows[0].1;
+        let gpu = rows.iter().find(|(n, _)| n.contains("TITAN")).unwrap().1;
+        let cpu = rows.iter().find(|(n, _)| n.contains("Fast CPU")).unwrap().1;
+        assert!(stick < gpu && stick < cpu);
+    }
+}

@@ -1,0 +1,113 @@
+//! Table X: impact of the implementation language — the experiment that
+//! motivates this Rust coordinator.
+//!
+//! The paper's Python prototype is bounded by the GIL: OpenVINO calls
+//! release it, but frame pre/post-processing and scheduling serialise, so
+//! throughput plateaus near 9.8 FPS regardless of stick count. The C++
+//! (here: Rust) implementation pays a tiny per-frame synchronisation cost
+//! but scales linearly. We model the GIL as a serial per-frame resource
+//! (`gil_serial_time`) in the same DES.
+//!
+//! Note the Table X prototype ran faster per stick (4.5–4.8 FPS) than the
+//! Table V configuration; we use its own calibrated rates.
+
+use crate::coordinator::{run_online, RunConfig, SchedulerKind, SourceMode};
+use crate::device::link::LinkProfile;
+use crate::device::{DetectorModelId, DeviceInstance, DeviceKind, Fleet};
+use crate::experiments::common::quality_detectors;
+use crate::util::table::{f, Table};
+use crate::video::{generate, presets};
+
+/// GIL-held serial work per frame in the Python prototype (sets the
+/// observed ~9.8 FPS plateau).
+pub const GIL_SERIAL_TIME: f64 = 1.0 / 9.85;
+/// Device-only (GIL-released OpenVINO call) rate backed out of the
+/// prototype's 4.8 FPS single-stick figure:
+/// 1/4.8 = GIL_SERIAL_TIME + 1/rate  ⇒  rate ≈ 9.36.
+pub const STICK_RATE_PY: f64 = 9.36;
+/// Lock-free-path synchronisation cost per frame in the compiled
+/// implementation (explains C++ trailing Python slightly at n = 1..2).
+pub const CPP_SYNC_TIME: f64 = 0.004;
+/// Device-only rate for the compiled prototype: 1/4.5 − 0.004 ⇒ ≈ 4.58.
+pub const STICK_RATE_CPP: f64 = 4.58;
+
+fn fleet(n: usize, rate: f64) -> Fleet {
+    Fleet {
+        devices: (0..n)
+            .map(|i| {
+                let mut d =
+                    DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, rate);
+                d.jitter_cv = 0.02;
+                d
+            })
+            .collect(),
+        hub: Some(LinkProfile::usb3()),
+    }
+}
+
+/// Measure throughput for `n` sticks under one language model.
+pub fn throughput(n: usize, python: bool, seed: u64) -> f64 {
+    let clip = generate(&presets::adl_rundle6(seed), None);
+    let fl = fleet(n, if python { STICK_RATE_PY } else { STICK_RATE_CPP });
+    let mut cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Saturated, seed);
+    cfg.gil_serial_time = Some(if python { GIL_SERIAL_TIME } else { CPP_SYNC_TIME });
+    let run = run_online(
+        &clip,
+        &fl,
+        quality_detectors(&fl, "adl_rundle6", seed),
+        &cfg,
+    );
+    run.metrics.processing_fps()
+}
+
+/// Table X: Python vs C++ scaling, n = 1..=7.
+pub fn table10(seed: u64) -> (Table, Vec<(usize, f64, f64)>) {
+    let mut header = vec!["#NCS".to_string()];
+    for n in 1..=7 {
+        header.push(format!("{n}"));
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table X: Impact of Programming Languages on parallel detection FPS (YOLOv3, ADL-Rundle-6)",
+        &hdr,
+    );
+    let mut py_row = vec!["Python".to_string()];
+    let mut cpp_row = vec!["C++ (rust)".to_string()];
+    let mut results = Vec::new();
+    for n in 1..=7usize {
+        let py = throughput(n, true, seed + n as u64);
+        let cpp = throughput(n, false, seed + 50 + n as u64);
+        py_row.push(f(py, 1));
+        cpp_row.push(f(cpp, 1));
+        results.push((n, py, cpp));
+    }
+    t.row(py_row);
+    t.row(cpp_row);
+    (t, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn python_plateaus_cpp_scales() {
+        let py3 = throughput(3, true, 1);
+        let py7 = throughput(7, true, 2);
+        let cpp7 = throughput(7, false, 3);
+        // Python stuck near 9.8 from n=3 on.
+        assert!((py3 - 9.8).abs() < 0.7, "py n=3 {py3}");
+        assert!((py7 - 9.8).abs() < 0.7, "py n=7 {py7}");
+        // C++ keeps scaling (paper: 32.4 at n=7).
+        assert!(cpp7 > 28.0, "cpp n=7 {cpp7}");
+    }
+
+    #[test]
+    fn python_slightly_ahead_at_n1() {
+        // Paper: 4.8 vs 4.5 at one stick (C++ sync overhead).
+        let py1 = throughput(1, true, 4);
+        let cpp1 = throughput(1, false, 5);
+        assert!((py1 - 4.8).abs() < 0.4, "py1 {py1}");
+        assert!((cpp1 - 4.5).abs() < 0.4, "cpp1 {cpp1}");
+    }
+}

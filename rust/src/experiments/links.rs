@@ -1,0 +1,113 @@
+//! Table IX (USB 2.0 vs 3.0 impact) and an extension sweep over the
+//! Table VIII link registry for multi-edge-node deployment planning.
+
+use crate::coordinator::SchedulerKind;
+use crate::device::link::LinkProfile;
+use crate::device::{DetectorModelId, Fleet};
+use crate::experiments::common::saturated_fps;
+use crate::util::table::{f, Table};
+use crate::video::{generate, presets};
+
+/// Structured Table IX results: per model × link, σ_P for n = 1..=max_n.
+#[derive(Debug, Clone)]
+pub struct UsbSweep {
+    pub model: DetectorModelId,
+    pub link: LinkProfile,
+    pub by_n: Vec<(usize, f64)>,
+}
+
+pub fn sweep(model: DetectorModelId, link: LinkProfile, max_n: usize, seed: u64) -> UsbSweep {
+    let clip = generate(&presets::adl_rundle6(seed), None);
+    let mut by_n = Vec::with_capacity(max_n);
+    for n in 1..=max_n {
+        let fleet = Fleet::ncs2_sticks(n, model, link.clone());
+        let fps = saturated_fps(&clip, &fleet, SchedulerKind::Fcfs, seed + n as u64);
+        by_n.push((n, fps));
+    }
+    UsbSweep { model, link, by_n }
+}
+
+/// Table IX: USB 2.0 vs USB 3.0 for both models on ADL-Rundle-6.
+pub fn table9(seed: u64) -> (Table, Vec<UsbSweep>) {
+    let mut header = vec!["Model".to_string(), "Port".to_string()];
+    for n in 1..=7 {
+        header.push(format!("{n}"));
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table IX: Impact of Connection Interface (ADL-Rundle-6) — Detection FPS vs #NCS2",
+        &hdr,
+    );
+    let mut sweeps = Vec::new();
+    for model in [DetectorModelId::Ssd300, DetectorModelId::Yolov3] {
+        for link in [LinkProfile::usb2(), LinkProfile::usb3()] {
+            let s = sweep(model, link.clone(), 7, seed);
+            let mut row = vec![model.label().to_string(), link.name.to_string()];
+            for (_, fps) in &s.by_n {
+                row.push(f(*fps, 1));
+            }
+            t.row(row);
+            sweeps.push(s);
+        }
+    }
+    (t, sweeps)
+}
+
+/// Extension: σ_P for 7 sticks across the whole Table VIII link registry
+/// (what §IV-D's 5G/10GbE discussion projects for multi-node fleets).
+pub fn link_projection(seed: u64) -> (Table, Vec<(String, f64)>) {
+    let clip = generate(&presets::adl_rundle6(seed), None);
+    let mut t = Table::new(
+        "Link projection: YOLOv3, 7 devices, shared link (extends Table VIII)",
+        &["Link", "Nominal", "Effective", "σ_P (FPS)"],
+    );
+    let mut out = Vec::new();
+    for link in LinkProfile::registry() {
+        let fleet = Fleet::ncs2_sticks(7, DetectorModelId::Yolov3, link.clone());
+        let fps = saturated_fps(&clip, &fleet, SchedulerKind::Fcfs, seed + 3);
+        t.row(vec![
+            link.name.to_string(),
+            format!("{:.1} Gbps", link.nominal_bps / 1e9),
+            format!("{:.2} Gbps", link.effective_bps() / 1e9),
+            f(fps, 1),
+        ]);
+        out.push((link.name.to_string(), fps));
+    }
+    (t, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usb3_beats_usb2_everywhere() {
+        let u2 = sweep(DetectorModelId::Yolov3, LinkProfile::usb2(), 3, 1);
+        let u3 = sweep(DetectorModelId::Yolov3, LinkProfile::usb3(), 3, 1);
+        for n in 0..3 {
+            assert!(u3.by_n[n].1 > u2.by_n[n].1, "n={}", n + 1);
+        }
+    }
+
+    #[test]
+    fn yolo_usb2_plateaus_ssd_does_not() {
+        // Table IX's signature: the larger YOLO payload saturates the
+        // USB 2.0 bus near n=5 while SSD keeps scaling to n=7.
+        let yolo = sweep(DetectorModelId::Yolov3, LinkProfile::usb2(), 7, 2);
+        let ssd = sweep(DetectorModelId::Ssd300, LinkProfile::usb2(), 7, 2);
+        let yolo_gain_57 = yolo.by_n[6].1 - yolo.by_n[4].1;
+        let ssd_gain_57 = ssd.by_n[6].1 - ssd.by_n[4].1;
+        assert!(yolo_gain_57 < 0.5, "yolo gain n5->n7 {yolo_gain_57}");
+        assert!(ssd_gain_57 > 2.0, "ssd gain n5->n7 {ssd_gain_57}");
+        // Plateau level near the paper's ~8 FPS.
+        assert!((yolo.by_n[6].1 - 8.0).abs() < 0.6, "{}", yolo.by_n[6].1);
+    }
+
+    #[test]
+    fn single_stick_rates_match_table9() {
+        let yolo2 = sweep(DetectorModelId::Yolov3, LinkProfile::usb2(), 1, 3);
+        let ssd2 = sweep(DetectorModelId::Ssd300, LinkProfile::usb2(), 1, 3);
+        assert!((yolo2.by_n[0].1 - 1.9).abs() < 0.15, "{}", yolo2.by_n[0].1);
+        assert!((ssd2.by_n[0].1 - 2.0).abs() < 0.15, "{}", ssd2.by_n[0].1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment drivers: one function per paper table/figure.
+//!
+//! Shared by the bench binaries (`benches/table*.rs`) and the `eva`
+//! CLI (`eva table --id ...`). Each driver returns both a rendered
+//! [`crate::util::table::Table`] and the structured numbers, so benches
+//! can assert the paper's *shape* (who wins, scaling slope, crossover
+//! points) against the measured values.
+
+pub mod common;
+pub mod configs;
+pub mod parallel;
+pub mod sched;
+pub mod links;
+pub mod lang;
+pub mod energy;
+pub mod dropping;
+
+pub use common::{online_map, saturated_fps, zero_drop_baseline, CellOutcome};

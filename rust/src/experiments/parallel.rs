@@ -1,0 +1,158 @@
+//! Tables IV & V + Figure 5: parallel detection with n NCS2 sticks.
+
+use crate::coordinator::SchedulerKind;
+use crate::device::link::LinkProfile;
+use crate::device::{DetectorModelId, Fleet};
+use crate::experiments::common::{online_map, saturated_fps, zero_drop_baseline};
+use crate::util::table::{f, pct, Table};
+use crate::video::{generate, presets, ClipSpec};
+
+/// Structured results for one model row-pair of Table IV/V.
+#[derive(Debug, Clone)]
+pub struct ParallelSweep {
+    pub model: DetectorModelId,
+    /// Zero-drop baseline (μ, mAP).
+    pub baseline: (f64, f64),
+    /// Online single-device mAP (with dropping).
+    pub single_map: f64,
+    /// (n, σ_P, mAP) for n = 1..=max_n.
+    pub by_n: Vec<(usize, f64, f64)>,
+}
+
+/// Run the Table IV/V sweep for one model on one video preset.
+pub fn sweep(spec: &ClipSpec, model: DetectorModelId, max_n: usize, seed: u64) -> ParallelSweep {
+    let clip = generate(spec, None);
+    let baseline = zero_drop_baseline(&clip, model, seed ^ 0xBA5E);
+    let mut by_n = Vec::with_capacity(max_n);
+    let mut single_map = 0.0;
+    for n in 1..=max_n {
+        let fleet = Fleet::ncs2_sticks(n, model, LinkProfile::usb3());
+        let fps = saturated_fps(&clip, &fleet, SchedulerKind::Fcfs, seed + n as u64);
+        let (map, _) = online_map(&clip, &fleet, SchedulerKind::Fcfs, seed + 100 + n as u64);
+        if n == 1 {
+            single_map = map;
+        }
+        by_n.push((n, fps, map));
+    }
+    ParallelSweep {
+        model,
+        baseline,
+        single_map,
+        by_n,
+    }
+}
+
+/// Render the sweeps in the paper's Table IV/V layout.
+pub fn render(title: &str, sweeps: &[ParallelSweep]) -> Table {
+    let max_n = sweeps.iter().map(|s| s.by_n.len()).max().unwrap_or(0);
+    let mut header: Vec<String> = vec!["Model".into(), "Metric".into(), "ZeroDrop".into(), "Single".into()];
+    for n in 2..=max_n {
+        header.push(format!("n={n}"));
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hdr);
+    for s in sweeps {
+        let mut fps_row = vec![
+            s.model.label().to_string(),
+            "Detection FPS".to_string(),
+            f(s.baseline.0, 1),
+            f(s.by_n[0].1, 1),
+        ];
+        let mut map_row = vec![
+            s.model.label().to_string(),
+            "mAP (%)".to_string(),
+            pct(s.baseline.1),
+            pct(s.single_map),
+        ];
+        for (_, fps, map) in s.by_n.iter().skip(1) {
+            fps_row.push(f(*fps, 1));
+            map_row.push(pct(*map));
+        }
+        t.row(fps_row);
+        t.row(map_row);
+    }
+    t
+}
+
+/// Table IV: ETH-Sunnyday.
+pub fn table4(seed: u64) -> (Table, Vec<ParallelSweep>) {
+    let spec = presets::eth_sunnyday(seed);
+    let sweeps = vec![
+        sweep(&spec, DetectorModelId::Ssd300, 7, seed + 1),
+        sweep(&spec, DetectorModelId::Yolov3, 7, seed + 2),
+    ];
+    (
+        render(
+            "Table IV: Parallel Detection using Multiple NCS2 Sticks (ETH-Sunnyday)",
+            &sweeps,
+        ),
+        sweeps,
+    )
+}
+
+/// Table V: ADL-Rundle-6.
+pub fn table5(seed: u64) -> (Table, Vec<ParallelSweep>) {
+    let spec = presets::adl_rundle6(seed);
+    let sweeps = vec![
+        sweep(&spec, DetectorModelId::Ssd300, 7, seed + 1),
+        sweep(&spec, DetectorModelId::Yolov3, 7, seed + 2),
+    ];
+    (
+        render(
+            "Table V: Parallel Detection using Multiple NCS2 Sticks (ADL-Rundle-6)",
+            &sweeps,
+        ),
+        sweeps,
+    )
+}
+
+/// Figure 5: FPS + mAP trend vs n on ADL-Rundle-6, as CSV series.
+pub fn fig5(seed: u64) -> (Table, Vec<ParallelSweep>) {
+    let (_, sweeps) = table5(seed);
+    let mut t = Table::new(
+        "Figure 5: Detection FPS and mAP vs #NCS2 (ADL-Rundle-6)",
+        &["n", "SSD FPS", "SSD mAP%", "YOLO FPS", "YOLO mAP%"],
+    );
+    let (ssd, yolo) = (&sweeps[0], &sweeps[1]);
+    for i in 0..ssd.by_n.len() {
+        t.row(vec![
+            format!("{}", i + 1),
+            f(ssd.by_n[i].1, 1),
+            pct(ssd.by_n[i].2),
+            f(yolo.by_n[i].1, 1),
+            pct(yolo.by_n[i].2),
+        ]);
+    }
+    (t, sweeps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_shape_holds() {
+        // Keep the sweep small in unit tests (n ≤ 4): full grids run in
+        // the bench binaries.
+        let spec = presets::eth_sunnyday(3);
+        let s = sweep(&spec, DetectorModelId::Yolov3, 4, 7);
+        // (1) near-linear FPS scaling.
+        for (n, fps, _) in &s.by_n {
+            let ideal = 2.5 * *n as f64;
+            assert!((fps - ideal).abs() / ideal < 0.1, "n={n} fps={fps}");
+        }
+        // (2) single-device online mAP well below the zero-drop baseline.
+        assert!(s.single_map + 0.08 < s.baseline.1);
+        // (3) mAP recovers monotonically-ish with n.
+        assert!(s.by_n[3].2 > s.by_n[0].2 + 0.05);
+    }
+
+    #[test]
+    fn render_layout() {
+        let spec = presets::eth_sunnyday(4);
+        let s = sweep(&spec, DetectorModelId::Ssd300, 2, 9);
+        let t = render("T", &[s]);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("SSD300"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Table VII: impact of scheduling algorithms (RR vs FCFS) on
+//! homogeneous and heterogeneous fleets — plus an ablation over all four
+//! schedulers including the paper's proposed performance-aware
+//! proportional scheduler.
+
+use crate::coordinator::SchedulerKind;
+use crate::device::link::LinkProfile;
+use crate::device::{DetectorModelId, DeviceKind, Fleet};
+use crate::experiments::common::saturated_fps;
+use crate::util::table::{f, Table};
+use crate::video::{generate, presets};
+
+/// The three fleet families of Table VII.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetFamily {
+    Ncs2Only,
+    FastCpuPlusNcs2,
+    SlowCpuPlusNcs2,
+}
+
+impl FleetFamily {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetFamily::Ncs2Only => "NCS2 Only",
+            FleetFamily::FastCpuPlusNcs2 => "Fast CPU + NCS2",
+            FleetFamily::SlowCpuPlusNcs2 => "Slow CPU + NCS2",
+        }
+    }
+
+    /// Build the fleet with `n` sticks (n = 0 -> CPU only; `None` for
+    /// NCS2-only with n = 0, which is an empty fleet).
+    pub fn fleet(&self, n: usize, model: DetectorModelId) -> Option<Fleet> {
+        let hub = LinkProfile::usb3();
+        match self {
+            FleetFamily::Ncs2Only => {
+                if n == 0 {
+                    None
+                } else {
+                    Some(Fleet::ncs2_sticks(n, model, hub))
+                }
+            }
+            FleetFamily::FastCpuPlusNcs2 => Some(Fleet::cpu_plus_sticks(
+                DeviceKind::FastCpu,
+                n,
+                model,
+                hub,
+            )),
+            FleetFamily::SlowCpuPlusNcs2 => Some(Fleet::cpu_plus_sticks(
+                DeviceKind::SlowCpu,
+                n,
+                model,
+                hub,
+            )),
+        }
+    }
+}
+
+/// Structured Table VII results: fps[scheduler][family][n] (n = 0..=max_n).
+#[derive(Debug, Clone)]
+pub struct SchedSweep {
+    pub scheduler: SchedulerKind,
+    pub family: FleetFamily,
+    /// (n_sticks, σ_P); `None` capacity when the fleet is empty.
+    pub by_n: Vec<(usize, Option<f64>)>,
+}
+
+/// Run one (scheduler, family) row of Table VII.
+pub fn sweep_row(
+    scheduler: SchedulerKind,
+    family: FleetFamily,
+    max_n: usize,
+    seed: u64,
+) -> SchedSweep {
+    let clip = generate(&presets::eth_sunnyday(seed), None);
+    let model = DetectorModelId::Yolov3;
+    let mut by_n = Vec::with_capacity(max_n + 1);
+    for n in 0..=max_n {
+        let fps = family
+            .fleet(n, model)
+            .map(|fleet| saturated_fps(&clip, &fleet, scheduler, seed + n as u64));
+        by_n.push((n, fps));
+    }
+    SchedSweep {
+        scheduler,
+        family,
+        by_n,
+    }
+}
+
+/// Full Table VII (RR + FCFS × three families).
+pub fn table7(seed: u64) -> (Table, Vec<SchedSweep>) {
+    let mut header = vec!["Scheduler".to_string(), "Fleet".to_string()];
+    for n in 0..=7 {
+        header.push(format!("{n}"));
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table VII: RR and FCFS Schedulers (ETH-Sunnyday, YOLOv3) — Detection FPS vs #NCS2",
+        &hdr,
+    );
+    let mut sweeps = Vec::new();
+    for (si, scheduler) in [SchedulerKind::RoundRobin, SchedulerKind::Fcfs]
+        .into_iter()
+        .enumerate()
+    {
+        for (fi, family) in [
+            FleetFamily::Ncs2Only,
+            FleetFamily::FastCpuPlusNcs2,
+            FleetFamily::SlowCpuPlusNcs2,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let s = sweep_row(scheduler, family, 7, seed + (si * 10 + fi) as u64);
+            let mut row = vec![scheduler.label().to_string(), family.label().to_string()];
+            for (_, fps) in &s.by_n {
+                row.push(match fps {
+                    Some(v) => f(*v, 1),
+                    None => "-".to_string(),
+                });
+            }
+            t.row(row);
+            sweeps.push(s);
+        }
+    }
+    (t, sweeps)
+}
+
+/// Ablation (beyond the paper): all four schedulers on the heterogeneous
+/// fast-CPU fleet, showing WRR/proportional recovering most of FCFS's win.
+pub fn scheduler_ablation(seed: u64) -> (Table, Vec<(SchedulerKind, f64)>) {
+    let clip = generate(&presets::eth_sunnyday(seed), None);
+    let fleet = FleetFamily::FastCpuPlusNcs2
+        .fleet(7, DetectorModelId::Yolov3)
+        .unwrap();
+    let mut t = Table::new(
+        "Ablation: all schedulers (Fast CPU + 7 NCS2, YOLOv3, ETH-Sunnyday)",
+        &["Scheduler", "Detection FPS"],
+    );
+    let mut results = Vec::new();
+    for scheduler in [
+        SchedulerKind::RoundRobin,
+        SchedulerKind::WeightedRoundRobin,
+        SchedulerKind::Proportional,
+        SchedulerKind::Fcfs,
+    ] {
+        let fps = saturated_fps(&clip, &fleet, scheduler, seed + 5);
+        t.row(vec![scheduler.label().to_string(), f(fps, 1)]);
+        results.push((scheduler, fps));
+    }
+    (t, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_beats_rr_on_fast_cpu_fleet() {
+        let rr = sweep_row(SchedulerKind::RoundRobin, FleetFamily::FastCpuPlusNcs2, 3, 1);
+        let fcfs = sweep_row(SchedulerKind::Fcfs, FleetFamily::FastCpuPlusNcs2, 3, 1);
+        for n in 1..=3 {
+            let rr_fps = rr.by_n[n].1.unwrap();
+            let fcfs_fps = fcfs.by_n[n].1.unwrap();
+            assert!(
+                fcfs_fps > rr_fps + 2.0,
+                "n={n}: fcfs {fcfs_fps} rr {rr_fps}"
+            );
+        }
+    }
+
+    #[test]
+    fn rr_hurt_by_slow_straggler() {
+        // Paper: slow CPU + sticks under RR ≈ 0.9..3.4 (collapse);
+        // FCFS ≈ sticks + 0.4.
+        let rr = sweep_row(SchedulerKind::RoundRobin, FleetFamily::SlowCpuPlusNcs2, 2, 2);
+        let fcfs = sweep_row(SchedulerKind::Fcfs, FleetFamily::SlowCpuPlusNcs2, 2, 2);
+        let rr1 = rr.by_n[1].1.unwrap();
+        let fcfs1 = fcfs.by_n[1].1.unwrap();
+        assert!((rr1 - 0.8).abs() < 0.3, "rr n=1 {rr1} (paper 0.9)");
+        assert!((fcfs1 - 2.9).abs() < 0.4, "fcfs n=1 {fcfs1} (paper 3.0)");
+    }
+
+    #[test]
+    fn cpu_only_column() {
+        let s = sweep_row(SchedulerKind::Fcfs, FleetFamily::FastCpuPlusNcs2, 0, 3);
+        let cpu_only = s.by_n[0].1.unwrap();
+        assert!((cpu_only - 13.5).abs() < 0.5, "{cpu_only}");
+        let none = sweep_row(SchedulerKind::Fcfs, FleetFamily::Ncs2Only, 0, 3);
+        assert!(none.by_n[0].1.is_none());
+    }
+
+    #[test]
+    fn ablation_orders_schedulers() {
+        let (_, results) = scheduler_ablation(4);
+        let get = |k: SchedulerKind| results.iter().find(|(s, _)| *s == k).unwrap().1;
+        // FCFS (work-conserving) ≥ WRR/prop (weighted rounds) > RR (barrier).
+        assert!(get(SchedulerKind::Fcfs) >= get(SchedulerKind::WeightedRoundRobin) - 1.0);
+        assert!(get(SchedulerKind::WeightedRoundRobin) > get(SchedulerKind::RoundRobin) + 2.0);
+        assert!(get(SchedulerKind::Proportional) > get(SchedulerKind::RoundRobin) + 2.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! # EVA-RS — parallel object detection for edge video analytics
+//!
+//! Rust + JAX + Pallas reproduction of *"Parallel Detection for Efficient
+//! Video Analytics at the Edge"* (Wu, Liu, Kompella; 2021).
+//!
+//! The crate is organised in layers (see `DESIGN.md`):
+//!
+//! * [`util`] — zero-dependency substrates: PRNG, JSON, CLI parsing,
+//!   table rendering, property-testing and micro-benchmark harnesses.
+//! * [`types`] — frames, boxes, detections, time.
+//! * [`video`] — synthetic benchmark clip generator (MOT-15 analogs).
+//! * [`eval`] — IoU / NMS / VOC-style mAP evaluation.
+//! * [`detector`] — detector backends: calibrated quality model and the
+//!   PJRT-served TinyDet.
+//! * [`device`] — edge device / link / USB-hub / energy models.
+//! * [`sim`] — discrete-event engine (virtual time).
+//! * [`coordinator`] — the paper's contribution: parallel detection
+//!   schedulers, sequence synchronizer, n-selection, drop policy, metrics.
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`server`] — real-time serving pipeline (threads; python-free).
+//! * [`experiments`] — table/figure reproduction drivers shared by the
+//!   bench binaries and the CLI.
+
+pub mod util;
+pub mod types;
+pub mod video;
+pub mod eval;
+pub mod detector;
+pub mod device;
+pub mod sim;
+pub mod coordinator;
+pub mod runtime;
+pub mod server;
+pub mod experiments;

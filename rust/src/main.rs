@@ -1,0 +1,216 @@
+//! `eva` — the EVA-RS command-line launcher.
+//!
+//! Subcommands:
+//!   serve      run the real-time PJRT serving pipeline on a synthetic clip
+//!   offline    zero-drop offline detection (Figure 1a reference)
+//!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
+//!   nselect    recommend the parallel-detection parameter n (§III-B)
+//!   visualize  dump Figure 2/3-style PPM frames with box overlays
+//!   inspect    print video/model/device registries
+//!
+//! Python never runs here: `make artifacts` must have produced
+//! `artifacts/*.hlo.txt` + `manifest.json` for the PJRT paths.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use eva::coordinator::nselect;
+use eva::detector::pjrt::PjrtDetectorFactory;
+use eva::detector::Detector;
+use eva::experiments;
+use eva::runtime::{load_manifest, ModelSpec};
+use eva::server::{serve, ServeConfig};
+use eva::util::cli::{usage, Args, Spec};
+use eva::video::{generate, presets, raster};
+
+fn specs() -> Vec<Spec> {
+    vec![
+        Spec { name: "model", takes_value: true, help: "TinyDet variant (essd|eyolo)", default: Some("essd") },
+        Spec { name: "workers", takes_value: true, help: "parallel detector replicas", default: Some("2") },
+        Spec { name: "frames", takes_value: true, help: "clip length in frames", default: Some("60") },
+        Spec { name: "fps", takes_value: true, help: "input stream rate λ", default: Some("10") },
+        Spec { name: "seed", takes_value: true, help: "experiment seed", default: Some("7") },
+        Spec { name: "id", takes_value: true, help: "table id for `table` (1..10|fig5|fig23|ablation|links|energy-frame)", default: None },
+        Spec { name: "artifacts", takes_value: true, help: "artifact directory", default: Some("artifacts") },
+        Spec { name: "lambda", takes_value: true, help: "input rate for nselect", default: Some("14") },
+        Spec { name: "mu", takes_value: true, help: "per-model rate for nselect", default: Some("2.5") },
+        Spec { name: "out", takes_value: true, help: "output directory for visualize", default: Some("/tmp/eva_frames") },
+        Spec { name: "csv", takes_value: false, help: "emit CSV instead of framed table", default: None },
+        Spec { name: "saturated", takes_value: false, help: "serve: feed frames as fast as possible", default: None },
+    ]
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print!("{}", usage("eva", "parallel detection for edge video analytics", &specs()));
+        println!("\nsubcommands: serve | offline | table | nselect | visualize | inspect");
+        return;
+    }
+    let cmd = raw[0].clone();
+    let args = match Args::parse(&raw[1..], &specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "serve" => cmd_serve(args, false),
+        "offline" => cmd_serve(args, true),
+        "table" => cmd_table(args),
+        "nselect" => cmd_nselect(args),
+        "visualize" => cmd_visualize(args),
+        "inspect" => cmd_inspect(args),
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}
+
+fn pjrt_factory(args: &Args) -> Result<PjrtDetectorFactory> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let manifest = load_manifest(&dir)?;
+    let model = args.str_or("model", "essd");
+    let meta = manifest
+        .get(&model)
+        .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?
+        .clone();
+    Ok(PjrtDetectorFactory::new(ModelSpec::new(meta)))
+}
+
+fn cmd_serve(args: &Args, offline: bool) -> Result<()> {
+    let factory = pjrt_factory(args).map_err(|e| anyhow!("{e} (run `make artifacts`)"))?;
+    let size = factory.spec.meta.input_size;
+    let frames = args.u64_or("frames", 60).map_err(|e| anyhow!(e))? as u32;
+    let fps = args.f64_or("fps", 10.0).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    let workers = if offline {
+        1
+    } else {
+        args.usize_or("workers", 2).map_err(|e| anyhow!(e))?
+    };
+
+    println!(
+        "[eva] generating clip: {frames} frames @ {fps} FPS, {size}x{size}, seed {seed}"
+    );
+    let clip = generate(&presets::tiny_clip(size, frames, fps, seed), Some(size));
+
+    let cfg = ServeConfig {
+        workers,
+        window: None,
+        paced: !offline && !args.flag("saturated"),
+    };
+    println!(
+        "[eva] mode: {} | workers: {workers} | model: {}",
+        if cfg.paced { "paced (online)" } else { "saturated" },
+        factory.spec.meta.name
+    );
+    let report = serve(&clip, &cfg, |w| {
+        let det = factory.build()?;
+        println!("[worker {w}] detector ready: {}", det.label());
+        Ok(Box::new(det) as Box<dyn Detector>)
+    })?;
+
+    let mut metrics = report.metrics;
+    println!("[eva] {}", metrics.summary());
+    let dets: Vec<Vec<eva::types::Detection>> =
+        report.records.iter().map(|r| r.detections.clone()).collect();
+    let map = experiments::common::map_against(&clip, &dets);
+    println!("[eva] mAP over all frames: {:.1}%", map * 100.0);
+    for (w, (frames, mean)) in report.worker_stats.iter().enumerate() {
+        println!(
+            "[eva] worker {w}: {frames} frames, mean inference {:.1} ms",
+            mean * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args
+        .get("id")
+        .ok_or_else(|| anyhow!("--id required (1..10|fig5|fig23|ablation|links|energy-frame)"))?;
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    let csv = args.flag("csv");
+    let table = match id {
+        "1" => experiments::configs::table1(),
+        "2" => experiments::configs::table2(),
+        "3" => experiments::configs::table3(),
+        "4" => experiments::parallel::table4(seed).0,
+        "5" => experiments::parallel::table5(seed).0,
+        "6" => experiments::energy::table6().0,
+        "7" => experiments::sched::table7(seed).0,
+        "8" => experiments::configs::table8(),
+        "9" => experiments::links::table9(seed).0,
+        "10" => experiments::lang::table10(seed).0,
+        "fig5" => experiments::parallel::fig5(seed).0,
+        "fig23" => experiments::dropping::fig2_3(seed).0,
+        "ablation" => experiments::sched::scheduler_ablation(seed).0,
+        "links" => experiments::links::link_projection(seed).0,
+        "energy-frame" => experiments::energy::joules_per_frame_comparison().0,
+        other => bail!("unknown table id {other:?}"),
+    };
+    if csv {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_nselect(args: &Args) -> Result<()> {
+    let lambda = args.f64_or("lambda", 14.0).map_err(|e| anyhow!(e))?;
+    let mu = args.f64_or("mu", 2.5).map_err(|e| anyhow!(e))?;
+    let range = nselect::recommended_range(lambda, mu);
+    println!("λ = {lambda} FPS, μ = {mu} FPS");
+    println!("conservative n = {}", nselect::conservative_n(lambda, mu));
+    println!(
+        "recommended band n ∈ [{}, {}] (σ_P = {:.1}..{:.1} FPS)",
+        range.lo,
+        range.hi,
+        nselect::ideal_sigma_p(range.lo, mu),
+        nselect::ideal_sigma_p(range.hi, mu),
+    );
+    Ok(())
+}
+
+fn cmd_visualize(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.str_or("out", "/tmp/eva_frames"));
+    std::fs::create_dir_all(&out)?;
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    let size = 256u32;
+    // Small ETH-like clip, rastered, frames 60..70 dumped with overlays.
+    let mut spec = presets::eth_sunnyday(seed);
+    spec.num_frames = 80;
+    let clip = generate(&spec, Some(size));
+    for fid in 60..70usize {
+        let frame = &clip.frames[fid];
+        let mut rgb = frame.pixels.clone();
+        for gt in &frame.ground_truth {
+            raster::draw_box_outline(&mut rgb, size as usize, &gt.bbox, [255, 255, 0]);
+        }
+        let path = out.join(format!("frame_{fid:04}.ppm"));
+        raster::write_ppm(&path, size, size, &rgb)?;
+    }
+    println!("wrote frames 60..70 to {}", out.display());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    print!("{}", experiments::configs::table1().render());
+    print!("{}", experiments::configs::table2().render());
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if let Some(t) = experiments::configs::table2_tinydet(&dir) {
+        print!("{}", t.render());
+    }
+    print!("{}", experiments::configs::table3().render());
+    print!("{}", experiments::configs::table8().render());
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! PJRT execution engine: compile-once, execute-many model runtimes.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ModelMeta;
+
+/// Cloneable, `Send` description from which a thread builds its own
+/// [`ModelRuntime`] (the PJRT client itself is thread-local).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub meta: ModelMeta,
+}
+
+impl ModelSpec {
+    pub fn new(meta: ModelMeta) -> ModelSpec {
+        ModelSpec { meta }
+    }
+
+    /// Build the runtime: create a CPU PJRT client, parse the HLO text,
+    /// compile. Expensive (~100 ms–1 s) — do it once per worker.
+    pub fn build(&self) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&self.meta.hlo_path)
+            .map_err(|e| {
+                anyhow::anyhow!("loading {}: {e:?}", self.meta.hlo_path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", self.meta.name))?;
+        Ok(ModelRuntime {
+            meta: self.meta.clone(),
+            exe,
+        })
+    }
+}
+
+/// A compiled TinyDet variant, ready to run frames.
+pub struct ModelRuntime {
+    meta: ModelMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRuntime {
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Run one frame.
+    ///
+    /// `input` is the flat NHWC f32 image, length `meta.input_len()`,
+    /// values in [0, 1]. Returns the flat decoded detection rows,
+    /// length `meta.output_len()` (`out_rows` × `out_cols`, row layout
+    /// `[objectness, cx, cy, w, h, class_probs...]`).
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.meta.input_len() {
+            bail!(
+                "input length {} != expected {} for {}",
+                input.len(),
+                self.meta.input_len(),
+                self.meta.name
+            );
+        }
+        let s = self.meta.input_size as i64;
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[1, s, s, 3])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1: {e:?}"))?;
+        let values: Vec<f32> = out
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        if values.len() != self.meta.output_len() {
+            bail!(
+                "output length {} != expected {} for {}",
+                values.len(),
+                self.meta.output_len(),
+                self.meta.name
+            );
+        }
+        Ok(values)
+    }
+
+    /// Convert an RGB8 frame raster (already at `input_size`²) to the
+    /// model's flat f32 input.
+    pub fn pixels_to_input(&self, rgb: &[u8]) -> Result<Vec<f32>> {
+        if rgb.len() != self.meta.input_len() {
+            bail!(
+                "pixel buffer length {} != expected {} for {}",
+                rgb.len(),
+                self.meta.input_len(),
+                self.meta.name
+            );
+        }
+        Ok(rgb.iter().map(|&b| b as f32 / 255.0).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::load_manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime_for(name: &str) -> Option<ModelRuntime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let manifest = load_manifest(&dir).unwrap();
+        let meta = manifest.get(name)?.clone();
+        Some(ModelSpec::new(meta).build().unwrap())
+    }
+
+    #[test]
+    fn essd_executes_and_decodes_in_range() {
+        let Some(rt) = runtime_for("essd") else { return };
+        let input = vec![0.5f32; rt.meta().input_len()];
+        let out = rt.infer(&input).unwrap();
+        assert_eq!(out.len(), rt.meta().output_len());
+        let cols = rt.meta().out_cols as usize;
+        for row in out.chunks(cols) {
+            // objectness + geometry within [0,1]; class probs sum to 1.
+            assert!((0.0..=1.0).contains(&row[0]), "obj {}", row[0]);
+            for v in &row[1..5] {
+                assert!((0.0..=1.0).contains(v), "geom {v}");
+            }
+            let psum: f32 = row[5..].iter().sum();
+            assert!((psum - 1.0).abs() < 1e-3, "probs sum {psum}");
+        }
+    }
+
+    #[test]
+    fn infer_rejects_wrong_length() {
+        let Some(rt) = runtime_for("essd") else { return };
+        assert!(rt.infer(&[0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn inference_is_deterministic() {
+        let Some(rt) = runtime_for("essd") else { return };
+        let mut rng = crate::util::Rng::new(3);
+        let input: Vec<f32> = (0..rt.meta().input_len()).map(|_| rng.f32()).collect();
+        let a = rt.infer(&input).unwrap();
+        let b = rt.infer(&input).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pixels_to_input_scales() {
+        let Some(rt) = runtime_for("essd") else { return };
+        let rgb = vec![255u8; rt.meta().input_len()];
+        let inp = rt.pixels_to_input(&rgb).unwrap();
+        assert!(inp.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,194 @@
+//! `artifacts/manifest.json` parsing (contract with `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata for one AOT-compiled TinyDet variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Absolute path of the HLO text artifact.
+    pub hlo_path: PathBuf,
+    pub input_size: u32,
+    pub grid: u32,
+    pub num_classes: u32,
+    pub out_rows: u32,
+    pub out_cols: u32,
+    pub params: u64,
+    pub flops_per_frame: u64,
+}
+
+impl ModelMeta {
+    /// Flat f32 input length: 1 × S × S × 3.
+    pub fn input_len(&self) -> usize {
+        (self.input_size as usize) * (self.input_size as usize) * 3
+    }
+
+    /// Flat f32 output length: out_rows × out_cols.
+    pub fn output_len(&self) -> usize {
+        (self.out_rows as usize) * (self.out_cols as usize)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: Vec<ModelMeta>,
+}
+
+impl Manifest {
+    pub fn get(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.iter().find(|m| m.name == name)
+    }
+}
+
+fn req_i64(obj: &Json, key: &str) -> Result<i64> {
+    obj.get(key)
+        .and_then(|v| v.as_i64())
+        .ok_or_else(|| anyhow!("manifest: missing numeric field {key:?}"))
+}
+
+/// Load and validate `<dir>/manifest.json`.
+pub fn load_manifest(dir: &Path) -> Result<Manifest> {
+    let mpath = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
+    let root = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+
+    if root.get("format").and_then(|f| f.as_i64()) != Some(1) {
+        bail!("manifest: unsupported format (want 1)");
+    }
+    let models_json = root
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| anyhow!("manifest: missing models array"))?;
+
+    let mut models = Vec::with_capacity(models_json.len());
+    for m in models_json {
+        let name = m
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("manifest: model without name"))?
+            .to_string();
+        let hlo_rel = m
+            .get("hlo")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("manifest: model {name} without hlo path"))?;
+        let hlo_path = dir.join(hlo_rel);
+        if !hlo_path.exists() {
+            bail!("manifest: artifact {} missing", hlo_path.display());
+        }
+        let meta = ModelMeta {
+            name: name.clone(),
+            hlo_path,
+            input_size: req_i64(m, "input_size")? as u32,
+            grid: req_i64(m, "grid")? as u32,
+            num_classes: req_i64(m, "num_classes")? as u32,
+            out_rows: req_i64(m, "out_rows")? as u32,
+            out_cols: req_i64(m, "out_cols")? as u32,
+            params: req_i64(m, "params")? as u64,
+            flops_per_frame: req_i64(m, "flops_per_frame")? as u64,
+        };
+        // Internal consistency.
+        if meta.out_rows != meta.grid * meta.grid {
+            bail!("manifest: model {name}: out_rows != grid²");
+        }
+        if meta.out_cols != 5 + meta.num_classes {
+            bail!("manifest: model {name}: out_cols != 5 + classes");
+        }
+        models.push(meta);
+    }
+    Ok(Manifest { models })
+}
+
+/// Default artifact directory: `$EVA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("EVA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("eva_manifest_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let d = tmpdir("ok");
+        std::fs::write(d.join("essd.hlo.txt"), "HloModule m").unwrap();
+        write_manifest(
+            &d,
+            r#"{"format":1,"models":[{"name":"essd","hlo":"essd.hlo.txt",
+                "input_size":96,"grid":12,"num_classes":3,
+                "out_rows":144,"out_cols":8,"params":61032,
+                "flops_per_frame":23371776}]}"#,
+        );
+        let m = load_manifest(&d).unwrap();
+        let meta = m.get("essd").unwrap();
+        assert_eq!(meta.input_len(), 96 * 96 * 3);
+        assert_eq!(meta.output_len(), 144 * 8);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_missing_artifact_file() {
+        let d = tmpdir("missing");
+        write_manifest(
+            &d,
+            r#"{"format":1,"models":[{"name":"x","hlo":"x.hlo.txt",
+                "input_size":96,"grid":12,"num_classes":3,
+                "out_rows":144,"out_cols":8,"params":1,"flops_per_frame":1}]}"#,
+        );
+        assert!(load_manifest(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_geometry() {
+        let d = tmpdir("geom");
+        std::fs::write(d.join("x.hlo.txt"), "HloModule m").unwrap();
+        write_manifest(
+            &d,
+            r#"{"format":1,"models":[{"name":"x","hlo":"x.hlo.txt",
+                "input_size":96,"grid":12,"num_classes":3,
+                "out_rows":100,"out_cols":8,"params":1,"flops_per_frame":1}]}"#,
+        );
+        let err = load_manifest(&d).unwrap_err().to_string();
+        assert!(err.contains("grid"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_format_version() {
+        let d = tmpdir("ver");
+        write_manifest(&d, r#"{"format":2,"models":[]}"#);
+        assert!(load_manifest(&d).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_present() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = load_manifest(&dir).unwrap();
+            assert!(m.get("essd").is_some());
+            assert!(m.get("eyolo").is_some());
+            let eyolo = m.get("eyolo").unwrap();
+            assert_eq!(eyolo.input_size, 128);
+            assert_eq!(eyolo.grid, 16);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! XLA PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange format is HLO **text** (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so each serving worker thread
+//! constructs its own [`ModelRuntime`] from a cloneable [`ModelSpec`] —
+//! which also mirrors the paper's deployment (one model instance per AI
+//! device).
+
+pub mod manifest;
+pub mod engine;
+
+pub use engine::{ModelRuntime, ModelSpec};
+pub use manifest::{load_manifest, Manifest, ModelMeta};

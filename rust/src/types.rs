@@ -1,0 +1,258 @@
+//! Core domain types: frames, boxes, detections, classes, time.
+
+/// Object classes shared with the python training pipeline
+/// (`python/compile/model.py::CLASSES`). Order matters: class ids in
+/// detector outputs index into this list.
+pub const CLASSES: [&str; 3] = ["person", "cyclist", "car"];
+
+/// Class id newtype (index into [`CLASSES`]).
+pub type ClassId = usize;
+
+/// Monotone frame index within a clip/stream (0-based).
+pub type FrameId = u64;
+
+/// Simulation / wall time in seconds.
+pub type Seconds = f64;
+
+/// Axis-aligned bounding box in normalised [0,1] image coordinates,
+/// stored as centre + size (the detector's native output layout).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+impl BBox {
+    pub fn new(cx: f32, cy: f32, w: f32, h: f32) -> BBox {
+        BBox { cx, cy, w, h }
+    }
+
+    /// From corner coordinates.
+    pub fn from_corners(x0: f32, y0: f32, x1: f32, y1: f32) -> BBox {
+        BBox {
+            cx: (x0 + x1) / 2.0,
+            cy: (y0 + y1) / 2.0,
+            w: (x1 - x0).max(0.0),
+            h: (y1 - y0).max(0.0),
+        }
+    }
+
+    /// Corner coordinates (x0, y0, x1, y1).
+    pub fn corners(&self) -> (f32, f32, f32, f32) {
+        (
+            self.cx - self.w / 2.0,
+            self.cy - self.h / 2.0,
+            self.cx + self.w / 2.0,
+            self.cy + self.h / 2.0,
+        )
+    }
+
+    pub fn area(&self) -> f32 {
+        self.w.max(0.0) * self.h.max(0.0)
+    }
+
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, other: &BBox) -> f32 {
+        let (ax0, ay0, ax1, ay1) = self.corners();
+        let (bx0, by0, bx1, by1) = other.corners();
+        let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+        let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+        let inter = ix * iy;
+        let union = self.area() + other.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+
+    /// Translate by (dx, dy) in normalised coordinates.
+    pub fn shifted(&self, dx: f32, dy: f32) -> BBox {
+        BBox {
+            cx: self.cx + dx,
+            cy: self.cy + dy,
+            ..*self
+        }
+    }
+
+    /// Clamp the centre into [0,1] (objects may walk off-frame).
+    pub fn clamped(&self) -> BBox {
+        BBox {
+            cx: self.cx.clamp(0.0, 1.0),
+            cy: self.cy.clamp(0.0, 1.0),
+            w: self.w.clamp(0.0, 1.0),
+            h: self.h.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Fraction of this box that lies inside the [0,1]² frame.
+    pub fn visible_fraction(&self) -> f32 {
+        let (x0, y0, x1, y1) = self.corners();
+        let vx = (x1.min(1.0) - x0.max(0.0)).max(0.0);
+        let vy = (y1.min(1.0) - y0.max(0.0)).max(0.0);
+        let a = self.area();
+        if a <= 0.0 {
+            0.0
+        } else {
+            (vx * vy) / a
+        }
+    }
+}
+
+/// One detection: box + class + confidence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detection {
+    pub bbox: BBox,
+    pub class_id: ClassId,
+    pub score: f32,
+}
+
+/// Ground-truth object annotation for one frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GtBox {
+    pub bbox: BBox,
+    pub class_id: ClassId,
+    /// Stable object identity across frames (for tracking-style analyses).
+    pub track_id: u32,
+}
+
+/// A raw video frame: RGB8 raster + ground truth + timing.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub id: FrameId,
+    /// Capture timestamp (seconds since stream start): `id / fps`.
+    pub ts: Seconds,
+    pub width: u32,
+    pub height: u32,
+    /// RGB8 pixels, row-major, len = w*h*3. May be empty for
+    /// "metadata-only" frames used by the virtual-time engine (the
+    /// quality-model detector needs only geometry, not pixels).
+    pub pixels: Vec<u8>,
+    pub ground_truth: Vec<GtBox>,
+}
+
+impl Frame {
+    /// Byte size of the raster payload this frame would put on a link
+    /// when shipped to an AI accelerator, assuming it is first resized to
+    /// `input_size` and sent at `bytes_per_channel` precision (FP16 = 2).
+    pub fn wire_bytes(input_size: u32, bytes_per_channel: u32) -> u64 {
+        (input_size as u64) * (input_size as u64) * 3 * bytes_per_channel as u64
+    }
+}
+
+/// The per-frame output record emitted by the sequence synchronizer.
+#[derive(Debug, Clone)]
+pub struct OutputRecord {
+    pub frame_id: FrameId,
+    /// Capture timestamp of the source frame.
+    pub capture_ts: Seconds,
+    /// Time the record left the synchronizer.
+    pub emit_ts: Seconds,
+    /// Detections (fresh, or reused from `stale_from` if dropped).
+    pub detections: Vec<Detection>,
+    /// `None` if this frame was actually processed; `Some(src)` if it was
+    /// dropped and reuses detections from processed frame `src`.
+    pub stale_from: Option<FrameId>,
+    /// Which model replica processed it (None for dropped frames).
+    pub processed_by: Option<usize>,
+}
+
+impl OutputRecord {
+    pub fn was_dropped(&self) -> bool {
+        self.stale_from.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corners_roundtrip() {
+        let b = BBox::new(0.5, 0.4, 0.2, 0.3);
+        let (x0, y0, x1, y1) = b.corners();
+        let b2 = BBox::from_corners(x0, y0, x1, y1);
+        assert!((b.cx - b2.cx).abs() < 1e-6);
+        assert!((b.cy - b2.cy).abs() < 1e-6);
+        assert!((b.w - b2.w).abs() < 1e-6);
+        assert!((b.h - b2.h).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_identical_is_one() {
+        let b = BBox::new(0.5, 0.5, 0.2, 0.2);
+        assert!((b.iou(&b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        let a = BBox::new(0.2, 0.2, 0.1, 0.1);
+        let b = BBox::new(0.8, 0.8, 0.1, 0.1);
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // Two unit-square halves: A=[0,1]x[0,1], B=[0.5,1.5]x[0,1]
+        let a = BBox::from_corners(0.0, 0.0, 1.0, 1.0);
+        let b = BBox::from_corners(0.5, 0.0, 1.5, 1.0);
+        // inter = 0.5, union = 1.5 -> IoU = 1/3
+        assert!((a.iou(&b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_symmetric() {
+        let a = BBox::new(0.4, 0.4, 0.3, 0.5);
+        let b = BBox::new(0.5, 0.45, 0.25, 0.4);
+        assert!((a.iou(&b) - b.iou(&a)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn iou_zero_area_box() {
+        let a = BBox::new(0.5, 0.5, 0.0, 0.0);
+        let b = BBox::new(0.5, 0.5, 0.2, 0.2);
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn visible_fraction() {
+        let inside = BBox::new(0.5, 0.5, 0.2, 0.2);
+        assert!((inside.visible_fraction() - 1.0).abs() < 1e-6);
+        let half_out = BBox::new(0.0, 0.5, 0.2, 0.2); // left half off-frame
+        assert!((half_out.visible_fraction() - 0.5).abs() < 1e-6);
+        let fully_out = BBox::new(-0.5, 0.5, 0.2, 0.2);
+        assert_eq!(fully_out.visible_fraction(), 0.0);
+    }
+
+    #[test]
+    fn shifted_moves_centre_only() {
+        let b = BBox::new(0.5, 0.5, 0.2, 0.2).shifted(0.1, -0.2);
+        assert!((b.cx - 0.6).abs() < 1e-6);
+        assert!((b.cy - 0.3).abs() < 1e-6);
+        assert!((b.w - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wire_bytes_matches_paper_payloads() {
+        // Paper §IV-D: YOLOv3 416*416*3 = 519168 elements; SSD 300*300*3 = 270000.
+        assert_eq!(Frame::wire_bytes(416, 1), 519_168);
+        assert_eq!(Frame::wire_bytes(300, 1), 270_000);
+        // FP16 on the wire doubles it.
+        assert_eq!(Frame::wire_bytes(416, 2), 1_038_336);
+    }
+
+    #[test]
+    fn output_record_dropped() {
+        let r = OutputRecord {
+            frame_id: 5,
+            capture_ts: 0.1,
+            emit_ts: 0.2,
+            detections: vec![],
+            stale_from: Some(3),
+            processed_by: None,
+        };
+        assert!(r.was_dropped());
+    }
+}

@@ -1,0 +1,157 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `benches/*.rs` are built with `harness = false` and use this module:
+//! warmup, timed iterations, mean / p50 / p99, and a one-line report that
+//! `cargo bench` prints. A `black_box` prevents the optimiser from
+//! deleting the measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-exported optimisation barrier.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// items/second if `items_per_iter` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / self.mean.as_secs_f64().max(1e-12))
+    }
+
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>10.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>10.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {:>10.2} item/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} mean {:>12} p50 {:>12} p99  x{}{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            self.iters,
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with fixed warmup and iteration counts.
+pub struct Bench {
+    warmup: u32,
+    iters: u32,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(warmup: u32, iters: u32) -> Bench {
+        assert!(iters > 0);
+        Bench {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Standard config: honors `EVA_BENCH_FAST=1` for smoke runs.
+    pub fn standard() -> Bench {
+        if std::env::var("EVA_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::new(1, 5)
+        } else {
+            Bench::new(3, 30)
+        }
+    }
+
+    /// Time `f` and record the measurement. `items_per_iter` enables
+    /// throughput reporting.
+    pub fn run<F, R>(&mut self, name: &str, items_per_iter: Option<f64>, mut f: F) -> &Measurement
+    where
+        F: FnMut() -> R,
+    {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            mean: total / self.iters,
+            p50: samples[samples.len() / 2],
+            p99: samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)],
+            min: samples[0],
+            max: *samples.last().unwrap(),
+            items_per_iter,
+        };
+        println!("{}", m.report_line());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new(1, 5);
+        let m = b.run("spin", Some(1000.0), || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(m.mean > Duration::ZERO);
+        assert!(m.throughput().unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

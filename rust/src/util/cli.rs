@@ -1,0 +1,191 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and automatic usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option/flag declaration used for usage text and validation.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `specs` drives which `--name`s
+    /// take a value; unknown options are an error.
+    pub fn parse(raw: &[String], specs: &[Spec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    out.opts.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for s in specs {
+            if s.takes_value && !out.opts.contains_key(s.name) {
+                if let Some(d) = s.default {
+                    out.opts.insert(s.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        Ok(self.parse_as::<u64>(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        Ok(self.parse_as::<f64>(name)?.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        Ok(self.parse_as::<usize>(name)?.unwrap_or(default))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render usage text from specs.
+pub fn usage(program: &str, about: &str, specs: &[Spec]) -> String {
+    let mut s = format!("{program} — {about}\n\noptions:\n");
+    for spec in specs {
+        let head = if spec.takes_value {
+            format!("  --{} <v>", spec.name)
+        } else {
+            format!("  --{}", spec.name)
+        };
+        let pad = 26usize.saturating_sub(head.len());
+        s.push_str(&head);
+        s.push_str(&" ".repeat(pad));
+        s.push_str(spec.help);
+        if let Some(d) = spec.default {
+            s.push_str(&format!(" [default: {d}]"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<Spec> {
+        vec![
+            Spec { name: "model", takes_value: true, help: "model name", default: Some("eyolo") },
+            Spec { name: "n", takes_value: true, help: "replicas", default: None },
+            Spec { name: "verbose", takes_value: false, help: "chatty", default: None },
+        ]
+    }
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&raw(&["--model", "essd", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("model"), Some("essd"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&raw(&["--n=5"]), &specs()).unwrap();
+        assert_eq!(a.u64_or("n", 1).unwrap(), 5);
+    }
+
+    #[test]
+    fn applies_defaults() {
+        let a = Args::parse(&raw(&[]), &specs()).unwrap();
+        assert_eq!(a.get("model"), Some("eyolo"));
+        assert_eq!(a.get("n"), None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&raw(&["--bogus"]), &specs()).is_err());
+        assert!(Args::parse(&raw(&["--n"]), &specs()).is_err());
+        assert!(Args::parse(&raw(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let a = Args::parse(&raw(&["--n", "abc"]), &specs()).unwrap();
+        assert!(a.u64_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn usage_contains_options() {
+        let u = usage("eva", "edge video analytics", &specs());
+        assert!(u.contains("--model"));
+        assert!(u.contains("default: eyolo"));
+    }
+}

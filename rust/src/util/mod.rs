@@ -1,0 +1,16 @@
+//! Zero-dependency substrates.
+//!
+//! The build environment is fully offline (only the `xla` and `anyhow`
+//! crates are vendored), so the usual ecosystem pieces — PRNG, JSON,
+//! CLI parsing, table rendering, property testing, micro-benchmarking —
+//! are implemented here as first-class, tested modules.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod prop;
+pub mod benchkit;
+pub mod stats;
+
+pub use rng::Rng;

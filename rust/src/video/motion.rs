@@ -1,0 +1,244 @@
+//! Object and camera kinematics for the synthetic clips.
+//!
+//! Objects follow a constant-velocity random-walk with soft bouncing at a
+//! world margin; a moving-camera clip (ETH-Sunnyday analog) additionally
+//! pans the whole view, which is what makes stale detections misalign
+//! quickly in the paper's Figure 3.
+
+use crate::types::BBox;
+use crate::util::Rng;
+use crate::video::ClipSpec;
+
+/// Per-class aspect ratio h/w — shared contract with
+/// `python/compile/scene.py::CLASS_APPEARANCE`.
+pub const CLASS_ASPECT: [f64; 3] = [2.6, 1.1, 0.45];
+
+/// Camera model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CameraMotion {
+    /// Fixed camera (ADL-Rundle-6 analog).
+    Static,
+    /// Smooth panning camera with the given mean speed
+    /// (normalised units/second; ETH-Sunnyday analog).
+    Pan { speed: f64 },
+}
+
+/// Evolving camera offset.
+#[derive(Debug, Clone)]
+pub struct CameraState {
+    motion: CameraMotion,
+    off_x: f64,
+    off_y: f64,
+    vel_x: f64,
+    vel_y: f64,
+}
+
+impl CameraState {
+    pub fn new(rng: &mut Rng, motion: CameraMotion) -> CameraState {
+        let (vel_x, vel_y) = match motion {
+            CameraMotion::Static => (0.0, 0.0),
+            CameraMotion::Pan { speed } => {
+                let dir = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                (dir * speed, 0.15 * speed * rng.normal())
+            }
+        };
+        CameraState {
+            motion,
+            off_x: 0.0,
+            off_y: 0.0,
+            vel_x,
+            vel_y,
+        }
+    }
+
+    pub fn step(&mut self, rng: &mut Rng, dt: f64) {
+        if let CameraMotion::Pan { speed } = self.motion {
+            // Small heading jitter; occasional direction reversal keeps the
+            // pan bounded over long clips.
+            self.vel_x += 0.3 * speed * rng.normal() * dt;
+            self.vel_y += 0.1 * speed * rng.normal() * dt;
+            let cap = 1.5 * speed;
+            self.vel_x = self.vel_x.clamp(-cap, cap);
+            self.vel_y = self.vel_y.clamp(-cap / 3.0, cap / 3.0);
+            self.off_x += self.vel_x * dt;
+            self.off_y += self.vel_y * dt;
+        }
+    }
+
+    /// Current (x, y) view offset: subtracted from world coordinates.
+    pub fn offset(&self) -> (f64, f64) {
+        (self.off_x, self.off_y)
+    }
+}
+
+/// One moving object (world coordinates relative to the camera's initial
+/// view; the camera offset maps world -> view).
+#[derive(Debug, Clone)]
+pub struct TrackState {
+    pub track_id: u32,
+    pub class_id: usize,
+    pub x: f64,
+    pub y: f64,
+    pub vx: f64,
+    pub vy: f64,
+    pub w: f64,
+    pub h: f64,
+    /// Per-object colour shade (raster detail).
+    pub shade: f32,
+}
+
+impl TrackState {
+    /// Spawn a new object. `initial` places it anywhere in view;
+    /// respawns enter from the view margin.
+    pub fn spawn(rng: &mut Rng, spec: &ClipSpec, track_id: u32, initial: bool) -> TrackState {
+        let class_id = rng.below(CLASS_ASPECT.len() as u64) as usize;
+        let h = rng.range(spec.min_height, spec.max_height);
+        let w = h / CLASS_ASPECT[class_id];
+        let speed = rng.range(spec.min_speed, spec.max_speed);
+        let angle = rng.range(0.0, std::f64::consts::TAU);
+        let (x, y) = if initial {
+            (rng.range(0.12, 0.88), rng.range(0.15, 0.85))
+        } else {
+            // Enter from a random edge, slightly outside.
+            match rng.below(4) {
+                0 => (-0.05, rng.range(0.2, 0.8)),
+                1 => (1.05, rng.range(0.2, 0.8)),
+                2 => (rng.range(0.2, 0.8), -0.05),
+                _ => (rng.range(0.2, 0.8), 1.05),
+            }
+        };
+        TrackState {
+            track_id,
+            class_id,
+            x,
+            y,
+            vx: speed * angle.cos(),
+            vy: 0.35 * speed * angle.sin(), // mostly lateral motion (street view)
+            w,
+            h,
+            shade: rng.range(0.75, 1.15) as f32,
+        }
+    }
+
+    /// Advance one timestep with velocity jitter and soft world bounce.
+    pub fn step(&mut self, rng: &mut Rng, dt: f64) {
+        self.vx += 0.3 * self.vx.abs().max(0.02) * rng.normal() * dt;
+        self.vy += 0.3 * self.vy.abs().max(0.02) * rng.normal() * dt;
+        self.x += self.vx * dt;
+        self.y += self.vy * dt;
+        // Soft bounce at a generous world margin so objects stay around.
+        if self.x < -0.2 {
+            self.vx = self.vx.abs();
+        }
+        if self.x > 1.2 {
+            self.vx = -self.vx.abs();
+        }
+        if self.y < -0.1 {
+            self.vy = self.vy.abs();
+        }
+        if self.y > 1.1 {
+            self.vy = -self.vy.abs();
+        }
+    }
+
+    /// Bounding box in *view* coordinates for camera offset `cam`.
+    pub fn view_box(&self, cam: (f64, f64)) -> ViewBox {
+        ViewBox {
+            cx: (self.x - cam.0) as f32,
+            cy: (self.y - cam.1) as f32,
+            w: self.w as f32,
+            h: self.h as f32,
+        }
+    }
+}
+
+/// Box in view coordinates (may extend outside [0,1]²).
+#[derive(Debug, Clone, Copy)]
+pub struct ViewBox {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+impl ViewBox {
+    pub fn as_bbox(&self) -> BBox {
+        BBox::new(self.cx, self.cy, self.w, self.h)
+    }
+
+    pub fn visible_fraction(&self) -> f32 {
+        self.as_bbox().visible_fraction()
+    }
+
+    /// Clip the box to the visible frame (MOT annotations clamp at image
+    /// borders), preserving centre+size form.
+    pub fn clamped_to_visible(&self) -> BBox {
+        let (x0, y0, x1, y1) = self.as_bbox().corners();
+        BBox::from_corners(x0.max(0.0), y0.max(0.0), x1.min(1.0), y1.min(1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::presets;
+
+    #[test]
+    fn static_camera_never_moves() {
+        let mut rng = Rng::new(0);
+        let mut cam = CameraState::new(&mut rng, CameraMotion::Static);
+        for _ in 0..100 {
+            cam.step(&mut rng, 0.1);
+        }
+        assert_eq!(cam.offset(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn pan_camera_moves() {
+        let mut rng = Rng::new(1);
+        let mut cam = CameraState::new(&mut rng, CameraMotion::Pan { speed: 0.1 });
+        for _ in 0..50 {
+            cam.step(&mut rng, 0.1);
+        }
+        let (x, _) = cam.offset();
+        assert!(x.abs() > 1e-3, "pan offset {x}");
+    }
+
+    #[test]
+    fn spawned_object_valid() {
+        let mut rng = Rng::new(2);
+        let spec = presets::eth_sunnyday(0);
+        for i in 0..50 {
+            let t = TrackState::spawn(&mut rng, &spec, i, i % 2 == 0);
+            assert!(t.class_id < 3);
+            assert!(t.h >= spec.min_height && t.h <= spec.max_height);
+            let speed = (t.vx * t.vx + t.vy * t.vy).sqrt();
+            assert!(speed <= spec.max_speed * 1.01);
+        }
+    }
+
+    #[test]
+    fn step_keeps_object_in_world_band() {
+        let mut rng = Rng::new(3);
+        let spec = presets::adl_rundle6(0);
+        let mut t = TrackState::spawn(&mut rng, &spec, 0, true);
+        for _ in 0..2_000 {
+            t.step(&mut rng, 1.0 / 30.0);
+            assert!(t.x > -2.0 && t.x < 3.0, "x diverged: {}", t.x);
+            assert!(t.y > -2.0 && t.y < 3.0, "y diverged: {}", t.y);
+        }
+    }
+
+    #[test]
+    fn viewbox_clamps() {
+        let vb = ViewBox {
+            cx: 0.02,
+            cy: 0.5,
+            w: 0.2,
+            h: 0.2,
+        };
+        let clamped = vb.clamped_to_visible();
+        let (x0, ..) = clamped.corners();
+        assert!(x0 >= 0.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Benchmark clip presets mirroring the paper's Table I, plus small
+//! PJRT-scale clips for the live serving examples.
+
+use crate::video::motion::CameraMotion;
+use crate::video::ClipSpec;
+
+/// ETH-Sunnyday analog (Table I): 14 FPS, 354 frames, 640×480, moving
+/// camera. Object speeds are calibrated so that ~5-frame-stale boxes lose
+/// enough IoU to reproduce the paper's mAP drop (86.9 % -> 66.1 % with a
+/// single NCS2; §II-B).
+pub fn eth_sunnyday(seed: u64) -> ClipSpec {
+    ClipSpec {
+        name: "eth_sunnyday".to_string(),
+        fps: 14.0,
+        num_frames: 354,
+        width: 640,
+        height: 480,
+        camera: CameraMotion::Pan { speed: 0.12 },
+        min_objects: 3,
+        max_objects: 6,
+        min_speed: 0.12,
+        max_speed: 0.32,
+        min_height: 0.18,
+        max_height: 0.45,
+        seed,
+    }
+}
+
+/// ADL-Rundle-6 analog (Table I): 30 FPS, 525 frames, 1920×1080, static
+/// camera, denser pedestrian scene.
+pub fn adl_rundle6(seed: u64) -> ClipSpec {
+    ClipSpec {
+        name: "adl_rundle6".to_string(),
+        fps: 30.0,
+        num_frames: 525,
+        width: 1920,
+        height: 1080,
+        camera: CameraMotion::Static,
+        min_objects: 4,
+        max_objects: 8,
+        min_speed: 0.12,
+        max_speed: 0.35,
+        min_height: 0.15,
+        max_height: 0.40,
+        seed,
+    }
+}
+
+/// Small clip for PJRT-served end-to-end runs (square frames at the
+/// detector's input size).
+pub fn tiny_clip(size: u32, num_frames: u32, fps: f64, seed: u64) -> ClipSpec {
+    ClipSpec {
+        name: format!("tiny{size}"),
+        fps,
+        num_frames,
+        width: size,
+        height: size,
+        camera: CameraMotion::Static,
+        min_objects: 1,
+        max_objects: 3,
+        min_speed: 0.04,
+        max_speed: 0.15,
+        min_height: 0.18,
+        max_height: 0.42,
+        seed,
+    }
+}
+
+/// Look up a preset by name (CLI surface).
+pub fn by_name(name: &str, seed: u64) -> Option<ClipSpec> {
+    match name {
+        "eth_sunnyday" | "eth" => Some(eth_sunnyday(seed)),
+        "adl_rundle6" | "adl" => Some(adl_rundle6(seed)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_parameters() {
+        let eth = eth_sunnyday(0);
+        assert_eq!(eth.fps, 14.0);
+        assert_eq!(eth.num_frames, 354);
+        assert_eq!((eth.width, eth.height), (640, 480));
+        assert!(matches!(eth.camera, CameraMotion::Pan { .. }));
+
+        let adl = adl_rundle6(0);
+        assert_eq!(adl.fps, 30.0);
+        assert_eq!(adl.num_frames, 525);
+        assert_eq!((adl.width, adl.height), (1920, 1080));
+        assert_eq!(adl.camera, CameraMotion::Static);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("eth", 1).is_some());
+        assert!(by_name("adl_rundle6", 1).is_some());
+        assert!(by_name("nope", 1).is_none());
+    }
+}

@@ -1,0 +1,223 @@
+//! RGB8 rasterisation matching `python/compile/scene.py`'s appearance
+//! contract, so the build-time-trained TinyDet generalises to the frames
+//! this module produces at serving time.
+
+use crate::util::Rng;
+use crate::video::motion::TrackState;
+
+/// Per-class base colour (r, g, b) in [0,1] — shared contract with
+/// `python/compile/scene.py::CLASS_APPEARANCE`.
+pub const CLASS_COLOUR: [[f32; 3]; 3] = [
+    [0.85, 0.25, 0.20], // person  — reddish
+    [0.25, 0.30, 0.85], // cyclist — bluish
+    [0.20, 0.80, 0.30], // car     — greenish
+];
+
+/// Render one frame at `size`² resolution: low-frequency grayish noise
+/// background plus the objects as bordered colour blocks.
+pub fn rasterize_frame(
+    rng: &mut Rng,
+    size: u32,
+    tracks: &[TrackState],
+    cam: (f64, f64),
+) -> Vec<u8> {
+    let s = size as usize;
+    let mut img = background(rng, s);
+    for t in tracks {
+        let vb = t.view_box(cam);
+        if vb.visible_fraction() <= 0.0 {
+            continue;
+        }
+        draw_object(rng, &mut img, s, vb.cx, vb.cy, vb.w, vb.h, t.class_id, t.shade);
+    }
+    // f32 [0,1] -> u8.
+    img.iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+        .collect()
+}
+
+/// Low-frequency grayish background in [0.25, 0.65], f32 RGB row-major.
+fn background(rng: &mut Rng, s: usize) -> Vec<f32> {
+    let coarse_n = s / 8 + 2;
+    let mut coarse = vec![0.0f32; coarse_n * coarse_n];
+    for v in coarse.iter_mut() {
+        *v = rng.range(0.25, 0.65) as f32;
+    }
+    // Hoist the per-column interpolation coefficients (identical for
+    // every row) out of the pixel loop — §Perf iteration 2.
+    let xcoef: Vec<(usize, f32)> = (0..s)
+        .map(|x| {
+            let fx = x as f32 / 8.0;
+            let x0 = (fx as usize).min(coarse_n - 2);
+            (x0, fx - x0 as f32)
+        })
+        .collect();
+    let mut img = vec![0.0f32; s * s * 3];
+    for y in 0..s {
+        let fy = y as f32 / 8.0;
+        let y0 = (fy as usize).min(coarse_n - 2);
+        let ty = fy - y0 as f32;
+        let row0 = &coarse[y0 * coarse_n..(y0 + 1) * coarse_n];
+        let row1 = &coarse[(y0 + 1) * coarse_n..(y0 + 2) * coarse_n];
+        for (x, &(x0, tx)) in xcoef.iter().enumerate() {
+            let top = row0[x0] * (1.0 - tx) + row0[x0 + 1] * tx;
+            let bot = row1[x0] * (1.0 - tx) + row1[x0 + 1] * tx;
+            let v = top * (1.0 - ty) + bot * ty + 0.02 * rng.fast_normalish() as f32;
+            let v = v.clamp(0.0, 1.0);
+            let idx = (y * s + x) * 3;
+            img[idx] = v;
+            img[idx + 1] = v;
+            img[idx + 2] = v;
+        }
+    }
+    img
+}
+
+#[allow(clippy::too_many_arguments)]
+fn draw_object(
+    rng: &mut Rng,
+    img: &mut [f32],
+    s: usize,
+    cx: f32,
+    cy: f32,
+    w: f32,
+    h: f32,
+    class_id: usize,
+    shade: f32,
+) {
+    let x0 = (((cx - w / 2.0) * s as f32).round() as i64).max(0) as usize;
+    let x1 = ((((cx + w / 2.0) * s as f32).round() as i64).min(s as i64)) as usize;
+    let y0 = (((cy - h / 2.0) * s as f32).round() as i64).max(0) as usize;
+    let y1 = ((((cy + h / 2.0) * s as f32).round() as i64).min(s as i64)) as usize;
+    if x1 <= x0 || y1 <= y0 {
+        return;
+    }
+    let base = CLASS_COLOUR[class_id];
+    for y in y0..y1 {
+        for x in x0..x1 {
+            let idx = (y * s + x) * 3;
+            for c in 0..3 {
+                let v = base[c] * shade + 0.04 * rng.fast_normalish() as f32;
+                img[idx + c] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+    // Darker border (localisation cue, as in the python generator).
+    if y1 - y0 > 2 && x1 - x0 > 2 {
+        for x in x0..x1 {
+            for &y in &[y0, y1 - 1] {
+                let idx = (y * s + x) * 3;
+                for c in 0..3 {
+                    img[idx + c] *= 0.5;
+                }
+            }
+        }
+        for y in y0..y1 {
+            for &x in &[x0, x1 - 1] {
+                let idx = (y * s + x) * 3;
+                for c in 0..3 {
+                    img[idx + c] *= 0.5;
+                }
+            }
+        }
+    }
+}
+
+/// Write a frame as a binary PPM (P6) — used by `eva visualize` to dump
+/// Figure 2/3-style comparisons without an image stack.
+pub fn write_ppm(path: &std::path::Path, width: u32, height: u32, rgb: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{} {}\n255\n", width, height)?;
+    f.write_all(rgb)?;
+    Ok(())
+}
+
+/// Draw a 1-pixel rectangle outline (for detection overlays in dumps).
+pub fn draw_box_outline(rgb: &mut [u8], size: usize, bbox: &crate::types::BBox, colour: [u8; 3]) {
+    let (x0f, y0f, x1f, y1f) = bbox.corners();
+    let x0 = ((x0f * size as f32) as i64).clamp(0, size as i64 - 1) as usize;
+    let x1 = ((x1f * size as f32) as i64).clamp(0, size as i64 - 1) as usize;
+    let y0 = ((y0f * size as f32) as i64).clamp(0, size as i64 - 1) as usize;
+    let y1 = ((y1f * size as f32) as i64).clamp(0, size as i64 - 1) as usize;
+    for x in x0..=x1 {
+        for &y in &[y0, y1] {
+            let idx = (y * size + x) * 3;
+            rgb[idx..idx + 3].copy_from_slice(&colour);
+        }
+    }
+    for y in y0..=y1 {
+        for &x in &[x0, x1] {
+            let idx = (y * size + x) * 3;
+            rgb[idx..idx + 3].copy_from_slice(&colour);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::presets;
+    use crate::video::motion::TrackState;
+
+    #[test]
+    fn background_is_grayish_and_bounded() {
+        let mut rng = Rng::new(0);
+        let img = background(&mut rng, 64);
+        assert_eq!(img.len(), 64 * 64 * 3);
+        for px in img.chunks(3) {
+            assert!(px[0] >= 0.0 && px[0] <= 1.0);
+            // Grayish: channels identical by construction.
+            assert_eq!(px[0], px[1]);
+            assert_eq!(px[1], px[2]);
+        }
+    }
+
+    #[test]
+    fn object_pixels_dominated_by_class_colour() {
+        let mut rng = Rng::new(1);
+        let spec = presets::tiny_clip(64, 1, 10.0, 0);
+        for class_id in 0..3 {
+            let mut t = TrackState::spawn(&mut rng, &spec, 0, true);
+            t.class_id = class_id;
+            t.x = 0.5;
+            t.y = 0.5;
+            t.w = 0.3;
+            t.h = 0.3;
+            t.shade = 1.0;
+            let rgb = rasterize_frame(&mut rng, 64, &[t], (0.0, 0.0));
+            // Sample the centre pixel.
+            let idx = (32 * 64 + 32) * 3;
+            let px = [rgb[idx] as f32, rgb[idx + 1] as f32, rgb[idx + 2] as f32];
+            let dominant = px
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let expected = CLASS_COLOUR[class_id]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(dominant, expected, "class {class_id}");
+        }
+    }
+
+    #[test]
+    fn rasterize_output_size() {
+        let mut rng = Rng::new(2);
+        let rgb = rasterize_frame(&mut rng, 32, &[], (0.0, 0.0));
+        assert_eq!(rgb.len(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn box_outline_stays_in_bounds() {
+        let mut rgb = vec![0u8; 16 * 16 * 3];
+        let b = crate::types::BBox::new(0.9, 0.9, 0.5, 0.5); // spills over edge
+        draw_box_outline(&mut rgb, 16, &b, [255, 0, 0]);
+        // No panic + some pixels set.
+        assert!(rgb.iter().any(|&v| v == 255));
+    }
+}

@@ -1,0 +1,257 @@
+//! Cross-module integration and property tests for the virtual-time
+//! pipeline: conservation laws, ordering invariants, scheduler behaviour
+//! under randomized fleets/workloads, and paper-shape stability across
+//! seeds.
+
+use eva::coordinator::{run_online, RunConfig, SchedulerKind, SourceMode};
+use eva::detector::quality::{QualityModelDetector, QualityProfile};
+use eva::detector::Detector;
+use eva::device::link::LinkProfile;
+use eva::device::{DetectorModelId, DeviceInstance, DeviceKind, Fleet};
+use eva::experiments::common::{online_map, quality_detectors, saturated_fps};
+use eva::util::prop::{check, Config};
+use eva::video::{generate, presets, ClipSpec};
+
+fn small_clip(seed: u64, fps: f64, frames: u32) -> ClipSpec {
+    let mut spec = presets::eth_sunnyday(seed);
+    spec.fps = fps;
+    spec.num_frames = frames;
+    spec
+}
+
+fn any_scheduler(rng: &mut eva::util::Rng) -> SchedulerKind {
+    *rng.choose(&[
+        SchedulerKind::RoundRobin,
+        SchedulerKind::WeightedRoundRobin,
+        SchedulerKind::Fcfs,
+        SchedulerKind::Proportional,
+    ])
+}
+
+fn random_fleet(rng: &mut eva::util::Rng) -> Fleet {
+    let n = rng.int_in(1, 6) as usize;
+    let hetero = rng.chance(0.4);
+    let mut devices: Vec<DeviceInstance> = (0..n)
+        .map(|i| DeviceInstance::new(DeviceKind::Ncs2, DetectorModelId::Yolov3, i))
+        .collect();
+    if hetero {
+        devices.push(DeviceInstance::new(
+            *rng.choose(&[DeviceKind::FastCpu, DeviceKind::SlowCpu]),
+            DetectorModelId::Yolov3,
+            n,
+        ));
+    }
+    Fleet {
+        devices,
+        hub: Some(if rng.chance(0.5) {
+            LinkProfile::usb3()
+        } else {
+            LinkProfile::usb2()
+        }),
+    }
+}
+
+#[test]
+fn property_conservation_and_ordering() {
+    // Every frame gets exactly one record, in order; processed + dropped
+    // = total; emit times monotone — for random fleets, schedulers,
+    // modes and stream rates.
+    check("conservation", Config { cases: 60, base_seed: 101 }, |rng| {
+        let spec = small_clip(rng.next_u64(), rng.range(5.0, 40.0), 80);
+        let clip = generate(&spec, None);
+        let fleet = random_fleet(rng);
+        let mut cfg = RunConfig::new(
+            any_scheduler(rng),
+            if rng.chance(0.5) { SourceMode::Paced } else { SourceMode::Saturated },
+            rng.next_u64(),
+        );
+        if rng.chance(0.3) {
+            cfg.window = Some(rng.int_in(1, 10) as usize);
+        }
+        let run = run_online(
+            &clip,
+            &fleet,
+            quality_detectors(&fleet, &spec.name, rng.next_u64()),
+            &cfg,
+        );
+        if run.records.len() != clip.len() {
+            return Err(format!("{} records for {} frames", run.records.len(), clip.len()));
+        }
+        let m = &run.metrics;
+        if m.frames_processed + m.frames_dropped != m.frames_total {
+            return Err("conservation violated".into());
+        }
+        let mut prev_emit = f64::NEG_INFINITY;
+        for (i, r) in run.records.iter().enumerate() {
+            if r.frame_id != i as u64 {
+                return Err(format!("record {i} has id {}", r.frame_id));
+            }
+            if r.emit_ts < prev_emit - 1e-9 {
+                return Err(format!("emit time regressed at {i}"));
+            }
+            prev_emit = r.emit_ts;
+            // Stale fills reference an earlier processed frame.
+            if let Some(src) = r.stale_from {
+                if src > r.frame_id {
+                    return Err(format!("stale source {src} after frame {}", r.frame_id));
+                }
+            }
+        }
+        // Per-device processed counts sum to the total processed.
+        let dev_sum: u64 = m.device_frames.iter().sum();
+        if dev_sum != m.frames_processed {
+            return Err(format!("device sum {dev_sum} != processed {}", m.frames_processed));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_saturated_capacity_bounded_by_ideal() {
+    // σ_P never exceeds Σμᵢ (work conservation upper bound), and FCFS
+    // reaches ≥85% of it without a shared-hub bottleneck.
+    check("capacity bound", Config { cases: 25, base_seed: 202 }, |rng| {
+        let spec = small_clip(rng.next_u64(), 30.0, 250);
+        let clip = generate(&spec, None);
+        let mut fleet = random_fleet(rng);
+        fleet.hub = Some(LinkProfile::usb3()); // negligible transfers
+        let fps = saturated_fps(&clip, &fleet, SchedulerKind::Fcfs, rng.next_u64());
+        let ideal = fleet.aggregate_rate();
+        if fps > ideal * 1.05 {
+            return Err(format!("fps {fps} exceeds ideal {ideal}"));
+        }
+        // A slow straggler holding the final frame inflates the makespan
+        // on finite clips (the paper's 354/525-frame runs amortise it),
+        // so the lower bound is deliberately loose.
+        if fps < ideal * 0.72 {
+            return Err(format!("fcfs fps {fps} below 72% of ideal {ideal}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_fcfs_dominates_rr() {
+    // Work conservation: FCFS capacity ≥ lockstep RR capacity (within
+    // jitter noise) on ANY fleet.
+    check("fcfs >= rr", Config { cases: 25, base_seed: 303 }, |rng| {
+        let spec = small_clip(rng.next_u64(), 20.0, 80);
+        let clip = generate(&spec, None);
+        let fleet = random_fleet(rng);
+        let seed = rng.next_u64();
+        let fcfs = saturated_fps(&clip, &fleet, SchedulerKind::Fcfs, seed);
+        let rr = saturated_fps(&clip, &fleet, SchedulerKind::RoundRobin, seed);
+        if fcfs < rr * 0.93 {
+            return Err(format!("fcfs {fcfs} < rr {rr}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_more_devices_never_slower() {
+    check("monotone in n", Config { cases: 15, base_seed: 404 }, |rng| {
+        let spec = small_clip(rng.next_u64(), 30.0, 80);
+        let clip = generate(&spec, None);
+        let seed = rng.next_u64();
+        let mut prev = 0.0;
+        for n in 1..=5usize {
+            let fleet = Fleet::ncs2_sticks(n, DetectorModelId::Yolov3, LinkProfile::usb3());
+            let fps = saturated_fps(&clip, &fleet, SchedulerKind::Fcfs, seed);
+            if fps < prev * 0.97 {
+                return Err(format!("n={n}: {fps} < n-1 capacity {prev}"));
+            }
+            prev = fps;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn paper_shape_stable_across_seeds() {
+    // The Table IV headline shape must not depend on the seed.
+    for seed in [5u64, 17, 91] {
+        let spec = presets::eth_sunnyday(seed);
+        let clip = generate(&spec, None);
+        let f1 = Fleet::ncs2_sticks(1, DetectorModelId::Yolov3, LinkProfile::usb3());
+        let f6 = Fleet::ncs2_sticks(6, DetectorModelId::Yolov3, LinkProfile::usb3());
+        let (map1, drop1) = online_map(&clip, &f1, SchedulerKind::Fcfs, seed + 1);
+        let (map6, drop6) = online_map(&clip, &f6, SchedulerKind::Fcfs, seed + 2);
+        assert!(drop1 > 0.7, "seed {seed}: single-device drop {drop1}");
+        assert!(drop6 < 0.08, "seed {seed}: n=6 drop {drop6}");
+        assert!(
+            map6 > map1 + 0.08,
+            "seed {seed}: map6 {map6:.3} !>> map1 {map1:.3}"
+        );
+    }
+}
+
+#[test]
+fn window_size_one_matches_naive_dropping() {
+    // With window = 1 and one device, drops/processed ≈ λ/μ − 1 (§II's
+    // naive approach arithmetic).
+    let spec = presets::eth_sunnyday(33);
+    let clip = generate(&spec, None);
+    let fleet = Fleet::ncs2_sticks(1, DetectorModelId::Yolov3, LinkProfile::usb3());
+    let mut cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Paced, 3);
+    cfg.window = Some(1);
+    let run = run_online(&clip, &fleet, quality_detectors(&fleet, &spec.name, 4), &cfg);
+    let dpp = run.metrics.drops_per_processed();
+    assert!((dpp - (14.0 / 2.5 - 1.0)).abs() < 0.8, "dpp {dpp}");
+}
+
+#[test]
+fn proportional_converges_to_wrr_split() {
+    // On a stable heterogeneous fleet the proportional scheduler's
+    // device split approaches the static-weight split.
+    let spec = small_clip(44, 30.0, 300);
+    let clip = generate(&spec, None);
+    let fleet = Fleet::cpu_plus_sticks(
+        DeviceKind::FastCpu,
+        2,
+        DetectorModelId::Yolov3,
+        LinkProfile::usb3(),
+    );
+    let cfg = RunConfig::new(SchedulerKind::Proportional, SourceMode::Saturated, 5);
+    let run = run_online(&clip, &fleet, quality_detectors(&fleet, &spec.name, 6), &cfg);
+    let cpu = run.metrics.device_frames[0] as f64;
+    let stick = run.metrics.device_frames[1].max(1) as f64;
+    let ratio = cpu / stick;
+    // Rates 13.5 vs 2.5 -> ideal ratio 5.4; accept the integer-weight band.
+    assert!(ratio > 3.0 && ratio < 8.0, "cpu/stick ratio {ratio}");
+}
+
+#[test]
+fn stale_fill_contents_match_source_frame() {
+    // A dropped frame's detections must be byte-identical to those of its
+    // stale_from source record.
+    let spec = presets::eth_sunnyday(55);
+    let clip = generate(&spec, None);
+    let fleet = Fleet::ncs2_sticks(1, DetectorModelId::Yolov3, LinkProfile::usb3());
+    let cfg = RunConfig::new(SchedulerKind::Fcfs, SourceMode::Paced, 9);
+    let run = run_online(&clip, &fleet, quality_detectors(&fleet, &spec.name, 10), &cfg);
+    let mut checked = 0;
+    for r in &run.records {
+        if let Some(src) = r.stale_from {
+            let src_rec = &run.records[src as usize];
+            if src_rec.processed_by.is_some() {
+                assert_eq!(r.detections, src_rec.detections, "frame {}", r.frame_id);
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 50, "only {checked} stale fills verified");
+}
+
+#[test]
+fn offline_detector_independent_of_fleet_rng() {
+    // Quality detectors are deterministic per seed regardless of fleet.
+    let spec = presets::eth_sunnyday(66);
+    let clip = generate(&spec, None);
+    let prof = QualityProfile::calibrated(DetectorModelId::Yolov3, "eth_sunnyday");
+    let mut d1 = QualityModelDetector::new(prof.clone(), 5);
+    let mut d2 = QualityModelDetector::new(prof, 5);
+    for f in clip.frames.iter().take(30) {
+        assert_eq!(d1.detect(f), d2.detect(f));
+    }
+}
