@@ -1,0 +1,62 @@
+//! Fleet scaling bench: aggregate detection FPS vs pool size at a fixed
+//! stream count (8 streams), plus the admission-enforced sweep.
+//!
+//! Asserts the work-conserving shape: with admission off and windows
+//! deep enough to keep the pool fed, aggregate σ tracks Σμᵢ (within
+//! tolerance) and grows monotonically with the pool.
+
+use eva::experiments::fleet::{saturation_sweep, scaling};
+use eva::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new(1, 3);
+
+    let (table, points) = saturation_sweep(29);
+    print!("{}", table.render());
+    for p in &points {
+        let ratio = p.aggregate_fps / p.ideal_rate;
+        assert!(
+            (ratio - 1.0).abs() < 0.12,
+            "m={}: aggregate σ {:.2} vs Σμ {:.2} (ratio {ratio:.3})",
+            p.devices,
+            p.aggregate_fps,
+            p.ideal_rate
+        );
+    }
+    for w in points.windows(2) {
+        assert!(
+            w[1].aggregate_fps > w[0].aggregate_fps,
+            "σ must grow with the pool: {:?} -> {:?}",
+            w[0].aggregate_fps,
+            w[1].aggregate_fps
+        );
+    }
+    println!("shape OK: aggregate σ ≈ Σμ at every pool size (work-conserving)");
+
+    let (admission_table, admission_points) = scaling(31);
+    print!("{}", admission_table.render());
+    let last = admission_points[admission_points.len() - 1];
+    assert_eq!(last.rejected, 0, "largest pool must admit everyone");
+    println!("shape OK: admission relaxes from reject/degrade to full admit as the pool grows");
+
+    // Wall-clock cost of one 8-stream virtual-time run (the thing CI and
+    // sweeps pay per cell).
+    bench.run("fleet sim: 8 streams × 4 devices (300 frames)", Some(8.0 * 300.0), || {
+        saturation_sweep_cell()
+    });
+}
+
+fn saturation_sweep_cell() -> u64 {
+    use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+    use eva::fleet::{run_fleet, AdmissionPolicy, Scenario, StreamSpec};
+    let devices: Vec<DeviceInstance> = (0..4)
+        .map(|i| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, 2.5))
+        .collect();
+    let streams: Vec<StreamSpec> = (0..8)
+        .map(|i| StreamSpec::new(&format!("s{i}"), 10.0, 300).with_window(16))
+        .collect();
+    let scenario = Scenario::new(devices, streams)
+        .with_admission(AdmissionPolicy::admit_all())
+        .with_seed(33);
+    run_fleet(&scenario).total_processed()
+}

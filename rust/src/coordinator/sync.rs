@@ -209,6 +209,77 @@ mod tests {
     }
 
     #[test]
+    fn first_frame_drop_then_recovery() {
+        // Frame 0 drops before anything was processed (empty stale fill,
+        // self-referential source); once frame 1 is processed, frame 2's
+        // drop reuses frame 1's boxes.
+        let mut s = Synchronizer::new();
+        let r = s.resolve(0, Fate::Dropped, 0.1, ts);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].stale_from, Some(0));
+        assert!(r[0].detections.is_empty());
+        s.resolve(1, Fate::Processed { detections: vec![det(0.4)], device: 0 }, 0.5, ts);
+        let r = s.resolve(2, Fate::Dropped, 0.6, ts);
+        assert_eq!(r[0].stale_from, Some(1));
+        assert_eq!(r[0].detections.len(), 1);
+        assert!((r[0].detections[0].bbox.cx - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_frames_dropped_yields_empty_stale_records() {
+        // Total starvation: every record emits, dropped, with no boxes
+        // to reuse — stale sources degenerate to the frame itself.
+        let mut s = Synchronizer::new();
+        let mut emitted = 0;
+        for fid in 0..5u64 {
+            let r = s.resolve(fid, Fate::Dropped, 0.1 * (fid + 1) as f64, ts);
+            emitted += r.len();
+        }
+        assert_eq!(emitted, 5);
+        for (i, r) in s.emitted().iter().enumerate() {
+            assert!(r.was_dropped());
+            assert!(r.detections.is_empty());
+            assert_eq!(r.stale_from, Some(i as u64));
+            assert_eq!(r.processed_by, None);
+        }
+        // Emit times stay monotone even with nothing processed.
+        for w in s.emitted().windows(2) {
+            assert!(w[1].emit_ts >= w[0].emit_ts);
+        }
+    }
+
+    #[test]
+    fn out_of_order_tail_resolves_against_emission_order() {
+        // In-order head (0, 1 processed), then the tail resolves
+        // backwards: 4 (processed) before 3 and 2 (both dropped). The
+        // drops must reuse frame 1 — the latest *emitted* processed frame
+        // — not frame 4, which resolved earlier in wall time but emits
+        // later in sequence order.
+        let mut s = Synchronizer::new();
+        s.resolve(0, Fate::Processed { detections: vec![det(0.1)], device: 0 }, 1.0, ts);
+        s.resolve(1, Fate::Processed { detections: vec![det(0.2)], device: 1 }, 2.0, ts);
+        let r = s.resolve(4, Fate::Processed { detections: vec![det(0.9)], device: 0 }, 3.0, ts);
+        assert!(r.is_empty());
+        let r = s.resolve(3, Fate::Dropped, 4.0, ts);
+        assert!(r.is_empty());
+        assert_eq!(s.pending_len(), 2);
+        let r = s.resolve(2, Fate::Dropped, 5.0, ts);
+        assert_eq!(r.len(), 3); // 2, 3, 4 unblock together
+        assert_eq!(r[0].stale_from, Some(1));
+        assert!((r[0].detections[0].bbox.cx - 0.2).abs() < 1e-6);
+        assert_eq!(r[1].stale_from, Some(1));
+        assert!((r[1].detections[0].bbox.cx - 0.2).abs() < 1e-6);
+        assert_eq!(r[2].stale_from, None);
+        assert_eq!(r[2].processed_by, Some(0));
+        // All three unblocked records leave at (or after) the unblocking
+        // resolution's time, in monotone order.
+        assert!(r[0].emit_ts >= 5.0);
+        assert!(r[1].emit_ts >= r[0].emit_ts);
+        assert!(r[2].emit_ts >= r[1].emit_ts);
+        assert_eq!(s.next_expected(), 5);
+    }
+
+    #[test]
     #[should_panic(expected = "resolved twice")]
     fn double_resolution_panics() {
         let mut s = Synchronizer::new();

@@ -1,0 +1,190 @@
+//! Fleet scaling experiments: streams × devices sweeps in virtual time.
+//!
+//! Two sweeps share one fixed offered load (8 streams):
+//!
+//! * [`scaling`] — admission **enforced**: shows the control plane
+//!   trading streams for latency as the pool grows (admit/degrade/reject
+//!   counts, bounded p99, fairness).
+//! * [`saturation_sweep`] — admission off, big windows: measures raw
+//!   work-conserving capacity; aggregate σ tracks Σμᵢ until the pool
+//!   outgrows the offered load.
+
+use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use crate::fleet::admission::{AdmissionPolicy, Decision};
+use crate::fleet::metrics::FleetReport;
+use crate::fleet::sim::{run_fleet, Scenario};
+use crate::fleet::stream::StreamSpec;
+use crate::util::table::{f, Table};
+
+/// One row of a streams × devices sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePoint {
+    pub devices: usize,
+    pub streams: usize,
+    /// Ideal pool capacity Σμᵢ.
+    pub ideal_rate: f64,
+    /// Measured aggregate processed FPS.
+    pub aggregate_fps: f64,
+    pub admitted: usize,
+    pub degraded: usize,
+    pub rejected: usize,
+    /// Mean over admitted streams' p99 output latency (seconds).
+    pub mean_p99: f64,
+    /// Jain fairness index over admitted streams.
+    pub fairness: f64,
+}
+
+/// `n` uniform-rate pool devices (NCS2-class unless overridden).
+pub fn pool_of(n: usize, rate: f64) -> Vec<DeviceInstance> {
+    (0..n)
+        .map(|i| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, rate))
+        .collect()
+}
+
+fn uniform_streams(n: usize, fps: f64, frames: u64, window: usize) -> Vec<StreamSpec> {
+    (0..n)
+        .map(|i| StreamSpec::new(&format!("s{i}"), fps, frames).with_window(window))
+        .collect()
+}
+
+fn point(report: &mut FleetReport, devices: usize, streams: usize, ideal: f64) -> ScalePoint {
+    let mut admitted = 0;
+    let mut degraded = 0;
+    let mut rejected = 0;
+    let mut p99_sum = 0.0;
+    let mut p99_n = 0usize;
+    for s in report.streams.iter_mut() {
+        match s.decision {
+            Decision::Admit { .. } => admitted += 1,
+            Decision::Degrade { .. } => {
+                admitted += 1;
+                degraded += 1;
+            }
+            Decision::Reject => rejected += 1,
+        }
+        if s.decision.is_admitted() {
+            p99_sum += s.metrics.latency.p99();
+            p99_n += 1;
+        }
+    }
+    ScalePoint {
+        devices,
+        streams,
+        ideal_rate: ideal,
+        aggregate_fps: report.aggregate_fps(),
+        admitted,
+        degraded,
+        rejected,
+        mean_p99: if p99_n == 0 { 0.0 } else { p99_sum / p99_n as f64 },
+        fairness: report.fairness(),
+    }
+}
+
+/// Admission-enforced sweep: 8 × 5-FPS streams vs growing pools of
+/// 2.5-FPS devices.
+pub fn scaling(seed: u64) -> (Table, Vec<ScalePoint>) {
+    let streams = 8usize;
+    let fps = 5.0;
+    let frames = 300u64;
+    let mut t = Table::new(
+        "Fleet scaling with admission (8 streams × 5 FPS vs m × 2.5-FPS devices)",
+        &[
+            "devices", "Σμ", "aggregate σ", "admit", "degrade", "reject",
+            "mean p99 (s)", "Jain",
+        ],
+    );
+    // 2.5 × 20 × 0.95 = 47.5 ≥ offered 40: the largest pool fits every
+    // stream at full rate.
+    let mut points = Vec::new();
+    for m in [1usize, 2, 4, 8, 12, 20] {
+        let scenario = Scenario::new(
+            pool_of(m, 2.5),
+            uniform_streams(streams, fps, frames, 4),
+        )
+        .with_seed(seed ^ (m as u64));
+        let mut report = run_fleet(&scenario);
+        let p = point(&mut report, m, streams, 2.5 * m as f64);
+        t.row(vec![
+            format!("{m}"),
+            f(p.ideal_rate, 1),
+            f(p.aggregate_fps, 2),
+            format!("{}", p.admitted),
+            format!("{}", p.degraded),
+            format!("{}", p.rejected),
+            f(p.mean_p99, 2),
+            f(p.fairness, 3),
+        ]);
+        points.push(p);
+    }
+    (t, points)
+}
+
+/// Raw-capacity sweep: admission off, windows large enough that the pool
+/// never starves; aggregate σ should track min(Σμᵢ, offered λ).
+pub fn saturation_sweep(seed: u64) -> (Table, Vec<ScalePoint>) {
+    let streams = 8usize;
+    let fps = 10.0; // offered 80 FPS, far above every pool below
+    let frames = 300u64;
+    let mut t = Table::new(
+        "Fleet saturation (8 streams × 10 FPS, admission off): σ vs Σμ",
+        &["devices", "Σμ", "aggregate σ", "σ / Σμ", "Jain"],
+    );
+    let mut points = Vec::new();
+    for m in [1usize, 2, 3, 4, 6, 8] {
+        let scenario = Scenario::new(
+            pool_of(m, 2.5),
+            uniform_streams(streams, fps, frames, 16),
+        )
+        .with_admission(AdmissionPolicy::admit_all())
+        .with_seed(seed ^ (0x5CA1E0 + m as u64));
+        let mut report = run_fleet(&scenario);
+        let p = point(&mut report, m, streams, 2.5 * m as f64);
+        t.row(vec![
+            format!("{m}"),
+            f(p.ideal_rate, 1),
+            f(p.aggregate_fps, 2),
+            f(p.aggregate_fps / p.ideal_rate, 3),
+            f(p.fairness, 3),
+        ]);
+        points.push(p);
+    }
+    (t, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturation_tracks_pool_rate() {
+        let (_, points) = saturation_sweep(21);
+        for p in &points {
+            let ratio = p.aggregate_fps / p.ideal_rate;
+            assert!(
+                (ratio - 1.0).abs() < 0.12,
+                "m={}: σ {} vs Σμ {}",
+                p.devices,
+                p.aggregate_fps,
+                p.ideal_rate
+            );
+        }
+        // Monotone in pool size.
+        for w in points.windows(2) {
+            assert!(w[1].aggregate_fps > w[0].aggregate_fps);
+        }
+    }
+
+    #[test]
+    fn admission_relaxes_as_pool_grows() {
+        let (_, points) = scaling(22);
+        // Tiny pool rejects someone; big pool admits everyone at full rate.
+        assert!(points[0].rejected > 0, "{:?}", points[0]);
+        let last = points[points.len() - 1];
+        assert_eq!(last.rejected, 0, "{last:?}");
+        assert_eq!(last.degraded, 0, "{last:?}");
+        // Admitted count never shrinks as devices are added.
+        for w in points.windows(2) {
+            assert!(w[1].admitted >= w[0].admitted);
+        }
+    }
+}

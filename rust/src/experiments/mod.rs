@@ -14,5 +14,6 @@ pub mod links;
 pub mod lang;
 pub mod energy;
 pub mod dropping;
+pub mod fleet;
 
 pub use common::{online_map, saturated_fps, zero_drop_baseline, CellOutcome};

@@ -1,0 +1,462 @@
+//! Admission control for multi-stream serving.
+//!
+//! When the aggregate offered rate Σλₛ exceeds the pool capacity Σμᵢ,
+//! something has to give. The policy here computes each stream's
+//! **weighted max-min fair share** of detector throughput (progressive
+//! water-filling: no stream gets more than it asks for, unused capacity
+//! is redistributed, and every unsatisfied stream ends with the same
+//! normalised share `shareₛ / wₛ`), then maps the candidate's share to a
+//! decision:
+//!
+//! * share ≥ demand   → [`Decision::Admit`] (full rate),
+//! * share ≥ min_rate → [`Decision::Degrade`] — the stream is admitted
+//!   but must subsample its input, keeping every `stride`-th frame so its
+//!   effective demand fits its share,
+//! * otherwise        → [`Decision::Reject`].
+//!
+//! On every stream attach ([`AdmissionPolicy::rebalance`]) and on every
+//! device attach/detach ([`AdmissionPolicy::relevel`]) the fair shares
+//! of **all** active streams are re-levelled: running streams may be
+//! throttled further or restored to full rate, but are never evicted —
+//! only a joining candidate can be rejected (and a rejected stream is
+//! never revived). This keeps the admitted effective load Σ λₛ/strideₛ
+//! at or below the target capacity as streams arrive and the pool
+//! grows or shrinks, which is what bounds admitted streams' output
+//! latency under overload.
+
+/// Whether the policy actually gates streams or waves everything in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Apply the share thresholds below.
+    Enforce,
+    /// Admit every stream at full rate (overload shows up as frame drops).
+    AdmitAll,
+}
+
+/// Admission policy parameters.
+#[derive(Debug, Clone)]
+pub struct AdmissionPolicy {
+    /// Fraction of the pool rate Σμᵢ the admitted load may claim
+    /// (headroom below 1.0 absorbs service-time jitter).
+    pub target_utilization: f64,
+    /// Streams whose fair share falls below this rate (FPS) are rejected
+    /// rather than degraded into uselessness.
+    pub min_rate: f64,
+    pub mode: AdmissionMode,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy {
+            target_utilization: 0.95,
+            min_rate: 1.0,
+            mode: AdmissionMode::Enforce,
+        }
+    }
+}
+
+impl AdmissionPolicy {
+    /// Policy that admits everything (baseline / capacity measurement).
+    pub fn admit_all() -> AdmissionPolicy {
+        AdmissionPolicy {
+            mode: AdmissionMode::AdmitAll,
+            ..AdmissionPolicy::default()
+        }
+    }
+
+    /// Decide the candidate's fate against a static snapshot (convenience
+    /// wrapper over [`AdmissionPolicy::rebalance`]). `pool_rate` is the
+    /// attached Σμᵢ; `admitted` holds the currently admitted streams'
+    /// `(demand λ, weight)` pairs; `candidate` is the joining stream's.
+    pub fn decide(&self, pool_rate: f64, admitted: &[(f64, f64)], candidate: (f64, f64)) -> Decision {
+        let mut members: Vec<(f64, f64)> = admitted.to_vec();
+        members.push(candidate);
+        let levels = self.rebalance(pool_rate, &members);
+        levels[levels.len() - 1]
+    }
+
+    /// Re-level every member's decision. `members` lists `(demand λ,
+    /// weight)` pairs for the currently active admitted streams, with the
+    /// **joining candidate last**. Running streams are throttled to their
+    /// fresh fair share (never rejected); only the candidate may be
+    /// rejected, in which case the survivors are levelled without it.
+    pub fn rebalance(&self, pool_rate: f64, members: &[(f64, f64)]) -> Vec<Decision> {
+        if self.mode == AdmissionMode::AdmitAll {
+            return members
+                .iter()
+                .map(|&(d, _)| Decision::Admit { share: d })
+                .collect();
+        }
+        let n = members.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let capacity = (pool_rate * self.target_utilization).max(0.0);
+        let demands: Vec<f64> = members.iter().map(|&(d, _)| d).collect();
+        let weights: Vec<f64> = members.iter().map(|&(_, w)| w).collect();
+        let shares = weighted_max_min_shares(capacity, &demands, &weights);
+
+        let cand_share = shares[n - 1];
+        let cand_demand = demands[n - 1];
+        let candidate = if cand_share + 1e-9 >= cand_demand {
+            Decision::Admit { share: cand_share }
+        } else if cand_share >= self.min_rate {
+            Decision::Degrade {
+                stride: stride_for(cand_demand, cand_share),
+                share: cand_share,
+            }
+        } else {
+            Decision::Reject
+        };
+
+        let mut out = Vec::with_capacity(n);
+        if matches!(candidate, Decision::Reject) {
+            // The candidate never joins, so the survivors keep the water
+            // level computed without it.
+            let shares2 =
+                weighted_max_min_shares(capacity, &demands[..n - 1], &weights[..n - 1]);
+            for i in 0..n - 1 {
+                out.push(throttled(shares2[i], demands[i]));
+            }
+        } else {
+            for i in 0..n - 1 {
+                out.push(throttled(shares[i], demands[i]));
+            }
+        }
+        out.push(candidate);
+        out
+    }
+
+    /// Re-level all active members with **no candidate** — applied after
+    /// pool capacity changes (device attach/detach). Nobody is rejected:
+    /// shrinking capacity throttles running streams harder; growing
+    /// capacity restores throttled streams toward full rate.
+    pub fn relevel(&self, pool_rate: f64, members: &[(f64, f64)]) -> Vec<Decision> {
+        if self.mode == AdmissionMode::AdmitAll {
+            return members
+                .iter()
+                .map(|&(d, _)| Decision::Admit { share: d })
+                .collect();
+        }
+        if members.is_empty() {
+            return Vec::new();
+        }
+        let capacity = (pool_rate * self.target_utilization).max(0.0);
+        let demands: Vec<f64> = members.iter().map(|&(d, _)| d).collect();
+        let weights: Vec<f64> = members.iter().map(|&(_, w)| w).collect();
+        let shares = weighted_max_min_shares(capacity, &demands, &weights);
+        demands
+            .iter()
+            .zip(&shares)
+            .map(|(&d, &s)| throttled(s, d))
+            .collect()
+    }
+}
+
+fn stride_for(demand: f64, share: f64) -> u64 {
+    (demand / share.max(1e-9)).ceil().max(1.0) as u64
+}
+
+/// Level for an already-running stream: full rate if its share covers the
+/// demand, otherwise throttled — even below `min_rate` (running streams
+/// are never evicted by a newcomer).
+fn throttled(share: f64, demand: f64) -> Decision {
+    if share + 1e-9 >= demand {
+        Decision::Admit { share }
+    } else {
+        Decision::Degrade {
+            stride: stride_for(demand, share),
+            share,
+        }
+    }
+}
+
+/// Outcome of admission for one stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Full-rate admission; `share` is the fair share backing it.
+    Admit { share: f64 },
+    /// Admitted at reduced rate: keep every `stride`-th frame.
+    Degrade { stride: u64, share: f64 },
+    /// Not admitted; every frame of the stream is dropped.
+    Reject,
+}
+
+impl Decision {
+    pub fn is_admitted(&self) -> bool {
+        !matches!(self, Decision::Reject)
+    }
+
+    /// Input subsampling stride implied by the decision (1 = keep all).
+    pub fn stride(&self) -> u64 {
+        match self {
+            Decision::Degrade { stride, .. } => (*stride).max(1),
+            _ => 1,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Decision::Admit { .. } => "admit".to_string(),
+            Decision::Degrade { stride, .. } => format!("degrade(1/{stride})"),
+            Decision::Reject => "reject".to_string(),
+        }
+    }
+}
+
+/// Weighted max-min fair allocation of `capacity` across streams with the
+/// given `demands` and (strictly positive) `weights`, by progressive
+/// water-filling. Guarantees (up to float tolerance):
+///
+/// 1. feasibility: Σ shareᵢ = min(Σ demandᵢ, capacity);
+/// 2. demand cap: shareᵢ ≤ demandᵢ;
+/// 3. if Σ demandᵢ ≤ capacity every stream gets exactly its demand;
+/// 4. bottleneck fairness: all streams left unsatisfied have equal
+///    normalised shares shareᵢ/wᵢ, no smaller than any satisfied
+///    stream's normalised share.
+pub fn weighted_max_min_shares(capacity: f64, demands: &[f64], weights: &[f64]) -> Vec<f64> {
+    assert_eq!(demands.len(), weights.len(), "one weight per demand");
+    assert!(
+        weights.iter().all(|&w| w > 0.0),
+        "weights must be strictly positive"
+    );
+    let n = demands.len();
+    let mut shares = vec![0.0f64; n];
+    if n == 0 || capacity <= 0.0 {
+        return shares;
+    }
+    let mut remaining = capacity;
+    loop {
+        let active: Vec<usize> = (0..n)
+            .filter(|&i| shares[i] < demands[i] - 1e-12)
+            .collect();
+        if active.is_empty() || remaining <= 1e-12 {
+            break;
+        }
+        let wsum: f64 = active.iter().map(|&i| weights[i]).sum();
+        let per_weight = remaining / wsum;
+        // Cap every stream whose residual demand fits inside its
+        // proportional slice of this round; redistribute what they
+        // declined in the next round.
+        let mut capped_any = false;
+        for &i in &active {
+            let slice = per_weight * weights[i];
+            let need = demands[i] - shares[i];
+            if need <= slice + 1e-12 {
+                shares[i] = demands[i];
+                remaining -= need;
+                capped_any = true;
+            }
+        }
+        if !capped_any {
+            // Everyone still wants more than their slice: hand out the
+            // slices and the water level is final.
+            for &i in &active {
+                shares[i] += per_weight * weights[i];
+            }
+            break;
+        }
+    }
+    shares
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn under_capacity_everyone_satisfied() {
+        let s = weighted_max_min_shares(100.0, &[10.0, 20.0, 5.0], &[1.0, 1.0, 1.0]);
+        assert_eq!(s, vec![10.0, 20.0, 5.0]);
+    }
+
+    #[test]
+    fn equal_weights_split_evenly_under_saturation() {
+        let s = weighted_max_min_shares(12.0, &[100.0, 100.0, 100.0], &[1.0, 1.0, 1.0]);
+        for x in &s {
+            assert!((x - 4.0).abs() < 1e-9, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn weights_bias_the_split() {
+        let s = weighted_max_min_shares(12.0, &[100.0, 100.0], &[3.0, 1.0]);
+        assert!((s[0] - 9.0).abs() < 1e-9, "{s:?}");
+        assert!((s[1] - 3.0).abs() < 1e-9, "{s:?}");
+    }
+
+    #[test]
+    fn small_demand_releases_capacity_to_others() {
+        // Stream 0 only wants 1; the rest of the 12 goes to stream 1.
+        let s = weighted_max_min_shares(12.0, &[1.0, 100.0], &[1.0, 1.0]);
+        assert!((s[0] - 1.0).abs() < 1e-9, "{s:?}");
+        assert!((s[1] - 11.0).abs() < 1e-9, "{s:?}");
+    }
+
+    #[test]
+    fn empty_and_zero_capacity() {
+        assert!(weighted_max_min_shares(10.0, &[], &[]).is_empty());
+        let s = weighted_max_min_shares(0.0, &[5.0, 5.0], &[1.0, 1.0]);
+        assert_eq!(s, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_feasible_capped_and_work_conserving() {
+        check("max-min shares feasible", Config::default(), |rng| {
+            let n = rng.int_in(1, 10) as usize;
+            let capacity = rng.range(0.0, 50.0);
+            let demands: Vec<f64> = (0..n).map(|_| rng.range(0.0, 20.0)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.range(0.1, 5.0)).collect();
+            let shares = weighted_max_min_shares(capacity, &demands, &weights);
+            let total: f64 = shares.iter().sum();
+            let demand_total: f64 = demands.iter().sum();
+            if total > capacity + 1e-6 {
+                return Err(format!("overcommitted: {total} > {capacity}"));
+            }
+            let expected = demand_total.min(capacity);
+            if (total - expected).abs() > 1e-6 {
+                return Err(format!(
+                    "not work-conserving: allocated {total}, expected {expected}"
+                ));
+            }
+            for (i, (&s, &d)) in shares.iter().zip(&demands).enumerate() {
+                if s > d + 1e-9 {
+                    return Err(format!("stream {i} got {s} > demand {d}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bottleneck_streams_have_equal_normalised_shares() {
+        check("max-min bottleneck fairness", Config::default(), |rng| {
+            let n = rng.int_in(2, 8) as usize;
+            let capacity = rng.range(1.0, 20.0);
+            let demands: Vec<f64> = (0..n).map(|_| rng.range(0.5, 15.0)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.range(0.2, 4.0)).collect();
+            let shares = weighted_max_min_shares(capacity, &demands, &weights);
+            let unsatisfied: Vec<usize> = (0..n)
+                .filter(|&i| shares[i] < demands[i] - 1e-6)
+                .collect();
+            // All unsatisfied streams share one normalised water level...
+            for w in unsatisfied.windows(2) {
+                let a = shares[w[0]] / weights[w[0]];
+                let b = shares[w[1]] / weights[w[1]];
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("unequal levels {a} vs {b}"));
+                }
+            }
+            // ...and no satisfied stream sits above it.
+            if let Some(&u) = unsatisfied.first() {
+                let level = shares[u] / weights[u];
+                for i in 0..n {
+                    if shares[i] >= demands[i] - 1e-6
+                        && shares[i] / weights[i] > level + 1e-6
+                    {
+                        return Err(format!(
+                            "satisfied stream {i} above the water level"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decide_admits_with_headroom() {
+        let p = AdmissionPolicy::default();
+        match p.decide(20.0, &[], (5.0, 1.0)) {
+            Decision::Admit { share } => assert!(share >= 5.0 - 1e-9),
+            other => panic!("expected admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decide_degrades_under_contention() {
+        let p = AdmissionPolicy::default();
+        // Capacity 9.5, three equal streams of 5: share ≈ 3.17 each.
+        let d = p.decide(10.0, &[(5.0, 1.0), (5.0, 1.0)], (5.0, 1.0));
+        match d {
+            Decision::Degrade { stride, share } => {
+                assert_eq!(stride, 2, "{d:?}");
+                assert!(share > 3.0 && share < 3.3, "{d:?}");
+            }
+            other => panic!("expected degrade, got {other:?}"),
+        }
+        assert!(d.is_admitted());
+        assert_eq!(d.stride(), 2);
+    }
+
+    #[test]
+    fn decide_rejects_below_min_rate() {
+        let p = AdmissionPolicy::default();
+        let admitted: Vec<(f64, f64)> = (0..9).map(|_| (5.0, 1.0)).collect();
+        // Capacity 9.5 over 10 claimants: share 0.95 < min_rate 1.0.
+        let d = p.decide(10.0, &admitted, (5.0, 1.0));
+        assert_eq!(d, Decision::Reject);
+        assert!(!d.is_admitted());
+    }
+
+    #[test]
+    fn rebalance_throttles_running_streams_but_never_evicts() {
+        let p = AdmissionPolicy::default();
+        // Capacity 9.5: four 5-FPS members -> everyone levels to 2.375.
+        let members = [(5.0, 1.0); 4];
+        let levels = p.rebalance(10.0, &members);
+        assert_eq!(levels.len(), 4);
+        for d in &levels[..3] {
+            match d {
+                Decision::Degrade { stride, share } => {
+                    assert_eq!(*stride, 3, "{d:?}");
+                    assert!((share - 2.375).abs() < 1e-9);
+                }
+                other => panic!("running stream evicted or admitted: {other:?}"),
+            }
+        }
+        // Admitted effective load fits the capacity.
+        let effective: f64 = members
+            .iter()
+            .zip(&levels)
+            .filter(|(_, d)| d.is_admitted())
+            .map(|(&(demand, _), d)| demand / d.stride() as f64)
+            .sum();
+        assert!(effective <= 9.5 + 1e-9, "effective {effective}");
+    }
+
+    #[test]
+    fn rebalance_rejected_candidate_leaves_survivors_at_old_level() {
+        let p = AdmissionPolicy::default();
+        // Nine members exhaust capacity 9.5 at share ~1.06 each; the
+        // tenth pushes shares to 0.95 < min_rate and is rejected, so the
+        // nine keep the 9-way level.
+        let mut members = vec![(5.0, 1.0); 9];
+        members.push((5.0, 1.0));
+        let levels = p.rebalance(10.0, &members);
+        assert_eq!(levels[9], Decision::Reject);
+        for d in &levels[..9] {
+            match d {
+                Decision::Degrade { share, .. } => {
+                    assert!((share - 9.5 / 9.0).abs() < 1e-9, "{d:?}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn admit_all_never_gates() {
+        let p = AdmissionPolicy::admit_all();
+        let d = p.decide(0.0, &[(100.0, 1.0)], (50.0, 1.0));
+        assert!(matches!(d, Decision::Admit { .. }));
+    }
+
+    #[test]
+    fn decision_labels() {
+        assert_eq!(Decision::Admit { share: 5.0 }.label(), "admit");
+        assert_eq!(Decision::Degrade { stride: 3, share: 1.0 }.label(), "degrade(1/3)");
+        assert_eq!(Decision::Reject.label(), "reject");
+    }
+}

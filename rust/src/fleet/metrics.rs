@@ -1,0 +1,288 @@
+//! Fleet-level metrics: per-stream reports (wrapping the single-run
+//! [`RunMetrics`]) plus aggregates across streams and devices — total
+//! detection throughput, drop rates, device utilisation, and Jain's
+//! fairness index over per-stream weighted throughput.
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::device::energy::EnergyMeter;
+use crate::device::DeviceKind;
+use crate::fleet::admission::Decision;
+use crate::types::{OutputRecord, Seconds};
+use crate::util::stats::Percentiles;
+use crate::util::table::{f, Table};
+
+/// Raw per-stream accumulators handed to [`finish_stream`] by an engine
+/// (virtual-time or wall-clock) at the end of a run.
+pub struct StreamAccum {
+    pub id: usize,
+    pub name: String,
+    pub weight: f64,
+    pub decision: Decision,
+    pub records: Vec<OutputRecord>,
+    pub latency: Percentiles,
+    pub device_busy: Vec<Seconds>,
+    pub device_frames: Vec<u64>,
+    /// Stream-local elapsed time (attach → last resolution).
+    pub makespan: Seconds,
+    pub stream_duration: Seconds,
+    /// Reorder-buffer high-water mark (`Synchronizer::max_pending`).
+    pub max_reorder_depth: usize,
+}
+
+/// Final per-stream result.
+pub struct StreamReport {
+    pub id: usize,
+    pub name: String,
+    pub weight: f64,
+    pub decision: Decision,
+    pub records: Vec<OutputRecord>,
+    pub metrics: RunMetrics,
+}
+
+/// Convert accumulators into a [`StreamReport`]. `kinds` is the pool's
+/// device-kind vector (for per-stream energy attribution).
+pub fn finish_stream(acc: StreamAccum, kinds: &[DeviceKind]) -> StreamReport {
+    let frames_total = acc.records.len() as u64;
+    let frames_processed = acc.records.iter().filter(|r| !r.was_dropped()).count() as u64;
+    let mut energy = EnergyMeter::new(kinds);
+    for (dev, &busy) in acc.device_busy.iter().enumerate().take(kinds.len()) {
+        energy.record_busy(dev, busy);
+    }
+    let metrics = RunMetrics {
+        frames_total,
+        frames_processed,
+        frames_dropped: frames_total - frames_processed,
+        makespan: acc.makespan.max(1e-12),
+        stream_duration: acc.stream_duration,
+        device_busy: acc.device_busy,
+        device_frames: acc.device_frames,
+        latency: acc.latency,
+        max_reorder_depth: acc.max_reorder_depth,
+        energy,
+    };
+    StreamReport {
+        id: acc.id,
+        name: acc.name,
+        weight: acc.weight,
+        decision: acc.decision,
+        records: acc.records,
+        metrics,
+    }
+}
+
+/// Aggregates for one whole fleet run.
+pub struct FleetReport {
+    pub streams: Vec<StreamReport>,
+    /// Fleet time from start to last fate resolution.
+    pub makespan: Seconds,
+    /// Per-device busy seconds / processed frames (pool slot order).
+    pub device_busy: Vec<Seconds>,
+    pub device_frames: Vec<u64>,
+    pub device_labels: Vec<String>,
+}
+
+impl FleetReport {
+    pub fn total_frames(&self) -> u64 {
+        self.streams.iter().map(|s| s.metrics.frames_total).sum()
+    }
+
+    pub fn total_processed(&self) -> u64 {
+        self.streams.iter().map(|s| s.metrics.frames_processed).sum()
+    }
+
+    /// Aggregate detection throughput over the fleet makespan.
+    pub fn aggregate_fps(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.total_processed() as f64 / self.makespan
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        let total = self.total_frames();
+        if total == 0 {
+            return 0.0;
+        }
+        (total - self.total_processed()) as f64 / total as f64
+    }
+
+    /// Utilisation of pool device `dev` over the makespan.
+    pub fn utilization(&self, dev: usize) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        (self.device_busy[dev] / self.makespan).min(1.0)
+    }
+
+    /// Jain fairness index over admitted streams' weight-normalised
+    /// processing throughput σₛ/wₛ (1.0 = perfectly weighted-fair).
+    pub fn fairness(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .streams
+            .iter()
+            .filter(|s| s.decision.is_admitted())
+            .map(|s| s.metrics.processing_fps() / s.weight.max(1e-9))
+            .collect();
+        jain_index(&xs)
+    }
+
+    /// One-line fleet summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} streams ({} admitted), {}/{} frames processed ({:.1}% dropped), \
+             aggregate σ={:.2} FPS over {:.1}s, Jain fairness {:.3}",
+            self.streams.len(),
+            self.streams.iter().filter(|s| s.decision.is_admitted()).count(),
+            self.total_processed(),
+            self.total_frames(),
+            self.drop_rate() * 100.0,
+            self.aggregate_fps(),
+            self.makespan,
+            self.fairness(),
+        )
+    }
+
+    /// Per-stream table (mutable: percentile queries sort lazily).
+    pub fn stream_table(&mut self) -> Table {
+        let mut t = Table::new(
+            "Per-stream results",
+            &[
+                "stream", "λ (FPS)", "weight", "decision", "frames", "processed",
+                "drop %", "σ (FPS)", "p50 (ms)", "p99 (ms)",
+            ],
+        );
+        for s in self.streams.iter_mut() {
+            let fps_in = if s.metrics.stream_duration > 0.0 {
+                s.metrics.frames_total as f64 / s.metrics.stream_duration
+            } else {
+                0.0
+            };
+            t.row(vec![
+                s.name.clone(),
+                f(fps_in, 1),
+                f(s.weight, 1),
+                s.decision.label(),
+                format!("{}", s.metrics.frames_total),
+                format!("{}", s.metrics.frames_processed),
+                f(s.metrics.drop_rate() * 100.0, 1),
+                f(s.metrics.processing_fps(), 2),
+                f(s.metrics.latency.p50() * 1e3, 0),
+                f(s.metrics.latency.p99() * 1e3, 0),
+            ]);
+        }
+        t
+    }
+
+    /// Per-device table.
+    pub fn device_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-device results",
+            &["device", "frames", "busy (s)", "utilisation %"],
+        );
+        for (i, label) in self.device_labels.iter().enumerate() {
+            t.row(vec![
+                label.clone(),
+                format!("{}", self.device_frames[i]),
+                f(self.device_busy[i], 1),
+                f(self.utilization(i) * 100.0, 1),
+            ]);
+        }
+        t
+    }
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)`: 1.0 when all `x` are equal,
+/// approaching `1/n` as one stream monopolises. Empty or all-zero input
+/// reports 1.0 (nothing is being treated unfairly).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    if sumsq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sumsq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_bounds() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // One hog out of four: index -> 1/4.
+        let skew = jain_index(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12);
+        // Mild imbalance sits in between.
+        let mid = jain_index(&[2.0, 1.0]);
+        assert!(mid > 0.25 && mid < 1.0);
+    }
+
+    fn accum(id: usize, records: Vec<OutputRecord>) -> StreamAccum {
+        StreamAccum {
+            id,
+            name: format!("s{id}"),
+            weight: 1.0,
+            decision: Decision::Admit { share: 5.0 },
+            records,
+            latency: Percentiles::new(),
+            device_busy: vec![2.0, 0.0],
+            device_frames: vec![5, 0],
+            makespan: 10.0,
+            stream_duration: 10.0,
+            max_reorder_depth: 0,
+        }
+    }
+
+    fn rec(fid: u64, dropped: bool) -> OutputRecord {
+        OutputRecord {
+            frame_id: fid,
+            capture_ts: fid as f64,
+            emit_ts: fid as f64 + 0.1,
+            detections: vec![],
+            stale_from: if dropped { Some(fid) } else { None },
+            processed_by: if dropped { None } else { Some(0) },
+        }
+    }
+
+    #[test]
+    fn finish_stream_counts_fates() {
+        let records = vec![rec(0, false), rec(1, true), rec(2, false)];
+        let report = finish_stream(accum(0, records), &[DeviceKind::Ncs2, DeviceKind::Ncs2]);
+        assert_eq!(report.metrics.frames_total, 3);
+        assert_eq!(report.metrics.frames_processed, 2);
+        assert_eq!(report.metrics.frames_dropped, 1);
+        assert!((report.metrics.processing_fps() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_report_aggregates() {
+        let kinds = [DeviceKind::Ncs2, DeviceKind::Ncs2];
+        let a = finish_stream(accum(0, vec![rec(0, false), rec(1, false)]), &kinds);
+        let b = finish_stream(accum(1, vec![rec(0, false), rec(1, true)]), &kinds);
+        let mut report = FleetReport {
+            streams: vec![a, b],
+            makespan: 10.0,
+            device_busy: vec![4.0],
+            device_frames: vec![3],
+            device_labels: vec!["dev0".to_string()],
+        };
+        assert_eq!(report.total_frames(), 4);
+        assert_eq!(report.total_processed(), 3);
+        assert!((report.aggregate_fps() - 0.3).abs() < 1e-9);
+        assert!((report.drop_rate() - 0.25).abs() < 1e-9);
+        assert!((report.utilization(0) - 0.4).abs() < 1e-9);
+        let fairness = report.fairness();
+        assert!(fairness > 0.5 && fairness <= 1.0, "{fairness}");
+        let summary = report.summary();
+        assert!(summary.contains("3/4"), "{summary}");
+        // Tables render without panicking and with one row per entity.
+        assert_eq!(report.stream_table().rows.len(), 2);
+        assert_eq!(report.device_table().rows.len(), 1);
+    }
+}

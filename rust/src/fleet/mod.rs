@@ -1,0 +1,42 @@
+//! Multi-stream serving over a shared heterogeneous device pool.
+//!
+//! The paper parallelises detection for *one* video stream; this
+//! subsystem serves **many concurrent streams** from one pool of
+//! detector replicas — the regime where runtime adaptation and
+//! deployment search actually matter at the edge. Core pieces:
+//!
+//! * [`stream`] — per-stream state: paced source, bounded freshness
+//!   window, its own sequence synchronizer, per-stream run metrics.
+//! * [`pool`] — the shared device pool: work-conserving dispatch,
+//!   per-device accounting, mid-run attach/detach.
+//! * [`admission`] — admit / degrade / reject when Σλₛ exceeds Σμᵢ,
+//!   with weighted max-min fair sharing of detector throughput.
+//! * [`registry`] — membership control plane (dynamic stream/device
+//!   attach & detach) plus the weighted start-time-fair dispatcher.
+//! * [`metrics`] — fleet aggregates: per-stream σ and latency
+//!   percentiles, drop rates, device utilisation, Jain fairness index.
+//! * [`sim`] — virtual-time engine (DES-backed, milliseconds per run):
+//!   timing, fairness and elasticity studies at any scale.
+//! * [`serve`] — wall-clock engine (thread-backed, real detectors):
+//!   the live multi-stream serving pipeline.
+//!
+//! Invariants shared with the single-stream pipeline: every frame that
+//! enters a stream gets exactly one output record, in frame order, with
+//! dropped frames carrying stale detections; dispatch is work-conserving,
+//! so saturated aggregate throughput approaches Σμᵢ.
+
+pub mod admission;
+pub mod metrics;
+pub mod pool;
+pub mod registry;
+pub mod serve;
+pub mod sim;
+pub mod stream;
+
+pub use admission::{AdmissionMode, AdmissionPolicy, Decision};
+pub use metrics::{jain_index, FleetReport, StreamReport};
+pub use pool::{DevicePool, Job};
+pub use registry::{ControlAction, ControlEvent, FleetRegistry};
+pub use serve::{serve_fleet, FleetServeConfig};
+pub use sim::{run_fleet, Scenario};
+pub use stream::{StreamId, StreamSpec};

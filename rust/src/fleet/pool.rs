@@ -1,0 +1,232 @@
+//! The shared heterogeneous device pool.
+//!
+//! Where the single-stream engine owns a [`crate::device::Fleet`] whose
+//! replicas serve one clip, the pool serves *jobs* — `(stream, frame)`
+//! pairs — from however many streams are attached. Dispatch is
+//! **work-conserving**: a device is handed a job the moment it is idle
+//! and any admitted stream has backlog, so under saturation aggregate
+//! throughput approaches Σμᵢ regardless of how load is spread across
+//! streams (cross-stream fairness is the dispatcher's job, see
+//! [`crate::fleet::registry::FleetRegistry::pick_stream`]).
+//!
+//! Devices can be attached and detached mid-run: a detached device
+//! finishes its in-flight job but is never handed another.
+
+use crate::device::{DeviceInstance, DeviceKind};
+use crate::fleet::stream::StreamId;
+use crate::types::FrameId;
+use crate::util::Rng;
+
+/// One `(stream, frame)` unit of work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    pub stream: StreamId,
+    pub fid: FrameId,
+}
+
+/// A pool member: a device instance plus its in-flight bookkeeping.
+#[derive(Debug)]
+pub struct PoolDevice {
+    pub instance: DeviceInstance,
+    /// Detached devices drain their current job and then idle forever.
+    pub attached: bool,
+    current: Option<Job>,
+    pending_service: f64,
+    pub busy_seconds: f64,
+    pub frames_done: u64,
+}
+
+impl PoolDevice {
+    fn new(instance: DeviceInstance) -> PoolDevice {
+        PoolDevice {
+            instance,
+            attached: true,
+            current: None,
+            pending_service: 0.0,
+            busy_seconds: 0.0,
+            frames_done: 0,
+        }
+    }
+
+    /// Ready to accept a job.
+    pub fn idle(&self) -> bool {
+        self.attached && self.current.is_none()
+    }
+
+    pub fn current(&self) -> Option<Job> {
+        self.current
+    }
+}
+
+/// The shared pool: devices + dispatch bookkeeping.
+#[derive(Debug)]
+pub struct DevicePool {
+    devices: Vec<PoolDevice>,
+}
+
+impl DevicePool {
+    pub fn new(instances: Vec<DeviceInstance>) -> DevicePool {
+        DevicePool {
+            devices: instances.into_iter().map(PoolDevice::new).collect(),
+        }
+    }
+
+    /// Total devices ever attached (detached ones keep their slot so
+    /// device ids stay stable).
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn devices(&self) -> &[PoolDevice] {
+        &self.devices
+    }
+
+    /// Attach a new device; returns its stable id.
+    pub fn attach(&mut self, instance: DeviceInstance) -> usize {
+        self.devices.push(PoolDevice::new(instance));
+        self.devices.len() - 1
+    }
+
+    /// Detach device `dev`: it completes any in-flight job, then idles.
+    pub fn detach(&mut self, dev: usize) {
+        self.devices[dev].attached = false;
+    }
+
+    /// Aggregate rate Σμᵢ over *attached* devices (admission capacity).
+    pub fn attached_rate(&self) -> f64 {
+        self.devices
+            .iter()
+            .filter(|d| d.attached)
+            .map(|d| d.instance.rate())
+            .sum()
+    }
+
+    /// Lowest-indexed idle attached device, if any.
+    pub fn next_idle(&self) -> Option<usize> {
+        self.devices.iter().position(|d| d.idle())
+    }
+
+    /// Start `job` on `dev`; returns the sampled service time in seconds.
+    pub fn start(&mut self, dev: usize, job: Job, rng: &mut Rng) -> f64 {
+        let d = &mut self.devices[dev];
+        assert!(d.idle(), "start on non-idle device {dev}");
+        let t = d.instance.sample_service_time(rng);
+        d.current = Some(job);
+        d.pending_service = t;
+        t
+    }
+
+    /// Complete `dev`'s in-flight job; returns `(job, service_seconds)`.
+    pub fn complete(&mut self, dev: usize) -> (Job, f64) {
+        let d = &mut self.devices[dev];
+        let job = d.current.take().expect("complete on idle device");
+        d.busy_seconds += d.pending_service;
+        d.frames_done += 1;
+        (job, d.pending_service)
+    }
+
+    /// Device kinds in slot order (energy accounting).
+    pub fn kinds(&self) -> Vec<DeviceKind> {
+        self.devices.iter().map(|d| d.instance.kind).collect()
+    }
+
+    /// Human labels in slot order.
+    pub fn labels(&self) -> Vec<String> {
+        self.devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                format!(
+                    "{}#{i} ({:.1} FPS{})",
+                    d.instance.kind.label(),
+                    d.instance.rate(),
+                    if d.attached { "" } else { ", detached" }
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DetectorModelId;
+
+    fn pool(rates: &[f64]) -> DevicePool {
+        DevicePool::new(
+            rates
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| {
+                    DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r)
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn start_complete_accounting() {
+        let mut p = pool(&[2.5, 13.5]);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.next_idle(), Some(0));
+        let t = p.start(0, Job { stream: 3, fid: 7 }, &mut rng);
+        assert!(t > 0.0);
+        assert_eq!(p.next_idle(), Some(1));
+        assert_eq!(p.devices()[0].current(), Some(Job { stream: 3, fid: 7 }));
+        let (job, service) = p.complete(0);
+        assert_eq!(job, Job { stream: 3, fid: 7 });
+        assert!((service - t).abs() < 1e-12);
+        assert_eq!(p.devices()[0].frames_done, 1);
+        assert!((p.devices()[0].busy_seconds - t).abs() < 1e-12);
+        assert_eq!(p.next_idle(), Some(0));
+    }
+
+    #[test]
+    fn detached_devices_are_skipped() {
+        let mut p = pool(&[2.5, 2.5]);
+        p.detach(0);
+        assert_eq!(p.next_idle(), Some(1));
+        assert!((p.attached_rate() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detach_mid_service_drains_then_idles() {
+        let mut p = pool(&[2.5]);
+        let mut rng = Rng::new(2);
+        p.start(0, Job { stream: 0, fid: 0 }, &mut rng);
+        p.detach(0);
+        // Still completes its job...
+        let (job, _) = p.complete(0);
+        assert_eq!(job.fid, 0);
+        // ...but never becomes idle again.
+        assert_eq!(p.next_idle(), None);
+    }
+
+    #[test]
+    fn attach_returns_stable_ids() {
+        let mut p = pool(&[2.5]);
+        let id = p.attach(DeviceInstance::with_rate(
+            DeviceKind::FastCpu,
+            DetectorModelId::Yolov3,
+            1,
+            13.5,
+        ));
+        assert_eq!(id, 1);
+        assert_eq!(p.len(), 2);
+        assert!((p.attached_rate() - 16.0).abs() < 1e-12);
+        assert_eq!(p.labels().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-idle")]
+    fn double_start_panics() {
+        let mut p = pool(&[2.5]);
+        let mut rng = Rng::new(3);
+        p.start(0, Job { stream: 0, fid: 0 }, &mut rng);
+        p.start(0, Job { stream: 0, fid: 1 }, &mut rng);
+    }
+}

@@ -1,0 +1,312 @@
+//! The fleet control plane: stream/device membership and the
+//! cross-stream dispatcher.
+//!
+//! [`FleetRegistry`] owns the [`DevicePool`] and every [`StreamState`];
+//! streams and devices attach and detach dynamically mid-run. Admission
+//! shares are re-levelled on every membership change — stream attach,
+//! device attach, device detach — against the pool's current Σμᵢ
+//! (see [`crate::fleet::admission`]).
+//!
+//! Dispatch order across streams is start-time-fair queueing: every
+//! stream carries a virtual time bumped by `1/weight` per dispatched
+//! frame, and [`FleetRegistry::pick_stream`] serves the backlogged stream
+//! with the smallest virtual time. Under contention this gives each
+//! stream a share of dispatch slots proportional to its weight while
+//! staying work-conserving (any backlog anywhere keeps every idle device
+//! busy).
+
+use crate::device::DeviceInstance;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::pool::DevicePool;
+use crate::fleet::stream::{StreamId, StreamSpec, StreamState};
+use crate::types::FrameId;
+
+/// A timed control-plane action (scripted scenarios, see
+/// [`crate::fleet::sim::Scenario`]).
+#[derive(Debug, Clone)]
+pub enum ControlAction {
+    AttachStream(StreamSpec),
+    DetachStream(StreamId),
+    AttachDevice(DeviceInstance),
+    DetachDevice(usize),
+}
+
+/// `action` applied at fleet time `at`.
+#[derive(Debug, Clone)]
+pub struct ControlEvent {
+    pub at: f64,
+    pub action: ControlAction,
+}
+
+/// Membership + dispatch state for one fleet run.
+pub struct FleetRegistry {
+    pub pool: DevicePool,
+    pub streams: Vec<StreamState>,
+    pub admission: AdmissionPolicy,
+}
+
+impl FleetRegistry {
+    pub fn new(devices: Vec<DeviceInstance>, admission: AdmissionPolicy) -> FleetRegistry {
+        FleetRegistry {
+            pool: DevicePool::new(devices),
+            streams: Vec::new(),
+            admission,
+        }
+    }
+
+    /// Run admission for `spec` and attach it at fleet time `now`,
+    /// re-levelling every active stream's share in the process (running
+    /// streams may be throttled or restored, never evicted; see
+    /// [`crate::fleet::admission::AdmissionPolicy::rebalance`]). Returns
+    /// the new stream's id; its decision is in
+    /// `self.streams[id].decision`.
+    pub fn attach_stream(&mut self, spec: StreamSpec, now: f64) -> StreamId {
+        let active: Vec<StreamId> = self
+            .streams
+            .iter()
+            .filter(|s| !s.detached && s.decision.is_admitted())
+            .map(|s| s.id)
+            .collect();
+        let mut members: Vec<(f64, f64)> = active
+            .iter()
+            .map(|&sid| (self.streams[sid].spec.demand(), self.streams[sid].spec.weight))
+            .collect();
+        members.push((spec.demand(), spec.weight));
+        let levels = self
+            .admission
+            .rebalance(self.pool.attached_rate(), &members);
+        for (k, &sid) in active.iter().enumerate() {
+            self.streams[sid].decision = levels[k];
+        }
+        let decision = levels[levels.len() - 1];
+        // Start-time-fair queueing: a joining stream's virtual time starts
+        // at the current service level (min over active streams), not 0 —
+        // otherwise a late joiner would monopolise dispatch until it
+        // "caught up" with streams that have run for minutes.
+        let base_vtime = self
+            .streams
+            .iter()
+            .filter(|s| !s.detached && s.decision.is_admitted())
+            .map(|s| s.vtime)
+            .fold(f64::INFINITY, f64::min);
+        let id = self.streams.len();
+        let mut state = StreamState::new(id, spec, decision, now, self.pool.len());
+        if base_vtime.is_finite() {
+            state.vtime = base_vtime;
+        }
+        self.streams.push(state);
+        id
+    }
+
+    /// Detach stream `id`; returns the frames still in its window so the
+    /// engine can resolve them as dropped.
+    pub fn detach_stream(&mut self, id: StreamId) -> Vec<FrameId> {
+        let s = &mut self.streams[id];
+        s.detached = true;
+        s.window.drain_remaining()
+    }
+
+    /// Attach a device mid-run, growing every stream's per-device
+    /// accumulators and re-levelling admission against the larger
+    /// capacity (degraded streams may be restored toward full rate).
+    /// Returns the device id.
+    pub fn attach_device(&mut self, instance: DeviceInstance) -> usize {
+        let dev = self.pool.attach(instance);
+        let n = self.pool.len();
+        for s in self.streams.iter_mut() {
+            s.ensure_devices(n);
+        }
+        self.relevel_active();
+        dev
+    }
+
+    /// Detach a device and re-level admission against the shrunken
+    /// capacity (running streams are throttled harder, never evicted).
+    pub fn detach_device(&mut self, dev: usize) {
+        self.pool.detach(dev);
+        self.relevel_active();
+    }
+
+    /// Recompute every active stream's share after a capacity change.
+    fn relevel_active(&mut self) {
+        let active: Vec<StreamId> = self
+            .streams
+            .iter()
+            .filter(|s| !s.detached && s.decision.is_admitted())
+            .map(|s| s.id)
+            .collect();
+        if active.is_empty() {
+            return;
+        }
+        let members: Vec<(f64, f64)> = active
+            .iter()
+            .map(|&sid| (self.streams[sid].spec.demand(), self.streams[sid].spec.weight))
+            .collect();
+        let levels = self.admission.relevel(self.pool.attached_rate(), &members);
+        for (k, &sid) in active.iter().enumerate() {
+            self.streams[sid].decision = levels[k];
+        }
+    }
+
+    /// The backlogged stream with the smallest weighted virtual time
+    /// (ties break toward the lowest id).
+    pub fn pick_stream(&self) -> Option<StreamId> {
+        let mut best: Option<(f64, StreamId)> = None;
+        for s in &self.streams {
+            if !s.backlogged() {
+                continue;
+            }
+            if best.map_or(true, |(bv, _)| s.vtime < bv) {
+                best = Some((s.vtime, s.id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Any admitted stream with unclaimed frames?
+    pub fn has_backlog(&self) -> bool {
+        self.streams.iter().any(|s| s.backlogged())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DetectorModelId, DeviceKind};
+    use crate::fleet::admission::Decision;
+
+    fn devices(rates: &[f64]) -> Vec<DeviceInstance> {
+        rates
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| {
+                DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn admission_tightens_as_streams_attach() {
+        // Pool Σμ = 10, capacity 9.5; 5-FPS streams: the first is
+        // admitted outright, later ones degrade, eventually reject.
+        let mut reg = FleetRegistry::new(devices(&[2.5; 4]), AdmissionPolicy::default());
+        let first = reg.attach_stream(StreamSpec::new("a", 5.0, 100), 0.0);
+        assert!(matches!(reg.streams[first].decision, Decision::Admit { .. }));
+        let mut saw_degrade = false;
+        let mut saw_reject = false;
+        for i in 0..12 {
+            let id = reg.attach_stream(StreamSpec::new(&format!("s{i}"), 5.0, 100), 0.0);
+            match reg.streams[id].decision {
+                Decision::Degrade { .. } => saw_degrade = true,
+                Decision::Reject => saw_reject = true,
+                Decision::Admit { .. } => {}
+            }
+        }
+        assert!(saw_degrade, "expected degradation under contention");
+        assert!(saw_reject, "expected rejection under heavy overload");
+    }
+
+    #[test]
+    fn pick_stream_prefers_smallest_vtime() {
+        let mut reg = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::admit_all());
+        let a = reg.attach_stream(StreamSpec::new("a", 5.0, 10), 0.0);
+        let b = reg.attach_stream(StreamSpec::new("b", 5.0, 10), 0.0);
+        reg.streams[a].window.arrive(0);
+        reg.streams[b].window.arrive(0);
+        reg.streams[a].vtime = 2.0;
+        reg.streams[b].vtime = 1.0;
+        assert_eq!(reg.pick_stream(), Some(b));
+        // Ties break to the lowest id.
+        reg.streams[a].vtime = 1.0;
+        assert_eq!(reg.pick_stream(), Some(a));
+    }
+
+    #[test]
+    fn detach_stream_drains_window() {
+        let mut reg = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::admit_all());
+        let id = reg.attach_stream(StreamSpec::new("a", 5.0, 10).with_window(8), 0.0);
+        for f in 0..3 {
+            reg.streams[id].window.arrive(f);
+        }
+        let drained = reg.detach_stream(id);
+        assert_eq!(drained, vec![0, 1, 2]);
+        assert!(reg.streams[id].detached);
+        assert!(!reg.has_backlog());
+    }
+
+    #[test]
+    fn late_joiner_starts_at_current_service_level() {
+        let mut reg = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::admit_all());
+        let a = reg.attach_stream(StreamSpec::new("a", 5.0, 100), 0.0);
+        let b = reg.attach_stream(StreamSpec::new("b", 5.0, 100), 0.0);
+        // Simulate a long run: both streams have dispatched many frames.
+        reg.streams[a].vtime = 120.0;
+        reg.streams[b].vtime = 118.0;
+        let c = reg.attach_stream(StreamSpec::new("late", 5.0, 100), 30.0);
+        // The newcomer inherits the minimum active vtime instead of 0, so
+        // it cannot monopolise dispatch while "catching up".
+        assert!((reg.streams[c].vtime - 118.0).abs() < 1e-12);
+        // First-ever stream still starts at 0.
+        let mut fresh = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::admit_all());
+        let f = fresh.attach_stream(StreamSpec::new("f", 5.0, 100), 0.0);
+        assert_eq!(fresh.streams[f].vtime, 0.0);
+    }
+
+    #[test]
+    fn device_detach_tightens_and_attach_restores_admission() {
+        // Pool 5 × 2.5 (capacity 11.875): two 5-FPS streams fit at full
+        // rate.
+        let mut reg = FleetRegistry::new(devices(&[2.5; 5]), AdmissionPolicy::default());
+        let a = reg.attach_stream(StreamSpec::new("a", 5.0, 100), 0.0);
+        let b = reg.attach_stream(StreamSpec::new("b", 5.0, 100), 0.0);
+        assert!(matches!(reg.streams[a].decision, Decision::Admit { .. }));
+        assert!(matches!(reg.streams[b].decision, Decision::Admit { .. }));
+        // Losing two devices (capacity 7.125) must throttle both streams —
+        // shares 3.5625 → stride 2 — keeping effective load ≤ capacity.
+        reg.detach_device(3);
+        reg.detach_device(4);
+        for &sid in &[a, b] {
+            match reg.streams[sid].decision {
+                Decision::Degrade { stride, .. } => assert_eq!(stride, 2),
+                ref other => panic!("expected degrade after detach, got {other:?}"),
+            }
+        }
+        // Re-attaching capacity restores full-rate admission.
+        reg.attach_device(DeviceInstance::with_rate(
+            DeviceKind::Ncs2,
+            DetectorModelId::Yolov3,
+            5,
+            2.5,
+        ));
+        reg.attach_device(DeviceInstance::with_rate(
+            DeviceKind::Ncs2,
+            DetectorModelId::Yolov3,
+            6,
+            2.5,
+        ));
+        for &sid in &[a, b] {
+            assert!(
+                matches!(reg.streams[sid].decision, Decision::Admit { .. }),
+                "expected restore after attach, got {:?}",
+                reg.streams[sid].decision
+            );
+        }
+    }
+
+    #[test]
+    fn device_attach_grows_stream_accumulators_and_capacity() {
+        let mut reg = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::admit_all());
+        let id = reg.attach_stream(StreamSpec::new("a", 5.0, 10), 0.0);
+        assert_eq!(reg.streams[id].device_busy.len(), 1);
+        reg.attach_device(DeviceInstance::with_rate(
+            DeviceKind::FastCpu,
+            DetectorModelId::Yolov3,
+            1,
+            13.5,
+        ));
+        assert_eq!(reg.streams[id].device_busy.len(), 2);
+        assert!((reg.pool.attached_rate() - 16.0).abs() < 1e-12);
+        reg.detach_device(1);
+        assert!((reg.pool.attached_rate() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,517 @@
+//! Wall-clock fleet serving: many paced streams, one shared worker pool,
+//! real detectors — the multi-stream generalisation of
+//! [`crate::server::serve`], built from the same ingredients (bounded
+//! windows under a `Mutex` + `Condvar`, a collector channel, per-stream
+//! sequence synchronizers at assembly time).
+//!
+//! Topology (one process):
+//!
+//! ```text
+//!  ingest s0 (paces λ₀) ─┐
+//!  ingest s1 (paces λ₁) ─┼─► per-stream bounded windows ──┐
+//!  ...                   │     (weighted-fair pick)        │
+//!                        │              worker 0..n-1 ─────┴─► detect
+//!                        └── evictions ──► collector ◄── fates ┘
+//!                                              │ per-stream Synchronizer
+//!                                              ▼ FleetReport
+//! ```
+//!
+//! Admission decisions are taken up front from the configured nominal
+//! device rates (wall-clock capacity is whatever the detectors actually
+//! deliver; the nominal rates only gate admission). Rejected streams are
+//! not ingested at all — their records are synthesised as dropped.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::source::FrameWindow;
+use crate::coordinator::sync::{Fate, Synchronizer};
+use crate::detector::Detector;
+use crate::device::DeviceKind;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::metrics::{finish_stream, FleetReport, StreamAccum};
+use crate::fleet::stream::StreamSpec;
+use crate::types::{Detection, FrameId};
+use crate::util::stats::Percentiles;
+use crate::video::Clip;
+
+/// Wall-clock fleet configuration.
+#[derive(Debug, Clone)]
+pub struct FleetServeConfig {
+    pub admission: AdmissionPolicy,
+    /// Nominal service rates (FPS) of the `n` workers; the vector length
+    /// sets the worker count and its sum is the admission capacity Σμᵢ.
+    pub device_rates: Vec<f64>,
+    /// Pace each stream at its λ (true) or flood (false).
+    pub paced: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cond: Condvar,
+}
+
+struct State {
+    /// Per-stream bounded freshness windows (indexed by stream id) —
+    /// the same `FrameWindow` the virtual-time engine uses.
+    queues: Vec<FrameWindow>,
+    vtime: Vec<f64>,
+    weights: Vec<f64>,
+    /// Ingest threads still running; workers exit once this hits zero
+    /// and every queue is empty.
+    open_streams: usize,
+}
+
+enum Msg {
+    Processed {
+        sid: usize,
+        fid: FrameId,
+        device: usize,
+        detections: Vec<Detection>,
+        at: f64,
+        service: f64,
+    },
+    Dropped {
+        sid: usize,
+        fid: FrameId,
+        at: f64,
+    },
+}
+
+/// Serve `streams` (clip + spec pairs; stream `s` plays
+/// `min(spec.num_frames, clip.len())` frames at `spec.fps`) against a
+/// pool of `config.device_rates.len()` workers. `factory(worker)` builds
+/// each worker's thread-local detector.
+pub fn serve_fleet<F>(
+    streams: &[(&Clip, StreamSpec)],
+    config: &FleetServeConfig,
+    factory: F,
+) -> Result<FleetReport>
+where
+    F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
+{
+    let n_workers = config.device_rates.len().max(1);
+    let pool_rate: f64 = config.device_rates.iter().sum();
+    let n_streams = streams.len();
+
+    // Admission up front, in stream order, re-levelling earlier streams'
+    // shares on each attach exactly as the registry does.
+    let mut decisions: Vec<crate::fleet::admission::Decision> = Vec::with_capacity(n_streams);
+    {
+        let mut active: Vec<usize> = Vec::new();
+        for (i, (_, spec)) in streams.iter().enumerate() {
+            let mut members: Vec<(f64, f64)> = active
+                .iter()
+                .map(|&j| (streams[j].1.demand(), streams[j].1.weight))
+                .collect();
+            members.push((spec.demand(), spec.weight));
+            let levels = config.admission.rebalance(pool_rate, &members);
+            for (k, &j) in active.iter().enumerate() {
+                decisions[j] = levels[k];
+            }
+            let d = levels[levels.len() - 1];
+            if d.is_admitted() {
+                active.push(i);
+            }
+            decisions.push(d);
+        }
+    }
+
+    let frame_counts: Vec<u64> = streams
+        .iter()
+        .map(|(clip, spec)| spec.num_frames.min(clip.len() as u64))
+        .collect();
+
+    let ingest_ids: Vec<usize> = (0..n_streams)
+        .filter(|&s| decisions[s].is_admitted() && frame_counts[s] > 0)
+        .collect();
+
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            queues: streams
+                .iter()
+                .map(|(_, s)| FrameWindow::new(s.window.max(1)))
+                .collect(),
+            vtime: vec![0.0; n_streams],
+            weights: streams.iter().map(|(_, s)| s.weight).collect(),
+            open_streams: ingest_ids.len(),
+        }),
+        cond: Condvar::new(),
+    });
+    let (tx, rx) = mpsc::channel::<Msg>();
+
+    // Two barriers: `ready` gates on every worker having built its
+    // (possibly expensive) detector; main then stamps t0; `go` releases
+    // the paced ingest clocks.
+    let total_parties = n_workers + ingest_ids.len() + 1;
+    let ready = Arc::new(Barrier::new(total_parties));
+    let go = Arc::new(Barrier::new(total_parties));
+    let t0_cell = Arc::new(Mutex::new(Instant::now()));
+    let failed_workers = Arc::new(AtomicUsize::new(0));
+
+    std::thread::scope(|scope| {
+        // Workers.
+        for w in 0..n_workers {
+            let shared = Arc::clone(&shared);
+            let tx = tx.clone();
+            let factory = &factory;
+            let ready = Arc::clone(&ready);
+            let go = Arc::clone(&go);
+            let t0_cell = Arc::clone(&t0_cell);
+            let failed_workers = Arc::clone(&failed_workers);
+            scope.spawn(move || {
+                let mut detector = match factory(w) {
+                    Ok(d) => Some(d),
+                    Err(e) => {
+                        eprintln!("[fleet worker {w}] detector construction failed: {e}");
+                        failed_workers.fetch_add(1, Ordering::SeqCst);
+                        None
+                    }
+                };
+                ready.wait();
+                go.wait();
+                let Some(mut detector) = detector.take() else { return };
+                loop {
+                    // Weighted-fair pull: smallest virtual time among
+                    // backlogged streams.
+                    let job = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            let mut pick: Option<usize> = None;
+                            for (i, q) in st.queues.iter().enumerate() {
+                                if q.is_empty() {
+                                    continue;
+                                }
+                                if pick.map_or(true, |p| st.vtime[i] < st.vtime[p]) {
+                                    pick = Some(i);
+                                }
+                            }
+                            if let Some(i) = pick {
+                                let fid = st.queues[i].pull().unwrap();
+                                let weight = st.weights[i].max(1e-9);
+                                st.vtime[i] += 1.0 / weight;
+                                break Some((i, fid));
+                            }
+                            if st.open_streams == 0 {
+                                break None;
+                            }
+                            st = shared.cond.wait(st).unwrap();
+                        }
+                    };
+                    let Some((sid, fid)) = job else { break };
+                    let started = Instant::now();
+                    let detections = detector.detect(&streams[sid].0.frames[fid as usize]);
+                    let service = started.elapsed().as_secs_f64();
+                    let at = t0_cell.lock().unwrap().elapsed().as_secs_f64();
+                    let _ = tx.send(Msg::Processed {
+                        sid,
+                        fid,
+                        device: w,
+                        detections,
+                        at,
+                        service,
+                    });
+                }
+            });
+        }
+
+        // Ingest threads, one per admitted stream.
+        for &sid in &ingest_ids {
+            let shared = Arc::clone(&shared);
+            let tx = tx.clone();
+            let ready = Arc::clone(&ready);
+            let go = Arc::clone(&go);
+            let t0_cell = Arc::clone(&t0_cell);
+            let spec = &streams[sid].1;
+            let count = frame_counts[sid];
+            let stride = decisions[sid].stride();
+            let paced = config.paced;
+            scope.spawn(move || {
+                ready.wait();
+                go.wait();
+                let t0 = *t0_cell.lock().unwrap();
+                for fid in 0..count {
+                    if paced {
+                        let target = t0 + Duration::from_secs_f64(fid as f64 / spec.fps);
+                        let now = Instant::now();
+                        if target > now {
+                            std::thread::sleep(target - now);
+                        }
+                    }
+                    let now_s = t0.elapsed().as_secs_f64();
+                    if fid % stride != 0 {
+                        // Admission-mandated subsampling: dropped on arrival.
+                        let _ = tx.send(Msg::Dropped { sid, fid, at: now_s });
+                        continue;
+                    }
+                    let evicted = {
+                        let mut st = shared.state.lock().unwrap();
+                        st.queues[sid].arrive(fid).evicted
+                    };
+                    if let Some(old) = evicted {
+                        let _ = tx.send(Msg::Dropped { sid, fid: old, at: now_s });
+                    }
+                    shared.cond.notify_one();
+                }
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    st.open_streams -= 1;
+                }
+                // Wake every worker so the exit condition is re-checked.
+                shared.cond.notify_all();
+            });
+        }
+        drop(tx);
+
+        ready.wait();
+        *t0_cell.lock().unwrap() = Instant::now();
+        go.wait();
+    });
+
+    let wall = t0_cell.lock().unwrap().elapsed().as_secs_f64();
+
+    // With zero live workers, queued frames were never consumed and never
+    // resolved, so the "one record per frame" invariant cannot hold —
+    // surface that as an error instead of a silently truncated report.
+    if failed_workers.load(Ordering::SeqCst) == n_workers && !ingest_ids.is_empty() {
+        bail!("all {n_workers} fleet worker detector factories failed; no frames were processed");
+    }
+
+    // Assemble: group fates per stream, sort by fate time, synchronize.
+    let mut fates: Vec<Vec<(FrameId, f64, Option<(usize, Vec<Detection>, f64)>)>> =
+        (0..n_streams).map(|_| Vec::new()).collect();
+    let mut device_busy = vec![0.0f64; n_workers];
+    let mut device_frames = vec![0u64; n_workers];
+    for msg in rx.into_iter() {
+        match msg {
+            Msg::Processed {
+                sid,
+                fid,
+                device,
+                detections,
+                at,
+                service,
+            } => {
+                device_busy[device] += service;
+                device_frames[device] += 1;
+                fates[sid].push((fid, at, Some((device, detections, service))));
+            }
+            Msg::Dropped { sid, fid, at } => fates[sid].push((fid, at, None)),
+        }
+    }
+
+    let kinds = vec![DeviceKind::FastCpu; n_workers];
+    let mut reports = Vec::with_capacity(n_streams);
+    for (sid, mut stream_fates) in fates.into_iter().enumerate() {
+        let spec = &streams[sid].1;
+        let count = frame_counts[sid];
+        let mut sync = Synchronizer::new();
+        let mut latency = Percentiles::new();
+        let mut s_busy = vec![0.0f64; n_workers];
+        let mut s_frames = vec![0u64; n_workers];
+        let fps = spec.fps;
+
+        if decisions[sid].is_admitted() {
+            stream_fates.sort_by(|a, b| {
+                a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for (fid, at, outcome) in stream_fates {
+                let fate = match outcome {
+                    Some((device, detections, service)) => {
+                        s_busy[device] += service;
+                        s_frames[device] += 1;
+                        Fate::Processed { detections, device }
+                    }
+                    None => Fate::Dropped,
+                };
+                for r in sync.resolve(fid, fate, at, |f| f as f64 / fps) {
+                    latency.push((r.emit_ts - r.capture_ts).max(0.0));
+                }
+            }
+        } else {
+            // Rejected stream: synthesise the full dropped record log at
+            // capture timestamps.
+            for fid in 0..count {
+                let ts = fid as f64 / fps;
+                for r in sync.resolve(fid, Fate::Dropped, ts, |f| f as f64 / fps) {
+                    latency.push((r.emit_ts - r.capture_ts).max(0.0));
+                }
+            }
+        }
+
+        let acc = StreamAccum {
+            id: sid,
+            name: spec.name.clone(),
+            weight: spec.weight,
+            decision: decisions[sid],
+            records: sync.emitted().to_vec(),
+            max_reorder_depth: sync.max_pending(),
+            latency,
+            device_busy: s_busy,
+            device_frames: s_frames,
+            makespan: wall.max(1e-12),
+            stream_duration: count as f64 / fps,
+        };
+        reports.push(finish_stream(acc, &kinds));
+    }
+
+    Ok(FleetReport {
+        streams: reports,
+        makespan: wall,
+        device_busy,
+        device_frames,
+        device_labels: (0..n_workers)
+            .map(|w| {
+                let nominal = config.device_rates.get(w).copied().unwrap_or(0.0);
+                format!("worker#{w} (nominal {nominal:.1} FPS)")
+            })
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Frame;
+    use crate::video::{generate, presets};
+
+    /// Echoes ground truth after a fixed delay.
+    struct EchoDetector {
+        delay: Duration,
+    }
+
+    impl Detector for EchoDetector {
+        fn detect(&mut self, frame: &Frame) -> Vec<Detection> {
+            std::thread::sleep(self.delay);
+            frame
+                .ground_truth
+                .iter()
+                .map(|gt| Detection {
+                    bbox: gt.bbox,
+                    class_id: gt.class_id,
+                    score: 0.9,
+                })
+                .collect()
+        }
+
+        fn label(&self) -> String {
+            "echo".into()
+        }
+    }
+
+    #[test]
+    fn two_streams_share_two_workers_without_drops() {
+        // 2 streams × 15 FPS with 5 ms service on 2 workers: capacity
+        // ≈ 400 FPS ≫ 30 FPS offered; nothing should drop.
+        let clip_a = generate(&presets::tiny_clip(32, 30, 15.0, 1), None);
+        let clip_b = generate(&presets::tiny_clip(32, 30, 15.0, 2), None);
+        let streams = [
+            (&clip_a, StreamSpec::new("a", 15.0, 30).with_window(4)),
+            (&clip_b, StreamSpec::new("b", 15.0, 30).with_window(4)),
+        ];
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::admit_all(),
+            device_rates: vec![200.0, 200.0],
+            paced: true,
+        };
+        let report = serve_fleet(&streams, &config, |_| {
+            Ok(Box::new(EchoDetector {
+                delay: Duration::from_millis(5),
+            }) as Box<dyn Detector>)
+        })
+        .unwrap();
+        assert_eq!(report.streams.len(), 2);
+        for s in &report.streams {
+            assert_eq!(s.records.len(), 30, "stream {}", s.name);
+            assert_eq!(s.metrics.frames_dropped, 0, "stream {}", s.name);
+            for (i, r) in s.records.iter().enumerate() {
+                assert_eq!(r.frame_id, i as u64);
+            }
+        }
+        assert_eq!(report.total_processed(), 60);
+    }
+
+    #[test]
+    fn overloaded_pool_drops_but_every_frame_is_recorded() {
+        // 2 streams × 50 FPS against one worker with 25 ms service
+        // (≈40 FPS capacity): drops are inevitable, records complete.
+        let clip_a = generate(&presets::tiny_clip(32, 40, 50.0, 3), None);
+        let clip_b = generate(&presets::tiny_clip(32, 40, 50.0, 4), None);
+        let streams = [
+            (&clip_a, StreamSpec::new("a", 50.0, 40).with_window(2)),
+            (&clip_b, StreamSpec::new("b", 50.0, 40).with_window(2)),
+        ];
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::admit_all(),
+            device_rates: vec![40.0],
+            paced: true,
+        };
+        let report = serve_fleet(&streams, &config, |_| {
+            Ok(Box::new(EchoDetector {
+                delay: Duration::from_millis(25),
+            }) as Box<dyn Detector>)
+        })
+        .unwrap();
+        let total_dropped: u64 = report.streams.iter().map(|s| s.metrics.frames_dropped).sum();
+        assert!(total_dropped > 10, "dropped {total_dropped}");
+        for s in &report.streams {
+            assert_eq!(s.records.len(), 40);
+        }
+    }
+
+    #[test]
+    fn all_factories_failing_is_an_error_not_a_truncated_report() {
+        let clip = generate(&presets::tiny_clip(32, 10, 30.0, 7), None);
+        let streams = [(&clip, StreamSpec::new("a", 30.0, 10).with_window(2))];
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::admit_all(),
+            device_rates: vec![40.0, 40.0],
+            paced: false,
+        };
+        let result = serve_fleet(&streams, &config, |w| {
+            Err(anyhow::anyhow!("worker {w}: backend unavailable"))
+        });
+        let err = result.err().expect("total factory failure must error");
+        assert!(err.to_string().contains("factories failed"), "{err}");
+    }
+
+    #[test]
+    fn rejected_stream_is_fully_synthesised() {
+        // Admission capacity ≈ 1.9 FPS: the 30-FPS streams cannot fit at
+        // min_rate 1.0 for stream 1 once stream 0 holds a share.
+        let clip_a = generate(&presets::tiny_clip(32, 20, 30.0, 5), None);
+        let clip_b = generate(&presets::tiny_clip(32, 20, 30.0, 6), None);
+        let streams = [
+            (&clip_a, StreamSpec::new("a", 30.0, 20).with_window(2)),
+            (&clip_b, StreamSpec::new("b", 30.0, 20).with_window(2)),
+        ];
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy {
+                min_rate: 1.5,
+                ..AdmissionPolicy::default()
+            },
+            device_rates: vec![2.0],
+            paced: false,
+        };
+        let report = serve_fleet(&streams, &config, |_| {
+            Ok(Box::new(EchoDetector {
+                delay: Duration::from_millis(1),
+            }) as Box<dyn Detector>)
+        })
+        .unwrap();
+        let rejected: Vec<_> = report
+            .streams
+            .iter()
+            .filter(|s| !s.decision.is_admitted())
+            .collect();
+        assert!(!rejected.is_empty(), "expected a rejection");
+        for s in rejected {
+            assert_eq!(s.records.len(), 20);
+            assert!(s.records.iter().all(|r| r.was_dropped()));
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! Virtual-time fleet engine: many paced streams against the shared
+//! device pool, on the DES kernel from [`crate::sim`].
+//!
+//! This is the multi-stream generalisation of
+//! [`crate::coordinator::engine::run_online`]: each stream gets its own
+//! paced arrivals, freshness window and synchronizer; the pool's
+//! work-conserving dispatcher keeps every idle device busy with the
+//! fairest backlogged stream. The engine deals only in frame *timing*
+//! (fates carry empty detection lists) — detection quality under
+//! multi-stream contention is the wall-clock path's job
+//! ([`crate::fleet::serve`]), which runs real detectors per frame.
+//!
+//! Scenarios can script mid-run control events (attach/detach of streams
+//! and devices), which is what makes elasticity experiments — autoscaling
+//! a pool under changing load — expressible in milliseconds of wall time.
+
+use crate::coordinator::sync::Fate;
+use crate::device::DeviceInstance;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::metrics::{finish_stream, FleetReport, StreamAccum};
+use crate::fleet::pool::Job;
+use crate::fleet::registry::{ControlAction, ControlEvent, FleetRegistry};
+use crate::fleet::stream::{StreamId, StreamSpec};
+use crate::sim::EventQueue;
+use crate::types::FrameId;
+use crate::util::Rng;
+
+/// One fleet run's full description.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Devices attached from t = 0.
+    pub devices: Vec<DeviceInstance>,
+    /// Streams attached at t = 0 (admission runs in order).
+    pub streams: Vec<StreamSpec>,
+    /// Scripted mid-run attach/detach events.
+    pub events: Vec<ControlEvent>,
+    pub admission: AdmissionPolicy,
+    pub seed: u64,
+}
+
+impl Scenario {
+    pub fn new(devices: Vec<DeviceInstance>, streams: Vec<StreamSpec>) -> Scenario {
+        Scenario {
+            devices,
+            streams,
+            events: Vec::new(),
+            admission: AdmissionPolicy::default(),
+            seed: 0,
+        }
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> Scenario {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_events(mut self, events: Vec<ControlEvent>) -> Scenario {
+        self.events = events;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Frame `fid` of stream `sid` arrives.
+    Arrival { sid: StreamId, fid: FrameId },
+    /// The device's in-flight job finishes.
+    ServiceDone { dev: usize },
+    /// Apply `scenario.events[idx]`.
+    Control { idx: usize },
+}
+
+fn schedule_arrivals(queue: &mut EventQueue<Ev>, reg: &FleetRegistry, sid: StreamId) {
+    let s = &reg.streams[sid];
+    for fid in 0..s.spec.num_frames {
+        queue.schedule(s.capture_ts(fid), Ev::Arrival { sid, fid });
+    }
+}
+
+fn arrival(reg: &mut FleetRegistry, sid: StreamId, fid: FrameId, now: f64) {
+    let s = &mut reg.streams[sid];
+    if s.detached {
+        return;
+    }
+    s.arrived += 1;
+    if !s.decision.is_admitted() {
+        // Rejected stream: every frame is dropped on arrival, so the
+        // record log still covers the whole stream.
+        s.resolve(fid, Fate::Dropped, now);
+        return;
+    }
+    if !s.keeps(fid) {
+        // Degraded stream: admission-mandated subsampling.
+        s.resolve(fid, Fate::Dropped, now);
+        return;
+    }
+    if let Some(evicted) = s.window.arrive(fid).evicted {
+        s.resolve(evicted, Fate::Dropped, now);
+    }
+}
+
+/// Work-conserving dispatch: pair idle devices with backlogged streams
+/// until one side runs out.
+fn dispatch(reg: &mut FleetRegistry, queue: &mut EventQueue<Ev>, rng: &mut Rng) {
+    loop {
+        let Some(dev) = reg.pool.next_idle() else { break };
+        let Some(sid) = reg.pick_stream() else { break };
+        let fid = reg.streams[sid]
+            .window
+            .pull()
+            .expect("backlogged stream has a frame");
+        let weight = reg.streams[sid].spec.weight.max(1e-9);
+        reg.streams[sid].vtime += 1.0 / weight;
+        let t = reg.pool.start(dev, Job { stream: sid, fid }, rng);
+        queue.schedule_in(t, Ev::ServiceDone { dev });
+    }
+}
+
+/// Run the scenario to completion and report.
+pub fn run_fleet(scenario: &Scenario) -> FleetReport {
+    let mut reg = FleetRegistry::new(scenario.devices.clone(), scenario.admission.clone());
+    let mut queue: EventQueue<Ev> = EventQueue::new();
+    let mut rng = Rng::new(scenario.seed ^ 0x0F1E_E75E_ED00_0001);
+
+    for spec in &scenario.streams {
+        let sid = reg.attach_stream(spec.clone(), 0.0);
+        schedule_arrivals(&mut queue, &reg, sid);
+    }
+    for (idx, ev) in scenario.events.iter().enumerate() {
+        queue.schedule(ev.at.max(0.0), Ev::Control { idx });
+    }
+
+    dispatch(&mut reg, &mut queue, &mut rng);
+
+    while let Some((now, ev)) = queue.pop() {
+        match ev {
+            Ev::Arrival { sid, fid } => {
+                arrival(&mut reg, sid, fid, now);
+                dispatch(&mut reg, &mut queue, &mut rng);
+            }
+            Ev::ServiceDone { dev } => {
+                let (job, service) = reg.pool.complete(dev);
+                {
+                    let s = &mut reg.streams[job.stream];
+                    if dev < s.device_busy.len() {
+                        s.device_busy[dev] += service;
+                        s.device_frames[dev] += 1;
+                    }
+                    s.resolve(
+                        job.fid,
+                        Fate::Processed {
+                            detections: Vec::new(),
+                            device: dev,
+                        },
+                        now,
+                    );
+                }
+                dispatch(&mut reg, &mut queue, &mut rng);
+            }
+            Ev::Control { idx } => {
+                match scenario.events[idx].action.clone() {
+                    ControlAction::AttachStream(spec) => {
+                        let sid = reg.attach_stream(spec, now);
+                        schedule_arrivals(&mut queue, &reg, sid);
+                    }
+                    ControlAction::DetachStream(id) => {
+                        let drained = reg.detach_stream(id);
+                        for fid in drained {
+                            reg.streams[id].resolve(fid, Fate::Dropped, now);
+                        }
+                    }
+                    ControlAction::AttachDevice(instance) => {
+                        reg.attach_device(instance);
+                    }
+                    ControlAction::DetachDevice(dev) => {
+                        reg.detach_device(dev);
+                    }
+                }
+                dispatch(&mut reg, &mut queue, &mut rng);
+            }
+        }
+    }
+
+    // Frames still windowed when the event queue drains could never be
+    // scheduled: a dropped tail, resolved at the end of virtual time.
+    let t_end = queue.now();
+    for s in reg.streams.iter_mut() {
+        let leftover = s.window.drain_remaining();
+        for fid in leftover {
+            s.resolve(fid, Fate::Dropped, t_end);
+        }
+    }
+
+    let kinds = reg.pool.kinds();
+    let device_labels = reg.pool.labels();
+    let device_busy: Vec<f64> = reg.pool.devices().iter().map(|d| d.busy_seconds).collect();
+    let device_frames: Vec<u64> = reg.pool.devices().iter().map(|d| d.frames_done).collect();
+    let makespan = t_end.max(
+        reg.streams
+            .iter()
+            .map(|s| s.last_resolution)
+            .fold(0.0, f64::max),
+    );
+
+    let streams = reg
+        .streams
+        .into_iter()
+        .map(|s| {
+            let makespan_s = (s.last_resolution - s.attached_at).max(s.spec.duration());
+            debug_assert_eq!(
+                s.sync.emitted().len() as u64,
+                s.arrived,
+                "stream {}: record log must cover exactly the arrived frames",
+                s.id
+            );
+            let acc = StreamAccum {
+                id: s.id,
+                name: s.spec.name.clone(),
+                weight: s.spec.weight,
+                decision: s.decision,
+                records: s.sync.emitted().to_vec(),
+                max_reorder_depth: s.sync.max_pending(),
+                latency: s.latency,
+                device_busy: s.device_busy,
+                device_frames: s.device_frames,
+                makespan: makespan_s,
+                stream_duration: s.spec.duration(),
+            };
+            finish_stream(acc, &kinds)
+        })
+        .collect();
+
+    FleetReport {
+        streams,
+        makespan,
+        device_busy,
+        device_frames,
+        device_labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DetectorModelId, DeviceKind};
+    use crate::fleet::admission::Decision;
+
+    fn devices(rates: &[f64]) -> Vec<DeviceInstance> {
+        rates
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| {
+                DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r)
+            })
+            .collect()
+    }
+
+    fn specs(n: usize, fps: f64, frames: u64, window: usize) -> Vec<StreamSpec> {
+        (0..n)
+            .map(|i| StreamSpec::new(&format!("s{i}"), fps, frames).with_window(window))
+            .collect()
+    }
+
+    #[test]
+    fn every_arrived_frame_gets_exactly_one_record_in_order() {
+        let scenario = Scenario::new(devices(&[2.5, 2.5]), specs(3, 10.0, 80, 4))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(7);
+        let report = run_fleet(&scenario);
+        assert_eq!(report.streams.len(), 3);
+        for s in &report.streams {
+            assert_eq!(s.records.len(), 80, "stream {}", s.id);
+            for (i, r) in s.records.iter().enumerate() {
+                assert_eq!(r.frame_id, i as u64);
+            }
+            assert_eq!(
+                s.metrics.frames_processed + s.metrics.frames_dropped,
+                s.metrics.frames_total
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let scenario = Scenario::new(devices(&[2.5, 13.5]), specs(4, 8.0, 60, 4)).with_seed(42);
+        let a = run_fleet(&scenario);
+        let b = run_fleet(&scenario);
+        assert_eq!(a.total_processed(), b.total_processed());
+        for (sa, sb) in a.streams.iter().zip(&b.streams) {
+            assert_eq!(sa.metrics.frames_processed, sb.metrics.frames_processed);
+        }
+    }
+
+    #[test]
+    fn single_stream_single_device_matches_known_drop_shape() {
+        // λ=10 vs μ=2.5: the stream keeps ≈ μ/λ of its frames.
+        let scenario = Scenario::new(devices(&[2.5]), specs(1, 10.0, 200, 1))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(3);
+        let report = run_fleet(&scenario);
+        let s = &report.streams[0];
+        let sigma = s.metrics.processing_fps();
+        assert!((sigma - 2.5).abs() < 0.4, "σ {sigma}");
+        assert!(s.metrics.drop_rate() > 0.6, "{}", s.metrics.drop_rate());
+    }
+
+    #[test]
+    fn rejected_stream_gets_all_dropped_records() {
+        // Capacity 2.375 with min_rate 1.0: two 5-FPS streams exhaust it;
+        // the third is rejected but still fully recorded.
+        let scenario = Scenario::new(devices(&[2.5]), specs(3, 5.0, 50, 4)).with_seed(5);
+        let report = run_fleet(&scenario);
+        let rejected: Vec<_> = report
+            .streams
+            .iter()
+            .filter(|s| s.decision == Decision::Reject)
+            .collect();
+        assert!(!rejected.is_empty(), "expected at least one rejection");
+        for s in &rejected {
+            assert_eq!(s.records.len(), 50);
+            assert!(s.records.iter().all(|r| r.was_dropped()));
+            assert_eq!(s.metrics.frames_processed, 0);
+        }
+    }
+
+    #[test]
+    fn degraded_stream_processes_roughly_its_share() {
+        // One device μ=2.5, one stream λ=5: degrade stride ≈ 3
+        // (share 2.375); the stream keeps every 3rd frame and processes
+        // nearly all kept frames.
+        let scenario = Scenario::new(devices(&[2.5]), specs(1, 5.0, 150, 4)).with_seed(11);
+        let report = run_fleet(&scenario);
+        let s = &report.streams[0];
+        match s.decision {
+            Decision::Degrade { stride, .. } => assert_eq!(stride, 3),
+            ref other => panic!("expected degrade, got {other:?}"),
+        }
+        let kept = (0..150u64).filter(|f| f % 3 == 0).count() as u64;
+        assert!(
+            s.metrics.frames_processed >= kept - 3,
+            "processed {} of {kept} kept",
+            s.metrics.frames_processed
+        );
+    }
+
+    #[test]
+    fn mid_run_device_attach_raises_throughput() {
+        // One device for the first 15s, a second from t=15: processed
+        // count lands between the always-1 and always-2 device runs.
+        let base = Scenario::new(devices(&[2.5]), specs(1, 10.0, 300, 8))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(9);
+        let one = run_fleet(&base);
+
+        let two_late = base.clone().with_events(vec![ControlEvent {
+            at: 15.0,
+            action: ControlAction::AttachDevice(DeviceInstance::with_rate(
+                DeviceKind::Ncs2,
+                DetectorModelId::Yolov3,
+                1,
+                2.5,
+            )),
+        }]);
+        let elastic = run_fleet(&two_late);
+
+        let both = Scenario::new(devices(&[2.5, 2.5]), specs(1, 10.0, 300, 8))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(9);
+        let two = run_fleet(&both);
+
+        let (p1, pe, p2) = (
+            one.total_processed(),
+            elastic.total_processed(),
+            two.total_processed(),
+        );
+        assert!(pe > p1 + 10, "elastic {pe} vs static-1 {p1}");
+        assert!(pe < p2, "elastic {pe} vs static-2 {p2}");
+    }
+
+    #[test]
+    fn mid_run_stream_detach_frees_capacity() {
+        // Two streams share one device; stream 0 detaches at t=10, after
+        // which stream 1 should process roughly twice as fast.
+        let scenario = Scenario::new(devices(&[2.5]), specs(2, 5.0, 150, 4))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(13)
+            .with_events(vec![ControlEvent {
+                at: 10.0,
+                action: ControlAction::DetachStream(0),
+            }]);
+        let report = run_fleet(&scenario);
+        let s0 = &report.streams[0];
+        let s1 = &report.streams[1];
+        // Detached stream's record log stops at (or shortly after) detach.
+        assert!(
+            s0.records.len() < 80,
+            "detached stream has {} records",
+            s0.records.len()
+        );
+        // Survivor gets more frames through than its pre-detach half share
+        // (1.25 FPS × 30 s) would allow.
+        assert!(
+            s1.metrics.frames_processed > 45,
+            "survivor processed {}",
+            s1.metrics.frames_processed
+        );
+    }
+
+    #[test]
+    fn weighted_streams_split_throughput_by_weight() {
+        // Saturated pool, weights 3:1 -> throughput ratio ≈ 3.
+        let streams = vec![
+            StreamSpec::new("heavy", 10.0, 300).with_window(16).with_weight(3.0),
+            StreamSpec::new("light", 10.0, 300).with_window(16).with_weight(1.0),
+        ];
+        let scenario = Scenario::new(devices(&[2.5, 2.5]), streams)
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(17);
+        let report = run_fleet(&scenario);
+        let heavy = report.streams[0].metrics.frames_processed as f64;
+        let light = report.streams[1].metrics.frames_processed as f64;
+        let ratio = heavy / light.max(1.0);
+        assert!(ratio > 2.2 && ratio < 3.8, "ratio {ratio}");
+    }
+}

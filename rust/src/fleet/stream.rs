@@ -1,0 +1,223 @@
+//! Per-stream state: a paced frame source, its bounded freshness window,
+//! its own sequence [`Synchronizer`], and the accumulators that become a
+//! per-stream [`crate::coordinator::RunMetrics`] at report time.
+//!
+//! A stream inside a fleet is exactly the single-stream pipeline's
+//! source-side state, replicated: frames arrive at the stream's own λ,
+//! the window evicts the oldest unclaimed frame on overflow (the paper's
+//! random frame dropping, now per stream), and the synchronizer restores
+//! temporal order per stream regardless of which pool device served each
+//! frame.
+
+use crate::coordinator::source::FrameWindow;
+use crate::coordinator::sync::{Fate, Synchronizer};
+use crate::fleet::admission::Decision;
+use crate::types::{FrameId, Seconds};
+use crate::util::stats::Percentiles;
+
+/// Stream identifier within one fleet run (index into the registry).
+pub type StreamId = usize;
+
+/// Static description of one stream joining the fleet.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    pub name: String,
+    /// Input rate λₛ (frames/second).
+    pub fps: f64,
+    pub num_frames: u64,
+    /// Fairness weight: the stream's claim on pool throughput is
+    /// proportional to this, both in admission shares and in dispatch.
+    pub weight: f64,
+    /// Freshness window (≥ 1): max unclaimed frames held before the
+    /// oldest is dropped.
+    pub window: usize,
+}
+
+impl StreamSpec {
+    pub fn new(name: &str, fps: f64, num_frames: u64) -> StreamSpec {
+        assert!(fps > 0.0, "stream fps must be positive");
+        StreamSpec {
+            name: name.to_string(),
+            fps,
+            num_frames,
+            weight: 1.0,
+            window: 4,
+        }
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> StreamSpec {
+        assert!(weight > 0.0, "stream weight must be positive");
+        self.weight = weight;
+        self
+    }
+
+    pub fn with_window(mut self, window: usize) -> StreamSpec {
+        self.window = window.max(1);
+        self
+    }
+
+    /// Nominal stream duration in seconds.
+    pub fn duration(&self) -> Seconds {
+        self.num_frames as f64 / self.fps
+    }
+
+    /// Offered load (what admission accounts the stream at).
+    pub fn demand(&self) -> f64 {
+        self.fps
+    }
+}
+
+/// Live per-stream state inside a running fleet.
+#[derive(Debug)]
+pub struct StreamState {
+    pub id: StreamId,
+    pub spec: StreamSpec,
+    pub decision: Decision,
+    /// Fleet time at which the stream attached; frame `f` is captured at
+    /// `attached_at + f / fps`.
+    pub attached_at: Seconds,
+    pub detached: bool,
+    pub window: FrameWindow,
+    pub sync: Synchronizer,
+    pub latency: Percentiles,
+    /// Frames that have arrived so far — cross-checked against the
+    /// emitted record log at report time (conservation invariant).
+    pub arrived: u64,
+    /// Weighted-fair-queueing virtual time: bumped by `1/weight` per
+    /// dispatched frame; the dispatcher serves the backlogged stream with
+    /// the smallest value.
+    pub vtime: f64,
+    /// Busy seconds on each pool device attributable to this stream.
+    pub device_busy: Vec<f64>,
+    /// Frames of this stream processed by each pool device.
+    pub device_frames: Vec<u64>,
+    /// Latest fate-resolution time (stream-local makespan tracking).
+    pub last_resolution: Seconds,
+}
+
+impl StreamState {
+    pub fn new(
+        id: StreamId,
+        spec: StreamSpec,
+        decision: Decision,
+        attached_at: Seconds,
+        num_devices: usize,
+    ) -> StreamState {
+        let window = FrameWindow::new(spec.window.max(1));
+        StreamState {
+            id,
+            spec,
+            decision,
+            attached_at,
+            detached: false,
+            window,
+            sync: Synchronizer::new(),
+            latency: Percentiles::new(),
+            arrived: 0,
+            vtime: 0.0,
+            device_busy: vec![0.0; num_devices],
+            device_frames: vec![0; num_devices],
+            last_resolution: attached_at,
+        }
+    }
+
+    /// Capture timestamp of frame `fid` in fleet time.
+    pub fn capture_ts(&self, fid: FrameId) -> Seconds {
+        self.attached_at + fid as f64 / self.spec.fps
+    }
+
+    /// Does the admission decision keep this frame? (Degraded streams
+    /// keep every `stride`-th frame.)
+    pub fn keeps(&self, fid: FrameId) -> bool {
+        fid % self.decision.stride() == 0
+    }
+
+    /// Eligible for dispatch right now.
+    pub fn backlogged(&self) -> bool {
+        self.decision.is_admitted() && !self.detached && !self.window.is_empty()
+    }
+
+    /// Report frame `fid`'s fate at fleet time `now`, feeding emitted
+    /// records' output latencies into the stream's distribution.
+    pub fn resolve(&mut self, fid: FrameId, fate: Fate, now: Seconds) {
+        let base = self.attached_at;
+        let fps = self.spec.fps;
+        let out = self.sync.resolve(fid, fate, now, |f| base + f as f64 / fps);
+        for r in out {
+            self.latency.push((r.emit_ts - r.capture_ts).max(0.0));
+        }
+        if now > self.last_resolution {
+            self.last_resolution = now;
+        }
+    }
+
+    /// Grow per-device accumulators after a device attach.
+    pub fn ensure_devices(&mut self, num_devices: usize) {
+        while self.device_busy.len() < num_devices {
+            self.device_busy.push(0.0);
+            self.device_frames.push(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sync::Fate;
+    use crate::fleet::admission::Decision;
+
+    fn state(decision: Decision) -> StreamState {
+        StreamState::new(0, StreamSpec::new("s", 10.0, 100), decision, 2.0, 3)
+    }
+
+    #[test]
+    fn capture_ts_offsets_by_attach_time() {
+        let s = state(Decision::Admit { share: 10.0 });
+        assert!((s.capture_ts(0) - 2.0).abs() < 1e-12);
+        assert!((s.capture_ts(5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degrade_stride_keeps_every_kth_frame() {
+        let s = state(Decision::Degrade { stride: 3, share: 3.0 });
+        let kept: Vec<u64> = (0..10).filter(|&f| s.keeps(f)).collect();
+        assert_eq!(kept, vec![0, 3, 6, 9]);
+        let full = state(Decision::Admit { share: 10.0 });
+        assert!((0..10).all(|f| full.keeps(f)));
+    }
+
+    #[test]
+    fn resolve_tracks_latency_and_time() {
+        let mut s = state(Decision::Admit { share: 10.0 });
+        s.resolve(0, Fate::Processed { detections: vec![], device: 1 }, 2.4);
+        // capture 2.0, emit 2.4 -> latency 0.4
+        assert_eq!(s.latency.len(), 1);
+        assert!((s.latency.p50() - 0.4).abs() < 1e-9);
+        assert!((s.last_resolution - 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backlogged_requires_admission_and_frames() {
+        let mut s = state(Decision::Admit { share: 10.0 });
+        assert!(!s.backlogged());
+        s.window.arrive(0);
+        assert!(s.backlogged());
+        s.detached = true;
+        assert!(!s.backlogged());
+
+        let mut r = state(Decision::Reject);
+        r.window.arrive(0);
+        assert!(!r.backlogged());
+    }
+
+    #[test]
+    fn ensure_devices_grows_accumulators() {
+        let mut s = state(Decision::Admit { share: 10.0 });
+        assert_eq!(s.device_busy.len(), 3);
+        s.ensure_devices(5);
+        assert_eq!(s.device_busy.len(), 5);
+        assert_eq!(s.device_frames.len(), 5);
+        s.ensure_devices(2); // never shrinks
+        assert_eq!(s.device_busy.len(), 5);
+    }
+}

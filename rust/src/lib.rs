@@ -18,6 +18,12 @@
 //!   schedulers, sequence synchronizer, n-selection, drop policy, metrics.
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
 //! * [`server`] — real-time serving pipeline (threads; python-free).
+//! * [`fleet`] — multi-stream serving over a shared heterogeneous device
+//!   pool: per-stream paced sources/windows/synchronizers, weighted
+//!   max-min admission control (admit/degrade/reject), dynamic
+//!   stream/device attach-detach, and fleet metrics (per-stream σ,
+//!   latency percentiles, device utilisation, Jain fairness) — in both
+//!   virtual-time (DES) and wall-clock (threaded) modes.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
 //!   bench binaries and the CLI.
 
@@ -31,4 +37,5 @@ pub mod sim;
 pub mod coordinator;
 pub mod runtime;
 pub mod server;
+pub mod fleet;
 pub mod experiments;

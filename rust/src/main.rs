@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve      run the real-time PJRT serving pipeline on a synthetic clip
 //!   offline    zero-drop offline detection (Figure 1a reference)
+//!   fleet      multi-stream serving over a shared device pool (virtual time)
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
 //!   nselect    recommend the parallel-detection parameter n (§III-B)
 //!   visualize  dump Figure 2/3-style PPM frames with box overlays
@@ -18,7 +19,9 @@ use anyhow::{anyhow, bail, Result};
 use eva::coordinator::nselect;
 use eva::detector::pjrt::PjrtDetectorFactory;
 use eva::detector::Detector;
+use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use eva::experiments;
+use eva::fleet::{run_fleet, AdmissionPolicy, Scenario, StreamSpec};
 use eva::runtime::{load_manifest, ModelSpec};
 use eva::server::{serve, ServeConfig};
 use eva::util::cli::{usage, Args, Spec};
@@ -28,16 +31,21 @@ fn specs() -> Vec<Spec> {
     vec![
         Spec { name: "model", takes_value: true, help: "TinyDet variant (essd|eyolo)", default: Some("essd") },
         Spec { name: "workers", takes_value: true, help: "parallel detector replicas", default: Some("2") },
-        Spec { name: "frames", takes_value: true, help: "clip length in frames", default: Some("60") },
+        Spec { name: "frames", takes_value: true, help: "clip length in frames (default 60; fleet default 300)", default: None },
         Spec { name: "fps", takes_value: true, help: "input stream rate λ", default: Some("10") },
         Spec { name: "seed", takes_value: true, help: "experiment seed", default: Some("7") },
-        Spec { name: "id", takes_value: true, help: "table id for `table` (1..10|fig5|fig23|ablation|links|energy-frame)", default: None },
+        Spec { name: "id", takes_value: true, help: "table id for `table` (1..10|fig5|fig23|ablation|links|energy-frame|fleet|fleet-saturation)", default: None },
         Spec { name: "artifacts", takes_value: true, help: "artifact directory", default: Some("artifacts") },
         Spec { name: "lambda", takes_value: true, help: "input rate for nselect", default: Some("14") },
         Spec { name: "mu", takes_value: true, help: "per-model rate for nselect", default: Some("2.5") },
         Spec { name: "out", takes_value: true, help: "output directory for visualize", default: Some("/tmp/eva_frames") },
         Spec { name: "csv", takes_value: false, help: "emit CSV instead of framed table", default: None },
         Spec { name: "saturated", takes_value: false, help: "serve: feed frames as fast as possible", default: None },
+        Spec { name: "streams", takes_value: true, help: "fleet: number of concurrent streams", default: Some("8") },
+        Spec { name: "stream-fps", takes_value: true, help: "fleet: per-stream input rate λ", default: Some("5") },
+        Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
+        Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
+        Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
     ]
 }
 
@@ -45,7 +53,7 @@ fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
         print!("{}", usage("eva", "parallel detection for edge video analytics", &specs()));
-        println!("\nsubcommands: serve | offline | table | nselect | visualize | inspect");
+        println!("\nsubcommands: serve | offline | fleet | table | nselect | visualize | inspect");
         return;
     }
     let cmd = raw[0].clone();
@@ -66,6 +74,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "serve" => cmd_serve(args, false),
         "offline" => cmd_serve(args, true),
+        "fleet" => cmd_fleet(args),
         "table" => cmd_table(args),
         "nselect" => cmd_nselect(args),
         "visualize" => cmd_visualize(args),
@@ -133,10 +142,59 @@ fn cmd_serve(args: &Args, offline: bool) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let streams = args.usize_or("streams", 8).map_err(|e| anyhow!(e))?;
+    let fps = args.f64_or("stream-fps", 5.0).map_err(|e| anyhow!(e))?;
+    let frames = args.u64_or("frames", 300).map_err(|e| anyhow!(e))?;
+    let window = args.usize_or("window", 4).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    let rates_raw = args.str_or("rates", "13.5,2.5,2.5,2.5");
+    let rates: Vec<f64> = rates_raw
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--rates: cannot parse {:?}", p.trim()))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    if rates.is_empty() {
+        bail!("--rates: need at least one device rate");
+    }
+    let admission = if args.flag("no-admission") {
+        AdmissionPolicy::admit_all()
+    } else {
+        AdmissionPolicy::default()
+    };
+
+    let devices: Vec<DeviceInstance> = rates
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r))
+        .collect();
+    let specs: Vec<StreamSpec> = (0..streams)
+        .map(|s| StreamSpec::new(&format!("stream{s}"), fps, frames).with_window(window))
+        .collect();
+
+    let offered = fps * streams as f64;
+    let pool: f64 = rates.iter().sum();
+    println!(
+        "[fleet] {streams} streams × {fps} FPS (offered {offered:.1}) vs {} devices (Σμ {pool:.1}), seed {seed}",
+        rates.len()
+    );
+    let scenario = Scenario::new(devices, specs)
+        .with_admission(admission)
+        .with_seed(seed);
+    let mut report = run_fleet(&scenario);
+    print!("{}", report.stream_table().render());
+    print!("{}", report.device_table().render());
+    println!("[fleet] {}", report.summary());
+    Ok(())
+}
+
 fn cmd_table(args: &Args) -> Result<()> {
     let id = args
         .get("id")
-        .ok_or_else(|| anyhow!("--id required (1..10|fig5|fig23|ablation|links|energy-frame)"))?;
+        .ok_or_else(|| anyhow!("--id required (1..10|fig5|fig23|ablation|links|energy-frame|fleet|fleet-saturation)"))?;
     let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
     let csv = args.flag("csv");
     let table = match id {
@@ -155,6 +213,8 @@ fn cmd_table(args: &Args) -> Result<()> {
         "ablation" => experiments::sched::scheduler_ablation(seed).0,
         "links" => experiments::links::link_projection(seed).0,
         "energy-frame" => experiments::energy::joules_per_frame_comparison().0,
+        "fleet" => experiments::fleet::scaling(seed).0,
+        "fleet-saturation" => experiments::fleet::saturation_sweep(seed).0,
         other => bail!("unknown table id {other:?}"),
     };
     if csv {

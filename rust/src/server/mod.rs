@@ -37,7 +37,9 @@ use crate::video::Clip;
 pub struct ServeConfig {
     /// Number of parallel detector replicas (worker threads).
     pub workers: usize,
-    /// Freshness window; defaults to `workers`.
+    /// Freshness window; defaults to `workers`. Any value (including
+    /// `Some(w)` with `w < workers` or `Some(0)`) is safe — see
+    /// [`ServeConfig::effective_window`] for the invariant.
     pub window: Option<usize>,
     /// Pace ingestion at the clip's fps (true) or feed saturated (false).
     pub paced: bool,
@@ -50,6 +52,34 @@ impl Default for ServeConfig {
             window: None,
             paced: true,
         }
+    }
+}
+
+impl ServeConfig {
+    /// The window size [`serve`] actually uses: `window` clamped to ≥ 1,
+    /// defaulting to `workers`.
+    ///
+    /// # Liveness invariant
+    ///
+    /// A window smaller than the worker count (even 1 frame for many
+    /// workers) **cannot deadlock** the pipeline, because the window
+    /// bounds only *unclaimed* frames and every transition wakes a
+    /// waiter:
+    ///
+    /// 1. each ingest push signals the condvar, and eviction (on
+    ///    overflow) removes only frames no worker has pulled, so a
+    ///    sleeping worker can never be holding the evicted frame;
+    /// 2. workers re-check the queue in a loop after every wake, so a
+    ///    worker that finds the window empty simply sleeps again —
+    ///    excess workers starve (by design) but never block ingest;
+    /// 3. end of stream sets `closed` and broadcasts, so every worker
+    ///    observes the closed+empty state and exits.
+    ///
+    /// The clamp to ≥ 1 exists because a zero-size window could hold no
+    /// frame at all: ingest would evict each frame at arrival and the
+    /// workers would never run.
+    pub fn effective_window(&self) -> usize {
+        self.window.unwrap_or(self.workers.max(1)).max(1)
     }
 }
 
@@ -96,7 +126,7 @@ where
     F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
 {
     let n = config.workers.max(1);
-    let window = config.window.unwrap_or(n).max(1);
+    let window = config.effective_window();
     let shared = Arc::new(Shared {
         state: Mutex::new(WindowState {
             pending: VecDeque::new(),
@@ -390,6 +420,65 @@ mod tests {
             .iter()
             .any(|r| r.was_dropped() && !r.detections.is_empty());
         assert!(any_stale);
+    }
+
+    #[test]
+    fn effective_window_clamps_and_defaults() {
+        let mut cfg = ServeConfig { workers: 4, window: None, paced: true };
+        assert_eq!(cfg.effective_window(), 4);
+        cfg.window = Some(0);
+        assert_eq!(cfg.effective_window(), 1);
+        cfg.window = Some(2); // smaller than workers: allowed, not clamped up
+        assert_eq!(cfg.effective_window(), 2);
+        cfg.workers = 0;
+        cfg.window = None;
+        assert_eq!(cfg.effective_window(), 1);
+    }
+
+    #[test]
+    fn window_smaller_than_workers_terminates_and_records_everything() {
+        // The liveness invariant from `ServeConfig::effective_window`:
+        // 4 workers contending for a 1-frame window must neither deadlock
+        // nor lose records — paced and saturated both.
+        for paced in [true, false] {
+            let clip = generate(&presets::tiny_clip(32, 40, 120.0, 9), None);
+            let cfg = ServeConfig {
+                workers: 4,
+                window: Some(1),
+                paced,
+            };
+            let report = serve(&clip, &cfg, |_| {
+                Ok(Box::new(FakeDetector {
+                    delay: Duration::from_millis(8),
+                }) as Box<dyn Detector>)
+            })
+            .unwrap();
+            assert_eq!(report.records.len(), 40, "paced={paced}");
+            for (i, r) in report.records.iter().enumerate() {
+                assert_eq!(r.frame_id, i as u64);
+            }
+            assert_eq!(
+                report.metrics.frames_processed + report.metrics.frames_dropped,
+                40
+            );
+        }
+    }
+
+    #[test]
+    fn zero_window_is_clamped_not_deadlocked() {
+        let clip = generate(&presets::tiny_clip(32, 10, 50.0, 4), None);
+        let cfg = ServeConfig {
+            workers: 2,
+            window: Some(0),
+            paced: true,
+        };
+        let report = serve(&clip, &cfg, |_| {
+            Ok(Box::new(FakeDetector {
+                delay: Duration::from_millis(2),
+            }) as Box<dyn Detector>)
+        })
+        .unwrap();
+        assert_eq!(report.records.len(), 10);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Offline vendored subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no network access and no crates.io mirror,
+//! so this path dependency provides exactly the API surface EVA-RS uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros, and the
+//! [`Context`] extension trait. Semantics match upstream `anyhow` for
+//! that subset (context wraps the message; `?` converts any
+//! `std::error::Error`); swap in the real crate by pointing the
+//! workspace dependency back at crates.io.
+
+use std::fmt;
+
+/// A string-backed error value, convertible from any `std::error::Error`.
+///
+/// Like upstream `anyhow::Error`, this type deliberately does NOT
+/// implement `std::error::Error` itself — that is what keeps the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable (the `anyhow!` macro's
+    /// single-expression form).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context, matching upstream's `{context}: {cause}` chain
+    /// rendering in `Display`.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` with a defaulted error type, as upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a single displayable
+/// expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{ctx}: {e}"),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("value {n} and {}", 4);
+        assert_eq!(b.to_string(), "value 3 and 4");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while rendering").unwrap_err();
+        assert!(e.to_string().starts_with("while rendering: "));
+        let r2: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e2 = r2.with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert!(e2.to_string().starts_with("pass 2: "));
+    }
+}
