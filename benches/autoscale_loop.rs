@@ -1,0 +1,79 @@
+//! Autoscale bench: asserts the closed-loop shapes (quality ordering at
+//! 2× overload, band convergence, elastic diurnal tracking) and times
+//! one full closed-loop virtual-time run — the controller overhead CI
+//! pays per sweep cell.
+
+use eva::autoscale::{run_autoscale_sim, AutoscaleConfig, ModelLadder};
+use eva::experiments::autoscale::{device_failure, diurnal, step_load};
+use eva::experiments::fleet::pool_of;
+use eva::fleet::{Scenario, StreamSpec};
+use eva::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new(1, 3);
+
+    // Acceptance shape: ladder+autoscale > ladder-only > stride-only on
+    // delivered mAP at 2× overload, p99 bounded, fast rung recovery.
+    let (table, outcomes) = step_load(29);
+    print!("{}", table.render());
+    let (stride, ladder_only, auto) = (&outcomes[0], &outcomes[1], &outcomes[2]);
+    assert!(
+        auto.overload_map > stride.overload_map + 0.15,
+        "autoscale {:.3} must clearly beat stride-only {:.3}",
+        auto.overload_map,
+        stride.overload_map
+    );
+    assert!(
+        ladder_only.overload_map > stride.overload_map + 0.10,
+        "ladder admission {:.3} must beat stride-only {:.3}",
+        ladder_only.overload_map,
+        stride.overload_map
+    );
+    assert!(
+        auto.overload_p99 < 1.5,
+        "closed-loop p99 {:.2}s must hold the bound",
+        auto.overload_p99
+    );
+    assert!(
+        auto.recovery_seconds <= 5.0,
+        "full quality must return within one cooldown, took {:.1}s",
+        auto.recovery_seconds
+    );
+    println!("shape OK: ladder+autoscale > ladder-only > stride-only on delivered mAP\n");
+
+    let (table, points, _) = diurnal(31);
+    print!("{}", table.render());
+    assert!(points[1].devices > points[0].devices && points[2].devices > points[1].devices);
+    assert!(points[3].devices < points[2].devices);
+    println!("shape OK: device count tracks the diurnal ramp both ways\n");
+
+    let (table, outcomes) = device_failure(33);
+    print!("{}", table.render());
+    assert!(outcomes[1].recovery_seconds.is_finite());
+    assert!(outcomes[1].post_failure_map > outcomes[0].post_failure_map);
+    println!("shape OK: controller recovers failed capacity\n");
+
+    // Wall-clock cost of one closed-loop run (8 streams, controller
+    // ticking at 1 Hz of virtual time).
+    bench.run(
+        "autoscale sim: 2x step, ladder + device control",
+        Some(3.0 * 400.0 + 5.0 * 150.0),
+        closed_loop_cell,
+    );
+}
+
+fn closed_loop_cell() -> u64 {
+    let ladder = ModelLadder::from_profiles("eth_sunnyday");
+    let cfg = AutoscaleConfig {
+        max_devices: 12,
+        ..AutoscaleConfig::default()
+    }
+    .with_ladder(ladder);
+    let streams: Vec<StreamSpec> = (0..8)
+        .map(|i| StreamSpec::new(&format!("s{i}"), 2.5, 200).with_window(4))
+        .collect();
+    let scenario = Scenario::new(pool_of(4, 2.5), streams)
+        .with_admission(cfg.admission())
+        .with_seed(35);
+    run_autoscale_sim(&scenario, &cfg).report.total_processed()
+}

@@ -1,0 +1,236 @@
+//! The model ladder: an accuracy–rate Pareto frontier over detector
+//! variants, built from the calibrated [`crate::detector::quality`]
+//! profiles.
+//!
+//! Quality-aware degradation swaps an overloaded stream onto a faster,
+//! lower-mAP rung *before* falling back to frame-stride subsampling:
+//! frames keep flowing (fresh boxes at reduced fidelity) instead of
+//! being replaced by stale reuse (full fidelity of the wrong moment).
+//! Candidates are the paper's two full models (SSD300, YOLOv3) plus
+//! their tiny variants ([`QualityProfile::tiny`]); dominated candidates
+//! — slower *and* less accurate, e.g. SSD300 next to YOLOv3 on NCS2 —
+//! are pruned, leaving a ladder that is strictly faster and strictly
+//! less accurate rung by rung.
+//!
+//! The intrinsic rung quality is an analytic mAP proxy derived from the
+//! profile statistics ([`quality_estimate`]); EXPERIMENTS.md §Autoscale
+//! records how it tracks the measured zero-drop mAPs.
+
+use crate::detector::quality::QualityProfile;
+use crate::device::DetectorModelId;
+
+/// Staleness decay timescale τ (seconds). A dropped frame reuses boxes
+/// captured `age` seconds earlier; its delivered quality is scaled by
+/// `max(0, 1 − age/τ)`. Calibrated against the paper's §II-B data point:
+/// λ = 14 FPS on one 2.5-FPS stick drops ≈ 82 % of frames (mean stale
+/// age ≈ 0.16 s) and lands at mAP 66.1 % from a 86.9 % baseline — a
+/// 0.76× factor, giving τ ≈ 0.7 s.
+pub const STALENESS_TAU: f64 = 0.7;
+
+/// Quality multiplier of a detection result reused `age_seconds` after
+/// its source frame was captured.
+pub fn staleness_factor(age_seconds: f64) -> f64 {
+    (1.0 - age_seconds.max(0.0) / STALENESS_TAU).max(0.0)
+}
+
+/// One rung of the ladder.
+#[derive(Debug, Clone)]
+pub struct Rung {
+    pub name: String,
+    /// Relative service rate of the rung's model, in any consistent
+    /// unit — only ratios matter ([`ModelLadder::speedups`] normalises
+    /// so rung 0 reads 1.0).
+    pub speedup: f64,
+    /// Intrinsic zero-drop quality (mAP proxy, 0..1).
+    pub quality: f64,
+}
+
+/// The Pareto frontier, rung 0 = highest quality, ascending speedup.
+#[derive(Debug, Clone)]
+pub struct ModelLadder {
+    pub rungs: Vec<Rung>,
+}
+
+/// Analytic zero-drop mAP proxy for a profile: recall × label accuracy
+/// × a false-positive precision penalty (assuming the paper videos'
+/// ≈ 4 ground-truth objects per frame). Tracks the measured calibration
+/// mAPs to within a few points — good enough to order rungs and weight
+/// delivered quality; it is NOT an mAP measurement.
+pub fn quality_estimate(profile: &QualityProfile) -> f64 {
+    const OBJECTS_PER_FRAME: f64 = 4.0;
+    let recall = 1.0 - profile.miss_rate;
+    let label_acc = 1.0 - profile.confusion_rate;
+    let fp_penalty = 1.0 - 0.25 * (profile.fp_per_frame / OBJECTS_PER_FRAME).min(1.0);
+    (recall * label_acc * fp_penalty).clamp(0.0, 1.0)
+}
+
+impl ModelLadder {
+    /// Build the ladder for a video domain (matched by preset name,
+    /// `eth_sunnyday` / `adl_rundle6`) from the calibrated full and tiny
+    /// profiles of both paper models. Rung 0 is whatever survives Pareto
+    /// pruning as the most accurate variant (YOLOv3-full on both paper
+    /// videos), and [`ModelLadder::speedups`] normalises to it — the
+    /// internal NCS2 reference rates cancel out.
+    pub fn from_profiles(video: &str) -> ModelLadder {
+        let mut candidates = Vec::new();
+        for model in [DetectorModelId::Yolov3, DetectorModelId::Ssd300] {
+            let rate = crate::device::DeviceKind::Ncs2.service_rate(model);
+            let full = QualityProfile::calibrated(model, video);
+            candidates.push(Rung {
+                name: full.name.clone(),
+                speedup: rate,
+                quality: quality_estimate(&full),
+            });
+            let tiny = QualityProfile::tiny(model, video);
+            candidates.push(Rung {
+                name: tiny.name.clone(),
+                speedup: rate * QualityProfile::tiny_speedup(model),
+                quality: quality_estimate(&tiny),
+            });
+        }
+        ModelLadder::pareto(candidates)
+    }
+
+    /// Keep only the non-dominated candidates (no other rung is at least
+    /// as fast *and* strictly better, or faster and at least as good),
+    /// sorted by ascending speedup / descending quality.
+    pub fn pareto(mut candidates: Vec<Rung>) -> ModelLadder {
+        candidates.sort_by(|a, b| {
+            a.speedup
+                .partial_cmp(&b.speedup)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(
+                    b.quality
+                        .partial_cmp(&a.quality)
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+        });
+        let mut rungs: Vec<Rung> = Vec::new();
+        for c in candidates {
+            let dominated = rungs.iter().any(|r| {
+                (r.speedup >= c.speedup - 1e-12 && r.quality > c.quality + 1e-12)
+                    || (r.speedup > c.speedup + 1e-12 && r.quality >= c.quality - 1e-12)
+            });
+            if dominated {
+                continue;
+            }
+            // A new, faster candidate can retro-dominate slower rungs
+            // with no quality edge.
+            rungs.retain(|r| {
+                !(c.speedup >= r.speedup - 1e-12 && c.quality > r.quality + 1e-12)
+                    && !(c.speedup > r.speedup + 1e-12 && c.quality >= r.quality - 1e-12)
+            });
+            rungs.push(c);
+        }
+        rungs.sort_by(|a, b| {
+            a.speedup
+                .partial_cmp(&b.speedup)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        ModelLadder { rungs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    /// Speedup vector for [`crate::fleet::admission::DegradeMode::ModelSwap`]
+    /// (normalised so rung 0 is 1.0).
+    pub fn speedups(&self) -> Vec<f64> {
+        let base = self.rungs.first().map(|r| r.speedup).unwrap_or(1.0);
+        self.rungs.iter().map(|r| r.speedup / base).collect()
+    }
+
+    /// Intrinsic quality of `rung` (clamped to the deepest rung; 0.0 for
+    /// an empty ladder).
+    pub fn quality(&self, rung: usize) -> f64 {
+        if self.rungs.is_empty() {
+            return 0.0;
+        }
+        self.rungs[rung.min(self.rungs.len() - 1)].quality
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_decay_matches_paper_anchor() {
+        assert_eq!(staleness_factor(0.0), 1.0);
+        // §II-B anchor: mean stale age ≈ 0.16 s -> factor ≈ 0.76.
+        let f = staleness_factor(0.164);
+        assert!((f - 0.766).abs() < 0.02, "factor {f}");
+        // Decay hits zero at τ and stays there.
+        assert_eq!(staleness_factor(STALENESS_TAU), 0.0);
+        assert_eq!(staleness_factor(10.0), 0.0);
+        assert_eq!(staleness_factor(-1.0), 1.0);
+    }
+
+    #[test]
+    fn quality_estimate_tracks_calibrated_maps() {
+        // The proxy must land near the paper baselines the profiles were
+        // calibrated to (± 5 points).
+        let cases = [
+            (DetectorModelId::Yolov3, "eth_sunnyday", 0.869),
+            (DetectorModelId::Ssd300, "eth_sunnyday", 0.745),
+            (DetectorModelId::Yolov3, "adl_rundle6", 0.625),
+            (DetectorModelId::Ssd300, "adl_rundle6", 0.544),
+        ];
+        for (model, video, map) in cases {
+            let q = quality_estimate(&QualityProfile::calibrated(model, video));
+            assert!(
+                (q - map).abs() < 0.05,
+                "{model:?}@{video}: proxy {q:.3} vs paper {map}"
+            );
+        }
+    }
+
+    #[test]
+    fn eth_ladder_is_a_strict_frontier() {
+        let ladder = ModelLadder::from_profiles("eth_sunnyday");
+        assert!(ladder.len() >= 2, "ladder {:?}", ladder.rungs);
+        // Rung 0 is the full base model.
+        assert_eq!(ladder.rungs[0].name, "yolov3@eth");
+        assert!((ladder.speedups()[0] - 1.0).abs() < 1e-12);
+        // Strictly faster and strictly worse, rung by rung.
+        for w in ladder.rungs.windows(2) {
+            assert!(w[1].speedup > w[0].speedup + 1e-9, "{:?}", ladder.rungs);
+            assert!(w[1].quality < w[0].quality - 1e-9, "{:?}", ladder.rungs);
+        }
+        // SSD300-full is dominated by YOLOv3-full on NCS2 (slower and
+        // less accurate) and must be pruned.
+        assert!(
+            !ladder.rungs.iter().any(|r| r.name == "ssd300@eth"),
+            "{:?}",
+            ladder.rungs
+        );
+    }
+
+    #[test]
+    fn pareto_prunes_dominated_candidates() {
+        let ladder = ModelLadder::pareto(vec![
+            Rung { name: "a".into(), speedup: 1.0, quality: 0.9 },
+            Rung { name: "dominated".into(), speedup: 0.9, quality: 0.7 },
+            Rung { name: "b".into(), speedup: 2.0, quality: 0.6 },
+            Rung { name: "also-dominated".into(), speedup: 2.0, quality: 0.5 },
+        ]);
+        let names: Vec<&str> = ladder.rungs.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+        assert_eq!(ladder.speedups(), vec![1.0, 2.0]);
+        assert!((ladder.quality(0) - 0.9).abs() < 1e-12);
+        assert!((ladder.quality(7) - 0.6).abs() < 1e-12); // clamps deep
+    }
+
+    #[test]
+    fn empty_ladder_is_harmless() {
+        let ladder = ModelLadder::pareto(Vec::new());
+        assert!(ladder.is_empty());
+        assert_eq!(ladder.quality(0), 0.0);
+        assert!(ladder.speedups().is_empty());
+    }
+}

@@ -1,0 +1,40 @@
+//! Closed-loop adaptation: feedback-driven device scaling and
+//! quality-aware model swap.
+//!
+//! The paper picks the parallelism degree *n* once, offline, from the
+//! §III-B nselect band; the fleet layer reacts only to scripted control
+//! events. This subsystem closes the loop: per-stream signals observed
+//! at runtime drive [`crate::fleet::registry::ControlAction`]s through
+//! the [`crate::fleet::sim::FleetController`] seam.
+//!
+//! * [`signals`] — sliding-window observers per stream (p99 output
+//!   latency, drop rate, delivered FPS) fed from the engines' emitted
+//!   records.
+//! * [`ladder`] — the model ladder: an accuracy–rate Pareto frontier
+//!   over SSD300 / YOLOv3 and their tiny variants, built from the
+//!   calibrated [`crate::detector::quality`] profiles, plus the
+//!   staleness model that prices stale-box reuse.
+//! * [`policy`] — the controllers: a generalised-nselect device
+//!   controller (attach/detach replicas to hold Σμ inside the
+//!   `[Σ⌈floor(λ)⌉, Σλ]/util` band, with hysteresis and cooldown) and a
+//!   per-stream quality controller that walks the ladder so overload
+//!   trades mAP for rate *before* falling back to stride subsampling.
+//! * [`runner`] — end-to-end drivers: deterministic virtual time
+//!   ([`runner::run_autoscale_sim`]) and wall clock at epoch
+//!   granularity ([`runner::run_autoscale_serve`]).
+//!
+//! Quality-aware admission itself lives in
+//! [`crate::fleet::admission::DegradeMode::ModelSwap`]: re-levelling on
+//! any membership or capacity change walks streams down and up the
+//! ladder; the controllers here add the feedback that changes membership
+//! (devices) and overrides rungs from observed signals.
+
+pub mod ladder;
+pub mod policy;
+pub mod runner;
+pub mod signals;
+
+pub use ladder::{quality_estimate, staleness_factor, ModelLadder, Rung, STALENESS_TAU};
+pub use policy::{capacity_band, device_band, floor_demand, AutoscaleConfig, AutoscaleController};
+pub use runner::{run_autoscale_serve, run_autoscale_sim, AutoscaleOutcome, EpochPoint};
+pub use signals::{FleetSignals, StreamWindow};

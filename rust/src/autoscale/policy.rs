@@ -1,0 +1,461 @@
+//! The closed-loop policies: a generalised-nselect **device controller**
+//! and a per-stream **quality (ladder) controller**, packaged as one
+//! [`AutoscaleController`] implementing
+//! [`crate::fleet::sim::FleetController`].
+//!
+//! ## Device controller
+//!
+//! §III-B picks the parallelism degree once, offline, from the band
+//! `n ∈ [⌈10/μ⌉, ⌈λ/μ⌉]`. Generalised to a fleet, the band becomes a
+//! pool-capacity target: Σμ should sit inside
+//! `[Σ_s floor(λ_s), Σ_s λ_s] / util`, where `floor(λ)` relaxes to the
+//! 10-FPS perception floor for fast streams (λ > 12) and stays λ for
+//! slow ones ([`capacity_band`]). The controller attaches a template
+//! replica when the observed worst-stream p99 or excess drop rate
+//! breaches its bound (or capacity is below the band floor), and
+//! detaches one only when signals are healthy *and* the remaining
+//! capacity still clears the floor with a hysteresis margin — the
+//! asymmetric thresholds plus a cooldown between actions are what
+//! prevent flapping.
+//!
+//! ## Quality controller
+//!
+//! Per stream, walks the model ladder from observed signals: a p99 or
+//! drop breach steps the stream one rung down (faster, lower mAP)
+//! before any extra stride would be needed; sustained health steps it
+//! back up — but only when the restored rung would not reintroduce a
+//! stride, so it never fights the admission-computed operating point.
+//! A step-up that breaches again within two cooldowns doubles the
+//! stream's re-probe delay (bounded), damping limit-cycle flapping
+//! under stationary overload.
+
+use crate::coordinator::nselect;
+use crate::coordinator::nselect::NRange;
+use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::registry::{ControlAction, FleetRegistry};
+use crate::fleet::sim::FleetController;
+use crate::fleet::stream::StreamId;
+use crate::types::OutputRecord;
+
+use crate::autoscale::ladder::ModelLadder;
+use crate::autoscale::signals::FleetSignals;
+
+/// Per-stream demand floor for the capacity band: the §III-B relaxation
+/// (10-FPS perception floor applies only to streams faster than the
+/// 12-FPS threshold).
+pub fn floor_demand(lambda: f64) -> f64 {
+    if lambda > nselect::RELAXATION_THRESHOLD_FPS {
+        nselect::PERCEPTION_FLOOR_FPS
+    } else {
+        lambda
+    }
+}
+
+/// Generalised §III-B band in pool-capacity terms:
+/// `[Σ floor(λ_s), Σ λ_s] / util`.
+pub fn capacity_band(demands: &[f64], util: f64) -> (f64, f64) {
+    let u = util.max(1e-6);
+    let hi: f64 = demands.iter().sum::<f64>() / u;
+    let lo: f64 = demands.iter().map(|&d| floor_demand(d)).sum::<f64>() / u;
+    (lo.min(hi), hi)
+}
+
+/// The same band as a device count for homogeneous `mu`-rate replicas —
+/// the literal generalised nselect `n ∈ [⌈Σfloor(λ)/μ⌉, ⌈Σλ/μ⌉]`
+/// (utilisation-adjusted).
+pub fn device_band(demands: &[f64], mu: f64, util: f64) -> NRange {
+    let (lo, hi) = capacity_band(demands, util);
+    let m = mu.max(1e-9);
+    let hi_n = ((hi / m).ceil() as usize).max(1);
+    let lo_n = ((lo / m).ceil() as usize).max(1).min(hi_n);
+    NRange { lo: lo_n, hi: hi_n }
+}
+
+/// Autoscale policy parameters.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Sliding signal window (seconds of fleet time).
+    pub signal_window: f64,
+    /// Control-loop period (seconds).
+    pub tick: f64,
+    /// Worst-stream p99 output-latency bound (seconds).
+    pub p99_bound: f64,
+    /// Excess drop rate (beyond admission-mandated strides) that counts
+    /// as a breach.
+    pub max_drop_rate: f64,
+    /// Minimum time between actions of the same controller (seconds).
+    pub cooldown: f64,
+    /// Scale-down margin: detach only if the remaining capacity still
+    /// clears the band floor by this factor.
+    pub hysteresis: f64,
+    /// Health threshold for recovery steps, as a fraction of
+    /// `p99_bound` (step up / detach only when p99 is below it).
+    pub recovery_frac: f64,
+    pub min_devices: usize,
+    pub max_devices: usize,
+    /// Template replica the device controller attaches on scale-up.
+    pub device_kind: DeviceKind,
+    pub device_model: DetectorModelId,
+    /// Template replica service rate μ (frames/second).
+    pub device_rate: f64,
+    /// Model ladder for the quality controller; `None` scales devices
+    /// only.
+    pub ladder: Option<ModelLadder>,
+    /// Pool-capacity fraction admission may commit (mirrors
+    /// [`AdmissionPolicy::target_utilization`]).
+    pub target_utilization: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            signal_window: 4.0,
+            tick: 1.0,
+            p99_bound: 1.5,
+            max_drop_rate: 0.05,
+            cooldown: 5.0,
+            hysteresis: 1.25,
+            recovery_frac: 0.4,
+            min_devices: 1,
+            max_devices: 16,
+            device_kind: DeviceKind::Ncs2,
+            device_model: DetectorModelId::Yolov3,
+            device_rate: 2.5,
+            ladder: None,
+            target_utilization: 0.95,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    pub fn with_ladder(mut self, ladder: ModelLadder) -> Self {
+        self.ladder = Some(ladder);
+        self
+    }
+
+    /// The admission policy this configuration implies: enforcing, with
+    /// model-swap degradation when a ladder is present.
+    pub fn admission(&self) -> AdmissionPolicy {
+        let mut p = match &self.ladder {
+            Some(l) if l.len() > 1 => AdmissionPolicy::with_ladder(l.speedups()),
+            _ => AdmissionPolicy::default(),
+        };
+        p.target_utilization = self.target_utilization;
+        p
+    }
+}
+
+/// The closed-loop controller: windowed signals in, `ControlAction`s
+/// out, on every engine tick.
+pub struct AutoscaleController {
+    pub cfg: AutoscaleConfig,
+    signals: FleetSignals,
+    last_device_action: f64,
+    next_replica: usize,
+    // Per-stream quality-controller state (indexed by StreamId).
+    last_rung_action: Vec<f64>,
+    last_step_up: Vec<f64>,
+    up_backoff: Vec<f64>,
+    /// `(stride, rung)` each stream was last observed at; a change
+    /// resets the stream's signal window (regime change).
+    last_regime: Vec<(u64, usize)>,
+}
+
+impl AutoscaleController {
+    pub fn new(cfg: AutoscaleConfig) -> AutoscaleController {
+        let window = cfg.signal_window.max(1e-3);
+        AutoscaleController {
+            cfg,
+            signals: FleetSignals::new(window),
+            last_device_action: f64::NEG_INFINITY,
+            next_replica: 0,
+            last_rung_action: Vec::new(),
+            last_step_up: Vec::new(),
+            up_backoff: Vec::new(),
+            last_regime: Vec::new(),
+        }
+    }
+
+    fn ensure_stream(&mut self, sid: StreamId) {
+        while self.last_rung_action.len() <= sid {
+            self.last_rung_action.push(f64::NEG_INFINITY);
+            self.last_step_up.push(f64::NEG_INFINITY);
+            self.up_backoff.push(self.cfg.cooldown);
+            // Stride 0 is never a real operating point, so the first
+            // sight of a stream registers its regime (and clears an
+            // at-most-one-tick-old window).
+            self.last_regime.push((0, 0));
+        }
+    }
+
+    /// Drop windows whose stream changed operating point since the last
+    /// tick: samples gathered under an old stride/rung (e.g. mandated
+    /// drops of a relaxed stride) must not read as a breach of the new
+    /// one.
+    fn reset_changed_regimes(&mut self, reg: &FleetRegistry, active: &[StreamId]) {
+        for &sid in active {
+            self.ensure_stream(sid);
+            let d = &reg.streams[sid].decision;
+            let regime = (d.stride(), d.rung());
+            if self.last_regime[sid] != regime {
+                self.last_regime[sid] = regime;
+                self.signals.stream_mut(sid).clear();
+            }
+        }
+    }
+
+    fn template(&mut self, reg: &FleetRegistry) -> DeviceInstance {
+        // Stable-ish replica ids past any initial pool.
+        self.next_replica = self.next_replica.max(reg.pool.len());
+        let replica = self.next_replica;
+        self.next_replica += 1;
+        DeviceInstance::with_rate(
+            self.cfg.device_kind,
+            self.cfg.device_model,
+            replica,
+            self.cfg.device_rate,
+        )
+    }
+
+    /// Streams that still generate load: attached, admitted, and not yet
+    /// past their last frame.
+    fn active_streams(&self, reg: &FleetRegistry) -> Vec<StreamId> {
+        reg.streams
+            .iter()
+            .filter(|s| {
+                !s.detached && s.decision.is_admitted() && s.arrived < s.spec.num_frames
+            })
+            .map(|s| s.id)
+            .collect()
+    }
+
+    /// Admission-mandated drop fraction across `sids` (what the strides
+    /// already promise to drop — not a signal of distress).
+    fn mandated_drop_rate(&self, reg: &FleetRegistry, sids: &[StreamId]) -> f64 {
+        let mut offered = 0.0;
+        let mut kept = 0.0;
+        for &sid in sids {
+            let s = &reg.streams[sid];
+            let lambda = s.spec.demand();
+            offered += lambda;
+            kept += lambda / s.decision.stride() as f64;
+        }
+        if offered <= 0.0 {
+            0.0
+        } else {
+            1.0 - kept / offered
+        }
+    }
+
+    fn device_control(
+        &mut self,
+        now: f64,
+        reg: &FleetRegistry,
+        active: &[StreamId],
+        breach: bool,
+        worst_p99: f64,
+    ) -> Option<ControlAction> {
+        if now - self.last_device_action < self.cfg.cooldown {
+            return None;
+        }
+        let demands: Vec<f64> = active
+            .iter()
+            .map(|&sid| reg.streams[sid].spec.demand())
+            .collect();
+        let (cap_lo, cap_hi) = capacity_band(&demands, self.cfg.target_utilization);
+        let capacity = reg.pool.attached_rate();
+        let n_attached = reg.pool.devices().iter().filter(|d| d.attached).count();
+
+        if (breach || capacity + 1e-9 < cap_lo)
+            && capacity + 1e-9 < cap_hi
+            && n_attached < self.cfg.max_devices
+        {
+            let instance = self.template(reg);
+            self.last_device_action = now;
+            return Some(ControlAction::AttachDevice(instance));
+        }
+
+        if !breach
+            && worst_p99 < self.cfg.recovery_frac * self.cfg.p99_bound
+            && n_attached > self.cfg.min_devices
+        {
+            // Victim: the highest-slot attached device; only if what
+            // remains still clears the band floor with margin.
+            if let Some((dev, victim)) = reg
+                .pool
+                .devices()
+                .iter()
+                .enumerate()
+                .rev()
+                .find(|(_, d)| d.attached)
+            {
+                let remaining = capacity - victim.instance.rate();
+                if remaining + 1e-9 >= cap_lo * self.cfg.hysteresis {
+                    self.last_device_action = now;
+                    return Some(ControlAction::DetachDevice(dev));
+                }
+            }
+        }
+        None
+    }
+
+    fn quality_control(
+        &mut self,
+        now: f64,
+        reg: &FleetRegistry,
+        active: &[StreamId],
+    ) -> Vec<ControlAction> {
+        let max_rung = reg.admission.max_rung();
+        if max_rung == 0 {
+            return Vec::new();
+        }
+        let mut actions = Vec::new();
+        for &sid in active {
+            self.ensure_stream(sid);
+            let s = &reg.streams[sid];
+            let rung = s.decision.rung();
+            let stride = s.decision.stride();
+            let w = self.signals.stream_mut(sid);
+            if w.sample_count(now) == 0 {
+                continue;
+            }
+            let p99 = w.p99(now);
+            let drop = w.drop_rate(now);
+            let delivered_fps = w.processed_fps(now);
+            let mandated = 1.0 - 1.0 / stride as f64;
+            let excess_drop = (drop - mandated).max(0.0);
+            let overloaded = p99 > self.cfg.p99_bound || excess_drop > self.cfg.max_drop_rate;
+            // Step back up only when the stream is demonstrably keeping
+            // up at its current operating point: low tail latency, no
+            // excess drops, and delivered FPS near the kept rate λ/stride.
+            let kept_rate = s.spec.demand() / stride as f64;
+            let healthy = p99 < self.cfg.recovery_frac * self.cfg.p99_bound
+                && excess_drop <= self.cfg.max_drop_rate * 0.5
+                && delivered_fps + 1e-9 >= 0.7 * kept_rate;
+
+            if overloaded && rung < max_rung {
+                if now - self.last_rung_action[sid] < self.cfg.cooldown {
+                    continue;
+                }
+                // A breach shortly after a probe upward: back off the
+                // next probe exponentially (bounded) — anti-flapping. A
+                // breach long after the last probe is a fresh overload
+                // episode, not a flap: the penalty resets so the
+                // documented one-cooldown recovery holds per episode.
+                if now - self.last_step_up[sid] < 2.0 * self.cfg.cooldown {
+                    self.up_backoff[sid] =
+                        (self.up_backoff[sid] * 2.0).min(16.0 * self.cfg.cooldown);
+                } else {
+                    self.up_backoff[sid] = self.cfg.cooldown;
+                }
+                self.last_rung_action[sid] = now;
+                actions.push(ControlAction::SwapModel { stream: sid, rung: rung + 1 });
+            } else if healthy && rung > 0 {
+                if now - self.last_rung_action[sid] < self.up_backoff[sid] {
+                    continue;
+                }
+                // Never step up into a stride: the restored rung must
+                // still fit the stream's share at full frame rate.
+                let Some(share) = s.decision.share() else {
+                    continue;
+                };
+                let target = reg
+                    .admission
+                    .decision_at_rung(s.spec.demand(), share, rung - 1);
+                if target.stride() > 1 {
+                    continue;
+                }
+                self.last_rung_action[sid] = now;
+                self.last_step_up[sid] = now;
+                if rung == 1 {
+                    // Fully recovered: the next episode probes at the
+                    // base cadence again.
+                    self.up_backoff[sid] = self.cfg.cooldown;
+                }
+                actions.push(ControlAction::SwapModel { stream: sid, rung: rung - 1 });
+            }
+        }
+        actions
+    }
+}
+
+impl FleetController for AutoscaleController {
+    fn interval(&self) -> f64 {
+        self.cfg.tick.max(1e-3)
+    }
+
+    fn observe(&mut self, now: f64, sid: StreamId, record: &OutputRecord) {
+        self.signals.observe(now, sid, record);
+    }
+
+    fn act(&mut self, now: f64, reg: &FleetRegistry) -> Vec<ControlAction> {
+        let active = self.active_streams(reg);
+        if active.is_empty() {
+            return Vec::new();
+        }
+        self.reset_changed_regimes(reg, &active);
+        let worst_p99 = self.signals.worst_p99(now, &active);
+        let (dropped, total) = self.signals.drop_counts(now, &active);
+        let drop_rate = if total == 0 {
+            0.0
+        } else {
+            dropped as f64 / total as f64
+        };
+        let mandated = self.mandated_drop_rate(reg, &active);
+        let excess_drop = (drop_rate - mandated).max(0.0);
+        let breach =
+            worst_p99 > self.cfg.p99_bound || excess_drop > self.cfg.max_drop_rate;
+
+        let mut actions = Vec::new();
+        if let Some(a) = self.device_control(now, reg, &active, breach, worst_p99) {
+            actions.push(a);
+        }
+        actions.extend(self.quality_control(now, reg, &active));
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_demand_applies_paper_relaxation() {
+        assert_eq!(floor_demand(5.0), 5.0); // slow stream: no relaxation
+        assert_eq!(floor_demand(12.0), 12.0); // at threshold: none
+        assert_eq!(floor_demand(14.0), 10.0); // fast stream: 10-FPS floor
+        assert_eq!(floor_demand(30.0), 10.0);
+    }
+
+    #[test]
+    fn capacity_band_generalises_nselect() {
+        // One 14-FPS stream, μ=2.5, util=1: the paper's §III-B example —
+        // n ∈ [4, 6].
+        let band = device_band(&[14.0], 2.5, 1.0);
+        assert_eq!((band.lo, band.hi), (4, 6));
+        // Slow streams collapse the band to the conservative point.
+        let band = device_band(&[5.0, 5.0], 2.5, 1.0);
+        assert_eq!((band.lo, band.hi), (4, 4));
+        // Mixed fleet: floors add per stream.
+        let (lo, hi) = capacity_band(&[14.0, 5.0], 1.0);
+        assert!((lo - 15.0).abs() < 1e-12);
+        assert!((hi - 19.0).abs() < 1e-12);
+        // Utilisation headroom scales the band up.
+        let (lo95, hi95) = capacity_band(&[14.0, 5.0], 0.95);
+        assert!(lo95 > lo && hi95 > hi);
+    }
+
+    #[test]
+    fn config_admission_reflects_ladder() {
+        let plain = AutoscaleConfig::default().admission();
+        assert_eq!(plain.max_rung(), 0);
+        let ladder = ModelLadder::pareto(vec![
+            crate::autoscale::ladder::Rung { name: "full".into(), speedup: 1.0, quality: 0.86 },
+            crate::autoscale::ladder::Rung { name: "tiny".into(), speedup: 2.6, quality: 0.69 },
+        ]);
+        let with = AutoscaleConfig::default().with_ladder(ladder).admission();
+        assert_eq!(with.max_rung(), 1);
+        assert!((with.rung_speedup(1) - 2.6).abs() < 1e-12);
+    }
+}

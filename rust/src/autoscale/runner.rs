@@ -1,0 +1,334 @@
+//! Drivers that run the closed loop end to end.
+//!
+//! * [`run_autoscale_sim`] — virtual time, deterministic: plugs an
+//!   [`AutoscaleController`] into [`crate::fleet::sim::run_fleet_with`]
+//!   and returns the report plus the control log and derived telemetry
+//!   (device-count timeline, action counts). This is the engine behind
+//!   `experiments::autoscale` and the integration tests.
+//! * [`run_autoscale_serve`] — wall clock: the same feedback law at
+//!   **epoch granularity** over [`crate::fleet::serve::serve_fleet`].
+//!   Each epoch serves a slice of every stream's clip with the current
+//!   worker count and (fleet-wide) ladder rung; between epochs the
+//!   controller reads the epoch's report and adjusts. Per-job model
+//!   switching inside a shared wall-clock worker is deliberately out of
+//!   scope here (it belongs with stream sharding); the rung is uniform
+//!   per epoch.
+
+use anyhow::Result;
+
+use crate::detector::Detector;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::registry::ControlAction;
+use crate::fleet::serve::{serve_fleet, FleetServeConfig};
+use crate::fleet::sim::{run_fleet_with, ControlRecord, Scenario};
+use crate::fleet::stream::StreamSpec;
+use crate::fleet::FleetReport;
+use crate::video::Clip;
+
+use crate::autoscale::policy::{AutoscaleConfig, AutoscaleController};
+
+/// Everything a closed-loop virtual-time run produces.
+pub struct AutoscaleOutcome {
+    pub report: FleetReport,
+    pub control_log: Vec<ControlRecord>,
+    /// `(time, attached device count)` after every device action,
+    /// starting with `(0, initial)`.
+    pub device_timeline: Vec<(f64, usize)>,
+    pub device_actions: usize,
+    pub rung_actions: usize,
+}
+
+impl AutoscaleOutcome {
+    /// Attached device count at fleet time `t`.
+    pub fn devices_at(&self, t: f64) -> usize {
+        crate::util::stats::timeline_at(&self.device_timeline, t)
+            .or_else(|| self.device_timeline.first().map(|&(_, n)| n))
+            .unwrap_or(0)
+    }
+
+    /// Final attached device count.
+    pub fn final_devices(&self) -> usize {
+        self.device_timeline.last().map(|&(_, n)| n).unwrap_or(0)
+    }
+
+    /// Controller (non-scripted) device actions only.
+    pub fn controller_device_actions(&self) -> usize {
+        self.control_log
+            .iter()
+            .filter(|r| {
+                !r.scripted
+                    && matches!(
+                        r.action,
+                        ControlAction::AttachDevice(_) | ControlAction::DetachDevice(_)
+                    )
+            })
+            .count()
+    }
+}
+
+/// Run `scenario` under a fresh [`AutoscaleController`] built from
+/// `cfg`. The scenario's admission policy should normally come from
+/// [`AutoscaleConfig::admission`] so ladder speedups agree; this is not
+/// enforced (experiments deliberately mix them for baselines).
+pub fn run_autoscale_sim(scenario: &Scenario, cfg: &AutoscaleConfig) -> AutoscaleOutcome {
+    let mut controller = AutoscaleController::new(cfg.clone());
+    let out = run_fleet_with(scenario, Some(&mut controller));
+
+    let mut devices = scenario.devices.len();
+    let mut device_timeline = vec![(0.0, devices)];
+    let mut device_actions = 0;
+    let mut rung_actions = 0;
+    for r in &out.control_log {
+        match &r.action {
+            ControlAction::AttachDevice(_) => {
+                devices += 1;
+                device_timeline.push((r.at, devices));
+                device_actions += 1;
+            }
+            ControlAction::DetachDevice(_) => {
+                devices = devices.saturating_sub(1);
+                device_timeline.push((r.at, devices));
+                device_actions += 1;
+            }
+            ControlAction::SwapModel { .. } => rung_actions += 1,
+            _ => {}
+        }
+    }
+
+    AutoscaleOutcome {
+        report: out.report,
+        control_log: out.control_log,
+        device_timeline,
+        device_actions,
+        rung_actions,
+    }
+}
+
+/// One wall-clock control epoch's observed state and applied knobs.
+#[derive(Debug, Clone)]
+pub struct EpochPoint {
+    pub epoch: usize,
+    /// Workers serving this epoch.
+    pub workers: usize,
+    /// Fleet-wide ladder rung this epoch (0 = full model).
+    pub rung: usize,
+    /// Worst per-stream p99 output latency observed (seconds).
+    pub p99: f64,
+    pub drop_rate: f64,
+    pub processed: u64,
+    pub frames: u64,
+}
+
+/// Wall-clock closed loop at epoch granularity: serve `epoch_frames` of
+/// every stream per epoch, read the epoch report, adjust workers and the
+/// fleet-wide rung for the next epoch. `factory(worker, rung)` builds a
+/// detector for the given ladder rung (rung 0 = full model).
+pub fn run_autoscale_serve<F>(
+    streams: &[(&Clip, StreamSpec)],
+    cfg: &AutoscaleConfig,
+    initial_workers: usize,
+    epoch_frames: u64,
+    epochs: usize,
+    factory: F,
+) -> Result<Vec<EpochPoint>>
+where
+    F: Fn(usize, usize) -> Result<Box<dyn Detector>> + Send + Sync,
+{
+    assert!(epoch_frames > 0 && epochs > 0);
+    let max_rung = cfg.ladder.as_ref().map(|l| l.len().saturating_sub(1)).unwrap_or(0);
+    let mut workers = initial_workers.clamp(cfg.min_devices.max(1), cfg.max_devices.max(1));
+    let mut rung = 0usize;
+    let mut points = Vec::with_capacity(epochs);
+
+    for epoch in 0..epochs {
+        // Slice this epoch's frames out of every stream's clip.
+        let mut epoch_clips: Vec<Clip> = Vec::with_capacity(streams.len());
+        let mut epoch_specs: Vec<StreamSpec> = Vec::with_capacity(streams.len());
+        for (clip, spec) in streams {
+            let total = spec.num_frames.min(clip.len() as u64);
+            let start = (epoch as u64 * epoch_frames).min(total);
+            let end = (start + epoch_frames).min(total);
+            epoch_clips.push(Clip {
+                spec: clip.spec.clone(),
+                frames: clip.frames[start as usize..end as usize].to_vec(),
+            });
+            let mut s = spec.clone();
+            s.num_frames = end - start;
+            epoch_specs.push(s);
+        }
+        let pairs: Vec<(&Clip, StreamSpec)> = epoch_clips
+            .iter()
+            .zip(epoch_specs.iter().cloned())
+            .collect();
+        if pairs.iter().all(|(c, _)| c.is_empty()) {
+            break;
+        }
+
+        let serve_cfg = FleetServeConfig {
+            admission: AdmissionPolicy::admit_all(),
+            device_rates: vec![cfg.device_rate; workers],
+            paced: true,
+        };
+        let rung_now = rung;
+        let mut report = serve_fleet(&pairs, &serve_cfg, |w| factory(w, rung_now))?;
+
+        let mut p99 = 0.0f64;
+        for s in report.streams.iter_mut() {
+            p99 = p99.max(s.metrics.latency.p99());
+        }
+        let drop_rate = report.drop_rate();
+        points.push(EpochPoint {
+            epoch,
+            workers,
+            rung,
+            p99,
+            drop_rate,
+            processed: report.total_processed(),
+            frames: report.total_frames(),
+        });
+
+        // Epoch-granularity feedback (cooldown is implicit: one action
+        // per controller per epoch).
+        let breach = p99 > cfg.p99_bound || drop_rate > cfg.max_drop_rate;
+        let healthy = p99 < cfg.recovery_frac * cfg.p99_bound
+            && drop_rate <= cfg.max_drop_rate * 0.5;
+        if breach {
+            if rung < max_rung {
+                rung += 1;
+            } else if workers < cfg.max_devices {
+                workers += 1;
+            }
+        } else if healthy {
+            if rung > 0 {
+                rung -= 1;
+            } else if workers > cfg.min_devices.max(1) {
+                workers -= 1;
+            }
+        }
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
+    use crate::types::{Detection, Frame};
+    use crate::video::{generate, presets};
+    use std::time::Duration;
+
+    fn devices(rates: &[f64]) -> Vec<DeviceInstance> {
+        rates
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| {
+                DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sim_runner_collects_device_timeline() {
+        // Under-provisioned stationary load: 4 × 5-FPS streams (Σλ = 20)
+        // on 2 × 2.5-FPS devices. The controller must attach toward the
+        // band ⌈20 / (2.5·0.95)⌉ = 9 devices, one per cooldown.
+        let cfg = AutoscaleConfig {
+            cooldown: 5.0,
+            max_devices: 12,
+            ..AutoscaleConfig::default()
+        };
+        let streams: Vec<StreamSpec> = (0..4)
+            .map(|i| StreamSpec::new(&format!("s{i}"), 5.0, 600).with_window(4))
+            .collect();
+        let scenario = Scenario::new(devices(&[2.5, 2.5]), streams)
+            .with_admission(cfg.admission())
+            .with_seed(3);
+        let out = run_autoscale_sim(&scenario, &cfg);
+        assert_eq!(out.device_timeline[0], (0.0, 2));
+        assert_eq!(out.final_devices(), 9, "timeline {:?}", out.device_timeline);
+        assert_eq!(out.device_actions, 7);
+        assert_eq!(out.controller_device_actions(), 7);
+        // Timeline lookup is monotone.
+        assert_eq!(out.devices_at(0.0), 2);
+        assert!(out.devices_at(30.0) > out.devices_at(2.0));
+        // Everything the streams offered is eventually near-fully served.
+        let total = out.report.total_frames();
+        let processed = out.report.total_processed();
+        assert!(
+            processed as f64 > total as f64 * 0.55,
+            "processed {processed}/{total}"
+        );
+    }
+
+    /// Ground-truth echo with a rung-dependent delay.
+    struct RungEcho {
+        delay: Duration,
+    }
+
+    impl Detector for RungEcho {
+        fn detect(&mut self, frame: &Frame) -> Vec<Detection> {
+            std::thread::sleep(self.delay);
+            frame
+                .ground_truth
+                .iter()
+                .map(|gt| Detection { bbox: gt.bbox, class_id: gt.class_id, score: 0.9 })
+                .collect()
+        }
+        fn label(&self) -> String {
+            "rung-echo".into()
+        }
+    }
+
+    #[test]
+    fn serve_runner_steps_down_ladder_under_overload() {
+        // 2 × 25-FPS streams against one worker whose full model takes
+        // 25 ms/frame (≈ 40 FPS capacity < 50 offered) and whose tiny
+        // rung takes 5 ms. The epoch loop must step the rung down after
+        // the overloaded first epoch and restore it once healthy.
+        let clips: Vec<Clip> = (0..2)
+            .map(|i| generate(&presets::tiny_clip(32, 60, 25.0, 50 + i), None))
+            .collect();
+        let streams: Vec<(&Clip, StreamSpec)> = clips
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                (c, StreamSpec::new(&format!("s{i}"), 25.0, 60).with_window(2))
+            })
+            .collect();
+        let ladder = crate::autoscale::ladder::ModelLadder::pareto(vec![
+            crate::autoscale::ladder::Rung { name: "full".into(), speedup: 1.0, quality: 0.86 },
+            crate::autoscale::ladder::Rung { name: "tiny".into(), speedup: 5.0, quality: 0.6 },
+        ]);
+        let cfg = AutoscaleConfig {
+            p99_bound: 0.25,
+            max_drop_rate: 0.05,
+            device_rate: 40.0,
+            max_devices: 2,
+            ..AutoscaleConfig::default()
+        }
+        .with_ladder(ladder);
+        let points = run_autoscale_serve(&streams, &cfg, 1, 20, 3, |_, rung| {
+            Ok(Box::new(RungEcho {
+                delay: Duration::from_millis(if rung == 0 { 25 } else { 5 }),
+            }) as Box<dyn Detector>)
+        })
+        .expect("serve loop");
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].rung, 0);
+        // First epoch is overloaded (40 FPS capacity vs 50 offered).
+        assert!(
+            points[0].drop_rate > 0.05 || points[0].p99 > 0.25,
+            "{:?}",
+            points[0]
+        );
+        // The loop reacts: epoch 1 runs one rung down, with 5× capacity
+        // headroom it serves cleanly...
+        assert_eq!(points[1].rung, 1, "{points:?}");
+        assert!(
+            points[1].drop_rate < points[0].drop_rate,
+            "{points:?}"
+        );
+        // ...and the healthy epoch restores the full model.
+        assert_eq!(points[2].rung, 0, "{points:?}");
+    }
+}

@@ -1,0 +1,268 @@
+//! Windowed per-stream / per-pool signal observers.
+//!
+//! The controllers in [`crate::autoscale::policy`] act on *recent*
+//! behaviour, not whole-run aggregates: each stream gets a sliding
+//! window of output-record observations (fed from the engine via
+//! [`crate::fleet::sim::FleetController::observe`], i.e. the same
+//! records that back [`crate::fleet::metrics`]), from which the
+//! controller reads p99 output latency, drop rate and effective
+//! delivered FPS over the last `window` seconds of fleet time.
+//!
+//! Windows are small (λ·window samples, tens of entries), so queries
+//! sort a scratch copy — no sketch machinery needed at control-loop
+//! rates.
+
+use crate::types::OutputRecord;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    t: f64,
+    latency: f64,
+    dropped: bool,
+}
+
+/// Sliding-window observer for one stream.
+#[derive(Debug, Clone)]
+pub struct StreamWindow {
+    window: f64,
+    samples: VecDeque<Sample>,
+}
+
+impl StreamWindow {
+    pub fn new(window: f64) -> StreamWindow {
+        assert!(window > 0.0, "signal window must be positive");
+        StreamWindow {
+            window,
+            samples: VecDeque::new(),
+        }
+    }
+
+    /// Record one emitted output record observed at fleet time `now`.
+    pub fn observe_record(&mut self, now: f64, record: &OutputRecord) {
+        self.observe(
+            now,
+            (record.emit_ts - record.capture_ts).max(0.0),
+            record.was_dropped(),
+        );
+    }
+
+    /// Record a raw `(latency, dropped)` observation at time `now`.
+    pub fn observe(&mut self, now: f64, latency: f64, dropped: bool) {
+        self.samples.push_back(Sample { t: now, latency, dropped });
+        self.evict(now);
+    }
+
+    fn evict(&mut self, now: f64) {
+        while let Some(s) = self.samples.front() {
+            if s.t < now - self.window {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Observations currently inside the window (as of time `now`).
+    pub fn sample_count(&mut self, now: f64) -> usize {
+        self.evict(now);
+        self.samples.len()
+    }
+
+    /// Forget everything — used when the observed stream's operating
+    /// point changes (re-levelled stride/rung): samples from the old
+    /// regime must not drive decisions about the new one.
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+
+    /// p99 output latency over the window (0 when empty) — nearest-rank
+    /// over all records, dropped ones included: a stale record's latency
+    /// is real output staleness the consumer sees.
+    pub fn p99(&mut self, now: f64) -> f64 {
+        self.pct(now, 99.0)
+    }
+
+    /// Nearest-rank percentile over the window's latencies.
+    pub fn pct(&mut self, now: f64, p: f64) -> f64 {
+        self.evict(now);
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs: Vec<f64> = self.samples.iter().map(|s| s.latency).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rank = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[rank.min(xs.len() - 1)]
+    }
+
+    /// `(dropped, total)` record counts in the window.
+    pub fn drop_counts(&mut self, now: f64) -> (usize, usize) {
+        self.evict(now);
+        let total = self.samples.len();
+        let dropped = self.samples.iter().filter(|s| s.dropped).count();
+        (dropped, total)
+    }
+
+    /// Fraction of windowed records that were dropped (0 when empty).
+    pub fn drop_rate(&mut self, now: f64) -> f64 {
+        let (dropped, total) = self.drop_counts(now);
+        if total == 0 {
+            0.0
+        } else {
+            dropped as f64 / total as f64
+        }
+    }
+
+    /// Processed (non-dropped) records per second over the window. The
+    /// denominator is the observed span, not the full window width, so a
+    /// window that has not filled yet (stream just attached) does not
+    /// read as phantom underload; a floor of a tenth of the window keeps
+    /// a lone first sample from reading as a rate spike instead.
+    pub fn processed_fps(&mut self, now: f64) -> f64 {
+        self.evict(now);
+        let Some(first) = self.samples.front() else {
+            return 0.0;
+        };
+        let span = (now - first.t).min(self.window).max(self.window * 0.1);
+        let processed = self.samples.iter().filter(|s| !s.dropped).count();
+        processed as f64 / span
+    }
+}
+
+/// Per-stream windows for a whole fleet, indexed by `StreamId`; grows on
+/// demand as streams attach mid-run.
+#[derive(Debug, Clone)]
+pub struct FleetSignals {
+    window: f64,
+    streams: Vec<StreamWindow>,
+}
+
+impl FleetSignals {
+    pub fn new(window: f64) -> FleetSignals {
+        assert!(window > 0.0, "signal window must be positive");
+        FleetSignals {
+            window,
+            streams: Vec::new(),
+        }
+    }
+
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// Feed one emitted record of stream `sid`.
+    pub fn observe(&mut self, now: f64, sid: usize, record: &OutputRecord) {
+        self.stream_mut(sid).observe_record(now, record);
+    }
+
+    /// The window for stream `sid` (created empty on first touch).
+    pub fn stream_mut(&mut self, sid: usize) -> &mut StreamWindow {
+        while self.streams.len() <= sid {
+            self.streams.push(StreamWindow::new(self.window));
+        }
+        &mut self.streams[sid]
+    }
+
+    /// Worst per-stream p99 across `sids` (the stream that governs
+    /// scale-up pressure).
+    pub fn worst_p99(&mut self, now: f64, sids: &[usize]) -> f64 {
+        sids.iter()
+            .map(|&sid| self.stream_mut(sid).p99(now))
+            .fold(0.0, f64::max)
+    }
+
+    /// Aggregate `(dropped, total)` record counts across `sids`.
+    pub fn drop_counts(&mut self, now: f64, sids: &[usize]) -> (usize, usize) {
+        let mut dropped = 0;
+        let mut total = 0;
+        for &sid in sids {
+            let (d, t) = self.stream_mut(sid).drop_counts(now);
+            dropped += d;
+            total += t;
+        }
+        (dropped, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(fid: u64, capture: f64, emit: f64, dropped: bool) -> OutputRecord {
+        OutputRecord {
+            frame_id: fid,
+            capture_ts: capture,
+            emit_ts: emit,
+            detections: vec![],
+            stale_from: if dropped { Some(fid) } else { None },
+            processed_by: if dropped { None } else { Some(0) },
+        }
+    }
+
+    #[test]
+    fn window_evicts_old_samples() {
+        let mut w = StreamWindow::new(2.0);
+        w.observe(0.0, 0.1, false);
+        w.observe(1.0, 0.2, false);
+        w.observe(3.5, 0.3, false);
+        // t=3.5: the t=0 and t=1 samples are out of the 2 s window.
+        assert_eq!(w.sample_count(3.5), 1);
+        assert!((w.p99(3.5) - 0.3).abs() < 1e-12);
+        // A later query time alone evicts, too.
+        assert_eq!(w.sample_count(10.0), 0);
+        assert_eq!(w.p99(10.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles_and_drop_rate_over_window() {
+        let mut w = StreamWindow::new(10.0);
+        for i in 0..100 {
+            w.observe(i as f64 * 0.05, i as f64 * 0.01, i % 4 == 0);
+        }
+        let p99 = w.p99(5.0);
+        assert!(p99 >= 0.97 && p99 <= 0.99, "p99 {p99}");
+        assert!((w.drop_rate(5.0) - 0.25).abs() < 1e-9);
+        let (d, t) = w.drop_counts(5.0);
+        assert_eq!((d, t), (25, 100));
+        // 75 processed over the observed 5 s span (the window has not
+        // filled yet — the denominator must not be the full 10 s).
+        assert!((w.processed_fps(5.0) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn processed_fps_spans_are_sane_at_the_edges() {
+        let mut w = StreamWindow::new(4.0);
+        assert_eq!(w.processed_fps(1.0), 0.0);
+        // A lone fresh sample is rate-floored, not a spike.
+        w.observe(1.0, 0.01, false);
+        assert!((w.processed_fps(1.0) - 1.0 / 0.4).abs() < 1e-9);
+        // A full window divides by the window width.
+        for i in 0..40 {
+            w.observe(1.0 + i as f64 * 0.25, 0.01, false);
+        }
+        let fps = w.processed_fps(11.0);
+        // Samples older than now-4 are evicted; ~16 remain over 4 s.
+        assert!(fps > 3.0 && fps < 4.5, "fps {fps}");
+    }
+
+    #[test]
+    fn observe_record_derives_latency_and_fate() {
+        let mut w = StreamWindow::new(5.0);
+        w.observe_record(1.0, &rec(0, 0.4, 1.0, false));
+        w.observe_record(1.2, &rec(1, 0.5, 1.2, true));
+        assert_eq!(w.sample_count(1.2), 2);
+        assert!((w.pct(1.2, 100.0) - 0.7).abs() < 1e-9);
+        assert!((w.drop_rate(1.2) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_signals_grow_on_demand_and_aggregate() {
+        let mut sig = FleetSignals::new(4.0);
+        sig.observe(1.0, 0, &rec(0, 0.5, 1.0, false));
+        sig.observe(1.0, 3, &rec(0, 0.0, 1.0, true));
+        assert!((sig.worst_p99(1.0, &[0, 3]) - 1.0).abs() < 1e-9);
+        assert_eq!(sig.drop_counts(1.0, &[0, 1, 2, 3]), (1, 2));
+        // Untouched streams read as empty, not as errors.
+        assert_eq!(sig.stream_mut(2).sample_count(1.0), 0);
+    }
+}

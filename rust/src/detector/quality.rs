@@ -88,6 +88,34 @@ impl QualityProfile {
             },
         }
     }
+
+    /// Tiny (edge-quantised, pruned-backbone) variant of a calibrated
+    /// profile: [`QualityProfile::tiny_speedup`]× faster inference
+    /// bought with a higher miss rate and noisier boxes. These are the
+    /// lower rungs of the autoscale model ladder
+    /// (`crate::autoscale::ladder`), the SSD300 ↔ YOLOv3 ↔ TinyDet
+    /// trade-off from the quality-aware admission design.
+    pub fn tiny(model: DetectorModelId, video: &str) -> QualityProfile {
+        let mut p = Self::calibrated(model, video);
+        p.name = format!("tiny-{}", p.name);
+        p.miss_rate = (p.miss_rate * 1.9 + 0.06).min(0.9);
+        p.fp_per_frame *= 1.5;
+        p.pos_jitter *= 1.6;
+        p.size_jitter *= 1.6;
+        p.confusion_rate = (p.confusion_rate * 2.0).min(0.2);
+        p.tp_score = (p.tp_score.0 * 0.9, p.tp_score.1);
+        p
+    }
+
+    /// Service-rate multiplier of the tiny variant relative to its full
+    /// parent model (smaller input, pruned backbone; in the spirit of
+    /// YOLOv3-tiny's published speedups on edge accelerators).
+    pub fn tiny_speedup(model: DetectorModelId) -> f64 {
+        match model {
+            DetectorModelId::Yolov3 => 2.6,
+            DetectorModelId::Ssd300 => 3.2,
+        }
+    }
 }
 
 /// One detector replica driven by the quality model.
@@ -234,6 +262,47 @@ mod tests {
         for f in clip.frames.iter().take(20) {
             assert_eq!(a.detect(f), b.detect(f));
         }
+    }
+
+    #[test]
+    fn tiny_variant_is_strictly_worse_but_valid() {
+        for model in [DetectorModelId::Yolov3, DetectorModelId::Ssd300] {
+            for video in ["eth_sunnyday", "adl_rundle6"] {
+                let full = QualityProfile::calibrated(model, video);
+                let tiny = QualityProfile::tiny(model, video);
+                assert!(tiny.miss_rate > full.miss_rate);
+                assert!(tiny.miss_rate < 1.0);
+                assert!(tiny.fp_per_frame > full.fp_per_frame);
+                assert!(tiny.confusion_rate >= full.confusion_rate);
+                assert!(tiny.name.starts_with("tiny-"), "{}", tiny.name);
+                assert!(QualityProfile::tiny_speedup(model) > 1.5);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_map_lands_below_full_model() {
+        let spec = presets::eth_sunnyday(9);
+        let clip = generate(&spec, None);
+        let mut full = QualityModelDetector::new(
+            QualityProfile::calibrated(DetectorModelId::Yolov3, &spec.name),
+            101,
+        );
+        let mut tiny = QualityModelDetector::new(
+            QualityProfile::tiny(DetectorModelId::Yolov3, &spec.name),
+            101,
+        );
+        let full_dets: Vec<Vec<Detection>> = clip.frames.iter().map(|f| full.detect(f)).collect();
+        let tiny_dets: Vec<Vec<Detection>> = clip.frames.iter().map(|f| tiny.detect(f)).collect();
+        let gt: Vec<&[GtBox]> = clip.frames.iter().map(|f| f.ground_truth.as_slice()).collect();
+        let full_map = evaluate_map(&full_dets, &gt, CLASSES.len(), 0.5).map;
+        let tiny_map = evaluate_map(&tiny_dets, &gt, CLASSES.len(), 0.5).map;
+        assert!(
+            tiny_map < full_map - 0.05,
+            "tiny {tiny_map} vs full {full_map}"
+        );
+        // Still a usable detector, not a degenerate one.
+        assert!(tiny_map > 0.35, "tiny map {tiny_map}");
     }
 
     #[test]

@@ -1,0 +1,589 @@
+//! Autoscale sweeps: closed-loop adaptation vs static baselines, in
+//! virtual time.
+//!
+//! Three scenarios exercise the controller (see EXPERIMENTS.md
+//! §Autoscale for the measured numbers):
+//!
+//! * [`step_load`] — the acceptance sweep: a 2× offered-load step on a
+//!   fixed 4-device pool, comparing static-n + stride-only degradation,
+//!   static-n + model-ladder admission, and ladder + device autoscale
+//!   on **delivered mAP** during the overload window, worst p99, and
+//!   how fast full-quality models are restored after the load subsides.
+//! * [`diurnal`] — a day-shaped ramp (night → morning → peak → night):
+//!   the device controller must track offered load in both directions.
+//! * [`device_failure`] — three of nine devices die mid-run: the
+//!   controller re-attaches replacements and delivered quality recovers.
+//!
+//! Delivered mAP is an analytic composition, not a detector run: each
+//! output record contributes its rung's intrinsic quality
+//! ([`ModelLadder::quality`], the calibrated-profile proxy), scaled by
+//! [`staleness_factor`] for stale-box reuse — the same staleness model
+//! calibrated against the paper's §II-B mAP-under-dropping anchor.
+
+use crate::autoscale::ladder::{staleness_factor, ModelLadder};
+use crate::autoscale::policy::AutoscaleConfig;
+use crate::autoscale::runner::{run_autoscale_sim, AutoscaleOutcome};
+use crate::experiments::fleet::pool_of;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::metrics::StreamReport;
+use crate::fleet::registry::{ControlAction, ControlEvent};
+use crate::fleet::sim::{run_fleet, Scenario};
+use crate::fleet::stream::StreamSpec;
+use crate::util::json::Json;
+use crate::util::stats::Percentiles;
+use crate::util::table::{f, Table};
+use std::collections::BTreeMap;
+
+/// Overload step-on / step-off times for [`step_load`].
+pub const STEP_T_ON: f64 = 40.0;
+pub const STEP_T_OFF: f64 = 100.0;
+
+/// Mean delivered quality of the records captured inside `window`:
+/// processed frames contribute their rung's intrinsic quality, stale
+/// fills contribute the *source* frame's rung quality decayed by the
+/// reuse age, self-stale records (nothing to reuse) contribute zero.
+pub fn delivered_map(streams: &[StreamReport], ladder: &ModelLadder, window: (f64, f64)) -> f64 {
+    let (lo, hi) = window;
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for s in streams {
+        for rec in &s.records {
+            if rec.capture_ts < lo || rec.capture_ts >= hi {
+                continue;
+            }
+            n += 1;
+            match rec.stale_from {
+                None => total += ladder.quality(s.rung_at(rec.capture_ts)),
+                Some(src) if src == rec.frame_id => {} // nothing reused
+                Some(src) => {
+                    let src_rec = &s.records[src as usize];
+                    let age = (rec.capture_ts - src_rec.capture_ts).max(0.0);
+                    total +=
+                        ladder.quality(s.rung_at(src_rec.capture_ts)) * staleness_factor(age);
+                }
+            }
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        total / n as f64
+    }
+}
+
+/// p99 output latency over the records captured inside `window`.
+pub fn windowed_p99(streams: &[StreamReport], window: (f64, f64)) -> f64 {
+    let (lo, hi) = window;
+    let mut p = Percentiles::new();
+    for s in streams {
+        for rec in &s.records {
+            if rec.capture_ts >= lo && rec.capture_ts < hi {
+                p.push((rec.emit_ts - rec.capture_ts).max(0.0));
+            }
+        }
+    }
+    p.p99()
+}
+
+/// Seconds after `t_off` until every stream still alive past `t_off` is
+/// back on rung 0 for good; infinite if any never recovers.
+pub fn rung_recovery_seconds(streams: &[StreamReport], t_off: f64) -> f64 {
+    let mut worst = 0.0f64;
+    for s in streams {
+        if s.records.last().map_or(true, |r| r.capture_ts < t_off) {
+            continue; // stream ended before the load subsided
+        }
+        let mut settled: Option<f64> = None;
+        for &(t, r) in &s.rung_log {
+            settled = if r == 0 { Some(t) } else { None };
+        }
+        match settled {
+            Some(t) => worst = worst.max((t - t_off).max(0.0)),
+            None => return f64::INFINITY,
+        }
+    }
+    worst
+}
+
+/// One policy's step-load outcome.
+#[derive(Debug, Clone)]
+pub struct StepLoadOutcome {
+    pub policy: &'static str,
+    /// Delivered mAP over the overload window `[t_on, t_off)`.
+    pub overload_map: f64,
+    /// p99 output latency over the overload window (all streams).
+    pub overload_p99: f64,
+    /// Seconds after `t_off` until full-quality models are restored.
+    pub recovery_seconds: f64,
+    pub peak_devices: usize,
+    pub final_devices: usize,
+    pub control_actions: usize,
+}
+
+fn eth_ladder() -> ModelLadder {
+    ModelLadder::from_profiles("eth_sunnyday")
+}
+
+/// The step-load scenario: 3 steady 2.5-FPS cams on a 4 × 2.5-FPS pool
+/// (comfortable), 5 more cams burst in at `STEP_T_ON` (Σλ = 20 vs
+/// capacity 9.5 — ≈ 2× overload) and leave at `STEP_T_OFF`.
+fn step_scenario(policy: AdmissionPolicy, seed: u64) -> Scenario {
+    let base: Vec<StreamSpec> = (0..3)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 400).with_window(4))
+        .collect();
+    let mut events = Vec::new();
+    for i in 0..5 {
+        events.push(ControlEvent {
+            at: STEP_T_ON,
+            action: ControlAction::AttachStream(
+                StreamSpec::new(&format!("burst{i}"), 2.5, 150).with_window(4),
+            ),
+        });
+    }
+    for i in 0..5 {
+        events.push(ControlEvent {
+            at: STEP_T_OFF,
+            action: ControlAction::DetachStream(3 + i),
+        });
+    }
+    Scenario::new(pool_of(4, 2.5), base)
+        .with_admission(policy)
+        .with_events(events)
+        .with_seed(seed)
+}
+
+fn step_outcome(
+    policy: &'static str,
+    out: &AutoscaleOutcome,
+    ladder: &ModelLadder,
+) -> StepLoadOutcome {
+    let window = (STEP_T_ON, STEP_T_OFF);
+    StepLoadOutcome {
+        policy,
+        overload_map: delivered_map(&out.report.streams, ladder, window),
+        overload_p99: windowed_p99(&out.report.streams, window),
+        recovery_seconds: rung_recovery_seconds(&out.report.streams, STEP_T_OFF),
+        peak_devices: out
+            .device_timeline
+            .iter()
+            .map(|&(_, n)| n)
+            .max()
+            .unwrap_or(0),
+        final_devices: out.final_devices(),
+        control_actions: out.controller_device_actions() + out.rung_actions,
+    }
+}
+
+/// Static (uncontrolled) run wrapped into the same outcome shape.
+fn static_outcome(
+    policy_name: &'static str,
+    scenario: &Scenario,
+    ladder: &ModelLadder,
+) -> StepLoadOutcome {
+    let report = run_fleet(scenario);
+    let window = (STEP_T_ON, STEP_T_OFF);
+    StepLoadOutcome {
+        policy: policy_name,
+        overload_map: delivered_map(&report.streams, ladder, window),
+        overload_p99: windowed_p99(&report.streams, window),
+        recovery_seconds: rung_recovery_seconds(&report.streams, STEP_T_OFF),
+        peak_devices: scenario.devices.len(),
+        final_devices: scenario.devices.len(),
+        control_actions: 0,
+    }
+}
+
+/// The acceptance sweep: stride-only vs ladder admission vs
+/// ladder + autoscale under a 2× load step.
+pub fn step_load(seed: u64) -> (Table, Vec<StepLoadOutcome>) {
+    let ladder = eth_ladder();
+    let cfg = AutoscaleConfig {
+        max_devices: 12,
+        ..AutoscaleConfig::default()
+    }
+    .with_ladder(ladder.clone());
+
+    let stride = static_outcome(
+        "static-n + stride",
+        &step_scenario(AdmissionPolicy::default(), seed),
+        &ladder,
+    );
+    let ladder_only = static_outcome(
+        "static-n + ladder",
+        &step_scenario(cfg.admission(), seed),
+        &ladder,
+    );
+    let scenario = step_scenario(cfg.admission(), seed);
+    let auto = run_autoscale_sim(&scenario, &cfg);
+    let auto = step_outcome("ladder + autoscale", &auto, &ladder);
+
+    let outcomes = vec![stride, ladder_only, auto];
+    let mut t = Table::new(
+        "Step load (2× at t=40..100): delivered mAP / p99 under three degradation policies",
+        &[
+            "policy", "mAP @overload", "p99 (s)", "recovery (s)", "peak devices",
+            "final devices", "actions",
+        ],
+    );
+    for o in &outcomes {
+        t.row(vec![
+            o.policy.to_string(),
+            f(o.overload_map * 100.0, 1),
+            f(o.overload_p99, 2),
+            if o.recovery_seconds.is_finite() {
+                f(o.recovery_seconds, 1)
+            } else {
+                "never".to_string()
+            },
+            format!("{}", o.peak_devices),
+            format!("{}", o.final_devices),
+            format!("{}", o.control_actions),
+        ]);
+    }
+    (t, outcomes)
+}
+
+/// One diurnal phase's end-state.
+#[derive(Debug, Clone)]
+pub struct DiurnalPoint {
+    pub phase: &'static str,
+    pub until: f64,
+    /// Offered load Σλ during the phase (FPS).
+    pub offered: f64,
+    /// Attached devices at phase end.
+    pub devices: usize,
+    /// p99 output latency over the phase.
+    pub p99: f64,
+}
+
+/// Day-shaped ramp: 2 cams overnight, +2 in the morning, +4 at the
+/// peak, everyone but the base gone at night. The device controller
+/// must track the load both up and down.
+pub fn diurnal(seed: u64) -> (Table, Vec<DiurnalPoint>, AutoscaleOutcome) {
+    let ladder = eth_ladder();
+    let cfg = AutoscaleConfig {
+        max_devices: 12,
+        ..AutoscaleConfig::default()
+    }
+    .with_ladder(ladder.clone());
+
+    let base: Vec<StreamSpec> = (0..2)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 480).with_window(4))
+        .collect();
+    let mut events = Vec::new();
+    for i in 0..2 {
+        events.push(ControlEvent {
+            at: 40.0,
+            action: ControlAction::AttachStream(
+                StreamSpec::new(&format!("morning{i}"), 2.5, 260).with_window(4),
+            ),
+        });
+    }
+    for i in 0..4 {
+        events.push(ControlEvent {
+            at: 80.0,
+            action: ControlAction::AttachStream(
+                StreamSpec::new(&format!("peak{i}"), 2.5, 140).with_window(4),
+            ),
+        });
+    }
+    for id in 2..8 {
+        events.push(ControlEvent {
+            at: 130.0,
+            action: ControlAction::DetachStream(id),
+        });
+    }
+    let scenario = Scenario::new(pool_of(3, 2.5), base)
+        .with_admission(cfg.admission())
+        .with_events(events)
+        .with_seed(seed);
+    let out = run_autoscale_sim(&scenario, &cfg);
+
+    let phases: [(&'static str, f64, f64, f64); 4] = [
+        ("night", 40.0, 0.0, 5.0),
+        ("morning", 80.0, 40.0, 10.0),
+        ("peak", 130.0, 80.0, 20.0),
+        ("night again", 192.0, 130.0, 5.0),
+    ];
+    let mut points = Vec::new();
+    let mut t = Table::new(
+        "Diurnal ramp: device count tracks offered load (ladder + autoscale)",
+        &["phase", "until (s)", "offered λ", "devices", "p99 (s)"],
+    );
+    for (phase, until, from, offered) in phases {
+        let p = DiurnalPoint {
+            phase,
+            until,
+            offered,
+            devices: out.devices_at(until - 1e-6),
+            p99: windowed_p99(&out.report.streams, (from, until)),
+        };
+        t.row(vec![
+            p.phase.to_string(),
+            f(p.until, 0),
+            f(p.offered, 1),
+            format!("{}", p.devices),
+            f(p.p99, 2),
+        ]);
+        points.push(p);
+    }
+    (t, points, out)
+}
+
+/// Device-failure outcome (controller vs frozen pool).
+#[derive(Debug, Clone)]
+pub struct FailureOutcome {
+    pub policy: &'static str,
+    /// Delivered mAP over the 30 s after the failure.
+    pub post_failure_map: f64,
+    pub post_failure_p99: f64,
+    /// Devices attached at the end of the run.
+    pub final_devices: usize,
+    /// Seconds until pool capacity is back above the band floor
+    /// (infinite when no controller reacts).
+    pub recovery_seconds: f64,
+}
+
+/// 8 × 2.5-FPS streams on a converged 9-device pool; 3 devices fail at
+/// t=30. With the controller, replacements restore capacity within a
+/// few cooldowns; without it, quality stays degraded.
+pub fn device_failure(seed: u64) -> (Table, Vec<FailureOutcome>) {
+    let ladder = eth_ladder();
+    let cfg = AutoscaleConfig {
+        max_devices: 12,
+        ..AutoscaleConfig::default()
+    }
+    .with_ladder(ladder.clone());
+
+    let streams: Vec<StreamSpec> = (0..8)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 500).with_window(4))
+        .collect();
+    let events: Vec<ControlEvent> = (0..3)
+        .map(|dev| ControlEvent {
+            at: 30.0,
+            action: ControlAction::DetachDevice(dev),
+        })
+        .collect();
+    let scenario = Scenario::new(pool_of(9, 2.5), streams)
+        .with_admission(cfg.admission())
+        .with_events(events)
+        .with_seed(seed);
+
+    let window = (30.0, 60.0);
+    // Band floor for 8 × 2.5-FPS slow streams: Σλ / util.
+    let cap_floor = 20.0 / cfg.target_utilization;
+
+    let frozen_report = run_fleet(&scenario);
+    let frozen = FailureOutcome {
+        policy: "no controller",
+        post_failure_map: delivered_map(&frozen_report.streams, &ladder, window),
+        post_failure_p99: windowed_p99(&frozen_report.streams, window),
+        final_devices: 6,
+        recovery_seconds: f64::INFINITY,
+    };
+
+    let out = run_autoscale_sim(&scenario, &cfg);
+    // First time after the failure when attached capacity clears the
+    // floor again (device_timeline carries counts; all devices are
+    // 2.5-FPS templates here).
+    let recovery = out
+        .device_timeline
+        .iter()
+        .find(|&&(t, n)| t >= 30.0 && n as f64 * 2.5 >= cap_floor)
+        .map(|&(t, _)| t - 30.0)
+        .unwrap_or(f64::INFINITY);
+    let controlled = FailureOutcome {
+        policy: "autoscale",
+        post_failure_map: delivered_map(&out.report.streams, &ladder, window),
+        post_failure_p99: windowed_p99(&out.report.streams, window),
+        final_devices: out.final_devices(),
+        recovery_seconds: recovery,
+    };
+
+    let outcomes = vec![frozen, controlled];
+    let mut t = Table::new(
+        "Device failure (3 of 9 die at t=30): recovery with and without the controller",
+        &["policy", "mAP @[30,60)", "p99 (s)", "final devices", "capacity recovery (s)"],
+    );
+    for o in &outcomes {
+        t.row(vec![
+            o.policy.to_string(),
+            f(o.post_failure_map * 100.0, 1),
+            f(o.post_failure_p99, 2),
+            format!("{}", o.final_devices),
+            if o.recovery_seconds.is_finite() {
+                f(o.recovery_seconds, 1)
+            } else {
+                "never".to_string()
+            },
+        ]);
+    }
+    (t, outcomes)
+}
+
+/// Machine-readable sweep results (the `--json` surface of
+/// `eva autoscale`): only the requested scenario is run and emitted
+/// (`"all"` runs all three). `None` for an unknown scenario name.
+pub fn autoscale_json(seed: u64, scenario: &str) -> Option<Json> {
+    if !matches!(scenario, "step" | "diurnal" | "failure" | "all") {
+        return None;
+    }
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+    if matches!(scenario, "step" | "all") {
+        let (_, step) = step_load(seed);
+        root.insert("step_load".into(), Json::Arr(step_json(&step)));
+    }
+    if matches!(scenario, "diurnal" | "all") {
+        let (_, points, _) = diurnal(seed);
+        root.insert("diurnal".into(), Json::Arr(diurnal_json(&points)));
+    }
+    if matches!(scenario, "failure" | "all") {
+        let (_, failure) = device_failure(seed);
+        root.insert("device_failure".into(), Json::Arr(failure_json(&failure)));
+    }
+    Some(Json::Obj(root))
+}
+
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn step_json(step: &[StepLoadOutcome]) -> Vec<Json> {
+    step.iter()
+        .map(|o| {
+            let mut m = BTreeMap::new();
+            m.insert("policy".into(), Json::Str(o.policy.to_string()));
+            m.insert("overload_map".into(), Json::Num(o.overload_map));
+            m.insert("overload_p99".into(), Json::Num(o.overload_p99));
+            m.insert("recovery_seconds".into(), finite_or_null(o.recovery_seconds));
+            m.insert("peak_devices".into(), Json::Num(o.peak_devices as f64));
+            m.insert("final_devices".into(), Json::Num(o.final_devices as f64));
+            m.insert("control_actions".into(), Json::Num(o.control_actions as f64));
+            Json::Obj(m)
+        })
+        .collect()
+}
+
+fn diurnal_json(points: &[DiurnalPoint]) -> Vec<Json> {
+    points
+        .iter()
+        .map(|p| {
+            let mut m = BTreeMap::new();
+            m.insert("phase".into(), Json::Str(p.phase.to_string()));
+            m.insert("until".into(), Json::Num(p.until));
+            m.insert("offered".into(), Json::Num(p.offered));
+            m.insert("devices".into(), Json::Num(p.devices as f64));
+            m.insert("p99".into(), Json::Num(p.p99));
+            Json::Obj(m)
+        })
+        .collect()
+}
+
+fn failure_json(failure: &[FailureOutcome]) -> Vec<Json> {
+    failure
+        .iter()
+        .map(|o| {
+            let mut m = BTreeMap::new();
+            m.insert("policy".into(), Json::Str(o.policy.to_string()));
+            m.insert("post_failure_map".into(), Json::Num(o.post_failure_map));
+            m.insert("post_failure_p99".into(), Json::Num(o.post_failure_p99));
+            m.insert("final_devices".into(), Json::Num(o.final_devices as f64));
+            m.insert("recovery_seconds".into(), finite_or_null(o.recovery_seconds));
+            Json::Obj(m)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_load_ladder_autoscale_beats_stride_only() {
+        let (_, outcomes) = step_load(7);
+        let stride = &outcomes[0];
+        let ladder_only = &outcomes[1];
+        let auto = &outcomes[2];
+        // Quality-aware degradation beats stride subsampling at 2×
+        // overload, and the closed loop beats both (it buys capacity
+        // back and climbs the ladder mid-overload).
+        assert!(
+            ladder_only.overload_map > stride.overload_map + 0.10,
+            "ladder {:.3} vs stride {:.3}",
+            ladder_only.overload_map,
+            stride.overload_map
+        );
+        assert!(
+            auto.overload_map > ladder_only.overload_map + 0.05,
+            "autoscale {:.3} vs ladder {:.3}",
+            auto.overload_map,
+            ladder_only.overload_map
+        );
+        // The controller actually scaled: devices ramp past the static 4.
+        assert!(auto.peak_devices >= 8, "peak {}", auto.peak_devices);
+        assert!(auto.control_actions > 0);
+    }
+
+    #[test]
+    fn diurnal_devices_track_load_both_ways() {
+        let (_, points, out) = diurnal(11);
+        assert_eq!(points.len(), 4);
+        // Morning adds devices over night; peak adds more; night again
+        // sheds them.
+        assert!(points[1].devices > points[0].devices, "{points:?}");
+        assert!(points[2].devices > points[1].devices, "{points:?}");
+        assert!(points[3].devices < points[2].devices, "{points:?}");
+        assert!(out.controller_device_actions() >= 4);
+    }
+
+    #[test]
+    fn device_failure_controller_recovers_capacity() {
+        let (_, outcomes) = device_failure(13);
+        let frozen = &outcomes[0];
+        let auto = &outcomes[1];
+        assert!(auto.recovery_seconds.is_finite(), "{auto:?}");
+        assert!(auto.recovery_seconds < 30.0, "{auto:?}");
+        assert!(
+            auto.post_failure_map > frozen.post_failure_map + 0.03,
+            "auto {:.3} vs frozen {:.3}",
+            auto.post_failure_map,
+            frozen.post_failure_map
+        );
+        assert!(auto.final_devices >= 9, "{auto:?}");
+    }
+
+    #[test]
+    fn analysis_helpers_basic_shapes() {
+        let ladder = eth_ladder();
+        // Empty inputs are zeros, not panics.
+        assert_eq!(delivered_map(&[], &ladder, (0.0, 10.0)), 0.0);
+        assert_eq!(windowed_p99(&[], (0.0, 10.0)), 0.0);
+        assert_eq!(rung_recovery_seconds(&[], 10.0), 0.0);
+    }
+
+    #[test]
+    fn json_bundle_reparses_and_respects_scenario_selection() {
+        let j = autoscale_json(5, "all").expect("known scenario");
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("autoscale JSON must reparse");
+        assert_eq!(back.get("seed").and_then(Json::as_i64), Some(5));
+        assert_eq!(back.get("step_load").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(back.get("diurnal").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(
+            back.get("device_failure").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        // A single scenario emits only its own section.
+        let step_only = autoscale_json(5, "step").expect("known scenario");
+        assert!(step_only.get("step_load").is_some());
+        assert!(step_only.get("diurnal").is_none());
+        assert!(step_only.get("device_failure").is_none());
+        // Unknown scenarios are an error, not an empty success.
+        assert!(autoscale_json(5, "bogus").is_none());
+    }
+}

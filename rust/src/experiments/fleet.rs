@@ -56,7 +56,7 @@ fn point(report: &mut FleetReport, devices: usize, streams: usize, ideal: f64) -
     for s in report.streams.iter_mut() {
         match s.decision {
             Decision::Admit { .. } => admitted += 1,
-            Decision::Degrade { .. } => {
+            Decision::Degrade { .. } | Decision::SwapModel { .. } => {
                 admitted += 1;
                 degraded += 1;
             }

@@ -6,6 +6,7 @@
 //! can assert the paper's *shape* (who wins, scaling slope, crossover
 //! points) against the measured values.
 
+pub mod autoscale;
 pub mod common;
 pub mod configs;
 pub mod parallel;

@@ -9,9 +9,13 @@
 //! decision:
 //!
 //! * share ≥ demand   → [`Decision::Admit`] (full rate),
-//! * share ≥ min_rate → [`Decision::Degrade`] — the stream is admitted
-//!   but must subsample its input, keeping every `stride`-th frame so its
-//!   effective demand fits its share,
+//! * share ≥ min_rate → the stream is admitted but must shrink its
+//!   effective demand to its share. How it shrinks is the policy's
+//!   [`DegradeMode`]: classic frame-stride subsampling
+//!   ([`Decision::Degrade`]), or — quality-aware admission — a **model
+//!   swap** down a ladder of faster, lower-mAP detector variants
+//!   ([`Decision::SwapModel`]), falling back to a residual stride only
+//!   when even the fastest rung cannot fit the share,
 //! * otherwise        → [`Decision::Reject`].
 //!
 //! On every stream attach ([`AdmissionPolicy::rebalance`]) and on every
@@ -33,6 +37,22 @@ pub enum AdmissionMode {
     AdmitAll,
 }
 
+/// How an admitted-but-unsatisfied stream shrinks its effective demand
+/// to its fair share.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DegradeMode {
+    /// Subsample the input: keep every `stride`-th frame.
+    Stride,
+    /// Walk a model ladder first: swap the stream onto a faster,
+    /// lower-mAP detector variant, which divides the stream's effective
+    /// demand (in base-model frame cost) by the rung's service-rate
+    /// `speedups[rung]`. `speedups` is ascending with `speedups[0] =
+    /// 1.0` (the full-quality model); see
+    /// `crate::autoscale::ladder::ModelLadder::speedups`. A residual
+    /// stride is applied only when even the fastest rung cannot fit.
+    ModelSwap { speedups: Vec<f64> },
+}
+
 /// Admission policy parameters.
 #[derive(Debug, Clone)]
 pub struct AdmissionPolicy {
@@ -43,6 +63,8 @@ pub struct AdmissionPolicy {
     /// rather than degraded into uselessness.
     pub min_rate: f64,
     pub mode: AdmissionMode,
+    /// How unsatisfied streams trade demand for their share.
+    pub degrade: DegradeMode,
 }
 
 impl Default for AdmissionPolicy {
@@ -51,6 +73,7 @@ impl Default for AdmissionPolicy {
             target_utilization: 0.95,
             min_rate: 1.0,
             mode: AdmissionMode::Enforce,
+            degrade: DegradeMode::Stride,
         }
     }
 }
@@ -61,6 +84,99 @@ impl AdmissionPolicy {
         AdmissionPolicy {
             mode: AdmissionMode::AdmitAll,
             ..AdmissionPolicy::default()
+        }
+    }
+
+    /// Enforcing policy that degrades by model swap down `speedups`
+    /// (quality-aware admission) instead of frame stride.
+    pub fn with_ladder(speedups: Vec<f64>) -> AdmissionPolicy {
+        AdmissionPolicy {
+            degrade: DegradeMode::ModelSwap { speedups },
+            ..AdmissionPolicy::default()
+        }
+    }
+
+    /// Service-rate multiplier of ladder rung `rung` (1.0 when the
+    /// policy has no ladder; the fastest rung for out-of-range indices).
+    pub fn rung_speedup(&self, rung: usize) -> f64 {
+        match &self.degrade {
+            DegradeMode::Stride => 1.0,
+            DegradeMode::ModelSwap { speedups } => speedups
+                .get(rung)
+                .or_else(|| speedups.last())
+                .copied()
+                .unwrap_or(1.0),
+        }
+    }
+
+    /// Deepest ladder rung this policy can swap to (0 = no ladder).
+    pub fn max_rung(&self) -> usize {
+        match &self.degrade {
+            DegradeMode::Stride => 0,
+            DegradeMode::ModelSwap { speedups } => speedups.len().saturating_sub(1),
+        }
+    }
+
+    /// Decision for a stream pinned at ladder `rung` (the quality
+    /// controller's override path): the residual stride is whatever the
+    /// rung's scaled demand still needs to fit `share`. `rung` is
+    /// clamped to the deepest real rung so a decision never records a
+    /// rung the ladder cannot actually serve.
+    pub fn decision_at_rung(&self, demand: f64, share: f64, rung: usize) -> Decision {
+        let rung = rung.min(self.max_rung());
+        let k = self.rung_speedup(rung).max(1e-9);
+        let eff = demand / k;
+        let stride = if eff <= share + 1e-9 {
+            1
+        } else {
+            stride_for(eff, share)
+        };
+        if rung == 0 {
+            if stride <= 1 {
+                Decision::Admit { share }
+            } else {
+                Decision::Degrade { stride, share }
+            }
+        } else {
+            Decision::SwapModel { rung, stride, share }
+        }
+    }
+
+    /// Level for an admitted stream: full rate if its share covers the
+    /// demand; otherwise degrade per [`DegradeMode`] — ladder first
+    /// (cheapest sufficient rung), stride as the last resort.
+    fn level(&self, share: f64, demand: f64) -> Decision {
+        if share + 1e-9 >= demand {
+            return Decision::Admit { share };
+        }
+        match &self.degrade {
+            DegradeMode::Stride => Decision::Degrade {
+                stride: stride_for(demand, share),
+                share,
+            },
+            DegradeMode::ModelSwap { speedups } => {
+                for (rung, &k) in speedups.iter().enumerate().skip(1) {
+                    if demand / k.max(1e-9) <= share + 1e-9 {
+                        return Decision::SwapModel { rung, stride: 1, share };
+                    }
+                }
+                match speedups.len().checked_sub(1) {
+                    Some(last) if last > 0 => {
+                        let k = speedups[last].max(1e-9);
+                        Decision::SwapModel {
+                            rung: last,
+                            stride: stride_for(demand / k, share),
+                            share,
+                        }
+                    }
+                    // Degenerate ladder (empty or just the full model):
+                    // behaves like stride mode.
+                    _ => Decision::Degrade {
+                        stride: stride_for(demand, share),
+                        share,
+                    },
+                }
+            }
         }
     }
 
@@ -98,13 +214,8 @@ impl AdmissionPolicy {
 
         let cand_share = shares[n - 1];
         let cand_demand = demands[n - 1];
-        let candidate = if cand_share + 1e-9 >= cand_demand {
-            Decision::Admit { share: cand_share }
-        } else if cand_share >= self.min_rate {
-            Decision::Degrade {
-                stride: stride_for(cand_demand, cand_share),
-                share: cand_share,
-            }
+        let candidate = if cand_share >= self.min_rate || cand_share + 1e-9 >= cand_demand {
+            self.level(cand_share, cand_demand)
         } else {
             Decision::Reject
         };
@@ -116,11 +227,11 @@ impl AdmissionPolicy {
             let shares2 =
                 weighted_max_min_shares(capacity, &demands[..n - 1], &weights[..n - 1]);
             for i in 0..n - 1 {
-                out.push(throttled(shares2[i], demands[i]));
+                out.push(self.level(shares2[i], demands[i]));
             }
         } else {
             for i in 0..n - 1 {
-                out.push(throttled(shares[i], demands[i]));
+                out.push(self.level(shares[i], demands[i]));
             }
         }
         out.push(candidate);
@@ -148,27 +259,13 @@ impl AdmissionPolicy {
         demands
             .iter()
             .zip(&shares)
-            .map(|(&d, &s)| throttled(s, d))
+            .map(|(&d, &s)| self.level(s, d))
             .collect()
     }
 }
 
 fn stride_for(demand: f64, share: f64) -> u64 {
     (demand / share.max(1e-9)).ceil().max(1.0) as u64
-}
-
-/// Level for an already-running stream: full rate if its share covers the
-/// demand, otherwise throttled — even below `min_rate` (running streams
-/// are never evicted by a newcomer).
-fn throttled(share: f64, demand: f64) -> Decision {
-    if share + 1e-9 >= demand {
-        Decision::Admit { share }
-    } else {
-        Decision::Degrade {
-            stride: stride_for(demand, share),
-            share,
-        }
-    }
 }
 
 /// Outcome of admission for one stream.
@@ -178,6 +275,10 @@ pub enum Decision {
     Admit { share: f64 },
     /// Admitted at reduced rate: keep every `stride`-th frame.
     Degrade { stride: u64, share: f64 },
+    /// Admitted on ladder rung `rung` (a faster, lower-mAP model
+    /// variant), keeping every `stride`-th frame (1 = all frames; > 1
+    /// only when even the fastest rung cannot fit the share).
+    SwapModel { rung: usize, stride: u64, share: f64 },
     /// Not admitted; every frame of the stream is dropped.
     Reject,
 }
@@ -190,8 +291,28 @@ impl Decision {
     /// Input subsampling stride implied by the decision (1 = keep all).
     pub fn stride(&self) -> u64 {
         match self {
-            Decision::Degrade { stride, .. } => (*stride).max(1),
+            Decision::Degrade { stride, .. } | Decision::SwapModel { stride, .. } => {
+                (*stride).max(1)
+            }
             _ => 1,
+        }
+    }
+
+    /// Ladder rung the stream runs at (0 = the full-quality model).
+    pub fn rung(&self) -> usize {
+        match self {
+            Decision::SwapModel { rung, .. } => *rung,
+            _ => 0,
+        }
+    }
+
+    /// Fair share backing an admitted decision (`None` for rejects).
+    pub fn share(&self) -> Option<f64> {
+        match self {
+            Decision::Admit { share }
+            | Decision::Degrade { share, .. }
+            | Decision::SwapModel { share, .. } => Some(*share),
+            Decision::Reject => None,
         }
     }
 
@@ -199,6 +320,10 @@ impl Decision {
         match self {
             Decision::Admit { .. } => "admit".to_string(),
             Decision::Degrade { stride, .. } => format!("degrade(1/{stride})"),
+            Decision::SwapModel { rung, stride, .. } if *stride > 1 => {
+                format!("swap(rung {rung}, 1/{stride})")
+            }
+            Decision::SwapModel { rung, .. } => format!("swap(rung {rung})"),
             Decision::Reject => "reject".to_string(),
         }
     }
@@ -457,6 +582,171 @@ mod tests {
     fn decision_labels() {
         assert_eq!(Decision::Admit { share: 5.0 }.label(), "admit");
         assert_eq!(Decision::Degrade { stride: 3, share: 1.0 }.label(), "degrade(1/3)");
+        assert_eq!(
+            Decision::SwapModel { rung: 1, stride: 1, share: 2.0 }.label(),
+            "swap(rung 1)"
+        );
+        assert_eq!(
+            Decision::SwapModel { rung: 2, stride: 4, share: 0.5 }.label(),
+            "swap(rung 2, 1/4)"
+        );
         assert_eq!(Decision::Reject.label(), "reject");
+    }
+
+    // ---- model-swap degrade mode (quality-aware admission) -------------
+
+    fn ladder_policy() -> AdmissionPolicy {
+        AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2])
+    }
+
+    #[test]
+    fn model_swap_picks_cheapest_sufficient_rung() {
+        let p = ladder_policy();
+        // Pool 5 -> capacity 4.75, two 5-FPS claimants: share 2.375 each.
+        // Rung 1 fits (5/2.6 ≈ 1.92 ≤ 2.375) with no residual stride.
+        let d = p.decide(5.0, &[(5.0, 1.0)], (5.0, 1.0));
+        match d {
+            Decision::SwapModel { rung, stride, .. } => {
+                assert_eq!(rung, 1, "{d:?}");
+                assert_eq!(stride, 1, "{d:?}");
+            }
+            other => panic!("expected swap, got {other:?}"),
+        }
+        assert_eq!(d.rung(), 1);
+        assert_eq!(d.stride(), 1);
+    }
+
+    #[test]
+    fn model_swap_falls_back_to_residual_stride() {
+        let p = ladder_policy();
+        // Pool 3 -> capacity 2.85, two 5-FPS claimants: share 1.425.
+        // Even the fastest rung needs 5/3.2 = 1.5625 > 1.425, so the
+        // decision lands on the deepest rung with a residual stride of
+        // ceil(1.5625 / 1.425) = 2.
+        let d = p.decide(3.0, &[(5.0, 1.0)], (5.0, 1.0));
+        match d {
+            Decision::SwapModel { rung, stride, .. } => {
+                assert_eq!(rung, 2, "{d:?}");
+                assert_eq!(stride, 2, "{d:?}");
+            }
+            other => panic!("expected deepest-rung swap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn model_swap_still_admits_when_share_covers_demand() {
+        let p = ladder_policy();
+        let d = p.decide(20.0, &[], (5.0, 1.0));
+        assert!(matches!(d, Decision::Admit { .. }), "{d:?}");
+        // And still rejects below min_rate.
+        let admitted: Vec<(f64, f64)> = (0..9).map(|_| (5.0, 1.0)).collect();
+        assert_eq!(p.decide(10.0, &admitted, (5.0, 1.0)), Decision::Reject);
+    }
+
+    #[test]
+    fn degenerate_ladder_degrades_by_stride() {
+        let p = AdmissionPolicy::with_ladder(vec![1.0]);
+        let d = p.decide(10.0, &[(5.0, 1.0), (5.0, 1.0)], (5.0, 1.0));
+        assert!(matches!(d, Decision::Degrade { stride: 2, .. }), "{d:?}");
+    }
+
+    #[test]
+    fn rung_speedup_lookup_clamps() {
+        let p = ladder_policy();
+        assert_eq!(p.rung_speedup(0), 1.0);
+        assert_eq!(p.rung_speedup(1), 2.6);
+        assert_eq!(p.rung_speedup(9), 3.2); // clamp to fastest
+        assert_eq!(p.max_rung(), 2);
+        let s = AdmissionPolicy::default();
+        assert_eq!(s.rung_speedup(3), 1.0);
+        assert_eq!(s.max_rung(), 0);
+    }
+
+    #[test]
+    fn decision_at_rung_override_mapping() {
+        let p = ladder_policy();
+        // Rung 0 with enough share: plain admit; short share: stride.
+        assert!(matches!(
+            p.decision_at_rung(5.0, 6.0, 0),
+            Decision::Admit { .. }
+        ));
+        assert!(matches!(
+            p.decision_at_rung(5.0, 2.0, 0),
+            Decision::Degrade { stride: 3, .. }
+        ));
+        // Rung 1 covers demand 5 with share 2: 5/2.6 < 2 -> stride 1.
+        assert!(matches!(
+            p.decision_at_rung(5.0, 2.0, 1),
+            Decision::SwapModel { rung: 1, stride: 1, .. }
+        ));
+        // Rung 2 with a starved share still carries a residual stride.
+        assert!(matches!(
+            p.decision_at_rung(5.0, 0.5, 2),
+            Decision::SwapModel { rung: 2, stride: 4, .. }
+        ));
+        // Out-of-range rungs clamp to the deepest real rung — the
+        // decision never records a rung the ladder cannot serve.
+        assert!(matches!(
+            p.decision_at_rung(5.0, 2.0, 9),
+            Decision::SwapModel { rung: 2, .. }
+        ));
+        // With no ladder at all, any rung request collapses to rung 0.
+        let stride_only = AdmissionPolicy::default();
+        assert!(matches!(
+            stride_only.decision_at_rung(5.0, 6.0, 3),
+            Decision::Admit { .. }
+        ));
+    }
+
+    // ---- water-filling edge cases --------------------------------------
+
+    #[test]
+    #[should_panic(expected = "strictly positive")]
+    fn zero_weight_stream_is_rejected_by_contract() {
+        // Weights must be strictly positive: a zero weight would divide
+        // the water level by zero. The contract is an assert, not a NaN.
+        weighted_max_min_shares(10.0, &[5.0, 5.0], &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn demand_exactly_at_capacity_is_fully_admitted() {
+        // Σ demand == capacity exactly: everyone gets exactly their
+        // demand (no spurious degrade from float drift).
+        let s = weighted_max_min_shares(10.0, &[4.0, 6.0], &[1.0, 2.0]);
+        assert_eq!(s, vec![4.0, 6.0]);
+        let p = AdmissionPolicy {
+            target_utilization: 1.0,
+            ..AdmissionPolicy::default()
+        };
+        let levels = p.rebalance(10.0, &[(4.0, 1.0), (6.0, 2.0)]);
+        for d in &levels {
+            assert!(matches!(d, Decision::Admit { .. }), "{d:?}");
+        }
+        // One epsilon over capacity degrades rather than overcommitting.
+        let levels = p.rebalance(10.0, &[(4.0, 1.0), (6.0 + 1e-3, 1.0)]);
+        let effective: f64 = [(4.0, &levels[0]), (6.0 + 1e-3, &levels[1])]
+            .iter()
+            .map(|(d, l)| d / l.stride() as f64)
+            .sum();
+        assert!(effective <= 10.0 + 1e-9, "effective {effective}");
+    }
+
+    #[test]
+    fn zero_capacity_relevel_throttles_everyone_without_panic() {
+        // A single-device pool losing its only device re-levels against
+        // capacity 0: running streams are never evicted, but their
+        // strides explode so the admitted effective load goes to ~0.
+        let p = AdmissionPolicy::default();
+        let levels = p.relevel(0.0, &[(5.0, 1.0), (2.0, 3.0)]);
+        for (d, &(demand, _)) in levels.iter().zip(&[(5.0, 1.0), (2.0, 3.0)]) {
+            match d {
+                Decision::Degrade { stride, share } => {
+                    assert_eq!(*share, 0.0);
+                    assert!(*stride >= 1_000_000, "stride {stride}");
+                    assert!(demand / *stride as f64 < 1e-3);
+                }
+                other => panic!("expected throttle-to-zero, got {other:?}"),
+            }
+        }
     }
 }

@@ -8,8 +8,10 @@ use crate::device::energy::EnergyMeter;
 use crate::device::DeviceKind;
 use crate::fleet::admission::Decision;
 use crate::types::{OutputRecord, Seconds};
+use crate::util::json::Json;
 use crate::util::stats::Percentiles;
 use crate::util::table::{f, Table};
+use std::collections::BTreeMap;
 
 /// Raw per-stream accumulators handed to [`finish_stream`] by an engine
 /// (virtual-time or wall-clock) at the end of a run.
@@ -27,6 +29,9 @@ pub struct StreamAccum {
     pub stream_duration: Seconds,
     /// Reorder-buffer high-water mark (`Synchronizer::max_pending`).
     pub max_reorder_depth: usize,
+    /// Model-ladder rung timeline `(fleet time, rung)`; `[(t0, 0)]` for
+    /// engines without quality-aware admission.
+    pub rung_log: Vec<(Seconds, usize)>,
 }
 
 /// Final per-stream result.
@@ -37,6 +42,15 @@ pub struct StreamReport {
     pub decision: Decision,
     pub records: Vec<OutputRecord>,
     pub metrics: RunMetrics,
+    /// Model-ladder rung timeline `(fleet time, rung)`.
+    pub rung_log: Vec<(Seconds, usize)>,
+}
+
+impl StreamReport {
+    /// Rung live at fleet time `t` (0 before the first entry).
+    pub fn rung_at(&self, t: Seconds) -> usize {
+        crate::util::stats::timeline_at(&self.rung_log, t).unwrap_or(0)
+    }
 }
 
 /// Convert accumulators into a [`StreamReport`]. `kinds` is the pool's
@@ -67,6 +81,7 @@ pub fn finish_stream(acc: StreamAccum, kinds: &[DeviceKind]) -> StreamReport {
         decision: acc.decision,
         records: acc.records,
         metrics,
+        rung_log: acc.rung_log,
     }
 }
 
@@ -173,6 +188,81 @@ impl FleetReport {
         t
     }
 
+    /// Machine-readable run summary (BENCH_*.json trajectories, `--json`
+    /// CLI output). Mutable because percentile queries sort lazily.
+    pub fn to_json(&mut self) -> Json {
+        let makespan = self.makespan;
+        let aggregate_fps = self.aggregate_fps();
+        let drop_rate = self.drop_rate();
+        let fairness = self.fairness();
+        let total_frames = self.total_frames();
+        let total_processed = self.total_processed();
+        let devices: Vec<Json> = self
+            .device_labels
+            .iter()
+            .enumerate()
+            .map(|(i, label)| {
+                let mut o = BTreeMap::new();
+                o.insert("label".to_string(), Json::Str(label.clone()));
+                o.insert("frames".to_string(), Json::Num(self.device_frames[i] as f64));
+                o.insert("busy_seconds".to_string(), Json::Num(self.device_busy[i]));
+                o.insert("utilization".to_string(), Json::Num(self.utilization(i)));
+                Json::Obj(o)
+            })
+            .collect();
+        let streams: Vec<Json> = self
+            .streams
+            .iter_mut()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("id".to_string(), Json::Num(s.id as f64));
+                o.insert("name".to_string(), Json::Str(s.name.clone()));
+                o.insert("weight".to_string(), Json::Num(s.weight));
+                o.insert("decision".to_string(), Json::Str(s.decision.label()));
+                o.insert("rung".to_string(), Json::Num(s.decision.rung() as f64));
+                o.insert("stride".to_string(), Json::Num(s.decision.stride() as f64));
+                o.insert(
+                    "frames_total".to_string(),
+                    Json::Num(s.metrics.frames_total as f64),
+                );
+                o.insert(
+                    "frames_processed".to_string(),
+                    Json::Num(s.metrics.frames_processed as f64),
+                );
+                o.insert("drop_rate".to_string(), Json::Num(s.metrics.drop_rate()));
+                o.insert(
+                    "processing_fps".to_string(),
+                    Json::Num(s.metrics.processing_fps()),
+                );
+                o.insert("p50_latency".to_string(), Json::Num(s.metrics.latency.p50()));
+                o.insert("p99_latency".to_string(), Json::Num(s.metrics.latency.p99()));
+                o.insert(
+                    "rung_log".to_string(),
+                    Json::Arr(
+                        s.rung_log
+                            .iter()
+                            .map(|&(t, r)| Json::Arr(vec![Json::Num(t), Json::Num(r as f64)]))
+                            .collect(),
+                    ),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("makespan".to_string(), Json::Num(makespan));
+        root.insert("aggregate_fps".to_string(), Json::Num(aggregate_fps));
+        root.insert("drop_rate".to_string(), Json::Num(drop_rate));
+        root.insert("fairness".to_string(), Json::Num(fairness));
+        root.insert("frames_total".to_string(), Json::Num(total_frames as f64));
+        root.insert(
+            "frames_processed".to_string(),
+            Json::Num(total_processed as f64),
+        );
+        root.insert("devices".to_string(), Json::Arr(devices));
+        root.insert("streams".to_string(), Json::Arr(streams));
+        Json::Obj(root)
+    }
+
     /// Per-device table.
     pub fn device_table(&self) -> Table {
         let mut t = Table::new(
@@ -236,6 +326,7 @@ mod tests {
             makespan: 10.0,
             stream_duration: 10.0,
             max_reorder_depth: 0,
+            rung_log: vec![(0.0, 0)],
         }
     }
 
@@ -284,5 +375,44 @@ mod tests {
         // Tables render without panicking and with one row per entity.
         assert_eq!(report.stream_table().rows.len(), 2);
         assert_eq!(report.device_table().rows.len(), 1);
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_carries_key_fields() {
+        let kinds = [DeviceKind::Ncs2];
+        let a = finish_stream(accum(0, vec![rec(0, false), rec(1, true)]), &kinds);
+        let mut report = FleetReport {
+            streams: vec![a],
+            makespan: 10.0,
+            device_busy: vec![4.0],
+            device_frames: vec![3],
+            device_labels: vec!["dev0".to_string()],
+        };
+        let j = report.to_json();
+        // Serialise + reparse: the subset writer emits valid JSON.
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("report JSON must reparse");
+        assert_eq!(back.get("frames_total").and_then(Json::as_i64), Some(2));
+        assert_eq!(back.get("frames_processed").and_then(Json::as_i64), Some(1));
+        let streams = back.get("streams").unwrap().as_arr().unwrap();
+        assert_eq!(streams.len(), 1);
+        assert_eq!(streams[0].get("name").and_then(Json::as_str), Some("s0"));
+        assert_eq!(streams[0].get("decision").and_then(Json::as_str), Some("admit"));
+        let rung_log = streams[0].get("rung_log").unwrap().as_arr().unwrap();
+        assert_eq!(rung_log.len(), 1);
+        let devices = back.get("devices").unwrap().as_arr().unwrap();
+        assert!((devices[0].get("utilization").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stream_report_rung_at_lookup() {
+        let kinds = [DeviceKind::Ncs2];
+        let mut acc0 = accum(0, vec![rec(0, false)]);
+        acc0.rung_log = vec![(0.0, 0), (5.0, 2), (8.0, 1)];
+        let report = finish_stream(acc0, &kinds);
+        assert_eq!(report.rung_at(0.0), 0);
+        assert_eq!(report.rung_at(5.0), 2);
+        assert_eq!(report.rung_at(7.9), 2);
+        assert_eq!(report.rung_at(9.0), 1);
     }
 }

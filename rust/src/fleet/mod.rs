@@ -16,7 +16,9 @@
 //! * [`metrics`] — fleet aggregates: per-stream σ and latency
 //!   percentiles, drop rates, device utilisation, Jain fairness index.
 //! * [`sim`] — virtual-time engine (DES-backed, milliseconds per run):
-//!   timing, fairness and elasticity studies at any scale.
+//!   timing, fairness and elasticity studies at any scale; exposes the
+//!   [`sim::FleetController`] hook that `crate::autoscale` drives for
+//!   closed-loop device scaling and model-ladder swaps.
 //! * [`serve`] — wall-clock engine (thread-backed, real detectors):
 //!   the live multi-stream serving pipeline.
 //!
@@ -33,10 +35,10 @@ pub mod serve;
 pub mod sim;
 pub mod stream;
 
-pub use admission::{AdmissionMode, AdmissionPolicy, Decision};
+pub use admission::{AdmissionMode, AdmissionPolicy, Decision, DegradeMode};
 pub use metrics::{jain_index, FleetReport, StreamReport};
 pub use pool::{DevicePool, Job};
 pub use registry::{ControlAction, ControlEvent, FleetRegistry};
 pub use serve::{serve_fleet, FleetServeConfig};
-pub use sim::{run_fleet, Scenario};
+pub use sim::{run_fleet, run_fleet_with, ControlRecord, FleetController, FleetRunOutput, Scenario};
 pub use stream::{StreamId, StreamSpec};

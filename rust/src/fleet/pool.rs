@@ -112,9 +112,17 @@ impl DevicePool {
 
     /// Start `job` on `dev`; returns the sampled service time in seconds.
     pub fn start(&mut self, dev: usize, job: Job, rng: &mut Rng) -> f64 {
+        self.start_scaled(dev, job, 1.0, rng)
+    }
+
+    /// Start `job` with its service time divided by `speedup` — the
+    /// model-ladder hook: a stream swapped onto a rung that is `speedup`×
+    /// faster than the base model costs the device proportionally less
+    /// time per frame.
+    pub fn start_scaled(&mut self, dev: usize, job: Job, speedup: f64, rng: &mut Rng) -> f64 {
         let d = &mut self.devices[dev];
         assert!(d.idle(), "start on non-idle device {dev}");
-        let t = d.instance.sample_service_time(rng);
+        let t = d.instance.sample_service_time(rng) / speedup.max(1e-9);
         d.current = Some(job);
         d.pending_service = t;
         t
@@ -219,6 +227,20 @@ mod tests {
         assert_eq!(p.len(), 2);
         assert!((p.attached_rate() - 16.0).abs() < 1e-12);
         assert_eq!(p.labels().len(), 2);
+    }
+
+    #[test]
+    fn scaled_start_divides_service_time() {
+        // Jitter-free instance so the ratio check is exact.
+        let mut inst =
+            DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, 0, 2.5);
+        inst.jitter_cv = 0.0;
+        let mut p = DevicePool::new(vec![inst]);
+        let mut rng = Rng::new(4);
+        let t = p.start_scaled(0, Job { stream: 0, fid: 0 }, 2.5, &mut rng);
+        assert!((t - 0.4 / 2.5).abs() < 1e-12, "t {t}");
+        let (_, service) = p.complete(0);
+        assert!((service - t).abs() < 1e-12);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! [`FleetRegistry`] owns the [`DevicePool`] and every [`StreamState`];
 //! streams and devices attach and detach dynamically mid-run. Admission
 //! shares are re-levelled on every membership change — stream attach,
-//! device attach, device detach — against the pool's current Σμᵢ
-//! (see [`crate::fleet::admission`]).
+//! stream detach, device attach, device detach — against the pool's
+//! current Σμᵢ (see [`crate::fleet::admission`]). A departing stream
+//! therefore restores the remaining degraded streams toward full rate
+//! (and full-quality model rungs) mid-run.
 //!
 //! Dispatch order across streams is start-time-fair queueing: every
 //! stream carries a virtual time bumped by `1/weight` per dispatched
@@ -21,14 +23,36 @@ use crate::fleet::pool::DevicePool;
 use crate::fleet::stream::{StreamId, StreamSpec, StreamState};
 use crate::types::FrameId;
 
-/// A timed control-plane action (scripted scenarios, see
-/// [`crate::fleet::sim::Scenario`]).
+/// A timed control-plane action — scripted by a scenario
+/// ([`crate::fleet::sim::Scenario`]) or emitted by a feedback controller
+/// ([`crate::fleet::sim::FleetController`]).
 #[derive(Debug, Clone)]
 pub enum ControlAction {
     AttachStream(StreamSpec),
     DetachStream(StreamId),
     AttachDevice(DeviceInstance),
     DetachDevice(usize),
+    /// Pin stream `stream` to model-ladder rung `rung` (0 = full
+    /// quality); the residual stride is recomputed from the stream's
+    /// current fair share.
+    SwapModel { stream: StreamId, rung: usize },
+}
+
+impl ControlAction {
+    /// Compact human label for control logs.
+    pub fn label(&self) -> String {
+        match self {
+            ControlAction::AttachStream(spec) => format!("attach-stream({})", spec.name),
+            ControlAction::DetachStream(id) => format!("detach-stream(s{id})"),
+            ControlAction::AttachDevice(d) => {
+                format!("attach-device({:.1} FPS)", d.rate())
+            }
+            ControlAction::DetachDevice(dev) => format!("detach-device(#{dev})"),
+            ControlAction::SwapModel { stream, rung } => {
+                format!("swap-model(s{stream} -> rung {rung})")
+            }
+        }
+    }
 }
 
 /// `action` applied at fleet time `at`.
@@ -76,7 +100,7 @@ impl FleetRegistry {
             .admission
             .rebalance(self.pool.attached_rate(), &members);
         for (k, &sid) in active.iter().enumerate() {
-            self.streams[sid].decision = levels[k];
+            self.streams[sid].set_decision(levels[k], now);
         }
         let decision = levels[levels.len() - 1];
         // Start-time-fair queueing: a joining stream's virtual time starts
@@ -98,37 +122,72 @@ impl FleetRegistry {
         id
     }
 
-    /// Detach stream `id`; returns the frames still in its window so the
-    /// engine can resolve them as dropped.
-    pub fn detach_stream(&mut self, id: StreamId) -> Vec<FrameId> {
-        let s = &mut self.streams[id];
+    /// Detach stream `id` at fleet time `now`; returns the frames still
+    /// in its window so the engine can resolve them as dropped. The
+    /// survivors are re-levelled against the freed share: remaining
+    /// degraded streams are restored toward full rate (and full-quality
+    /// rungs) mid-run.
+    /// Unknown ids are ignored (an empty drain): the control seam is
+    /// open to scripted scenarios and third-party controllers, and one
+    /// bad action must not panic a whole run.
+    pub fn detach_stream(&mut self, id: StreamId, now: f64) -> Vec<FrameId> {
+        let Some(s) = self.streams.get_mut(id) else {
+            return Vec::new();
+        };
         s.detached = true;
-        s.window.drain_remaining()
+        let drained = s.window.drain_remaining();
+        self.relevel_active(now);
+        drained
     }
 
     /// Attach a device mid-run, growing every stream's per-device
     /// accumulators and re-levelling admission against the larger
     /// capacity (degraded streams may be restored toward full rate).
     /// Returns the device id.
-    pub fn attach_device(&mut self, instance: DeviceInstance) -> usize {
+    pub fn attach_device(&mut self, instance: DeviceInstance, now: f64) -> usize {
         let dev = self.pool.attach(instance);
         let n = self.pool.len();
         for s in self.streams.iter_mut() {
             s.ensure_devices(n);
         }
-        self.relevel_active();
+        self.relevel_active(now);
         dev
     }
 
     /// Detach a device and re-level admission against the shrunken
     /// capacity (running streams are throttled harder, never evicted).
-    pub fn detach_device(&mut self, dev: usize) {
+    /// Unknown device ids are ignored, like unknown stream ids.
+    pub fn detach_device(&mut self, dev: usize, now: f64) {
+        if dev >= self.pool.len() {
+            return;
+        }
         self.pool.detach(dev);
-        self.relevel_active();
+        self.relevel_active(now);
+    }
+
+    /// Pin stream `id` to model-ladder rung `rung` (a quality-controller
+    /// override): the stream keeps its current fair share, and the
+    /// residual stride is recomputed for the rung's speedup. No-op for
+    /// detached or rejected streams.
+    pub fn set_stream_rung(&mut self, id: StreamId, rung: usize, now: f64) {
+        let (share, demand) = {
+            let Some(s) = self.streams.get(id) else {
+                return;
+            };
+            if s.detached {
+                return;
+            }
+            let Some(share) = s.decision.share() else {
+                return; // rejected streams are never revived by a swap
+            };
+            (share, s.spec.demand())
+        };
+        let d = self.admission.decision_at_rung(demand, share, rung);
+        self.streams[id].set_decision(d, now);
     }
 
     /// Recompute every active stream's share after a capacity change.
-    fn relevel_active(&mut self) {
+    fn relevel_active(&mut self, now: f64) {
         let active: Vec<StreamId> = self
             .streams
             .iter()
@@ -144,7 +203,7 @@ impl FleetRegistry {
             .collect();
         let levels = self.admission.relevel(self.pool.attached_rate(), &members);
         for (k, &sid) in active.iter().enumerate() {
-            self.streams[sid].decision = levels[k];
+            self.streams[sid].set_decision(levels[k], now);
         }
     }
 
@@ -197,7 +256,7 @@ mod tests {
         for i in 0..12 {
             let id = reg.attach_stream(StreamSpec::new(&format!("s{i}"), 5.0, 100), 0.0);
             match reg.streams[id].decision {
-                Decision::Degrade { .. } => saw_degrade = true,
+                Decision::Degrade { .. } | Decision::SwapModel { .. } => saw_degrade = true,
                 Decision::Reject => saw_reject = true,
                 Decision::Admit { .. } => {}
             }
@@ -228,7 +287,7 @@ mod tests {
         for f in 0..3 {
             reg.streams[id].window.arrive(f);
         }
-        let drained = reg.detach_stream(id);
+        let drained = reg.detach_stream(id, 0.0);
         assert_eq!(drained, vec![0, 1, 2]);
         assert!(reg.streams[id].detached);
         assert!(!reg.has_backlog());
@@ -263,8 +322,8 @@ mod tests {
         assert!(matches!(reg.streams[b].decision, Decision::Admit { .. }));
         // Losing two devices (capacity 7.125) must throttle both streams —
         // shares 3.5625 → stride 2 — keeping effective load ≤ capacity.
-        reg.detach_device(3);
-        reg.detach_device(4);
+        reg.detach_device(3, 0.0);
+        reg.detach_device(4, 0.0);
         for &sid in &[a, b] {
             match reg.streams[sid].decision {
                 Decision::Degrade { stride, .. } => assert_eq!(stride, 2),
@@ -272,18 +331,14 @@ mod tests {
             }
         }
         // Re-attaching capacity restores full-rate admission.
-        reg.attach_device(DeviceInstance::with_rate(
-            DeviceKind::Ncs2,
-            DetectorModelId::Yolov3,
-            5,
-            2.5,
-        ));
-        reg.attach_device(DeviceInstance::with_rate(
-            DeviceKind::Ncs2,
-            DetectorModelId::Yolov3,
-            6,
-            2.5,
-        ));
+        reg.attach_device(
+            DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, 5, 2.5),
+            0.0,
+        );
+        reg.attach_device(
+            DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, 6, 2.5),
+            0.0,
+        );
         for &sid in &[a, b] {
             assert!(
                 matches!(reg.streams[sid].decision, Decision::Admit { .. }),
@@ -294,19 +349,119 @@ mod tests {
     }
 
     #[test]
+    fn stream_detach_restores_remaining_streams() {
+        // Pool capacity 7.125: two 5-FPS streams share it at stride 2
+        // (share 3.5625). When one detaches mid-run, the survivor must be
+        // restored to full rate — the re-level-on-detach path.
+        let mut reg = FleetRegistry::new(devices(&[2.5; 3]), AdmissionPolicy::default());
+        let a = reg.attach_stream(StreamSpec::new("a", 5.0, 100), 0.0);
+        let b = reg.attach_stream(StreamSpec::new("b", 5.0, 100), 0.0);
+        assert!(matches!(reg.streams[a].decision, Decision::Degrade { .. }));
+        assert!(matches!(reg.streams[b].decision, Decision::Degrade { .. }));
+        reg.detach_stream(a, 12.0);
+        match reg.streams[b].decision {
+            Decision::Admit { share } => assert!(share >= 5.0 - 1e-9, "share {share}"),
+            ref other => panic!("survivor not restored: {other:?}"),
+        }
+        // The detached stream's decision is untouched (it left, it was
+        // not re-levelled), and the restore is stamped in the rung log
+        // only when the rung actually changed (stride streams stay rung 0).
+        assert!(reg.streams[a].detached);
+        assert_eq!(reg.streams[b].rung_log, vec![(0.0, 0)]);
+    }
+
+    #[test]
+    fn stream_detach_restores_model_rungs() {
+        // Same shape with a ladder policy: contention parks both streams
+        // on rung 1; the detach restores the survivor to the full model.
+        let policy = AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]);
+        let mut reg = FleetRegistry::new(devices(&[2.5; 3]), policy);
+        let a = reg.attach_stream(StreamSpec::new("a", 5.0, 100), 0.0);
+        let b = reg.attach_stream(StreamSpec::new("b", 5.0, 100), 0.0);
+        for &sid in &[a, b] {
+            assert_eq!(reg.streams[sid].decision.rung(), 1, "{:?}", reg.streams[sid].decision);
+        }
+        reg.detach_stream(a, 20.0);
+        assert!(matches!(reg.streams[b].decision, Decision::Admit { .. }));
+        assert_eq!(reg.streams[b].rung_log, vec![(0.0, 1), (20.0, 0)]);
+    }
+
+    #[test]
+    fn single_device_pool_losing_its_only_device() {
+        // The pool's only device detaches: capacity 0. Running streams
+        // are throttled to (effectively) nothing but never evicted, and
+        // dispatch finds no idle device — no panic anywhere.
+        let mut reg = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::default());
+        let id = reg.attach_stream(StreamSpec::new("a", 2.0, 50), 0.0);
+        assert!(matches!(reg.streams[id].decision, Decision::Admit { .. }));
+        reg.detach_device(0, 5.0);
+        match reg.streams[id].decision {
+            Decision::Degrade { stride, share } => {
+                assert_eq!(share, 0.0);
+                assert!(stride >= 1_000_000, "stride {stride}");
+            }
+            ref other => panic!("expected throttle-to-zero, got {other:?}"),
+        }
+        assert!((reg.pool.attached_rate() - 0.0).abs() < 1e-12);
+        // Backlogged frames exist, but no device will ever claim them.
+        reg.streams[id].window.arrive(0);
+        assert_eq!(reg.pool.next_idle(), None);
+    }
+
+    #[test]
+    fn set_stream_rung_overrides_and_recomputes_stride() {
+        let policy = AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]);
+        let mut reg = FleetRegistry::new(devices(&[2.5, 2.5]), policy);
+        let a = reg.attach_stream(StreamSpec::new("a", 5.0, 100), 0.0);
+        let b = reg.attach_stream(StreamSpec::new("b", 5.0, 100), 0.0);
+        assert_eq!(reg.streams[a].decision.rung(), 1);
+        // Force a deeper rung: share 2.375 easily covers 5/3.2.
+        reg.set_stream_rung(a, 2, 7.0);
+        assert!(matches!(
+            reg.streams[a].decision,
+            Decision::SwapModel { rung: 2, stride: 1, .. }
+        ));
+        // Force back to the full model: 5 > 2.375 needs stride 3.
+        reg.set_stream_rung(a, 0, 9.0);
+        assert!(matches!(
+            reg.streams[a].decision,
+            Decision::Degrade { stride: 3, .. }
+        ));
+        assert_eq!(reg.streams[a].rung_log, vec![(0.0, 1), (7.0, 2), (9.0, 0)]);
+        // Detached / rejected streams are left alone.
+        reg.detach_stream(b, 10.0);
+        let before = reg.streams[b].decision;
+        reg.set_stream_rung(b, 2, 11.0);
+        assert_eq!(reg.streams[b].decision, before);
+    }
+
+    #[test]
+    fn out_of_range_control_ids_are_ignored_not_panics() {
+        // The control seam accepts scripted and third-party actions; a
+        // bad id must degrade to a no-op, not abort the run.
+        let mut reg = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::default());
+        let a = reg.attach_stream(StreamSpec::new("a", 2.0, 50), 0.0);
+        let before = reg.streams[a].decision;
+        assert!(reg.detach_stream(99, 1.0).is_empty());
+        reg.detach_device(7, 2.0);
+        reg.set_stream_rung(42, 1, 3.0);
+        assert_eq!(reg.streams[a].decision, before);
+        assert!(!reg.streams[a].detached);
+        assert!((reg.pool.attached_rate() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
     fn device_attach_grows_stream_accumulators_and_capacity() {
         let mut reg = FleetRegistry::new(devices(&[2.5]), AdmissionPolicy::admit_all());
         let id = reg.attach_stream(StreamSpec::new("a", 5.0, 10), 0.0);
         assert_eq!(reg.streams[id].device_busy.len(), 1);
-        reg.attach_device(DeviceInstance::with_rate(
-            DeviceKind::FastCpu,
-            DetectorModelId::Yolov3,
-            1,
-            13.5,
-        ));
+        reg.attach_device(
+            DeviceInstance::with_rate(DeviceKind::FastCpu, DetectorModelId::Yolov3, 1, 13.5),
+            0.0,
+        );
         assert_eq!(reg.streams[id].device_busy.len(), 2);
         assert!((reg.pool.attached_rate() - 16.0).abs() < 1e-12);
-        reg.detach_device(1);
+        reg.detach_device(1, 0.0);
         assert!((reg.pool.attached_rate() - 2.5).abs() < 1e-12);
     }
 }

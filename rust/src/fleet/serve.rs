@@ -99,7 +99,17 @@ where
     let n_streams = streams.len();
 
     // Admission up front, in stream order, re-levelling earlier streams'
-    // shares on each attach exactly as the registry does.
+    // shares on each attach exactly as the registry does. Model-swap
+    // degradation is coerced to stride here: the wall-clock workers are
+    // rung-agnostic (one detector per worker), so a `SwapModel` decision
+    // would promise a speedup the pool cannot deliver and overcommit it.
+    // Rung-aware wall-clock control lives in
+    // `crate::autoscale::runner::run_autoscale_serve`, which swaps the
+    // detectors themselves between epochs.
+    let admission = crate::fleet::admission::AdmissionPolicy {
+        degrade: crate::fleet::admission::DegradeMode::Stride,
+        ..config.admission.clone()
+    };
     let mut decisions: Vec<crate::fleet::admission::Decision> = Vec::with_capacity(n_streams);
     {
         let mut active: Vec<usize> = Vec::new();
@@ -109,7 +119,7 @@ where
                 .map(|&j| (streams[j].1.demand(), streams[j].1.weight))
                 .collect();
             members.push((spec.demand(), spec.weight));
-            let levels = config.admission.rebalance(pool_rate, &members);
+            let levels = admission.rebalance(pool_rate, &members);
             for (k, &j) in active.iter().enumerate() {
                 decisions[j] = levels[k];
             }
@@ -355,6 +365,7 @@ where
             device_frames: s_frames,
             makespan: wall.max(1e-12),
             stream_duration: count as f64 / fps,
+            rung_log: vec![(0.0, decisions[sid].rung())],
         };
         reports.push(finish_stream(acc, &kinds));
     }
@@ -477,6 +488,32 @@ mod tests {
         });
         let err = result.err().expect("total factory failure must error");
         assert!(err.to_string().contains("factories failed"), "{err}");
+    }
+
+    #[test]
+    fn ladder_admission_is_coerced_to_stride_on_the_wall_clock_path() {
+        // Workers are rung-agnostic, so a ModelSwap policy must degrade
+        // by stride here instead of promising a speedup the pool cannot
+        // deliver (that would overcommit it ~2.6×).
+        let clip = generate(&presets::tiny_clip(32, 30, 30.0, 8), None);
+        let streams = [(&clip, StreamSpec::new("a", 30.0, 30).with_window(4))];
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
+            device_rates: vec![15.0],
+            paced: false,
+        };
+        let report = serve_fleet(&streams, &config, |_| {
+            Ok(Box::new(EchoDetector {
+                delay: Duration::from_millis(1),
+            }) as Box<dyn Detector>)
+        })
+        .unwrap();
+        let d = report.streams[0].decision;
+        assert!(
+            matches!(d, crate::fleet::admission::Decision::Degrade { .. }),
+            "expected stride degradation, got {d:?}"
+        );
+        assert_eq!(d.rung(), 0);
     }
 
     #[test]

@@ -10,9 +10,17 @@
 //! multi-stream contention is the wall-clock path's job
 //! ([`crate::fleet::serve`]), which runs real detectors per frame.
 //!
-//! Scenarios can script mid-run control events (attach/detach of streams
-//! and devices), which is what makes elasticity experiments — autoscaling
-//! a pool under changing load — expressible in milliseconds of wall time.
+//! Control comes in two flavours:
+//!
+//! * **Scripted** [`ControlEvent`]s (attach/detach of streams and
+//!   devices at fixed times) — elasticity experiments in milliseconds of
+//!   wall time.
+//! * A **closed-loop** [`FleetController`] hook ([`run_fleet_with`]):
+//!   the controller observes every emitted output record and ticks every
+//!   `interval()` virtual seconds, emitting [`ControlAction`]s computed
+//!   from feedback. This is the seam the `crate::autoscale` subsystem
+//!   drives — device autoscaling and model-ladder swaps replace the
+//!   scripted events with feedback control.
 
 use crate::coordinator::sync::Fate;
 use crate::device::DeviceInstance;
@@ -20,9 +28,9 @@ use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::metrics::{finish_stream, FleetReport, StreamAccum};
 use crate::fleet::pool::Job;
 use crate::fleet::registry::{ControlAction, ControlEvent, FleetRegistry};
-use crate::fleet::stream::{StreamId, StreamSpec};
+use crate::fleet::stream::{StreamId, StreamSpec, StreamState};
 use crate::sim::EventQueue;
-use crate::types::FrameId;
+use crate::types::{FrameId, OutputRecord};
 use crate::util::Rng;
 
 /// One fleet run's full description.
@@ -65,6 +73,42 @@ impl Scenario {
     }
 }
 
+/// Closed-loop controller hook for the virtual-time engine.
+///
+/// The engine feeds every emitted [`OutputRecord`] to [`observe`]
+/// (latency / drop signals) and calls [`act`] every [`interval`] virtual
+/// seconds; returned actions are applied immediately and logged. The
+/// trait lives here (not in `crate::autoscale`) so the engine stays free
+/// of policy: any feedback law that speaks `ControlAction` plugs in.
+///
+/// [`observe`]: FleetController::observe
+/// [`act`]: FleetController::act
+/// [`interval`]: FleetController::interval
+pub trait FleetController {
+    /// Control-loop tick period in virtual seconds (> 0).
+    fn interval(&self) -> f64;
+    /// One output record of stream `sid` was emitted at fleet time `now`.
+    fn observe(&mut self, now: f64, sid: StreamId, record: &OutputRecord);
+    /// Periodic control decision against the current registry state.
+    fn act(&mut self, now: f64, reg: &FleetRegistry) -> Vec<ControlAction>;
+}
+
+/// One applied control-plane action, for post-run analysis.
+#[derive(Debug, Clone)]
+pub struct ControlRecord {
+    pub at: f64,
+    pub action: ControlAction,
+    /// True for scenario-scripted events, false for controller actions.
+    pub scripted: bool,
+}
+
+/// Result of a controlled fleet run: the usual report plus the full
+/// control-plane action log (scripted and feedback-driven).
+pub struct FleetRunOutput {
+    pub report: FleetReport,
+    pub control_log: Vec<ControlRecord>,
+}
+
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     /// Frame `fid` of stream `sid` arrives.
@@ -73,40 +117,82 @@ enum Ev {
     ServiceDone { dev: usize },
     /// Apply `scenario.events[idx]`.
     Control { idx: usize },
+    /// Controller tick.
+    Tick,
 }
 
-fn schedule_arrivals(queue: &mut EventQueue<Ev>, reg: &FleetRegistry, sid: StreamId) {
+/// Schedule stream `sid`'s arrival of frame `fid`, if it exists and the
+/// stream is still attached; returns whether an event was scheduled.
+/// Arrivals are *chained* — each pop schedules the next — so the event
+/// heap stays O(streams + in-flight) instead of O(total frames), and a
+/// detached stream stops generating events (keeping `queue.now()`, and
+/// with it the reported makespan, pinned to real activity).
+fn schedule_next_arrival(
+    queue: &mut EventQueue<Ev>,
+    reg: &FleetRegistry,
+    sid: StreamId,
+    fid: FrameId,
+) -> bool {
     let s = &reg.streams[sid];
-    for fid in 0..s.spec.num_frames {
-        queue.schedule(s.capture_ts(fid), Ev::Arrival { sid, fid });
+    if s.detached || fid >= s.spec.num_frames {
+        return false;
+    }
+    queue.schedule(s.capture_ts(fid), Ev::Arrival { sid, fid });
+    true
+}
+
+/// Feed the last `n_new` emitted records of `s` to the controller.
+fn feed(
+    controller: &mut Option<&mut dyn FleetController>,
+    s: &StreamState,
+    n_new: usize,
+    now: f64,
+) {
+    if n_new == 0 {
+        return;
+    }
+    if let Some(c) = controller.as_mut() {
+        let em = s.sync.emitted();
+        for r in &em[em.len() - n_new..] {
+            c.observe(now, s.id, r);
+        }
     }
 }
 
-fn arrival(reg: &mut FleetRegistry, sid: StreamId, fid: FrameId, now: f64) {
-    let s = &mut reg.streams[sid];
-    if s.detached {
-        return;
-    }
-    s.arrived += 1;
-    if !s.decision.is_admitted() {
-        // Rejected stream: every frame is dropped on arrival, so the
-        // record log still covers the whole stream.
-        s.resolve(fid, Fate::Dropped, now);
-        return;
-    }
-    if !s.keeps(fid) {
-        // Degraded stream: admission-mandated subsampling.
-        s.resolve(fid, Fate::Dropped, now);
-        return;
-    }
-    if let Some(evicted) = s.window.arrive(fid).evicted {
-        s.resolve(evicted, Fate::Dropped, now);
-    }
+fn arrival(
+    reg: &mut FleetRegistry,
+    sid: StreamId,
+    fid: FrameId,
+    now: f64,
+    controller: &mut Option<&mut dyn FleetController>,
+) {
+    let n_new = {
+        let s = &mut reg.streams[sid];
+        if s.detached {
+            return;
+        }
+        s.arrived += 1;
+        if !s.decision.is_admitted() {
+            // Rejected stream: every frame is dropped on arrival, so the
+            // record log still covers the whole stream.
+            s.resolve(fid, Fate::Dropped, now)
+        } else if !s.keeps(fid) {
+            // Degraded stream: admission-mandated subsampling.
+            s.resolve(fid, Fate::Dropped, now)
+        } else if let Some(evicted) = s.window.arrive(fid).evicted {
+            s.resolve(evicted, Fate::Dropped, now)
+        } else {
+            0
+        }
+    };
+    feed(controller, &reg.streams[sid], n_new, now);
 }
 
 /// Work-conserving dispatch: pair idle devices with backlogged streams
-/// until one side runs out.
-fn dispatch(reg: &mut FleetRegistry, queue: &mut EventQueue<Ev>, rng: &mut Rng) {
+/// until one side runs out. Returns how many jobs were started (the
+/// caller tracks in-flight work for controller-tick termination).
+fn dispatch(reg: &mut FleetRegistry, queue: &mut EventQueue<Ev>, rng: &mut Rng) -> usize {
+    let mut started = 0;
     loop {
         let Some(dev) = reg.pool.next_idle() else { break };
         let Some(sid) = reg.pick_stream() else { break };
@@ -116,36 +202,114 @@ fn dispatch(reg: &mut FleetRegistry, queue: &mut EventQueue<Ev>, rng: &mut Rng) 
             .expect("backlogged stream has a frame");
         let weight = reg.streams[sid].spec.weight.max(1e-9);
         reg.streams[sid].vtime += 1.0 / weight;
-        let t = reg.pool.start(dev, Job { stream: sid, fid }, rng);
+        // Model-ladder hook: a stream on a faster rung costs the device
+        // proportionally less service time per frame.
+        let speedup = reg.admission.rung_speedup(reg.streams[sid].decision.rung());
+        let t = reg
+            .pool
+            .start_scaled(dev, Job { stream: sid, fid }, speedup, rng);
         queue.schedule_in(t, Ev::ServiceDone { dev });
+        started += 1;
+    }
+    started
+}
+
+/// Apply one control action (scripted or controller-emitted) at `now`.
+fn apply_action(
+    reg: &mut FleetRegistry,
+    queue: &mut EventQueue<Ev>,
+    action: ControlAction,
+    now: f64,
+    pending_arrivals: &mut u64,
+    controller: &mut Option<&mut dyn FleetController>,
+) {
+    match action {
+        ControlAction::AttachStream(spec) => {
+            let sid = reg.attach_stream(spec, now);
+            if schedule_next_arrival(queue, reg, sid, 0) {
+                *pending_arrivals += 1;
+            }
+        }
+        ControlAction::DetachStream(id) => {
+            let drained = reg.detach_stream(id, now);
+            for fid in drained {
+                let n = reg.streams[id].resolve(fid, Fate::Dropped, now);
+                feed(controller, &reg.streams[id], n, now);
+            }
+        }
+        ControlAction::AttachDevice(instance) => {
+            reg.attach_device(instance, now);
+        }
+        ControlAction::DetachDevice(dev) => {
+            reg.detach_device(dev, now);
+        }
+        ControlAction::SwapModel { stream, rung } => {
+            reg.set_stream_rung(stream, rung, now);
+        }
     }
 }
 
-/// Run the scenario to completion and report.
+/// Run the scenario to completion and report (scripted control only).
 pub fn run_fleet(scenario: &Scenario) -> FleetReport {
+    run_fleet_with(scenario, None).report
+}
+
+/// Run the scenario with an optional closed-loop controller. Scripted
+/// events still apply (they model external load/failures); controller
+/// actions are interleaved at tick boundaries and logged alongside them.
+pub fn run_fleet_with(
+    scenario: &Scenario,
+    mut controller: Option<&mut dyn FleetController>,
+) -> FleetRunOutput {
     let mut reg = FleetRegistry::new(scenario.devices.clone(), scenario.admission.clone());
     let mut queue: EventQueue<Ev> = EventQueue::new();
     let mut rng = Rng::new(scenario.seed ^ 0x0F1E_E75E_ED00_0001);
+    let mut control_log: Vec<ControlRecord> = Vec::new();
+
+    // Outstanding-work counters: a controller tick re-arms only while
+    // any of these is non-zero, so the run terminates.
+    // `pending_arrivals` counts *scheduled* arrival events (one per live
+    // stream, chained), not total remaining frames.
+    let mut pending_arrivals: u64 = 0;
+    let mut in_flight: usize = 0;
+    let mut pending_controls = scenario.events.len();
+    // Time of the last *real* event (ticks excluded): controller ticks
+    // re-arm while work is pending and always fire one final time, and
+    // that dead time must not inflate the reported makespan.
+    let mut last_activity = 0.0f64;
 
     for spec in &scenario.streams {
         let sid = reg.attach_stream(spec.clone(), 0.0);
-        schedule_arrivals(&mut queue, &reg, sid);
+        if schedule_next_arrival(&mut queue, &reg, sid, 0) {
+            pending_arrivals += 1;
+        }
     }
     for (idx, ev) in scenario.events.iter().enumerate() {
         queue.schedule(ev.at.max(0.0), Ev::Control { idx });
     }
+    let tick = controller.as_ref().map(|c| c.interval().max(1e-3));
+    if let Some(dt) = tick {
+        queue.schedule(dt, Ev::Tick);
+    }
 
-    dispatch(&mut reg, &mut queue, &mut rng);
+    in_flight += dispatch(&mut reg, &mut queue, &mut rng);
 
     while let Some((now, ev)) = queue.pop() {
         match ev {
             Ev::Arrival { sid, fid } => {
-                arrival(&mut reg, sid, fid, now);
-                dispatch(&mut reg, &mut queue, &mut rng);
+                last_activity = now;
+                pending_arrivals = pending_arrivals.saturating_sub(1);
+                if schedule_next_arrival(&mut queue, &reg, sid, fid + 1) {
+                    pending_arrivals += 1;
+                }
+                arrival(&mut reg, sid, fid, now, &mut controller);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
             }
             Ev::ServiceDone { dev } => {
+                last_activity = now;
+                in_flight -= 1;
                 let (job, service) = reg.pool.complete(dev);
-                {
+                let n_new = {
                     let s = &mut reg.streams[job.stream];
                     if dev < s.device_busy.len() {
                         s.device_busy[dev] += service;
@@ -158,41 +322,67 @@ pub fn run_fleet(scenario: &Scenario) -> FleetReport {
                             device: dev,
                         },
                         now,
-                    );
-                }
-                dispatch(&mut reg, &mut queue, &mut rng);
+                    )
+                };
+                feed(&mut controller, &reg.streams[job.stream], n_new, now);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
             }
             Ev::Control { idx } => {
-                match scenario.events[idx].action.clone() {
-                    ControlAction::AttachStream(spec) => {
-                        let sid = reg.attach_stream(spec, now);
-                        schedule_arrivals(&mut queue, &reg, sid);
-                    }
-                    ControlAction::DetachStream(id) => {
-                        let drained = reg.detach_stream(id);
-                        for fid in drained {
-                            reg.streams[id].resolve(fid, Fate::Dropped, now);
-                        }
-                    }
-                    ControlAction::AttachDevice(instance) => {
-                        reg.attach_device(instance);
-                    }
-                    ControlAction::DetachDevice(dev) => {
-                        reg.detach_device(dev);
-                    }
+                last_activity = now;
+                pending_controls -= 1;
+                let action = scenario.events[idx].action.clone();
+                apply_action(
+                    &mut reg,
+                    &mut queue,
+                    action.clone(),
+                    now,
+                    &mut pending_arrivals,
+                    &mut controller,
+                );
+                control_log.push(ControlRecord {
+                    at: now,
+                    action,
+                    scripted: true,
+                });
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
+            }
+            Ev::Tick => {
+                let actions = match controller.as_mut() {
+                    Some(c) => c.act(now, &reg),
+                    None => Vec::new(),
+                };
+                for action in actions {
+                    apply_action(
+                        &mut reg,
+                        &mut queue,
+                        action.clone(),
+                        now,
+                        &mut pending_arrivals,
+                        &mut controller,
+                    );
+                    control_log.push(ControlRecord {
+                        at: now,
+                        action,
+                        scripted: false,
+                    });
                 }
-                dispatch(&mut reg, &mut queue, &mut rng);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
+                if pending_arrivals > 0 || in_flight > 0 || pending_controls > 0 {
+                    queue.schedule_in(tick.expect("tick scheduled only with controller"), Ev::Tick);
+                }
             }
         }
     }
 
     // Frames still windowed when the event queue drains could never be
-    // scheduled: a dropped tail, resolved at the end of virtual time.
-    let t_end = queue.now();
-    for s in reg.streams.iter_mut() {
-        let leftover = s.window.drain_remaining();
+    // scheduled: a dropped tail, resolved at the end of virtual time
+    // (the last real event, not a trailing controller tick).
+    let t_end = last_activity;
+    for sid in 0..reg.streams.len() {
+        let leftover = reg.streams[sid].window.drain_remaining();
         for fid in leftover {
-            s.resolve(fid, Fate::Dropped, t_end);
+            let n = reg.streams[sid].resolve(fid, Fate::Dropped, t_end);
+            feed(&mut controller, &reg.streams[sid], n, t_end);
         }
     }
 
@@ -230,17 +420,21 @@ pub fn run_fleet(scenario: &Scenario) -> FleetReport {
                 device_frames: s.device_frames,
                 makespan: makespan_s,
                 stream_duration: s.spec.duration(),
+                rung_log: s.rung_log,
             };
             finish_stream(acc, &kinds)
         })
         .collect();
 
-    FleetReport {
-        streams,
-        makespan,
-        device_busy,
-        device_frames,
-        device_labels,
+    FleetRunOutput {
+        report: FleetReport {
+            streams,
+            makespan,
+            device_busy,
+            device_frames,
+            device_labels,
+        },
+        control_log,
     }
 }
 
@@ -412,6 +606,34 @@ mod tests {
     }
 
     #[test]
+    fn mid_run_stream_detach_restores_survivor_admission() {
+        // Admission enforced this time: both streams start degraded
+        // (share 2.375 < λ = 5); stream 0's departure at t=20 must
+        // re-level stream 1 back to full-rate admission mid-run — the
+        // detach-re-level path end to end.
+        let scenario = Scenario::new(devices(&[2.5, 2.5, 2.5]), specs(2, 5.0, 300, 4))
+            .with_seed(19)
+            .with_events(vec![ControlEvent {
+                at: 20.0,
+                action: ControlAction::DetachStream(0),
+            }]);
+        let report = run_fleet(&scenario);
+        let s1 = &report.streams[1];
+        assert!(
+            matches!(s1.decision, Decision::Admit { .. }),
+            "survivor decision {:?}",
+            s1.decision
+        );
+        // Restored at full rate for 2/3 of its life, so it processes far
+        // more than the degraded stride-2 share (2.5 FPS × 60 s) alone.
+        assert!(
+            s1.metrics.frames_processed > 180,
+            "survivor processed {}",
+            s1.metrics.frames_processed
+        );
+    }
+
+    #[test]
     fn weighted_streams_split_throughput_by_weight() {
         // Saturated pool, weights 3:1 -> throughput ratio ≈ 3.
         let streams = vec![
@@ -426,5 +648,94 @@ mod tests {
         let light = report.streams[1].metrics.frames_processed as f64;
         let ratio = heavy / light.max(1.0);
         assert!(ratio > 2.2 && ratio < 3.8, "ratio {ratio}");
+    }
+
+    #[test]
+    fn model_swap_admission_processes_all_frames_at_lower_cost() {
+        // One 2.5-FPS device, one 5-FPS stream. Stride mode keeps every
+        // 3rd frame; ladder mode swaps to a 2.6× rung and keeps *all*
+        // frames (5/2.6 ≈ 1.92 ≤ share 2.375).
+        let ladder = AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]);
+        let scenario = Scenario::new(devices(&[2.5]), specs(1, 5.0, 150, 4))
+            .with_admission(ladder)
+            .with_seed(29);
+        let report = run_fleet(&scenario);
+        let s = &report.streams[0];
+        assert!(
+            matches!(s.decision, Decision::SwapModel { rung: 1, stride: 1, .. }),
+            "{:?}",
+            s.decision
+        );
+        // Nearly every frame processes: the rung buys back the stride.
+        assert!(
+            s.metrics.frames_processed >= 140,
+            "processed {}",
+            s.metrics.frames_processed
+        );
+        // And the stride-mode baseline processes only ~1/3 as many.
+        let stride_run = run_fleet(
+            &Scenario::new(devices(&[2.5]), specs(1, 5.0, 150, 4)).with_seed(29),
+        );
+        assert!(
+            stride_run.streams[0].metrics.frames_processed < 60,
+            "stride baseline processed {}",
+            stride_run.streams[0].metrics.frames_processed
+        );
+    }
+
+    /// Minimal controller: counts observations and attaches one device
+    /// at the first tick after t=10.
+    struct ProbeController {
+        observed: usize,
+        attached: bool,
+    }
+
+    impl FleetController for ProbeController {
+        fn interval(&self) -> f64 {
+            2.0
+        }
+        fn observe(&mut self, _now: f64, _sid: StreamId, _record: &OutputRecord) {
+            self.observed += 1;
+        }
+        fn act(&mut self, now: f64, reg: &FleetRegistry) -> Vec<ControlAction> {
+            if now >= 10.0 && !self.attached {
+                self.attached = true;
+                return vec![ControlAction::AttachDevice(DeviceInstance::with_rate(
+                    DeviceKind::Ncs2,
+                    DetectorModelId::Yolov3,
+                    reg.pool.len(),
+                    2.5,
+                ))];
+            }
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn controller_hook_observes_and_acts() {
+        let scenario = Scenario::new(devices(&[2.5]), specs(1, 10.0, 300, 8))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(9);
+        let mut ctl = ProbeController { observed: 0, attached: false };
+        let out = run_fleet_with(&scenario, Some(&mut ctl));
+        // Every record was observed.
+        assert_eq!(ctl.observed, 300);
+        // The controller's attach is in the log, flagged as unscripted.
+        let attaches: Vec<_> = out
+            .control_log
+            .iter()
+            .filter(|r| matches!(r.action, ControlAction::AttachDevice(_)))
+            .collect();
+        assert_eq!(attaches.len(), 1);
+        assert!(!attaches[0].scripted);
+        assert!(attaches[0].at >= 10.0);
+        // And the extra capacity shows up as throughput vs the plain run.
+        let plain = run_fleet(&scenario);
+        assert!(
+            out.report.total_processed() > plain.total_processed() + 10,
+            "controlled {} vs plain {}",
+            out.report.total_processed(),
+            plain.total_processed()
+        );
     }
 }

@@ -93,6 +93,11 @@ pub struct StreamState {
     pub device_frames: Vec<u64>,
     /// Latest fate-resolution time (stream-local makespan tracking).
     pub last_resolution: Seconds,
+    /// Ladder-rung timeline: `(fleet time, rung)` appended whenever the
+    /// stream's decision moves to a different model rung (0 = full
+    /// quality). Lets reports attribute per-frame quality to the model
+    /// variant that was live at capture time.
+    pub rung_log: Vec<(Seconds, usize)>,
 }
 
 impl StreamState {
@@ -118,7 +123,23 @@ impl StreamState {
             device_busy: vec![0.0; num_devices],
             device_frames: vec![0; num_devices],
             last_resolution: attached_at,
+            rung_log: vec![(attached_at, decision.rung())],
         }
+    }
+
+    /// Install a new admission decision at fleet time `now`, recording a
+    /// rung transition when the model variant changed.
+    pub fn set_decision(&mut self, decision: Decision, now: Seconds) {
+        let rung = decision.rung();
+        if self.rung_log.last().map(|&(_, r)| r) != Some(rung) {
+            self.rung_log.push((now, rung));
+        }
+        self.decision = decision;
+    }
+
+    /// Rung live at fleet time `t` (0 before the stream attached).
+    pub fn rung_at(&self, t: Seconds) -> usize {
+        crate::util::stats::timeline_at(&self.rung_log, t).unwrap_or(0)
     }
 
     /// Capture timestamp of frame `fid` in fleet time.
@@ -138,17 +159,21 @@ impl StreamState {
     }
 
     /// Report frame `fid`'s fate at fleet time `now`, feeding emitted
-    /// records' output latencies into the stream's distribution.
-    pub fn resolve(&mut self, fid: FrameId, fate: Fate, now: Seconds) {
+    /// records' output latencies into the stream's distribution. Returns
+    /// how many records became emittable (they are the tail of
+    /// `self.sync.emitted()`), so engines can feed them to observers.
+    pub fn resolve(&mut self, fid: FrameId, fate: Fate, now: Seconds) -> usize {
         let base = self.attached_at;
         let fps = self.spec.fps;
         let out = self.sync.resolve(fid, fate, now, |f| base + f as f64 / fps);
+        let n = out.len();
         for r in out {
             self.latency.push((r.emit_ts - r.capture_ts).max(0.0));
         }
         if now > self.last_resolution {
             self.last_resolution = now;
         }
+        n
     }
 
     /// Grow per-device accumulators after a device attach.
@@ -208,6 +233,35 @@ mod tests {
         let mut r = state(Decision::Reject);
         r.window.arrive(0);
         assert!(!r.backlogged());
+    }
+
+    #[test]
+    fn rung_log_tracks_decision_transitions() {
+        let mut s = state(Decision::Admit { share: 10.0 });
+        assert_eq!(s.rung_log, vec![(2.0, 0)]);
+        // Same-rung decision changes do not spam the log.
+        s.set_decision(Decision::Degrade { stride: 2, share: 5.0 }, 3.0);
+        assert_eq!(s.rung_log.len(), 1);
+        s.set_decision(Decision::SwapModel { rung: 2, stride: 1, share: 4.0 }, 4.0);
+        s.set_decision(Decision::SwapModel { rung: 2, stride: 2, share: 3.0 }, 5.0);
+        s.set_decision(Decision::Admit { share: 10.0 }, 6.0);
+        assert_eq!(s.rung_log, vec![(2.0, 0), (4.0, 2), (6.0, 0)]);
+        assert_eq!(s.rung_at(1.0), 0);
+        assert_eq!(s.rung_at(4.5), 2);
+        assert_eq!(s.rung_at(9.0), 0);
+    }
+
+    #[test]
+    fn resolve_reports_emitted_count() {
+        let mut s = state(Decision::Admit { share: 10.0 });
+        // Frame 1 resolves first: held by the synchronizer.
+        assert_eq!(
+            s.resolve(1, Fate::Processed { detections: vec![], device: 0 }, 2.3),
+            0
+        );
+        // Frame 0 unblocks both.
+        assert_eq!(s.resolve(0, Fate::Dropped, 2.4), 2);
+        assert_eq!(s.sync.emitted().len(), 2);
     }
 
     #[test]

@@ -20,10 +20,17 @@
 //! * [`server`] — real-time serving pipeline (threads; python-free).
 //! * [`fleet`] — multi-stream serving over a shared heterogeneous device
 //!   pool: per-stream paced sources/windows/synchronizers, weighted
-//!   max-min admission control (admit/degrade/reject), dynamic
-//!   stream/device attach-detach, and fleet metrics (per-stream σ,
-//!   latency percentiles, device utilisation, Jain fairness) — in both
-//!   virtual-time (DES) and wall-clock (threaded) modes.
+//!   max-min admission control (admit/degrade/reject, stride or
+//!   model-swap degradation), dynamic stream/device attach-detach, and
+//!   fleet metrics (per-stream σ, latency percentiles, device
+//!   utilisation, Jain fairness) — in both virtual-time (DES) and
+//!   wall-clock (threaded) modes.
+//! * [`autoscale`] — closed-loop adaptation above the fleet: windowed
+//!   per-stream signals drive a generalised-nselect device controller
+//!   (attach/detach replicas with hysteresis + cooldown) and a
+//!   quality controller walking a model ladder (SSD300 ↔ YOLOv3 ↔ tiny
+//!   variants, an accuracy–rate Pareto frontier), replacing scripted
+//!   control events with feedback control.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
 //!   bench binaries and the CLI.
 
@@ -38,4 +45,5 @@ pub mod coordinator;
 pub mod runtime;
 pub mod server;
 pub mod fleet;
+pub mod autoscale;
 pub mod experiments;

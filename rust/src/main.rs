@@ -4,6 +4,7 @@
 //!   serve      run the real-time PJRT serving pipeline on a synthetic clip
 //!   offline    zero-drop offline detection (Figure 1a reference)
 //!   fleet      multi-stream serving over a shared device pool (virtual time)
+//!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
 //!   nselect    recommend the parallel-detection parameter n (§III-B)
 //!   visualize  dump Figure 2/3-style PPM frames with box overlays
@@ -46,6 +47,8 @@ fn specs() -> Vec<Spec> {
         Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
+        Spec { name: "scenario", takes_value: true, help: "autoscale: sweep to run (step|diurnal|failure|all)", default: Some("step") },
+        Spec { name: "json", takes_value: false, help: "fleet/autoscale: emit machine-readable JSON instead of tables", default: None },
     ]
 }
 
@@ -53,7 +56,7 @@ fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
         print!("{}", usage("eva", "parallel detection for edge video analytics", &specs()));
-        println!("\nsubcommands: serve | offline | fleet | table | nselect | visualize | inspect");
+        println!("\nsubcommands: serve | offline | fleet | autoscale | table | nselect | visualize | inspect");
         return;
     }
     let cmd = raw[0].clone();
@@ -75,6 +78,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "serve" => cmd_serve(args, false),
         "offline" => cmd_serve(args, true),
         "fleet" => cmd_fleet(args),
+        "autoscale" => cmd_autoscale(args),
         "table" => cmd_table(args),
         "nselect" => cmd_nselect(args),
         "visualize" => cmd_visualize(args),
@@ -185,9 +189,54 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .with_admission(admission)
         .with_seed(seed);
     let mut report = run_fleet(&scenario);
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string());
+        return Ok(());
+    }
     print!("{}", report.stream_table().render());
     print!("{}", report.device_table().render());
     println!("[fleet] {}", report.summary());
+    Ok(())
+}
+
+fn cmd_autoscale(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    let scenario = args.str_or("scenario", "step");
+    if args.flag("json") {
+        let json = experiments::autoscale::autoscale_json(seed, &scenario)
+            .ok_or_else(|| anyhow!("unknown autoscale scenario {scenario:?} (step|diurnal|failure|all)"))?;
+        println!("{}", json.to_string());
+        return Ok(());
+    }
+    match scenario.as_str() {
+        "step" => {
+            let (table, _) = experiments::autoscale::step_load(seed);
+            print!("{}", table.render());
+        }
+        "diurnal" => {
+            let (table, _, out) = experiments::autoscale::diurnal(seed);
+            print!("{}", table.render());
+            println!(
+                "[autoscale] {} controller actions ({} device, {} rung)",
+                out.control_log.iter().filter(|r| !r.scripted).count(),
+                out.controller_device_actions(),
+                out.rung_actions,
+            );
+        }
+        "failure" => {
+            let (table, _) = experiments::autoscale::device_failure(seed);
+            print!("{}", table.render());
+        }
+        "all" => {
+            let (t1, _) = experiments::autoscale::step_load(seed);
+            let (t2, _, _) = experiments::autoscale::diurnal(seed);
+            let (t3, _) = experiments::autoscale::device_failure(seed);
+            print!("{}", t1.render());
+            print!("{}", t2.render());
+            print!("{}", t3.render());
+        }
+        other => bail!("unknown autoscale scenario {other:?} (step|diurnal|failure|all)"),
+    }
     Ok(())
 }
 

@@ -4,6 +4,17 @@
 //! Used by the coordinator metrics and by the performance-aware
 //! proportional scheduler (§III-C of the paper) for its runtime weights.
 
+/// Value of a step timeline `[(t, v)]` at time `t`: the last entry at or
+/// before `t` (with a small tolerance), `None` before the first entry.
+/// Shared by rung logs and device-count timelines so boundary semantics
+/// cannot drift between copies.
+pub fn timeline_at<T: Copy>(log: &[(f64, T)], t: f64) -> Option<T> {
+    log.iter()
+        .rev()
+        .find(|&&(at, _)| at <= t + 1e-12)
+        .map(|&(_, v)| v)
+}
+
 /// Welford running mean/variance.
 #[derive(Debug, Clone, Default)]
 pub struct Running {

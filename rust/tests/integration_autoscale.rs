@@ -1,0 +1,140 @@
+//! Integration tests for the autoscale subsystem: band convergence,
+//! anti-flapping, ladder restore after load subsides, and the headline
+//! quality claim — ladder + autoscale beats stride-only degradation on
+//! delivered mAP at 2× overload while holding the p99 bound.
+
+use eva::autoscale::{device_band, run_autoscale_sim, AutoscaleConfig, ModelLadder};
+use eva::experiments::autoscale::{step_load, STEP_T_OFF};
+use eva::experiments::fleet::pool_of;
+use eva::fleet::{Scenario, StreamSpec};
+
+fn uniform_streams(n: usize, fps: f64, frames: u64) -> Vec<StreamSpec> {
+    (0..n)
+        .map(|i| StreamSpec::new(&format!("s{i}"), fps, frames).with_window(4))
+        .collect()
+}
+
+#[test]
+fn controller_converges_into_the_nselect_band() {
+    // 4 × 5-FPS streams (Σλ = 20) starting on 2 × 2.5-FPS devices. Slow
+    // streams (λ ≤ 12) collapse the generalised band to the conservative
+    // point: ⌈20 / (2.5 · 0.95)⌉ = 9 devices. The controller must climb
+    // there — one attach per cooldown — and stay.
+    let cfg = AutoscaleConfig {
+        cooldown: 5.0,
+        max_devices: 12,
+        ..AutoscaleConfig::default()
+    };
+    let band = device_band(&[5.0; 4], cfg.device_rate, cfg.target_utilization);
+    assert_eq!((band.lo, band.hi), (9, 9));
+
+    let scenario = Scenario::new(pool_of(2, 2.5), uniform_streams(4, 5.0, 600))
+        .with_admission(cfg.admission())
+        .with_seed(41);
+    let out = run_autoscale_sim(&scenario, &cfg);
+    let final_devices = out.final_devices();
+    assert!(
+        band.contains(final_devices),
+        "final {final_devices} devices outside band [{}, {}]",
+        band.lo,
+        band.hi
+    );
+    // Monotone climb: attaches only, no churn on the way up.
+    assert_eq!(out.device_actions, final_devices - 2);
+    for w in out.device_timeline.windows(2) {
+        assert!(w[1].1 == w[0].1 + 1, "non-monotone timeline {:?}", out.device_timeline);
+    }
+}
+
+#[test]
+fn no_flapping_under_stationary_load() {
+    // The same load already provisioned at the band point: a correct
+    // controller holds the pool exactly where it is for the whole run.
+    let cfg = AutoscaleConfig {
+        cooldown: 5.0,
+        max_devices: 12,
+        ..AutoscaleConfig::default()
+    };
+    let scenario = Scenario::new(pool_of(9, 2.5), uniform_streams(4, 5.0, 600))
+        .with_admission(cfg.admission())
+        .with_seed(43);
+    let out = run_autoscale_sim(&scenario, &cfg);
+    assert_eq!(
+        out.device_actions, 0,
+        "stationary fit load must cause no device actions: {:?}",
+        out.control_log
+    );
+    assert_eq!(out.rung_actions, 0);
+    // And the provisioned pool actually serves the load at full rate.
+    for s in &out.report.streams {
+        assert!(
+            s.metrics.drop_rate() < 0.05,
+            "stream {} drop rate {}",
+            s.name,
+            s.metrics.drop_rate()
+        );
+    }
+}
+
+#[test]
+fn ladder_restores_full_quality_after_load_subsides() {
+    let (_, outcomes) = step_load(45);
+    let auto = &outcomes[2];
+    // During the overload the fleet really was on lower rungs (the
+    // control/rung machinery engaged)...
+    assert!(
+        auto.overload_map < 0.85,
+        "overload window should show reduced quality, got {:.3}",
+        auto.overload_map
+    );
+    // ...and within one cooldown of the burst leaving, every surviving
+    // stream is back on the full-quality model.
+    assert!(
+        auto.recovery_seconds <= 5.0 + 1e-9,
+        "recovery took {:.1}s after t={STEP_T_OFF}",
+        auto.recovery_seconds
+    );
+    // The ladder-only baseline also restores (via re-level on stream
+    // detach), instantly.
+    assert!(outcomes[1].recovery_seconds <= 5.0 + 1e-9);
+}
+
+#[test]
+fn ladder_autoscale_beats_stride_only_at_2x_overload() {
+    // The acceptance criterion, end to end: strictly higher delivered
+    // mAP than stride-only degradation at 2× overload, p99 within the
+    // configured bound, convergence back to full quality within one
+    // cooldown window.
+    let (_, outcomes) = step_load(47);
+    let stride = &outcomes[0];
+    let auto = &outcomes[2];
+    assert!(
+        auto.overload_map > stride.overload_map + 0.15,
+        "autoscale {:.3} vs stride-only {:.3}",
+        auto.overload_map,
+        stride.overload_map
+    );
+    let cfg = AutoscaleConfig::default();
+    assert!(
+        auto.overload_p99 <= cfg.p99_bound,
+        "p99 {:.2}s breaches the {:.2}s bound",
+        auto.overload_p99,
+        cfg.p99_bound
+    );
+    assert!(auto.recovery_seconds <= cfg.cooldown + 1e-9);
+    // The win comes from real scaling: the pool grew past its static 4.
+    assert!(auto.peak_devices >= 8, "peak devices {}", auto.peak_devices);
+}
+
+#[test]
+fn ladder_frontier_is_usable_for_both_paper_videos() {
+    for video in ["eth_sunnyday", "adl_rundle6"] {
+        let ladder = ModelLadder::from_profiles(video);
+        assert!(ladder.len() >= 2, "{video}: ladder {:?}", ladder.rungs);
+        let speedups = ladder.speedups();
+        assert!((speedups[0] - 1.0).abs() < 1e-9);
+        for w in speedups.windows(2) {
+            assert!(w[1] > w[0], "{video}: speedups {speedups:?}");
+        }
+    }
+}
