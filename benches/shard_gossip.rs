@@ -1,0 +1,66 @@
+//! Shard bench: sharded-vs-single parity shape, shard-loss recovery
+//! shape, and the wire-format + gossip-round costs.
+//!
+//! Asserts the acceptance shapes (a 2-shard balanced split delivers
+//! within 5% of the single pool at equal capacity; every orphan of a
+//! lost shard is re-placed within one gossip interval), then measures
+//! what the control plane costs: WireEvent encode→decode round trips
+//! and one full sharded co-simulation.
+
+use eva::control::{ControlAction, ControlOrigin, WireEvent};
+use eva::experiments::shard::{balanced_split, shard_failure};
+use eva::fleet::StreamSpec;
+use eva::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::new(1, 3);
+
+    let (table, outcomes) = balanced_split(29);
+    print!("{}", table.render());
+    let single = &outcomes[0];
+    for o in &outcomes[1..] {
+        let ratio = o.delivered_fps / single.delivered_fps;
+        assert!(
+            (ratio - 1.0).abs() < 0.05,
+            "{}: σ {:.2} vs single {:.2} (ratio {ratio:.3})",
+            o.label,
+            o.delivered_fps,
+            single.delivered_fps
+        );
+    }
+    println!("shape OK: sharding at equal capacity is within 5% of the single pool");
+
+    let (failure_table, failure) = shard_failure(31);
+    print!("{}", failure_table.render());
+    assert_eq!(failure.orphans, 3, "{failure:?}");
+    assert!(
+        failure.replaced_within_interval,
+        "orphans must be re-placed within one gossip interval: {failure:?}"
+    );
+    println!("shape OK: shard-loss orphans re-placed within one gossip interval");
+
+    // Control-plane wire cost: encode + decode one attach event (the
+    // largest payload) per iteration batch.
+    let spec = StreamSpec::new("bench-stream", 12.5, 3_000).with_window(8);
+    bench.run("wire: encode+decode 1k attach-stream events", Some(1000.0), || {
+        let mut bytes = 0usize;
+        for i in 0..1000u64 {
+            let ev = WireEvent::action(
+                i as f64,
+                ControlOrigin::Placement,
+                ControlAction::AttachStream(spec.clone()),
+            );
+            let text = ev.encode();
+            bytes += text.len();
+            let back = WireEvent::decode(&text).expect("round-trip");
+            black_box(back);
+        }
+        bytes as u64
+    });
+
+    // One full 2-shard co-simulation (what every sweep cell pays).
+    bench.run("shard sim: 8 streams × 2 shards (300 frames)", Some(8.0 * 300.0), || {
+        let (_, outcomes) = balanced_split(37);
+        black_box(outcomes[1].delivered_fps.to_bits())
+    });
+}

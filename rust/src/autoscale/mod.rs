@@ -4,8 +4,9 @@
 //! The paper picks the parallelism degree *n* once, offline, from the
 //! §III-B nselect band; the fleet layer reacts only to scripted control
 //! events. This subsystem closes the loop: per-stream signals observed
-//! at runtime drive [`crate::fleet::registry::ControlAction`]s through
-//! the [`crate::fleet::sim::FleetController`] seam.
+//! at runtime drive [`crate::control::ControlAction`]s through the
+//! [`crate::fleet::sim::FleetController`] seam, and every applied action
+//! lands in the serialisable [`crate::control::EventLog`].
 //!
 //! * [`signals`] — sliding-window observers per stream (p99 output
 //!   latency, drop rate, delivered FPS) fed from the engines' emitted

@@ -29,11 +29,12 @@
 //! stream's re-probe delay (bounded), damping limit-cycle flapping
 //! under stationary overload.
 
+use crate::control::ControlAction;
 use crate::coordinator::nselect;
 use crate::coordinator::nselect::NRange;
 use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use crate::fleet::admission::AdmissionPolicy;
-use crate::fleet::registry::{ControlAction, FleetRegistry};
+use crate::fleet::registry::FleetRegistry;
 use crate::fleet::sim::FleetController;
 use crate::fleet::stream::StreamId;
 use crate::types::OutputRecord;

@@ -16,11 +16,11 @@
 
 use anyhow::Result;
 
+use crate::control::{ControlAction, ControlOrigin, ControlRecord, EventLog};
 use crate::detector::Detector;
 use crate::fleet::admission::AdmissionPolicy;
-use crate::fleet::registry::ControlAction;
 use crate::fleet::serve::{serve_fleet, FleetServeConfig};
-use crate::fleet::sim::{run_fleet_with, ControlRecord, Scenario};
+use crate::fleet::sim::{run_fleet_with, Scenario};
 use crate::fleet::stream::StreamSpec;
 use crate::fleet::FleetReport;
 use crate::video::Clip;
@@ -56,13 +56,18 @@ impl AutoscaleOutcome {
         self.control_log
             .iter()
             .filter(|r| {
-                !r.scripted
+                r.origin == ControlOrigin::Controller
                     && matches!(
                         r.action,
                         ControlAction::AttachDevice(_) | ControlAction::DetachDevice(_)
                     )
             })
             .count()
+    }
+
+    /// The run's control log as a serialisable wire log.
+    pub fn wire_log(&self) -> EventLog {
+        EventLog::from_records(&self.control_log)
     }
 }
 

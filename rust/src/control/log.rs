@@ -1,0 +1,183 @@
+//! Replayable control-plane event log.
+//!
+//! An [`EventLog`] is an ordered sequence of [`WireEvent`]s wrapped in a
+//! versioned envelope (`{"format": 1, "events": [...]}`). It is both the
+//! audit trail of a run (every applied action, origin-tagged) and a
+//! replay script: [`EventLog::scripted_events`] lowers the action
+//! payloads back into [`ControlEvent`]s that
+//! [`crate::fleet::sim::Scenario::with_events`] replays verbatim —
+//! feedback-controlled runs become deterministic scripted runs, and a
+//! log shipped across a process boundary drives a remote fleet exactly
+//! as the local one.
+
+use std::collections::BTreeMap;
+
+use crate::control::plane::{ControlEvent, ControlRecord};
+use crate::control::wire::{WireError, WireEvent, WIRE_VERSION};
+use crate::util::json::Json;
+
+/// Ordered, versioned sequence of wire events.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EventLog {
+    pub events: Vec<WireEvent>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog { events: Vec::new() }
+    }
+
+    /// Build from an engine's applied-action records.
+    pub fn from_records(records: &[ControlRecord]) -> EventLog {
+        EventLog {
+            events: records
+                .iter()
+                .map(|r| WireEvent::action(r.at, r.origin, r.action.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn push(&mut self, event: WireEvent) {
+        self.events.push(event);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Lower the action payloads into scripted [`ControlEvent`]s, in log
+    /// order (decision payloads are audit-only and skipped). Feeding
+    /// these to [`crate::fleet::sim::Scenario::with_events`] replays the
+    /// run's control plane.
+    pub fn scripted_events(&self) -> Vec<ControlEvent> {
+        self.events
+            .iter()
+            .filter_map(|e| {
+                e.as_action().map(|a| ControlEvent {
+                    at: e.at,
+                    action: a.clone(),
+                })
+            })
+            .collect()
+    }
+
+    /// Human labels in log order (debugging / examples).
+    pub fn labels(&self) -> Vec<String> {
+        self.events.iter().map(|e| e.label()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("format".to_string(), Json::Num(WIRE_VERSION as f64));
+        o.insert(
+            "events".to_string(),
+            Json::Arr(self.events.iter().map(|e| e.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<EventLog, WireError> {
+        let format = v
+            .get("format")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| WireError::new("missing log format"))?;
+        if format != WIRE_VERSION {
+            return Err(WireError::new(format!(
+                "unsupported wire format {format} (expected {WIRE_VERSION})"
+            )));
+        }
+        let raw = v
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| WireError::new("missing events array"))?;
+        let mut events = Vec::with_capacity(raw.len());
+        for e in raw {
+            events.push(WireEvent::from_json(e)?);
+        }
+        Ok(EventLog { events })
+    }
+
+    /// Serialise the whole log to a compact JSON string.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a string produced by [`EventLog::encode`].
+    pub fn decode(text: &str) -> Result<EventLog, WireError> {
+        let v = Json::parse(text).map_err(|e| WireError::new(e.to_string()))?;
+        EventLog::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::plane::{ControlAction, ControlOrigin};
+    use crate::fleet::admission::Decision;
+    use crate::fleet::stream::StreamSpec;
+
+    fn sample_log() -> EventLog {
+        let mut log = EventLog::new();
+        log.push(WireEvent::action(
+            0.0,
+            ControlOrigin::Placement,
+            ControlAction::AttachStream(StreamSpec::new("cam0", 5.0, 100)),
+        ));
+        log.push(WireEvent::decision(0.0, 0, Decision::Admit { share: 5.0 }));
+        log.push(WireEvent::action(
+            10.0,
+            ControlOrigin::Controller,
+            ControlAction::SwapModel { stream: 0, rung: 1 },
+        ));
+        log.push(WireEvent::action(
+            20.0,
+            ControlOrigin::Scripted,
+            ControlAction::DetachStream(0),
+        ));
+        log
+    }
+
+    #[test]
+    fn encode_decode_identity() {
+        let log = sample_log();
+        let text = log.encode();
+        let back = EventLog::decode(&text).expect("decode");
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn scripted_events_skip_decisions_and_keep_order() {
+        let log = sample_log();
+        let events = log.scripted_events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].at, 0.0);
+        assert!(matches!(events[0].action, ControlAction::AttachStream(_)));
+        assert!(matches!(events[1].action, ControlAction::SwapModel { .. }));
+        assert!(matches!(events[2].action, ControlAction::DetachStream(0)));
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let log = sample_log();
+        let text = log.encode().replace("\"format\":1", "\"format\":99");
+        let err = EventLog::decode(&text).unwrap_err();
+        assert!(err.msg.contains("unsupported wire format"), "{err}");
+    }
+
+    #[test]
+    fn from_records_preserves_origin() {
+        let records = vec![ControlRecord {
+            at: 3.0,
+            action: ControlAction::DetachDevice(1),
+            origin: ControlOrigin::Controller,
+        }];
+        let log = EventLog::from_records(&records);
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.events[0].origin, ControlOrigin::Controller);
+        assert_eq!(log.labels(), vec!["detach-device(#1)".to_string()]);
+    }
+}

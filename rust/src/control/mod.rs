@@ -1,0 +1,33 @@
+//! The serialisable control plane.
+//!
+//! One vocabulary for everything that steers a running fleet —
+//! membership changes, model swaps, admission outcomes — with three
+//! faces:
+//!
+//! * [`plane`] — the in-memory types: [`ControlAction`] /
+//!   [`ControlEvent`] (the verbs the engines apply), [`ControlOrigin`]
+//!   (who issued an action) and [`ControlRecord`] (an applied action in
+//!   a run log). These used to live privately inside `fleet::registry`
+//!   and `fleet::sim`; they moved here so every layer — scripted
+//!   scenarios, the autoscale controller, the shard placement layer —
+//!   speaks the same types.
+//! * [`wire`] — the versioned JSON codec: [`WireEvent`] wraps an action
+//!   or an admission [`crate::fleet::admission::Decision`] with its time
+//!   and origin, and round-trips exactly through
+//!   [`crate::util::json::Json`]. This is what crosses a process
+//!   boundary.
+//! * [`log`] — [`EventLog`], the versioned, replayable event log: the
+//!   audit trail of a run, decodable back into scripted events that
+//!   reproduce its control plane verbatim.
+
+pub mod log;
+pub mod plane;
+pub mod wire;
+
+pub use log::EventLog;
+pub use plane::{ControlAction, ControlEvent, ControlOrigin, ControlRecord};
+pub use wire::{
+    admission_from_json, admission_to_json, decision_from_json, decision_to_json,
+    device_from_json, device_to_json, stream_spec_from_json, stream_spec_to_json, WireError,
+    WireEvent, WirePayload, WIRE_VERSION,
+};

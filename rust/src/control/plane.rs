@@ -1,0 +1,157 @@
+//! The control-plane vocabulary: every verb a fleet accepts at runtime.
+//!
+//! Before this layer existed, control flow lived as private in-memory
+//! enums spread across `fleet::registry` (membership actions),
+//! `fleet::sim` (the scripted/controller action log) and
+//! `autoscale::runner` (log post-processing). Centralising the types
+//! here — and giving them a wire codec in [`crate::control::wire`] —
+//! is what lets a control decision cross a process boundary: the shard
+//! placement layer ([`crate::shard`]) speaks exactly this vocabulary,
+//! serialised, to move streams between fleet instances.
+
+use crate::device::DeviceInstance;
+use crate::fleet::stream::{StreamId, StreamSpec};
+
+/// A timed control-plane action — scripted by a scenario
+/// ([`crate::fleet::sim::Scenario`]), emitted by a feedback controller
+/// ([`crate::fleet::sim::FleetController`]), or issued by the shard
+/// placement layer ([`crate::shard`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlAction {
+    AttachStream(StreamSpec),
+    DetachStream(StreamId),
+    AttachDevice(DeviceInstance),
+    DetachDevice(usize),
+    /// Pin stream `stream` to model-ladder rung `rung` (0 = full
+    /// quality); the residual stride is recomputed from the stream's
+    /// current fair share.
+    SwapModel { stream: StreamId, rung: usize },
+}
+
+impl ControlAction {
+    /// Compact human label for control logs.
+    pub fn label(&self) -> String {
+        match self {
+            ControlAction::AttachStream(spec) => format!("attach-stream({})", spec.name),
+            ControlAction::DetachStream(id) => format!("detach-stream(s{id})"),
+            ControlAction::AttachDevice(d) => {
+                format!("attach-device({:.1} FPS)", d.rate())
+            }
+            ControlAction::DetachDevice(dev) => format!("detach-device(#{dev})"),
+            ControlAction::SwapModel { stream, rung } => {
+                format!("swap-model(s{stream} -> rung {rung})")
+            }
+        }
+    }
+}
+
+/// `action` applied at fleet time `at`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlEvent {
+    pub at: f64,
+    pub action: ControlAction,
+}
+
+/// Who issued a control action. Logged with every applied action so
+/// post-run analysis (and the wire log) can attribute behaviour to the
+/// scenario script, a feedback controller, the shard placement layer,
+/// or the admission policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlOrigin {
+    /// Scenario-scripted event (external load / failures).
+    Scripted,
+    /// Closed-loop feedback controller (autoscale).
+    Controller,
+    /// Shard placement layer (initial placement, migration, re-placement
+    /// of orphans after shard loss).
+    Placement,
+    /// Admission policy outcome (wall-clock serve logs decisions).
+    Admission,
+}
+
+impl ControlOrigin {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControlOrigin::Scripted => "scripted",
+            ControlOrigin::Controller => "controller",
+            ControlOrigin::Placement => "placement",
+            ControlOrigin::Admission => "admission",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ControlOrigin> {
+        match s {
+            "scripted" => Some(ControlOrigin::Scripted),
+            "controller" => Some(ControlOrigin::Controller),
+            "placement" => Some(ControlOrigin::Placement),
+            "admission" => Some(ControlOrigin::Admission),
+            _ => None,
+        }
+    }
+}
+
+/// One applied control-plane action, for post-run analysis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlRecord {
+    pub at: f64,
+    pub action: ControlAction,
+    pub origin: ControlOrigin,
+}
+
+impl ControlRecord {
+    /// Back-compat helper: scenario-scripted records.
+    pub fn scripted(&self) -> bool {
+        self.origin == ControlOrigin::Scripted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DetectorModelId, DeviceKind};
+
+    #[test]
+    fn action_labels() {
+        let spec = StreamSpec::new("cam0", 5.0, 100);
+        assert_eq!(
+            ControlAction::AttachStream(spec).label(),
+            "attach-stream(cam0)"
+        );
+        assert_eq!(ControlAction::DetachStream(3).label(), "detach-stream(s3)");
+        let d = DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, 0, 2.5);
+        assert_eq!(ControlAction::AttachDevice(d).label(), "attach-device(2.5 FPS)");
+        assert_eq!(ControlAction::DetachDevice(1).label(), "detach-device(#1)");
+        assert_eq!(
+            ControlAction::SwapModel { stream: 2, rung: 1 }.label(),
+            "swap-model(s2 -> rung 1)"
+        );
+    }
+
+    #[test]
+    fn origin_labels_roundtrip() {
+        for o in [
+            ControlOrigin::Scripted,
+            ControlOrigin::Controller,
+            ControlOrigin::Placement,
+            ControlOrigin::Admission,
+        ] {
+            assert_eq!(ControlOrigin::parse(o.label()), Some(o));
+        }
+        assert_eq!(ControlOrigin::parse("bogus"), None);
+    }
+
+    #[test]
+    fn record_scripted_helper() {
+        let r = ControlRecord {
+            at: 1.0,
+            action: ControlAction::DetachStream(0),
+            origin: ControlOrigin::Scripted,
+        };
+        assert!(r.scripted());
+        let r = ControlRecord {
+            origin: ControlOrigin::Placement,
+            ..r
+        };
+        assert!(!r.scripted());
+    }
+}

@@ -1,0 +1,556 @@
+//! Versioned wire format for control-plane traffic, over
+//! [`crate::util::json`].
+//!
+//! A [`WireEvent`] is one control-plane message: a timed, origin-tagged
+//! payload that is either a [`ControlAction`] (the membership / quality
+//! verbs) or an admission [`Decision`] outcome. Everything an engine
+//! logs or a placement layer sends is expressible as wire events, so a
+//! control decision can cross a process boundary as JSON and be applied
+//! on the far side exactly as an in-memory action would be.
+//!
+//! Guarantees (property- and unit-tested here and in
+//! `rust/tests/integration_shard.rs`):
+//!
+//! * **Round trip**: `decode(encode(e)) == e` for every event, including
+//!   full [`StreamSpec`] / [`DeviceInstance`] payloads (f64 fields are
+//!   written shortest-round-trip, so equality is exact, not approximate).
+//! * **Versioning**: events carry no per-message version; the log
+//!   envelope ([`crate::control::EventLog`]) stamps [`WIRE_VERSION`] and
+//!   decode rejects logs from a different major format.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::control::plane::{ControlAction, ControlOrigin};
+use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use crate::fleet::admission::{AdmissionMode, AdmissionPolicy, Decision, DegradeMode};
+use crate::fleet::stream::{StreamId, StreamSpec};
+use crate::util::json::Json;
+
+/// Wire-format version stamped on every encoded event log; decode
+/// rejects logs whose `format` differs.
+pub const WIRE_VERSION: i64 = 1;
+
+/// Decode failure: a structurally valid JSON document that is not a
+/// valid wire event (missing field, unknown tag, wrong type).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub msg: String,
+}
+
+impl WireError {
+    pub fn new(msg: impl Into<String>) -> WireError {
+        WireError { msg: msg.into() }
+    }
+
+    fn missing(key: &str) -> WireError {
+        WireError::new(format!("missing or mistyped field {key:?}"))
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wire decode error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Payload of one wire event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WirePayload {
+    /// A control verb (attach/detach/swap).
+    Action(ControlAction),
+    /// An admission outcome for stream `stream` (emitted by the
+    /// wall-clock serve path and replayable for audit).
+    Decision { stream: StreamId, decision: Decision },
+}
+
+/// One serialisable control-plane message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireEvent {
+    /// Fleet time (virtual or wall-clock seconds) the event applies at.
+    pub at: f64,
+    pub origin: ControlOrigin,
+    pub payload: WirePayload,
+}
+
+impl WireEvent {
+    /// Wrap a control action.
+    pub fn action(at: f64, origin: ControlOrigin, action: ControlAction) -> WireEvent {
+        WireEvent {
+            at,
+            origin,
+            payload: WirePayload::Action(action),
+        }
+    }
+
+    /// Wrap an admission decision.
+    pub fn decision(at: f64, stream: StreamId, decision: Decision) -> WireEvent {
+        WireEvent {
+            at,
+            origin: ControlOrigin::Admission,
+            payload: WirePayload::Decision { stream, decision },
+        }
+    }
+
+    /// Human label (delegates to the payload).
+    pub fn label(&self) -> String {
+        match &self.payload {
+            WirePayload::Action(a) => a.label(),
+            WirePayload::Decision { stream, decision } => {
+                format!("decision(s{stream}: {})", decision.label())
+            }
+        }
+    }
+
+    /// The wrapped action, if this event carries one.
+    pub fn as_action(&self) -> Option<&ControlAction> {
+        match &self.payload {
+            WirePayload::Action(a) => Some(a),
+            WirePayload::Decision { .. } => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("at".to_string(), Json::Num(self.at));
+        o.insert(
+            "origin".to_string(),
+            Json::Str(self.origin.label().to_string()),
+        );
+        match &self.payload {
+            WirePayload::Action(ControlAction::AttachStream(spec)) => {
+                o.insert("type".to_string(), Json::Str("attach-stream".to_string()));
+                o.insert("stream".to_string(), stream_spec_to_json(spec));
+            }
+            WirePayload::Action(ControlAction::DetachStream(id)) => {
+                o.insert("type".to_string(), Json::Str("detach-stream".to_string()));
+                o.insert("stream_id".to_string(), Json::Num(*id as f64));
+            }
+            WirePayload::Action(ControlAction::AttachDevice(d)) => {
+                o.insert("type".to_string(), Json::Str("attach-device".to_string()));
+                o.insert("device".to_string(), device_to_json(d));
+            }
+            WirePayload::Action(ControlAction::DetachDevice(dev)) => {
+                o.insert("type".to_string(), Json::Str("detach-device".to_string()));
+                o.insert("device_id".to_string(), Json::Num(*dev as f64));
+            }
+            WirePayload::Action(ControlAction::SwapModel { stream, rung }) => {
+                o.insert("type".to_string(), Json::Str("swap-model".to_string()));
+                o.insert("stream_id".to_string(), Json::Num(*stream as f64));
+                o.insert("rung".to_string(), Json::Num(*rung as f64));
+            }
+            WirePayload::Decision { stream, decision } => {
+                o.insert("type".to_string(), Json::Str("decision".to_string()));
+                o.insert("stream_id".to_string(), Json::Num(*stream as f64));
+                o.insert("decision".to_string(), decision_to_json(decision));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<WireEvent, WireError> {
+        let at = req_f64(v, "at")?;
+        let origin = ControlOrigin::parse(req_str(v, "origin")?)
+            .ok_or_else(|| WireError::new("unknown origin"))?;
+        let kind = req_str(v, "type")?;
+        let payload = match kind {
+            "attach-stream" => {
+                let spec = v.get("stream").ok_or_else(|| WireError::missing("stream"))?;
+                WirePayload::Action(ControlAction::AttachStream(stream_spec_from_json(spec)?))
+            }
+            "detach-stream" => {
+                WirePayload::Action(ControlAction::DetachStream(req_usize(v, "stream_id")?))
+            }
+            "attach-device" => {
+                let dev = v.get("device").ok_or_else(|| WireError::missing("device"))?;
+                WirePayload::Action(ControlAction::AttachDevice(device_from_json(dev)?))
+            }
+            "detach-device" => {
+                WirePayload::Action(ControlAction::DetachDevice(req_usize(v, "device_id")?))
+            }
+            "swap-model" => WirePayload::Action(ControlAction::SwapModel {
+                stream: req_usize(v, "stream_id")?,
+                rung: req_usize(v, "rung")?,
+            }),
+            "decision" => {
+                let d = v
+                    .get("decision")
+                    .ok_or_else(|| WireError::missing("decision"))?;
+                WirePayload::Decision {
+                    stream: req_usize(v, "stream_id")?,
+                    decision: decision_from_json(d)?,
+                }
+            }
+            other => return Err(WireError::new(format!("unknown event type {other:?}"))),
+        };
+        Ok(WireEvent { at, origin, payload })
+    }
+
+    /// Serialise to a compact JSON string.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a compact JSON string produced by [`WireEvent::encode`].
+    pub fn decode(text: &str) -> Result<WireEvent, WireError> {
+        let v = Json::parse(text).map_err(|e| WireError::new(e.to_string()))?;
+        WireEvent::from_json(&v)
+    }
+}
+
+// ---- field helpers -----------------------------------------------------
+
+fn req_f64(v: &Json, key: &str) -> Result<f64, WireError> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| WireError::missing(key))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, WireError> {
+    let n = req_f64(v, key)?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return Err(WireError::new(format!(
+            "field {key:?} must be a non-negative integer"
+        )));
+    }
+    Ok(n as u64)
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize, WireError> {
+    Ok(req_u64(v, key)? as usize)
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, WireError> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| WireError::missing(key))
+}
+
+// ---- StreamSpec --------------------------------------------------------
+
+pub fn stream_spec_to_json(spec: &StreamSpec) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(spec.name.clone()));
+    o.insert("fps".to_string(), Json::Num(spec.fps));
+    o.insert("num_frames".to_string(), Json::Num(spec.num_frames as f64));
+    o.insert("weight".to_string(), Json::Num(spec.weight));
+    o.insert("window".to_string(), Json::Num(spec.window as f64));
+    Json::Obj(o)
+}
+
+pub fn stream_spec_from_json(v: &Json) -> Result<StreamSpec, WireError> {
+    let fps = req_f64(v, "fps")?;
+    if !fps.is_finite() || fps <= 0.0 {
+        return Err(WireError::new("stream fps must be positive"));
+    }
+    let weight = req_f64(v, "weight")?;
+    if !weight.is_finite() || weight <= 0.0 {
+        return Err(WireError::new("stream weight must be positive"));
+    }
+    let mut spec = StreamSpec::new(req_str(v, "name")?, fps, req_u64(v, "num_frames")?);
+    spec.weight = weight;
+    spec.window = req_usize(v, "window")?.max(1);
+    Ok(spec)
+}
+
+// ---- DeviceInstance ----------------------------------------------------
+
+fn kind_code(kind: DeviceKind) -> &'static str {
+    match kind {
+        DeviceKind::Ncs2 => "ncs2",
+        DeviceKind::FastCpu => "fast-cpu",
+        DeviceKind::SlowCpu => "slow-cpu",
+        DeviceKind::TitanX => "titan-x",
+    }
+}
+
+fn kind_from_code(code: &str) -> Option<DeviceKind> {
+    match code {
+        "ncs2" => Some(DeviceKind::Ncs2),
+        "fast-cpu" => Some(DeviceKind::FastCpu),
+        "slow-cpu" => Some(DeviceKind::SlowCpu),
+        "titan-x" => Some(DeviceKind::TitanX),
+        _ => None,
+    }
+}
+
+fn model_code(model: DetectorModelId) -> &'static str {
+    match model {
+        DetectorModelId::Ssd300 => "ssd300",
+        DetectorModelId::Yolov3 => "yolov3",
+    }
+}
+
+pub fn device_to_json(d: &DeviceInstance) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("kind".to_string(), Json::Str(kind_code(d.kind).to_string()));
+    o.insert(
+        "model".to_string(),
+        Json::Str(model_code(d.model).to_string()),
+    );
+    o.insert("replica".to_string(), Json::Num(d.replica as f64));
+    o.insert("jitter_cv".to_string(), Json::Num(d.jitter_cv));
+    o.insert(
+        "rate_override".to_string(),
+        match d.rate_override {
+            Some(r) => Json::Num(r),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(o)
+}
+
+pub fn device_from_json(v: &Json) -> Result<DeviceInstance, WireError> {
+    let kind = kind_from_code(req_str(v, "kind")?)
+        .ok_or_else(|| WireError::new("unknown device kind"))?;
+    let model = DetectorModelId::parse(req_str(v, "model")?)
+        .ok_or_else(|| WireError::new("unknown detector model"))?;
+    let mut d = DeviceInstance::new(kind, model, req_usize(v, "replica")?);
+    d.jitter_cv = req_f64(v, "jitter_cv")?;
+    d.rate_override = match v.get("rate_override") {
+        Some(Json::Null) | None => None,
+        Some(j) => Some(
+            j.as_f64()
+                .ok_or_else(|| WireError::missing("rate_override"))?,
+        ),
+    };
+    Ok(d)
+}
+
+// ---- Decision ----------------------------------------------------------
+
+pub fn decision_to_json(d: &Decision) -> Json {
+    let mut o = BTreeMap::new();
+    match d {
+        Decision::Admit { share } => {
+            o.insert("kind".to_string(), Json::Str("admit".to_string()));
+            o.insert("share".to_string(), Json::Num(*share));
+        }
+        Decision::Degrade { stride, share } => {
+            o.insert("kind".to_string(), Json::Str("degrade".to_string()));
+            o.insert("stride".to_string(), Json::Num(*stride as f64));
+            o.insert("share".to_string(), Json::Num(*share));
+        }
+        Decision::SwapModel { rung, stride, share } => {
+            o.insert("kind".to_string(), Json::Str("swap".to_string()));
+            o.insert("rung".to_string(), Json::Num(*rung as f64));
+            o.insert("stride".to_string(), Json::Num(*stride as f64));
+            o.insert("share".to_string(), Json::Num(*share));
+        }
+        Decision::Reject => {
+            o.insert("kind".to_string(), Json::Str("reject".to_string()));
+        }
+    }
+    Json::Obj(o)
+}
+
+pub fn decision_from_json(v: &Json) -> Result<Decision, WireError> {
+    match req_str(v, "kind")? {
+        "admit" => Ok(Decision::Admit {
+            share: req_f64(v, "share")?,
+        }),
+        "degrade" => Ok(Decision::Degrade {
+            stride: req_u64(v, "stride")?,
+            share: req_f64(v, "share")?,
+        }),
+        "swap" => Ok(Decision::SwapModel {
+            rung: req_usize(v, "rung")?,
+            stride: req_u64(v, "stride")?,
+            share: req_f64(v, "share")?,
+        }),
+        "reject" => Ok(Decision::Reject),
+        other => Err(WireError::new(format!("unknown decision kind {other:?}"))),
+    }
+}
+
+// ---- AdmissionPolicy / DegradeMode -------------------------------------
+
+/// Serialise an admission policy (the wire format covers the whole
+/// control vocabulary so a remote shard can reconstruct its admission
+/// configuration, not just individual verbs).
+pub fn admission_to_json(p: &AdmissionPolicy) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "target_utilization".to_string(),
+        Json::Num(p.target_utilization),
+    );
+    o.insert("min_rate".to_string(), Json::Num(p.min_rate));
+    o.insert(
+        "mode".to_string(),
+        Json::Str(
+            match p.mode {
+                AdmissionMode::Enforce => "enforce",
+                AdmissionMode::AdmitAll => "admit-all",
+            }
+            .to_string(),
+        ),
+    );
+    o.insert(
+        "degrade".to_string(),
+        match &p.degrade {
+            DegradeMode::Stride => Json::Str("stride".to_string()),
+            DegradeMode::ModelSwap { speedups } => {
+                Json::Arr(speedups.iter().map(|&s| Json::Num(s)).collect())
+            }
+        },
+    );
+    Json::Obj(o)
+}
+
+pub fn admission_from_json(v: &Json) -> Result<AdmissionPolicy, WireError> {
+    let mode = match req_str(v, "mode")? {
+        "enforce" => AdmissionMode::Enforce,
+        "admit-all" => AdmissionMode::AdmitAll,
+        other => return Err(WireError::new(format!("unknown admission mode {other:?}"))),
+    };
+    let degrade = match v.get("degrade") {
+        Some(Json::Str(s)) if s == "stride" => DegradeMode::Stride,
+        Some(Json::Arr(a)) => {
+            let mut speedups = Vec::with_capacity(a.len());
+            for x in a {
+                speedups.push(x.as_f64().ok_or_else(|| WireError::missing("degrade"))?);
+            }
+            DegradeMode::ModelSwap { speedups }
+        }
+        _ => return Err(WireError::missing("degrade")),
+    };
+    Ok(AdmissionPolicy {
+        target_utilization: req_f64(v, "target_utilization")?,
+        min_rate: req_f64(v, "min_rate")?,
+        mode,
+        degrade,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: &WireEvent) {
+        let text = ev.encode();
+        let back = WireEvent::decode(&text).expect("decode");
+        assert_eq!(&back, ev, "wire text: {text}");
+    }
+
+    #[test]
+    fn every_action_variant_roundtrips() {
+        let spec = StreamSpec::new("cam-0", 7.25, 321).with_weight(2.5).with_window(6);
+        let mut dev = DeviceInstance::new(DeviceKind::FastCpu, DetectorModelId::Ssd300, 4);
+        dev.jitter_cv = 0.015;
+        roundtrip(&WireEvent::action(
+            0.0,
+            ControlOrigin::Scripted,
+            ControlAction::AttachStream(spec),
+        ));
+        roundtrip(&WireEvent::action(
+            12.5,
+            ControlOrigin::Controller,
+            ControlAction::DetachStream(9),
+        ));
+        roundtrip(&WireEvent::action(
+            3.125,
+            ControlOrigin::Placement,
+            ControlAction::AttachDevice(dev.clone()),
+        ));
+        dev.rate_override = Some(13.5);
+        roundtrip(&WireEvent::action(
+            4.0,
+            ControlOrigin::Placement,
+            ControlAction::AttachDevice(dev),
+        ));
+        roundtrip(&WireEvent::action(
+            5.0,
+            ControlOrigin::Scripted,
+            ControlAction::DetachDevice(2),
+        ));
+        roundtrip(&WireEvent::action(
+            6.0,
+            ControlOrigin::Controller,
+            ControlAction::SwapModel { stream: 1, rung: 2 },
+        ));
+    }
+
+    #[test]
+    fn every_decision_variant_roundtrips() {
+        roundtrip(&WireEvent::decision(0.0, 0, Decision::Admit { share: 5.0 }));
+        roundtrip(&WireEvent::decision(
+            0.0,
+            1,
+            Decision::Degrade { stride: 3, share: 2.375 },
+        ));
+        roundtrip(&WireEvent::decision(
+            1.5,
+            2,
+            Decision::SwapModel { rung: 1, stride: 2, share: 1.25 },
+        ));
+        roundtrip(&WireEvent::decision(2.0, 3, Decision::Reject));
+    }
+
+    #[test]
+    fn fractional_f64_fields_roundtrip_exactly() {
+        // Shortest-round-trip float printing means equality is exact even
+        // for non-representable decimals.
+        let spec = StreamSpec::new("s", 0.1 + 0.2, 10);
+        let ev = WireEvent::action(
+            0.30000000000000004,
+            ControlOrigin::Scripted,
+            ControlAction::AttachStream(spec),
+        );
+        roundtrip(&ev);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_events() {
+        assert!(WireEvent::decode("not json").is_err());
+        assert!(WireEvent::decode("{}").is_err());
+        assert!(
+            WireEvent::decode(r#"{"at":1,"origin":"scripted","type":"launch-missiles"}"#).is_err()
+        );
+        assert!(WireEvent::decode(r#"{"at":1,"origin":"nobody","type":"detach-stream","stream_id":0}"#).is_err());
+        // Negative and fractional ids are rejected rather than wrapped
+        // or truncated (1.9 must not silently detach stream 1).
+        assert!(
+            WireEvent::decode(r#"{"at":1,"origin":"scripted","type":"detach-stream","stream_id":-3}"#)
+                .is_err()
+        );
+        assert!(
+            WireEvent::decode(r#"{"at":1,"origin":"scripted","type":"detach-stream","stream_id":1.9}"#)
+                .is_err()
+        );
+        // Invalid stream parameters are rejected at decode time, not at
+        // the StreamSpec constructor's assert.
+        assert!(WireEvent::decode(
+            r#"{"at":0,"origin":"scripted","type":"attach-stream","stream":{"name":"x","fps":0,"num_frames":1,"weight":1,"window":4}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn admission_policy_roundtrips() {
+        for p in [
+            AdmissionPolicy::default(),
+            AdmissionPolicy::admit_all(),
+            AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
+        ] {
+            let j = admission_to_json(&p);
+            let back = admission_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back.target_utilization, p.target_utilization);
+            assert_eq!(back.min_rate, p.min_rate);
+            assert_eq!(back.mode, p.mode);
+            assert_eq!(back.degrade, p.degrade);
+        }
+        assert!(admission_from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn labels_cover_payloads() {
+        let ev = WireEvent::decision(0.0, 4, Decision::Reject);
+        assert_eq!(ev.label(), "decision(s4: reject)");
+        assert!(ev.as_action().is_none());
+        let ev = WireEvent::action(0.0, ControlOrigin::Scripted, ControlAction::DetachDevice(0));
+        assert_eq!(ev.label(), "detach-device(#0)");
+        assert!(ev.as_action().is_some());
+    }
+}

@@ -126,7 +126,7 @@ impl DetectorModelId {
 }
 
 /// One concrete device instance in a fleet (e.g. "NCS2 stick #3").
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DeviceInstance {
     pub kind: DeviceKind,
     pub model: DetectorModelId,

@@ -24,9 +24,9 @@ use crate::autoscale::ladder::{staleness_factor, ModelLadder};
 use crate::autoscale::policy::AutoscaleConfig;
 use crate::autoscale::runner::{run_autoscale_sim, AutoscaleOutcome};
 use crate::experiments::fleet::pool_of;
+use crate::control::{ControlAction, ControlEvent};
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::metrics::StreamReport;
-use crate::fleet::registry::{ControlAction, ControlEvent};
 use crate::fleet::sim::{run_fleet, Scenario};
 use crate::fleet::stream::StreamSpec;
 use crate::util::json::Json;

@@ -16,5 +16,6 @@ pub mod lang;
 pub mod energy;
 pub mod dropping;
 pub mod fleet;
+pub mod shard;
 
 pub use common::{online_map, saturated_fps, zero_drop_baseline, CellOutcome};

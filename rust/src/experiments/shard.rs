@@ -1,0 +1,371 @@
+//! Shard sweeps: sharded serving vs the single pool, skewed load under
+//! different placement policies, and shard-loss recovery — all in
+//! virtual time (see EXPERIMENTS.md §Shard for the measured numbers).
+//!
+//! * [`balanced_split`] — the parity sweep: the same offered load and
+//!   total capacity served by 1, 2 and 4 shards. Work-conserving
+//!   dispatch inside every shard means the split costs almost nothing:
+//!   delivered FPS matches the single pool within a few percent.
+//! * [`skewed_load`] — skewed arrival rates under least-loaded,
+//!   round-robin and hash placement: least-loaded balances at admission
+//!   time; load-blind policies start out of band and rely on the gossip
+//!   rebalancer's migrations to restore it.
+//! * [`shard_failure`] — a shard dies mid-run: its streams are orphaned
+//!   for exactly one gossip interval (missed heartbeat), then re-placed
+//!   on the survivors.
+
+use crate::device::DeviceInstance;
+use crate::experiments::fleet::pool_of;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::stream::StreamSpec;
+use crate::shard::placement::PlacementPolicy;
+use crate::shard::sim::{run_sharded, ShardReport, ShardScenario};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+use std::collections::BTreeMap;
+
+/// One row of the parity sweep.
+#[derive(Debug, Clone)]
+pub struct SplitOutcome {
+    pub label: String,
+    pub shards: usize,
+    /// Total raw pool rate Σμ across shards (FPS).
+    pub total_rate: f64,
+    pub delivered_fps: f64,
+    pub drop_rate: f64,
+    pub migrations: usize,
+}
+
+/// Split `total_devices` uniform 2.5-FPS devices over `shards` equal
+/// pools.
+fn equal_pools(shards: usize, total_devices: usize, rate: f64) -> Vec<Vec<DeviceInstance>> {
+    assert!(total_devices % shards == 0, "uneven split");
+    let per = total_devices / shards;
+    (0..shards).map(|_| pool_of(per, rate)).collect()
+}
+
+/// Parity sweep: 8 × 10-FPS streams (saturating), 8 × 2.5-FPS devices
+/// total, served by 1 / 2 / 4 shards at equal total capacity.
+pub fn balanced_split(seed: u64) -> (Table, Vec<SplitOutcome>) {
+    let mut t = Table::new(
+        "Sharded vs single pool at equal capacity (8 × 10-FPS streams, Σμ = 20)",
+        &["config", "shards", "Σμ", "delivered σ", "vs single", "drop %", "migrations"],
+    );
+    let mut outcomes = Vec::new();
+    let mut single_fps = 0.0f64;
+    for &shards in &[1usize, 2, 4] {
+        // Shallow windows relative to the gossip epoch: the epoch
+        // quantisation drains window backlog across the boundary, so
+        // window/Σμ must stay small against the interval for honest
+        // throughput accounting (identical in every config here).
+        let streams: Vec<StreamSpec> = (0..8)
+            .map(|i| StreamSpec::new(&format!("cam{i}"), 10.0, 300).with_window(4))
+            .collect();
+        let scenario = ShardScenario::new(equal_pools(shards, 8, 2.5), streams)
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_gossip(10.0)
+            .with_epochs(5)
+            .with_seed(seed ^ shards as u64);
+        let report = run_sharded(&scenario);
+        let outcome = SplitOutcome {
+            label: format!("{shards} shard(s) × {} devices", 8 / shards),
+            shards,
+            total_rate: 20.0,
+            delivered_fps: report.delivered_fps(),
+            drop_rate: report.drop_rate(),
+            migrations: report.migrations,
+        };
+        if shards == 1 {
+            single_fps = outcome.delivered_fps;
+        }
+        t.row(vec![
+            outcome.label.clone(),
+            format!("{shards}"),
+            f(outcome.total_rate, 1),
+            f(outcome.delivered_fps, 2),
+            f(outcome.delivered_fps / single_fps.max(1e-9), 3),
+            f(outcome.drop_rate * 100.0, 1),
+            format!("{}", outcome.migrations),
+        ]);
+        outcomes.push(outcome);
+    }
+    (t, outcomes)
+}
+
+/// One placement policy's outcome under skewed load.
+#[derive(Debug, Clone)]
+pub struct SkewOutcome {
+    pub policy: &'static str,
+    /// Max − min committed Σλ right after initial placement (FPS).
+    pub initial_imbalance: f64,
+    pub migrations: usize,
+    pub delivered_fps: f64,
+    pub drop_rate: f64,
+}
+
+fn skew_scenario(policy: PlacementPolicy, seed: u64) -> ShardScenario {
+    // Skewed arrivals: three 6-FPS cams and three 2-FPS cams (Σλ = 24),
+    // duration-matched at 40 s, over 2 shards × 6 devices (capacity
+    // 14.25 each). Round-robin parks all three heavy cams on shard 0
+    // (committed 18, 6 over the band); least-loaded lands 14 / 10.
+    let mut streams = Vec::new();
+    for i in 0..3 {
+        streams.push(StreamSpec::new(&format!("heavy{i}"), 6.0, 240).with_window(4));
+        streams.push(StreamSpec::new(&format!("light{i}"), 2.0, 80).with_window(4));
+    }
+    // Interleave as arrival order heavy, light, heavy, light, ...
+    ShardScenario::new(vec![pool_of(6, 2.5), pool_of(6, 2.5)], streams)
+        .with_policy(policy)
+        .with_gossip(5.0)
+        .with_epochs(10)
+        .with_seed(seed)
+}
+
+/// Skewed-load sweep: placement policy vs initial imbalance and the
+/// migrations the gossip rebalancer needs to restore the band.
+pub fn skewed_load(seed: u64) -> (Table, Vec<SkewOutcome>) {
+    let mut t = Table::new(
+        "Skewed arrivals (3 × 6 FPS + 3 × 2 FPS over 2 shards): placement policy matters",
+        &["policy", "initial imbalance", "migrations", "delivered σ", "drop %"],
+    );
+    let mut outcomes = Vec::new();
+    for (policy, name) in [
+        (PlacementPolicy::LeastLoaded, "least-loaded"),
+        (PlacementPolicy::RoundRobin, "round-robin"),
+        (PlacementPolicy::Hash, "hash"),
+    ] {
+        let report = run_sharded(&skew_scenario(policy, seed));
+        let outcome = SkewOutcome {
+            policy: name,
+            initial_imbalance: report.initial_imbalance(),
+            migrations: report.migrations,
+            delivered_fps: report.delivered_fps(),
+            drop_rate: report.drop_rate(),
+        };
+        t.row(vec![
+            outcome.policy.to_string(),
+            f(outcome.initial_imbalance, 1),
+            format!("{}", outcome.migrations),
+            f(outcome.delivered_fps, 2),
+            f(outcome.drop_rate * 100.0, 1),
+        ]);
+        outcomes.push(outcome);
+    }
+    (t, outcomes)
+}
+
+/// Shard-loss outcome.
+#[derive(Debug, Clone)]
+pub struct FailoverOutcome {
+    /// Streams orphaned by the loss.
+    pub orphans: usize,
+    /// Every orphan re-placed within one gossip interval.
+    pub replaced_within_interval: bool,
+    /// Worst loss→re-placement gap (seconds).
+    pub worst_gap: f64,
+    pub delivered_fps: f64,
+    pub drop_rate: f64,
+    /// Shards alive at the end.
+    pub shards_alive: usize,
+}
+
+/// Shard failure mid-run: 9 × 2.5-FPS streams on 3 shards; shard 0 dies
+/// at t = 20 s (epoch 2 of a 10-s gossip). Its three streams are
+/// re-placed on the survivors at the next gossip round.
+pub fn shard_failure(seed: u64) -> (Table, FailoverOutcome) {
+    let streams: Vec<StreamSpec> = (0..9)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 200).with_window(4))
+        .collect();
+    let scenario = ShardScenario::new(
+        vec![pool_of(4, 2.5), pool_of(4, 2.5), pool_of(4, 2.5)],
+        streams,
+    )
+    .with_gossip(10.0)
+    .with_epochs(10)
+    .with_seed(seed)
+    .with_failure(2, 0);
+    let report = run_sharded(&scenario);
+    let outcome = FailoverOutcome {
+        orphans: report.orphan_count(),
+        replaced_within_interval: report.orphans_replaced_within(report.gossip_interval),
+        worst_gap: report.worst_orphan_gap(),
+        delivered_fps: report.delivered_fps(),
+        drop_rate: report.drop_rate(),
+        shards_alive: report.shard_alive.iter().filter(|&&a| a).count(),
+    };
+    let mut t = Table::new(
+        "Shard loss (1 of 3 dies at t=20): orphan re-placement within one gossip interval",
+        &["orphans", "re-placed ≤ 1 interval", "worst gap (s)", "delivered σ", "drop %", "shards alive"],
+    );
+    t.row(vec![
+        format!("{}", outcome.orphans),
+        if outcome.replaced_within_interval { "yes" } else { "no" }.to_string(),
+        f(outcome.worst_gap, 1),
+        f(outcome.delivered_fps, 2),
+        f(outcome.drop_rate * 100.0, 1),
+        format!("{}", outcome.shards_alive),
+    ]);
+    (t, outcome)
+}
+
+/// A one-off sharded run from CLI parameters (the `eva shard
+/// --scenario run` path).
+pub fn custom_run(
+    shards: Vec<Vec<DeviceInstance>>,
+    streams: Vec<StreamSpec>,
+    policy: PlacementPolicy,
+    admission: AdmissionPolicy,
+    gossip: f64,
+    seed: u64,
+) -> ShardReport {
+    // Enough epochs to play the longest stream out, plus one slack round.
+    let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
+    let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
+    let scenario = ShardScenario::new(shards, streams)
+        .with_policy(policy)
+        .with_admission(admission)
+        .with_gossip(gossip)
+        .with_epochs(epochs)
+        .with_seed(seed);
+    run_sharded(&scenario)
+}
+
+/// Machine-readable sweep results (the `--json` surface of `eva shard`);
+/// `None` for an unknown scenario name.
+pub fn shard_json(seed: u64, scenario: &str) -> Option<Json> {
+    if !matches!(scenario, "split" | "skew" | "failure" | "all") {
+        return None;
+    }
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+    if matches!(scenario, "split" | "all") {
+        let (_, split) = balanced_split(seed);
+        let rows: Vec<Json> = split
+            .iter()
+            .map(|o| {
+                let mut m = BTreeMap::new();
+                m.insert("label".into(), Json::Str(o.label.clone()));
+                m.insert("shards".into(), Json::Num(o.shards as f64));
+                m.insert("total_rate".into(), Json::Num(o.total_rate));
+                m.insert("delivered_fps".into(), Json::Num(o.delivered_fps));
+                m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+                m.insert("migrations".into(), Json::Num(o.migrations as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("balanced_split".into(), Json::Arr(rows));
+    }
+    if matches!(scenario, "skew" | "all") {
+        let (_, skew) = skewed_load(seed);
+        let rows: Vec<Json> = skew
+            .iter()
+            .map(|o| {
+                let mut m = BTreeMap::new();
+                m.insert("policy".into(), Json::Str(o.policy.to_string()));
+                m.insert(
+                    "initial_imbalance".into(),
+                    Json::Num(o.initial_imbalance),
+                );
+                m.insert("migrations".into(), Json::Num(o.migrations as f64));
+                m.insert("delivered_fps".into(), Json::Num(o.delivered_fps));
+                m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("skewed_load".into(), Json::Arr(rows));
+    }
+    if matches!(scenario, "failure" | "all") {
+        let (_, o) = shard_failure(seed);
+        let mut m = BTreeMap::new();
+        m.insert("orphans".into(), Json::Num(o.orphans as f64));
+        m.insert(
+            "replaced_within_interval".into(),
+            Json::Bool(o.replaced_within_interval),
+        );
+        m.insert("worst_gap".into(), Json::Num(o.worst_gap));
+        m.insert("delivered_fps".into(), Json::Num(o.delivered_fps));
+        m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+        m.insert("shards_alive".into(), Json::Num(o.shards_alive as f64));
+        root.insert("shard_failure".into(), Json::Obj(m));
+    }
+    Some(Json::Obj(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_split_matches_single_pool_within_5_percent() {
+        // The acceptance criterion: a 2-shard balanced split delivers
+        // within 5% of the single pool at equal capacity.
+        let (_, outcomes) = balanced_split(17);
+        let single = &outcomes[0];
+        let two = &outcomes[1];
+        assert_eq!(single.shards, 1);
+        assert_eq!(two.shards, 2);
+        let ratio = two.delivered_fps / single.delivered_fps;
+        assert!(
+            (ratio - 1.0).abs() < 0.05,
+            "2-shard σ {:.2} vs single {:.2} (ratio {ratio:.3})",
+            two.delivered_fps,
+            single.delivered_fps
+        );
+        // And the pool is actually saturated: σ near Σμ.
+        assert!(
+            single.delivered_fps > 0.85 * single.total_rate,
+            "σ {:.2} vs Σμ {:.2}",
+            single.delivered_fps,
+            single.total_rate
+        );
+    }
+
+    #[test]
+    fn skewed_load_least_loaded_balances_without_migrations() {
+        let (_, outcomes) = skewed_load(19);
+        let ll = &outcomes[0];
+        let rr = &outcomes[1];
+        assert_eq!(ll.policy, "least-loaded");
+        assert_eq!(rr.policy, "round-robin");
+        // Least-loaded lands 14/10 (imbalance 4) with no migrations;
+        // round-robin lands 18/6 (imbalance 12) and needs the gossip
+        // rebalancer.
+        assert!((ll.initial_imbalance - 4.0).abs() < 1e-9, "{ll:?}");
+        assert_eq!(ll.migrations, 0, "{ll:?}");
+        assert!((rr.initial_imbalance - 12.0).abs() < 1e-9, "{rr:?}");
+        assert!(rr.migrations >= 1, "{rr:?}");
+        // The blind policy pays for its first out-of-band interval.
+        assert!(
+            rr.drop_rate >= ll.drop_rate - 1e-9,
+            "rr {:.3} vs ll {:.3}",
+            rr.drop_rate,
+            ll.drop_rate
+        );
+    }
+
+    #[test]
+    fn shard_failure_replaces_orphans_within_one_interval() {
+        let (_, o) = shard_failure(23);
+        assert_eq!(o.orphans, 3, "{o:?}");
+        assert!(o.replaced_within_interval, "{o:?}");
+        assert!(o.worst_gap <= 10.0 + 1e-9, "{o:?}");
+        assert_eq!(o.shards_alive, 2);
+    }
+
+    #[test]
+    fn json_bundle_reparses_and_respects_scenario_selection() {
+        let j = shard_json(5, "all").expect("known scenario");
+        let back = Json::parse(&j.to_string()).expect("shard JSON must reparse");
+        assert_eq!(back.get("seed").and_then(Json::as_i64), Some(5));
+        assert_eq!(
+            back.get("balanced_split").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert_eq!(back.get("skewed_load").unwrap().as_arr().unwrap().len(), 3);
+        assert!(back.get("shard_failure").unwrap().as_obj().is_some());
+        let split_only = shard_json(5, "split").expect("known scenario");
+        assert!(split_only.get("balanced_split").is_some());
+        assert!(split_only.get("skewed_load").is_none());
+        assert!(shard_json(5, "bogus").is_none());
+    }
+}

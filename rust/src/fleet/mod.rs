@@ -11,8 +11,10 @@
 //!   per-device accounting, mid-run attach/detach.
 //! * [`admission`] — admit / degrade / reject when Σλₛ exceeds Σμᵢ,
 //!   with weighted max-min fair sharing of detector throughput.
-//! * [`registry`] — membership control plane (dynamic stream/device
-//!   attach & detach) plus the weighted start-time-fair dispatcher.
+//! * [`registry`] — membership state (dynamic stream/device attach &
+//!   detach) plus the weighted start-time-fair dispatcher. The control
+//!   *vocabulary* it applies (`ControlAction`/`ControlEvent`) lives in
+//!   the serialisable control plane, [`crate::control`].
 //! * [`metrics`] — fleet aggregates: per-stream σ and latency
 //!   percentiles, drop rates, device utilisation, Jain fairness index.
 //! * [`sim`] — virtual-time engine (DES-backed, milliseconds per run):
@@ -38,7 +40,11 @@ pub mod stream;
 pub use admission::{AdmissionMode, AdmissionPolicy, Decision, DegradeMode};
 pub use metrics::{jain_index, FleetReport, StreamReport};
 pub use pool::{DevicePool, Job};
-pub use registry::{ControlAction, ControlEvent, FleetRegistry};
-pub use serve::{serve_fleet, FleetServeConfig};
-pub use sim::{run_fleet, run_fleet_with, ControlRecord, FleetController, FleetRunOutput, Scenario};
+pub use registry::FleetRegistry;
+pub use serve::{serve_fleet, serve_fleet_logged, FleetServeConfig};
+pub use sim::{run_fleet, run_fleet_with, FleetController, FleetRunOutput, Scenario};
+
+// Control-plane vocabulary: defined in `crate::control`, re-exported
+// here because fleet callers have always imported it from this module.
+pub use crate::control::{ControlAction, ControlEvent, ControlOrigin, ControlRecord};
 pub use stream::{StreamId, StreamSpec};

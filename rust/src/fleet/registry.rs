@@ -1,5 +1,5 @@
-//! The fleet control plane: stream/device membership and the
-//! cross-stream dispatcher.
+//! Fleet membership state and the cross-stream dispatcher (the verbs it
+//! applies live in the serialisable control plane, [`crate::control`]).
 //!
 //! [`FleetRegistry`] owns the [`DevicePool`] and every [`StreamState`];
 //! streams and devices attach and detach dynamically mid-run. Admission
@@ -23,44 +23,10 @@ use crate::fleet::pool::DevicePool;
 use crate::fleet::stream::{StreamId, StreamSpec, StreamState};
 use crate::types::FrameId;
 
-/// A timed control-plane action — scripted by a scenario
-/// ([`crate::fleet::sim::Scenario`]) or emitted by a feedback controller
-/// ([`crate::fleet::sim::FleetController`]).
-#[derive(Debug, Clone)]
-pub enum ControlAction {
-    AttachStream(StreamSpec),
-    DetachStream(StreamId),
-    AttachDevice(DeviceInstance),
-    DetachDevice(usize),
-    /// Pin stream `stream` to model-ladder rung `rung` (0 = full
-    /// quality); the residual stride is recomputed from the stream's
-    /// current fair share.
-    SwapModel { stream: StreamId, rung: usize },
-}
-
-impl ControlAction {
-    /// Compact human label for control logs.
-    pub fn label(&self) -> String {
-        match self {
-            ControlAction::AttachStream(spec) => format!("attach-stream({})", spec.name),
-            ControlAction::DetachStream(id) => format!("detach-stream(s{id})"),
-            ControlAction::AttachDevice(d) => {
-                format!("attach-device({:.1} FPS)", d.rate())
-            }
-            ControlAction::DetachDevice(dev) => format!("detach-device(#{dev})"),
-            ControlAction::SwapModel { stream, rung } => {
-                format!("swap-model(s{stream} -> rung {rung})")
-            }
-        }
-    }
-}
-
-/// `action` applied at fleet time `at`.
-#[derive(Debug, Clone)]
-pub struct ControlEvent {
-    pub at: f64,
-    pub action: ControlAction,
-}
+// The control vocabulary (`ControlAction`, `ControlEvent`) used to be
+// defined here; it now lives in the serialisable control plane and is
+// re-exported for the registry's callers.
+pub use crate::control::{ControlAction, ControlEvent};
 
 /// Membership + dispatch state for one fleet run.
 pub struct FleetRegistry {

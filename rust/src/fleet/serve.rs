@@ -94,6 +94,22 @@ pub fn serve_fleet<F>(
 where
     F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
 {
+    serve_fleet_logged(streams, config, factory).map(|(report, _)| report)
+}
+
+/// [`serve_fleet`] plus the control-plane wire log: the up-front
+/// admission decisions, one [`crate::control::WireEvent`] per stream in
+/// attach order — the wall-clock engine's slice of the serialisable
+/// control plane (its membership is fixed per run, so decisions are the
+/// control traffic it emits).
+pub fn serve_fleet_logged<F>(
+    streams: &[(&Clip, StreamSpec)],
+    config: &FleetServeConfig,
+    factory: F,
+) -> Result<(FleetReport, crate::control::EventLog)>
+where
+    F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
+{
     let n_workers = config.device_rates.len().max(1);
     let pool_rate: f64 = config.device_rates.iter().sum();
     let n_streams = streams.len();
@@ -129,6 +145,13 @@ where
             }
             decisions.push(d);
         }
+    }
+
+    // The final (post-re-levelling) admission outcomes, as wire events —
+    // the run's serialisable control log.
+    let mut wire_log = crate::control::EventLog::new();
+    for (i, d) in decisions.iter().enumerate() {
+        wire_log.push(crate::control::WireEvent::decision(0.0, i, *d));
     }
 
     let frame_counts: Vec<u64> = streams
@@ -370,18 +393,21 @@ where
         reports.push(finish_stream(acc, &kinds));
     }
 
-    Ok(FleetReport {
-        streams: reports,
-        makespan: wall,
-        device_busy,
-        device_frames,
-        device_labels: (0..n_workers)
-            .map(|w| {
-                let nominal = config.device_rates.get(w).copied().unwrap_or(0.0);
-                format!("worker#{w} (nominal {nominal:.1} FPS)")
-            })
-            .collect(),
-    })
+    Ok((
+        FleetReport {
+            streams: reports,
+            makespan: wall,
+            device_busy,
+            device_frames,
+            device_labels: (0..n_workers)
+                .map(|w| {
+                    let nominal = config.device_rates.get(w).copied().unwrap_or(0.0);
+                    format!("worker#{w} (nominal {nominal:.1} FPS)")
+                })
+                .collect(),
+        },
+        wire_log,
+    ))
 }
 
 #[cfg(test)]
@@ -549,6 +575,42 @@ mod tests {
         for s in rejected {
             assert_eq!(s.records.len(), 20);
             assert!(s.records.iter().all(|r| r.was_dropped()));
+        }
+    }
+
+    #[test]
+    fn logged_serve_emits_one_wire_decision_per_stream() {
+        use crate::control::{EventLog, WirePayload};
+        let clip_a = generate(&presets::tiny_clip(32, 10, 20.0, 9), None);
+        let clip_b = generate(&presets::tiny_clip(32, 10, 20.0, 10), None);
+        let streams = [
+            (&clip_a, StreamSpec::new("a", 20.0, 10).with_window(4)),
+            (&clip_b, StreamSpec::new("b", 20.0, 10).with_window(4)),
+        ];
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::default(),
+            device_rates: vec![100.0],
+            paced: false,
+        };
+        let (report, log) = serve_fleet_logged(&streams, &config, |_| {
+            Ok(Box::new(EchoDetector {
+                delay: Duration::from_millis(1),
+            }) as Box<dyn Detector>)
+        })
+        .unwrap();
+        assert_eq!(log.len(), 2);
+        // The log round-trips through the wire and matches the report's
+        // decisions exactly.
+        let back = EventLog::decode(&log.encode()).expect("wire round-trip");
+        assert_eq!(back, log);
+        for (i, ev) in back.events.iter().enumerate() {
+            match &ev.payload {
+                WirePayload::Decision { stream, decision } => {
+                    assert_eq!(*stream, i);
+                    assert_eq!(*decision, report.streams[i].decision);
+                }
+                other => panic!("expected a decision payload, got {other:?}"),
+            }
         }
     }
 }

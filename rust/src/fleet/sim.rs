@@ -10,11 +10,14 @@
 //! multi-stream contention is the wall-clock path's job
 //! ([`crate::fleet::serve`]), which runs real detectors per frame.
 //!
-//! Control comes in two flavours:
+//! Control speaks the serialisable [`crate::control`] vocabulary and
+//! comes in two flavours:
 //!
 //! * **Scripted** [`ControlEvent`]s (attach/detach of streams and
 //!   devices at fixed times) — elasticity experiments in milliseconds of
-//!   wall time.
+//!   wall time. Scripted events may come from anywhere a
+//!   [`crate::control::EventLog`] decodes: a prior run's log replays
+//!   verbatim.
 //! * A **closed-loop** [`FleetController`] hook ([`run_fleet_with`]):
 //!   the controller observes every emitted output record and ticks every
 //!   `interval()` virtual seconds, emitting [`ControlAction`]s computed
@@ -22,12 +25,13 @@
 //!   drives — device autoscaling and model-ladder swaps replace the
 //!   scripted events with feedback control.
 
+use crate::control::{ControlAction, ControlEvent, ControlOrigin, ControlRecord, EventLog};
 use crate::coordinator::sync::Fate;
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::metrics::{finish_stream, FleetReport, StreamAccum};
 use crate::fleet::pool::Job;
-use crate::fleet::registry::{ControlAction, ControlEvent, FleetRegistry};
+use crate::fleet::registry::FleetRegistry;
 use crate::fleet::stream::{StreamId, StreamSpec, StreamState};
 use crate::sim::EventQueue;
 use crate::types::{FrameId, OutputRecord};
@@ -93,20 +97,20 @@ pub trait FleetController {
     fn act(&mut self, now: f64, reg: &FleetRegistry) -> Vec<ControlAction>;
 }
 
-/// One applied control-plane action, for post-run analysis.
-#[derive(Debug, Clone)]
-pub struct ControlRecord {
-    pub at: f64,
-    pub action: ControlAction,
-    /// True for scenario-scripted events, false for controller actions.
-    pub scripted: bool,
-}
-
 /// Result of a controlled fleet run: the usual report plus the full
 /// control-plane action log (scripted and feedback-driven).
+/// `ControlRecord` lives in [`crate::control`] — the log is one
+/// [`EventLog::from_records`] call away from the serialised wire form.
 pub struct FleetRunOutput {
     pub report: FleetReport,
     pub control_log: Vec<ControlRecord>,
+}
+
+impl FleetRunOutput {
+    /// The run's control log as a versioned, serialisable wire log.
+    pub fn wire_log(&self) -> EventLog {
+        EventLog::from_records(&self.control_log)
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -342,7 +346,7 @@ pub fn run_fleet_with(
                 control_log.push(ControlRecord {
                     at: now,
                     action,
-                    scripted: true,
+                    origin: ControlOrigin::Scripted,
                 });
                 in_flight += dispatch(&mut reg, &mut queue, &mut rng);
             }
@@ -363,7 +367,7 @@ pub fn run_fleet_with(
                     control_log.push(ControlRecord {
                         at: now,
                         action,
-                        scripted: false,
+                        origin: ControlOrigin::Controller,
                     });
                 }
                 in_flight += dispatch(&mut reg, &mut queue, &mut rng);
@@ -727,7 +731,7 @@ mod tests {
             .filter(|r| matches!(r.action, ControlAction::AttachDevice(_)))
             .collect();
         assert_eq!(attaches.len(), 1);
-        assert!(!attaches[0].scripted);
+        assert_eq!(attaches[0].origin, ControlOrigin::Controller);
         assert!(attaches[0].at >= 10.0);
         // And the extra capacity shows up as throughput vs the plain run.
         let plain = run_fleet(&scenario);

@@ -19,7 +19,7 @@ use crate::util::stats::Percentiles;
 pub type StreamId = usize;
 
 /// Static description of one stream joining the fleet.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StreamSpec {
     pub name: String,
     /// Input rate λₛ (frames/second).

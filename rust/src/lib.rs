@@ -25,12 +25,25 @@
 //!   fleet metrics (per-stream σ, latency percentiles, device
 //!   utilisation, Jain fairness) — in both virtual-time (DES) and
 //!   wall-clock (threaded) modes.
+//! * [`control`] — the serialisable control plane: one vocabulary for
+//!   everything that steers a running fleet (membership actions, model
+//!   swaps, admission outcomes), a versioned JSON wire codec
+//!   (`WireEvent` over [`util::json`]) and a replayable `EventLog`.
+//!   Scenario scripts, the autoscale controller and the shard placement
+//!   layer all speak this layer, so control decisions can cross a
+//!   process boundary.
 //! * [`autoscale`] — closed-loop adaptation above the fleet: windowed
 //!   per-stream signals drive a generalised-nselect device controller
 //!   (attach/detach replicas with hysteresis + cooldown) and a
 //!   quality controller walking a model ladder (SSD300 ↔ YOLOv3 ↔ tiny
 //!   variants, an accuracy–rate Pareto frontier), replacing scripted
 //!   control events with feedback control.
+//! * [`shard`] — stream sharding across fleet instances: a placement
+//!   layer (least-loaded / hash / round-robin) partitions N streams over
+//!   M shards, each wrapping its own registry and device pool; a
+//!   periodic capacity gossip exchanges per-shard headroom (the §III-B
+//!   Σμ-vs-Σλ band) and drives stream migration — and shard-loss
+//!   re-placement — via serialised detach→attach control events.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
 //!   bench binaries and the CLI.
 
@@ -44,6 +57,8 @@ pub mod sim;
 pub mod coordinator;
 pub mod runtime;
 pub mod server;
+pub mod control;
 pub mod fleet;
 pub mod autoscale;
+pub mod shard;
 pub mod experiments;

@@ -5,6 +5,7 @@
 //!   offline    zero-drop offline detection (Figure 1a reference)
 //!   fleet      multi-stream serving over a shared device pool (virtual time)
 //!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
+//!   shard      stream sharding across fleet instances (split|skew|failure|run)
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
 //!   nselect    recommend the parallel-detection parameter n (§III-B)
 //!   visualize  dump Figure 2/3-style PPM frames with box overlays
@@ -47,8 +48,11 @@ fn specs() -> Vec<Spec> {
         Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
-        Spec { name: "scenario", takes_value: true, help: "autoscale: sweep to run (step|diurnal|failure|all)", default: Some("step") },
-        Spec { name: "json", takes_value: false, help: "fleet/autoscale: emit machine-readable JSON instead of tables", default: None },
+        Spec { name: "scenario", takes_value: true, help: "autoscale/shard: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|all|run)", default: Some("step") },
+        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard: emit machine-readable JSON instead of tables", default: None },
+        Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
+        Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
+        Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
     ]
 }
 
@@ -56,7 +60,7 @@ fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
         print!("{}", usage("eva", "parallel detection for edge video analytics", &specs()));
-        println!("\nsubcommands: serve | offline | fleet | autoscale | table | nselect | visualize | inspect");
+        println!("\nsubcommands: serve | offline | fleet | autoscale | shard | table | nselect | visualize | inspect");
         return;
     }
     let cmd = raw[0].clone();
@@ -79,6 +83,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "offline" => cmd_serve(args, true),
         "fleet" => cmd_fleet(args),
         "autoscale" => cmd_autoscale(args),
+        "shard" => cmd_shard(args),
         "table" => cmd_table(args),
         "nselect" => cmd_nselect(args),
         "visualize" => cmd_visualize(args),
@@ -218,7 +223,10 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
             print!("{}", table.render());
             println!(
                 "[autoscale] {} controller actions ({} device, {} rung)",
-                out.control_log.iter().filter(|r| !r.scripted).count(),
+                out.control_log
+                    .iter()
+                    .filter(|r| r.origin == eva::control::ControlOrigin::Controller)
+                    .count(),
                 out.controller_device_actions(),
                 out.rung_actions,
             );
@@ -236,6 +244,115 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
             print!("{}", t3.render());
         }
         other => bail!("unknown autoscale scenario {other:?} (step|diurnal|failure|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_shard(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    // `--scenario` is shared with `eva autoscale`, whose default is
+    // "step" — not a shard sweep, so it reads as "run everything".
+    let mut scenario = args.str_or("scenario", "all");
+    if scenario == "step" {
+        scenario = "all".to_string();
+    }
+
+    if scenario == "run" {
+        // One-off run from CLI parameters: `--shards` pools of `--rates`
+        // devices each, `--streams` × `--stream-fps` streams.
+        let shards = args.usize_or("shards", 2).map_err(|e| anyhow!(e))?.max(1);
+        let streams = args.usize_or("streams", 8).map_err(|e| anyhow!(e))?;
+        let fps = args.f64_or("stream-fps", 5.0).map_err(|e| anyhow!(e))?;
+        let frames = args.u64_or("frames", 300).map_err(|e| anyhow!(e))?;
+        let window = args.usize_or("window", 4).map_err(|e| anyhow!(e))?;
+        let gossip = args.f64_or("gossip", 5.0).map_err(|e| anyhow!(e))?;
+        let rates_raw = args.str_or("rates", "13.5,2.5,2.5,2.5");
+        let rates: Vec<f64> = rates_raw
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("--rates: cannot parse {:?}", p.trim()))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        if rates.is_empty() {
+            bail!("--rates: need at least one device rate");
+        }
+        let policy_name = args.str_or("policy", "least-loaded");
+        let policy = eva::shard::PlacementPolicy::parse(&policy_name)
+            .ok_or_else(|| anyhow!("unknown placement policy {policy_name:?} (least-loaded|hash|round-robin)"))?;
+        let admission = if args.flag("no-admission") {
+            AdmissionPolicy::admit_all()
+        } else {
+            AdmissionPolicy::default()
+        };
+        let pools: Vec<Vec<DeviceInstance>> = (0..shards)
+            .map(|_| {
+                rates
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &r)| {
+                        DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r)
+                    })
+                    .collect()
+            })
+            .collect();
+        let specs: Vec<StreamSpec> = (0..streams)
+            .map(|s| StreamSpec::new(&format!("stream{s}"), fps, frames).with_window(window))
+            .collect();
+        let offered = fps * streams as f64;
+        let pool: f64 = rates.iter().sum::<f64>() * shards as f64;
+        println!(
+            "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, seed {seed}",
+            policy.label()
+        );
+        let report =
+            experiments::shard::custom_run(pools, specs, policy, admission, gossip, seed);
+        if args.flag("json") {
+            println!("{}", report.to_json().to_string());
+            return Ok(());
+        }
+        print!("{}", report.stream_table().render());
+        print!("{}", report.shard_table().render());
+        println!(
+            "[shard] delivered σ = {:.2} FPS, drop rate {:.1}%, {} migrations over {} epochs",
+            report.delivered_fps(),
+            report.drop_rate() * 100.0,
+            report.migrations,
+            report.epochs_run,
+        );
+        return Ok(());
+    }
+
+    if args.flag("json") {
+        let json = experiments::shard::shard_json(seed, &scenario).ok_or_else(|| {
+            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|all|run)")
+        })?;
+        println!("{}", json.to_string());
+        return Ok(());
+    }
+    match scenario.as_str() {
+        "split" => {
+            let (table, _) = experiments::shard::balanced_split(seed);
+            print!("{}", table.render());
+        }
+        "skew" => {
+            let (table, _) = experiments::shard::skewed_load(seed);
+            print!("{}", table.render());
+        }
+        "failure" => {
+            let (table, _) = experiments::shard::shard_failure(seed);
+            print!("{}", table.render());
+        }
+        "all" => {
+            let (t1, _) = experiments::shard::balanced_split(seed);
+            let (t2, _) = experiments::shard::skewed_load(seed);
+            let (t3, _) = experiments::shard::shard_failure(seed);
+            print!("{}", t1.render());
+            print!("{}", t2.render());
+            print!("{}", t3.render());
+        }
+        other => bail!("unknown shard scenario {other:?} (split|skew|failure|all|run)"),
     }
     Ok(())
 }

@@ -1,0 +1,29 @@
+//! Stream sharding across fleet instances.
+//!
+//! One `fleet::serve`/`fleet::sim` instance scales to one process'
+//! worth of streams; the ROADMAP's heavy-traffic north star needs many.
+//! This subsystem partitions N streams over M shard instances — each
+//! wrapping its own device pool, admission policy and registry — behind
+//! a thin placement layer, with all coordination expressed in the
+//! serialisable [`crate::control`] vocabulary:
+//!
+//! * [`placement`] — where a joining stream lands: least-loaded
+//!   (headroom-greedy), hash (stateless FNV-1a over the stream name) or
+//!   round-robin, all over the gossip view only.
+//! * [`gossip`] — the periodic capacity exchange: per-shard headroom
+//!   digests (util-adjusted Σμ vs committed Σλ, the §III-B band per
+//!   shard) with missed-heartbeat expiry, plus the band-restoring
+//!   migration planner.
+//! * [`sim`] — the co-simulation runner: gossip-epoch-quantised virtual
+//!   time, stream migration and shard-loss re-placement executed as
+//!   serialised detach→attach [`crate::control::WireEvent`]s (encoded
+//!   and decoded on every hop, exactly the surface a cross-process
+//!   deployment needs).
+
+pub mod gossip;
+pub mod placement;
+pub mod sim;
+
+pub use gossip::{plan_moves, GossipTable, Headroom, Migration};
+pub use placement::{fnv1a, PlacementPolicy, ShardView};
+pub use sim::{run_sharded, ShardControl, ShardReport, ShardScenario, ShardStreamReport};

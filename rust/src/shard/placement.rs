@@ -1,0 +1,194 @@
+//! Stream placement: which shard a joining (or re-placed) stream lands
+//! on.
+//!
+//! Placement sees only the gossip view — per-shard capacity and
+//! committed load ([`ShardView`]) — never shard internals, so the same
+//! policies work across process boundaries. Three policies:
+//!
+//! * [`PlacementPolicy::LeastLoaded`] — greedy headroom-maximising: the
+//!   alive shard with the most uncommitted capacity takes the stream
+//!   (ties break to the lowest shard id). Balances skewed arrival rates
+//!   at admission time.
+//! * [`PlacementPolicy::Hash`] — stable FNV-1a hash of the stream name
+//!   over the alive shards: no shared placement state at all, at the
+//!   cost of load-blindness (the gossip rebalancer cleans up after it).
+//! * [`PlacementPolicy::RoundRobin`] — arrival order modulo alive
+//!   shards: the classic load-blind baseline the experiments use to
+//!   provoke deterministic imbalance.
+
+/// One shard as the placement layer sees it: the gossip headroom digest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardView {
+    pub shard: usize,
+    pub alive: bool,
+    /// Admission capacity: util-adjusted Σμ of the shard's pool (FPS).
+    pub capacity: f64,
+    /// Committed offered load: Σλ of the shard's resident streams (FPS).
+    pub committed: f64,
+}
+
+impl ShardView {
+    /// Uncommitted capacity (may be negative when overloaded).
+    pub fn headroom(&self) -> f64 {
+        self.capacity - self.committed
+    }
+
+    /// Inside the §III-B-style band: committed load at or below the
+    /// util-adjusted pool rate.
+    pub fn in_band(&self) -> bool {
+        self.committed <= self.capacity + 1e-9
+    }
+}
+
+/// How streams are assigned to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    LeastLoaded,
+    Hash,
+    RoundRobin,
+}
+
+impl PlacementPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::Hash => "hash",
+            PlacementPolicy::RoundRobin => "round-robin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "least-loaded" | "least" | "ll" => Some(PlacementPolicy::LeastLoaded),
+            "hash" => Some(PlacementPolicy::Hash),
+            "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    /// Pick a shard for a stream. `name` keys hash placement, `seq` is
+    /// the stream's arrival index (round-robin), `views` is the current
+    /// gossip table. Returns `None` only when no shard is alive; the
+    /// chosen shard's admission still decides admit/degrade/reject.
+    pub fn place(&self, name: &str, seq: usize, views: &[ShardView]) -> Option<usize> {
+        let alive: Vec<&ShardView> = views.iter().filter(|v| v.alive).collect();
+        if alive.is_empty() {
+            return None;
+        }
+        match self {
+            PlacementPolicy::LeastLoaded => {
+                let mut best = alive[0];
+                for &v in &alive[1..] {
+                    if v.headroom() > best.headroom() + 1e-9 {
+                        best = v;
+                    }
+                }
+                Some(best.shard)
+            }
+            PlacementPolicy::Hash => {
+                let k = (fnv1a(name) % alive.len() as u64) as usize;
+                Some(alive[k].shard)
+            }
+            PlacementPolicy::RoundRobin => Some(alive[seq % alive.len()].shard),
+        }
+    }
+}
+
+/// FNV-1a over the stream name: stable across processes and runs (no
+/// per-process hasher seed, unlike `std::collections` hashing).
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(caps: &[(f64, f64)]) -> Vec<ShardView> {
+        caps.iter()
+            .enumerate()
+            .map(|(i, &(capacity, committed))| ShardView {
+                shard: i,
+                alive: true,
+                capacity,
+                committed,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn least_loaded_picks_max_headroom_with_low_id_ties() {
+        let p = PlacementPolicy::LeastLoaded;
+        let v = views(&[(10.0, 8.0), (10.0, 2.0), (10.0, 5.0)]);
+        assert_eq!(p.place("s", 0, &v), Some(1));
+        // Exact tie: lowest shard id wins.
+        let v = views(&[(10.0, 4.0), (10.0, 4.0)]);
+        assert_eq!(p.place("s", 0, &v), Some(0));
+    }
+
+    #[test]
+    fn dead_shards_are_never_chosen() {
+        let mut v = views(&[(10.0, 9.0), (10.0, 0.0)]);
+        v[1].alive = false;
+        for policy in [
+            PlacementPolicy::LeastLoaded,
+            PlacementPolicy::Hash,
+            PlacementPolicy::RoundRobin,
+        ] {
+            for (seq, name) in ["a", "b", "c", "d"].iter().enumerate() {
+                assert_eq!(policy.place(name, seq, &v), Some(0), "{policy:?}");
+            }
+        }
+        v[0].alive = false;
+        assert_eq!(PlacementPolicy::LeastLoaded.place("a", 0, &v), None);
+    }
+
+    #[test]
+    fn hash_is_stable_and_name_keyed() {
+        let v = views(&[(10.0, 0.0), (10.0, 0.0), (10.0, 0.0)]);
+        let a = PlacementPolicy::Hash.place("cam-a", 0, &v);
+        // Same name, any seq, same shard — and repeatable.
+        assert_eq!(PlacementPolicy::Hash.place("cam-a", 7, &v), a);
+        assert_eq!(PlacementPolicy::Hash.place("cam-a", 0, &v), a);
+        // FNV-1a reference value (empty string hashes to the offset basis).
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a("cam-a"), fnv1a("cam-b"));
+    }
+
+    #[test]
+    fn round_robin_cycles_alive_shards() {
+        let v = views(&[(10.0, 0.0), (10.0, 0.0)]);
+        let p = PlacementPolicy::RoundRobin;
+        assert_eq!(p.place("x", 0, &v), Some(0));
+        assert_eq!(p.place("x", 1, &v), Some(1));
+        assert_eq!(p.place("x", 2, &v), Some(0));
+    }
+
+    #[test]
+    fn policy_labels_roundtrip() {
+        for p in [
+            PlacementPolicy::LeastLoaded,
+            PlacementPolicy::Hash,
+            PlacementPolicy::RoundRobin,
+        ] {
+            assert_eq!(PlacementPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("rr"), Some(PlacementPolicy::RoundRobin));
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn view_band_and_headroom() {
+        let v = ShardView { shard: 0, alive: true, capacity: 9.5, committed: 7.5 };
+        assert!((v.headroom() - 2.0).abs() < 1e-12);
+        assert!(v.in_band());
+        let v = ShardView { committed: 12.0, ..v };
+        assert!(!v.in_band());
+        assert!(v.headroom() < 0.0);
+    }
+}

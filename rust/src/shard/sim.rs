@@ -1,0 +1,865 @@
+//! The sharded-fleet runner: N streams over M fleet instances, in
+//! virtual time, quantised at the gossip interval.
+//!
+//! Each shard wraps its own device pool and admission policy — a full
+//! [`crate::fleet`] instance, as a separate process would run it. The
+//! co-simulation advances in **gossip epochs** of `gossip_interval`
+//! seconds:
+//!
+//! 1. every alive shard publishes its [`Headroom`] digest; digests that
+//!    miss a round expire (shard loss = missed heartbeat);
+//! 2. the placement layer re-places unplaced streams (initial placement
+//!    and orphans from a lost shard) against the fresh views;
+//! 3. the gossip rebalancer plans band-restoring migrations, executed
+//!    as serialised **detach→attach** control events;
+//! 4. scheduled shard failures for this epoch take effect (their
+//!    residents are orphaned until the next round — at most one gossip
+//!    interval);
+//! 5. each alive shard serves its residents' epoch slice through the
+//!    virtual-time fleet engine ([`crate::fleet::sim::run_fleet`]).
+//!
+//! Every control decision the coordinator takes crosses the wire: it is
+//! encoded to a [`WireEvent`] JSON string, decoded back, and only the
+//! *decoded* action is applied — the in-process run exercises exactly
+//! the serialisation surface a cross-process deployment needs (the
+//! remaining gap, a real transport, is tracked in ROADMAP.md).
+//!
+//! Quantisation caveat: each epoch slice runs to completion inside the
+//! shard's fleet engine, so window backlog at the tick boundary is
+//! drained "into" the next epoch. Keep stream windows shallow relative
+//! to `gossip_interval × Σμ` (the experiments do) so the carry-over
+//! stays a small, configuration-independent constant.
+
+use std::collections::BTreeMap;
+
+use crate::control::{ControlAction, ControlOrigin, WireEvent};
+use crate::device::DeviceInstance;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::sim::{run_fleet, Scenario};
+use crate::fleet::stream::StreamSpec;
+use crate::shard::gossip::{plan_moves, GossipTable, Headroom};
+use crate::shard::placement::{PlacementPolicy, ShardView};
+use crate::util::json::Json;
+use crate::util::stats::Percentiles;
+use crate::util::table::{f, Table};
+
+/// One sharded run's full description.
+#[derive(Debug, Clone)]
+pub struct ShardScenario {
+    /// Device pools, one per shard.
+    pub shards: Vec<Vec<DeviceInstance>>,
+    /// Streams, placed by `policy` at the first gossip round.
+    pub streams: Vec<StreamSpec>,
+    pub policy: PlacementPolicy,
+    /// Admission policy every shard enforces locally.
+    pub admission: AdmissionPolicy,
+    /// Gossip period in seconds — also the co-simulation epoch.
+    pub gossip_interval: f64,
+    /// Maximum gossip epochs to run (the run ends early once every
+    /// stream is exhausted).
+    pub epochs: usize,
+    pub seed: u64,
+    /// `(epoch, shard)`: the shard dies at the start of that epoch,
+    /// right after the gossip round it last attended.
+    pub failures: Vec<(usize, usize)>,
+}
+
+impl ShardScenario {
+    pub fn new(shards: Vec<Vec<DeviceInstance>>, streams: Vec<StreamSpec>) -> ShardScenario {
+        ShardScenario {
+            shards,
+            streams,
+            policy: PlacementPolicy::LeastLoaded,
+            admission: AdmissionPolicy::default(),
+            gossip_interval: 5.0,
+            epochs: 12,
+            seed: 0,
+            failures: Vec::new(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: PlacementPolicy) -> ShardScenario {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ShardScenario {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_gossip(mut self, interval: f64) -> ShardScenario {
+        self.gossip_interval = interval;
+        self
+    }
+
+    pub fn with_epochs(mut self, epochs: usize) -> ShardScenario {
+        self.epochs = epochs;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> ShardScenario {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_failure(mut self, epoch: usize, shard: usize) -> ShardScenario {
+        self.failures.push((epoch, shard));
+        self
+    }
+}
+
+/// One wire event as routed to a shard (the coordinator's send log).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardControl {
+    pub shard: usize,
+    pub event: WireEvent,
+}
+
+/// Final per-stream outcome of a sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardStreamReport {
+    pub name: String,
+    /// Offered rate λ (FPS).
+    pub demand: f64,
+    pub frames_total: u64,
+    pub frames_processed: u64,
+    /// Completed detach→attach migrations.
+    pub migrations: usize,
+    pub final_shard: Option<usize>,
+    /// p99 output latency over every served epoch (seconds).
+    pub p99_latency: f64,
+    /// Worst observed orphan gap: seconds between losing a shard and
+    /// being re-placed. `None` if never orphaned; infinite if still
+    /// unplaced at the end of the run.
+    pub orphaned_for: Option<f64>,
+}
+
+impl ShardStreamReport {
+    pub fn drop_rate(&self) -> f64 {
+        if self.frames_total == 0 {
+            return 0.0;
+        }
+        (self.frames_total - self.frames_processed) as f64 / self.frames_total as f64
+    }
+}
+
+/// Aggregates for one sharded run.
+pub struct ShardReport {
+    pub streams: Vec<ShardStreamReport>,
+    /// Util-adjusted admission capacity per shard (FPS).
+    pub shard_capacity: Vec<f64>,
+    /// Shard alive at the end of the run.
+    pub shard_alive: Vec<bool>,
+    /// Busy seconds / processed frames summed over each shard's pool.
+    pub shard_busy: Vec<f64>,
+    pub shard_frames: Vec<u64>,
+    /// Committed Σλ per shard right after initial placement.
+    pub initial_committed: Vec<f64>,
+    /// Every control event the coordinator routed, in order.
+    pub control_log: Vec<ShardControl>,
+    /// Completed stream migrations (gossip rebalance).
+    pub migrations: usize,
+    pub policy: PlacementPolicy,
+    pub gossip_interval: f64,
+    pub epochs_run: usize,
+}
+
+impl ShardReport {
+    /// Virtual time covered by the run.
+    pub fn makespan(&self) -> f64 {
+        self.epochs_run as f64 * self.gossip_interval
+    }
+
+    pub fn total_frames(&self) -> u64 {
+        self.streams.iter().map(|s| s.frames_total).sum()
+    }
+
+    pub fn total_processed(&self) -> u64 {
+        self.streams.iter().map(|s| s.frames_processed).sum()
+    }
+
+    /// Aggregate delivered detection throughput (FPS).
+    pub fn delivered_fps(&self) -> f64 {
+        let t = self.makespan();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.total_processed() as f64 / t
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        let total = self.total_frames();
+        if total == 0 {
+            return 0.0;
+        }
+        (total - self.total_processed()) as f64 / total as f64
+    }
+
+    /// Streams that were orphaned by a shard loss at any point.
+    pub fn orphan_count(&self) -> usize {
+        self.streams.iter().filter(|s| s.orphaned_for.is_some()).count()
+    }
+
+    /// Worst orphan gap across streams (0 when nothing was orphaned).
+    pub fn worst_orphan_gap(&self) -> f64 {
+        self.streams
+            .iter()
+            .filter_map(|s| s.orphaned_for)
+            .fold(0.0, f64::max)
+    }
+
+    /// Every orphaned stream was re-placed within `interval` seconds.
+    pub fn orphans_replaced_within(&self, interval: f64) -> bool {
+        self.streams
+            .iter()
+            .filter_map(|s| s.orphaned_for)
+            .all(|gap| gap <= interval + 1e-9)
+    }
+
+    /// Imbalance of the initial placement: max − min committed Σλ.
+    pub fn initial_imbalance(&self) -> f64 {
+        let max = self.initial_committed.iter().copied().fold(f64::MIN, f64::max);
+        let min = self.initial_committed.iter().copied().fold(f64::MAX, f64::min);
+        if self.initial_committed.is_empty() {
+            0.0
+        } else {
+            max - min
+        }
+    }
+
+    /// Per-stream table.
+    pub fn stream_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-stream results (sharded)",
+            &[
+                "stream", "λ (FPS)", "frames", "processed", "drop %", "migrations",
+                "final shard", "p99 (s)", "orphaned (s)",
+            ],
+        );
+        for s in &self.streams {
+            t.row(vec![
+                s.name.clone(),
+                f(s.demand, 1),
+                format!("{}", s.frames_total),
+                format!("{}", s.frames_processed),
+                f(s.drop_rate() * 100.0, 1),
+                format!("{}", s.migrations),
+                match s.final_shard {
+                    Some(sh) => format!("{sh}"),
+                    None => "-".to_string(),
+                },
+                f(s.p99_latency, 2),
+                match s.orphaned_for {
+                    Some(gap) if gap.is_finite() => f(gap, 1),
+                    Some(_) => "never re-placed".to_string(),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t
+    }
+
+    /// Per-shard table.
+    pub fn shard_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-shard results",
+            &["shard", "capacity (FPS)", "alive", "busy (s)", "frames", "utilisation %"],
+        );
+        for i in 0..self.shard_capacity.len() {
+            t.row(vec![
+                format!("{i}"),
+                f(self.shard_capacity[i], 1),
+                if self.shard_alive[i] { "yes" } else { "no" }.to_string(),
+                f(self.shard_busy[i], 1),
+                format!("{}", self.shard_frames[i]),
+                f(self.utilization(i) * 100.0, 1),
+            ]);
+        }
+        t
+    }
+
+    /// Mean pool utilisation of shard `sh` over the run (busy seconds
+    /// per device-second; devices inferred from capacity at the nominal
+    /// 2.5-FPS replica rate are *not* assumed — this is busy seconds
+    /// normalised by makespan only, summed across the pool).
+    pub fn utilization(&self, sh: usize) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.shard_busy[sh] / span
+    }
+
+    /// Machine-readable summary (the `eva shard --json` surface).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert(
+            "policy".to_string(),
+            Json::Str(self.policy.label().to_string()),
+        );
+        root.insert(
+            "gossip_interval".to_string(),
+            Json::Num(self.gossip_interval),
+        );
+        root.insert("epochs_run".to_string(), Json::Num(self.epochs_run as f64));
+        root.insert("makespan".to_string(), Json::Num(self.makespan()));
+        root.insert(
+            "delivered_fps".to_string(),
+            Json::Num(self.delivered_fps()),
+        );
+        root.insert("drop_rate".to_string(), Json::Num(self.drop_rate()));
+        root.insert(
+            "migrations".to_string(),
+            Json::Num(self.migrations as f64),
+        );
+        root.insert(
+            "frames_total".to_string(),
+            Json::Num(self.total_frames() as f64),
+        );
+        root.insert(
+            "frames_processed".to_string(),
+            Json::Num(self.total_processed() as f64),
+        );
+        let shards: Vec<Json> = (0..self.shard_capacity.len())
+            .map(|i| {
+                let mut o = BTreeMap::new();
+                o.insert("shard".to_string(), Json::Num(i as f64));
+                o.insert("capacity".to_string(), Json::Num(self.shard_capacity[i]));
+                o.insert("alive".to_string(), Json::Bool(self.shard_alive[i]));
+                o.insert("busy_seconds".to_string(), Json::Num(self.shard_busy[i]));
+                o.insert("frames".to_string(), Json::Num(self.shard_frames[i] as f64));
+                o.insert(
+                    "initial_committed".to_string(),
+                    Json::Num(self.initial_committed[i]),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("shards".to_string(), Json::Arr(shards));
+        let streams: Vec<Json> = self
+            .streams
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(s.name.clone()));
+                o.insert("demand".to_string(), Json::Num(s.demand));
+                o.insert("frames_total".to_string(), Json::Num(s.frames_total as f64));
+                o.insert(
+                    "frames_processed".to_string(),
+                    Json::Num(s.frames_processed as f64),
+                );
+                o.insert("drop_rate".to_string(), Json::Num(s.drop_rate()));
+                o.insert("migrations".to_string(), Json::Num(s.migrations as f64));
+                o.insert(
+                    "final_shard".to_string(),
+                    match s.final_shard {
+                        Some(sh) => Json::Num(sh as f64),
+                        None => Json::Null,
+                    },
+                );
+                o.insert("p99_latency".to_string(), Json::Num(s.p99_latency));
+                // One stable type per key: `orphaned_for` is a number
+                // (seconds) or null; the still-unplaced-at-end case is a
+                // separate boolean rather than a string sentinel.
+                o.insert(
+                    "orphaned_for".to_string(),
+                    match s.orphaned_for {
+                        Some(gap) if gap.is_finite() => Json::Num(gap),
+                        _ => Json::Null,
+                    },
+                );
+                o.insert(
+                    "never_replaced".to_string(),
+                    Json::Bool(matches!(s.orphaned_for, Some(gap) if gap.is_infinite())),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("streams".to_string(), Json::Arr(streams));
+        root.insert(
+            "control_log".to_string(),
+            Json::Arr(
+                self.control_log
+                    .iter()
+                    .map(|c| {
+                        let mut o = BTreeMap::new();
+                        o.insert("shard".to_string(), Json::Num(c.shard as f64));
+                        o.insert("event".to_string(), c.event.to_json());
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+}
+
+/// Live per-stream bookkeeping inside the runner.
+struct StreamRun {
+    spec: StreamSpec,
+    next_frame: u64,
+    frames_total: u64,
+    frames_processed: u64,
+    latency: Percentiles,
+    shard: Option<usize>,
+    migrations: usize,
+    /// Fractional arrivals carried across epochs: a stream offering
+    /// fps × tick < 1 frames per epoch arrives at its true long-run
+    /// rate instead of being rounded up to one frame per epoch.
+    arrival_credit: f64,
+    /// Time the stream lost its shard (pending re-placement).
+    orphaned_at: Option<f64>,
+    /// Worst re-placement gap seen so far.
+    worst_gap: f64,
+    ever_orphaned: bool,
+}
+
+impl StreamRun {
+    fn remaining(&self) -> u64 {
+        self.spec.num_frames.saturating_sub(self.next_frame)
+    }
+
+    fn active(&self) -> bool {
+        self.remaining() > 0
+    }
+}
+
+/// Route one control action to `shard` **through the wire**: encode to
+/// JSON, decode, apply the decoded action to the residency map, log it.
+fn route(
+    log: &mut Vec<ShardControl>,
+    streams: &mut [StreamRun],
+    shard: usize,
+    at: f64,
+    origin: ControlOrigin,
+    action: ControlAction,
+) {
+    let encoded = WireEvent::action(at, origin, action).encode();
+    let decoded = WireEvent::decode(&encoded).expect("control wire must round-trip");
+    match decoded.as_action() {
+        Some(ControlAction::AttachStream(spec)) => {
+            if let Some(i) = streams.iter().position(|s| s.spec.name == spec.name) {
+                streams[i].shard = Some(shard);
+            }
+        }
+        Some(ControlAction::DetachStream(idx)) => {
+            if let Some(s) = streams.get_mut(*idx) {
+                if s.shard == Some(shard) {
+                    s.shard = None;
+                }
+            }
+        }
+        _ => {}
+    }
+    log.push(ShardControl {
+        shard,
+        event: decoded,
+    });
+}
+
+/// Run the sharded scenario to completion (or `epochs`).
+pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
+    let m = scenario.shards.len();
+    assert!(m > 0, "need at least one shard");
+    let tick = scenario.gossip_interval.max(1e-3);
+    let util = scenario.admission.target_utilization;
+    let capacity: Vec<f64> = scenario
+        .shards
+        .iter()
+        .map(|devs| devs.iter().map(|d| d.rate()).sum::<f64>() * util)
+        .collect();
+
+    let mut alive = vec![true; m];
+    let mut shard_busy = vec![0.0f64; m];
+    let mut shard_frames = vec![0u64; m];
+    let mut streams: Vec<StreamRun> = scenario
+        .streams
+        .iter()
+        .map(|spec| StreamRun {
+            spec: spec.clone(),
+            next_frame: 0,
+            frames_total: 0,
+            frames_processed: 0,
+            latency: Percentiles::new(),
+            shard: None,
+            migrations: 0,
+            arrival_credit: 0.0,
+            orphaned_at: None,
+            worst_gap: 0.0,
+            ever_orphaned: false,
+        })
+        .collect();
+    let mut log: Vec<ShardControl> = Vec::new();
+    let mut table = GossipTable::new(m);
+    let mut migrations = 0usize;
+    let mut initial_committed = vec![0.0f64; m];
+    let mut epochs_run = 0usize;
+
+    for epoch in 0..scenario.epochs {
+        let t0 = epoch as f64 * tick;
+
+        // 1. Gossip round: alive shards publish, stale digests expire.
+        for sh in 0..m {
+            if !alive[sh] {
+                continue;
+            }
+            let committed: f64 = streams
+                .iter()
+                .filter(|s| s.shard == Some(sh) && s.active())
+                .map(|s| s.spec.demand())
+                .sum();
+            table.publish(Headroom {
+                shard: sh,
+                at: t0,
+                capacity: capacity[sh],
+                committed,
+            });
+        }
+        table.sweep(t0, 0.5 * tick);
+        let mut views: Vec<ShardView> = table.views();
+
+        // 2. Place unplaced streams (initial placement + orphans from a
+        //    lost shard) against the fresh views, updating committed as
+        //    we go so multiple placements spread out.
+        for i in 0..streams.len() {
+            if streams[i].shard.is_some() || !streams[i].active() {
+                continue;
+            }
+            let name = streams[i].spec.name.clone();
+            let Some(dst) = scenario.policy.place(&name, i, &views) else {
+                continue;
+            };
+            let attach = ControlAction::AttachStream(streams[i].spec.clone());
+            route(&mut log, &mut streams, dst, t0, ControlOrigin::Placement, attach);
+            views[dst].committed += streams[i].spec.demand();
+            if let Some(lost_at) = streams[i].orphaned_at.take() {
+                let gap = (t0 - lost_at).max(0.0);
+                if gap > streams[i].worst_gap {
+                    streams[i].worst_gap = gap;
+                }
+            }
+        }
+
+        if epoch == 0 {
+            for s in streams.iter() {
+                if let Some(sh) = s.shard {
+                    if s.active() {
+                        initial_committed[sh] += s.spec.demand();
+                    }
+                }
+            }
+        }
+
+        // 3. Band rebalance: serialised detach→attach migrations. The
+        //    first rebalance runs one interval after placement — the
+        //    gossip exchange is reactive, placement is admission-time.
+        if epoch > 0 {
+            let residents: Vec<(usize, f64, usize)> = streams
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| {
+                    if s.active() {
+                        s.shard.map(|sh| (i, s.spec.demand(), sh))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            for mv in plan_moves(&views, &residents) {
+                route(
+                    &mut log,
+                    &mut streams,
+                    mv.from,
+                    t0,
+                    ControlOrigin::Placement,
+                    ControlAction::DetachStream(mv.stream),
+                );
+                let attach = ControlAction::AttachStream(streams[mv.stream].spec.clone());
+                route(&mut log, &mut streams, mv.to, t0, ControlOrigin::Placement, attach);
+                streams[mv.stream].migrations += 1;
+                migrations += 1;
+            }
+        }
+
+        // 4. Scheduled shard failures: the shard dies right after the
+        //    round it last attended; its residents wait for the next
+        //    gossip round — at most one interval — to be re-placed.
+        for &(e, sh) in &scenario.failures {
+            if e == epoch && sh < m && alive[sh] {
+                alive[sh] = false;
+                for s in streams.iter_mut() {
+                    if s.shard == Some(sh) {
+                        s.shard = None;
+                        s.orphaned_at = Some(t0);
+                        s.ever_orphaned = true;
+                    }
+                }
+            }
+        }
+
+        // 5. Serve the epoch: each alive shard runs its residents' slice
+        //    through the virtual-time fleet engine; unplaced streams'
+        //    arrivals drop on the floor. Epoch quotas carry fractional
+        //    arrival credit so sub-epoch-rate streams (fps × tick < 1)
+        //    still arrive at their true long-run rate.
+        let mut quotas: Vec<u64> = vec![0; streams.len()];
+        for (i, s) in streams.iter_mut().enumerate() {
+            if !s.active() {
+                continue;
+            }
+            s.arrival_credit += s.spec.fps * tick;
+            let q = (s.arrival_credit.floor().max(0.0) as u64).min(s.remaining());
+            s.arrival_credit -= q as f64;
+            quotas[i] = q;
+        }
+        for sh in 0..m {
+            if !alive[sh] {
+                continue;
+            }
+            let mut specs: Vec<StreamSpec> = Vec::new();
+            let mut idx_map: Vec<usize> = Vec::new();
+            for (i, s) in streams.iter().enumerate() {
+                if s.shard != Some(sh) || !s.active() || quotas[i] == 0 {
+                    continue;
+                }
+                let mut spec = s.spec.clone();
+                spec.num_frames = quotas[i];
+                specs.push(spec);
+                idx_map.push(i);
+            }
+            if specs.is_empty() {
+                continue;
+            }
+            let sub = Scenario::new(scenario.shards[sh].clone(), specs)
+                .with_admission(scenario.admission.clone())
+                .with_seed(
+                    scenario
+                        .seed
+                        .wrapping_add((epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                        ^ ((sh as u64) << 17),
+                );
+            let report = run_fleet(&sub);
+            for (k, &i) in idx_map.iter().enumerate() {
+                let sr = &report.streams[k];
+                streams[i].frames_total += sr.metrics.frames_total;
+                streams[i].frames_processed += sr.metrics.frames_processed;
+                streams[i].next_frame += sr.metrics.frames_total;
+                for rec in &sr.records {
+                    streams[i]
+                        .latency
+                        .push((rec.emit_ts - rec.capture_ts).max(0.0));
+                }
+            }
+            shard_busy[sh] += report.device_busy.iter().sum::<f64>();
+            shard_frames[sh] += report.device_frames.iter().sum::<u64>();
+        }
+        for (i, s) in streams.iter_mut().enumerate() {
+            if s.shard.is_none() && s.active() && quotas[i] > 0 {
+                s.frames_total += quotas[i];
+                s.next_frame += quotas[i];
+            }
+        }
+
+        epochs_run = epoch + 1;
+        if streams.iter().all(|s| !s.active()) {
+            break;
+        }
+    }
+
+    let stream_reports: Vec<ShardStreamReport> = streams
+        .iter_mut()
+        .map(|s| ShardStreamReport {
+            name: s.spec.name.clone(),
+            demand: s.spec.demand(),
+            frames_total: s.frames_total,
+            frames_processed: s.frames_processed,
+            migrations: s.migrations,
+            final_shard: s.shard,
+            p99_latency: s.latency.p99(),
+            orphaned_for: if s.orphaned_at.is_some() {
+                Some(f64::INFINITY)
+            } else if s.ever_orphaned {
+                Some(s.worst_gap)
+            } else {
+                None
+            },
+        })
+        .collect();
+
+    ShardReport {
+        streams: stream_reports,
+        shard_capacity: capacity,
+        shard_alive: alive,
+        shard_busy,
+        shard_frames,
+        initial_committed,
+        control_log: log,
+        migrations,
+        policy: scenario.policy,
+        gossip_interval: tick,
+        epochs_run,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DetectorModelId, DeviceKind};
+
+    fn pool(n: usize, rate: f64) -> Vec<DeviceInstance> {
+        (0..n)
+            .map(|i| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, rate))
+            .collect()
+    }
+
+    fn uniform_streams(n: usize, fps: f64, frames: u64, window: usize) -> Vec<StreamSpec> {
+        (0..n)
+            .map(|i| StreamSpec::new(&format!("s{i}"), fps, frames).with_window(window))
+            .collect()
+    }
+
+    #[test]
+    fn least_loaded_split_balances_and_serves_everything() {
+        // Mixed demands [3, 2, 2, 3] over 2 shards × 3 devices (capacity
+        // 7.125 each): least-loaded lands 6 / 4 FPS, both shards stay in
+        // band, nothing migrates, and every stream is served near-fully.
+        let streams: Vec<StreamSpec> = [3.0, 2.0, 2.0, 3.0]
+            .iter()
+            .enumerate()
+            .map(|(i, &fps)| {
+                StreamSpec::new(&format!("s{i}"), fps, (fps * 40.0) as u64).with_window(4)
+            })
+            .collect();
+        let scenario = ShardScenario::new(vec![pool(3, 2.5), pool(3, 2.5)], streams)
+            .with_gossip(10.0)
+            .with_epochs(8)
+            .with_seed(3);
+        let report = run_sharded(&scenario);
+        assert_eq!(report.migrations, 0);
+        assert_eq!(report.orphan_count(), 0);
+        assert!((report.initial_committed[0] - 6.0).abs() < 1e-9, "{:?}", report.initial_committed);
+        assert!((report.initial_committed[1] - 4.0).abs() < 1e-9);
+        for s in &report.streams {
+            assert_eq!(s.frames_total, (s.demand * 40.0) as u64, "stream {}", s.name);
+            assert!(
+                s.frames_processed as f64 > 0.9 * s.frames_total as f64,
+                "stream {} processed {}/{}",
+                s.name,
+                s.frames_processed,
+                s.frames_total
+            );
+        }
+        // Every placement crossed the wire: one attach event per stream.
+        let attaches = report
+            .control_log
+            .iter()
+            .filter(|c| {
+                matches!(
+                    c.event.as_action(),
+                    Some(ControlAction::AttachStream(_))
+                )
+            })
+            .count();
+        assert_eq!(attaches, 4);
+    }
+
+    #[test]
+    fn overloaded_shard_sheds_streams_via_migration() {
+        // Round-robin parks both heavy streams wherever the index falls;
+        // with demands [6, 2, 6, 2] over 2 shards (capacity 14.25 each),
+        // RR puts 12 on shard 0 and 4 on shard 1 — in band, no moves.
+        // Force imbalance: demands [9, 1, 9, 1] → shard 0 carries 18.
+        let mut streams = Vec::new();
+        for (i, fps) in [9.0, 1.0, 9.0, 1.0].iter().enumerate() {
+            streams.push(StreamSpec::new(&format!("s{i}"), *fps, (*fps * 60.0) as u64).with_window(4));
+        }
+        let scenario = ShardScenario::new(vec![pool(6, 2.5), pool(6, 2.5)], streams)
+            .with_policy(PlacementPolicy::RoundRobin)
+            .with_gossip(10.0)
+            .with_epochs(8)
+            .with_seed(5);
+        let report = run_sharded(&scenario);
+        // RR initial split: shard 0 gets s0+s2 (18 > 14.25), shard 1 gets
+        // s1+s3 (2).
+        assert!((report.initial_imbalance() - 16.0).abs() < 1e-9, "{:?}", report.initial_committed);
+        // One 9-FPS stream migrates (18 → 9 ≤ 14.25; target 2 + 9 ≤ 14.25).
+        assert_eq!(report.migrations, 1, "control log: {:?}", report.control_log.len());
+        let migrated: Vec<&ShardStreamReport> =
+            report.streams.iter().filter(|s| s.migrations > 0).collect();
+        assert_eq!(migrated.len(), 1);
+        assert_eq!(migrated[0].demand, 9.0);
+    }
+
+    #[test]
+    fn shard_loss_orphans_are_replaced_within_one_gossip_interval() {
+        // 3 shards × 3 streams; shard 0 dies at epoch 2. Its 3 streams
+        // must be back on surviving shards by the next gossip round.
+        let scenario = ShardScenario::new(
+            vec![pool(4, 2.5), pool(4, 2.5), pool(4, 2.5)],
+            uniform_streams(9, 2.5, 200, 4),
+        )
+        .with_gossip(10.0)
+        .with_epochs(10)
+        .with_seed(7)
+        .with_failure(2, 0);
+        let report = run_sharded(&scenario);
+        assert!(!report.shard_alive[0]);
+        assert_eq!(report.orphan_count(), 3);
+        assert!(
+            report.orphans_replaced_within(report.gossip_interval),
+            "worst gap {} vs interval {}",
+            report.worst_orphan_gap(),
+            report.gossip_interval
+        );
+        // Orphans end up resident on a survivor and keep processing.
+        for s in report.streams.iter().filter(|s| s.orphaned_for.is_some()) {
+            assert!(matches!(s.final_shard, Some(1) | Some(2)), "{:?}", s.final_shard);
+            assert!(s.frames_processed > 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let scenario = ShardScenario::new(
+            vec![pool(2, 2.5), pool(2, 2.5)],
+            uniform_streams(4, 5.0, 100, 4),
+        )
+        .with_gossip(5.0)
+        .with_epochs(8)
+        .with_seed(11);
+        let a = run_sharded(&scenario);
+        let b = run_sharded(&scenario);
+        assert_eq!(a.total_processed(), b.total_processed());
+        assert_eq!(a.control_log, b.control_log);
+    }
+
+    #[test]
+    fn report_json_reparses() {
+        let scenario = ShardScenario::new(
+            vec![pool(2, 2.5), pool(2, 2.5)],
+            uniform_streams(4, 2.5, 50, 4),
+        )
+        .with_gossip(10.0)
+        .with_epochs(4)
+        .with_seed(13);
+        let report = run_sharded(&scenario);
+        let j = report.to_json();
+        let back = Json::parse(&j.to_string()).expect("shard JSON must reparse");
+        assert_eq!(
+            back.get("policy").and_then(Json::as_str),
+            Some("least-loaded")
+        );
+        assert_eq!(
+            back.get("frames_total").and_then(Json::as_i64),
+            Some(report.total_frames() as i64)
+        );
+        let shards = back.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        let streams = back.get("streams").unwrap().as_arr().unwrap();
+        assert_eq!(streams.len(), 4);
+        // Tables render with one row per entity.
+        assert_eq!(report.stream_table().rows.len(), 4);
+        assert_eq!(report.shard_table().rows.len(), 2);
+    }
+}

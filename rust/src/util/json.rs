@@ -88,7 +88,13 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting one would
+                    // break the encode→parse round trip, so non-finite
+                    // numbers serialise as null (wire consumers treat the
+                    // field as absent).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{}", n));
@@ -121,6 +127,10 @@ impl Json {
     }
 }
 
+/// Escape a string per RFC 8259 §7: `"` and `\` escaped, **every**
+/// control character U+0000–U+001F escaped (short escapes where they
+/// exist, `\u00XX` otherwise) — the wire format depends on arbitrary
+/// strings surviving encode→parse (see the round-trip property tests).
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -130,6 +140,8 @@ fn write_escaped(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
             c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
             c => out.push(c),
         }
@@ -392,6 +404,109 @@ mod tests {
     fn writes_integers_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialise_as_null() {
+        // JSON has no NaN/Infinity literal: emitting one would break the
+        // encode→parse guarantee the wire format depends on.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let v = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN)]);
+        assert_eq!(Json::parse(&v.to_string()).unwrap().as_arr().unwrap()[1], Json::Null);
+    }
+
+    #[test]
+    fn every_control_character_escapes_and_roundtrips() {
+        // All of U+0000..=U+001F, plus the quoted/escaped specials.
+        let mut s = String::new();
+        for cp in 0u32..0x20 {
+            s.push(char::from_u32(cp).unwrap());
+        }
+        s.push('"');
+        s.push('\\');
+        s.push('é');
+        let v = Json::Str(s.clone());
+        let text = v.to_string();
+        // The encoded form is pure ASCII up to the explicit unicode tail
+        // and contains no raw control bytes.
+        assert!(!text.bytes().any(|b| b < 0x20), "raw control byte in {text:?}");
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.as_str(), Some(s.as_str()));
+    }
+
+    fn random_string(rng: &mut crate::util::Rng) -> String {
+        let len = rng.below(12) as usize;
+        let mut s = String::new();
+        for _ in 0..len {
+            match rng.below(5) {
+                // Control characters (the hardening target).
+                0 => s.push(char::from_u32(rng.below(0x20) as u32).unwrap()),
+                // The escape-relevant specials.
+                1 => s.push(*rng.choose(&['"', '\\', '/', '\n', '\t', '\r'])),
+                // Plain ASCII.
+                2 | 3 => s.push((b'a' + rng.below(26) as u8) as char),
+                // Multi-byte unicode.
+                _ => s.push(*rng.choose(&['é', '→', '🚀', 'λ', '中'])),
+            }
+        }
+        s
+    }
+
+    fn random_value(rng: &mut crate::util::Rng, depth: usize) -> Json {
+        let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => {
+                // Finite numbers only: ±1e12 with fractional part.
+                let n = rng.range(-1e12, 1e12);
+                Json::Num(if rng.chance(0.3) { n.trunc() } else { n })
+            }
+            3 => Json::Str(random_string(rng)),
+            4 => {
+                let n = rng.below(4) as usize;
+                Json::Arr((0..n).map(|_| random_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(4) as usize;
+                let mut o = BTreeMap::new();
+                for _ in 0..n {
+                    o.insert(random_string(rng), random_value(rng, depth - 1));
+                }
+                Json::Obj(o)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_strings_roundtrip_through_encode_parse() {
+        use crate::util::prop::{check, Config};
+        check("json string round-trip", Config::default(), |rng| {
+            let s = random_string(rng);
+            let text = Json::Str(s.clone()).to_string();
+            match Json::parse(&text) {
+                Ok(Json::Str(back)) if back == s => Ok(()),
+                Ok(other) => Err(format!("{s:?} -> {text} -> {other:?}")),
+                Err(e) => Err(format!("{s:?} -> {text} failed to parse: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_values_roundtrip_through_encode_parse() {
+        use crate::util::prop::{check, Config};
+        check("json value round-trip", Config::default(), |rng| {
+            let v = random_value(rng, 3);
+            let text = v.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("{text}: {e}"))?;
+            if back == v {
+                Ok(())
+            } else {
+                Err(format!("{v:?} -> {text} -> {back:?}"))
+            }
+        });
     }
 
     #[test]

@@ -194,3 +194,54 @@ fn prop_record_conservation_across_random_scenarios() {
         },
     );
 }
+
+/// Schema lock: `FleetReport::to_json` output parses back through
+/// `util::json` and the key fields — per-stream p99, drop rate, Jain
+/// fairness — survive the round trip exactly. Guards the machine-
+/// readable surface that sweep bundles and `eva fleet --json` publish.
+#[test]
+fn fleet_report_json_schema_locks_key_fields() {
+    use eva::util::json::Json;
+
+    // A run with real contention so drop rates and latencies are
+    // non-trivial: 6 × 5-FPS streams against Σμ = 10.
+    let scenario = Scenario::new(
+        devices(&[2.5, 2.5, 2.5, 2.5]),
+        uniform_streams(6, 5.0, 200, 4),
+    )
+    .with_seed(71);
+    let mut report = run_fleet(&scenario);
+
+    // Ground truth from the in-memory report (percentile queries sort
+    // lazily, hence the mutable pass first).
+    let expected: Vec<(String, f64, f64)> = report
+        .streams
+        .iter_mut()
+        .map(|s| (s.name.clone(), s.metrics.latency.p99(), s.metrics.drop_rate()))
+        .collect();
+    let expected_fairness = report.fairness();
+    let expected_drop = report.drop_rate();
+
+    let text = report.to_json().to_string();
+    let back = Json::parse(&text).expect("report JSON must reparse");
+
+    let fairness = back.get("fairness").and_then(Json::as_f64).expect("fairness");
+    assert!((fairness - expected_fairness).abs() < 1e-9, "fairness {fairness}");
+    let drop = back.get("drop_rate").and_then(Json::as_f64).expect("drop_rate");
+    assert!((drop - expected_drop).abs() < 1e-9, "drop {drop}");
+
+    let streams = back.get("streams").and_then(Json::as_arr).expect("streams");
+    assert_eq!(streams.len(), expected.len());
+    for (j, (name, p99, drop_rate)) in streams.iter().zip(&expected) {
+        assert_eq!(j.get("name").and_then(Json::as_str), Some(name.as_str()));
+        let jp99 = j.get("p99_latency").and_then(Json::as_f64).expect("p99_latency");
+        assert!((jp99 - p99).abs() < 1e-9, "{name}: p99 {jp99} vs {p99}");
+        let jdrop = j.get("drop_rate").and_then(Json::as_f64).expect("drop_rate");
+        assert!((jdrop - drop_rate).abs() < 1e-9, "{name}: drop {jdrop} vs {drop_rate}");
+        // The decision / rung / stride triple is also part of the locked
+        // schema (the autoscale bundles read it).
+        assert!(j.get("decision").and_then(Json::as_str).is_some());
+        assert!(j.get("rung").and_then(Json::as_i64).is_some());
+        assert!(j.get("stride").and_then(Json::as_i64).is_some());
+    }
+}

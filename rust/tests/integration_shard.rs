@@ -1,0 +1,208 @@
+//! Integration tests for the serialisable control plane and the shard
+//! subsystem: wire round-trip of every control action in a real
+//! controlled run, log replay identity, detach-re-levelling driven by a
+//! decoded wire event, sharded-vs-single parity, and shard-loss
+//! re-placement.
+
+use eva::autoscale::{AutoscaleConfig, AutoscaleController};
+use eva::control::{ControlAction, ControlEvent, ControlOrigin, EventLog, WireEvent};
+use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use eva::fleet::{run_fleet, run_fleet_with, AdmissionPolicy, Decision, Scenario, StreamSpec};
+use eva::shard::{run_sharded, PlacementPolicy, ShardScenario};
+
+fn devices(rates: &[f64]) -> Vec<DeviceInstance> {
+    rates
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r))
+        .collect()
+}
+
+fn pool(n: usize, rate: f64) -> Vec<DeviceInstance> {
+    devices(&vec![rate; n])
+}
+
+fn uniform_streams(n: usize, fps: f64, frames: u64, window: usize) -> Vec<StreamSpec> {
+    (0..n)
+        .map(|i| StreamSpec::new(&format!("s{i}"), fps, frames).with_window(window))
+        .collect()
+}
+
+/// Acceptance: every control action in a controlled sim run round-trips
+/// through `control::WireEvent` encode→decode, and replaying the decoded
+/// log as scripted events reproduces an identical event log.
+#[test]
+fn controlled_run_control_log_roundtrips_and_replays_identically() {
+    // Under-provisioned load so the autoscale controller emits real
+    // actions (device attaches) on top of scripted membership changes.
+    let cfg = AutoscaleConfig {
+        max_devices: 8,
+        ..AutoscaleConfig::default()
+    };
+    let scenario = Scenario::new(pool(2, 2.5), uniform_streams(4, 5.0, 300, 4))
+        .with_admission(cfg.admission())
+        .with_seed(41);
+    let mut controller = AutoscaleController::new(cfg);
+    let out = run_fleet_with(&scenario, Some(&mut controller));
+    assert!(
+        !out.control_log.is_empty(),
+        "expected controller actions under 2x overload"
+    );
+
+    // Encode→decode the full log: identical events, byte-for-byte
+    // reparseable JSON.
+    let log = out.wire_log();
+    assert_eq!(log.len(), out.control_log.len());
+    let decoded = EventLog::decode(&log.encode()).expect("wire log decodes");
+    assert_eq!(decoded, log, "decoded wire log differs from the original");
+
+    // Replay: the decoded actions, scheduled as scripted events at their
+    // recorded times, must be applied at exactly those times — the
+    // replayed run's event log is identical (times, actions, order).
+    let replay_scenario = Scenario::new(pool(2, 2.5), uniform_streams(4, 5.0, 300, 4))
+        .with_admission(scenario.admission.clone())
+        .with_seed(41)
+        .with_events(decoded.scripted_events());
+    let replayed = run_fleet_with(&replay_scenario, None);
+    assert_eq!(replayed.control_log.len(), out.control_log.len());
+    for (a, b) in replayed.control_log.iter().zip(&out.control_log) {
+        assert_eq!(a.at, b.at, "replayed event time drifted");
+        assert_eq!(a.action, b.action, "replayed action differs");
+        // Replayed events are scripted by construction.
+        assert_eq!(a.origin, ControlOrigin::Scripted);
+    }
+    // And the replay reaches the same capacity end-state (same attaches
+    // applied at the same virtual times).
+    assert_eq!(
+        replayed.report.device_labels.len(),
+        out.report.device_labels.len()
+    );
+}
+
+/// Satellite regression: admission re-levelling on stream detach still
+/// restores the survivors when the detach arrives as a decoded
+/// `WireEvent` rather than a direct registry call.
+#[test]
+fn detach_as_decoded_wire_event_restores_survivor_admission() {
+    // Pool capacity 7.125: two 5-FPS streams start degraded (share
+    // 3.5625 → stride 2). Stream 0's detach arrives over the wire.
+    let detach = WireEvent::action(
+        20.0,
+        ControlOrigin::Placement,
+        ControlAction::DetachStream(0),
+    );
+    let json = detach.encode();
+    let decoded = WireEvent::decode(&json).expect("detach event decodes");
+    let action = decoded.as_action().expect("action payload").clone();
+    let events = vec![ControlEvent {
+        at: decoded.at,
+        action,
+    }];
+
+    let scenario = Scenario::new(pool(3, 2.5), uniform_streams(2, 5.0, 300, 4))
+        .with_seed(43)
+        .with_events(events);
+    let report = run_fleet(&scenario);
+    let survivor = &report.streams[1];
+    assert!(
+        matches!(survivor.decision, Decision::Admit { .. }),
+        "survivor not restored after wire-decoded detach: {:?}",
+        survivor.decision
+    );
+    // Restored at full rate for 2/3 of its life: processes far more than
+    // the degraded half share would allow.
+    assert!(
+        survivor.metrics.frames_processed > 180,
+        "survivor processed {}",
+        survivor.metrics.frames_processed
+    );
+    // The detached stream's record log stops near the detach point.
+    assert!(report.streams[0].records.len() < 150);
+}
+
+/// Acceptance: a 2-shard balanced split matches the single pool's
+/// delivered FPS within 5% at equal capacity.
+#[test]
+fn two_shard_split_matches_single_pool_within_5_percent() {
+    let mk = |shards: usize| {
+        let per = 8 / shards;
+        let pools: Vec<Vec<DeviceInstance>> = (0..shards).map(|_| pool(per, 2.5)).collect();
+        let scenario = ShardScenario::new(pools, uniform_streams(8, 10.0, 300, 4))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_gossip(10.0)
+            .with_epochs(5)
+            .with_seed(47);
+        run_sharded(&scenario)
+    };
+    let single = mk(1);
+    let two = mk(2);
+    let ratio = two.delivered_fps() / single.delivered_fps();
+    assert!(
+        (ratio - 1.0).abs() < 0.05,
+        "2-shard σ {:.2} vs single {:.2} (ratio {ratio:.3})",
+        two.delivered_fps(),
+        single.delivered_fps()
+    );
+    // Same accounting window in both runs.
+    assert_eq!(single.epochs_run, two.epochs_run);
+}
+
+/// Acceptance: shard loss re-places every orphaned stream on surviving
+/// shards within one gossip interval.
+#[test]
+fn shard_loss_replaces_all_orphans_within_one_gossip_interval() {
+    let scenario = ShardScenario::new(
+        vec![pool(4, 2.5), pool(4, 2.5), pool(4, 2.5)],
+        uniform_streams(9, 2.5, 200, 4),
+    )
+    .with_gossip(10.0)
+    .with_epochs(10)
+    .with_seed(53)
+    .with_failure(3, 1);
+    let report = run_sharded(&scenario);
+    assert!(!report.shard_alive[1]);
+    assert_eq!(report.orphan_count(), 3);
+    assert!(
+        report.orphans_replaced_within(report.gossip_interval),
+        "worst orphan gap {:.1}s vs gossip interval {:.1}s",
+        report.worst_orphan_gap(),
+        report.gossip_interval
+    );
+    for s in &report.streams {
+        if s.orphaned_for.is_some() {
+            assert!(
+                matches!(s.final_shard, Some(0) | Some(2)),
+                "orphan {} ended on {:?}",
+                s.name,
+                s.final_shard
+            );
+            assert!(s.frames_processed > 0, "orphan {} never served", s.name);
+        }
+    }
+}
+
+/// Every control event a sharded run routes is the *decoded* form of
+/// its JSON encoding, and the whole log survives another wire hop.
+#[test]
+fn shard_control_log_is_wire_clean() {
+    let scenario = ShardScenario::new(
+        vec![pool(2, 2.5), pool(2, 2.5)],
+        uniform_streams(4, 2.5, 100, 4),
+    )
+    .with_policy(PlacementPolicy::RoundRobin)
+    .with_gossip(10.0)
+    .with_epochs(6)
+    .with_seed(59);
+    let report = run_sharded(&scenario);
+    assert!(!report.control_log.is_empty());
+    let mut log = EventLog::new();
+    for c in &report.control_log {
+        // Each routed event re-encodes and decodes to itself.
+        let again = WireEvent::decode(&c.event.encode()).expect("event re-decodes");
+        assert_eq!(again, c.event);
+        assert_eq!(c.event.origin, ControlOrigin::Placement);
+        log.push(c.event.clone());
+    }
+    let decoded = EventLog::decode(&log.encode()).expect("log decodes");
+    assert_eq!(decoded, log);
+}
