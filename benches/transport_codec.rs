@@ -1,0 +1,122 @@
+//! Transport bench: frame-codec cost and the socket co-simulation's
+//! parity shape.
+//!
+//! Asserts the acceptance shapes first (split frames reassemble exactly;
+//! a 2-shard loopback TCP run matches the in-process co-simulation
+//! within 5%), then measures what the cross-host seam costs: whole
+//! frames encoded+decoded per second, the same through a split-read
+//! decoder (the worst case a stream socket produces), and one full
+//! remote co-simulation against its in-process twin.
+
+use eva::control::{ControlAction, ControlOrigin, WireEvent};
+use eva::experiments::transport::loopback_parity;
+use eva::fleet::StreamSpec;
+use eva::transport::{encode_frame, FrameDecoder, TransportMsg};
+use eva::util::benchkit::{black_box, Bench};
+
+fn attach_msg(i: u64) -> TransportMsg {
+    TransportMsg::Control(WireEvent::action(
+        i as f64,
+        ControlOrigin::Placement,
+        ControlAction::AttachStream(
+            StreamSpec::new(&format!("bench-stream-{i}"), 12.5, 3_000).with_window(8),
+        ),
+    ))
+}
+
+fn main() {
+    let mut bench = Bench::new(1, 3);
+
+    // Shape: a frame split across pathological read sizes reassembles
+    // into exactly the encoded message sequence.
+    let msgs: Vec<TransportMsg> = (0..5).map(attach_msg).collect();
+    let mut stream = Vec::new();
+    for m in &msgs {
+        stream.extend_from_slice(&encode_frame(m).expect("encode"));
+    }
+    let mut dec = FrameDecoder::new();
+    let mut out = Vec::new();
+    for chunk in stream.chunks(7) {
+        dec.feed(chunk);
+        while let Some(m) = dec.try_next().expect("decode") {
+            out.push(m);
+        }
+    }
+    assert_eq!(out, msgs, "split-read reassembly must be lossless");
+    println!("shape OK: frames survive 7-byte split reads losslessly");
+
+    // Shape + cost: the parity sweep (in-process, TCP, UDS).
+    let (table, outcomes) = loopback_parity(41);
+    print!("{}", table.render());
+    for o in &outcomes[1..] {
+        assert!(
+            (o.vs_inproc - 1.0).abs() < 0.05,
+            "{}: {:.3}× in-process",
+            o.transport,
+            o.vs_inproc
+        );
+    }
+    println!("shape OK: loopback transports within 5% of the in-process co-sim");
+
+    // Frame codec, whole-buffer decode.
+    bench.run("frame: encode+decode 1k attach frames", Some(1000.0), || {
+        let mut bytes = 0usize;
+        let mut dec = FrameDecoder::new();
+        for i in 0..1000u64 {
+            let frame = encode_frame(&attach_msg(i)).expect("encode");
+            bytes += frame.len();
+            dec.feed(&frame);
+            let msg = dec.try_next().expect("decode").expect("complete frame");
+            black_box(msg);
+        }
+        bytes as u64
+    });
+
+    // Frame codec under split reads (64-byte chunks — a pessimistic
+    // socket read size).
+    let mut big = Vec::new();
+    for i in 0..1000u64 {
+        big.extend_from_slice(&encode_frame(&attach_msg(i)).expect("encode"));
+    }
+    bench.run("frame: decode 1k frames from 64-byte reads", Some(1000.0), || {
+        let mut dec = FrameDecoder::new();
+        let mut n = 0u64;
+        for chunk in big.chunks(64) {
+            dec.feed(chunk);
+            while let Some(m) = dec.try_next().expect("decode") {
+                black_box(m);
+                n += 1;
+            }
+        }
+        assert_eq!(n, 1000);
+        n
+    });
+
+    // One full remote co-simulation (what a transport sweep cell pays,
+    // dominated by socket round trips per gossip epoch).
+    let streams: Vec<StreamSpec> = (0..8)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 10.0, 300).with_window(4))
+        .collect();
+    let pool = |n: usize| -> Vec<eva::device::DeviceInstance> {
+        (0..n)
+            .map(|i| {
+                eva::device::DeviceInstance::with_rate(
+                    eva::device::DeviceKind::Ncs2,
+                    eva::device::DetectorModelId::Yolov3,
+                    i,
+                    2.5,
+                )
+            })
+            .collect()
+    };
+    let scenario = eva::shard::ShardScenario::new(vec![pool(4), pool(4)], streams)
+        .with_admission(eva::fleet::AdmissionPolicy::admit_all())
+        .with_gossip(10.0)
+        .with_epochs(5)
+        .with_seed(43);
+    bench.run("co-sim: 8 streams × 2 shards over loopback TCP", Some(8.0 * 300.0), || {
+        let report = eva::shard::run_sharded_remote(&scenario, eva::shard::RemoteTransport::Tcp)
+            .expect("remote co-sim");
+        black_box(report.delivered_fps().to_bits())
+    });
+}

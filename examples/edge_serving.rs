@@ -44,8 +44,21 @@ fn main() -> Result<()> {
     let throttle_ms: u64 = env_or("EVA_THROTTLE_MS", 150);
 
     let dir = PathBuf::from(env_or("EVA_ARTIFACTS", "artifacts".to_string()));
+    // Missing artifacts is a skip, not a failure: the PJRT paths need
+    // `make artifacts` (python + real xla), which CI and the offline
+    // build containers don't have — same convention as the PJRT tests.
+    // A manifest that exists but fails to load is a real error: a broken
+    // artifact pipeline must not be green-lit as "skipped".
+    if !dir.join("manifest.json").exists() {
+        println!(
+            "skipping edge_serving: no manifest at {}",
+            dir.join("manifest.json").display()
+        );
+        println!("hint: run `make artifacts` first to exercise the PJRT path");
+        return Ok(());
+    }
     let manifest = load_manifest(&dir)
-        .map_err(|e| anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| anyhow!("{e}\nhint: re-run `make artifacts`; the manifest is unreadable"))?;
     let meta = manifest
         .get(&model)
         .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?

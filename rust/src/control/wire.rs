@@ -202,13 +202,13 @@ impl WireEvent {
 
 // ---- field helpers -----------------------------------------------------
 
-fn req_f64(v: &Json, key: &str) -> Result<f64, WireError> {
+pub(crate) fn req_f64(v: &Json, key: &str) -> Result<f64, WireError> {
     v.get(key)
         .and_then(Json::as_f64)
         .ok_or_else(|| WireError::missing(key))
 }
 
-fn req_u64(v: &Json, key: &str) -> Result<u64, WireError> {
+pub(crate) fn req_u64(v: &Json, key: &str) -> Result<u64, WireError> {
     let n = req_f64(v, key)?;
     if n < 0.0 || n.fract() != 0.0 {
         return Err(WireError::new(format!(
@@ -218,11 +218,11 @@ fn req_u64(v: &Json, key: &str) -> Result<u64, WireError> {
     Ok(n as u64)
 }
 
-fn req_usize(v: &Json, key: &str) -> Result<usize, WireError> {
+pub(crate) fn req_usize(v: &Json, key: &str) -> Result<usize, WireError> {
     Ok(req_u64(v, key)? as usize)
 }
 
-fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, WireError> {
+pub(crate) fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, WireError> {
     v.get(key)
         .and_then(Json::as_str)
         .ok_or_else(|| WireError::missing(key))

@@ -17,5 +17,6 @@ pub mod energy;
 pub mod dropping;
 pub mod fleet;
 pub mod shard;
+pub mod transport;
 
 pub use common::{online_map, saturated_fps, zero_drop_baseline, CellOutcome};

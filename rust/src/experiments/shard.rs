@@ -208,6 +208,27 @@ pub fn shard_failure(seed: u64) -> (Table, FailoverOutcome) {
     (t, outcome)
 }
 
+/// Build the one-off CLI scenario shared by [`custom_run`] and
+/// [`custom_run_remote`]: enough epochs to play the longest stream out,
+/// plus one slack round.
+fn custom_scenario(
+    shards: Vec<Vec<DeviceInstance>>,
+    streams: Vec<StreamSpec>,
+    policy: PlacementPolicy,
+    admission: AdmissionPolicy,
+    gossip: f64,
+    seed: u64,
+) -> ShardScenario {
+    let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
+    let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
+    ShardScenario::new(shards, streams)
+        .with_policy(policy)
+        .with_admission(admission)
+        .with_gossip(gossip)
+        .with_epochs(epochs)
+        .with_seed(seed)
+}
+
 /// A one-off sharded run from CLI parameters (the `eva shard
 /// --scenario run` path).
 pub fn custom_run(
@@ -218,16 +239,26 @@ pub fn custom_run(
     gossip: f64,
     seed: u64,
 ) -> ShardReport {
-    // Enough epochs to play the longest stream out, plus one slack round.
-    let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
-    let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
-    let scenario = ShardScenario::new(shards, streams)
-        .with_policy(policy)
-        .with_admission(admission)
-        .with_gossip(gossip)
-        .with_epochs(epochs)
-        .with_seed(seed);
-    run_sharded(&scenario)
+    run_sharded(&custom_scenario(shards, streams, policy, admission, gossip, seed))
+}
+
+/// [`custom_run`] with every shard behind a real loopback socket (the
+/// `eva shard --scenario run --transport tcp|uds` path): same epoch
+/// budget, but the co-simulation crosses [`crate::transport`] frames.
+#[allow(clippy::too_many_arguments)]
+pub fn custom_run_remote(
+    shards: Vec<Vec<DeviceInstance>>,
+    streams: Vec<StreamSpec>,
+    policy: PlacementPolicy,
+    admission: AdmissionPolicy,
+    gossip: f64,
+    seed: u64,
+    transport: crate::shard::remote::RemoteTransport,
+) -> anyhow::Result<ShardReport> {
+    crate::shard::remote::run_sharded_remote(
+        &custom_scenario(shards, streams, policy, admission, gossip, seed),
+        transport,
+    )
 }
 
 /// Machine-readable sweep results (the `--json` surface of `eva shard`);

@@ -1,0 +1,238 @@
+//! Transport sweeps: the cross-host co-simulation against its
+//! in-process twin (see EXPERIMENTS.md §Transport for the measured
+//! numbers).
+//!
+//! * [`loopback_parity`] — the acceptance sweep: the same 2-shard
+//!   balanced scenario run in-process, over loopback TCP, and over
+//!   Unix-domain sockets. The remote coordinator mirrors the in-process
+//!   epoch arithmetic and seeds, so delivered FPS must land within 5%
+//!   (in practice it is exact on failure-free runs — the transport adds
+//!   wall-clock cost, not virtual-time cost).
+//! * [`connection_loss`] — a shard's socket dies mid-run (no goodbye):
+//!   peer loss surfaces as shard loss, and every orphaned stream is
+//!   re-placed on the survivors within one gossip interval.
+
+use std::collections::BTreeMap;
+
+use crate::experiments::fleet::pool_of;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::stream::StreamSpec;
+use crate::shard::remote::{run_sharded_remote, RemoteTransport};
+use crate::shard::sim::{run_sharded, ShardScenario};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+/// One transport's outcome on the parity scenario.
+#[derive(Debug, Clone)]
+pub struct ParityOutcome {
+    /// "inproc", "tcp" or "uds".
+    pub transport: &'static str,
+    pub delivered_fps: f64,
+    pub drop_rate: f64,
+    /// Delivered FPS relative to the in-process co-simulation.
+    pub vs_inproc: f64,
+    /// Control events routed (all of them crossed the wire for the
+    /// socket transports).
+    pub control_events: usize,
+}
+
+/// The shared parity scenario: 8 × 10-FPS streams saturating 2 shards ×
+/// 4 × 2.5-FPS devices (Σμ = 20), least-loaded placement, 5 gossip
+/// epochs of 10 s.
+fn parity_scenario(seed: u64) -> ShardScenario {
+    let streams: Vec<StreamSpec> = (0..8)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 10.0, 300).with_window(4))
+        .collect();
+    ShardScenario::new(vec![pool_of(4, 2.5), pool_of(4, 2.5)], streams)
+        .with_admission(AdmissionPolicy::admit_all())
+        .with_gossip(10.0)
+        .with_epochs(5)
+        .with_seed(seed)
+}
+
+/// Parity sweep: in-process vs loopback TCP vs Unix-domain sockets on
+/// the same 2-shard scenario.
+pub fn loopback_parity(seed: u64) -> (Table, Vec<ParityOutcome>) {
+    let mut t = Table::new(
+        "Transport parity (8 × 10-FPS streams over 2 shards, Σμ = 20)",
+        &["transport", "delivered σ", "vs in-process", "drop %", "control events"],
+    );
+    let scenario = parity_scenario(seed);
+    let inproc = run_sharded(&scenario);
+    let mut outcomes = Vec::new();
+    let baseline = inproc.delivered_fps();
+    for (transport, report) in [
+        ("inproc", inproc),
+        (
+            "tcp",
+            run_sharded_remote(&scenario, RemoteTransport::Tcp)
+                .expect("loopback TCP co-simulation"),
+        ),
+        (
+            "uds",
+            run_sharded_remote(&scenario, RemoteTransport::Uds)
+                .expect("Unix-socket co-simulation"),
+        ),
+    ] {
+        let outcome = ParityOutcome {
+            transport,
+            delivered_fps: report.delivered_fps(),
+            drop_rate: report.drop_rate(),
+            vs_inproc: report.delivered_fps() / baseline.max(1e-9),
+            control_events: report.control_log.len(),
+        };
+        t.row(vec![
+            outcome.transport.to_string(),
+            f(outcome.delivered_fps, 2),
+            f(outcome.vs_inproc, 3),
+            f(outcome.drop_rate * 100.0, 1),
+            format!("{}", outcome.control_events),
+        ]);
+        outcomes.push(outcome);
+    }
+    (t, outcomes)
+}
+
+/// Connection-loss outcome over loopback TCP.
+#[derive(Debug, Clone)]
+pub struct LossOutcome {
+    pub orphans: usize,
+    pub replaced_within_interval: bool,
+    pub worst_gap: f64,
+    pub delivered_fps: f64,
+    pub drop_rate: f64,
+    pub shards_alive: usize,
+}
+
+/// A shard's connection dies mid-run (scripted drop, no goodbye): 9 ×
+/// 2.5-FPS streams on 3 shards over loopback TCP; shard 0's socket
+/// drops at epoch 2. Its three residents must be re-placed on the
+/// survivors within one gossip interval.
+pub fn connection_loss(seed: u64) -> (Table, LossOutcome) {
+    let streams: Vec<StreamSpec> = (0..9)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 200).with_window(4))
+        .collect();
+    let scenario = ShardScenario::new(
+        vec![pool_of(4, 2.5), pool_of(4, 2.5), pool_of(4, 2.5)],
+        streams,
+    )
+    .with_gossip(10.0)
+    .with_epochs(10)
+    .with_seed(seed)
+    .with_failure(2, 0);
+    let report = run_sharded_remote(&scenario, RemoteTransport::Tcp)
+        .expect("loopback TCP co-simulation");
+    let outcome = LossOutcome {
+        orphans: report.orphan_count(),
+        replaced_within_interval: report.orphans_replaced_within(report.gossip_interval),
+        worst_gap: report.worst_orphan_gap(),
+        delivered_fps: report.delivered_fps(),
+        drop_rate: report.drop_rate(),
+        shards_alive: report.shard_alive.iter().filter(|&&a| a).count(),
+    };
+    let mut t = Table::new(
+        "Connection loss over TCP (1 of 3 shard sockets dies at epoch 2)",
+        &["orphans", "re-placed ≤ 1 interval", "worst gap (s)", "delivered σ", "drop %", "shards alive"],
+    );
+    t.row(vec![
+        format!("{}", outcome.orphans),
+        if outcome.replaced_within_interval { "yes" } else { "no" }.to_string(),
+        f(outcome.worst_gap, 1),
+        f(outcome.delivered_fps, 2),
+        f(outcome.drop_rate * 100.0, 1),
+        format!("{}", outcome.shards_alive),
+    ]);
+    (t, outcome)
+}
+
+/// Machine-readable sweep results (the `eva shard --scenario transport
+/// --json` surface); `None` for an unknown scenario name.
+pub fn transport_json(seed: u64, scenario: &str) -> Option<Json> {
+    if !matches!(scenario, "parity" | "loss" | "all") {
+        return None;
+    }
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+    if matches!(scenario, "parity" | "all") {
+        let (_, parity) = loopback_parity(seed);
+        let rows: Vec<Json> = parity
+            .iter()
+            .map(|o| {
+                let mut m = BTreeMap::new();
+                m.insert("transport".into(), Json::Str(o.transport.to_string()));
+                m.insert("delivered_fps".into(), Json::Num(o.delivered_fps));
+                m.insert("vs_inproc".into(), Json::Num(o.vs_inproc));
+                m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+                m.insert(
+                    "control_events".into(),
+                    Json::Num(o.control_events as f64),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("loopback_parity".into(), Json::Arr(rows));
+    }
+    if matches!(scenario, "loss" | "all") {
+        let (_, o) = connection_loss(seed);
+        let mut m = BTreeMap::new();
+        m.insert("orphans".into(), Json::Num(o.orphans as f64));
+        m.insert(
+            "replaced_within_interval".into(),
+            Json::Bool(o.replaced_within_interval),
+        );
+        m.insert("worst_gap".into(), Json::Num(o.worst_gap));
+        m.insert("delivered_fps".into(), Json::Num(o.delivered_fps));
+        m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+        m.insert("shards_alive".into(), Json::Num(o.shards_alive as f64));
+        root.insert("connection_loss".into(), Json::Obj(m));
+    }
+    Some(Json::Obj(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_transports_match_inproc_within_5_percent() {
+        // The acceptance criterion: a 2-shard run over loopback TCP (and
+        // UDS) matches the in-process co-simulation's delivered FPS
+        // within 5% at equal capacity.
+        let (_, outcomes) = loopback_parity(73);
+        assert_eq!(outcomes[0].transport, "inproc");
+        for o in &outcomes[1..] {
+            assert!(
+                (o.vs_inproc - 1.0).abs() < 0.05,
+                "{}: σ {:.2} is {:.3}× in-process",
+                o.transport,
+                o.delivered_fps,
+                o.vs_inproc
+            );
+            assert!(o.control_events >= 8, "{}: {} events", o.transport, o.control_events);
+        }
+    }
+
+    #[test]
+    fn connection_loss_replaces_orphans_within_one_interval() {
+        // The acceptance criterion: killing one shard's connection
+        // re-places all its orphaned streams within one gossip interval.
+        let (_, o) = connection_loss(79);
+        assert_eq!(o.orphans, 3, "{o:?}");
+        assert!(o.replaced_within_interval, "{o:?}");
+        assert!(o.worst_gap <= 10.0 + 1e-9, "{o:?}");
+        assert_eq!(o.shards_alive, 2);
+    }
+
+    #[test]
+    fn json_bundle_reparses_and_respects_scenario_selection() {
+        let j = transport_json(5, "parity").expect("known scenario");
+        let back = Json::parse(&j.to_string()).expect("transport JSON must reparse");
+        assert_eq!(back.get("seed").and_then(Json::as_i64), Some(5));
+        assert_eq!(
+            back.get("loopback_parity").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert!(back.get("connection_loss").is_none());
+        assert!(transport_json(5, "bogus").is_none());
+    }
+}

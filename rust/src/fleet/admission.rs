@@ -54,7 +54,7 @@ pub enum DegradeMode {
 }
 
 /// Admission policy parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AdmissionPolicy {
     /// Fraction of the pool rate Σμᵢ the admitted load may claim
     /// (headroom below 1.0 absorbs service-time jitter).

@@ -44,6 +44,14 @@
 //!   periodic capacity gossip exchanges per-shard headroom (the §III-B
 //!   Σμ-vs-Σλ band) and drives stream migration — and shard-loss
 //!   re-placement — via serialised detach→attach control events.
+//!   `shard::remote` runs the same co-simulation with every fleet
+//!   instance behind a real socket; a dropped connection is shard loss.
+//! * [`transport`] — the cross-host seam under all of it: a
+//!   length-prefixed, versioned frame codec for `WireEvent` traffic
+//!   over blocking TCP / Unix-domain sockets (split frames, oversized
+//!   lengths, version mismatch and peer loss handled explicitly), a
+//!   dial-with-backoff client, and a remote `fleet::serve` consumer
+//!   driven by a decoded `EventLog` stream instead of in-process calls.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
 //!   bench binaries and the CLI.
 
@@ -58,6 +66,7 @@ pub mod coordinator;
 pub mod runtime;
 pub mod server;
 pub mod control;
+pub mod transport;
 pub mod fleet;
 pub mod autoscale;
 pub mod shard;

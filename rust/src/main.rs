@@ -5,7 +5,7 @@
 //!   offline    zero-drop offline detection (Figure 1a reference)
 //!   fleet      multi-stream serving over a shared device pool (virtual time)
 //!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
-//!   shard      stream sharding across fleet instances (split|skew|failure|run)
+//!   shard      stream sharding across fleet instances (split|skew|failure|run|transport)
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
 //!   nselect    recommend the parallel-detection parameter n (§III-B)
 //!   visualize  dump Figure 2/3-style PPM frames with box overlays
@@ -48,29 +48,56 @@ fn specs() -> Vec<Spec> {
         Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
-        Spec { name: "scenario", takes_value: true, help: "autoscale/shard: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|all|run)", default: Some("step") },
+        Spec { name: "scenario", takes_value: true, help: "autoscale/shard: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|all|run|transport)", default: Some("step") },
         Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard: emit machine-readable JSON instead of tables", default: None },
         Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
         Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
         Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
+        Spec { name: "transport", takes_value: true, help: "shard: control-plane transport for --scenario run (inproc|tcp|uds; sockets bind loopback)", default: Some("inproc") },
     ]
+}
+
+/// The one canonical subcommand list: the validity gate in `main`, the
+/// usage strings and `run`'s dispatch must never drift apart.
+const SUBCOMMANDS: [&str; 9] = [
+    "serve", "offline", "fleet", "autoscale", "shard", "table", "nselect", "visualize",
+    "inspect",
+];
+
+fn subcommand_list() -> String {
+    SUBCOMMANDS.join(" | ")
+}
+
+/// Exit 2 with a usage pointer: the command line itself is malformed
+/// (unknown subcommand/flag, stray positional), as opposed to a command
+/// that was understood but failed (exit 1).
+fn usage_error(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    eprintln!("usage: eva <subcommand> [options]  ({})", subcommand_list());
+    eprintln!("run `eva --help` for the full option list");
+    std::process::exit(2);
 }
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
         print!("{}", usage("eva", "parallel detection for edge video analytics", &specs()));
-        println!("\nsubcommands: serve | offline | fleet | autoscale | shard | table | nselect | visualize | inspect");
+        println!("\nsubcommands: {}", subcommand_list());
         return;
     }
     let cmd = raw[0].clone();
+    if !SUBCOMMANDS.contains(&cmd.as_str()) {
+        usage_error(&format!("unknown subcommand {cmd:?}"));
+    }
     let args = match Args::parse(&raw[1..], &specs()) {
         Ok(a) => a,
-        Err(e) => {
-            eprintln!("error: {e}");
-            std::process::exit(2);
-        }
+        Err(e) => usage_error(&e),
     };
+    // No subcommand takes positional arguments; a stray one is almost
+    // always a typo'd flag value and must not be silently ignored.
+    if let [stray, ..] = args.positional() {
+        usage_error(&format!("unexpected argument {stray:?}"));
+    }
     if let Err(e) = run(&cmd, &args) {
         eprintln!("error: {e}");
         std::process::exit(1);
@@ -186,10 +213,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 
     let offered = fps * streams as f64;
     let pool: f64 = rates.iter().sum();
-    println!(
-        "[fleet] {streams} streams × {fps} FPS (offered {offered:.1}) vs {} devices (Σμ {pool:.1}), seed {seed}",
-        rates.len()
-    );
+    // The banner stays off the --json path: stdout must be exactly one
+    // parseable document there (CI uploads it as BENCH_fleet.json).
+    if !args.flag("json") {
+        println!(
+            "[fleet] {streams} streams × {fps} FPS (offered {offered:.1}) vs {} devices (Σμ {pool:.1}), seed {seed}",
+            rates.len()
+        );
+    }
     let scenario = Scenario::new(devices, specs)
         .with_admission(admission)
         .with_seed(seed);
@@ -256,6 +287,12 @@ fn cmd_shard(args: &Args) -> Result<()> {
     if scenario == "step" {
         scenario = "all".to_string();
     }
+    // `--transport` only steers `--scenario run` (the sweeps fix their
+    // own transports); anything else would be silently ignored, and this
+    // PR's CLI contract is that nothing is.
+    if scenario != "run" && args.str_or("transport", "inproc") != "inproc" {
+        bail!("--transport applies only to --scenario run (the transport sweep runs all of them)");
+    }
 
     if scenario == "run" {
         // One-off run from CLI parameters: `--shards` pools of `--rates`
@@ -300,14 +337,31 @@ fn cmd_shard(args: &Args) -> Result<()> {
         let specs: Vec<StreamSpec> = (0..streams)
             .map(|s| StreamSpec::new(&format!("stream{s}"), fps, frames).with_window(window))
             .collect();
+        let transport = args.str_or("transport", "inproc");
         let offered = fps * streams as f64;
         let pool: f64 = rates.iter().sum::<f64>() * shards as f64;
-        println!(
-            "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, seed {seed}",
-            policy.label()
-        );
-        let report =
-            experiments::shard::custom_run(pools, specs, policy, admission, gossip, seed);
+        // The banner stays off the --json path: stdout must be exactly
+        // one parseable document there (CI uploads it as BENCH_shard.json).
+        if !args.flag("json") {
+            println!(
+                "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, transport {transport}, seed {seed}",
+                policy.label()
+            );
+        }
+        let report = match transport.as_str() {
+            "inproc" => experiments::shard::custom_run(pools, specs, policy, admission, gossip, seed),
+            "tcp" | "uds" => {
+                let remote = if transport == "tcp" {
+                    eva::shard::RemoteTransport::Tcp
+                } else {
+                    eva::shard::RemoteTransport::Uds
+                };
+                experiments::shard::custom_run_remote(
+                    pools, specs, policy, admission, gossip, seed, remote,
+                )?
+            }
+            other => bail!("unknown transport {other:?} (inproc|tcp|uds)"),
+        };
         if args.flag("json") {
             println!("{}", report.to_json().to_string());
             return Ok(());
@@ -324,9 +378,25 @@ fn cmd_shard(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    if scenario == "transport" {
+        // The cross-host sweeps: loopback-socket co-simulation vs the
+        // in-process twin, plus connection-loss recovery.
+        if args.flag("json") {
+            let json = experiments::transport::transport_json(seed, "all")
+                .expect("transport sweep bundle");
+            println!("{}", json.to_string());
+            return Ok(());
+        }
+        let (t1, _) = experiments::transport::loopback_parity(seed);
+        let (t2, _) = experiments::transport::connection_loss(seed);
+        print!("{}", t1.render());
+        print!("{}", t2.render());
+        return Ok(());
+    }
+
     if args.flag("json") {
         let json = experiments::shard::shard_json(seed, &scenario).ok_or_else(|| {
-            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|all|run)")
+            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|all|run|transport)")
         })?;
         println!("{}", json.to_string());
         return Ok(());
@@ -352,7 +422,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
             print!("{}", t2.render());
             print!("{}", t3.render());
         }
-        other => bail!("unknown shard scenario {other:?} (split|skew|failure|all|run)"),
+        other => bail!("unknown shard scenario {other:?} (split|skew|failure|all|run|transport)"),
     }
     Ok(())
 }

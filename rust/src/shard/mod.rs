@@ -19,11 +19,18 @@
 //!   serialised detach→attach [`crate::control::WireEvent`]s (encoded
 //!   and decoded on every hop, exactly the surface a cross-process
 //!   deployment needs).
+//! * [`remote`] — the same co-simulation with each fleet instance
+//!   behind a real socket ([`crate::transport`]): shards answer gossip
+//!   polls and serve epoch slices over length-prefixed frames, and a
+//!   dropped connection surfaces as shard loss — the gossip planner
+//!   re-places the orphans within one interval.
 
 pub mod gossip;
 pub mod placement;
+pub mod remote;
 pub mod sim;
 
 pub use gossip::{plan_moves, GossipTable, Headroom, Migration};
 pub use placement::{fnv1a, PlacementPolicy, ShardView};
+pub use remote::{run_sharded_remote, serve_shard, RemoteShard, RemoteTransport};
 pub use sim::{run_sharded, ShardControl, ShardReport, ShardScenario, ShardStreamReport};

@@ -1,0 +1,775 @@
+//! Cross-host sharded serving: each fleet instance behind a socket.
+//!
+//! [`crate::shard::sim`] proved the control plane serialises — every
+//! placement decision crosses an encode→decode hop — but shards were
+//! still function calls in one address space. This module puts a real
+//! transport in the seam: each shard runs a blocking
+//! [`serve_shard`] loop behind a TCP or Unix-domain socket
+//! ([`crate::transport::net`]), and the coordinator
+//! ([`run_sharded_remote`]) drives the same gossip-epoch co-simulation
+//! by shipping length-prefixed frames instead of calling functions.
+//!
+//! Per epoch, per shard, the coordinator:
+//!
+//! 1. sends [`TransportMsg::Poll`] and waits for the shard's
+//!    [`TransportMsg::Digest`] — the capacity gossip, computed
+//!    **shard-side** from its resident set;
+//! 2. routes placement / migration / re-placement as
+//!    [`TransportMsg::Control`] frames (the same
+//!    [`crate::control::WireEvent`]s the in-process runner encodes);
+//! 3. sends [`TransportMsg::Tick`] with the epoch's arrival quotas and
+//!    seed, and folds the returned [`TransportMsg::Slice`] into the
+//!    [`ShardReport`].
+//!
+//! **Peer loss is shard loss.** Any send/recv failure — connection
+//! reset, mid-frame close, framing lost, read deadline — kills the
+//! shard in the coordinator's view: its digest stops arriving, its
+//! residents are orphaned, and the next placement pass re-places them
+//! exactly as the gossip planner re-places orphans of a missed
+//! heartbeat. A socket dying is therefore *faster* to detect than a
+//! silent shard (the error is synchronous), and never slower than the
+//! one-gossip-interval bound the in-process co-sim guarantees.
+//!
+//! The epoch arithmetic (arrival credit, quota clipping, sub-scenario
+//! seeds) mirrors [`crate::shard::sim::run_sharded`] term for term, so
+//! a loopback run is comparable to the in-process co-simulation — the
+//! `experiments::transport` parity sweep holds them within 5%. The
+//! mirror is pinned by tests, not convention: on a failure-free run the
+//! two runners must agree on frame counts *exactly*
+//! (`remote_matches_inproc_cosim_exactly_on_a_balanced_run`), so a
+//! change to the in-process arithmetic that is not re-mirrored here
+//! fails tier-1. Folding both epoch loops over one shared driver (a
+//! per-shard digest/route/tick trait) is the natural follow-on once a
+//! second transport family needs it; see ROADMAP §multi-machine.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::control::{ControlAction, ControlOrigin, WireEvent};
+use crate::device::DeviceInstance;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::sim::{run_fleet, Scenario};
+use crate::fleet::stream::StreamSpec;
+use crate::shard::gossip::{plan_moves, GossipTable};
+use crate::shard::placement::ShardView;
+use crate::shard::sim::{ShardControl, ShardReport, ShardScenario, ShardStreamReport};
+use crate::transport::msg::{SliceStream, TransportMsg, TRANSPORT_VERSION};
+use crate::transport::net::{connect_with_backoff, Endpoint, FrameConn, Listener, TransportError};
+use crate::util::stats::Percentiles;
+
+/// Which socket family the remote co-simulation runs over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemoteTransport {
+    /// Loopback TCP (`127.0.0.1`, ephemeral ports).
+    Tcp,
+    /// Unix-domain sockets under the system temp dir.
+    Uds,
+}
+
+impl RemoteTransport {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RemoteTransport::Tcp => "tcp",
+            RemoteTransport::Uds => "uds",
+        }
+    }
+
+    /// A fresh endpoint of this family for shard `id`.
+    pub fn endpoint(&self, id: usize) -> Endpoint {
+        match self {
+            RemoteTransport::Tcp => Endpoint::loopback(),
+            RemoteTransport::Uds => Endpoint::temp_uds(&format!("shard{id}")),
+        }
+    }
+}
+
+/// One shard instance as a socket server: its device pool and an
+/// optional scripted death.
+#[derive(Debug, Clone)]
+pub struct RemoteShard {
+    pub id: usize,
+    pub devices: Vec<DeviceInstance>,
+    /// Drop the coordinator connection — without a goodbye — when a
+    /// `Poll` for an epoch `>= fail_at_epoch` arrives. Stands in for a
+    /// process crash in tests and experiments.
+    pub fail_at_epoch: Option<usize>,
+}
+
+impl RemoteShard {
+    pub fn new(id: usize, devices: Vec<DeviceInstance>) -> RemoteShard {
+        RemoteShard {
+            id,
+            devices,
+            fail_at_epoch: None,
+        }
+    }
+
+    pub fn with_failure(mut self, epoch: usize) -> RemoteShard {
+        self.fail_at_epoch = Some(epoch);
+        self
+    }
+}
+
+/// Serve one shard behind `listener`: accept a single coordinator
+/// session and run its control loop to completion (Bye / peer loss /
+/// scripted death). The shard owns its device pool; admission policy
+/// and the stream-id roster arrive in the `Hello`, stream membership
+/// arrives as decoded control frames, and every epoch slice runs
+/// through the same virtual-time fleet engine the in-process runner
+/// uses.
+pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), TransportError> {
+    let mut conn = listener.accept()?;
+    let mut admission = AdmissionPolicy::default();
+    let mut roster: Vec<String> = Vec::new();
+    // Residents keyed by global stream id (assigned by the roster).
+    let mut residents: BTreeMap<usize, StreamSpec> = BTreeMap::new();
+
+    loop {
+        let msg = match conn.recv() {
+            Ok(m) => m,
+            // Coordinator gone: the session is over either way.
+            Err(TransportError::PeerClosed { .. }) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        match msg {
+            TransportMsg::Hello {
+                protocol,
+                admission: adm,
+                roster: r,
+                ..
+            } => {
+                if protocol != TRANSPORT_VERSION {
+                    return Err(TransportError::Frame(
+                        crate::transport::frame::FrameError::Payload(format!(
+                            "protocol {protocol} != {TRANSPORT_VERSION}"
+                        )),
+                    ));
+                }
+                admission = adm;
+                roster = r;
+                let capacity = shard.devices.iter().map(|d| d.rate()).sum::<f64>()
+                    * admission.target_utilization;
+                conn.send(&TransportMsg::Welcome {
+                    shard: shard.id,
+                    capacity,
+                })?;
+            }
+            TransportMsg::Control(event) => match event.as_action() {
+                Some(ControlAction::AttachStream(spec)) => {
+                    if let Some(id) = roster.iter().position(|n| n == &spec.name) {
+                        residents.insert(id, spec.clone());
+                    }
+                }
+                Some(ControlAction::DetachStream(id)) => {
+                    residents.remove(id);
+                }
+                _ => {}
+            },
+            TransportMsg::Poll { epoch, at } => {
+                if shard.fail_at_epoch.is_some_and(|e| epoch >= e) {
+                    // Scripted death: vanish mid-session, no goodbye.
+                    return Ok(());
+                }
+                let capacity = shard.devices.iter().map(|d| d.rate()).sum::<f64>()
+                    * admission.target_utilization;
+                let committed: f64 = residents.values().map(|s| s.demand()).sum();
+                conn.send(&TransportMsg::Digest {
+                    shard: shard.id,
+                    at,
+                    capacity,
+                    committed,
+                })?;
+            }
+            TransportMsg::Tick {
+                epoch, seed, quotas, ..
+            } => {
+                // Build the epoch slice: resident specs clipped to their
+                // arrival quotas, in the quota (= global id) order the
+                // coordinator sent.
+                let mut specs: Vec<StreamSpec> = Vec::new();
+                let mut ids: Vec<usize> = Vec::new();
+                for &(id, frames) in &quotas {
+                    let Some(spec) = residents.get(&id) else {
+                        continue;
+                    };
+                    if frames == 0 {
+                        continue;
+                    }
+                    let mut s = spec.clone();
+                    s.num_frames = frames;
+                    specs.push(s);
+                    ids.push(id);
+                }
+                let (busy, frames, streams) = if specs.is_empty() {
+                    (0.0, 0, Vec::new())
+                } else {
+                    let sub = Scenario::new(shard.devices.clone(), specs)
+                        .with_admission(admission.clone())
+                        .with_seed(seed);
+                    let report = run_fleet(&sub);
+                    let streams: Vec<SliceStream> = ids
+                        .iter()
+                        .zip(&report.streams)
+                        .map(|(&id, sr)| SliceStream {
+                            id,
+                            total: sr.metrics.frames_total,
+                            processed: sr.metrics.frames_processed,
+                            latencies: sr
+                                .records
+                                .iter()
+                                .map(|rec| (rec.emit_ts - rec.capture_ts).max(0.0))
+                                .collect(),
+                        })
+                        .collect();
+                    (
+                        report.device_busy.iter().sum::<f64>(),
+                        report.device_frames.iter().sum::<u64>(),
+                        streams,
+                    )
+                };
+                conn.send(&TransportMsg::Slice {
+                    epoch,
+                    busy,
+                    frames,
+                    streams,
+                })?;
+            }
+            TransportMsg::Bye => return Ok(()),
+            // Peer-role messages (Welcome/Digest/Slice) are protocol
+            // violations from a coordinator; ignore rather than die so a
+            // confused peer cannot wedge the shard into an error loop.
+            _ => {}
+        }
+    }
+}
+
+/// Coordinator-side bookkeeping for one stream (mirrors the private
+/// `StreamRun` of [`crate::shard::sim`]).
+struct RemoteStream {
+    spec: StreamSpec,
+    next_frame: u64,
+    frames_total: u64,
+    frames_processed: u64,
+    latency: Percentiles,
+    shard: Option<usize>,
+    /// Last shard the stream was resident on (reporting only).
+    last_shard: Option<usize>,
+    migrations: usize,
+    arrival_credit: f64,
+    orphaned_at: Option<f64>,
+    worst_gap: f64,
+    ever_orphaned: bool,
+}
+
+impl RemoteStream {
+    fn remaining(&self) -> u64 {
+        self.spec.num_frames.saturating_sub(self.next_frame)
+    }
+
+    fn active(&self) -> bool {
+        self.remaining() > 0
+    }
+}
+
+/// Run a [`ShardScenario`] with every shard behind a real socket.
+///
+/// Shard servers are spawned on local threads (the transport neither
+/// knows nor cares; a different host would change only the endpoint),
+/// the coordinator dials them with backoff, and the whole co-simulation
+/// — handshake, gossip, placement, migration, epoch slices — crosses
+/// the wire as frames. Scenario `failures` become scripted connection
+/// drops ([`RemoteShard::fail_at_epoch`]); killing a connection orphans
+/// the shard's streams and the next placement pass re-places them, so
+/// the report's orphan-gap accounting is comparable to the in-process
+/// runner's.
+pub fn run_sharded_remote(
+    scenario: &ShardScenario,
+    transport: RemoteTransport,
+) -> Result<ShardReport> {
+    let m = scenario.shards.len();
+    if m == 0 {
+        return Err(anyhow!("need at least one shard"));
+    }
+    let tick = scenario.gossip_interval.max(1e-3);
+
+    // Bind every listener first (endpoints must be known before the
+    // coordinator dials), then spawn the shard servers.
+    let mut endpoints = Vec::with_capacity(m);
+    let mut handles = Vec::with_capacity(m);
+    for (sh, pool) in scenario.shards.iter().enumerate() {
+        let listener = Listener::bind(&transport.endpoint(sh))
+            .map_err(|e| anyhow!("shard {sh}: bind failed: {e}"))?;
+        endpoints.push(listener.local_endpoint()?);
+        let mut shard = RemoteShard::new(sh, pool.clone());
+        // Earliest scheduled death wins, matching the in-process runner
+        // (which applies whichever failure entry's epoch comes first).
+        if let Some(epoch) = scenario
+            .failures
+            .iter()
+            .filter(|&&(_, s)| s == sh)
+            .map(|&(e, _)| e)
+            .min()
+        {
+            shard = shard.with_failure(epoch);
+        }
+        handles.push(std::thread::spawn(move || serve_shard(listener, shard)));
+    }
+
+    let roster: Vec<String> = scenario.streams.iter().map(|s| s.name.clone()).collect();
+    let mut conns: Vec<Option<FrameConn>> = Vec::with_capacity(m);
+    let mut capacity = vec![0.0f64; m];
+    for (sh, endpoint) in endpoints.iter().enumerate() {
+        let mut conn = connect_with_backoff(endpoint, 10, std::time::Duration::from_millis(5))
+            .map_err(|e| anyhow!("shard {sh}: dial {} failed: {e}", endpoint.label()))?;
+        conn.send(&TransportMsg::Hello {
+            shard: sh,
+            protocol: TRANSPORT_VERSION,
+            admission: scenario.admission.clone(),
+            roster: roster.clone(),
+        })
+        .map_err(|e| anyhow!("shard {sh}: hello failed: {e}"))?;
+        match conn.recv() {
+            Ok(TransportMsg::Welcome { capacity: cap, .. }) => capacity[sh] = cap,
+            Ok(other) => return Err(anyhow!("shard {sh}: expected welcome, got {}", other.label())),
+            Err(e) => return Err(anyhow!("shard {sh}: handshake failed: {e}")),
+        }
+        conns.push(Some(conn));
+    }
+
+    let mut alive = vec![true; m];
+    let mut shard_busy = vec![0.0f64; m];
+    let mut shard_frames = vec![0u64; m];
+    let mut streams: Vec<RemoteStream> = scenario
+        .streams
+        .iter()
+        .map(|spec| RemoteStream {
+            spec: spec.clone(),
+            next_frame: 0,
+            frames_total: 0,
+            frames_processed: 0,
+            latency: Percentiles::new(),
+            shard: None,
+            last_shard: None,
+            migrations: 0,
+            arrival_credit: 0.0,
+            orphaned_at: None,
+            worst_gap: 0.0,
+            ever_orphaned: false,
+        })
+        .collect();
+    let mut log: Vec<ShardControl> = Vec::new();
+    let mut table = GossipTable::new(m);
+    let mut migrations = 0usize;
+    let mut initial_committed = vec![0.0f64; m];
+    let mut epochs_run = 0usize;
+
+    // Kill a shard in the coordinator's view: drop the connection,
+    // orphan its residents (they re-place at the next placement pass).
+    fn kill(
+        sh: usize,
+        at: f64,
+        alive: &mut [bool],
+        conns: &mut [Option<FrameConn>],
+        streams: &mut [RemoteStream],
+    ) {
+        if !alive[sh] {
+            return;
+        }
+        alive[sh] = false;
+        conns[sh] = None;
+        for s in streams.iter_mut() {
+            if s.shard == Some(sh) {
+                s.shard = None;
+                s.orphaned_at = Some(at);
+                s.ever_orphaned = true;
+            }
+        }
+    }
+
+    // Route one control action to `sh` over the wire; mirror its effect
+    // on the coordinator's residency map. Returns false on peer loss.
+    fn route(
+        sh: usize,
+        at: f64,
+        action: ControlAction,
+        alive: &mut [bool],
+        conns: &mut [Option<FrameConn>],
+        streams: &mut [RemoteStream],
+        log: &mut Vec<ShardControl>,
+    ) -> bool {
+        let event = WireEvent::action(at, ControlOrigin::Placement, action);
+        let sent = match conns[sh].as_mut() {
+            Some(conn) => conn.send(&TransportMsg::Control(event.clone())).is_ok(),
+            None => false,
+        };
+        if !sent {
+            kill(sh, at, alive, conns, streams);
+            return false;
+        }
+        match event.as_action() {
+            Some(ControlAction::AttachStream(spec)) => {
+                if let Some(i) = streams.iter().position(|s| s.spec.name == spec.name) {
+                    streams[i].shard = Some(sh);
+                    streams[i].last_shard = Some(sh);
+                }
+            }
+            Some(ControlAction::DetachStream(idx)) => {
+                if let Some(s) = streams.get_mut(*idx) {
+                    if s.shard == Some(sh) {
+                        s.shard = None;
+                    }
+                }
+            }
+            _ => {}
+        }
+        log.push(ShardControl { shard: sh, event });
+        true
+    }
+
+    for epoch in 0..scenario.epochs {
+        let t0 = epoch as f64 * tick;
+
+        // 1. Gossip round over the wire: poll every live shard for its
+        //    digest; a peer that cannot answer is a lost shard.
+        for sh in 0..m {
+            if !alive[sh] {
+                continue;
+            }
+            let polled = {
+                let conn = conns[sh].as_mut().expect("alive shard has a connection");
+                conn.send(&TransportMsg::Poll { epoch, at: t0 })
+                    .and_then(|()| conn.recv())
+            };
+            match polled {
+                Ok(msg) => match msg.as_digest() {
+                    Some(digest) => table.publish(digest),
+                    None => kill(sh, t0, &mut alive, &mut conns, &mut streams),
+                },
+                Err(_) => kill(sh, t0, &mut alive, &mut conns, &mut streams),
+            }
+        }
+        table.sweep(t0, 0.5 * tick);
+        let mut views: Vec<ShardView> = table.views();
+
+        // 2. Place unplaced streams (initial placement + orphans).
+        for i in 0..streams.len() {
+            if streams[i].shard.is_some() || !streams[i].active() {
+                continue;
+            }
+            let name = streams[i].spec.name.clone();
+            let Some(dst) = scenario.policy.place(&name, i, &views) else {
+                continue;
+            };
+            let attach = ControlAction::AttachStream(streams[i].spec.clone());
+            if !route(dst, t0, attach, &mut alive, &mut conns, &mut streams, &mut log) {
+                continue;
+            }
+            views[dst].committed += streams[i].spec.demand();
+            if let Some(lost_at) = streams[i].orphaned_at.take() {
+                let gap = (t0 - lost_at).max(0.0);
+                if gap > streams[i].worst_gap {
+                    streams[i].worst_gap = gap;
+                }
+            }
+        }
+
+        if epoch == 0 {
+            for s in streams.iter() {
+                if let Some(sh) = s.shard {
+                    if s.active() {
+                        initial_committed[sh] += s.spec.demand();
+                    }
+                }
+            }
+        }
+
+        // 3. Band rebalance: serialised detach→attach migrations.
+        if epoch > 0 {
+            let residents: Vec<(usize, f64, usize)> = streams
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| {
+                    if s.active() {
+                        s.shard.map(|sh| (i, s.spec.demand(), sh))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            for mv in plan_moves(&views, &residents) {
+                if !route(
+                    mv.from,
+                    t0,
+                    ControlAction::DetachStream(mv.stream),
+                    &mut alive,
+                    &mut conns,
+                    &mut streams,
+                    &mut log,
+                ) {
+                    continue;
+                }
+                let attach = ControlAction::AttachStream(streams[mv.stream].spec.clone());
+                if route(mv.to, t0, attach, &mut alive, &mut conns, &mut streams, &mut log) {
+                    streams[mv.stream].migrations += 1;
+                    migrations += 1;
+                }
+            }
+        }
+
+        // 4. Serve the epoch: ship per-shard quotas, fold slices back.
+        //    (Same arrival-credit arithmetic as the in-process runner.)
+        let mut quotas: Vec<u64> = vec![0; streams.len()];
+        for (i, s) in streams.iter_mut().enumerate() {
+            if !s.active() {
+                continue;
+            }
+            s.arrival_credit += s.spec.fps * tick;
+            let q = (s.arrival_credit.floor().max(0.0) as u64).min(s.remaining());
+            s.arrival_credit -= q as f64;
+            quotas[i] = q;
+        }
+        for sh in 0..m {
+            if !alive[sh] {
+                continue;
+            }
+            let shard_quotas: Vec<(usize, u64)> = streams
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| s.shard == Some(sh) && s.active() && quotas[*i] > 0)
+                .map(|(i, _)| (i, quotas[i]))
+                .collect();
+            if shard_quotas.is_empty() {
+                continue;
+            }
+            let seed = scenario
+                .seed
+                .wrapping_add((epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                ^ ((sh as u64) << 17);
+            let ticked = {
+                let conn = conns[sh].as_mut().expect("alive shard has a connection");
+                conn.send(&TransportMsg::Tick {
+                    epoch,
+                    at: t0,
+                    seed,
+                    quotas: shard_quotas.clone(),
+                })
+                .and_then(|()| conn.recv())
+            };
+            match ticked {
+                Ok(TransportMsg::Slice {
+                    busy,
+                    frames,
+                    streams: slice_streams,
+                    ..
+                }) => {
+                    shard_busy[sh] += busy;
+                    shard_frames[sh] += frames;
+                    for ss in slice_streams {
+                        let Some(s) = streams.get_mut(ss.id) else {
+                            continue;
+                        };
+                        s.frames_total += ss.total;
+                        s.frames_processed += ss.processed;
+                        s.next_frame += ss.total;
+                        for lat in ss.latencies {
+                            s.latency.push(lat);
+                        }
+                    }
+                }
+                _ => {
+                    // Tick lost mid-epoch: the shard is gone and this
+                    // epoch's arrivals with it. kill() unplaces its
+                    // residents, so the unplaced-streams pass below
+                    // accounts their quotas as dropped arrivals (exactly
+                    // once).
+                    kill(sh, t0, &mut alive, &mut conns, &mut streams);
+                }
+            }
+        }
+        // Unplaced streams' arrivals drop on the floor.
+        for (i, s) in streams.iter_mut().enumerate() {
+            if s.shard.is_none() && s.active() && quotas[i] > 0 {
+                s.frames_total += quotas[i];
+                s.next_frame += quotas[i];
+            }
+        }
+        // Streams that just played out detach over the wire, so the
+        // shard-side digests stop counting their demand.
+        for i in 0..streams.len() {
+            if streams[i].active() {
+                continue;
+            }
+            if let Some(sh) = streams[i].shard {
+                route(
+                    sh,
+                    t0,
+                    ControlAction::DetachStream(i),
+                    &mut alive,
+                    &mut conns,
+                    &mut streams,
+                    &mut log,
+                );
+            }
+        }
+
+        epochs_run = epoch + 1;
+        if streams.iter().all(|s| !s.active()) {
+            break;
+        }
+    }
+
+    // Orderly teardown: goodbye to every survivor, then join the shard
+    // threads (dead ones already returned).
+    for conn in conns.iter_mut().flatten() {
+        let _ = conn.send(&TransportMsg::Bye);
+    }
+    drop(conns);
+    for handle in handles {
+        let _ = handle.join();
+    }
+
+    let stream_reports: Vec<ShardStreamReport> = streams
+        .iter_mut()
+        .map(|s| ShardStreamReport {
+            name: s.spec.name.clone(),
+            demand: s.spec.demand(),
+            frames_total: s.frames_total,
+            frames_processed: s.frames_processed,
+            migrations: s.migrations,
+            final_shard: s.shard.or(s.last_shard),
+            p99_latency: s.latency.p99(),
+            orphaned_for: if s.orphaned_at.is_some() {
+                Some(f64::INFINITY)
+            } else if s.ever_orphaned {
+                Some(s.worst_gap)
+            } else {
+                None
+            },
+        })
+        .collect();
+
+    Ok(ShardReport {
+        streams: stream_reports,
+        shard_capacity: capacity,
+        shard_alive: alive,
+        shard_busy,
+        shard_frames,
+        initial_committed,
+        control_log: log,
+        migrations,
+        policy: scenario.policy,
+        gossip_interval: tick,
+        epochs_run,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DetectorModelId, DeviceKind};
+
+    fn pool(n: usize, rate: f64) -> Vec<DeviceInstance> {
+        (0..n)
+            .map(|i| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, rate))
+            .collect()
+    }
+
+    fn uniform_streams(n: usize, fps: f64, frames: u64, window: usize) -> Vec<StreamSpec> {
+        (0..n)
+            .map(|i| StreamSpec::new(&format!("s{i}"), fps, frames).with_window(window))
+            .collect()
+    }
+
+    #[test]
+    fn remote_run_over_uds_serves_everything_and_logs_placements() {
+        let scenario = ShardScenario::new(
+            vec![pool(3, 2.5), pool(3, 2.5)],
+            uniform_streams(4, 2.5, 100, 4),
+        )
+        .with_gossip(10.0)
+        .with_epochs(6)
+        .with_seed(61);
+        let report = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("remote run");
+        assert_eq!(report.orphan_count(), 0);
+        assert!(report.shard_alive.iter().all(|&a| a));
+        for s in &report.streams {
+            assert_eq!(s.frames_total, 100, "stream {}", s.name);
+            assert!(
+                s.frames_processed as f64 > 0.9 * s.frames_total as f64,
+                "stream {} processed {}/{}",
+                s.name,
+                s.frames_processed,
+                s.frames_total
+            );
+            assert!(s.final_shard.is_some());
+        }
+        let attaches = report
+            .control_log
+            .iter()
+            .filter(|c| matches!(c.event.as_action(), Some(ControlAction::AttachStream(_))))
+            .count();
+        assert_eq!(attaches, 4);
+    }
+
+    #[test]
+    fn remote_matches_inproc_cosim_exactly_on_a_balanced_run() {
+        // Same scenario, same seeds, same epoch arithmetic: the remote
+        // run is not just "within tolerance" — frame counts match the
+        // in-process co-simulation exactly on a failure-free run.
+        let scenario = ShardScenario::new(
+            vec![pool(4, 2.5), pool(4, 2.5)],
+            uniform_streams(8, 10.0, 300, 4),
+        )
+        .with_admission(AdmissionPolicy::admit_all())
+        .with_gossip(10.0)
+        .with_epochs(5)
+        .with_seed(47);
+        let inproc = crate::shard::sim::run_sharded(&scenario);
+        let remote = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
+        assert_eq!(remote.total_frames(), inproc.total_frames());
+        assert_eq!(remote.total_processed(), inproc.total_processed());
+        assert_eq!(remote.epochs_run, inproc.epochs_run);
+        assert_eq!(remote.initial_committed, inproc.initial_committed);
+    }
+
+    #[test]
+    fn connection_drop_orphans_and_replaces_within_one_interval() {
+        let scenario = ShardScenario::new(
+            vec![pool(4, 2.5), pool(4, 2.5), pool(4, 2.5)],
+            uniform_streams(9, 2.5, 200, 4),
+        )
+        .with_gossip(10.0)
+        .with_epochs(10)
+        .with_seed(67)
+        .with_failure(2, 0);
+        let report = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
+        assert!(!report.shard_alive[0]);
+        assert_eq!(report.orphan_count(), 3);
+        assert!(
+            report.orphans_replaced_within(report.gossip_interval),
+            "worst gap {} vs interval {}",
+            report.worst_orphan_gap(),
+            report.gossip_interval
+        );
+        for s in report.streams.iter().filter(|s| s.orphaned_for.is_some()) {
+            assert!(matches!(s.final_shard, Some(1) | Some(2)), "{:?}", s.final_shard);
+            assert!(s.frames_processed > 0);
+        }
+    }
+
+    #[test]
+    fn remote_run_is_deterministic_given_seed() {
+        let scenario = ShardScenario::new(
+            vec![pool(2, 2.5), pool(2, 2.5)],
+            uniform_streams(4, 5.0, 100, 4),
+        )
+        .with_gossip(5.0)
+        .with_epochs(8)
+        .with_seed(71);
+        let a = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("run a");
+        let b = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("run b");
+        assert_eq!(a.total_processed(), b.total_processed());
+        assert_eq!(a.control_log, b.control_log);
+    }
+}

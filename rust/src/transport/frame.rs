@@ -1,0 +1,387 @@
+//! Length-prefixed, versioned frame codec for [`TransportMsg`]s.
+//!
+//! One frame on the wire is an 8-byte header followed by a UTF-8 JSON
+//! payload (all integers big-endian):
+//!
+//! ```text
+//!  offset  size  field
+//!  0       2     magic  0x45 0x56  ("EV")
+//!  2       1     codec version (FRAME_VERSION)
+//!  3       1     reserved (written 0, ignored on read)
+//!  4       4     payload length in bytes (u32)
+//!  8       len   payload: TransportMsg::encode() JSON
+//! ```
+//!
+//! [`FrameDecoder`] is an incremental state machine fed from `read()`
+//! return slices, so the adversarial realities of a stream socket are
+//! handled explicitly rather than assumed away:
+//!
+//! * **split frames / truncated prefixes** — any byte of the header or
+//!   payload may arrive in its own `read()`; the decoder buffers and
+//!   reports "need more bytes" (`Ok(None)`), never an error, until a
+//!   frame is complete (property-tested over random split points);
+//! * **oversized lengths** — a length prefix above
+//!   [`MAX_PAYLOAD_BYTES`] is rejected *before* buffering the payload,
+//!   so a corrupt or hostile peer cannot make the decoder allocate
+//!   gigabytes;
+//! * **version mismatch** — a frame stamped with a different codec
+//!   version is rejected at the header;
+//! * **garbage between frames** — bytes after a valid frame that do not
+//!   begin with the magic are rejected as soon as they are seen.
+//!
+//! All decode failures are fatal for the stream (framing is lost); the
+//! session layer surfaces them as peer loss.
+
+use std::fmt;
+
+use crate::transport::msg::TransportMsg;
+
+/// First two bytes of every frame ("EV").
+pub const FRAME_MAGIC: [u8; 2] = [0x45, 0x56];
+
+/// Frame codec version; decoders reject any other value.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Header size in bytes (magic + version + reserved + u32 length).
+pub const HEADER_BYTES: usize = 8;
+
+/// Maximum payload a peer may declare (1 MiB — the largest real message,
+/// a many-stream epoch slice with latencies, is a few hundred KiB).
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 20;
+
+/// Fatal framing failure: the byte stream is not (or no longer) a valid
+/// frame sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameError {
+    /// The next two bytes are not [`FRAME_MAGIC`].
+    BadMagic { got: [u8; 2] },
+    /// The frame's codec version differs from [`FRAME_VERSION`].
+    Version { got: u8 },
+    /// The declared payload length exceeds [`MAX_PAYLOAD_BYTES`].
+    Oversized { len: usize },
+    /// The payload is not a valid [`TransportMsg`] (bad UTF-8, bad JSON,
+    /// or an unknown/malformed message).
+    Payload(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic { got } => {
+                write!(f, "bad frame magic {:#04x} {:#04x}", got[0], got[1])
+            }
+            FrameError::Version { got } => {
+                write!(f, "unsupported frame version {got} (expected {FRAME_VERSION})")
+            }
+            FrameError::Oversized { len } => {
+                write!(f, "frame payload of {len} bytes exceeds the {MAX_PAYLOAD_BYTES}-byte cap")
+            }
+            FrameError::Payload(msg) => write!(f, "bad frame payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Encode one message as a complete frame (header + JSON payload). A
+/// payload above [`MAX_PAYLOAD_BYTES`] is an error, not a panic — an
+/// oversized message (e.g. a pathological epoch slice) must surface as
+/// a session failure the caller can handle, mirroring the decode side.
+pub fn encode_frame(msg: &TransportMsg) -> Result<Vec<u8>, FrameError> {
+    let payload = msg.encode().into_bytes();
+    if payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(FrameError::Oversized { len: payload.len() });
+    }
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    out.push(0);
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Incremental frame decoder; feed it whatever `read()` returned and
+/// drain complete messages with [`FrameDecoder::try_next`].
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Buffer more bytes from the stream.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame. Non-zero
+    /// at end-of-stream means the peer died mid-frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Decode the next complete frame. `Ok(None)` means the buffer holds
+    /// only a frame prefix (possibly empty) — feed more bytes. Errors
+    /// are fatal: framing is lost and the stream must be dropped.
+    pub fn try_next(&mut self) -> Result<Option<TransportMsg>, FrameError> {
+        // Validate magic/version as soon as the bytes exist, so garbage
+        // is caught even when the stream ends before a full header.
+        if self.buf.len() >= 2 && self.buf[..2] != FRAME_MAGIC {
+            return Err(FrameError::BadMagic {
+                got: [self.buf[0], self.buf[1]],
+            });
+        }
+        if self.buf.len() >= 3 && self.buf[2] != FRAME_VERSION {
+            return Err(FrameError::Version { got: self.buf[2] });
+        }
+        if self.buf.len() < HEADER_BYTES {
+            return Ok(None);
+        }
+        let len = u32::from_be_bytes([self.buf[4], self.buf[5], self.buf[6], self.buf[7]]) as usize;
+        if len > MAX_PAYLOAD_BYTES {
+            return Err(FrameError::Oversized { len });
+        }
+        if self.buf.len() < HEADER_BYTES + len {
+            return Ok(None);
+        }
+        let payload = &self.buf[HEADER_BYTES..HEADER_BYTES + len];
+        let text = std::str::from_utf8(payload)
+            .map_err(|e| FrameError::Payload(format!("payload is not UTF-8: {e}")))?;
+        let msg = TransportMsg::decode(text).map_err(|e| FrameError::Payload(e.msg))?;
+        self.buf.drain(..HEADER_BYTES + len);
+        Ok(Some(msg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::{ControlAction, ControlOrigin, WireEvent};
+    use crate::fleet::admission::AdmissionPolicy;
+    use crate::fleet::stream::StreamSpec;
+    use crate::transport::msg::{SliceStream, TRANSPORT_VERSION};
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+
+    /// A random message drawn across every variant, with the f64 fields
+    /// exercised on awkward fractional values.
+    fn arbitrary_msg(rng: &mut Rng) -> TransportMsg {
+        match rng.below(8) {
+            0 => TransportMsg::Hello {
+                shard: rng.below(16) as usize,
+                protocol: TRANSPORT_VERSION,
+                admission: AdmissionPolicy::default(),
+                roster: (0..rng.below(4)).map(|i| format!("cam{i}")).collect(),
+            },
+            1 => TransportMsg::Welcome {
+                shard: rng.below(16) as usize,
+                capacity: rng.range(0.1, 100.0),
+            },
+            2 => TransportMsg::Control(WireEvent::action(
+                rng.range(0.0, 1e4),
+                ControlOrigin::Placement,
+                ControlAction::AttachStream(
+                    StreamSpec::new(
+                        &format!("s{}", rng.below(100)),
+                        rng.range(0.1, 60.0),
+                        rng.below(10_000),
+                    )
+                    .with_weight(rng.range(0.1, 8.0)),
+                ),
+            )),
+            3 => TransportMsg::Poll {
+                epoch: rng.below(1000) as usize,
+                at: rng.range(0.0, 1e4),
+            },
+            4 => TransportMsg::Digest {
+                shard: rng.below(16) as usize,
+                at: rng.range(0.0, 1e4),
+                capacity: rng.range(0.0, 100.0),
+                committed: rng.range(0.0, 100.0),
+            },
+            5 => TransportMsg::Tick {
+                epoch: rng.below(1000) as usize,
+                at: rng.range(0.0, 1e4),
+                seed: rng.next_u64(),
+                quotas: (0..rng.below(6) as usize).map(|i| (i, rng.below(500))).collect(),
+            },
+            6 => TransportMsg::Slice {
+                epoch: rng.below(1000) as usize,
+                busy: rng.range(0.0, 1e3),
+                frames: rng.below(10_000),
+                streams: (0..rng.below(4) as usize)
+                    .map(|i| SliceStream {
+                        id: i,
+                        total: rng.below(500),
+                        processed: rng.below(500),
+                        latencies: (0..rng.below(8)).map(|_| rng.range(0.0, 10.0)).collect(),
+                    })
+                    .collect(),
+            },
+            _ => TransportMsg::Bye,
+        }
+    }
+
+    #[test]
+    fn prop_frames_survive_arbitrary_split_points() {
+        // Several frames concatenated, delivered in random-sized chunks
+        // (including 1-byte reads): the decoder reassembles exactly the
+        // encoded sequence, with Ok(None) at every incomplete boundary.
+        check("frames survive splits", Config::default(), |rng| {
+            let msgs: Vec<TransportMsg> =
+                (0..1 + rng.below(4)).map(|_| arbitrary_msg(rng)).collect();
+            let mut stream = Vec::new();
+            for m in &msgs {
+                stream.extend_from_slice(&encode_frame(m).expect("encode"));
+            }
+            let mut dec = FrameDecoder::new();
+            let mut out = Vec::new();
+            let mut pos = 0usize;
+            while pos < stream.len() {
+                let chunk = 1 + rng.below(9) as usize;
+                let end = (pos + chunk).min(stream.len());
+                dec.feed(&stream[pos..end]);
+                pos = end;
+                loop {
+                    match dec.try_next() {
+                        Ok(Some(m)) => out.push(m),
+                        Ok(None) => break,
+                        Err(e) => return Err(format!("decode failed at byte {pos}: {e}")),
+                    }
+                }
+            }
+            if out != msgs {
+                return Err(format!("got {} messages, sent {}", out.len(), msgs.len()));
+            }
+            if dec.buffered() != 0 {
+                return Err(format!("{} stray bytes buffered", dec.buffered()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncated_prefix_is_pending_not_error() {
+        // A frame cut anywhere — inside the length prefix or the payload
+        // — is "need more bytes", never an error; feeding the remainder
+        // completes it.
+        check("truncation pends", Config::default(), |rng| {
+            let msg = arbitrary_msg(rng);
+            let frame = encode_frame(&msg).expect("encode");
+            let cut = 1 + rng.below(frame.len() as u64 - 1) as usize;
+            let mut dec = FrameDecoder::new();
+            dec.feed(&frame[..cut]);
+            match dec.try_next() {
+                Ok(None) => {}
+                Ok(Some(_)) => return Err(format!("decoded from {cut}/{} bytes", frame.len())),
+                Err(e) => return Err(format!("truncation at {cut} errored: {e}")),
+            }
+            dec.feed(&frame[cut..]);
+            match dec.try_next() {
+                Ok(Some(m)) if m == msg => Ok(()),
+                other => Err(format!("completion failed: {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_oversized_length_is_rejected_before_buffering() {
+        check("oversized rejected", Config::default(), |rng| {
+            let len = MAX_PAYLOAD_BYTES as u32 + 1 + rng.below(1 << 20) as u32;
+            let mut header = Vec::new();
+            header.extend_from_slice(&FRAME_MAGIC);
+            header.push(FRAME_VERSION);
+            header.push(0);
+            header.extend_from_slice(&len.to_be_bytes());
+            let mut dec = FrameDecoder::new();
+            dec.feed(&header);
+            match dec.try_next() {
+                Err(FrameError::Oversized { len: got }) if got == len as usize => Ok(()),
+                other => Err(format!("expected Oversized, got {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_version_mismatch_is_rejected() {
+        check("version rejected", Config::default(), |rng| {
+            let mut frame = encode_frame(&arbitrary_msg(rng)).expect("encode");
+            let bogus = loop {
+                let v = rng.below(256) as u8;
+                if v != FRAME_VERSION {
+                    break v;
+                }
+            };
+            frame[2] = bogus;
+            let mut dec = FrameDecoder::new();
+            dec.feed(&frame);
+            match dec.try_next() {
+                Err(FrameError::Version { got }) if got == bogus => Ok(()),
+                other => Err(format!("expected Version, got {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_garbage_after_valid_frame_is_rejected() {
+        check("garbage rejected", Config::default(), |rng| {
+            let msg = arbitrary_msg(rng);
+            let mut stream = encode_frame(&msg).expect("encode");
+            // Garbage that cannot start a frame (first byte != magic[0]).
+            let mut garbage: Vec<u8> =
+                (0..2 + rng.below(16)).map(|_| rng.below(256) as u8).collect();
+            if garbage[0] == FRAME_MAGIC[0] {
+                garbage[0] ^= 0xFF;
+            }
+            stream.extend_from_slice(&garbage);
+            let mut dec = FrameDecoder::new();
+            dec.feed(&stream);
+            match dec.try_next() {
+                Ok(Some(m)) if m == msg => {}
+                other => return Err(format!("valid frame lost: {other:?}")),
+            }
+            match dec.try_next() {
+                Err(FrameError::BadMagic { .. }) => Ok(()),
+                other => Err(format!("expected BadMagic after frame, got {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn corrupt_payload_is_a_payload_error() {
+        // Valid header, declared length, but the payload is not a
+        // transport message.
+        let payload = b"{\"msg\":\"nonsense\"}";
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&FRAME_MAGIC);
+        frame.push(FRAME_VERSION);
+        frame.push(0);
+        frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        frame.extend_from_slice(payload);
+        let mut dec = FrameDecoder::new();
+        dec.feed(&frame);
+        assert!(matches!(dec.try_next(), Err(FrameError::Payload(_))));
+        // Non-UTF-8 payloads likewise.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&FRAME_MAGIC);
+        frame.push(FRAME_VERSION);
+        frame.push(0);
+        frame.extend_from_slice(&2u32.to_be_bytes());
+        frame.extend_from_slice(&[0xFF, 0xFE]);
+        let mut dec = FrameDecoder::new();
+        dec.feed(&frame);
+        assert!(matches!(dec.try_next(), Err(FrameError::Payload(_))));
+    }
+
+    #[test]
+    fn error_messages_render() {
+        assert!(FrameError::BadMagic { got: [0, 1] }.to_string().contains("magic"));
+        assert!(FrameError::Version { got: 9 }.to_string().contains("version 9"));
+        assert!(FrameError::Oversized { len: 1 << 30 }.to_string().contains("cap"));
+        assert!(FrameError::Payload("x".into()).to_string().contains("payload"));
+    }
+}

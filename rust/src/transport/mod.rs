@@ -1,0 +1,41 @@
+//! Cross-host transport for the serialisable control plane.
+//!
+//! [`crate::control`] made every control decision a JSON document; this
+//! layer makes those documents travel between processes. Four pieces,
+//! bottom-up:
+//!
+//! * [`frame`] — the length-prefixed, versioned frame codec: an 8-byte
+//!   header (magic, codec version, u32 payload length) around one JSON
+//!   payload, with an incremental decoder that handles split frames,
+//!   truncated prefixes, oversized-length rejection, version mismatch
+//!   and garbage between frames (property-tested).
+//! * [`msg`] — the session vocabulary ([`TransportMsg`]): control
+//!   traffic is always a [`crate::control::WireEvent`] inside a
+//!   `Control` frame; around it sit the handshake (`Hello`/`Welcome`),
+//!   the per-epoch gossip (`Poll`/`Digest`), the epoch-slice exchange
+//!   (`Tick`/`Slice`) and the goodbye (`Bye`).
+//! * [`net`] — blocking sockets over `std::net` TCP and Unix-domain
+//!   sockets: framed connections with read deadlines, peer-loss
+//!   surfacing (clean vs mid-frame close) and a dial-with-backoff
+//!   client. No async runtime, no new dependencies.
+//! * [`serve`] — the remote wall-clock consumer: a `fleet::serve`
+//!   process driven by a decoded [`crate::control::EventLog`] stream
+//!   instead of in-process calls.
+//!
+//! The remote *virtual-time* driver — each shard of the co-simulation
+//! behind its own socket — lives in [`crate::shard::remote`], next to
+//! the in-process runner whose semantics it mirrors.
+
+pub mod frame;
+pub mod msg;
+pub mod net;
+pub mod serve;
+
+pub use frame::{encode_frame, FrameDecoder, FrameError, FRAME_VERSION, MAX_PAYLOAD_BYTES};
+pub use msg::{SliceStream, TransportMsg, TRANSPORT_VERSION};
+pub use net::{
+    connect, connect_with_backoff, Endpoint, FrameConn, Listener, TransportError,
+};
+pub use serve::{
+    drive_remote_serve, run_serve_consumer, serve_from_log, specs_from_log, RemoteServeOutcome,
+};

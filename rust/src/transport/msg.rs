@@ -1,0 +1,471 @@
+//! The cross-host session vocabulary carried inside transport frames.
+//!
+//! A [`TransportMsg`] is one message of the coordinator ⇄ shard (or
+//! coordinator ⇄ remote-serve consumer) session protocol. Control
+//! traffic proper is always a [`WireEvent`] — the same versioned
+//! vocabulary the in-process co-simulation routes — wrapped in
+//! [`TransportMsg::Control`]; the remaining variants are the session
+//! plumbing a real multi-process deployment needs around it:
+//!
+//! * [`TransportMsg::Hello`] / [`TransportMsg::Welcome`] — session
+//!   handshake: the coordinator ships the admission policy (over the
+//!   existing [`crate::control::wire::admission_to_json`] codec) and the
+//!   global stream roster (so `DetachStream(StreamId)` ids resolve
+//!   remotely); the shard answers with its util-adjusted capacity.
+//! * [`TransportMsg::Poll`] / [`TransportMsg::Digest`] — the capacity
+//!   gossip over the wire: one [`crate::shard::Headroom`]-shaped digest
+//!   per epoch. A peer that cannot answer is a lost shard.
+//! * [`TransportMsg::Tick`] / [`TransportMsg::Slice`] — one epoch of
+//!   virtual-time serving: the coordinator ships per-stream arrival
+//!   quotas and the epoch seed (as a decimal string — u64 seeds do not
+//!   survive a JSON f64), the shard answers with per-stream outcomes.
+//! * [`TransportMsg::Bye`] — orderly session end; anything else ending
+//!   the connection is peer loss.
+//!
+//! Every variant round-trips exactly through [`crate::util::json`]
+//! (unit-tested here; frame-level splitting is property-tested in
+//! [`crate::transport::frame`]).
+
+use std::collections::BTreeMap;
+
+use crate::control::wire::{
+    admission_from_json, admission_to_json, req_f64, req_str, req_u64, req_usize,
+};
+use crate::control::{WireError, WireEvent};
+use crate::fleet::admission::AdmissionPolicy;
+use crate::shard::Headroom;
+use crate::util::json::Json;
+
+/// Session-protocol version stamped on every [`TransportMsg::Hello`];
+/// peers reject a mismatch before any control traffic flows. (The frame
+/// header carries its own codec version — see
+/// [`crate::transport::frame::FRAME_VERSION`].)
+pub const TRANSPORT_VERSION: i64 = 1;
+
+/// Per-stream outcome of one served epoch slice (or of a whole remote
+/// wall-clock run), keyed by global stream id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceStream {
+    pub id: usize,
+    /// Frames that arrived in the slice.
+    pub total: u64,
+    pub processed: u64,
+    /// Capture→emit latency of every record in the slice (seconds).
+    pub latencies: Vec<f64>,
+}
+
+/// One message of the cross-host session protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportMsg {
+    /// Coordinator → shard: open a session. `roster[i]` is the name of
+    /// global stream id `i`, so wire `StreamId`s resolve remotely.
+    Hello {
+        shard: usize,
+        protocol: i64,
+        admission: AdmissionPolicy,
+        roster: Vec<String>,
+    },
+    /// Shard → coordinator: handshake reply with the shard's
+    /// util-adjusted admission capacity (FPS).
+    Welcome { shard: usize, capacity: f64 },
+    /// A control-plane event (either direction; the coordinator ships
+    /// placement verbs, a remote-serve consumer ships decisions back).
+    Control(WireEvent),
+    /// Coordinator → shard: publish your headroom digest for `epoch`.
+    Poll { epoch: usize, at: f64 },
+    /// Shard → coordinator: the headroom digest ([`Headroom`] shape).
+    Digest {
+        shard: usize,
+        at: f64,
+        capacity: f64,
+        committed: f64,
+    },
+    /// Coordinator → shard: serve one epoch slice. `quotas` pairs global
+    /// stream ids with this epoch's arrival counts, in global id order;
+    /// `seed` travels as a decimal string (u64-exact).
+    Tick {
+        epoch: usize,
+        at: f64,
+        seed: u64,
+        quotas: Vec<(usize, u64)>,
+    },
+    /// Shard → coordinator: the served slice.
+    Slice {
+        epoch: usize,
+        /// Busy seconds summed over the shard's pool.
+        busy: f64,
+        /// Frames processed summed over the shard's pool.
+        frames: u64,
+        streams: Vec<SliceStream>,
+    },
+    /// Orderly session end.
+    Bye,
+}
+
+impl TransportMsg {
+    /// The digest payload as a gossip [`Headroom`], if this is one.
+    pub fn as_digest(&self) -> Option<Headroom> {
+        match self {
+            TransportMsg::Digest {
+                shard,
+                at,
+                capacity,
+                committed,
+            } => Some(Headroom {
+                shard: *shard,
+                at: *at,
+                capacity: *capacity,
+                committed: *committed,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Compact human label for session logs.
+    pub fn label(&self) -> String {
+        match self {
+            TransportMsg::Hello { shard, .. } => format!("hello(shard {shard})"),
+            TransportMsg::Welcome { shard, capacity } => {
+                format!("welcome(shard {shard}, {capacity:.1} FPS)")
+            }
+            TransportMsg::Control(ev) => format!("control({})", ev.label()),
+            TransportMsg::Poll { epoch, .. } => format!("poll(epoch {epoch})"),
+            TransportMsg::Digest { shard, .. } => format!("digest(shard {shard})"),
+            TransportMsg::Tick { epoch, quotas, .. } => {
+                format!("tick(epoch {epoch}, {} streams)", quotas.len())
+            }
+            TransportMsg::Slice { epoch, streams, .. } => {
+                format!("slice(epoch {epoch}, {} streams)", streams.len())
+            }
+            TransportMsg::Bye => "bye".to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        match self {
+            TransportMsg::Hello {
+                shard,
+                protocol,
+                admission,
+                roster,
+            } => {
+                o.insert("msg".to_string(), Json::Str("hello".to_string()));
+                o.insert("shard".to_string(), Json::Num(*shard as f64));
+                o.insert("protocol".to_string(), Json::Num(*protocol as f64));
+                o.insert("admission".to_string(), admission_to_json(admission));
+                o.insert(
+                    "roster".to_string(),
+                    Json::Arr(roster.iter().map(|n| Json::Str(n.clone())).collect()),
+                );
+            }
+            TransportMsg::Welcome { shard, capacity } => {
+                o.insert("msg".to_string(), Json::Str("welcome".to_string()));
+                o.insert("shard".to_string(), Json::Num(*shard as f64));
+                o.insert("capacity".to_string(), Json::Num(*capacity));
+            }
+            TransportMsg::Control(ev) => {
+                o.insert("msg".to_string(), Json::Str("control".to_string()));
+                o.insert("event".to_string(), ev.to_json());
+            }
+            TransportMsg::Poll { epoch, at } => {
+                o.insert("msg".to_string(), Json::Str("poll".to_string()));
+                o.insert("epoch".to_string(), Json::Num(*epoch as f64));
+                o.insert("at".to_string(), Json::Num(*at));
+            }
+            TransportMsg::Digest {
+                shard,
+                at,
+                capacity,
+                committed,
+            } => {
+                o.insert("msg".to_string(), Json::Str("digest".to_string()));
+                o.insert("shard".to_string(), Json::Num(*shard as f64));
+                o.insert("at".to_string(), Json::Num(*at));
+                o.insert("capacity".to_string(), Json::Num(*capacity));
+                o.insert("committed".to_string(), Json::Num(*committed));
+            }
+            TransportMsg::Tick {
+                epoch,
+                at,
+                seed,
+                quotas,
+            } => {
+                o.insert("msg".to_string(), Json::Str("tick".to_string()));
+                o.insert("epoch".to_string(), Json::Num(*epoch as f64));
+                o.insert("at".to_string(), Json::Num(*at));
+                o.insert("seed".to_string(), Json::Str(format!("{seed}")));
+                o.insert(
+                    "quotas".to_string(),
+                    Json::Arr(
+                        quotas
+                            .iter()
+                            .map(|&(id, frames)| {
+                                let mut q = BTreeMap::new();
+                                q.insert("id".to_string(), Json::Num(id as f64));
+                                q.insert("frames".to_string(), Json::Num(frames as f64));
+                                Json::Obj(q)
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            TransportMsg::Slice {
+                epoch,
+                busy,
+                frames,
+                streams,
+            } => {
+                o.insert("msg".to_string(), Json::Str("slice".to_string()));
+                o.insert("epoch".to_string(), Json::Num(*epoch as f64));
+                o.insert("busy".to_string(), Json::Num(*busy));
+                o.insert("frames".to_string(), Json::Num(*frames as f64));
+                o.insert(
+                    "streams".to_string(),
+                    Json::Arr(
+                        streams
+                            .iter()
+                            .map(|s| {
+                                let mut m = BTreeMap::new();
+                                m.insert("id".to_string(), Json::Num(s.id as f64));
+                                m.insert("total".to_string(), Json::Num(s.total as f64));
+                                m.insert("processed".to_string(), Json::Num(s.processed as f64));
+                                m.insert(
+                                    "latencies".to_string(),
+                                    Json::Arr(s.latencies.iter().map(|&l| Json::Num(l)).collect()),
+                                );
+                                Json::Obj(m)
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            TransportMsg::Bye => {
+                o.insert("msg".to_string(), Json::Str("bye".to_string()));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TransportMsg, WireError> {
+        match req_str(v, "msg")? {
+            "hello" => {
+                let adm = v
+                    .get("admission")
+                    .ok_or_else(|| WireError::new("missing or mistyped field \"admission\""))?;
+                let raw = v
+                    .get("roster")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| WireError::new("missing or mistyped field \"roster\""))?;
+                let mut roster = Vec::with_capacity(raw.len());
+                for n in raw {
+                    roster.push(
+                        n.as_str()
+                            .ok_or_else(|| WireError::new("roster entries must be strings"))?
+                            .to_string(),
+                    );
+                }
+                Ok(TransportMsg::Hello {
+                    shard: req_usize(v, "shard")?,
+                    protocol: req_u64(v, "protocol")? as i64,
+                    admission: admission_from_json(adm)?,
+                    roster,
+                })
+            }
+            "welcome" => Ok(TransportMsg::Welcome {
+                shard: req_usize(v, "shard")?,
+                capacity: req_f64(v, "capacity")?,
+            }),
+            "control" => {
+                let ev = v
+                    .get("event")
+                    .ok_or_else(|| WireError::new("missing or mistyped field \"event\""))?;
+                Ok(TransportMsg::Control(WireEvent::from_json(ev)?))
+            }
+            "poll" => Ok(TransportMsg::Poll {
+                epoch: req_usize(v, "epoch")?,
+                at: req_f64(v, "at")?,
+            }),
+            "digest" => Ok(TransportMsg::Digest {
+                shard: req_usize(v, "shard")?,
+                at: req_f64(v, "at")?,
+                capacity: req_f64(v, "capacity")?,
+                committed: req_f64(v, "committed")?,
+            }),
+            "tick" => {
+                let seed = req_str(v, "seed")?
+                    .parse::<u64>()
+                    .map_err(|_| WireError::new("tick seed must be a decimal u64 string"))?;
+                let raw = v
+                    .get("quotas")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| WireError::new("missing or mistyped field \"quotas\""))?;
+                let mut quotas = Vec::with_capacity(raw.len());
+                for q in raw {
+                    quotas.push((req_usize(q, "id")?, req_u64(q, "frames")?));
+                }
+                Ok(TransportMsg::Tick {
+                    epoch: req_usize(v, "epoch")?,
+                    at: req_f64(v, "at")?,
+                    seed,
+                    quotas,
+                })
+            }
+            "slice" => {
+                let raw = v
+                    .get("streams")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| WireError::new("missing or mistyped field \"streams\""))?;
+                let mut streams = Vec::with_capacity(raw.len());
+                for s in raw {
+                    let lat_raw = s
+                        .get("latencies")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| WireError::new("missing or mistyped field \"latencies\""))?;
+                    let mut latencies = Vec::with_capacity(lat_raw.len());
+                    for l in lat_raw {
+                        latencies.push(
+                            l.as_f64()
+                                .ok_or_else(|| WireError::new("latencies must be numbers"))?,
+                        );
+                    }
+                    streams.push(SliceStream {
+                        id: req_usize(s, "id")?,
+                        total: req_u64(s, "total")?,
+                        processed: req_u64(s, "processed")?,
+                        latencies,
+                    });
+                }
+                Ok(TransportMsg::Slice {
+                    epoch: req_usize(v, "epoch")?,
+                    busy: req_f64(v, "busy")?,
+                    frames: req_u64(v, "frames")?,
+                    streams,
+                })
+            }
+            "bye" => Ok(TransportMsg::Bye),
+            other => Err(WireError::new(format!("unknown transport message {other:?}"))),
+        }
+    }
+
+    /// Serialise to a compact JSON string (the frame payload).
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a compact JSON string produced by [`TransportMsg::encode`].
+    pub fn decode(text: &str) -> Result<TransportMsg, WireError> {
+        let v = Json::parse(text).map_err(|e| WireError::new(e.to_string()))?;
+        TransportMsg::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::{ControlAction, ControlOrigin};
+    use crate::fleet::stream::StreamSpec;
+
+    fn roundtrip(msg: &TransportMsg) {
+        let text = msg.encode();
+        let back = TransportMsg::decode(&text).expect("decode");
+        assert_eq!(&back, msg, "wire text: {text}");
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        roundtrip(&TransportMsg::Hello {
+            shard: 1,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
+            roster: vec!["cam0".to_string(), "cam1".to_string()],
+        });
+        roundtrip(&TransportMsg::Welcome {
+            shard: 1,
+            capacity: 7.125,
+        });
+        roundtrip(&TransportMsg::Control(WireEvent::action(
+            2.5,
+            ControlOrigin::Placement,
+            ControlAction::AttachStream(StreamSpec::new("cam0", 7.25, 321).with_weight(2.5)),
+        )));
+        roundtrip(&TransportMsg::Poll { epoch: 3, at: 30.0 });
+        roundtrip(&TransportMsg::Digest {
+            shard: 0,
+            at: 30.0,
+            capacity: 9.5,
+            committed: 7.25,
+        });
+        roundtrip(&TransportMsg::Tick {
+            epoch: 3,
+            at: 30.0,
+            // A seed far outside the f64-exact integer range: the string
+            // encoding must carry it bit-for-bit.
+            seed: 0xDEAD_BEEF_CAFE_F00D,
+            quotas: vec![(0, 25), (3, 12)],
+        });
+        roundtrip(&TransportMsg::Slice {
+            epoch: 3,
+            busy: 12.75,
+            frames: 37,
+            streams: vec![SliceStream {
+                id: 0,
+                total: 25,
+                processed: 23,
+                latencies: vec![0.125, 0.5, 1.0],
+            }],
+        });
+        roundtrip(&TransportMsg::Bye);
+    }
+
+    #[test]
+    fn digest_lowers_to_headroom() {
+        let msg = TransportMsg::Digest {
+            shard: 2,
+            at: 10.0,
+            capacity: 9.5,
+            committed: 4.0,
+        };
+        let h = msg.as_digest().expect("digest");
+        assert_eq!(h.shard, 2);
+        assert_eq!(h.capacity, 9.5);
+        assert!(TransportMsg::Bye.as_digest().is_none());
+    }
+
+    #[test]
+    fn decode_rejects_malformed_messages() {
+        assert!(TransportMsg::decode("not json").is_err());
+        assert!(TransportMsg::decode("{}").is_err());
+        assert!(TransportMsg::decode(r#"{"msg":"launch-missiles"}"#).is_err());
+        // A tick seed must survive as u64: floats and overflow are rejected.
+        assert!(TransportMsg::decode(
+            r#"{"msg":"tick","epoch":0,"at":0,"seed":"1.5","quotas":[]}"#
+        )
+        .is_err());
+        assert!(TransportMsg::decode(
+            r#"{"msg":"tick","epoch":0,"at":0,"seed":"99999999999999999999999","quotas":[]}"#
+        )
+        .is_err());
+        // Control payloads reuse the full WireEvent validation.
+        assert!(TransportMsg::decode(
+            r#"{"msg":"control","event":{"at":0,"origin":"nobody","type":"detach-stream","stream_id":0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn labels_cover_variants() {
+        assert_eq!(
+            TransportMsg::Poll { epoch: 4, at: 0.0 }.label(),
+            "poll(epoch 4)"
+        );
+        assert_eq!(TransportMsg::Bye.label(), "bye");
+        let tick = TransportMsg::Tick {
+            epoch: 1,
+            at: 5.0,
+            seed: 7,
+            quotas: vec![(0, 1)],
+        };
+        assert_eq!(tick.label(), "tick(epoch 1, 1 streams)");
+    }
+}

@@ -1,0 +1,420 @@
+//! Blocking socket transport: TCP and Unix-domain endpoints, a framed
+//! connection type, and a dial-with-backoff client.
+//!
+//! Everything is `std::net` / `std::os::unix::net` — no async runtime,
+//! no new dependencies. One [`FrameConn`] wraps one stream socket with a
+//! [`FrameDecoder`]; [`FrameConn::recv`] blocks until a complete frame
+//! arrives (handling partial reads and split frames) and surfaces peer
+//! loss as [`TransportError::PeerClosed`], distinguishing a clean close
+//! from one that truncated a frame in flight. A default 30-second read
+//! deadline keeps a wedged peer from hanging a blocking session forever;
+//! the session layer treats the timeout like any other peer loss.
+//!
+//! [`connect_with_backoff`] is the client side: it retries a refused
+//! dial with doubling sleeps, because in a real deployment (and in the
+//! tests here) the coordinator usually races the shard processes' bind.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::transport::frame::{encode_frame, FrameDecoder, FrameError};
+use crate::transport::msg::TransportMsg;
+
+/// Default blocking-read deadline on accepted/dialled sockets.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Where a transport peer listens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP address, e.g. `127.0.0.1:0` (loopback, ephemeral port).
+    Tcp(String),
+    /// Unix-domain socket path.
+    Uds(PathBuf),
+}
+
+impl Endpoint {
+    /// Loopback TCP on an ephemeral port (the default for local runs).
+    pub fn loopback() -> Endpoint {
+        Endpoint::Tcp("127.0.0.1:0".to_string())
+    }
+
+    /// A fresh Unix-domain socket path under the system temp dir, unique
+    /// within and across processes.
+    pub fn temp_uds(tag: &str) -> Endpoint {
+        static COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        Endpoint::Uds(std::env::temp_dir().join(format!(
+            "eva-{tag}-{}-{n}.sock",
+            std::process::id()
+        )))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Endpoint::Tcp(addr) => format!("tcp://{addr}"),
+            Endpoint::Uds(path) => format!("uds://{}", path.display()),
+        }
+    }
+}
+
+/// Transport failure as the session layer sees it.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The peer closed the connection. `mid_frame` is true when the
+    /// close truncated a frame in flight (bytes were buffered).
+    PeerClosed { mid_frame: bool },
+    /// Framing was lost (bad magic/version/length/payload).
+    Frame(FrameError),
+    /// Socket-level failure (includes read-deadline expiry).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::PeerClosed { mid_frame: true } => {
+                write!(f, "peer closed the connection mid-frame")
+            }
+            TransportError::PeerClosed { mid_frame: false } => {
+                write!(f, "peer closed the connection")
+            }
+            TransportError::Frame(e) => write!(f, "framing lost: {e}"),
+            TransportError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<FrameError> for TransportError {
+    fn from(e: FrameError) -> TransportError {
+        TransportError::Frame(e)
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> TransportError {
+        TransportError::Io(e)
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Stream {
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            Stream::Uds(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// One framed, blocking transport connection.
+pub struct FrameConn {
+    stream: Stream,
+    decoder: FrameDecoder,
+}
+
+impl FrameConn {
+    fn new(stream: Stream) -> std::io::Result<FrameConn> {
+        stream.set_read_timeout(Some(DEFAULT_TIMEOUT))?;
+        Ok(FrameConn {
+            stream,
+            decoder: FrameDecoder::new(),
+        })
+    }
+
+    /// Override the blocking-read deadline (`None` blocks forever).
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(t)
+    }
+
+    /// Send one message as a frame (write-all + flush).
+    pub fn send(&mut self, msg: &TransportMsg) -> Result<(), TransportError> {
+        let frame = encode_frame(msg)?;
+        self.stream.write_all(&frame)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Block until one complete message arrives. Frames split across any
+    /// number of reads reassemble; a peer close surfaces as
+    /// [`TransportError::PeerClosed`] with the mid-frame flag set when
+    /// buffered bytes were abandoned.
+    pub fn recv(&mut self) -> Result<TransportMsg, TransportError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(msg) = self.decoder.try_next()? {
+                return Ok(msg);
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(TransportError::PeerClosed {
+                    mid_frame: self.decoder.buffered() > 0,
+                });
+            }
+            self.decoder.feed(&chunk[..n]);
+        }
+    }
+}
+
+/// A bound transport listener (server side).
+pub enum Listener {
+    Tcp(TcpListener),
+    Uds(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind to an endpoint. TCP `:0` picks an ephemeral port — read the
+    /// actual address back with [`Listener::local_endpoint`]. A stale
+    /// UDS path from a dead process is removed before binding.
+    pub fn bind(endpoint: &Endpoint) -> std::io::Result<Listener> {
+        match endpoint {
+            Endpoint::Tcp(addr) => Ok(Listener::Tcp(TcpListener::bind(addr.as_str())?)),
+            Endpoint::Uds(path) => {
+                let _ = std::fs::remove_file(path);
+                Ok(Listener::Uds(UnixListener::bind(path)?, path.clone()))
+            }
+        }
+    }
+
+    /// The endpoint peers should dial (with ephemeral ports resolved).
+    pub fn local_endpoint(&self) -> std::io::Result<Endpoint> {
+        match self {
+            Listener::Tcp(l) => Ok(Endpoint::Tcp(l.local_addr()?.to_string())),
+            Listener::Uds(_, path) => Ok(Endpoint::Uds(path.clone())),
+        }
+    }
+
+    /// Block until one peer connects.
+    pub fn accept(&self) -> std::io::Result<FrameConn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (stream, _) = l.accept()?;
+                FrameConn::new(Stream::Tcp(stream))
+            }
+            Listener::Uds(l, _) => {
+                let (stream, _) = l.accept()?;
+                FrameConn::new(Stream::Uds(stream))
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Dial an endpoint once.
+pub fn connect(endpoint: &Endpoint) -> std::io::Result<FrameConn> {
+    match endpoint {
+        Endpoint::Tcp(addr) => FrameConn::new(Stream::Tcp(TcpStream::connect(addr.as_str())?)),
+        Endpoint::Uds(path) => FrameConn::new(Stream::Uds(UnixStream::connect(path)?)),
+    }
+}
+
+/// Dial with exponential backoff: up to `attempts` tries, sleeping
+/// `initial` and doubling between them (so the coordinator may start
+/// before its shards finish binding). Returns the last error when every
+/// attempt fails.
+pub fn connect_with_backoff(
+    endpoint: &Endpoint,
+    attempts: u32,
+    initial: Duration,
+) -> Result<FrameConn, TransportError> {
+    let mut delay = initial;
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..attempts.max(1) {
+        match connect(endpoint) {
+            Ok(conn) => return Ok(conn),
+            Err(e) => last = Some(e),
+        }
+        if attempt + 1 < attempts.max(1) {
+            std::thread::sleep(delay);
+            delay = delay.saturating_mul(2);
+        }
+    }
+    Err(TransportError::Io(last.unwrap_or_else(|| {
+        std::io::Error::other("no connection attempts made")
+    })))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::msg::TransportMsg;
+
+    fn ping(epoch: usize) -> TransportMsg {
+        TransportMsg::Poll {
+            epoch,
+            at: epoch as f64,
+        }
+    }
+
+    fn echo_server(listener: Listener, frames: usize) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut conn = listener.accept().expect("accept");
+            for _ in 0..frames {
+                let msg = conn.recv().expect("server recv");
+                conn.send(&msg).expect("server send");
+            }
+        })
+    }
+
+    #[test]
+    fn tcp_loopback_roundtrip() {
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let server = echo_server(listener, 3);
+        let mut conn = connect(&endpoint).expect("connect");
+        for epoch in 0..3 {
+            conn.send(&ping(epoch)).expect("send");
+            assert_eq!(conn.recv().expect("recv"), ping(epoch));
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn uds_roundtrip_and_path_cleanup() {
+        let endpoint = Endpoint::temp_uds("net-test");
+        let path = match &endpoint {
+            Endpoint::Uds(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        {
+            let listener = Listener::bind(&endpoint).expect("bind");
+            let server = echo_server(listener, 1);
+            let mut conn = connect(&endpoint).expect("connect");
+            conn.send(&ping(7)).expect("send");
+            assert_eq!(conn.recv().expect("recv"), ping(7));
+            server.join().unwrap();
+        }
+        // Listener drop removed the socket file.
+        assert!(!path.exists(), "stale socket at {}", path.display());
+    }
+
+    #[test]
+    fn peer_loss_is_surfaced_and_flags_mid_frame() {
+        // Clean close: PeerClosed { mid_frame: false }.
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let server = std::thread::spawn(move || {
+            let _conn = listener.accept().expect("accept");
+            // Dropped immediately: clean close.
+        });
+        let mut conn = connect(&endpoint).expect("connect");
+        server.join().unwrap();
+        match conn.recv() {
+            Err(TransportError::PeerClosed { mid_frame: false }) => {}
+            other => panic!("expected clean PeerClosed, got {other:?}"),
+        }
+
+        // Mid-frame close: the peer writes half a frame and dies.
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let server = std::thread::spawn(move || {
+            let mut conn = listener.accept().expect("accept");
+            let frame = crate::transport::frame::encode_frame(&ping(0)).expect("encode");
+            match &mut conn.stream {
+                Stream::Tcp(s) => {
+                    s.write_all(&frame[..frame.len() / 2]).expect("half write");
+                    s.flush().expect("flush");
+                }
+                _ => unreachable!(),
+            }
+            // Drop: close with a truncated frame in flight.
+        });
+        let mut conn = connect(&endpoint).expect("connect");
+        server.join().unwrap();
+        match conn.recv() {
+            Err(TransportError::PeerClosed { mid_frame: true }) => {}
+            other => panic!("expected mid-frame PeerClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_on_the_socket_is_a_frame_error() {
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let server = std::thread::spawn(move || {
+            let mut conn = listener.accept().expect("accept");
+            match &mut conn.stream {
+                Stream::Tcp(s) => {
+                    s.write_all(b"GET / HTTP/1.1\r\n").expect("write");
+                    s.flush().expect("flush");
+                }
+                _ => unreachable!(),
+            }
+        });
+        let mut conn = connect(&endpoint).expect("connect");
+        server.join().unwrap();
+        match conn.recv() {
+            Err(TransportError::Frame(FrameError::BadMagic { .. })) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backoff_client_wins_a_race_with_a_slow_bind() {
+        // The UDS path is known before anything binds: dial first, bind
+        // 40 ms later — the backoff client connects on a retry.
+        let endpoint = Endpoint::temp_uds("late-bind");
+        let ep = endpoint.clone();
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            let listener = Listener::bind(&ep).expect("bind");
+            let mut conn = listener.accept().expect("accept");
+            let msg = conn.recv().expect("recv");
+            conn.send(&msg).expect("send");
+        });
+        let mut conn = connect_with_backoff(&endpoint, 8, Duration::from_millis(10))
+            .expect("backoff connect");
+        conn.send(&ping(1)).expect("send");
+        assert_eq!(conn.recv().expect("recv"), ping(1));
+        server.join().unwrap();
+
+        // And a dead endpoint still fails after the attempts run out.
+        let nowhere = Endpoint::temp_uds("nowhere");
+        assert!(matches!(
+            connect_with_backoff(&nowhere, 2, Duration::from_millis(1)),
+            Err(TransportError::Io(_))
+        ));
+    }
+}

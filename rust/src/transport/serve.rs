@@ -1,0 +1,317 @@
+//! Remote wall-clock serving: a `fleet::serve` consumer driven by a
+//! decoded [`EventLog`] stream instead of in-process calls.
+//!
+//! The wall-clock engine ([`crate::fleet::serve::serve_fleet_logged`])
+//! already *emits* its control plane as wire events; this module closes
+//! the loop on the *consuming* side. A consumer process owns a worker
+//! pool and listens on a socket; a driver ships stream membership as
+//! [`TransportMsg::Control`] frames (the same `attach-stream` events
+//! every other layer uses), then a [`TransportMsg::Tick`] as the "go"
+//! barrier. The consumer lowers the accumulated [`EventLog`] into
+//! `(clip, spec)` pairs — clips are synthesised locally from the spec,
+//! keyed by the stream name, because pixels never cross the control
+//! plane — runs the real threaded serve, and answers with its admission
+//! decisions (as control frames, completing the round trip) and a
+//! [`TransportMsg::Slice`] summary.
+//!
+//! [`serve_from_log`] is the transport-free core: any decoded event log
+//! — from a socket, a file, or a replayed run — drives the same serve.
+
+use anyhow::{anyhow, Result};
+
+use crate::control::{ControlAction, EventLog, WireEvent};
+use crate::detector::Detector;
+use crate::fleet::metrics::FleetReport;
+use crate::fleet::serve::{serve_fleet_logged, FleetServeConfig};
+use crate::fleet::stream::StreamSpec;
+use crate::shard::fnv1a;
+use crate::transport::msg::{SliceStream, TransportMsg};
+use crate::transport::net::{connect_with_backoff, Endpoint, Listener, TransportError};
+use crate::video::{generate, presets, Clip};
+
+/// Side length of the synthetic clips a consumer generates for remote
+/// streams (pixels are consumer-local; only specs cross the wire).
+pub const REMOTE_CLIP_SIZE: u32 = 32;
+
+/// Lower an event log's membership into the stream specs it leaves
+/// attached: `attach-stream` events append, `detach-stream` ids index
+/// the attach order. Decision payloads and device verbs are ignored —
+/// the consumer owns its pool.
+pub fn specs_from_log(log: &EventLog) -> Vec<StreamSpec> {
+    let mut specs: Vec<Option<StreamSpec>> = Vec::new();
+    for event in &log.events {
+        match event.as_action() {
+            Some(ControlAction::AttachStream(spec)) => specs.push(Some(spec.clone())),
+            Some(ControlAction::DetachStream(id)) => {
+                if let Some(slot) = specs.get_mut(*id) {
+                    *slot = None;
+                }
+            }
+            _ => {}
+        }
+    }
+    specs.into_iter().flatten().collect()
+}
+
+/// Drive one wall-clock serve from a decoded event log: synthesise a
+/// clip per attached spec (seeded by the stream name, so any consumer
+/// materialises the same pixels for the same stream) and run
+/// [`serve_fleet_logged`] over `config`'s pool. Returns the fleet
+/// report plus the run's own decision log.
+pub fn serve_from_log<F>(
+    log: &EventLog,
+    config: &FleetServeConfig,
+    factory: F,
+) -> Result<(FleetReport, EventLog)>
+where
+    F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
+{
+    let specs = specs_from_log(log);
+    if specs.is_empty() {
+        return Err(anyhow!("event log attaches no streams"));
+    }
+    let clips: Vec<Clip> = specs
+        .iter()
+        .map(|s| {
+            let frames = s.num_frames.min(u32::MAX as u64) as u32;
+            generate(
+                &presets::tiny_clip(REMOTE_CLIP_SIZE, frames, s.fps, fnv1a(&s.name)),
+                None,
+            )
+        })
+        .collect();
+    let pairs: Vec<(&Clip, StreamSpec)> = clips.iter().zip(specs.iter().cloned()).collect();
+    serve_fleet_logged(&pairs, config, factory)
+}
+
+/// Accept one driver session on `listener` and serve it: buffer control
+/// frames into an [`EventLog`], serve on the `Tick` barrier, ship the
+/// decisions back as control frames followed by a summary `Slice`.
+/// Returns the local report, or `None` when the driver left (Bye or
+/// peer loss) without ever serving.
+pub fn run_serve_consumer<F>(
+    listener: &Listener,
+    config: &FleetServeConfig,
+    factory: F,
+) -> Result<Option<(FleetReport, EventLog)>>
+where
+    F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
+{
+    let mut conn = listener.accept()?;
+    let mut log = EventLog::new();
+    let mut served: Option<(FleetReport, EventLog)> = None;
+    loop {
+        let msg = match conn.recv() {
+            Ok(m) => m,
+            Err(TransportError::PeerClosed { .. }) => return Ok(served),
+            Err(e) => return Err(e.into()),
+        };
+        match msg {
+            TransportMsg::Control(event) => log.push(event),
+            TransportMsg::Tick { epoch, .. } => {
+                let (report, decisions) = serve_from_log(&log, config, &factory)?;
+                for event in &decisions.events {
+                    conn.send(&TransportMsg::Control(event.clone()))
+                        .map_err(|e| anyhow!("decision send failed: {e}"))?;
+                }
+                let streams: Vec<SliceStream> = report
+                    .streams
+                    .iter()
+                    .map(|s| SliceStream {
+                        id: s.id,
+                        total: s.metrics.frames_total,
+                        processed: s.metrics.frames_processed,
+                        latencies: Vec::new(),
+                    })
+                    .collect();
+                conn.send(&TransportMsg::Slice {
+                    epoch,
+                    busy: report.device_busy.iter().sum(),
+                    frames: report.total_processed(),
+                    streams,
+                })
+                .map_err(|e| anyhow!("slice send failed: {e}"))?;
+                served = Some((report, decisions));
+            }
+            TransportMsg::Bye => return Ok(served),
+            // Driver-role replies make no sense here; ignore.
+            _ => {}
+        }
+    }
+}
+
+/// What a driver gets back from a remote serve.
+#[derive(Debug, Clone)]
+pub struct RemoteServeOutcome {
+    /// The consumer's admission decisions, as received over the wire.
+    pub decisions: Vec<WireEvent>,
+    /// Per-stream outcomes.
+    pub streams: Vec<SliceStream>,
+    /// Busy seconds summed over the consumer's pool.
+    pub busy: f64,
+    /// Frames processed across all streams.
+    pub processed: u64,
+}
+
+/// Drive a remote serve consumer at `endpoint`: ship `specs` as
+/// attach-stream control frames, fire the `Tick` barrier, and collect
+/// the decision frames and summary slice.
+pub fn drive_remote_serve(
+    endpoint: &Endpoint,
+    specs: &[StreamSpec],
+) -> Result<RemoteServeOutcome> {
+    let mut conn = connect_with_backoff(endpoint, 10, std::time::Duration::from_millis(5))
+        .map_err(|e| anyhow!("dial {} failed: {e}", endpoint.label()))?;
+    // The consumer serves in wall-clock time: a paced run legitimately
+    // takes as long as the video lasts, so the driver must not trip the
+    // default 30 s read deadline while waiting for results (peer loss is
+    // still detected instantly via the closed socket).
+    conn.set_read_timeout(None)
+        .map_err(|e| anyhow!("clearing read deadline failed: {e}"))?;
+    for spec in specs {
+        let event = WireEvent::action(
+            0.0,
+            crate::control::ControlOrigin::Placement,
+            ControlAction::AttachStream(spec.clone()),
+        );
+        conn.send(&TransportMsg::Control(event))
+            .map_err(|e| anyhow!("attach send failed: {e}"))?;
+    }
+    conn.send(&TransportMsg::Tick {
+        epoch: 0,
+        at: 0.0,
+        seed: 0,
+        quotas: Vec::new(),
+    })
+    .map_err(|e| anyhow!("go barrier failed: {e}"))?;
+
+    let mut decisions = Vec::new();
+    loop {
+        match conn.recv().map_err(|e| anyhow!("reply failed: {e}"))? {
+            TransportMsg::Control(event) => decisions.push(event),
+            TransportMsg::Slice {
+                busy,
+                frames,
+                streams,
+                ..
+            } => {
+                let _ = conn.send(&TransportMsg::Bye);
+                return Ok(RemoteServeOutcome {
+                    decisions,
+                    streams,
+                    busy,
+                    processed: frames,
+                });
+            }
+            other => return Err(anyhow!("unexpected reply {}", other.label())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::ControlOrigin;
+    use crate::fleet::admission::AdmissionPolicy;
+    use crate::types::{Detection, Frame};
+
+    struct EchoDetector;
+
+    impl Detector for EchoDetector {
+        fn detect(&mut self, frame: &Frame) -> Vec<Detection> {
+            frame
+                .ground_truth
+                .iter()
+                .map(|gt| Detection {
+                    bbox: gt.bbox,
+                    class_id: gt.class_id,
+                    score: 0.9,
+                })
+                .collect()
+        }
+
+        fn label(&self) -> String {
+            "echo".into()
+        }
+    }
+
+    fn attach(at: f64, spec: StreamSpec) -> WireEvent {
+        WireEvent::action(at, ControlOrigin::Placement, ControlAction::AttachStream(spec))
+    }
+
+    #[test]
+    fn specs_from_log_applies_detaches_in_attach_order() {
+        let mut log = EventLog::new();
+        log.push(attach(0.0, StreamSpec::new("a", 10.0, 50)));
+        log.push(attach(0.0, StreamSpec::new("b", 10.0, 50)));
+        log.push(attach(0.0, StreamSpec::new("c", 10.0, 50)));
+        log.push(WireEvent::action(
+            1.0,
+            ControlOrigin::Placement,
+            ControlAction::DetachStream(1),
+        ));
+        let specs = specs_from_log(&log);
+        assert_eq!(
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(),
+            vec!["a", "c"]
+        );
+    }
+
+    #[test]
+    fn serve_from_log_matches_direct_serve_decisions() {
+        let specs = vec![
+            StreamSpec::new("cam-a", 20.0, 30).with_window(4),
+            StreamSpec::new("cam-b", 20.0, 30).with_window(4),
+        ];
+        let mut log = EventLog::new();
+        for s in &specs {
+            log.push(attach(0.0, s.clone()));
+        }
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::default(),
+            device_rates: vec![30.0],
+            paced: false,
+        };
+        let (report, decisions) =
+            serve_from_log(&log, &config, |_| Ok(Box::new(EchoDetector) as Box<dyn Detector>))
+                .expect("serve");
+        assert_eq!(report.streams.len(), 2);
+        assert_eq!(decisions.len(), 2);
+        // The log-driven run takes the same decisions as driving
+        // serve_fleet_logged directly with the same specs and pool.
+        let clips: Vec<Clip> = specs
+            .iter()
+            .map(|s| {
+                generate(
+                    &presets::tiny_clip(
+                        REMOTE_CLIP_SIZE,
+                        s.num_frames as u32,
+                        s.fps,
+                        fnv1a(&s.name),
+                    ),
+                    None,
+                )
+            })
+            .collect();
+        let pairs: Vec<(&Clip, StreamSpec)> =
+            clips.iter().zip(specs.iter().cloned()).collect();
+        let (_, direct) = serve_fleet_logged(&pairs, &config, |_| {
+            Ok(Box::new(EchoDetector) as Box<dyn Detector>)
+        })
+        .expect("direct serve");
+        assert_eq!(decisions, direct);
+    }
+
+    #[test]
+    fn empty_log_is_an_error() {
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::default(),
+            device_rates: vec![10.0],
+            paced: false,
+        };
+        assert!(serve_from_log(&EventLog::new(), &config, |_| {
+            Ok(Box::new(EchoDetector) as Box<dyn Detector>)
+        })
+        .is_err());
+    }
+}

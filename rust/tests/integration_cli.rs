@@ -1,0 +1,95 @@
+//! Integration tests for the `eva` binary's command-line contract:
+//! malformed invocations — unknown subcommands, unknown flags, stray
+//! positional arguments — must exit non-zero *with a usage pointer*
+//! instead of being silently ignored, and well-formed invocations must
+//! keep exiting zero.
+
+use std::process::{Command, Output};
+
+fn eva(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_eva"))
+        .args(args)
+        .output()
+        .expect("run eva binary")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn unknown_subcommand_exits_2_with_usage() {
+    let out = eva(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("unknown subcommand"), "{err}");
+    assert!(err.contains("usage: eva"), "{err}");
+    assert!(err.contains("--help"), "{err}");
+}
+
+#[test]
+fn unknown_flag_exits_2_with_usage() {
+    let out = eva(&["fleet", "--bogus-flag"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("unknown option --bogus-flag"), "{err}");
+    assert!(err.contains("usage: eva"), "{err}");
+}
+
+#[test]
+fn stray_positional_exits_2_instead_of_being_ignored() {
+    // `eva nselect extra` used to run as if `extra` were never typed.
+    let out = eva(&["nselect", "extra"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("unexpected argument \"extra\""), "{err}");
+    assert!(err.contains("usage: eva"), "{err}");
+}
+
+#[test]
+fn flag_missing_its_value_exits_2() {
+    let out = eva(&["fleet", "--streams"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--streams needs a value"), "{}", stderr(&out));
+}
+
+#[test]
+fn help_exits_0_and_lists_subcommands_and_options() {
+    let out = eva(&["--help"]);
+    assert_eq!(out.status.code(), Some(0));
+    let text = stdout(&out);
+    assert!(text.contains("subcommands:"), "{text}");
+    assert!(text.contains("shard"), "{text}");
+    assert!(text.contains("--transport"), "{text}");
+}
+
+#[test]
+fn wellformed_invocation_still_exits_0() {
+    let out = eva(&["nselect", "--lambda", "14", "--mu", "2.5"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("recommended band"), "{}", stdout(&out));
+}
+
+#[test]
+fn json_mode_emits_exactly_one_parseable_document() {
+    // CI uploads these stdouts as BENCH_*.json artifacts: a human banner
+    // in front of the JSON would corrupt every downstream consumer.
+    let out = eva(&["fleet", "--json", "--streams", "2", "--frames", "30"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    eva::util::json::Json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("fleet --json stdout is not pure JSON ({e}): {text}"));
+}
+
+#[test]
+fn runtime_failure_keeps_exit_1_distinct_from_usage_errors() {
+    // A known subcommand with a semantically invalid value: parsed fine,
+    // fails at run time — exit 1, not the usage exit 2.
+    let out = eva(&["table", "--id", "999"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown table id"), "{}", stderr(&out));
+}

@@ -1,0 +1,203 @@
+//! Integration tests for the cross-host transport: loopback parity of
+//! the socket co-simulation against the in-process twin, connection
+//! loss surfacing as shard loss with one-interval re-placement, the
+//! remote `fleet::serve` consumer driven by a decoded event-log stream,
+//! and determinism of the remote runner across repeated runs.
+
+use eva::control::ControlAction;
+use eva::detector::Detector;
+use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use eva::experiments::transport::{connection_loss, loopback_parity};
+use eva::fleet::{AdmissionPolicy, FleetServeConfig, StreamSpec};
+use eva::shard::{run_sharded_remote, RemoteTransport, ShardScenario};
+use eva::transport::{drive_remote_serve, run_serve_consumer, Endpoint, Listener, TransportMsg};
+use eva::types::{Detection, Frame};
+
+fn pool(n: usize, rate: f64) -> Vec<DeviceInstance> {
+    (0..n)
+        .map(|i| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, rate))
+        .collect()
+}
+
+fn uniform_streams(n: usize, fps: f64, frames: u64, window: usize) -> Vec<StreamSpec> {
+    (0..n)
+        .map(|i| StreamSpec::new(&format!("s{i}"), fps, frames).with_window(window))
+        .collect()
+}
+
+struct EchoDetector;
+
+impl Detector for EchoDetector {
+    fn detect(&mut self, frame: &Frame) -> Vec<Detection> {
+        frame
+            .ground_truth
+            .iter()
+            .map(|gt| Detection {
+                bbox: gt.bbox,
+                class_id: gt.class_id,
+                score: 0.9,
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        "echo".into()
+    }
+}
+
+/// Acceptance: a 2-shard run over loopback TCP (and over Unix-domain
+/// sockets) matches the in-process co-simulation's delivered FPS within
+/// 5% at equal capacity.
+#[test]
+fn loopback_socket_cosim_matches_inproc_within_5_percent() {
+    let (_, outcomes) = loopback_parity(83);
+    assert_eq!(outcomes[0].transport, "inproc");
+    assert_eq!(outcomes.len(), 3);
+    for o in &outcomes[1..] {
+        assert!(
+            (o.vs_inproc - 1.0).abs() < 0.05,
+            "{}: σ {:.2} is {:.3}× the in-process co-sim",
+            o.transport,
+            o.delivered_fps,
+            o.vs_inproc
+        );
+        // The socket runs routed real control traffic (8 placements at
+        // minimum), every event of it a decoded frame.
+        assert!(o.control_events >= 8, "{}: {} events", o.transport, o.control_events);
+    }
+}
+
+/// Acceptance: killing one shard's connection re-places all its
+/// orphaned streams within one gossip interval.
+#[test]
+fn killed_connection_replaces_orphans_within_one_gossip_interval() {
+    let (_, o) = connection_loss(89);
+    assert_eq!(o.orphans, 3, "{o:?}");
+    assert!(o.replaced_within_interval, "{o:?}");
+    assert!(o.worst_gap <= 10.0 + 1e-9, "{o:?}");
+    assert_eq!(o.shards_alive, 2);
+    assert!(o.delivered_fps > 0.0);
+}
+
+/// The remote runner is deterministic: same scenario, same transport,
+/// identical frame accounting and control logs across runs.
+#[test]
+fn remote_runs_are_deterministic_and_transport_agnostic() {
+    let scenario = ShardScenario::new(
+        vec![pool(3, 2.5), pool(3, 2.5)],
+        uniform_streams(6, 2.5, 120, 4),
+    )
+    .with_gossip(10.0)
+    .with_epochs(8)
+    .with_seed(97);
+    let tcp_a = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("tcp a");
+    let tcp_b = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("tcp b");
+    assert_eq!(tcp_a.total_processed(), tcp_b.total_processed());
+    assert_eq!(tcp_a.control_log, tcp_b.control_log);
+    // The transport family changes the socket, not the outcome.
+    let uds = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("uds");
+    assert_eq!(uds.total_processed(), tcp_a.total_processed());
+    assert_eq!(uds.control_log, tcp_a.control_log);
+}
+
+/// The remote serve consumer takes exactly the admission decisions the
+/// in-process wall-clock engine takes for the same specs and pool, and
+/// ships them back as decoded control frames.
+#[test]
+fn remote_serve_consumer_matches_local_decisions() {
+    let endpoint = Endpoint::temp_uds("it-serve");
+    let listener = Listener::bind(&endpoint).expect("bind");
+    let config = FleetServeConfig {
+        admission: AdmissionPolicy::default(),
+        device_rates: vec![60.0],
+        paced: false,
+    };
+    let consumer_config = config.clone();
+    let consumer = std::thread::spawn(move || {
+        run_serve_consumer(&listener, &consumer_config, |_| {
+            Ok(Box::new(EchoDetector) as Box<dyn Detector>)
+        })
+    });
+
+    let specs = vec![
+        StreamSpec::new("cam-a", 25.0, 40).with_window(4),
+        StreamSpec::new("cam-b", 25.0, 40).with_window(4),
+        StreamSpec::new("cam-c", 25.0, 40).with_window(4),
+    ];
+    let outcome = drive_remote_serve(&endpoint, &specs).expect("drive");
+    let (report, decisions) = consumer
+        .join()
+        .expect("consumer thread")
+        .expect("consumer ran")
+        .expect("consumer served");
+
+    // One decision frame per stream, identical to the consumer's local
+    // wire log (they crossed the socket and decoded back equal).
+    assert_eq!(outcome.decisions.len(), specs.len());
+    assert_eq!(outcome.decisions, decisions.events);
+    for (i, s) in report.streams.iter().enumerate() {
+        assert_eq!(outcome.streams[i].id, s.id);
+        assert_eq!(outcome.streams[i].processed, s.metrics.frames_processed);
+    }
+    assert!(outcome.processed > 0);
+    assert_eq!(
+        outcome.processed,
+        report.streams.iter().map(|s| s.metrics.frames_processed).sum::<u64>()
+    );
+}
+
+/// A remote run over TCP with a migration-provoking placement: the
+/// control log shows the detach→attach pair crossing the wire and the
+/// stream ends on the target shard.
+#[test]
+fn remote_migration_crosses_the_wire_as_detach_attach() {
+    // Round-robin parks both heavy streams by arrival index: demands
+    // [9, 1, 9, 1] put 18 FPS on shard 0 (capacity 14.25) — the gossip
+    // rebalancer must migrate one heavy stream.
+    let mut streams = Vec::new();
+    for (i, fps) in [9.0, 1.0, 9.0, 1.0].iter().enumerate() {
+        streams.push(StreamSpec::new(&format!("s{i}"), *fps, (*fps * 60.0) as u64).with_window(4));
+    }
+    let scenario = ShardScenario::new(vec![pool(6, 2.5), pool(6, 2.5)], streams)
+        .with_policy(eva::shard::PlacementPolicy::RoundRobin)
+        .with_gossip(10.0)
+        .with_epochs(8)
+        .with_seed(101);
+    let report = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
+    assert_eq!(report.migrations, 1, "{:?}", report.control_log.len());
+    let detaches = report
+        .control_log
+        .iter()
+        .filter(|c| matches!(c.event.as_action(), Some(ControlAction::DetachStream(_))))
+        .count();
+    assert!(detaches >= 1);
+    let migrated: Vec<_> = report.streams.iter().filter(|s| s.migrations > 0).collect();
+    assert_eq!(migrated.len(), 1);
+    assert_eq!(migrated[0].demand, 9.0);
+}
+
+/// Session-protocol sanity over a raw connection: a driver that speaks
+/// garbage gets a framing error, not a hang or a panic.
+#[test]
+fn consumer_survives_driver_going_silent_after_bye() {
+    let endpoint = Endpoint::temp_uds("it-bye");
+    let listener = Listener::bind(&endpoint).expect("bind");
+    let config = FleetServeConfig {
+        admission: AdmissionPolicy::default(),
+        device_rates: vec![50.0],
+        paced: false,
+    };
+    let consumer = std::thread::spawn(move || {
+        run_serve_consumer(&listener, &config, |_| {
+            Ok(Box::new(EchoDetector) as Box<dyn Detector>)
+        })
+    });
+    let mut conn =
+        eva::transport::connect_with_backoff(&endpoint, 10, std::time::Duration::from_millis(5))
+            .expect("connect");
+    conn.send(&TransportMsg::Bye).expect("bye");
+    drop(conn);
+    // Bye before any Tick: the consumer returns cleanly with no run.
+    let served = consumer.join().expect("thread").expect("consumer ok");
+    assert!(served.is_none());
+}
