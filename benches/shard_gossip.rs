@@ -8,7 +8,7 @@
 //! and one full sharded co-simulation.
 
 use eva::control::{ControlAction, ControlOrigin, WireEvent};
-use eva::experiments::shard::{balanced_split, shard_failure};
+use eva::experiments::shard::{autoscale_overload, balanced_split, shard_failure};
 use eva::fleet::StreamSpec;
 use eva::util::benchkit::{black_box, Bench};
 
@@ -39,6 +39,17 @@ fn main() {
     );
     println!("shape OK: shard-loss orphans re-placed within one gossip interval");
 
+    let (overload_table, migrate_only, autoscaled) = autoscale_overload(41);
+    print!("{}", overload_table.render());
+    assert!(
+        autoscaled.migrations < migrate_only.migrations,
+        "local scaling must cut migrations: {} vs {}",
+        autoscaled.migrations,
+        migrate_only.migrations
+    );
+    assert!(autoscaled.scale_actions >= 1 && autoscaled.audit_clean, "{autoscaled:?}");
+    println!("shape OK: per-shard autoscale cuts migrations at 2x load, audit log clean");
+
     // Control-plane wire cost: encode + decode one attach event (the
     // largest payload) per iteration batch.
     let spec = StreamSpec::new("bench-stream", 12.5, 3_000).with_window(8);
@@ -63,4 +74,16 @@ fn main() {
         let (_, outcomes) = balanced_split(37);
         black_box(outcomes[1].delivered_fps.to_bits())
     });
+
+    // The closed-loop variant: every epoch slice also runs the shard's
+    // AutoscaleController through the FleetController seam — this is
+    // what a sharded-autoscale sweep cell pays over the plain co-sim.
+    bench.run(
+        "shard sim: autoscale overload co-sim (2 runs)",
+        Some(2.0 * (4.0 * 285.0 + 4.0 * 30.0)),
+        || {
+            let (_, mo, aut) = autoscale_overload(53);
+            black_box(((mo.migrations as u64) << 32) | aut.scale_actions as u64)
+        },
+    );
 }

@@ -9,12 +9,19 @@
 //! Part 2: shard loss. One of three shards dies mid-run; its orphaned
 //! streams are re-placed on the survivors within one gossip interval.
 //!
+//! Part 3: autoscale per shard. Round-robin parks 2× the admission
+//! capacity on shard 0; with an embedded `AutoscaleController` the
+//! shard grows its own pool (digests advertise post-scale headroom, so
+//! the migration planner stays idle) and every scale action lands in
+//! the coordinator's replayable audit log.
+//!
 //! ```sh
 //! cargo run --release --example sharded_serving
 //! ```
 
-use eva::control::EventLog;
+use eva::control::{ControlOrigin, EventLog};
 use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use eva::experiments::shard::overload_scenario;
 use eva::fleet::StreamSpec;
 use eva::shard::{run_sharded, PlacementPolicy, ShardScenario};
 
@@ -86,10 +93,46 @@ fn main() {
     println!("== shard loss: 1 of 3 instances dies at t = 20 s ==\n");
     print!("{}", report.stream_table().render());
     println!(
-        "{} orphans, worst re-placement gap {:.1} s (gossip interval {:.1} s), all within one interval: {}",
+        "{} orphans, worst re-placement gap {:.1} s (gossip interval {:.1} s), all within one interval: {}\n",
         report.orphan_count(),
         report.worst_orphan_gap(),
         report.gossip_interval,
         report.orphans_replaced_within(report.gossip_interval),
+    );
+
+    // ---- Part 3: autoscale per shard at 2× load ------------------------
+    let migrate_only = run_sharded(&overload_scenario(13, false));
+    let scaled = run_sharded(&overload_scenario(13, true));
+
+    println!("== autoscale per shard: 2× overload on shard 0 ==\n");
+    println!(
+        "migrate-only: {} migrations, {} scale actions, worst p99 {:.2} s",
+        migrate_only.migrations,
+        migrate_only.scale_actions(),
+        migrate_only.worst_p99(),
+    );
+    println!(
+        "autoscale:    {} migrations, {} scale actions, worst p99 {:.2} s",
+        scaled.migrations,
+        scaled.scale_actions(),
+        scaled.worst_p99(),
+    );
+    assert!(scaled.migrations < migrate_only.migrations);
+    println!("\nshard-local scale actions, as the coordinator audited them:");
+    for c in scaled
+        .control_log
+        .iter()
+        .filter(|c| c.event.origin == ControlOrigin::Controller)
+        .take(6)
+    {
+        println!("  shard {} -> {}", c.shard, c.event.encode());
+    }
+    let audit = scaled.audit_log();
+    let decoded = EventLog::decode(&audit.encode()).expect("audit log round-trips");
+    assert_eq!(decoded, audit);
+    println!(
+        "audit log: {} events ({} scale actions), decodes back identically",
+        audit.len(),
+        scaled.scale_actions(),
     );
 }

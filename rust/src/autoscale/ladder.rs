@@ -34,7 +34,7 @@ pub fn staleness_factor(age_seconds: f64) -> f64 {
 }
 
 /// One rung of the ladder.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Rung {
     pub name: String,
     /// Relative service rate of the rung's model, in any consistent
@@ -46,7 +46,7 @@ pub struct Rung {
 }
 
 /// The Pareto frontier, rung 0 = highest quality, ascending speedup.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelLadder {
     pub rungs: Vec<Rung>,
 }

@@ -74,7 +74,11 @@ pub fn device_band(demands: &[f64], mu: f64, util: f64) -> NRange {
 }
 
 /// Autoscale policy parameters.
-#[derive(Debug, Clone)]
+///
+/// Serialisable: [`crate::control::wire::autoscale_config_to_json`]
+/// round-trips the whole configuration (ladder included), so a
+/// coordinator can ship it to a remote shard in the session handshake.
+#[derive(Debug, Clone, PartialEq)]
 pub struct AutoscaleConfig {
     /// Sliding signal window (seconds of fleet time).
     pub signal_window: f64,
@@ -176,6 +180,21 @@ impl AutoscaleController {
             up_backoff: Vec::new(),
             last_regime: Vec::new(),
         }
+    }
+
+    /// Epoch-slice boundary reset for drivers that feed the controller
+    /// one sub-run at a time ([`crate::shard::autoscale`]): stream ids
+    /// are slice-local and residency changes between slices, so signal
+    /// windows and per-stream quality state must not carry across. The
+    /// device-action cooldown clock and the replica-id counter *do*
+    /// persist — a cooldown legitimately spans a gossip epoch, and
+    /// replica ids must stay fresh across the whole shard run.
+    pub fn begin_slice(&mut self) {
+        self.signals = FleetSignals::new(self.cfg.signal_window.max(1e-3));
+        self.last_rung_action.clear();
+        self.last_step_up.clear();
+        self.up_backoff.clear();
+        self.last_regime.clear();
     }
 
     fn ensure_stream(&mut self, sid: StreamId) {
@@ -445,6 +464,130 @@ mod tests {
         // Utilisation headroom scales the band up.
         let (lo95, hi95) = capacity_band(&[14.0, 5.0], 0.95);
         assert!(lo95 > lo && hi95 > hi);
+    }
+
+    #[test]
+    fn zero_device_pool_scales_up_and_respects_cooldown() {
+        // A shard whose pool is empty (every device detached or a cold
+        // start) must attach toward the band floor immediately — no
+        // signal samples are needed, the capacity shortfall alone drives
+        // the action — and then hold its cooldown.
+        let cfg = AutoscaleConfig {
+            target_utilization: 1.0,
+            ..AutoscaleConfig::default()
+        };
+        let mut ctl = AutoscaleController::new(cfg.clone());
+        let mut reg = crate::fleet::registry::FleetRegistry::new(
+            Vec::new(),
+            AdmissionPolicy::admit_all(),
+        );
+        reg.attach_stream(crate::fleet::stream::StreamSpec::new("s0", 5.0, 100), 0.0);
+        let actions = FleetController::act(&mut ctl, 0.0, &reg);
+        assert_eq!(actions.len(), 1, "{actions:?}");
+        assert!(matches!(actions[0], ControlAction::AttachDevice(_)));
+        // Within the cooldown the controller stays quiet even though the
+        // (unchanged) pool is still below the floor...
+        assert!(FleetController::act(&mut ctl, cfg.cooldown * 0.5, &reg).is_empty());
+        // ...and acts again once the cooldown has elapsed.
+        let again = FleetController::act(&mut ctl, cfg.cooldown + 0.1, &reg);
+        assert_eq!(again.len(), 1, "{again:?}");
+        assert!(matches!(again[0], ControlAction::AttachDevice(_)));
+    }
+
+    #[test]
+    fn band_exactly_met_takes_no_action() {
+        // Σμ exactly equal to the band (lo == hi == 10): neither an
+        // attach (capacity is not strictly below the ceiling) nor a
+        // detach (the survivor capacity would not clear the floor with
+        // the hysteresis margin) — the controller must not flap at the
+        // fixed point.
+        let cfg = AutoscaleConfig {
+            target_utilization: 1.0,
+            ..AutoscaleConfig::default()
+        };
+        let mut ctl = AutoscaleController::new(cfg.clone());
+        let devices: Vec<DeviceInstance> = (0..4)
+            .map(|i| {
+                DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, 2.5)
+            })
+            .collect();
+        let mut reg = crate::fleet::registry::FleetRegistry::new(
+            devices,
+            AdmissionPolicy::admit_all(),
+        );
+        reg.attach_stream(crate::fleet::stream::StreamSpec::new("a", 5.0, 1000), 0.0);
+        reg.attach_stream(crate::fleet::stream::StreamSpec::new("b", 5.0, 1000), 0.0);
+        let (lo, hi) = capacity_band(&[5.0, 5.0], cfg.target_utilization);
+        assert_eq!((lo, hi), (10.0, 10.0));
+        for t in [0.0, 6.0, 12.0, 30.0] {
+            assert!(
+                FleetController::act(&mut ctl, t, &reg).is_empty(),
+                "unexpected action at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_up_denied_at_pool_capacity_cap() {
+        // Capacity far below the floor but the pool is already at
+        // max_devices: the controller must deny the attach (and must not
+        // detach either — the shard is starved, not over-provisioned).
+        let cfg = AutoscaleConfig {
+            target_utilization: 1.0,
+            max_devices: 2,
+            ..AutoscaleConfig::default()
+        };
+        let mut ctl = AutoscaleController::new(cfg);
+        let devices: Vec<DeviceInstance> = (0..2)
+            .map(|i| {
+                DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, 2.5)
+            })
+            .collect();
+        let mut reg = crate::fleet::registry::FleetRegistry::new(
+            devices,
+            AdmissionPolicy::admit_all(),
+        );
+        reg.attach_stream(crate::fleet::stream::StreamSpec::new("s0", 10.0, 1000), 0.0);
+        for t in [0.0, 10.0, 20.0] {
+            assert!(
+                FleetController::act(&mut ctl, t, &reg).is_empty(),
+                "actions at t={t} despite max_devices cap"
+            );
+        }
+    }
+
+    #[test]
+    fn begin_slice_keeps_cooldown_clock_and_replica_counter() {
+        // The slice reset clears signal/quality state but must NOT clear
+        // the device cooldown: an attach late in one epoch still blocks
+        // an attach early in the next.
+        let cfg = AutoscaleConfig {
+            target_utilization: 1.0,
+            ..AutoscaleConfig::default()
+        };
+        let mut ctl = AutoscaleController::new(cfg.clone());
+        let mut reg = crate::fleet::registry::FleetRegistry::new(
+            Vec::new(),
+            AdmissionPolicy::admit_all(),
+        );
+        reg.attach_stream(crate::fleet::stream::StreamSpec::new("s0", 5.0, 100), 0.0);
+        let first = FleetController::act(&mut ctl, 9.0, &reg);
+        assert_eq!(first.len(), 1);
+        ctl.begin_slice();
+        // t=10 is a new gossip epoch but only 1 s after the attach: the
+        // cooldown (default 5 s) spans the epoch boundary.
+        assert!(FleetController::act(&mut ctl, 10.0, &reg).is_empty());
+        let later = FleetController::act(&mut ctl, 9.0 + cfg.cooldown + 0.1, &reg);
+        assert_eq!(later.len(), 1, "{later:?}");
+        // Replica ids keep advancing across the slice boundary.
+        let ids: Vec<usize> = [&first[0], &later[0]]
+            .iter()
+            .map(|a| match a {
+                ControlAction::AttachDevice(d) => d.replica,
+                other => panic!("expected attach, got {other:?}"),
+            })
+            .collect();
+        assert!(ids[1] > ids[0], "replica ids {ids:?}");
     }
 
     #[test]

@@ -21,6 +21,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::autoscale::ladder::{ModelLadder, Rung};
+use crate::autoscale::policy::AutoscaleConfig;
 use crate::control::plane::{ControlAction, ControlOrigin};
 use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use crate::fleet::admission::{AdmissionMode, AdmissionPolicy, Decision, DegradeMode};
@@ -424,6 +426,104 @@ pub fn admission_from_json(v: &Json) -> Result<AdmissionPolicy, WireError> {
     })
 }
 
+// ---- AutoscaleConfig ---------------------------------------------------
+
+/// Serialise a shard-local autoscale configuration. The wire format
+/// covers the whole control vocabulary, and per-shard capacity control
+/// ([`crate::shard::autoscale`]) is configured by the coordinator: the
+/// config rides the transport handshake so a remote shard runs the
+/// closed loop with exactly the coordinator's parameters. Ladders are
+/// carried rung-for-rung (no re-pruning on decode) so the round trip is
+/// the identity.
+pub fn autoscale_config_to_json(cfg: &AutoscaleConfig) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("signal_window".to_string(), Json::Num(cfg.signal_window));
+    o.insert("tick".to_string(), Json::Num(cfg.tick));
+    o.insert("p99_bound".to_string(), Json::Num(cfg.p99_bound));
+    o.insert("max_drop_rate".to_string(), Json::Num(cfg.max_drop_rate));
+    o.insert("cooldown".to_string(), Json::Num(cfg.cooldown));
+    o.insert("hysteresis".to_string(), Json::Num(cfg.hysteresis));
+    o.insert("recovery_frac".to_string(), Json::Num(cfg.recovery_frac));
+    o.insert("min_devices".to_string(), Json::Num(cfg.min_devices as f64));
+    o.insert("max_devices".to_string(), Json::Num(cfg.max_devices as f64));
+    o.insert(
+        "device_kind".to_string(),
+        Json::Str(kind_code(cfg.device_kind).to_string()),
+    );
+    o.insert(
+        "device_model".to_string(),
+        Json::Str(model_code(cfg.device_model).to_string()),
+    );
+    o.insert("device_rate".to_string(), Json::Num(cfg.device_rate));
+    o.insert(
+        "ladder".to_string(),
+        match &cfg.ladder {
+            None => Json::Null,
+            Some(l) => Json::Arr(
+                l.rungs
+                    .iter()
+                    .map(|r| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".to_string(), Json::Str(r.name.clone()));
+                        m.insert("speedup".to_string(), Json::Num(r.speedup));
+                        m.insert("quality".to_string(), Json::Num(r.quality));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        },
+    );
+    o.insert(
+        "target_utilization".to_string(),
+        Json::Num(cfg.target_utilization),
+    );
+    Json::Obj(o)
+}
+
+pub fn autoscale_config_from_json(v: &Json) -> Result<AutoscaleConfig, WireError> {
+    let ladder = match v.get("ladder") {
+        Some(Json::Null) | None => None,
+        Some(Json::Arr(a)) => {
+            let mut rungs = Vec::with_capacity(a.len());
+            for r in a {
+                let speedup = req_f64(r, "speedup")?;
+                if !speedup.is_finite() || speedup <= 0.0 {
+                    return Err(WireError::new("ladder rung speedup must be positive"));
+                }
+                rungs.push(Rung {
+                    name: req_str(r, "name")?.to_string(),
+                    speedup,
+                    quality: req_f64(r, "quality")?,
+                });
+            }
+            Some(ModelLadder { rungs })
+        }
+        _ => return Err(WireError::missing("ladder")),
+    };
+    let device_rate = req_f64(v, "device_rate")?;
+    if !device_rate.is_finite() || device_rate <= 0.0 {
+        return Err(WireError::new("autoscale device_rate must be positive"));
+    }
+    Ok(AutoscaleConfig {
+        signal_window: req_f64(v, "signal_window")?,
+        tick: req_f64(v, "tick")?,
+        p99_bound: req_f64(v, "p99_bound")?,
+        max_drop_rate: req_f64(v, "max_drop_rate")?,
+        cooldown: req_f64(v, "cooldown")?,
+        hysteresis: req_f64(v, "hysteresis")?,
+        recovery_frac: req_f64(v, "recovery_frac")?,
+        min_devices: req_usize(v, "min_devices")?,
+        max_devices: req_usize(v, "max_devices")?,
+        device_kind: kind_from_code(req_str(v, "device_kind")?)
+            .ok_or_else(|| WireError::new("unknown device kind"))?,
+        device_model: DetectorModelId::parse(req_str(v, "device_model")?)
+            .ok_or_else(|| WireError::new("unknown detector model"))?,
+        device_rate,
+        ladder,
+        target_utilization: req_f64(v, "target_utilization")?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,6 +642,91 @@ mod tests {
             assert_eq!(back.degrade, p.degrade);
         }
         assert!(admission_from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn autoscale_config_roundtrips() {
+        let plain = AutoscaleConfig::default();
+        let laddered = AutoscaleConfig {
+            signal_window: 2.5,
+            tick: 0.5,
+            cooldown: 12.5,
+            min_devices: 2,
+            max_devices: 9,
+            device_kind: DeviceKind::FastCpu,
+            device_model: DetectorModelId::Ssd300,
+            device_rate: 3.75,
+            target_utilization: 0.875,
+            ..AutoscaleConfig::default()
+        }
+        .with_ladder(ModelLadder::pareto(vec![
+            Rung { name: "full".into(), speedup: 1.0, quality: 0.86 },
+            Rung { name: "tiny".into(), speedup: 2.6, quality: 0.69 },
+        ]));
+        for cfg in [plain, laddered] {
+            let text = autoscale_config_to_json(&cfg).to_string();
+            let back = autoscale_config_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, cfg, "wire text: {text}");
+        }
+        // Missing fields and malformed ladders are rejected, not defaulted.
+        assert!(autoscale_config_from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = autoscale_config_to_json(&AutoscaleConfig::default());
+        if let Json::Obj(o) = &mut j {
+            o.insert("ladder".to_string(), Json::Str("oops".to_string()));
+        }
+        assert!(autoscale_config_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn random_autoscale_configs_survive_the_codec() {
+        use crate::util::prop::{check, Config};
+        check("autoscale config roundtrip", Config::default(), |rng| {
+            let ladder = if rng.chance(0.5) {
+                let n = rng.int_in(1, 4) as usize;
+                Some(ModelLadder {
+                    rungs: (0..n)
+                        .map(|i| Rung {
+                            name: format!("rung-{i}"),
+                            speedup: rng.range(0.5, 8.0),
+                            quality: rng.range(0.05, 0.95),
+                        })
+                        .collect(),
+                })
+            } else {
+                None
+            };
+            let cfg = AutoscaleConfig {
+                signal_window: rng.range(0.5, 16.0),
+                tick: rng.range(0.1, 4.0),
+                p99_bound: rng.range(0.2, 5.0),
+                max_drop_rate: rng.range(0.0, 0.5),
+                cooldown: rng.range(0.5, 30.0),
+                hysteresis: rng.range(1.0, 2.0),
+                recovery_frac: rng.range(0.1, 0.9),
+                min_devices: rng.int_in(0, 4) as usize,
+                max_devices: rng.int_in(4, 64) as usize,
+                device_kind: *rng.choose(&[
+                    DeviceKind::Ncs2,
+                    DeviceKind::FastCpu,
+                    DeviceKind::SlowCpu,
+                    DeviceKind::TitanX,
+                ]),
+                device_model: *rng.choose(&[
+                    DetectorModelId::Ssd300,
+                    DetectorModelId::Yolov3,
+                ]),
+                device_rate: rng.range(0.5, 40.0),
+                ladder,
+                target_utilization: rng.range(0.5, 1.0),
+            };
+            let text = autoscale_config_to_json(&cfg).to_string();
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let back = autoscale_config_from_json(&parsed).map_err(|e| e.to_string())?;
+            if back != cfg {
+                return Err(format!("decoded {back:?} != original {cfg:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

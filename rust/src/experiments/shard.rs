@@ -14,6 +14,8 @@
 //!   for exactly one gossip interval (missed heartbeat), then re-placed
 //!   on the survivors.
 
+use crate::autoscale::policy::AutoscaleConfig;
+use crate::control::EventLog;
 use crate::device::DeviceInstance;
 use crate::experiments::fleet::pool_of;
 use crate::fleet::admission::AdmissionPolicy;
@@ -208,9 +210,144 @@ pub fn shard_failure(seed: u64) -> (Table, FailoverOutcome) {
     (t, outcome)
 }
 
+/// The local-scaling parameters of the overload sweep: template 2.5-FPS
+/// replicas up to 12 devices per shard (so the projected headroom
+/// covers the 2× committed load), default hysteresis/cooldown.
+pub fn overload_autoscale_cfg() -> AutoscaleConfig {
+    AutoscaleConfig {
+        p99_bound: 3.0,
+        max_devices: 12,
+        ..AutoscaleConfig::default()
+    }
+}
+
+/// The shared ≈2× overload scenario behind [`autoscale_overload`] and
+/// the transport parity pin
+/// ([`crate::experiments::transport::autoscale_parity`]): round-robin
+/// parks four 4.75-FPS cams — 19 FPS, twice the 9.5-FPS admission
+/// capacity — on shard 0 while shard 1 idles at 2 FPS. With
+/// `autoscale`, both shards embed local capacity control
+/// (`overload_autoscale_cfg`); without it, the gossip rebalancer's
+/// migrations are the only relief.
+pub fn overload_scenario(seed: u64, autoscale: bool) -> ShardScenario {
+    let mut streams = Vec::new();
+    for i in 0..4 {
+        // Interleaved heavy/light arrival order: RR lands every heavy
+        // cam on shard 0, every light one on shard 1 (duration-matched
+        // at 60 s).
+        streams.push(StreamSpec::new(&format!("heavy{i}"), 4.75, 285).with_window(4));
+        streams.push(StreamSpec::new(&format!("light{i}"), 0.5, 30).with_window(4));
+    }
+    let scenario = ShardScenario::new(vec![pool_of(4, 2.5), pool_of(4, 2.5)], streams)
+        .with_policy(PlacementPolicy::RoundRobin)
+        .with_gossip(10.0)
+        .with_epochs(8)
+        .with_seed(seed);
+    if autoscale {
+        scenario.with_autoscale(overload_autoscale_cfg())
+    } else {
+        scenario
+    }
+}
+
+/// One mode's outcome on the overload scenario.
+#[derive(Debug, Clone)]
+pub struct OverloadOutcome {
+    /// "migrate-only" or "autoscale".
+    pub mode: &'static str,
+    pub migrations: usize,
+    /// Shard-local scale actions routed to the coordinator's audit log.
+    pub scale_actions: usize,
+    /// Worst per-stream p99 output latency over the run (seconds).
+    pub worst_p99: f64,
+    pub delivered_fps: f64,
+    pub drop_rate: f64,
+    /// The coordinator's audit log survives an encode→decode hop and
+    /// carries every routed event.
+    pub audit_clean: bool,
+}
+
+fn overload_outcome(mode: &'static str, report: &ShardReport) -> OverloadOutcome {
+    let audit = report.audit_log();
+    let audit_clean = EventLog::decode(&audit.encode())
+        .map(|decoded| decoded == audit && decoded.len() == report.control_log.len())
+        .unwrap_or(false);
+    OverloadOutcome {
+        mode,
+        migrations: report.migrations,
+        scale_actions: report.scale_actions(),
+        worst_p99: report.worst_p99(),
+        delivered_fps: report.delivered_fps(),
+        drop_rate: report.drop_rate(),
+        audit_clean,
+    }
+}
+
+/// Overload sweep: local scaling vs migrate-only at 2× load. Shard 0 is
+/// committed to twice its admission capacity; the migrate-only baseline
+/// shifts what fits to shard 1 and degrades the rest, while per-shard
+/// autoscale grows the pool in place — the digest's post-scale headroom
+/// keeps the migration planner idle, so the migration count strictly
+/// drops.
+pub fn autoscale_overload(seed: u64) -> (Table, OverloadOutcome, OverloadOutcome) {
+    let migrate_only = overload_outcome("migrate-only", &run_sharded(&overload_scenario(seed, false)));
+    let autoscale = overload_outcome("autoscale", &run_sharded(&overload_scenario(seed, true)));
+    let mut t = Table::new(
+        "2× overload on shard 0: local scaling vs migrate-only",
+        &["mode", "migrations", "scale actions", "worst p99 (s)", "delivered σ", "drop %", "audit clean"],
+    );
+    for o in [&migrate_only, &autoscale] {
+        t.row(vec![
+            o.mode.to_string(),
+            format!("{}", o.migrations),
+            format!("{}", o.scale_actions),
+            f(o.worst_p99, 2),
+            f(o.delivered_fps, 2),
+            f(o.drop_rate * 100.0, 1),
+            if o.audit_clean { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    (t, migrate_only, autoscale)
+}
+
+fn overload_outcome_json(o: &OverloadOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("mode".into(), Json::Str(o.mode.to_string()));
+    m.insert("migrations".into(), Json::Num(o.migrations as f64));
+    m.insert("scale_actions".into(), Json::Num(o.scale_actions as f64));
+    m.insert("worst_p99".into(), Json::Num(o.worst_p99));
+    m.insert("delivered_fps".into(), Json::Num(o.delivered_fps));
+    m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+    m.insert("audit_clean".into(), Json::Bool(o.audit_clean));
+    Json::Obj(m)
+}
+
+/// Machine-readable autoscale bundle (the `eva shard --autoscale
+/// --json` surface): the overload sweep plus the cross-transport parity
+/// rows from [`crate::experiments::transport::autoscale_parity`].
+pub fn autoscale_json(seed: u64) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+    let (_, migrate_only, autoscale) = autoscale_overload(seed);
+    root.insert(
+        "autoscale_overload".into(),
+        Json::Arr(vec![
+            overload_outcome_json(&migrate_only),
+            overload_outcome_json(&autoscale),
+        ]),
+    );
+    let (_, parity) = crate::experiments::transport::autoscale_parity(seed);
+    root.insert(
+        "autoscale_parity".into(),
+        Json::Arr(parity.iter().map(crate::experiments::transport::autoscale_parity_json).collect()),
+    );
+    Json::Obj(root)
+}
+
 /// Build the one-off CLI scenario shared by [`custom_run`] and
 /// [`custom_run_remote`]: enough epochs to play the longest stream out,
 /// plus one slack round.
+#[allow(clippy::too_many_arguments)]
 fn custom_scenario(
     shards: Vec<Vec<DeviceInstance>>,
     streams: Vec<StreamSpec>,
@@ -218,19 +355,25 @@ fn custom_scenario(
     admission: AdmissionPolicy,
     gossip: f64,
     seed: u64,
+    autoscale: Option<AutoscaleConfig>,
 ) -> ShardScenario {
     let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
     let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
-    ShardScenario::new(shards, streams)
+    let mut scenario = ShardScenario::new(shards, streams)
         .with_policy(policy)
         .with_admission(admission)
         .with_gossip(gossip)
         .with_epochs(epochs)
-        .with_seed(seed)
+        .with_seed(seed);
+    if let Some(cfg) = autoscale {
+        scenario = scenario.with_autoscale(cfg);
+    }
+    scenario
 }
 
 /// A one-off sharded run from CLI parameters (the `eva shard
-/// --scenario run` path).
+/// --scenario run [--autoscale]` path).
+#[allow(clippy::too_many_arguments)]
 pub fn custom_run(
     shards: Vec<Vec<DeviceInstance>>,
     streams: Vec<StreamSpec>,
@@ -238,13 +381,18 @@ pub fn custom_run(
     admission: AdmissionPolicy,
     gossip: f64,
     seed: u64,
+    autoscale: Option<AutoscaleConfig>,
 ) -> ShardReport {
-    run_sharded(&custom_scenario(shards, streams, policy, admission, gossip, seed))
+    run_sharded(&custom_scenario(
+        shards, streams, policy, admission, gossip, seed, autoscale,
+    ))
 }
 
 /// [`custom_run`] with every shard behind a real loopback socket (the
 /// `eva shard --scenario run --transport tcp|uds` path): same epoch
-/// budget, but the co-simulation crosses [`crate::transport`] frames.
+/// budget, but the co-simulation crosses [`crate::transport`] frames —
+/// including the autoscale config (in the handshake) and every
+/// shard-local scale action (as control frames).
 #[allow(clippy::too_many_arguments)]
 pub fn custom_run_remote(
     shards: Vec<Vec<DeviceInstance>>,
@@ -253,10 +401,11 @@ pub fn custom_run_remote(
     admission: AdmissionPolicy,
     gossip: f64,
     seed: u64,
+    autoscale: Option<AutoscaleConfig>,
     transport: crate::shard::remote::RemoteTransport,
 ) -> anyhow::Result<ShardReport> {
     crate::shard::remote::run_sharded_remote(
-        &custom_scenario(shards, streams, policy, admission, gossip, seed),
+        &custom_scenario(shards, streams, policy, admission, gossip, seed, autoscale),
         transport,
     )
 }
@@ -381,6 +530,53 @@ mod tests {
         assert!(o.replaced_within_interval, "{o:?}");
         assert!(o.worst_gap <= 10.0 + 1e-9, "{o:?}");
         assert_eq!(o.shards_alive, 2);
+    }
+
+    #[test]
+    fn local_scaling_strictly_cuts_migrations_at_2x_load() {
+        // The acceptance criterion: per-shard scaling strictly reduces
+        // the migration count vs migrate-only at 2× load, holds the
+        // worst p99 inside the configured band, and every scale action
+        // survives the coordinator's audit-log round trip.
+        let (_, migrate_only, autoscale) = autoscale_overload(43);
+        assert!(migrate_only.migrations >= 1, "{migrate_only:?}");
+        assert_eq!(migrate_only.scale_actions, 0, "{migrate_only:?}");
+        assert!(
+            autoscale.migrations < migrate_only.migrations,
+            "autoscale {} vs migrate-only {}",
+            autoscale.migrations,
+            migrate_only.migrations
+        );
+        assert!(autoscale.scale_actions >= 1, "{autoscale:?}");
+        assert!(autoscale.audit_clean && migrate_only.audit_clean);
+        let bound = overload_autoscale_cfg().p99_bound;
+        assert!(
+            autoscale.worst_p99 <= bound + 1e-9,
+            "worst p99 {:.2} vs band {bound}",
+            autoscale.worst_p99
+        );
+        // Scaling must not cost throughput relative to the baseline.
+        assert!(
+            autoscale.delivered_fps >= migrate_only.delivered_fps - 1e-9,
+            "autoscale σ {:.2} vs migrate-only σ {:.2}",
+            autoscale.delivered_fps,
+            migrate_only.delivered_fps
+        );
+    }
+
+    #[test]
+    fn autoscale_json_bundle_reparses() {
+        let j = autoscale_json(7);
+        let back = Json::parse(&j.to_string()).expect("autoscale JSON must reparse");
+        assert_eq!(back.get("seed").and_then(Json::as_i64), Some(7));
+        let overload = back.get("autoscale_overload").unwrap().as_arr().unwrap();
+        assert_eq!(overload.len(), 2);
+        assert_eq!(
+            overload[0].get("mode").and_then(Json::as_str),
+            Some("migrate-only")
+        );
+        let parity = back.get("autoscale_parity").unwrap().as_arr().unwrap();
+        assert_eq!(parity.len(), 3);
     }
 
     #[test]

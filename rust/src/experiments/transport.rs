@@ -93,6 +93,83 @@ pub fn loopback_parity(seed: u64) -> (Table, Vec<ParityOutcome>) {
     (t, outcomes)
 }
 
+/// One transport's outcome on the sharded-autoscale overload scenario.
+#[derive(Debug, Clone)]
+pub struct AutoscaleParityOutcome {
+    /// "inproc", "tcp" or "uds".
+    pub transport: &'static str,
+    pub frames_total: u64,
+    pub frames_processed: u64,
+    pub migrations: usize,
+    /// Shard-local scale actions in the coordinator's audit log.
+    pub scale_actions: usize,
+    /// All routed control events (placement + scale).
+    pub control_events: usize,
+}
+
+/// JSON row for one [`AutoscaleParityOutcome`] (shared with the
+/// `eva shard --autoscale --json` bundle).
+pub fn autoscale_parity_json(o: &AutoscaleParityOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("transport".into(), Json::Str(o.transport.to_string()));
+    m.insert("frames_total".into(), Json::Num(o.frames_total as f64));
+    m.insert(
+        "frames_processed".into(),
+        Json::Num(o.frames_processed as f64),
+    );
+    m.insert("migrations".into(), Json::Num(o.migrations as f64));
+    m.insert("scale_actions".into(), Json::Num(o.scale_actions as f64));
+    m.insert("control_events".into(), Json::Num(o.control_events as f64));
+    Json::Obj(m)
+}
+
+/// Autoscale parity sweep: the sharded-autoscale overload scenario
+/// ([`crate::experiments::shard::overload_scenario`]) run in-process
+/// and with every shard behind a loopback TCP / Unix socket. The
+/// autoscale config crosses the handshake and every scale action rides
+/// a control frame back, so frame and scale-action counts must match
+/// the in-process co-simulation *exactly* on these failure-free runs.
+pub fn autoscale_parity(seed: u64) -> (Table, Vec<AutoscaleParityOutcome>) {
+    let scenario = crate::experiments::shard::overload_scenario(seed, true);
+    let mut t = Table::new(
+        "Sharded-autoscale parity (2× overload, local scaling on): inproc vs tcp vs uds",
+        &["transport", "frames", "processed", "migrations", "scale actions", "control events"],
+    );
+    let mut outcomes = Vec::new();
+    for (transport, report) in [
+        ("inproc", run_sharded(&scenario)),
+        (
+            "tcp",
+            run_sharded_remote(&scenario, RemoteTransport::Tcp)
+                .expect("loopback TCP autoscale co-simulation"),
+        ),
+        (
+            "uds",
+            run_sharded_remote(&scenario, RemoteTransport::Uds)
+                .expect("Unix-socket autoscale co-simulation"),
+        ),
+    ] {
+        let outcome = AutoscaleParityOutcome {
+            transport,
+            frames_total: report.total_frames(),
+            frames_processed: report.total_processed(),
+            migrations: report.migrations,
+            scale_actions: report.scale_actions(),
+            control_events: report.control_log.len(),
+        };
+        t.row(vec![
+            outcome.transport.to_string(),
+            format!("{}", outcome.frames_total),
+            format!("{}", outcome.frames_processed),
+            format!("{}", outcome.migrations),
+            format!("{}", outcome.scale_actions),
+            format!("{}", outcome.control_events),
+        ]);
+        outcomes.push(outcome);
+    }
+    (t, outcomes)
+}
+
 /// Connection-loss outcome over loopback TCP.
 #[derive(Debug, Clone)]
 pub struct LossOutcome {
@@ -148,11 +225,18 @@ pub fn connection_loss(seed: u64) -> (Table, LossOutcome) {
 /// Machine-readable sweep results (the `eva shard --scenario transport
 /// --json` surface); `None` for an unknown scenario name.
 pub fn transport_json(seed: u64, scenario: &str) -> Option<Json> {
-    if !matches!(scenario, "parity" | "loss" | "all") {
+    if !matches!(scenario, "parity" | "loss" | "autoscale" | "all") {
         return None;
     }
     let mut root = BTreeMap::new();
     root.insert("seed".into(), Json::Num(seed as f64));
+    if matches!(scenario, "autoscale" | "all") {
+        let (_, parity) = autoscale_parity(seed);
+        root.insert(
+            "autoscale_parity".into(),
+            Json::Arr(parity.iter().map(autoscale_parity_json).collect()),
+        );
+    }
     if matches!(scenario, "parity" | "all") {
         let (_, parity) = loopback_parity(seed);
         let rows: Vec<Json> = parity
@@ -224,6 +308,31 @@ mod tests {
     }
 
     #[test]
+    fn autoscale_parity_is_exact_across_transports() {
+        // The acceptance criterion: the sharded-autoscale run behaves
+        // identically over inproc, tcp and uds — frame and scale-action
+        // counts match exactly on a failure-free run.
+        let (_, outcomes) = autoscale_parity(91);
+        assert_eq!(outcomes.len(), 3);
+        let inproc = &outcomes[0];
+        assert_eq!(inproc.transport, "inproc");
+        assert_eq!(inproc.migrations, 0, "{inproc:?}");
+        assert!(inproc.scale_actions >= 1, "{inproc:?}");
+        for o in &outcomes[1..] {
+            assert_eq!(o.frames_total, inproc.frames_total, "{}", o.transport);
+            assert_eq!(o.frames_processed, inproc.frames_processed, "{}", o.transport);
+            assert_eq!(o.migrations, inproc.migrations, "{}", o.transport);
+            assert_eq!(o.scale_actions, inproc.scale_actions, "{}", o.transport);
+        }
+        // The socket transports agree with *each other* on the whole
+        // routed-event count too. (The remote runner additionally logs
+        // the played-out detaches it must ship so shard-side digests
+        // stay honest — events the in-process runner never needs — so
+        // total event counts are only comparable remote-to-remote.)
+        assert_eq!(outcomes[1].control_events, outcomes[2].control_events);
+    }
+
+    #[test]
     fn json_bundle_reparses_and_respects_scenario_selection() {
         let j = transport_json(5, "parity").expect("known scenario");
         let back = Json::parse(&j.to_string()).expect("transport JSON must reparse");
@@ -233,6 +342,13 @@ mod tests {
             3
         );
         assert!(back.get("connection_loss").is_none());
+        assert!(back.get("autoscale_parity").is_none());
+        let aut = transport_json(5, "autoscale").expect("known scenario");
+        assert_eq!(
+            aut.get("autoscale_parity").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert!(aut.get("loopback_parity").is_none());
         assert!(transport_json(5, "bogus").is_none());
     }
 }

@@ -46,6 +46,10 @@
 //!   re-placement — via serialised detach→attach control events.
 //!   `shard::remote` runs the same co-simulation with every fleet
 //!   instance behind a real socket; a dropped connection is shard loss.
+//!   `shard::autoscale` embeds the closed loop *inside* each shard:
+//!   capacity grows locally before the gossip migrates load away,
+//!   digests advertise post-scale headroom, and every scale action
+//!   rides the wire into the coordinator's audit log.
 //! * [`transport`] — the cross-host seam under all of it: a
 //!   length-prefixed, versioned frame codec for `WireEvent` traffic
 //!   over blocking TCP / Unix-domain sockets (split frames, oversized

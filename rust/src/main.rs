@@ -5,7 +5,7 @@
 //!   offline    zero-drop offline detection (Figure 1a reference)
 //!   fleet      multi-stream serving over a shared device pool (virtual time)
 //!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
-//!   shard      stream sharding across fleet instances (split|skew|failure|run|transport)
+//!   shard      stream sharding across fleet instances (split|skew|failure|autoscale|run|transport)
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
 //!   nselect    recommend the parallel-detection parameter n (§III-B)
 //!   visualize  dump Figure 2/3-style PPM frames with box overlays
@@ -48,12 +48,13 @@ fn specs() -> Vec<Spec> {
         Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
-        Spec { name: "scenario", takes_value: true, help: "autoscale/shard: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|all|run|transport)", default: Some("step") },
+        Spec { name: "scenario", takes_value: true, help: "autoscale/shard: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|all|run|transport)", default: Some("step") },
         Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard: emit machine-readable JSON instead of tables", default: None },
         Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
         Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
         Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
         Spec { name: "transport", takes_value: true, help: "shard: control-plane transport for --scenario run (inproc|tcp|uds; sockets bind loopback)", default: Some("inproc") },
+        Spec { name: "autoscale", takes_value: false, help: "shard: embed an AutoscaleController in every shard (--scenario run), or select the autoscale overload sweep", default: None },
     ]
 }
 
@@ -283,9 +284,29 @@ fn cmd_shard(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
     // `--scenario` is shared with `eva autoscale`, whose default is
     // "step" — not a shard sweep, so it reads as "run everything".
-    let mut scenario = args.str_or("scenario", "all");
-    if scenario == "step" {
-        scenario = "all".to_string();
+    let raw_scenario = args.str_or("scenario", "all");
+    let scenario_defaulted = raw_scenario == "step";
+    let mut scenario = if scenario_defaulted {
+        "all".to_string()
+    } else {
+        raw_scenario
+    };
+    // `eva shard --autoscale` (no explicit scenario) selects the
+    // autoscale overload sweep; with `--scenario run` the flag embeds an
+    // AutoscaleController in every shard instead. Anywhere else the flag
+    // would be silently ignored or reinterpreted, and the CLI contract
+    // is that nothing is — an *explicit* `--scenario all --autoscale`
+    // bails rather than quietly dropping the split/skew/failure sweeps.
+    let autoscale = args.flag("autoscale");
+    if autoscale && scenario == "all" {
+        if scenario_defaulted {
+            scenario = "autoscale".to_string();
+        } else {
+            bail!("--autoscale with --scenario all is ambiguous: use --scenario autoscale (the overload sweep) or --scenario run (embed controllers)");
+        }
+    }
+    if autoscale && !matches!(scenario.as_str(), "run" | "autoscale") {
+        bail!("--autoscale applies to --scenario run (local scaling) or the autoscale sweep");
     }
     // `--transport` only steers `--scenario run` (the sweeps fix their
     // own transports); anything else would be silently ignored, and this
@@ -338,18 +359,35 @@ fn cmd_shard(args: &Args) -> Result<()> {
             .map(|s| StreamSpec::new(&format!("stream{s}"), fps, frames).with_window(window))
             .collect();
         let transport = args.str_or("transport", "inproc");
+        // `--autoscale`: every shard runs local capacity control with
+        // template replicas shaped like the CLI pool (mean rate, up to
+        // 4× the per-shard device count).
+        let autoscale_cfg = autoscale.then(|| eva::autoscale::AutoscaleConfig {
+            device_rate: rates.iter().sum::<f64>() / rates.len() as f64,
+            max_devices: (rates.len() * 4).max(8),
+            ..eva::autoscale::AutoscaleConfig::default()
+        });
         let offered = fps * streams as f64;
         let pool: f64 = rates.iter().sum::<f64>() * shards as f64;
         // The banner stays off the --json path: stdout must be exactly
         // one parseable document there (CI uploads it as BENCH_shard.json).
         if !args.flag("json") {
             println!(
-                "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, transport {transport}, seed {seed}",
-                policy.label()
+                "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, transport {transport}, autoscale {}, seed {seed}",
+                policy.label(),
+                if autoscale { "on" } else { "off" },
             );
         }
         let report = match transport.as_str() {
-            "inproc" => experiments::shard::custom_run(pools, specs, policy, admission, gossip, seed),
+            "inproc" => experiments::shard::custom_run(
+                pools,
+                specs,
+                policy,
+                admission,
+                gossip,
+                seed,
+                autoscale_cfg,
+            ),
             "tcp" | "uds" => {
                 let remote = if transport == "tcp" {
                     eva::shard::RemoteTransport::Tcp
@@ -357,7 +395,14 @@ fn cmd_shard(args: &Args) -> Result<()> {
                     eva::shard::RemoteTransport::Uds
                 };
                 experiments::shard::custom_run_remote(
-                    pools, specs, policy, admission, gossip, seed, remote,
+                    pools,
+                    specs,
+                    policy,
+                    admission,
+                    gossip,
+                    seed,
+                    autoscale_cfg,
+                    remote,
                 )?
             }
             other => bail!("unknown transport {other:?} (inproc|tcp|uds)"),
@@ -369,18 +414,36 @@ fn cmd_shard(args: &Args) -> Result<()> {
         print!("{}", report.stream_table().render());
         print!("{}", report.shard_table().render());
         println!(
-            "[shard] delivered σ = {:.2} FPS, drop rate {:.1}%, {} migrations over {} epochs",
+            "[shard] delivered σ = {:.2} FPS, drop rate {:.1}%, {} migrations, {} scale actions over {} epochs",
             report.delivered_fps(),
             report.drop_rate() * 100.0,
             report.migrations,
+            report.scale_actions(),
             report.epochs_run,
         );
         return Ok(());
     }
 
+    if scenario == "autoscale" {
+        // Local capacity control inside each shard: migrate-only vs
+        // autoscale at 2× load, plus the exact-parity pin across
+        // inproc/tcp/uds transports.
+        if args.flag("json") {
+            println!("{}", experiments::shard::autoscale_json(seed).to_string());
+            return Ok(());
+        }
+        let (t1, _, _) = experiments::shard::autoscale_overload(seed);
+        let (t2, _) = experiments::transport::autoscale_parity(seed);
+        print!("{}", t1.render());
+        print!("{}", t2.render());
+        return Ok(());
+    }
+
     if scenario == "transport" {
         // The cross-host sweeps: loopback-socket co-simulation vs the
-        // in-process twin, plus connection-loss recovery.
+        // in-process twin, connection-loss recovery, and the
+        // sharded-autoscale parity pin (same coverage as the --json
+        // bundle, which runs "all").
         if args.flag("json") {
             let json = experiments::transport::transport_json(seed, "all")
                 .expect("transport sweep bundle");
@@ -389,14 +452,16 @@ fn cmd_shard(args: &Args) -> Result<()> {
         }
         let (t1, _) = experiments::transport::loopback_parity(seed);
         let (t2, _) = experiments::transport::connection_loss(seed);
+        let (t3, _) = experiments::transport::autoscale_parity(seed);
         print!("{}", t1.render());
         print!("{}", t2.render());
+        print!("{}", t3.render());
         return Ok(());
     }
 
     if args.flag("json") {
         let json = experiments::shard::shard_json(seed, &scenario).ok_or_else(|| {
-            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|all|run|transport)")
+            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|autoscale|all|run|transport)")
         })?;
         println!("{}", json.to_string());
         return Ok(());
@@ -422,7 +487,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
             print!("{}", t2.render());
             print!("{}", t3.render());
         }
-        other => bail!("unknown shard scenario {other:?} (split|skew|failure|all|run|transport)"),
+        other => bail!("unknown shard scenario {other:?} (split|skew|failure|autoscale|all|run|transport)"),
     }
     Ok(())
 }

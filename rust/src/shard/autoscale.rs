@@ -1,0 +1,295 @@
+//! Shard-local capacity control: an [`AutoscaleController`] embedded in
+//! a shard, driven one gossip-epoch slice at a time.
+//!
+//! The paper's §III-B band says detection parallelism should track the
+//! gap between offered rate Σλ and processing rate Σμ. In a sharded
+//! deployment that decision is cheapest *locally* — inside the shard,
+//! before the coordinator's gossip migrates load across hosts — so this
+//! module runs the closed loop from [`crate::autoscale`] against a
+//! shard's own fleet instance:
+//!
+//! * Each epoch slice runs through
+//!   [`crate::fleet::sim::run_fleet_with`] with the shard's
+//!   [`AutoscaleController`] plugged into the
+//!   [`FleetController`] seam — the same
+//!   controller `run_autoscale_sim` drives, observing every emitted
+//!   record and acting at its tick interval *inside* the slice.
+//! * Slices run in slice-local virtual time starting at 0; a
+//!   time-shifting adapter offsets the controller's clock by the epoch
+//!   base `t0`, so hysteresis and cooldown span gossip epochs exactly
+//!   as they would in one continuous run
+//!   ([`AutoscaleController::begin_slice`] keeps the cooldown clock and
+//!   replica counter while resetting slice-local stream state).
+//! * Device attach/detach actions are mirrored onto the shard's
+//!   persistent pool with registry slot semantics (attach appends a
+//!   slot, detach clears one), so the next epoch serves — and the next
+//!   gossip digest reports — the scaled pool.
+//! * Every scale action is returned as a [`WireEvent`] in shard time,
+//!   with ladder-rung (`SwapModel`) stream ids remapped from slice-local
+//!   to global ids, ready to ride [`crate::transport::msg`] frames back
+//!   to the coordinator's audit [`crate::control::EventLog`].
+//!
+//! The gossip digest of an autoscaling shard reports **post-scale
+//! headroom**: [`projected_capacity`] extends the current pool rate by
+//! what the controller may still attach (up to `max_devices` template
+//! replicas). The coordinator's migration planner therefore keeps its
+//! hands off a shard that can still absorb its committed load by
+//! scaling locally, and starts shedding streams only when local scaling
+//! is exhausted — shards scale devices and shed streams coherently.
+
+use crate::autoscale::policy::{AutoscaleConfig, AutoscaleController};
+use crate::control::{ControlAction, ControlOrigin, WireEvent};
+use crate::device::DeviceInstance;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::registry::FleetRegistry;
+use crate::fleet::sim::{run_fleet_with, FleetController, Scenario};
+use crate::fleet::stream::StreamSpec;
+use crate::fleet::FleetReport;
+use crate::types::OutputRecord;
+
+/// Capacity a shard can reach by scaling locally: the util-adjusted sum
+/// of its current pool rate plus the template replicas the controller
+/// may still attach (`max_devices − |pool|`, at `device_rate` each).
+/// This is what an autoscaling shard advertises in its gossip digest —
+/// post-scale headroom — so migrations start only once local scaling is
+/// exhausted (at `max_devices` the projection collapses to the actual
+/// pool rate).
+pub fn projected_capacity(cfg: &AutoscaleConfig, pool: &[DeviceInstance], util: f64) -> f64 {
+    let current: f64 = pool.iter().map(|d| d.rate()).sum();
+    let slots = cfg.max_devices.saturating_sub(pool.len());
+    (current + slots as f64 * cfg.device_rate.max(0.0)) * util
+}
+
+/// Time-shifting [`FleetController`] adapter: the slice engine runs in
+/// slice-local time, the wrapped controller's cooldown clock must see
+/// continuous shard time.
+struct Shifted<'a> {
+    ctl: &'a mut AutoscaleController,
+    base: f64,
+}
+
+impl FleetController for Shifted<'_> {
+    fn interval(&self) -> f64 {
+        FleetController::interval(self.ctl)
+    }
+
+    fn observe(&mut self, now: f64, sid: usize, record: &OutputRecord) {
+        FleetController::observe(self.ctl, self.base + now, sid, record);
+    }
+
+    fn act(&mut self, now: f64, reg: &FleetRegistry) -> Vec<ControlAction> {
+        FleetController::act(self.ctl, self.base + now, reg)
+    }
+}
+
+/// One shard's local capacity controller, persistent across the gossip
+/// epochs of a sharded run.
+pub struct ShardAutoscaler {
+    ctl: AutoscaleController,
+}
+
+impl ShardAutoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> ShardAutoscaler {
+        ShardAutoscaler {
+            ctl: AutoscaleController::new(cfg),
+        }
+    }
+
+    /// The configuration the embedded controller runs with.
+    pub fn cfg(&self) -> &AutoscaleConfig {
+        &self.ctl.cfg
+    }
+
+    /// The shard's digest capacity (see [`projected_capacity`]).
+    pub fn projected_capacity(&self, pool: &[DeviceInstance], util: f64) -> f64 {
+        projected_capacity(&self.ctl.cfg, pool, util)
+    }
+
+    /// Run one epoch slice under the closed loop.
+    ///
+    /// `specs` are the shard's resident streams clipped to this epoch's
+    /// arrival quotas, `ids[k]` the global stream id of `specs[k]`, `t0`
+    /// the epoch base time and `seed` the slice seed (both exactly as
+    /// the plain runners use them). The shard's persistent `pool` is
+    /// updated in place with the slice's device actions; the returned
+    /// events are the slice's scale actions in shard time, with global
+    /// stream ids — the shard's contribution to the coordinator's audit
+    /// log.
+    ///
+    /// Id scoping in the returned events: `SwapModel` stream ids are
+    /// remapped to **global** ids, but `DetachDevice` ids are the
+    /// registry slot indices of the slice they were taken in — the pool
+    /// compacts between slices, so device slots renumber per epoch.
+    /// The audit log therefore identifies *which slice took which
+    /// action on which slot*, not a run-global device identity (attach
+    /// events carry the full [`DeviceInstance`], whose replica id *is*
+    /// stable across the shard's whole run).
+    pub fn run_slice(
+        &mut self,
+        pool: &mut Vec<DeviceInstance>,
+        admission: &AdmissionPolicy,
+        specs: Vec<StreamSpec>,
+        ids: &[usize],
+        t0: f64,
+        seed: u64,
+    ) -> (FleetReport, Vec<WireEvent>) {
+        self.ctl.begin_slice();
+        let sub = Scenario::new(pool.clone(), specs)
+            .with_admission(admission.clone())
+            .with_seed(seed);
+        let out = {
+            let mut shifted = Shifted { ctl: &mut self.ctl, base: t0 };
+            run_fleet_with(&sub, Some(&mut shifted))
+        };
+
+        // Mirror the slice's device actions onto the persistent pool
+        // with the registry's slot semantics — attach appends a slot,
+        // detach clears one (slot ids stay stable within the slice) —
+        // then compact to the attached instances for the next epoch.
+        let mut slots: Vec<(DeviceInstance, bool)> =
+            pool.iter().cloned().map(|d| (d, true)).collect();
+        let mut events = Vec::new();
+        for r in &out.control_log {
+            if r.origin != ControlOrigin::Controller {
+                continue;
+            }
+            match &r.action {
+                ControlAction::AttachDevice(d) => slots.push((d.clone(), true)),
+                ControlAction::DetachDevice(dev) => {
+                    if let Some(s) = slots.get_mut(*dev) {
+                        s.1 = false;
+                    }
+                }
+                _ => {}
+            }
+            let action = match &r.action {
+                ControlAction::SwapModel { stream, rung } => match ids.get(*stream) {
+                    Some(&global) => ControlAction::SwapModel { stream: global, rung: *rung },
+                    // A swap for a stream outside the slice roster cannot
+                    // be attributed globally; don't mis-audit it.
+                    None => continue,
+                },
+                other => other.clone(),
+            };
+            events.push(WireEvent::action(
+                t0 + r.at,
+                ControlOrigin::Controller,
+                action,
+            ));
+        }
+        *pool = slots
+            .into_iter()
+            .filter(|(_, attached)| *attached)
+            .map(|(d, _)| d)
+            .collect();
+        (out.report, events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DetectorModelId, DeviceKind};
+
+    fn dev(replica: usize, rate: f64) -> DeviceInstance {
+        DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, replica, rate)
+    }
+
+    #[test]
+    fn projected_capacity_extends_to_max_devices_then_collapses() {
+        let cfg = AutoscaleConfig {
+            max_devices: 6,
+            device_rate: 2.5,
+            ..AutoscaleConfig::default()
+        };
+        let pool = vec![dev(0, 2.5), dev(1, 2.5)];
+        // 2 × 2.5 current + 4 more template slots × 2.5, at util 1.0.
+        assert!((projected_capacity(&cfg, &pool, 1.0) - 15.0).abs() < 1e-9);
+        // At the cap the projection is just the actual pool rate.
+        let full: Vec<DeviceInstance> = (0..6).map(|i| dev(i, 2.5)).collect();
+        assert!((projected_capacity(&cfg, &full, 1.0) - 15.0).abs() < 1e-9);
+        let over: Vec<DeviceInstance> = (0..8).map(|i| dev(i, 2.5)).collect();
+        assert!((projected_capacity(&cfg, &over, 1.0) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn underprovisioned_slice_scales_the_persistent_pool_up() {
+        // λ = 5 FPS against one 2.5-FPS device: the band floor (≈ 5.26
+        // at util 0.95) forces an attach inside the first slice, and the
+        // attached device must persist into the shard's pool.
+        let cfg = AutoscaleConfig {
+            max_devices: 8,
+            ..AutoscaleConfig::default()
+        };
+        let mut scaler = ShardAutoscaler::new(cfg);
+        let mut pool = vec![dev(0, 2.5)];
+        let specs = vec![StreamSpec::new("s0", 5.0, 50).with_window(4)];
+        let (report, events) =
+            scaler.run_slice(&mut pool, &AdmissionPolicy::default(), specs, &[0], 0.0, 7);
+        assert!(report.total_frames() > 0);
+        assert!(!events.is_empty(), "expected at least one scale action");
+        assert!(
+            events
+                .iter()
+                .all(|e| e.origin == ControlOrigin::Controller),
+            "{events:?}"
+        );
+        let attaches = events
+            .iter()
+            .filter(|e| matches!(e.as_action(), Some(ControlAction::AttachDevice(_))))
+            .count();
+        assert!(attaches >= 1);
+        assert_eq!(pool.len(), 1 + attaches, "pool must mirror the attaches");
+    }
+
+    #[test]
+    fn cooldown_spans_a_gossip_epoch() {
+        // Cooldown (15 s) longer than the gossip epoch (10 s): the
+        // attach taken in epoch 0 must suppress scaling at the start of
+        // epoch 1; the next attach happens mid-epoch once the cooldown
+        // elapses — i.e. consecutive device actions are at least one
+        // cooldown apart *across* the slice boundary.
+        let cfg = AutoscaleConfig {
+            cooldown: 15.0,
+            max_devices: 8,
+            ..AutoscaleConfig::default()
+        };
+        let cooldown = cfg.cooldown;
+        let mut scaler = ShardAutoscaler::new(cfg);
+        let mut pool = vec![dev(0, 2.5)];
+        let mut all_events = Vec::new();
+        for epoch in 0..2u64 {
+            let specs = vec![StreamSpec::new("s0", 5.0, 50).with_window(4)];
+            let (_, events) = scaler.run_slice(
+                &mut pool,
+                &AdmissionPolicy::default(),
+                specs,
+                &[0],
+                epoch as f64 * 10.0,
+                11 + epoch,
+            );
+            all_events.extend(events);
+        }
+        let times: Vec<f64> = all_events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.as_action(),
+                    Some(ControlAction::AttachDevice(_) | ControlAction::DetachDevice(_))
+                )
+            })
+            .map(|e| e.at)
+            .collect();
+        assert!(times.len() >= 2, "expected attaches in both epochs: {times:?}");
+        // First action lands inside epoch 0, the next only after the
+        // cooldown — which is past the epoch-1 boundary.
+        assert!(times[0] < 10.0, "{times:?}");
+        for pair in times.windows(2) {
+            assert!(
+                pair[1] - pair[0] >= cooldown - 1e-9,
+                "device actions closer than the cooldown: {times:?}"
+            );
+        }
+        assert!(times[1] >= 10.0, "second attach must fall in epoch 1: {times:?}");
+    }
+}

@@ -24,12 +24,20 @@
 //!   polls and serve epoch slices over length-prefixed frames, and a
 //!   dropped connection surfaces as shard loss — the gossip planner
 //!   re-places the orphans within one interval.
+//! * [`autoscale`] — shard-local capacity control: an embedded
+//!   [`crate::autoscale::AutoscaleController`] runs the §III-B closed
+//!   loop against the shard's own pool between epoch slices, digests
+//!   advertise post-scale headroom so migrations start only when local
+//!   scaling is exhausted, and every scale action rides the wire back
+//!   to the coordinator's audit [`crate::control::EventLog`].
 
+pub mod autoscale;
 pub mod gossip;
 pub mod placement;
 pub mod remote;
 pub mod sim;
 
+pub use autoscale::{projected_capacity, ShardAutoscaler};
 pub use gossip::{plan_moves, GossipTable, Headroom, Migration};
 pub use placement::{fnv1a, PlacementPolicy, ShardView};
 pub use remote::{run_sharded_remote, serve_shard, RemoteShard, RemoteTransport};

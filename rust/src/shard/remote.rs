@@ -46,11 +46,13 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::autoscale::policy::AutoscaleConfig;
 use crate::control::{ControlAction, ControlOrigin, WireEvent};
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::sim::{run_fleet, Scenario};
 use crate::fleet::stream::StreamSpec;
+use crate::shard::autoscale::ShardAutoscaler;
 use crate::shard::gossip::{plan_moves, GossipTable};
 use crate::shard::placement::ShardView;
 use crate::shard::sim::{ShardControl, ShardReport, ShardScenario, ShardStreamReport};
@@ -94,6 +96,11 @@ pub struct RemoteShard {
     /// `Poll` for an epoch `>= fail_at_epoch` arrives. Stands in for a
     /// process crash in tests and experiments.
     pub fail_at_epoch: Option<usize>,
+    /// Standing local-capacity-control config. The coordinator's
+    /// `Hello` may carry its own [`AutoscaleConfig`], which overrides
+    /// this one for the session — the closed loop always runs with the
+    /// parameters the session was opened with.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl RemoteShard {
@@ -102,11 +109,17 @@ impl RemoteShard {
             id,
             devices,
             fail_at_epoch: None,
+            autoscale: None,
         }
     }
 
     pub fn with_failure(mut self, epoch: usize) -> RemoteShard {
         self.fail_at_epoch = Some(epoch);
+        self
+    }
+
+    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> RemoteShard {
+        self.autoscale = Some(cfg);
         self
     }
 }
@@ -124,6 +137,9 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
     let mut roster: Vec<String> = Vec::new();
     // Residents keyed by global stream id (assigned by the roster).
     let mut residents: BTreeMap<usize, StreamSpec> = BTreeMap::new();
+    // The live pool: local capacity control grows/shrinks it in place.
+    let mut pool: Vec<DeviceInstance> = shard.devices.clone();
+    let mut scaler: Option<ShardAutoscaler> = shard.autoscale.clone().map(ShardAutoscaler::new);
 
     loop {
         let msg = match conn.recv() {
@@ -137,6 +153,7 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 protocol,
                 admission: adm,
                 roster: r,
+                autoscale,
                 ..
             } => {
                 if protocol != TRANSPORT_VERSION {
@@ -148,7 +165,13 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 }
                 admission = adm;
                 roster = r;
-                let capacity = shard.devices.iter().map(|d| d.rate()).sum::<f64>()
+                // A session-scoped autoscale config overrides the
+                // shard's standing one: the coordinator decides whether
+                // (and how) this shard scales itself.
+                if let Some(cfg) = autoscale {
+                    scaler = Some(ShardAutoscaler::new(cfg));
+                }
+                let capacity = pool.iter().map(|d| d.rate()).sum::<f64>()
                     * admission.target_utilization;
                 conn.send(&TransportMsg::Welcome {
                     shard: shard.id,
@@ -171,8 +194,14 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                     // Scripted death: vanish mid-session, no goodbye.
                     return Ok(());
                 }
-                let capacity = shard.devices.iter().map(|d| d.rate()).sum::<f64>()
-                    * admission.target_utilization;
+                // Post-scale headroom: an autoscaling shard advertises
+                // what it can reach locally, so the coordinator's
+                // planner migrates only when local scaling is exhausted.
+                let util = admission.target_utilization;
+                let capacity = match &scaler {
+                    Some(s) => s.projected_capacity(&pool, util),
+                    None => pool.iter().map(|d| d.rate()).sum::<f64>() * util,
+                };
                 let committed: f64 = residents.values().map(|s| s.demand()).sum();
                 conn.send(&TransportMsg::Digest {
                     shard: shard.id,
@@ -182,7 +211,10 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 })?;
             }
             TransportMsg::Tick {
-                epoch, seed, quotas, ..
+                epoch,
+                at,
+                seed,
+                quotas,
             } => {
                 // Build the epoch slice: resident specs clipped to their
                 // arrival quotas, in the quota (= global id) order the
@@ -204,10 +236,23 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 let (busy, frames, streams) = if specs.is_empty() {
                     (0.0, 0, Vec::new())
                 } else {
-                    let sub = Scenario::new(shard.devices.clone(), specs)
-                        .with_admission(admission.clone())
-                        .with_seed(seed);
-                    let report = run_fleet(&sub);
+                    let (report, scale_events) = match scaler.as_mut() {
+                        Some(s) => {
+                            // Closed-loop slice: the local controller
+                            // scales the pool in place; its actions ride
+                            // home as Control frames ahead of the Slice.
+                            s.run_slice(&mut pool, &admission, specs, &ids, at, seed)
+                        }
+                        None => {
+                            let sub = Scenario::new(pool.clone(), specs)
+                                .with_admission(admission.clone())
+                                .with_seed(seed);
+                            (run_fleet(&sub), Vec::new())
+                        }
+                    };
+                    for event in scale_events {
+                        conn.send(&TransportMsg::Control(event))?;
+                    }
                     let streams: Vec<SliceStream> = ids
                         .iter()
                         .zip(&report.streams)
@@ -327,6 +372,7 @@ pub fn run_sharded_remote(
             protocol: TRANSPORT_VERSION,
             admission: scenario.admission.clone(),
             roster: roster.clone(),
+            autoscale: scenario.autoscale.clone(),
         })
         .map_err(|e| anyhow!("shard {sh}: hello failed: {e}"))?;
         match conn.recv() {
@@ -546,23 +592,43 @@ pub fn run_sharded_remote(
                 .seed
                 .wrapping_add((epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
                 ^ ((sh as u64) << 17);
+            // An autoscaling shard answers a Tick with its scale actions
+            // as Control frames, then the Slice. Fold the frames into
+            // the audit log in arrival order; anything else mid-tick is
+            // peer loss.
+            let mut scale_events: Vec<WireEvent> = Vec::new();
+            let mut slice: Option<(f64, u64, Vec<SliceStream>)> = None;
             let ticked = {
                 let conn = conns[sh].as_mut().expect("alive shard has a connection");
-                conn.send(&TransportMsg::Tick {
+                match conn.send(&TransportMsg::Tick {
                     epoch,
                     at: t0,
                     seed,
                     quotas: shard_quotas.clone(),
-                })
-                .and_then(|()| conn.recv())
+                }) {
+                    Err(_) => false,
+                    Ok(()) => loop {
+                        match conn.recv() {
+                            Ok(TransportMsg::Control(ev)) => scale_events.push(ev),
+                            Ok(TransportMsg::Slice {
+                                busy,
+                                frames,
+                                streams: slice_streams,
+                                ..
+                            }) => {
+                                slice = Some((busy, frames, slice_streams));
+                                break true;
+                            }
+                            _ => break false,
+                        }
+                    },
+                }
             };
-            match ticked {
-                Ok(TransportMsg::Slice {
-                    busy,
-                    frames,
-                    streams: slice_streams,
-                    ..
-                }) => {
+            if ticked {
+                for event in scale_events {
+                    log.push(ShardControl { shard: sh, event });
+                }
+                if let Some((busy, frames, slice_streams)) = slice {
                     shard_busy[sh] += busy;
                     shard_frames[sh] += frames;
                     for ss in slice_streams {
@@ -577,14 +643,13 @@ pub fn run_sharded_remote(
                         }
                     }
                 }
-                _ => {
-                    // Tick lost mid-epoch: the shard is gone and this
-                    // epoch's arrivals with it. kill() unplaces its
-                    // residents, so the unplaced-streams pass below
-                    // accounts their quotas as dropped arrivals (exactly
-                    // once).
-                    kill(sh, t0, &mut alive, &mut conns, &mut streams);
-                }
+            } else {
+                // Tick lost mid-epoch: the shard is gone and this
+                // epoch's arrivals with it. kill() unplaces its
+                // residents, so the unplaced-streams pass below
+                // accounts their quotas as dropped arrivals (exactly
+                // once).
+                kill(sh, t0, &mut alive, &mut conns, &mut streams);
             }
         }
         // Unplaced streams' arrivals drop on the floor.

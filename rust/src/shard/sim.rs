@@ -32,11 +32,13 @@
 
 use std::collections::BTreeMap;
 
-use crate::control::{ControlAction, ControlOrigin, WireEvent};
+use crate::autoscale::policy::AutoscaleConfig;
+use crate::control::{ControlAction, ControlOrigin, EventLog, WireEvent};
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::sim::{run_fleet, Scenario};
 use crate::fleet::stream::StreamSpec;
+use crate::shard::autoscale::ShardAutoscaler;
 use crate::shard::gossip::{plan_moves, GossipTable, Headroom};
 use crate::shard::placement::{PlacementPolicy, ShardView};
 use crate::util::json::Json;
@@ -62,6 +64,12 @@ pub struct ShardScenario {
     /// `(epoch, shard)`: the shard dies at the start of that epoch,
     /// right after the gossip round it last attended.
     pub failures: Vec<(usize, usize)>,
+    /// Shard-local capacity control: when set, every shard embeds a
+    /// [`crate::shard::autoscale::ShardAutoscaler`] built from this
+    /// config — pools scale between epoch slices, digests advertise
+    /// post-scale headroom, and scale actions land in the control log
+    /// with [`ControlOrigin::Controller`].
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl ShardScenario {
@@ -75,6 +83,7 @@ impl ShardScenario {
             epochs: 12,
             seed: 0,
             failures: Vec::new(),
+            autoscale: None,
         }
     }
 
@@ -105,6 +114,11 @@ impl ShardScenario {
 
     pub fn with_failure(mut self, epoch: usize, shard: usize) -> ShardScenario {
         self.failures.push((epoch, shard));
+        self
+    }
+
+    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> ShardScenario {
+        self.autoscale = Some(cfg);
         self
     }
 }
@@ -199,6 +213,53 @@ impl ShardReport {
     /// Streams that were orphaned by a shard loss at any point.
     pub fn orphan_count(&self) -> usize {
         self.streams.iter().filter(|s| s.orphaned_for.is_some()).count()
+    }
+
+    /// Shard-local scale actions (device attach/detach and ladder-rung
+    /// swaps) routed back to the coordinator — every
+    /// [`ControlOrigin::Controller`] event in the control log.
+    pub fn scale_actions(&self) -> usize {
+        self.control_log
+            .iter()
+            .filter(|c| c.event.origin == ControlOrigin::Controller)
+            .count()
+    }
+
+    /// Scale actions attributed to shard `sh`.
+    pub fn scale_actions_for(&self, sh: usize) -> usize {
+        self.control_log
+            .iter()
+            .filter(|c| c.shard == sh && c.event.origin == ControlOrigin::Controller)
+            .count()
+    }
+
+    /// Worst per-stream p99 output latency across the run (seconds).
+    pub fn worst_p99(&self) -> f64 {
+        self.streams
+            .iter()
+            .map(|s| s.p99_latency)
+            .fold(0.0, f64::max)
+    }
+
+    /// The coordinator's audit trail: every routed control event
+    /// (placement verbs and shard-local scale actions alike) as a
+    /// versioned [`EventLog`]. Shard attribution lives in
+    /// [`ShardReport::control_log`]; the audit log is the
+    /// coordinator-side, wire-clean view of the same sequence.
+    ///
+    /// "Replayable" here means the sequence itself survives
+    /// encode→decode→[`EventLog::scripted_events`] verbatim (times,
+    /// actions, order — pinned in `integration_shard`); a sharded log
+    /// interleaves events addressed to different shards (and, for scale
+    /// actions, device slots scoped to one epoch slice — see
+    /// [`crate::shard::autoscale::ShardAutoscaler::run_slice`]), so it
+    /// is an audit script, not a single-registry fleet scenario.
+    pub fn audit_log(&self) -> EventLog {
+        let mut log = EventLog::new();
+        for c in &self.control_log {
+            log.push(c.event.clone());
+        }
+        log
     }
 
     /// Worst orphan gap across streams (0 when nothing was orphaned).
@@ -312,6 +373,10 @@ impl ShardReport {
         root.insert(
             "migrations".to_string(),
             Json::Num(self.migrations as f64),
+        );
+        root.insert(
+            "scale_actions".to_string(),
+            Json::Num(self.scale_actions() as f64),
         );
         root.insert(
             "frames_total".to_string(),
@@ -464,10 +529,18 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
     assert!(m > 0, "need at least one shard");
     let tick = scenario.gossip_interval.max(1e-3);
     let util = scenario.admission.target_utilization;
+    // Reported capacity is the *initial* util-adjusted pool rate (the
+    // pre-scale baseline); an autoscaling shard's growth shows up in the
+    // control log and the digests, not here.
     let capacity: Vec<f64> = scenario
         .shards
         .iter()
         .map(|devs| devs.iter().map(|d| d.rate()).sum::<f64>() * util)
+        .collect();
+    // Live pools: autoscaling shards grow/shrink theirs between epochs.
+    let mut pools: Vec<Vec<DeviceInstance>> = scenario.shards.clone();
+    let mut scalers: Vec<Option<ShardAutoscaler>> = (0..m)
+        .map(|_| scenario.autoscale.clone().map(ShardAutoscaler::new))
         .collect();
 
     let mut alive = vec![true; m];
@@ -509,10 +582,17 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 .filter(|s| s.shard == Some(sh) && s.active())
                 .map(|s| s.spec.demand())
                 .sum();
+            // An autoscaling shard advertises post-scale headroom: what
+            // it can reach locally, so the planner migrates only once
+            // local scaling is exhausted.
+            let advertised = match &scalers[sh] {
+                Some(s) => s.projected_capacity(&pools[sh], util),
+                None => capacity[sh],
+            };
             table.publish(Headroom {
                 shard: sh,
                 at: t0,
-                capacity: capacity[sh],
+                capacity: advertised,
                 committed,
             });
         }
@@ -631,15 +711,38 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
             if specs.is_empty() {
                 continue;
             }
-            let sub = Scenario::new(scenario.shards[sh].clone(), specs)
-                .with_admission(scenario.admission.clone())
-                .with_seed(
-                    scenario
-                        .seed
-                        .wrapping_add((epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
-                        ^ ((sh as u64) << 17),
-                );
-            let report = run_fleet(&sub);
+            let slice_seed = scenario
+                .seed
+                .wrapping_add((epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                ^ ((sh as u64) << 17);
+            let report = match scalers[sh].as_mut() {
+                Some(scaler) => {
+                    // Closed-loop slice: the shard's controller observes
+                    // and acts inside the epoch; its device actions
+                    // persist in the pool and its scale actions join the
+                    // control log — through the same encode→decode hop
+                    // every placement verb takes.
+                    let (report, scale_events) = scaler.run_slice(
+                        &mut pools[sh],
+                        &scenario.admission,
+                        specs,
+                        &idx_map,
+                        t0,
+                        slice_seed,
+                    );
+                    for event in scale_events {
+                        let decoded = WireEvent::decode(&event.encode())
+                            .expect("scale wire must round-trip");
+                        log.push(ShardControl { shard: sh, event: decoded });
+                    }
+                    report
+                }
+                None => run_fleet(
+                    &Scenario::new(pools[sh].clone(), specs)
+                        .with_admission(scenario.admission.clone())
+                        .with_seed(slice_seed),
+                ),
+            };
             for (k, &i) in idx_map.iter().enumerate() {
                 let sr = &report.streams[k];
                 streams[i].frames_total += sr.metrics.frames_total;
@@ -817,6 +920,59 @@ mod tests {
             assert!(matches!(s.final_shard, Some(1) | Some(2)), "{:?}", s.final_shard);
             assert!(s.frames_processed > 0);
         }
+    }
+
+    #[test]
+    fn autoscaling_shard_absorbs_overload_without_migration() {
+        // Round-robin parks 12 FPS on shard 0 (initial capacity 9.5).
+        // Migrate-only restores the band by shedding a 6-FPS stream;
+        // with shard-local autoscale the digest advertises post-scale
+        // headroom (projected 19 ≥ committed 12), the planner stays put,
+        // and the controller attaches replicas locally instead.
+        let mk_streams = || -> Vec<StreamSpec> {
+            [6.0, 1.0, 6.0, 1.0]
+                .iter()
+                .enumerate()
+                .map(|(i, &fps)| {
+                    StreamSpec::new(&format!("s{i}"), fps, (fps * 40.0) as u64).with_window(4)
+                })
+                .collect()
+        };
+        let base = ShardScenario::new(vec![pool(4, 2.5), pool(4, 2.5)], mk_streams())
+            .with_policy(PlacementPolicy::RoundRobin)
+            .with_gossip(10.0)
+            .with_epochs(8)
+            .with_seed(31);
+        let migrate_only = run_sharded(&base);
+        assert!(migrate_only.migrations >= 1, "{}", migrate_only.migrations);
+        assert_eq!(migrate_only.scale_actions(), 0);
+
+        let cfg = AutoscaleConfig {
+            max_devices: 8,
+            ..AutoscaleConfig::default()
+        };
+        let scaled = run_sharded(&base.clone().with_autoscale(cfg));
+        assert_eq!(
+            scaled.migrations, 0,
+            "local scaling must pre-empt migration: {:?}",
+            scaled.control_log.len()
+        );
+        assert!(scaled.scale_actions() >= 1, "expected local scale actions");
+        // Scale actions are attributed to the overloaded shard and are
+        // wire-clean: the audit log survives another encode→decode hop.
+        assert!(scaled.scale_actions_for(0) >= 1);
+        let audit = scaled.audit_log();
+        let decoded = EventLog::decode(&audit.encode()).expect("audit log decodes");
+        assert_eq!(decoded, audit);
+        // Deterministic given the seed (the wire path must not wobble).
+        let again = run_sharded(
+            &base.with_autoscale(AutoscaleConfig {
+                max_devices: 8,
+                ..AutoscaleConfig::default()
+            }),
+        );
+        assert_eq!(again.control_log, scaled.control_log);
+        assert_eq!(again.total_processed(), scaled.total_processed());
     }
 
     #[test]

@@ -176,6 +176,15 @@ mod tests {
                 protocol: TRANSPORT_VERSION,
                 admission: AdmissionPolicy::default(),
                 roster: (0..rng.below(4)).map(|i| format!("cam{i}")).collect(),
+                autoscale: rng.chance(0.5).then(|| {
+                    crate::autoscale::policy::AutoscaleConfig {
+                        cooldown: rng.range(0.5, 30.0),
+                        max_devices: rng.below(32) as usize + 1,
+                        device_rate: rng.range(0.5, 40.0),
+                        target_utilization: rng.range(0.5, 1.0),
+                        ..crate::autoscale::policy::AutoscaleConfig::default()
+                    }
+                }),
             },
             1 => TransportMsg::Welcome {
                 shard: rng.below(16) as usize,

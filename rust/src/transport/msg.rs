@@ -28,8 +28,10 @@
 
 use std::collections::BTreeMap;
 
+use crate::autoscale::policy::AutoscaleConfig;
 use crate::control::wire::{
-    admission_from_json, admission_to_json, req_f64, req_str, req_u64, req_usize,
+    admission_from_json, admission_to_json, autoscale_config_from_json, autoscale_config_to_json,
+    req_f64, req_str, req_u64, req_usize,
 };
 use crate::control::{WireError, WireEvent};
 use crate::fleet::admission::AdmissionPolicy;
@@ -59,11 +61,16 @@ pub struct SliceStream {
 pub enum TransportMsg {
     /// Coordinator → shard: open a session. `roster[i]` is the name of
     /// global stream id `i`, so wire `StreamId`s resolve remotely.
+    /// `autoscale` configures shard-local capacity control for the
+    /// session ([`crate::shard::autoscale`]); `None` (and a missing
+    /// field, for peers speaking the pre-autoscale dialect) means the
+    /// shard serves its static pool.
     Hello {
         shard: usize,
         protocol: i64,
         admission: AdmissionPolicy,
         roster: Vec<String>,
+        autoscale: Option<AutoscaleConfig>,
     },
     /// Shard → coordinator: handshake reply with the shard's
     /// util-adjusted admission capacity (FPS).
@@ -149,6 +156,7 @@ impl TransportMsg {
                 protocol,
                 admission,
                 roster,
+                autoscale,
             } => {
                 o.insert("msg".to_string(), Json::Str("hello".to_string()));
                 o.insert("shard".to_string(), Json::Num(*shard as f64));
@@ -158,6 +166,9 @@ impl TransportMsg {
                     "roster".to_string(),
                     Json::Arr(roster.iter().map(|n| Json::Str(n.clone())).collect()),
                 );
+                if let Some(cfg) = autoscale {
+                    o.insert("autoscale".to_string(), autoscale_config_to_json(cfg));
+                }
             }
             TransportMsg::Welcome { shard, capacity } => {
                 o.insert("msg".to_string(), Json::Str("welcome".to_string()));
@@ -265,11 +276,18 @@ impl TransportMsg {
                             .to_string(),
                     );
                 }
+                // Absent and null both read as "no local scaling":
+                // pre-autoscale peers omit the key entirely.
+                let autoscale = match v.get("autoscale") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => Some(autoscale_config_from_json(j)?),
+                };
                 Ok(TransportMsg::Hello {
                     shard: req_usize(v, "shard")?,
                     protocol: req_u64(v, "protocol")? as i64,
                     admission: admission_from_json(adm)?,
                     roster,
+                    autoscale,
                 })
             }
             "welcome" => Ok(TransportMsg::Welcome {
@@ -379,6 +397,18 @@ mod tests {
             protocol: TRANSPORT_VERSION,
             admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
             roster: vec!["cam0".to_string(), "cam1".to_string()],
+            autoscale: None,
+        });
+        roundtrip(&TransportMsg::Hello {
+            shard: 0,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::default(),
+            roster: vec!["cam0".to_string()],
+            autoscale: Some(AutoscaleConfig {
+                max_devices: 9,
+                device_rate: 3.25,
+                ..AutoscaleConfig::default()
+            }),
         });
         roundtrip(&TransportMsg::Welcome {
             shard: 1,
@@ -416,6 +446,75 @@ mod tests {
             }],
         });
         roundtrip(&TransportMsg::Bye);
+    }
+
+    #[test]
+    fn hello_without_autoscale_key_decodes_as_none() {
+        // Pre-autoscale peers omit the key entirely; decode must not
+        // reject their Hello.
+        let msg = TransportMsg::Hello {
+            shard: 2,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::default(),
+            roster: vec![],
+            autoscale: None,
+        };
+        let text = msg.encode();
+        assert!(!text.contains("autoscale"), "None must omit the key: {text}");
+        assert_eq!(TransportMsg::decode(&text).unwrap(), msg);
+        // An explicit null reads the same way.
+        let with_null = text.replacen("\"msg\"", "\"autoscale\":null,\"msg\"", 1);
+        assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
+    }
+
+    #[test]
+    fn random_scale_actions_survive_the_frame_codec() {
+        // Satellite pin: shard-local scale actions (device attach/detach
+        // and ladder-rung swaps) ride TransportMsg::Control frames; the
+        // whole path — wire event → session message → length-prefixed
+        // frame → decoder — must be the identity for random payloads.
+        use crate::control::{ControlAction, ControlOrigin};
+        use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
+        use crate::transport::frame::{encode_frame, FrameDecoder};
+        use crate::util::prop::{check, Config};
+        check("scale actions survive frames", Config::default(), |rng| {
+            let origin = *rng.choose(&[ControlOrigin::Controller, ControlOrigin::Placement]);
+            let action = match rng.below(3) {
+                0 => {
+                    let mut d = DeviceInstance::new(
+                        *rng.choose(&[DeviceKind::Ncs2, DeviceKind::FastCpu, DeviceKind::TitanX]),
+                        *rng.choose(&[DetectorModelId::Ssd300, DetectorModelId::Yolov3]),
+                        rng.below(64) as usize,
+                    );
+                    d.jitter_cv = rng.range(0.0, 0.2);
+                    if rng.chance(0.5) {
+                        d.rate_override = Some(rng.range(0.5, 40.0));
+                    }
+                    ControlAction::AttachDevice(d)
+                }
+                1 => ControlAction::DetachDevice(rng.below(64) as usize),
+                _ => ControlAction::SwapModel {
+                    stream: rng.below(128) as usize,
+                    rung: rng.below(4) as usize,
+                },
+            };
+            let event = WireEvent::action(rng.range(0.0, 1e4), origin, action);
+            let msg = TransportMsg::Control(event);
+            let bytes = encode_frame(&msg).map_err(|e| e.to_string())?;
+            let mut dec = FrameDecoder::new();
+            dec.feed(&bytes);
+            let back = dec
+                .try_next()
+                .map_err(|e| e.to_string())?
+                .ok_or("no frame decoded")?;
+            if back != msg {
+                return Err(format!("decoded {back:?} != original {msg:?}"));
+            }
+            if dec.try_next().map_err(|e| e.to_string())?.is_some() {
+                return Err("trailing frame from a single encode".to_string());
+            }
+            Ok(())
+        });
     }
 
     #[test]

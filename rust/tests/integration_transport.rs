@@ -4,12 +4,12 @@
 //! remote `fleet::serve` consumer driven by a decoded event-log stream,
 //! and determinism of the remote runner across repeated runs.
 
-use eva::control::ControlAction;
+use eva::control::{ControlAction, ControlOrigin};
 use eva::detector::Detector;
 use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use eva::experiments::transport::{connection_loss, loopback_parity};
 use eva::fleet::{AdmissionPolicy, FleetServeConfig, StreamSpec};
-use eva::shard::{run_sharded_remote, RemoteTransport, ShardScenario};
+use eva::shard::{run_sharded, run_sharded_remote, RemoteTransport, ShardReport, ShardScenario};
 use eva::transport::{drive_remote_serve, run_serve_consumer, Endpoint, Listener, TransportMsg};
 use eva::types::{Detection, Frame};
 
@@ -98,6 +98,51 @@ fn remote_runs_are_deterministic_and_transport_agnostic() {
     let uds = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("uds");
     assert_eq!(uds.total_processed(), tcp_a.total_processed());
     assert_eq!(uds.control_log, tcp_a.control_log);
+}
+
+/// Satellite pin: a failure-free `--autoscale` run over tcp and uds
+/// matches the in-process co-simulation's frame and scale-action counts
+/// *exactly* — the shard-local scale actions (device attach/detach,
+/// Controller origin) cross the wire as control frames and decode back
+/// to the identical event sequence. Seed comes from `EVA_SOAK_SEED`
+/// when set (the CI soak step re-runs this with distinct seeds).
+#[test]
+fn sharded_autoscale_parity_is_exact_over_tcp_and_uds() {
+    let seed = std::env::var("EVA_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(137);
+    let scenario = eva::experiments::shard::overload_scenario(seed, true);
+    let inproc = run_sharded(&scenario);
+    assert!(inproc.scale_actions() >= 1, "seed {seed}");
+    assert_eq!(inproc.migrations, 0, "seed {seed}");
+    fn scale_events(r: &ShardReport) -> Vec<eva::shard::ShardControl> {
+        r.control_log
+            .iter()
+            .filter(|c| c.event.origin == ControlOrigin::Controller)
+            .cloned()
+            .collect()
+    }
+    for transport in [RemoteTransport::Tcp, RemoteTransport::Uds] {
+        let remote = run_sharded_remote(&scenario, transport).expect("remote autoscale run");
+        let label = transport.label();
+        assert_eq!(remote.total_frames(), inproc.total_frames(), "{label} seed {seed}");
+        assert_eq!(
+            remote.total_processed(),
+            inproc.total_processed(),
+            "{label} seed {seed}"
+        );
+        assert_eq!(remote.epochs_run, inproc.epochs_run, "{label} seed {seed}");
+        assert_eq!(remote.migrations, inproc.migrations, "{label} seed {seed}");
+        assert_eq!(
+            remote.scale_actions(),
+            inproc.scale_actions(),
+            "{label} seed {seed}"
+        );
+        // The scale-action sequence — shard attribution, times, payloads
+        // — is identical event for event.
+        assert_eq!(scale_events(&remote), scale_events(&inproc), "{label} seed {seed}");
+    }
 }
 
 /// The remote serve consumer takes exactly the admission decisions the
