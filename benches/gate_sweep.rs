@@ -1,0 +1,62 @@
+//! Gate sweep bench: the content-dynamics presets, gated vs
+//! always-detect, with the acceptance shape asserted.
+//!
+//! Shape: on the low-motion lobby preset the gate buys at least 2×
+//! effective per-device FPS at under 2% delivered-mAP cost; sustained
+//! motion (highway) is never skipped; sports scene cuts always force a
+//! fresh detection.
+
+use eva::experiments::gate::content_sweep;
+use eva::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new(1, 3);
+
+    let (table, outcomes) = content_sweep(29);
+    print!("{}", table.render());
+    let cell = |preset: &str, mode: &str| {
+        outcomes
+            .iter()
+            .find(|o| o.preset == preset && o.mode == mode)
+            .unwrap_or_else(|| panic!("missing sweep cell {preset}/{mode}"))
+    };
+
+    let plain = cell("lobby", "always-detect");
+    let gated = cell("lobby", "gated");
+    let gain = gated.effective_device_fps / plain.effective_device_fps;
+    assert!(
+        gain >= 2.0,
+        "lobby gate must at least double effective device FPS: {:.1} -> {:.1} ({gain:.2}x)",
+        plain.effective_device_fps,
+        gated.effective_device_fps
+    );
+    let cost = (plain.delivered_map - gated.delivered_map) / plain.delivered_map;
+    assert!(
+        cost < 0.02,
+        "lobby mAP cost must stay under 2%: {:.2}% (gated {:.4} vs plain {:.4})",
+        cost * 100.0,
+        gated.delivered_map,
+        plain.delivered_map
+    );
+    println!(
+        "shape OK: lobby gate {gain:.2}x effective device FPS at {:.2}% delivered-mAP cost",
+        cost * 100.0
+    );
+
+    let highway = cell("highway", "gated");
+    assert_eq!(
+        highway.skips, 0,
+        "sustained motion must never be skipped: {highway:?}"
+    );
+    let sports = cell("sports", "gated");
+    assert!(
+        sports.refreshes >= 1,
+        "sports scene cuts must force fresh detections: {sports:?}"
+    );
+    println!("shape OK: highway never skips; sports cuts force refreshes");
+
+    // Wall-clock cost of the full sweep (what CI pays for BENCH_gate).
+    bench.run("gate content sweep (3 presets x 2 modes)", Some(3100.0), || {
+        content_sweep(33).1.len() as u64
+    });
+}

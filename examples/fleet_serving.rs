@@ -121,6 +121,7 @@ fn main() {
         admission: AdmissionPolicy::default(),
         device_rates: vec![40.0, 40.0],
         paced: true,
+        gate: None,
     };
 
     println!("== wall-clock fleet: 3 × 20-FPS streams vs 2 workers (25 ms service) ==\n");

@@ -112,6 +112,7 @@ fn main() {
         admission: AdmissionPolicy::default(),
         device_rates: vec![120.0, 120.0],
         paced: false,
+        gate: None,
     };
     let consumer = std::thread::spawn(move || {
         run_serve_consumer(&listener, &config, |_| {

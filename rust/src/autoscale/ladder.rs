@@ -172,6 +172,22 @@ mod tests {
     }
 
     #[test]
+    fn staleness_decay_is_monotone_and_clamped() {
+        // The gate's tracker proxy divides reuse ages by its stretch
+        // factor, so the decay must be monotone non-increasing over the
+        // whole age axis (negative ages clamp to fresh, ages past τ to
+        // zero) — otherwise a longer skip run could *gain* quality.
+        let ages: Vec<f64> = (0..=40).map(|i| -0.2 + i as f64 * 0.03).collect();
+        for w in ages.windows(2) {
+            let (a, b) = (staleness_factor(w[0]), staleness_factor(w[1]));
+            assert!(b <= a + 1e-12, "ages {:?}: {a} -> {b}", w);
+            assert!((0.0..=1.0).contains(&a), "age {}: {a}", w[0]);
+        }
+        // Strictly decreasing inside (0, τ).
+        assert!(staleness_factor(0.2) > staleness_factor(0.4));
+    }
+
+    #[test]
     fn quality_estimate_tracks_calibrated_maps() {
         // The proxy must land near the paper baselines the profiles were
         // calibrated to (± 5 points).

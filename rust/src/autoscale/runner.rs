@@ -173,6 +173,7 @@ where
             admission: AdmissionPolicy::admit_all(),
             device_rates: vec![cfg.device_rate; workers],
             paced: true,
+            gate: None,
         };
         let rung_now = rung;
         let mut report = serve_fleet(&pairs, &serve_cfg, |w| factory(w, rung_now))?;

@@ -28,6 +28,6 @@ pub use log::EventLog;
 pub use plane::{ControlAction, ControlEvent, ControlOrigin, ControlRecord};
 pub use wire::{
     admission_from_json, admission_to_json, decision_from_json, decision_to_json,
-    device_from_json, device_to_json, stream_spec_from_json, stream_spec_to_json, WireError,
-    WireEvent, WirePayload, WIRE_VERSION,
+    device_from_json, device_to_json, gate_config_from_json, gate_config_to_json,
+    stream_spec_from_json, stream_spec_to_json, WireError, WireEvent, WirePayload, WIRE_VERSION,
 };

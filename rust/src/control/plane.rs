@@ -67,6 +67,9 @@ pub enum ControlOrigin {
     Placement,
     /// Admission policy outcome (wall-clock serve logs decisions).
     Admission,
+    /// Per-frame motion gate ([`crate::gate`]): skip / refresh /
+    /// down-rung verdicts on individual frames.
+    Gate,
 }
 
 impl ControlOrigin {
@@ -76,6 +79,7 @@ impl ControlOrigin {
             ControlOrigin::Controller => "controller",
             ControlOrigin::Placement => "placement",
             ControlOrigin::Admission => "admission",
+            ControlOrigin::Gate => "gate",
         }
     }
 
@@ -85,6 +89,7 @@ impl ControlOrigin {
             "controller" => Some(ControlOrigin::Controller),
             "placement" => Some(ControlOrigin::Placement),
             "admission" => Some(ControlOrigin::Admission),
+            "gate" => Some(ControlOrigin::Gate),
             _ => None,
         }
     }
@@ -134,6 +139,7 @@ mod tests {
             ControlOrigin::Controller,
             ControlOrigin::Placement,
             ControlOrigin::Admission,
+            ControlOrigin::Gate,
         ] {
             assert_eq!(ControlOrigin::parse(o.label()), Some(o));
         }

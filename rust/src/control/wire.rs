@@ -27,6 +27,8 @@ use crate::control::plane::{ControlAction, ControlOrigin};
 use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use crate::fleet::admission::{AdmissionMode, AdmissionPolicy, Decision, DegradeMode};
 use crate::fleet::stream::{StreamId, StreamSpec};
+use crate::gate::signal::MotionDynamics;
+use crate::gate::{GateConfig, GateVerdict};
 use crate::util::json::Json;
 
 /// Wire-format version stamped on every encoded event log; decode
@@ -66,6 +68,14 @@ pub enum WirePayload {
     /// An admission outcome for stream `stream` (emitted by the
     /// wall-clock serve path and replayable for audit).
     Decision { stream: StreamId, decision: Decision },
+    /// A per-frame motion-gate verdict for frame `frame` of stream
+    /// `stream` (emitted by [`crate::gate`]-armed engines; steady-state
+    /// `Detect` verdicts are not logged to bound wire volume).
+    Gate {
+        stream: StreamId,
+        frame: u64,
+        verdict: GateVerdict,
+    },
 }
 
 /// One serialisable control-plane message.
@@ -96,6 +106,15 @@ impl WireEvent {
         }
     }
 
+    /// Wrap a per-frame gate verdict.
+    pub fn gate(at: f64, stream: StreamId, frame: u64, verdict: GateVerdict) -> WireEvent {
+        WireEvent {
+            at,
+            origin: ControlOrigin::Gate,
+            payload: WirePayload::Gate { stream, frame, verdict },
+        }
+    }
+
     /// Human label (delegates to the payload).
     pub fn label(&self) -> String {
         match &self.payload {
@@ -103,6 +122,12 @@ impl WireEvent {
             WirePayload::Decision { stream, decision } => {
                 format!("decision(s{stream}: {})", decision.label())
             }
+            WirePayload::Gate { stream, frame, verdict } => match verdict {
+                GateVerdict::DownRung(r) => {
+                    format!("gate(s{stream} f{frame} down-rung {r})")
+                }
+                v => format!("gate(s{stream} f{frame} {})", v.label()),
+            },
         }
     }
 
@@ -110,7 +135,7 @@ impl WireEvent {
     pub fn as_action(&self) -> Option<&ControlAction> {
         match &self.payload {
             WirePayload::Action(a) => Some(a),
-            WirePayload::Decision { .. } => None,
+            WirePayload::Decision { .. } | WirePayload::Gate { .. } => None,
         }
     }
 
@@ -148,6 +173,18 @@ impl WireEvent {
                 o.insert("stream_id".to_string(), Json::Num(*stream as f64));
                 o.insert("decision".to_string(), decision_to_json(decision));
             }
+            WirePayload::Gate { stream, frame, verdict } => {
+                o.insert("type".to_string(), Json::Str("gate".to_string()));
+                o.insert("stream_id".to_string(), Json::Num(*stream as f64));
+                o.insert("frame".to_string(), Json::Num(*frame as f64));
+                o.insert(
+                    "verdict".to_string(),
+                    Json::Str(verdict.label().to_string()),
+                );
+                if let GateVerdict::DownRung(r) = verdict {
+                    o.insert("rung".to_string(), Json::Num(*r as f64));
+                }
+            }
         }
         Json::Obj(o)
     }
@@ -183,6 +220,23 @@ impl WireEvent {
                 WirePayload::Decision {
                     stream: req_usize(v, "stream_id")?,
                     decision: decision_from_json(d)?,
+                }
+            }
+            "gate" => {
+                let verdict = match req_str(v, "verdict")? {
+                    "detect" => GateVerdict::Detect,
+                    "scene-cut" => GateVerdict::SceneCut,
+                    "skip-cap" => GateVerdict::SkipCap,
+                    "skip" => GateVerdict::Skip,
+                    "down-rung" => GateVerdict::DownRung(req_usize(v, "rung")?),
+                    other => {
+                        return Err(WireError::new(format!("unknown gate verdict {other:?}")))
+                    }
+                };
+                WirePayload::Gate {
+                    stream: req_usize(v, "stream_id")?,
+                    frame: req_u64(v, "frame")?,
+                    verdict,
                 }
             }
             other => return Err(WireError::new(format!("unknown event type {other:?}"))),
@@ -524,6 +578,103 @@ pub fn autoscale_config_from_json(v: &Json) -> Result<AutoscaleConfig, WireError
     })
 }
 
+// ---- GateConfig --------------------------------------------------------
+
+/// Serialise a per-frame gate configuration. Like the autoscale config,
+/// it rides the transport handshake (the optional `gate` field of
+/// `Hello`) so a coordinator can arm remote shards with exactly its own
+/// gate tuning; peers that predate the gate simply omit the field.
+pub fn gate_config_to_json(cfg: &GateConfig) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("skip_threshold".to_string(), Json::Num(cfg.skip_threshold));
+    o.insert(
+        "resume_threshold".to_string(),
+        Json::Num(cfg.resume_threshold),
+    );
+    o.insert(
+        "scene_cut_threshold".to_string(),
+        Json::Num(cfg.scene_cut_threshold),
+    );
+    o.insert(
+        "max_skip_run".to_string(),
+        Json::Num(cfg.max_skip_run as f64),
+    );
+    o.insert(
+        "tracker_stretch".to_string(),
+        Json::Num(cfg.tracker_stretch),
+    );
+    o.insert(
+        "pressure_threshold".to_string(),
+        Json::Num(cfg.pressure_threshold),
+    );
+    o.insert(
+        "pressure_rung".to_string(),
+        Json::Num(cfg.pressure_rung as f64),
+    );
+    o.insert("alpha".to_string(), Json::Num(cfg.alpha));
+    let mut d = BTreeMap::new();
+    d.insert("base".to_string(), Json::Num(cfg.dynamics.base));
+    d.insert("jitter".to_string(), Json::Num(cfg.dynamics.jitter));
+    d.insert(
+        "cut_every".to_string(),
+        Json::Num(cfg.dynamics.cut_every as f64),
+    );
+    o.insert("dynamics".to_string(), Json::Obj(d));
+    Json::Obj(o)
+}
+
+pub fn gate_config_from_json(v: &Json) -> Result<GateConfig, WireError> {
+    let skip_threshold = req_f64(v, "skip_threshold")?;
+    let resume_threshold = req_f64(v, "resume_threshold")?;
+    if !skip_threshold.is_finite() || skip_threshold < 0.0 {
+        return Err(WireError::new("gate skip_threshold must be >= 0"));
+    }
+    if !resume_threshold.is_finite() || resume_threshold < skip_threshold {
+        return Err(WireError::new(
+            "gate resume_threshold must be >= skip_threshold",
+        ));
+    }
+    let scene_cut_threshold = req_f64(v, "scene_cut_threshold")?;
+    if !scene_cut_threshold.is_finite() || scene_cut_threshold < 0.0 {
+        return Err(WireError::new("gate scene_cut_threshold must be >= 0"));
+    }
+    let max_skip_run = req_u64(v, "max_skip_run")?;
+    if max_skip_run < 1 {
+        return Err(WireError::new("gate max_skip_run must be >= 1"));
+    }
+    let tracker_stretch = req_f64(v, "tracker_stretch")?;
+    if !tracker_stretch.is_finite() || tracker_stretch < 1.0 {
+        return Err(WireError::new("gate tracker_stretch must be >= 1"));
+    }
+    let alpha = req_f64(v, "alpha")?;
+    if !alpha.is_finite() || alpha <= 0.0 || alpha > 1.0 {
+        return Err(WireError::new("gate alpha must be in (0, 1]"));
+    }
+    let d = v
+        .get("dynamics")
+        .ok_or_else(|| WireError::missing("dynamics"))?;
+    let base = req_f64(d, "base")?;
+    let jitter = req_f64(d, "jitter")?;
+    if !base.is_finite() || base < 0.0 || !jitter.is_finite() || jitter < 0.0 {
+        return Err(WireError::new("gate dynamics must be non-negative"));
+    }
+    Ok(GateConfig {
+        skip_threshold,
+        resume_threshold,
+        scene_cut_threshold,
+        max_skip_run,
+        tracker_stretch,
+        pressure_threshold: req_f64(v, "pressure_threshold")?,
+        pressure_rung: req_usize(v, "pressure_rung")?,
+        alpha,
+        dynamics: MotionDynamics {
+            base,
+            jitter,
+            cut_every: req_u64(d, "cut_every")?,
+        },
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -737,5 +888,107 @@ mod tests {
         let ev = WireEvent::action(0.0, ControlOrigin::Scripted, ControlAction::DetachDevice(0));
         assert_eq!(ev.label(), "detach-device(#0)");
         assert!(ev.as_action().is_some());
+        let ev = WireEvent::gate(1.5, 0, 12, GateVerdict::Skip);
+        assert_eq!(ev.label(), "gate(s0 f12 skip)");
+        assert_eq!(ev.origin, ControlOrigin::Gate);
+        assert!(ev.as_action().is_none());
+        let ev = WireEvent::gate(2.0, 1, 30, GateVerdict::DownRung(2));
+        assert_eq!(ev.label(), "gate(s1 f30 down-rung 2)");
+    }
+
+    #[test]
+    fn every_gate_verdict_roundtrips() {
+        for verdict in [
+            GateVerdict::Detect,
+            GateVerdict::SceneCut,
+            GateVerdict::SkipCap,
+            GateVerdict::Skip,
+            GateVerdict::DownRung(1),
+            GateVerdict::DownRung(3),
+        ] {
+            roundtrip(&WireEvent::gate(2.75, 3, 41, verdict));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_gate_events() {
+        // Unknown verdicts and a down-rung without its rung are errors,
+        // not defaults.
+        assert!(WireEvent::decode(
+            r#"{"at":1,"origin":"gate","type":"gate","stream_id":0,"frame":5,"verdict":"teleport"}"#
+        )
+        .is_err());
+        assert!(WireEvent::decode(
+            r#"{"at":1,"origin":"gate","type":"gate","stream_id":0,"frame":5,"verdict":"down-rung"}"#
+        )
+        .is_err());
+        assert!(WireEvent::decode(
+            r#"{"at":1,"origin":"gate","type":"gate","stream_id":0,"verdict":"skip"}"#
+        )
+        .is_err());
+        assert!(WireEvent::decode(
+            r#"{"at":1,"origin":"gate","type":"gate","stream_id":0,"frame":-2,"verdict":"skip"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn gate_config_roundtrips() {
+        for cfg in [
+            GateConfig::default(),
+            GateConfig {
+                skip_threshold: 0.03,
+                resume_threshold: 0.11,
+                scene_cut_threshold: 0.625,
+                max_skip_run: 5,
+                tracker_stretch: 3.5,
+                pressure_threshold: 0.5,
+                pressure_rung: 2,
+                alpha: 0.25,
+                dynamics: MotionDynamics::sports(),
+            },
+        ] {
+            let text = gate_config_to_json(&cfg).to_string();
+            let back = gate_config_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, cfg, "wire text: {text}");
+        }
+        assert!(gate_config_from_json(&Json::parse("{}").unwrap()).is_err());
+        // Broken hysteresis (resume below skip) is rejected at decode
+        // time, not at the GatePolicy constructor's assert.
+        let mut j = gate_config_to_json(&GateConfig::default());
+        if let Json::Obj(o) = &mut j {
+            o.insert("resume_threshold".to_string(), Json::Num(0.001));
+        }
+        assert!(gate_config_from_json(&j).is_err());
+        let mut j = gate_config_to_json(&GateConfig::default());
+        if let Json::Obj(o) = &mut j {
+            o.insert("alpha".to_string(), Json::Num(0.0));
+        }
+        assert!(gate_config_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn random_gate_events_survive_the_codec() {
+        use crate::util::prop::{check, Config};
+        check("gate wire event roundtrip", Config::default(), |rng| {
+            let verdict = match rng.below(5) {
+                0 => GateVerdict::Detect,
+                1 => GateVerdict::SceneCut,
+                2 => GateVerdict::SkipCap,
+                3 => GateVerdict::Skip,
+                _ => GateVerdict::DownRung(rng.int_in(1, 6) as usize),
+            };
+            let ev = WireEvent::gate(
+                rng.range(0.0, 1_000.0),
+                rng.below(64) as usize,
+                rng.next_u64() % 100_000,
+                verdict,
+            );
+            let back = WireEvent::decode(&ev.encode()).map_err(|e| e.to_string())?;
+            if back != ev {
+                return Err(format!("decoded {back:?} != original {ev:?}"));
+            }
+            Ok(())
+        });
     }
 }

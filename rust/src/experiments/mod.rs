@@ -16,6 +16,7 @@ pub mod lang;
 pub mod energy;
 pub mod dropping;
 pub mod fleet;
+pub mod gate;
 pub mod shard;
 pub mod transport;
 

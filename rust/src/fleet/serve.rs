@@ -35,6 +35,7 @@ use crate::device::DeviceKind;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::metrics::{finish_stream, FleetReport, StreamAccum};
 use crate::fleet::stream::StreamSpec;
+use crate::gate::{GateConfig, GatePolicy, GateVerdict, MotionModel};
 use crate::types::{Detection, FrameId};
 use crate::util::stats::Percentiles;
 use crate::video::Clip;
@@ -48,6 +49,11 @@ pub struct FleetServeConfig {
     pub device_rates: Vec<f64>,
     /// Pace each stream at its λ (true) or flood (false).
     pub paced: bool,
+    /// Per-frame motion gate ([`crate::gate`]); `None` detects every
+    /// kept frame. The wall-clock path gates *skips only* — workers are
+    /// rung-agnostic, so pressure down-runging stays a virtual-time
+    /// engine feature.
+    pub gate: Option<GateConfig>,
 }
 
 struct Shared {
@@ -177,6 +183,12 @@ where
     });
     let (tx, rx) = mpsc::channel::<Msg>();
 
+    // Gate verdicts collected across ingest threads. Events are stamped
+    // at virtual capture time (`fid / fps`) rather than wall-clock so a
+    // gated serve run emits the exact same log as the virtual-time
+    // engine on the same streams — the EventLog replay contract.
+    let gate_events: Arc<Mutex<Vec<crate::control::WireEvent>>> = Arc::new(Mutex::new(Vec::new()));
+
     // Two barriers: `ready` gates on every worker having built its
     // (possibly expensive) detector; main then stamps t0; `go` releases
     // the paced ingest clocks.
@@ -263,7 +275,16 @@ where
             let count = frame_counts[sid];
             let stride = decisions[sid].stride();
             let paced = config.paced;
+            let gate_cfg = config.gate.clone();
+            let gate_events = Arc::clone(&gate_events);
             scope.spawn(move || {
+                // Per-stream gate state: the motion model is keyed by the
+                // stream *name*, so the same stream gates identically here
+                // and in the virtual-time engine.
+                let mut gate: Option<(GatePolicy, MotionModel)> = gate_cfg.map(|cfg| {
+                    let model = MotionModel::new(&spec.name, cfg.dynamics.clone());
+                    (GatePolicy::new(cfg), model)
+                });
                 ready.wait();
                 go.wait();
                 let t0 = *t0_cell.lock().unwrap();
@@ -280,6 +301,24 @@ where
                         // Admission-mandated subsampling: dropped on arrival.
                         let _ = tx.send(Msg::Dropped { sid, fid, at: now_s });
                         continue;
+                    }
+                    if let Some((policy, model)) = gate.as_mut() {
+                        // Skips only on the wall-clock path: workers are
+                        // rung-agnostic, so pressure is pinned to 0 and a
+                        // down-rung verdict can never fire.
+                        let verdict = policy.decide(model.energy(fid), 0.0);
+                        if verdict != GateVerdict::Detect {
+                            gate_events.lock().unwrap().push(crate::control::WireEvent::gate(
+                                fid as f64 / spec.fps,
+                                sid,
+                                fid,
+                                verdict,
+                            ));
+                        }
+                        if !verdict.detects() {
+                            let _ = tx.send(Msg::Dropped { sid, fid, at: now_s });
+                            continue;
+                        }
                     }
                     let evicted = {
                         let mut st = shared.state.lock().unwrap();
@@ -306,6 +345,23 @@ where
     });
 
     let wall = t0_cell.lock().unwrap().elapsed().as_secs_f64();
+
+    // Append the gate verdicts after the admission decisions, ordered by
+    // capture time (stream id breaks ties) so the log is deterministic
+    // regardless of ingest-thread interleaving.
+    {
+        let mut gated = std::mem::take(&mut *gate_events.lock().unwrap());
+        gated.sort_by(|a, b| {
+            let key = |ev: &crate::control::WireEvent| match ev.payload {
+                crate::control::WirePayload::Gate { stream, frame, .. } => (stream, frame),
+                _ => (usize::MAX, u64::MAX),
+            };
+            a.at.total_cmp(&b.at).then_with(|| key(a).cmp(&key(b)))
+        });
+        for ev in gated {
+            wire_log.push(ev);
+        }
+    }
 
     // With zero live workers, queued frames were never consumed and never
     // resolved, so the "one record per frame" invariant cannot hold —
@@ -454,6 +510,7 @@ mod tests {
             admission: AdmissionPolicy::admit_all(),
             device_rates: vec![200.0, 200.0],
             paced: true,
+            gate: None,
         };
         let report = serve_fleet(&streams, &config, |_| {
             Ok(Box::new(EchoDetector {
@@ -486,6 +543,7 @@ mod tests {
             admission: AdmissionPolicy::admit_all(),
             device_rates: vec![40.0],
             paced: true,
+            gate: None,
         };
         let report = serve_fleet(&streams, &config, |_| {
             Ok(Box::new(EchoDetector {
@@ -508,6 +566,7 @@ mod tests {
             admission: AdmissionPolicy::admit_all(),
             device_rates: vec![40.0, 40.0],
             paced: false,
+            gate: None,
         };
         let result = serve_fleet(&streams, &config, |w| {
             Err(anyhow::anyhow!("worker {w}: backend unavailable"))
@@ -527,6 +586,7 @@ mod tests {
             admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
             device_rates: vec![15.0],
             paced: false,
+            gate: None,
         };
         let report = serve_fleet(&streams, &config, |_| {
             Ok(Box::new(EchoDetector {
@@ -559,6 +619,7 @@ mod tests {
             },
             device_rates: vec![2.0],
             paced: false,
+            gate: None,
         };
         let report = serve_fleet(&streams, &config, |_| {
             Ok(Box::new(EchoDetector {
@@ -591,6 +652,7 @@ mod tests {
             admission: AdmissionPolicy::default(),
             device_rates: vec![100.0],
             paced: false,
+            gate: None,
         };
         let (report, log) = serve_fleet_logged(&streams, &config, |_| {
             Ok(Box::new(EchoDetector {
@@ -612,5 +674,59 @@ mod tests {
                 other => panic!("expected a decision payload, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn gated_serve_skips_quiet_frames_and_logs_verdicts_deterministically() {
+        use crate::control::{EventLog, WirePayload};
+        use crate::gate::GateVerdict;
+        // One quiet stream under the default (lobby-dynamics) gate: frame
+        // 0 detects, then the policy settles into skip/skip/refresh-cap
+        // triples. 30 frames ⇒ 20 skips + 9 caps, 10 frames detected.
+        let clip = generate(&presets::tiny_clip(32, 30, 30.0, 11), None);
+        let run = || {
+            let streams = [(&clip, StreamSpec::new("lobby", 30.0, 30).with_window(4))];
+            let config = FleetServeConfig {
+                admission: AdmissionPolicy::admit_all(),
+                device_rates: vec![100.0],
+                paced: true,
+                gate: Some(GateConfig::default()),
+            };
+            serve_fleet_logged(&streams, &config, |_| {
+                Ok(Box::new(EchoDetector {
+                    delay: Duration::from_millis(1),
+                }) as Box<dyn Detector>)
+            })
+            .unwrap()
+        };
+        let (report, log) = run();
+        let s = &report.streams[0];
+        assert_eq!(s.records.len(), 30);
+        assert_eq!(s.metrics.frames_dropped, 20, "gate-skipped frames drop");
+        assert_eq!(s.metrics.frames_processed, 10);
+        // 1 admission decision + one event per non-Detect verdict.
+        assert_eq!(log.len(), 1 + 29);
+        let mut skips = 0;
+        let mut caps = 0;
+        for ev in &log.events[1..] {
+            match &ev.payload {
+                WirePayload::Gate { stream, verdict, .. } => {
+                    assert_eq!(*stream, 0);
+                    match verdict {
+                        GateVerdict::Skip => skips += 1,
+                        GateVerdict::SkipCap => caps += 1,
+                        other => panic!("unexpected verdict {other:?}"),
+                    }
+                }
+                other => panic!("expected a gate payload, got {other:?}"),
+            }
+        }
+        assert_eq!((skips, caps), (20, 9));
+        // The log survives the wire and a re-run reproduces it verbatim:
+        // gate events are stamped at virtual capture time, so wall-clock
+        // jitter cannot leak into the replayable record.
+        assert_eq!(EventLog::decode(&log.encode()).unwrap(), log);
+        let (_, log2) = run();
+        assert_eq!(log2, log);
     }
 }

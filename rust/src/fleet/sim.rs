@@ -25,7 +25,11 @@
 //!   drives — device autoscaling and model-ladder swaps replace the
 //!   scripted events with feedback control.
 
-use crate::control::{ControlAction, ControlEvent, ControlOrigin, ControlRecord, EventLog};
+use std::collections::BTreeMap;
+
+use crate::control::{
+    ControlAction, ControlEvent, ControlOrigin, ControlRecord, EventLog, WireEvent,
+};
 use crate::coordinator::sync::Fate;
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
@@ -33,6 +37,7 @@ use crate::fleet::metrics::{finish_stream, FleetReport, StreamAccum};
 use crate::fleet::pool::Job;
 use crate::fleet::registry::FleetRegistry;
 use crate::fleet::stream::{StreamId, StreamSpec, StreamState};
+use crate::gate::{GateConfig, GatePolicy, GateVerdict, MotionModel};
 use crate::sim::EventQueue;
 use crate::types::{FrameId, OutputRecord};
 use crate::util::Rng;
@@ -48,6 +53,9 @@ pub struct Scenario {
     pub events: Vec<ControlEvent>,
     pub admission: AdmissionPolicy,
     pub seed: u64,
+    /// Per-frame motion gate ([`crate::gate`]); `None` detects every
+    /// admitted frame (the pre-gate behaviour).
+    pub gate: Option<GateConfig>,
 }
 
 impl Scenario {
@@ -58,6 +66,7 @@ impl Scenario {
             events: Vec::new(),
             admission: AdmissionPolicy::default(),
             seed: 0,
+            gate: None,
         }
     }
 
@@ -74,6 +83,58 @@ impl Scenario {
     pub fn with_seed(mut self, seed: u64) -> Scenario {
         self.seed = seed;
         self
+    }
+
+    pub fn with_gate(mut self, gate: GateConfig) -> Scenario {
+        self.gate = Some(gate);
+        self
+    }
+}
+
+/// Engine-side gate state: one policy + motion model per stream (grown
+/// lazily so mid-run `AttachStream` verbs gate too), the pending
+/// per-frame rung overrides the dispatcher consumes, and the verdict
+/// log. Steady-state `Detect` verdicts are not logged — only the frames
+/// where the gate changed something.
+struct GateState {
+    cfg: GateConfig,
+    streams: Vec<Option<(GatePolicy, MotionModel)>>,
+    overrides: BTreeMap<(StreamId, FrameId), usize>,
+    events: Vec<WireEvent>,
+}
+
+impl GateState {
+    fn new(cfg: GateConfig) -> GateState {
+        GateState {
+            cfg,
+            streams: Vec::new(),
+            overrides: BTreeMap::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Gate verdict for stream `s`'s frame `fid` arriving at `now`.
+    fn decide(&mut self, s: &StreamState, fid: FrameId, now: f64) -> GateVerdict {
+        if self.streams.len() <= s.id {
+            self.streams.resize_with(s.id + 1, || None);
+        }
+        let cfg = self.cfg.clone();
+        let (policy, model) = self.streams[s.id].get_or_insert_with(|| {
+            let model = MotionModel::new(&s.spec.name, cfg.dynamics.clone());
+            (GatePolicy::new(cfg), model)
+        });
+        let energy = model.energy(fid);
+        let pressure = s.window.len() as f64 / s.spec.window.max(1) as f64;
+        let verdict = policy.decide(energy, pressure);
+        match verdict {
+            GateVerdict::Detect => {}
+            GateVerdict::DownRung(rung) => {
+                self.overrides.insert((s.id, fid), rung);
+                self.events.push(WireEvent::gate(now, s.id, fid, verdict));
+            }
+            _ => self.events.push(WireEvent::gate(now, s.id, fid, verdict)),
+        }
+        verdict
     }
 }
 
@@ -104,12 +165,21 @@ pub trait FleetController {
 pub struct FleetRunOutput {
     pub report: FleetReport,
     pub control_log: Vec<ControlRecord>,
+    /// Per-frame gate verdicts (empty when the scenario has no gate).
+    pub gate_log: Vec<WireEvent>,
 }
 
 impl FleetRunOutput {
-    /// The run's control log as a versioned, serialisable wire log.
+    /// The run's control log as a versioned, serialisable wire log,
+    /// gate verdicts interleaved in time order (stable: control events
+    /// sort before gate verdicts at equal times).
     pub fn wire_log(&self) -> EventLog {
-        EventLog::from_records(&self.control_log)
+        let mut log = EventLog::from_records(&self.control_log);
+        for ev in &self.gate_log {
+            log.push(ev.clone());
+        }
+        log.events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        log
     }
 }
 
@@ -169,6 +239,7 @@ fn arrival(
     fid: FrameId,
     now: f64,
     controller: &mut Option<&mut dyn FleetController>,
+    gate: &mut Option<GateState>,
 ) {
     let n_new = {
         let s = &mut reg.streams[sid];
@@ -183,6 +254,16 @@ fn arrival(
         } else if !s.keeps(fid) {
             // Degraded stream: admission-mandated subsampling.
             s.resolve(fid, Fate::Dropped, now)
+        } else if gate
+            .as_mut()
+            .map(|g| g.decide(s, fid, now))
+            .is_some_and(|v| !v.detects())
+        {
+            // Gate-skipped quiet frame: never enters the window, costs
+            // no device time; the synchronizer's stale-fill stands in
+            // for the constant-velocity tracker and delivered-mAP
+            // charges it the (stretched) staleness decay.
+            s.resolve(fid, Fate::Dropped, now)
         } else if let Some(evicted) = s.window.arrive(fid).evicted {
             s.resolve(evicted, Fate::Dropped, now)
         } else {
@@ -195,7 +276,12 @@ fn arrival(
 /// Work-conserving dispatch: pair idle devices with backlogged streams
 /// until one side runs out. Returns how many jobs were started (the
 /// caller tracks in-flight work for controller-tick termination).
-fn dispatch(reg: &mut FleetRegistry, queue: &mut EventQueue<Ev>, rng: &mut Rng) -> usize {
+fn dispatch(
+    reg: &mut FleetRegistry,
+    queue: &mut EventQueue<Ev>,
+    rng: &mut Rng,
+    gate: &mut Option<GateState>,
+) -> usize {
     let mut started = 0;
     loop {
         let Some(dev) = reg.pool.next_idle() else { break };
@@ -207,8 +293,17 @@ fn dispatch(reg: &mut FleetRegistry, queue: &mut EventQueue<Ev>, rng: &mut Rng) 
         let weight = reg.streams[sid].spec.weight.max(1e-9);
         reg.streams[sid].vtime += 1.0 / weight;
         // Model-ladder hook: a stream on a faster rung costs the device
-        // proportionally less service time per frame.
-        let speedup = reg.admission.rung_speedup(reg.streams[sid].decision.rung());
+        // proportionally less service time per frame. A gate down-rung
+        // override applies to this frame only, never upgrades below the
+        // stream's admitted rung, and is clamped to the ladder (under
+        // stride-mode admission there is no ladder, so the override is
+        // logged but has no speed effect).
+        let base_rung = reg.streams[sid].decision.rung();
+        let rung = match gate.as_mut().and_then(|g| g.overrides.remove(&(sid, fid))) {
+            Some(r) => r.max(base_rung).min(reg.admission.max_rung()),
+            None => base_rung,
+        };
+        let speedup = reg.admission.rung_speedup(rung);
         let t = reg
             .pool
             .start_scaled(dev, Job { stream: sid, fid }, speedup, rng);
@@ -269,6 +364,7 @@ pub fn run_fleet_with(
     let mut queue: EventQueue<Ev> = EventQueue::new();
     let mut rng = Rng::new(scenario.seed ^ 0x0F1E_E75E_ED00_0001);
     let mut control_log: Vec<ControlRecord> = Vec::new();
+    let mut gate = scenario.gate.clone().map(GateState::new);
 
     // Outstanding-work counters: a controller tick re-arms only while
     // any of these is non-zero, so the run terminates.
@@ -296,7 +392,7 @@ pub fn run_fleet_with(
         queue.schedule(dt, Ev::Tick);
     }
 
-    in_flight += dispatch(&mut reg, &mut queue, &mut rng);
+    in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
 
     while let Some((now, ev)) = queue.pop() {
         match ev {
@@ -306,8 +402,8 @@ pub fn run_fleet_with(
                 if schedule_next_arrival(&mut queue, &reg, sid, fid + 1) {
                     pending_arrivals += 1;
                 }
-                arrival(&mut reg, sid, fid, now, &mut controller);
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
+                arrival(&mut reg, sid, fid, now, &mut controller, &mut gate);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
             }
             Ev::ServiceDone { dev } => {
                 last_activity = now;
@@ -329,7 +425,7 @@ pub fn run_fleet_with(
                     )
                 };
                 feed(&mut controller, &reg.streams[job.stream], n_new, now);
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
             }
             Ev::Control { idx } => {
                 last_activity = now;
@@ -348,7 +444,7 @@ pub fn run_fleet_with(
                     action,
                     origin: ControlOrigin::Scripted,
                 });
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
             }
             Ev::Tick => {
                 let actions = match controller.as_mut() {
@@ -370,7 +466,7 @@ pub fn run_fleet_with(
                         origin: ControlOrigin::Controller,
                     });
                 }
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
                 if pending_arrivals > 0 || in_flight > 0 || pending_controls > 0 {
                     queue.schedule_in(tick.expect("tick scheduled only with controller"), Ev::Tick);
                 }
@@ -439,6 +535,7 @@ pub fn run_fleet_with(
             device_labels,
         },
         control_log,
+        gate_log: gate.map(|g| g.events).unwrap_or_default(),
     }
 }
 
@@ -712,6 +809,145 @@ mod tests {
                 ))];
             }
             Vec::new()
+        }
+    }
+
+    #[test]
+    fn gated_quiet_stream_skips_most_frames_and_logs_verdicts() {
+        use crate::control::WirePayload;
+        // Lobby-quiet dynamics: after the first detection the gate runs
+        // skip, skip, forced refresh (cap 2) forever — 2/3 of the frames
+        // never cost device time, but every frame still gets a record.
+        let scenario = Scenario::new(devices(&[18.0]), specs(1, 15.0, 90, 4))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(21)
+            .with_gate(GateConfig::default());
+        let out = run_fleet_with(&scenario, None);
+        let s = &out.report.streams[0];
+        assert_eq!(s.records.len(), 90);
+        let skips = out
+            .gate_log
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.payload,
+                    WirePayload::Gate { verdict: GateVerdict::Skip, .. }
+                )
+            })
+            .count();
+        let caps = out
+            .gate_log
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.payload,
+                    WirePayload::Gate { verdict: GateVerdict::SkipCap, .. }
+                )
+            })
+            .count();
+        // Frame 0 detects, then 89 frames in (skip, skip, cap) cycles.
+        assert_eq!(skips, 60, "cap log: {caps}");
+        assert_eq!(caps, 29);
+        assert_eq!(s.metrics.frames_processed, 30);
+        // The ungated twin pays a device slot for every frame.
+        let plain = {
+            let mut sc = scenario.clone();
+            sc.gate = None;
+            run_fleet(&sc)
+        };
+        assert_eq!(plain.streams[0].metrics.frames_processed, 90);
+        // Deterministic, and the merged wire log replays verbatim.
+        let again = run_fleet_with(&scenario, None);
+        assert_eq!(again.gate_log, out.gate_log);
+        let log = out.wire_log();
+        assert_eq!(log.len(), out.gate_log.len());
+        let back = EventLog::decode(&log.encode()).expect("replay");
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn gated_busy_stream_downrungs_under_pressure() {
+        use crate::control::WirePayload;
+        use crate::fleet::admission::{AdmissionMode, DegradeMode};
+        use crate::gate::MotionDynamics;
+        // Highway-busy dynamics never drop below the skip threshold, so
+        // the gate's only lever is the pressure down-rung. λ=10 against
+        // μ=5 keeps the 4-slot window at the pressure threshold; with a
+        // 2.6× rung the down-runged frames drain fast enough to beat
+        // the ungated run's throughput.
+        let admission = AdmissionPolicy {
+            mode: AdmissionMode::AdmitAll,
+            degrade: DegradeMode::ModelSwap { speedups: vec![1.0, 2.6] },
+            ..AdmissionPolicy::default()
+        };
+        let gate = GateConfig {
+            dynamics: MotionDynamics::highway(),
+            ..GateConfig::default()
+        };
+        let scenario = Scenario::new(devices(&[5.0]), specs(1, 10.0, 200, 4))
+            .with_admission(admission)
+            .with_seed(23)
+            .with_gate(gate);
+        let out = run_fleet_with(&scenario, None);
+        let downrungs = out
+            .gate_log
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.payload,
+                    WirePayload::Gate { verdict: GateVerdict::DownRung(1), .. }
+                )
+            })
+            .count();
+        assert!(downrungs > 10, "only {downrungs} down-rung verdicts");
+        assert!(
+            out.gate_log.iter().all(|e| !matches!(
+                e.payload,
+                WirePayload::Gate { verdict: GateVerdict::Skip, .. }
+            )),
+            "highway dynamics must never skip"
+        );
+        let mut plain = scenario.clone();
+        plain.gate = None;
+        let baseline = run_fleet(&plain);
+        assert!(
+            out.report.total_processed() > baseline.total_processed() + 20,
+            "gated {} vs ungated {}",
+            out.report.total_processed(),
+            baseline.total_processed()
+        );
+    }
+
+    #[test]
+    fn scene_cut_always_forces_a_fresh_detection() {
+        use crate::control::WirePayload;
+        use crate::gate::MotionDynamics;
+        // Quiet baseline with a cut every 10 frames: each cut must land
+        // as a SceneCut verdict (a fresh detection), never a skip.
+        let gate = GateConfig::for_dynamics(MotionDynamics {
+            base: 0.02,
+            jitter: 0.01,
+            cut_every: 10,
+        });
+        let scenario = Scenario::new(devices(&[18.0]), specs(1, 15.0, 60, 4))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(31)
+            .with_gate(gate);
+        let out = run_fleet_with(&scenario, None);
+        let cut_frames: Vec<u64> = out
+            .gate_log
+            .iter()
+            .filter_map(|e| match e.payload {
+                WirePayload::Gate { frame, verdict: GateVerdict::SceneCut, .. } => Some(frame),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cut_frames, vec![10, 20, 30, 40, 50]);
+        for f in cut_frames {
+            assert!(
+                !out.report.streams[0].records[f as usize].was_dropped(),
+                "cut frame {f} must be freshly detected"
+            );
         }
     }
 

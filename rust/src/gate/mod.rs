@@ -1,0 +1,23 @@
+//! Per-frame motion-gated detection (ROADMAP open item 3).
+//!
+//! Every control loop below this module — the admission ladder,
+//! autoscale, shard migration — reacts per *stream* at epoch
+//! granularity. The gate adds the per-*frame* axis: a motion-energy
+//! signal ([`signal`]) decides, frame by frame, whether a detection is
+//! worth a device slot at all ([`policy`]). Quiet frames are skipped and
+//! covered by tracker-extrapolated stale boxes; budget-pressured frames
+//! fall to a cheaper ladder rung instead of being dropped; scene cuts
+//! and a hard skip-run cap always force a fresh detection.
+//!
+//! The engines ([`crate::fleet::sim`], [`crate::fleet::serve`],
+//! [`crate::shard`]) consult the gate per arriving frame and emit each
+//! non-trivial verdict as a [`crate::control::WireEvent`] with
+//! [`crate::control::ControlOrigin::Gate`], so gated runs stay inside
+//! the replayable `EventLog` contract and behave identically in-process
+//! and across shard sockets.
+
+pub mod policy;
+pub mod signal;
+
+pub use policy::{GateConfig, GatePolicy, GateVerdict};
+pub use signal::{clip_mean_energy, frame_mse, MotionDynamics, MotionModel};

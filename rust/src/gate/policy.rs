@@ -1,0 +1,282 @@
+//! Per-frame gate controller.
+//!
+//! [`GatePolicy`] turns the motion-energy signal from [`crate::gate::signal`]
+//! into one [`GateVerdict`] per frame:
+//!
+//! * **Skip** low-motion frames entirely — the synchronizer's stale-fill
+//!   acts as the constant-velocity tracker proxy, and delivered mAP
+//!   charges those boxes [`crate::autoscale::ladder::staleness_factor`]
+//!   decay stretched by [`GateConfig::tracker_stretch`] (a tracker holds
+//!   boxes fresh ~stretch× longer than blind reuse).
+//! * **Down-rung** budget-pressured frames to a cheaper ladder rung
+//!   instead of dropping them, when the stream's frame window is filling.
+//! * **Always re-detect** on scene cuts (energy spike over
+//!   [`GateConfig::scene_cut_threshold`]) and after
+//!   [`GateConfig::max_skip_run`] consecutive skips — stale boxes can
+//!   never coast indefinitely.
+//!
+//! Skip entry/exit uses hysteresis (`skip_threshold` < `resume_threshold`)
+//! on an EWMA of the raw energy, so sensor jitter near the threshold
+//! cannot make the gate oscillate frame by frame.
+
+use crate::gate::signal::MotionDynamics;
+use crate::util::stats::Ewma;
+
+/// Per-frame decision of the gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateVerdict {
+    /// Run the detector at the stream's current rung (steady state).
+    Detect,
+    /// Energy spiked past the scene-cut threshold: force a detection
+    /// and reset any skip run.
+    SceneCut,
+    /// The skip-run cap fired: force a refresh detection even though
+    /// the scene is still quiet.
+    SkipCap,
+    /// Skip detection; deliver tracker-extrapolated (stale) boxes.
+    Skip,
+    /// Detect, but at the given (cheaper) ladder rung because the
+    /// stream's frame window is under pressure.
+    DownRung(usize),
+}
+
+impl GateVerdict {
+    /// Whether this verdict runs the detector on the frame.
+    pub fn detects(&self) -> bool {
+        !matches!(self, GateVerdict::Skip)
+    }
+
+    /// Stable label (wire codec and log rendering).
+    pub fn label(&self) -> &'static str {
+        match self {
+            GateVerdict::Detect => "detect",
+            GateVerdict::SceneCut => "scene-cut",
+            GateVerdict::SkipCap => "skip-cap",
+            GateVerdict::Skip => "skip",
+            GateVerdict::DownRung(_) => "down-rung",
+        }
+    }
+}
+
+/// Gate tuning. Serialised onto the wire (see
+/// [`crate::control::wire`]) as the optional `gate` field of `Hello`,
+/// so a coordinator can arm remote shards — old peers simply omit it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateConfig {
+    /// Enter skip mode when the smoothed energy falls below this.
+    pub skip_threshold: f64,
+    /// Leave skip mode when the smoothed energy rises past this
+    /// (hysteresis: must be ≥ `skip_threshold`).
+    pub resume_threshold: f64,
+    /// Raw energy at or above this is a scene cut: always re-detect.
+    pub scene_cut_threshold: f64,
+    /// Hard cap on consecutive skipped frames before a forced refresh.
+    pub max_skip_run: u64,
+    /// How much slower tracker-extrapolated boxes decay than blind
+    /// stale reuse: effective age = age / stretch (≥ 1).
+    pub tracker_stretch: f64,
+    /// Frame-window occupancy fraction at which a frame that would be
+    /// detected is down-runged instead.
+    pub pressure_threshold: f64,
+    /// Rung to fall to under pressure (0 disables down-runging).
+    pub pressure_rung: usize,
+    /// EWMA smoothing factor for the energy signal, in (0, 1].
+    pub alpha: f64,
+    /// Synthetic motion dynamics for engines with no pixel access.
+    pub dynamics: MotionDynamics,
+}
+
+impl Default for GateConfig {
+    fn default() -> GateConfig {
+        GateConfig {
+            skip_threshold: 0.05,
+            resume_threshold: 0.08,
+            scene_cut_threshold: 0.5,
+            max_skip_run: 2,
+            tracker_stretch: 6.0,
+            pressure_threshold: 0.75,
+            pressure_rung: 1,
+            alpha: 0.4,
+            dynamics: MotionDynamics::lobby(),
+        }
+    }
+}
+
+impl GateConfig {
+    /// Default tuning with the given content dynamics.
+    pub fn for_dynamics(dynamics: MotionDynamics) -> GateConfig {
+        GateConfig { dynamics, ..GateConfig::default() }
+    }
+}
+
+/// Per-stream gate state machine. Feed it one `(energy, pressure)`
+/// sample per frame, in frame order.
+#[derive(Debug, Clone)]
+pub struct GatePolicy {
+    cfg: GateConfig,
+    ewma: Ewma,
+    skipping: bool,
+    run: u64,
+    frames: u64,
+}
+
+impl GatePolicy {
+    pub fn new(cfg: GateConfig) -> GatePolicy {
+        assert!(cfg.skip_threshold >= 0.0, "skip threshold must be >= 0");
+        assert!(
+            cfg.resume_threshold >= cfg.skip_threshold,
+            "resume threshold below skip threshold breaks hysteresis"
+        );
+        assert!(cfg.max_skip_run >= 1, "skip-run cap must allow at least one skip");
+        assert!(cfg.tracker_stretch >= 1.0, "tracker stretch must be >= 1");
+        let alpha = cfg.alpha;
+        GatePolicy { cfg, ewma: Ewma::new(alpha), skipping: false, run: 0, frames: 0 }
+    }
+
+    pub fn config(&self) -> &GateConfig {
+        &self.cfg
+    }
+
+    /// Decide the fate of the next frame. `raw` is the frame's motion
+    /// energy; `pressure` is the stream's frame-window occupancy in
+    /// [0, 1].
+    pub fn decide(&mut self, raw: f64, pressure: f64) -> GateVerdict {
+        self.ewma.push(raw);
+        let smoothed = self.ewma.get_or(raw);
+        let first = self.frames == 0;
+        self.frames += 1;
+
+        // The very first frame has no prior boxes to extrapolate from.
+        if first {
+            return GateVerdict::Detect;
+        }
+        // Scene cuts trump everything, including an active skip run.
+        if raw >= self.cfg.scene_cut_threshold {
+            self.skipping = false;
+            self.run = 0;
+            return GateVerdict::SceneCut;
+        }
+        if self.skipping {
+            if smoothed > self.cfg.resume_threshold {
+                self.skipping = false;
+                self.run = 0;
+                return GateVerdict::Detect;
+            }
+            if self.run >= self.cfg.max_skip_run {
+                // Forced refresh; stay in skip mode — the scene is
+                // still quiet, so the next frames skip again.
+                self.run = 0;
+                return GateVerdict::SkipCap;
+            }
+            self.run += 1;
+            return GateVerdict::Skip;
+        }
+        if smoothed < self.cfg.skip_threshold {
+            self.skipping = true;
+            self.run = 1;
+            return GateVerdict::Skip;
+        }
+        if pressure >= self.cfg.pressure_threshold && self.cfg.pressure_rung > 0 {
+            return GateVerdict::DownRung(self.cfg.pressure_rung);
+        }
+        GateVerdict::Detect
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GateConfig {
+        // alpha 1.0 removes smoothing lag so thresholds act instantly.
+        GateConfig { alpha: 1.0, ..GateConfig::default() }
+    }
+
+    #[test]
+    fn first_frame_always_detects() {
+        let mut p = GatePolicy::new(cfg());
+        assert_eq!(p.decide(0.0, 0.0), GateVerdict::Detect);
+    }
+
+    #[test]
+    fn quiet_scene_skips_with_periodic_refresh() {
+        let mut p = GatePolicy::new(cfg());
+        assert_eq!(p.decide(0.01, 0.0), GateVerdict::Detect);
+        // cap = 2: the steady pattern is skip, skip, forced refresh.
+        let verdicts: Vec<GateVerdict> = (0..6).map(|_| p.decide(0.01, 0.0)).collect();
+        assert_eq!(
+            verdicts,
+            vec![
+                GateVerdict::Skip,
+                GateVerdict::Skip,
+                GateVerdict::SkipCap,
+                GateVerdict::Skip,
+                GateVerdict::Skip,
+                GateVerdict::SkipCap,
+            ]
+        );
+    }
+
+    #[test]
+    fn hysteresis_keeps_skipping_between_thresholds() {
+        let mut p = GatePolicy::new(cfg());
+        p.decide(0.01, 0.0);
+        assert_eq!(p.decide(0.01, 0.0), GateVerdict::Skip);
+        // 0.06 is above the skip threshold but below resume: still quiet.
+        assert_eq!(p.decide(0.06, 0.0), GateVerdict::Skip);
+        // Past the resume threshold: back to detecting.
+        assert_eq!(p.decide(0.10, 0.0), GateVerdict::Detect);
+        // And 0.06 from the detecting side does NOT re-enter skip mode.
+        assert_eq!(p.decide(0.06, 0.0), GateVerdict::Detect);
+    }
+
+    #[test]
+    fn scene_cut_interrupts_a_skip_run() {
+        let mut p = GatePolicy::new(cfg());
+        p.decide(0.01, 0.0);
+        assert_eq!(p.decide(0.01, 0.0), GateVerdict::Skip);
+        assert_eq!(p.decide(0.9, 0.0), GateVerdict::SceneCut);
+        // The cut reset skip mode; quiet frames start a fresh run.
+        assert_eq!(p.decide(0.01, 0.0), GateVerdict::Skip);
+    }
+
+    #[test]
+    fn pressure_downrungs_instead_of_detecting() {
+        let mut p = GatePolicy::new(cfg());
+        p.decide(0.2, 0.0);
+        assert_eq!(p.decide(0.2, 0.9), GateVerdict::DownRung(1));
+        // Below the pressure threshold the same energy detects.
+        assert_eq!(p.decide(0.2, 0.1), GateVerdict::Detect);
+        // A quiet frame skips even under pressure — skipping is cheaper
+        // than down-runging.
+        assert_eq!(p.decide(0.01, 0.9), GateVerdict::Skip);
+    }
+
+    #[test]
+    fn pressure_rung_zero_disables_downrunging() {
+        let mut p = GatePolicy::new(GateConfig { pressure_rung: 0, ..cfg() });
+        p.decide(0.2, 0.0);
+        assert_eq!(p.decide(0.2, 0.95), GateVerdict::Detect);
+    }
+
+    #[test]
+    fn verdict_labels_and_detects() {
+        assert!(GateVerdict::Detect.detects());
+        assert!(GateVerdict::SceneCut.detects());
+        assert!(GateVerdict::SkipCap.detects());
+        assert!(GateVerdict::DownRung(1).detects());
+        assert!(!GateVerdict::Skip.detects());
+        assert_eq!(GateVerdict::Skip.label(), "skip");
+        assert_eq!(GateVerdict::DownRung(2).label(), "down-rung");
+    }
+
+    #[test]
+    #[should_panic(expected = "hysteresis")]
+    fn resume_below_skip_threshold_is_rejected() {
+        GatePolicy::new(GateConfig {
+            skip_threshold: 0.1,
+            resume_threshold: 0.05,
+            ..GateConfig::default()
+        });
+    }
+}

@@ -1,0 +1,225 @@
+//! Per-stream motion-energy signal.
+//!
+//! The gate needs one scalar per frame: "how much did the scene change
+//! since the last frame?". Two sources produce it:
+//!
+//! * **Pixel path** — [`frame_mse`], the normalised mean squared error
+//!   between consecutive RGB8 frames from [`crate::video::raster`]
+//!   (SNIPPETS.md snippet 1's gating signal). Used wherever real
+//!   pixels exist: rasterised preset clips, `eva visualize`-style
+//!   tooling, and the calibration tests that pin the content-dynamics
+//!   ordering (static lobby < highway < sports).
+//! * **Synthetic path** — [`MotionModel`], a deterministic per-stream
+//!   energy process parameterised by [`MotionDynamics`]. The
+//!   virtual-time engines ([`crate::fleet::sim`]) and the remote serve
+//!   path ([`crate::transport::serve`]) run on metadata-only frames
+//!   with no pixels, so the gate's decisions there must come from a
+//!   model that is a pure function of `(stream name, frame id)` — that
+//!   purity is what makes gated runs bit-identical in-process and over
+//!   tcp/uds sockets.
+//!
+//! The synthetic presets ([`MotionDynamics::lobby`] /
+//! [`MotionDynamics::highway`] / [`MotionDynamics::sports`]) mirror the
+//! pixel-level content-dynamics presets in [`crate::video::presets`];
+//! the tests here assert the pixel path orders them the same way the
+//! synthetic bases do.
+
+use crate::util::Rng;
+
+/// Normalised mean squared error between two same-sized RGB8 frames,
+/// in [0, 1] (channel values scaled to [0, 1] before differencing).
+/// Mismatched or empty buffers read as maximal energy — a frame the
+/// gate cannot compare must be detected, never skipped.
+pub fn frame_mse(a: &[u8], b: &[u8]) -> f64 {
+    if a.is_empty() || a.len() != b.len() {
+        return 1.0;
+    }
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let d = (x as f64 - y as f64) / 255.0;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// Mean per-step [`frame_mse`] over a clip's consecutive rasterised
+/// frames (0.0 for clips with fewer than two frames).
+pub fn clip_mean_energy(clip: &crate::video::Clip) -> f64 {
+    let steps: Vec<f64> = clip
+        .frames
+        .windows(2)
+        .map(|w| frame_mse(&w[0].pixels, &w[1].pixels))
+        .collect();
+    if steps.is_empty() {
+        return 0.0;
+    }
+    steps.iter().sum::<f64>() / steps.len() as f64
+}
+
+/// Parameters of the synthetic per-stream motion-energy process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MotionDynamics {
+    /// Baseline per-frame energy (the scene's ambient change level).
+    pub base: f64,
+    /// Uniform jitter amplitude on top of `base`.
+    pub jitter: f64,
+    /// Scene-cut period in frames: every `cut_every`-th frame (after
+    /// frame 0) spikes to full energy. 0 = no cuts.
+    pub cut_every: u64,
+}
+
+impl MotionDynamics {
+    /// Static lobby camera: almost nothing moves.
+    pub fn lobby() -> MotionDynamics {
+        MotionDynamics { base: 0.02, jitter: 0.01, cut_every: 0 }
+    }
+
+    /// Fixed highway camera: constant fast traffic.
+    pub fn highway() -> MotionDynamics {
+        MotionDynamics { base: 0.12, jitter: 0.06, cut_every: 0 }
+    }
+
+    /// Broadcast sports feed: fast play plus periodic camera cuts.
+    pub fn sports() -> MotionDynamics {
+        MotionDynamics { base: 0.20, jitter: 0.10, cut_every: 120 }
+    }
+
+    /// Preset by content-dynamics name (mirrors
+    /// [`crate::video::presets::by_name`]'s naming).
+    pub fn by_name(name: &str) -> Option<MotionDynamics> {
+        match name {
+            "static_lobby" | "lobby" => Some(MotionDynamics::lobby()),
+            "highway_cam" | "highway" => Some(MotionDynamics::highway()),
+            "sports_feed" | "sports" => Some(MotionDynamics::sports()),
+            _ => None,
+        }
+    }
+}
+
+/// FNV-1a over a stream name: the per-stream seed of the synthetic
+/// energy process (kept local so the gate has no placement dependency).
+fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Deterministic per-stream motion-energy process: `energy(fid)` is a
+/// pure function of the stream name and the frame id, so every engine —
+/// in-process or across a socket — computes the identical signal.
+#[derive(Debug, Clone)]
+pub struct MotionModel {
+    seed: u64,
+    dynamics: MotionDynamics,
+}
+
+impl MotionModel {
+    pub fn new(stream_name: &str, dynamics: MotionDynamics) -> MotionModel {
+        MotionModel { seed: name_seed(stream_name), dynamics }
+    }
+
+    /// Motion energy of frame `fid` (frame 0 reads the baseline — there
+    /// is no previous frame to differ against, and the gate always
+    /// detects frame 0 anyway).
+    pub fn energy(&self, fid: u64) -> f64 {
+        let d = &self.dynamics;
+        if d.cut_every > 0 && fid > 0 && fid % d.cut_every == 0 {
+            return 1.0;
+        }
+        let mut rng = Rng::new(self.seed ^ fid.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        d.base + d.jitter * rng.f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::{generate, presets};
+
+    #[test]
+    fn frame_mse_basics() {
+        assert_eq!(frame_mse(&[0, 0, 0], &[0, 0, 0]), 0.0);
+        assert_eq!(frame_mse(&[255, 255], &[0, 0]), 1.0);
+        // Mismatched or empty buffers are maximal energy, never zero.
+        assert_eq!(frame_mse(&[1, 2], &[1, 2, 3]), 1.0);
+        assert_eq!(frame_mse(&[], &[]), 1.0);
+        // A half-scale step lands at 0.25.
+        let a = vec![0u8; 12];
+        let b = vec![128u8; 12];
+        let e = frame_mse(&a, &b);
+        assert!((e - (128.0 / 255.0) * (128.0 / 255.0)).abs() < 1e-9, "{e}");
+    }
+
+    #[test]
+    fn pixel_energy_tracks_object_speed() {
+        // Single-factor check: same clip spec, same seed, only the
+        // object speed range differs — faster objects must raise the
+        // frame-diff energy.
+        let mut slow = presets::tiny_clip(48, 16, 10.0, 9);
+        slow.min_speed = 0.005;
+        slow.max_speed = 0.02;
+        let mut fast = slow.clone();
+        fast.min_speed = 0.6;
+        fast.max_speed = 0.9;
+        let e_slow = clip_mean_energy(&generate(&slow, Some(48)));
+        let e_fast = clip_mean_energy(&generate(&fast, Some(48)));
+        assert!(
+            e_fast > e_slow,
+            "fast {e_fast:.5} must exceed slow {e_slow:.5}"
+        );
+    }
+
+    #[test]
+    fn synthetic_energy_is_deterministic_and_bounded() {
+        let m = MotionModel::new("cam0", MotionDynamics::highway());
+        for fid in 0..200u64 {
+            let e = m.energy(fid);
+            assert_eq!(e, m.energy(fid), "frame {fid} not deterministic");
+            assert!(e >= 0.12 - 1e-12 && e <= 0.18 + 1e-12, "frame {fid}: {e}");
+        }
+        // Different streams see different (but individually stable)
+        // jitter sequences.
+        let other = MotionModel::new("cam1", MotionDynamics::highway());
+        assert!((0..50u64).any(|f| m.energy(f) != other.energy(f)));
+    }
+
+    #[test]
+    fn synthetic_presets_order_like_their_scenes() {
+        let mean = |d: MotionDynamics| {
+            let m = MotionModel::new("cam", d);
+            // Skip cut frames so the ordering reflects the baseline.
+            let vals: Vec<f64> = (1..100u64)
+                .map(|f| m.energy(f))
+                .filter(|&e| e < 1.0)
+                .collect();
+            vals.iter().sum::<f64>() / vals.len() as f64
+        };
+        let lobby = mean(MotionDynamics::lobby());
+        let highway = mean(MotionDynamics::highway());
+        let sports = mean(MotionDynamics::sports());
+        assert!(lobby < highway && highway < sports, "{lobby} {highway} {sports}");
+    }
+
+    #[test]
+    fn sports_cuts_spike_to_full_energy() {
+        let m = MotionModel::new("feed", MotionDynamics::sports());
+        assert_eq!(m.energy(120), 1.0);
+        assert_eq!(m.energy(240), 1.0);
+        assert!(m.energy(0) < 1.0, "frame 0 is not a cut");
+        assert!(m.energy(119) < 1.0);
+    }
+
+    #[test]
+    fn dynamics_lookup_by_name() {
+        assert_eq!(MotionDynamics::by_name("lobby"), Some(MotionDynamics::lobby()));
+        assert_eq!(
+            MotionDynamics::by_name("highway_cam"),
+            Some(MotionDynamics::highway())
+        );
+        assert_eq!(MotionDynamics::by_name("sports"), Some(MotionDynamics::sports()));
+        assert_eq!(MotionDynamics::by_name("nope"), None);
+    }
+}

@@ -56,6 +56,14 @@
 //!   lengths, version mismatch and peer loss handled explicitly), a
 //!   dial-with-backoff client, and a remote `fleet::serve` consumer
 //!   driven by a decoded `EventLog` stream instead of in-process calls.
+//! * [`gate`] — per-frame motion-gated detection: a per-stream motion
+//!   energy signal (frame-diff MSE over rastered clips, or calibrated
+//!   content-dynamics models for pixel-free paths) feeds a transprecision
+//!   controller that skips quiet frames (stale boxes stand in via a
+//!   constant-velocity tracker proxy), down-rungs budget-pressured
+//!   frames along the model ladder, and always re-detects on scene
+//!   cuts. Verdicts ride the control plane as origin-tagged
+//!   `WireEvent`s, so gated runs replay — locally and across shards.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
 //!   bench binaries and the CLI.
 
@@ -74,4 +82,5 @@ pub mod transport;
 pub mod fleet;
 pub mod autoscale;
 pub mod shard;
+pub mod gate;
 pub mod experiments;

@@ -6,6 +6,7 @@
 //!   fleet      multi-stream serving over a shared device pool (virtual time)
 //!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
 //!   shard      stream sharding across fleet instances (split|skew|failure|autoscale|run|transport)
+//!   gate       motion-gated detection vs always-detect (lobby|highway|sports|all)
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
 //!   nselect    recommend the parallel-detection parameter n (§III-B)
 //!   visualize  dump Figure 2/3-style PPM frames with box overlays
@@ -48,8 +49,8 @@ fn specs() -> Vec<Spec> {
         Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
-        Spec { name: "scenario", takes_value: true, help: "autoscale/shard: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|all|run|transport)", default: Some("step") },
-        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard: emit machine-readable JSON instead of tables", default: None },
+        Spec { name: "scenario", takes_value: true, help: "autoscale/shard/gate: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|all|run|transport; gate: lobby|highway|sports|all)", default: Some("step") },
+        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/gate: emit machine-readable JSON instead of tables", default: None },
         Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
         Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
         Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
@@ -60,9 +61,9 @@ fn specs() -> Vec<Spec> {
 
 /// The one canonical subcommand list: the validity gate in `main`, the
 /// usage strings and `run`'s dispatch must never drift apart.
-const SUBCOMMANDS: [&str; 9] = [
-    "serve", "offline", "fleet", "autoscale", "shard", "table", "nselect", "visualize",
-    "inspect",
+const SUBCOMMANDS: [&str; 10] = [
+    "serve", "offline", "fleet", "autoscale", "shard", "gate", "table", "nselect",
+    "visualize", "inspect",
 ];
 
 fn subcommand_list() -> String {
@@ -112,6 +113,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "fleet" => cmd_fleet(args),
         "autoscale" => cmd_autoscale(args),
         "shard" => cmd_shard(args),
+        "gate" => cmd_gate(args),
         "table" => cmd_table(args),
         "nselect" => cmd_nselect(args),
         "visualize" => cmd_visualize(args),
@@ -489,6 +491,55 @@ fn cmd_shard(args: &Args) -> Result<()> {
         }
         other => bail!("unknown shard scenario {other:?} (split|skew|failure|autoscale|all|run|transport)"),
     }
+    Ok(())
+}
+
+fn cmd_gate(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    // `--scenario` is shared with `eva autoscale`, whose default is
+    // "step" — not a gate preset, so it reads as "run everything".
+    let raw_scenario = args.str_or("scenario", "all");
+    let scenario = if raw_scenario == "step" {
+        "all".to_string()
+    } else {
+        raw_scenario
+    };
+    if args.flag("json") {
+        // Stdout must be exactly one parseable document here (CI
+        // uploads it as BENCH_gate.json).
+        let json = experiments::gate::gate_json(seed, &scenario)
+            .ok_or_else(|| anyhow!("unknown gate preset {scenario:?} (lobby|highway|sports|all)"))?;
+        println!("{}", json.to_string());
+        return Ok(());
+    }
+    if !matches!(scenario.as_str(), "lobby" | "highway" | "sports" | "all") {
+        bail!("unknown gate preset {scenario:?} (lobby|highway|sports|all)");
+    }
+    let (table, outcomes) = experiments::gate::content_sweep(seed);
+    let selected: Vec<_> = outcomes
+        .iter()
+        .filter(|o| scenario == "all" || o.preset == scenario)
+        .collect();
+    if scenario == "all" {
+        print!("{}", table.render());
+    } else {
+        for o in &selected {
+            println!(
+                "[gate] {} {}: σ {:.1} FPS, device eff {:.1} FPS, mAP {:.1}%, detect {:.1}%",
+                o.preset,
+                o.mode,
+                o.delivered_fps,
+                o.effective_device_fps,
+                o.delivered_map * 100.0,
+                o.detect_fraction * 100.0,
+            );
+        }
+    }
+    let gated: Vec<_> = selected.iter().filter(|o| o.mode == "gated").collect();
+    let skips: u64 = gated.iter().map(|o| o.skips).sum();
+    let refreshes: u64 = gated.iter().map(|o| o.refreshes).sum();
+    let downrungs: u64 = gated.iter().map(|o| o.downrungs).sum();
+    println!("[gate] {skips} skips, {refreshes} forced refreshes, {downrungs} down-rungs across gated runs");
     Ok(())
 }
 

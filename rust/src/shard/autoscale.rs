@@ -45,6 +45,7 @@ use crate::fleet::registry::FleetRegistry;
 use crate::fleet::sim::{run_fleet_with, FleetController, Scenario};
 use crate::fleet::stream::StreamSpec;
 use crate::fleet::FleetReport;
+use crate::gate::GateConfig;
 use crate::types::OutputRecord;
 
 /// Capacity a shard can reach by scaling locally: the util-adjusted sum
@@ -86,13 +87,24 @@ impl FleetController for Shifted<'_> {
 /// epochs of a sharded run.
 pub struct ShardAutoscaler {
     ctl: AutoscaleController,
+    /// Per-frame motion gate applied to every slice this shard runs
+    /// (`None` detects every admitted frame). Gate policy state is
+    /// slice-local — the motion model is keyed by stream *name*, so the
+    /// same stream gates identically on whichever shard hosts it.
+    gate: Option<GateConfig>,
 }
 
 impl ShardAutoscaler {
     pub fn new(cfg: AutoscaleConfig) -> ShardAutoscaler {
         ShardAutoscaler {
             ctl: AutoscaleController::new(cfg),
+            gate: None,
         }
+    }
+
+    /// Arm (or disarm) the per-frame motion gate for subsequent slices.
+    pub fn set_gate(&mut self, gate: Option<GateConfig>) {
+        self.gate = gate;
     }
 
     /// The configuration the embedded controller runs with.
@@ -134,9 +146,12 @@ impl ShardAutoscaler {
         seed: u64,
     ) -> (FleetReport, Vec<WireEvent>) {
         self.ctl.begin_slice();
-        let sub = Scenario::new(pool.clone(), specs)
+        let mut sub = Scenario::new(pool.clone(), specs)
             .with_admission(admission.clone())
             .with_seed(seed);
+        if let Some(gate) = &self.gate {
+            sub = sub.with_gate(gate.clone());
+        }
         let out = {
             let mut shifted = Shifted { ctl: &mut self.ctl, base: t0 };
             run_fleet_with(&sub, Some(&mut shifted))
@@ -182,6 +197,16 @@ impl ShardAutoscaler {
             .filter(|(_, attached)| *attached)
             .map(|(d, _)| d)
             .collect();
+
+        // Gate verdicts ride the same channel, shifted into shard time
+        // and remapped to global stream ids (a verdict for a stream
+        // outside the slice roster cannot be attributed and is skipped).
+        for ev in &out.gate_log {
+            if let crate::control::WirePayload::Gate { stream, frame, verdict } = ev.payload {
+                let Some(&global) = ids.get(stream) else { continue };
+                events.push(WireEvent::gate(t0 + ev.at, global, frame, verdict));
+            }
+        }
         (out.report, events)
     }
 }

@@ -47,11 +47,12 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::autoscale::policy::AutoscaleConfig;
-use crate::control::{ControlAction, ControlOrigin, WireEvent};
+use crate::control::{ControlAction, ControlOrigin, WireEvent, WirePayload};
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
-use crate::fleet::sim::{run_fleet, Scenario};
+use crate::fleet::sim::{run_fleet_with, Scenario};
 use crate::fleet::stream::StreamSpec;
+use crate::gate::GateConfig;
 use crate::shard::autoscale::ShardAutoscaler;
 use crate::shard::gossip::{plan_moves, GossipTable};
 use crate::shard::placement::ShardView;
@@ -101,6 +102,10 @@ pub struct RemoteShard {
     /// this one for the session — the closed loop always runs with the
     /// parameters the session was opened with.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Standing per-frame motion gate; like `autoscale`, a gate config
+    /// carried in the coordinator's `Hello` overrides it for the
+    /// session.
+    pub gate: Option<GateConfig>,
 }
 
 impl RemoteShard {
@@ -110,6 +115,7 @@ impl RemoteShard {
             devices,
             fail_at_epoch: None,
             autoscale: None,
+            gate: None,
         }
     }
 
@@ -120,6 +126,11 @@ impl RemoteShard {
 
     pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> RemoteShard {
         self.autoscale = Some(cfg);
+        self
+    }
+
+    pub fn with_gate(mut self, gate: GateConfig) -> RemoteShard {
+        self.gate = Some(gate);
         self
     }
 }
@@ -139,7 +150,12 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
     let mut residents: BTreeMap<usize, StreamSpec> = BTreeMap::new();
     // The live pool: local capacity control grows/shrinks it in place.
     let mut pool: Vec<DeviceInstance> = shard.devices.clone();
-    let mut scaler: Option<ShardAutoscaler> = shard.autoscale.clone().map(ShardAutoscaler::new);
+    let mut gate: Option<GateConfig> = shard.gate.clone();
+    let mut scaler: Option<ShardAutoscaler> = shard.autoscale.clone().map(|cfg| {
+        let mut s = ShardAutoscaler::new(cfg);
+        s.set_gate(gate.clone());
+        s
+    });
 
     loop {
         let msg = match conn.recv() {
@@ -154,6 +170,7 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 admission: adm,
                 roster: r,
                 autoscale,
+                gate: hello_gate,
                 ..
             } => {
                 if protocol != TRANSPORT_VERSION {
@@ -170,6 +187,14 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 // (and how) this shard scales itself.
                 if let Some(cfg) = autoscale {
                     scaler = Some(ShardAutoscaler::new(cfg));
+                }
+                // Same session-override rule for the gate; whichever
+                // config wins, the (possibly fresh) scaler runs with it.
+                if let Some(cfg) = hello_gate {
+                    gate = Some(cfg);
+                }
+                if let Some(s) = scaler.as_mut() {
+                    s.set_gate(gate.clone());
                 }
                 let capacity = pool.iter().map(|d| d.rate()).sum::<f64>()
                     * admission.target_utilization;
@@ -244,10 +269,25 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                             s.run_slice(&mut pool, &admission, specs, &ids, at, seed)
                         }
                         None => {
-                            let sub = Scenario::new(pool.clone(), specs)
+                            let mut sub = Scenario::new(pool.clone(), specs)
                                 .with_admission(admission.clone())
                                 .with_seed(seed);
-                            (run_fleet(&sub), Vec::new())
+                            if let Some(cfg) = &gate {
+                                sub = sub.with_gate(cfg.clone());
+                            }
+                            let out = run_fleet_with(&sub, None);
+                            // Gate verdicts ride home as Control frames
+                            // ahead of the Slice, in shard time with
+                            // global stream ids — mirroring what the
+                            // in-process runner pushes into its log.
+                            let mut events = Vec::new();
+                            for ev in &out.gate_log {
+                                if let WirePayload::Gate { stream, frame, verdict } = ev.payload {
+                                    let Some(&global) = ids.get(stream) else { continue };
+                                    events.push(WireEvent::gate(at + ev.at, global, frame, verdict));
+                                }
+                            }
+                            (out.report, events)
                         }
                     };
                     for event in scale_events {
@@ -373,6 +413,7 @@ pub fn run_sharded_remote(
             admission: scenario.admission.clone(),
             roster: roster.clone(),
             autoscale: scenario.autoscale.clone(),
+            gate: scenario.gate.clone(),
         })
         .map_err(|e| anyhow!("shard {sh}: hello failed: {e}"))?;
         match conn.recv() {

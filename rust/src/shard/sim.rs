@@ -36,8 +36,9 @@ use crate::autoscale::policy::AutoscaleConfig;
 use crate::control::{ControlAction, ControlOrigin, EventLog, WireEvent};
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
-use crate::fleet::sim::{run_fleet, Scenario};
+use crate::fleet::sim::{run_fleet_with, Scenario};
 use crate::fleet::stream::StreamSpec;
+use crate::gate::GateConfig;
 use crate::shard::autoscale::ShardAutoscaler;
 use crate::shard::gossip::{plan_moves, GossipTable, Headroom};
 use crate::shard::placement::{PlacementPolicy, ShardView};
@@ -70,6 +71,12 @@ pub struct ShardScenario {
     /// post-scale headroom, and scale actions land in the control log
     /// with [`ControlOrigin::Controller`].
     pub autoscale: Option<AutoscaleConfig>,
+    /// Per-frame motion gate every shard applies to its epoch slices:
+    /// verdicts join the control log as [`ControlOrigin::Gate`] events
+    /// (same encode→decode hop as every other routed event). Policy
+    /// state is slice-local; the motion signal is keyed by stream name,
+    /// so a migrated stream gates identically on its new shard.
+    pub gate: Option<GateConfig>,
 }
 
 impl ShardScenario {
@@ -84,6 +91,7 @@ impl ShardScenario {
             seed: 0,
             failures: Vec::new(),
             autoscale: None,
+            gate: None,
         }
     }
 
@@ -119,6 +127,11 @@ impl ShardScenario {
 
     pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> ShardScenario {
         self.autoscale = Some(cfg);
+        self
+    }
+
+    pub fn with_gate(mut self, gate: GateConfig) -> ShardScenario {
+        self.gate = Some(gate);
         self
     }
 }
@@ -540,7 +553,13 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
     // Live pools: autoscaling shards grow/shrink theirs between epochs.
     let mut pools: Vec<Vec<DeviceInstance>> = scenario.shards.clone();
     let mut scalers: Vec<Option<ShardAutoscaler>> = (0..m)
-        .map(|_| scenario.autoscale.clone().map(ShardAutoscaler::new))
+        .map(|_| {
+            scenario.autoscale.clone().map(|cfg| {
+                let mut scaler = ShardAutoscaler::new(cfg);
+                scaler.set_gate(scenario.gate.clone());
+                scaler
+            })
+        })
         .collect();
 
     let mut alive = vec![true; m];
@@ -737,11 +756,30 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                     }
                     report
                 }
-                None => run_fleet(
-                    &Scenario::new(pools[sh].clone(), specs)
+                None => {
+                    let mut sub = Scenario::new(pools[sh].clone(), specs)
                         .with_admission(scenario.admission.clone())
-                        .with_seed(slice_seed),
-                ),
+                        .with_seed(slice_seed);
+                    if let Some(gate) = &scenario.gate {
+                        sub = sub.with_gate(gate.clone());
+                    }
+                    let out = run_fleet_with(&sub, None);
+                    // Gate verdicts join the control log in shard time
+                    // with global stream ids, through the same wire hop
+                    // every routed event takes.
+                    for ev in &out.gate_log {
+                        if let crate::control::WirePayload::Gate { stream, frame, verdict } =
+                            ev.payload
+                        {
+                            let Some(&global) = idx_map.get(stream) else { continue };
+                            let event = WireEvent::gate(t0 + ev.at, global, frame, verdict);
+                            let decoded = WireEvent::decode(&event.encode())
+                                .expect("gate wire must round-trip");
+                            log.push(ShardControl { shard: sh, event: decoded });
+                        }
+                    }
+                    out.report
+                }
             };
             for (k, &i) in idx_map.iter().enumerate() {
                 let sr = &report.streams[k];
@@ -988,6 +1026,42 @@ mod tests {
         let b = run_sharded(&scenario);
         assert_eq!(a.total_processed(), b.total_processed());
         assert_eq!(a.control_log, b.control_log);
+    }
+
+    #[test]
+    fn gated_shard_run_logs_verdicts_and_replays_verbatim() {
+        use crate::control::ControlOrigin;
+        use crate::gate::GateConfig;
+        // Quiet streams under the default (lobby-dynamics) gate: most
+        // frames skip, and every verdict crosses the wire into the
+        // coordinator's control log with [`ControlOrigin::Gate`].
+        let scenario = ShardScenario::new(
+            vec![pool(4, 2.5), pool(4, 2.5)],
+            uniform_streams(4, 5.0, 100, 4),
+        )
+        .with_gossip(10.0)
+        .with_epochs(6)
+        .with_seed(17);
+        let plain = run_sharded(&scenario);
+        let gated = run_sharded(&scenario.clone().with_gate(GateConfig::default()));
+        let gate_events = gated
+            .control_log
+            .iter()
+            .filter(|c| c.event.origin == ControlOrigin::Gate)
+            .count();
+        assert!(gate_events > 50, "only {gate_events} gate events");
+        assert!(
+            gated.total_processed() < plain.total_processed(),
+            "gating must shed work: {} vs {}",
+            gated.total_processed(),
+            plain.total_processed()
+        );
+        // Deterministic and wire-clean: the audit log (placement verbs
+        // and gate verdicts interleaved) survives another round trip.
+        let again = run_sharded(&scenario.with_gate(GateConfig::default()));
+        assert_eq!(again.control_log, gated.control_log);
+        let audit = gated.audit_log();
+        assert_eq!(EventLog::decode(&audit.encode()).expect("decodes"), audit);
     }
 
     #[test]

@@ -185,6 +185,16 @@ mod tests {
                         ..crate::autoscale::policy::AutoscaleConfig::default()
                     }
                 }),
+                gate: rng.chance(0.5).then(|| {
+                    let skip = rng.range(0.0, 0.2);
+                    crate::gate::GateConfig {
+                        skip_threshold: skip,
+                        resume_threshold: skip + rng.range(0.0, 0.2),
+                        max_skip_run: rng.below(8) + 1,
+                        tracker_stretch: rng.range(1.0, 10.0),
+                        ..crate::gate::GateConfig::default()
+                    }
+                }),
             },
             1 => TransportMsg::Welcome {
                 shard: rng.below(16) as usize,

@@ -31,10 +31,11 @@ use std::collections::BTreeMap;
 use crate::autoscale::policy::AutoscaleConfig;
 use crate::control::wire::{
     admission_from_json, admission_to_json, autoscale_config_from_json, autoscale_config_to_json,
-    req_f64, req_str, req_u64, req_usize,
+    gate_config_from_json, gate_config_to_json, req_f64, req_str, req_u64, req_usize,
 };
 use crate::control::{WireError, WireEvent};
 use crate::fleet::admission::AdmissionPolicy;
+use crate::gate::GateConfig;
 use crate::shard::Headroom;
 use crate::util::json::Json;
 
@@ -64,13 +65,17 @@ pub enum TransportMsg {
     /// `autoscale` configures shard-local capacity control for the
     /// session ([`crate::shard::autoscale`]); `None` (and a missing
     /// field, for peers speaking the pre-autoscale dialect) means the
-    /// shard serves its static pool.
+    /// shard serves its static pool. `gate` likewise arms per-frame
+    /// motion gating ([`crate::gate`]) on the shard; `None` (and a
+    /// missing field, for pre-gate peers) means every frame is
+    /// detected.
     Hello {
         shard: usize,
         protocol: i64,
         admission: AdmissionPolicy,
         roster: Vec<String>,
         autoscale: Option<AutoscaleConfig>,
+        gate: Option<GateConfig>,
     },
     /// Shard → coordinator: handshake reply with the shard's
     /// util-adjusted admission capacity (FPS).
@@ -157,6 +162,7 @@ impl TransportMsg {
                 admission,
                 roster,
                 autoscale,
+                gate,
             } => {
                 o.insert("msg".to_string(), Json::Str("hello".to_string()));
                 o.insert("shard".to_string(), Json::Num(*shard as f64));
@@ -168,6 +174,9 @@ impl TransportMsg {
                 );
                 if let Some(cfg) = autoscale {
                     o.insert("autoscale".to_string(), autoscale_config_to_json(cfg));
+                }
+                if let Some(cfg) = gate {
+                    o.insert("gate".to_string(), gate_config_to_json(cfg));
                 }
             }
             TransportMsg::Welcome { shard, capacity } => {
@@ -282,12 +291,19 @@ impl TransportMsg {
                     None | Some(Json::Null) => None,
                     Some(j) => Some(autoscale_config_from_json(j)?),
                 };
+                // Same contract for the gate config: pre-gate peers
+                // omit the key, meaning "detect every frame".
+                let gate = match v.get("gate") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => Some(gate_config_from_json(j)?),
+                };
                 Ok(TransportMsg::Hello {
                     shard: req_usize(v, "shard")?,
                     protocol: req_u64(v, "protocol")? as i64,
                     admission: admission_from_json(adm)?,
                     roster,
                     autoscale,
+                    gate,
                 })
             }
             "welcome" => Ok(TransportMsg::Welcome {
@@ -398,6 +414,7 @@ mod tests {
             admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
             roster: vec!["cam0".to_string(), "cam1".to_string()],
             autoscale: None,
+            gate: None,
         });
         roundtrip(&TransportMsg::Hello {
             shard: 0,
@@ -408,6 +425,11 @@ mod tests {
                 max_devices: 9,
                 device_rate: 3.25,
                 ..AutoscaleConfig::default()
+            }),
+            gate: Some(GateConfig {
+                max_skip_run: 4,
+                tracker_stretch: 2.5,
+                ..GateConfig::default()
             }),
         });
         roundtrip(&TransportMsg::Welcome {
@@ -458,6 +480,7 @@ mod tests {
             admission: AdmissionPolicy::default(),
             roster: vec![],
             autoscale: None,
+            gate: None,
         };
         let text = msg.encode();
         assert!(!text.contains("autoscale"), "None must omit the key: {text}");
@@ -465,6 +488,75 @@ mod tests {
         // An explicit null reads the same way.
         let with_null = text.replacen("\"msg\"", "\"autoscale\":null,\"msg\"", 1);
         assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
+    }
+
+    #[test]
+    fn hello_without_gate_key_decodes_as_none() {
+        // Pre-gate peers omit the key entirely; decode must not reject
+        // their Hello (the `Hello.autoscale` interop contract, applied
+        // to the gate field).
+        let msg = TransportMsg::Hello {
+            shard: 0,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::default(),
+            roster: vec!["cam0".to_string()],
+            autoscale: None,
+            gate: None,
+        };
+        let text = msg.encode();
+        assert!(!text.contains("gate"), "None must omit the key: {text}");
+        assert_eq!(TransportMsg::decode(&text).unwrap(), msg);
+        let with_null = text.replacen("\"msg\"", "\"gate\":null,\"msg\"", 1);
+        assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
+    }
+
+    #[test]
+    fn random_gated_hellos_survive_the_frame_codec() {
+        // Satellite pin: the optional gate config rides the handshake;
+        // random Hellos with and without it must cross the full frame
+        // codec as the identity.
+        use crate::gate::signal::MotionDynamics;
+        use crate::transport::frame::{encode_frame, FrameDecoder};
+        use crate::util::prop::{check, Config};
+        check("gated hellos survive frames", Config::default(), |rng| {
+            let gate = rng.chance(0.7).then(|| {
+                let skip = rng.range(0.0, 0.2);
+                GateConfig {
+                    skip_threshold: skip,
+                    resume_threshold: skip + rng.range(0.0, 0.2),
+                    scene_cut_threshold: rng.range(0.3, 0.9),
+                    max_skip_run: rng.int_in(1, 8) as u64,
+                    tracker_stretch: rng.range(1.0, 10.0),
+                    pressure_threshold: rng.range(0.3, 1.0),
+                    pressure_rung: rng.below(4) as usize,
+                    alpha: rng.range(0.05, 1.0),
+                    dynamics: MotionDynamics {
+                        base: rng.range(0.0, 0.3),
+                        jitter: rng.range(0.0, 0.15),
+                        cut_every: if rng.chance(0.5) { rng.int_in(2, 300) as u64 } else { 0 },
+                    },
+                }
+            });
+            let msg = TransportMsg::Hello {
+                shard: rng.below(8) as usize,
+                protocol: TRANSPORT_VERSION,
+                admission: AdmissionPolicy::default(),
+                roster: (0..rng.below(4)).map(|i| format!("cam{i}")).collect(),
+                autoscale: rng.chance(0.3).then(AutoscaleConfig::default),
+                gate,
+            };
+            let bytes = encode_frame(&msg).map_err(|e| e.to_string())?;
+            let mut dec = FrameDecoder::new();
+            dec.feed(&bytes);
+            let back = dec
+                .try_next()
+                .map_err(|e| e.to_string())?
+                .ok_or("no frame decoded")?;
+            if back != msg {
+                return Err(format!("decoded {back:?} != original {msg:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

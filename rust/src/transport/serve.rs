@@ -271,6 +271,7 @@ mod tests {
             admission: AdmissionPolicy::default(),
             device_rates: vec![30.0],
             paced: false,
+            gate: None,
         };
         let (report, decisions) =
             serve_from_log(&log, &config, |_| Ok(Box::new(EchoDetector) as Box<dyn Detector>))
@@ -308,6 +309,7 @@ mod tests {
             admission: AdmissionPolicy::default(),
             device_rates: vec![10.0],
             paced: false,
+            gate: None,
         };
         assert!(serve_from_log(&EventLog::new(), &config, |_| {
             Ok(Box::new(EchoDetector) as Box<dyn Detector>)

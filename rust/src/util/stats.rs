@@ -219,6 +219,28 @@ mod tests {
     }
 
     #[test]
+    fn ewma_empty_window_reads_the_default() {
+        // The gate polls `get_or(raw)` before the first push settles:
+        // an empty estimator must surface the caller's default, not 0.
+        let e = Ewma::new(0.4);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.get_or(3.25), 3.25);
+        assert_eq!(e.get_or(f64::NEG_INFINITY), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn ewma_single_sample_is_the_sample_at_any_alpha() {
+        // The first sample seeds the window verbatim — no phantom decay
+        // toward zero regardless of alpha.
+        for alpha in [0.01, 0.4, 1.0] {
+            let mut e = Ewma::new(alpha);
+            e.push(7.5);
+            assert_eq!(e.get(), Some(7.5), "alpha {alpha}");
+            assert_eq!(e.get_or(0.0), 7.5, "alpha {alpha}");
+        }
+    }
+
+    #[test]
     fn percentiles_exact() {
         let mut p = Percentiles::new();
         for i in (1..=100).rev() {

@@ -66,11 +66,75 @@ pub fn tiny_clip(size: u32, num_frames: u32, fps: f64, seed: u64) -> ClipSpec {
     }
 }
 
+/// Static lobby camera (content-dynamics preset for `gate`): fixed
+/// camera, one or two near-stationary figures. Almost every frame is a
+/// candidate for motion-gated skipping.
+pub fn static_lobby(seed: u64) -> ClipSpec {
+    ClipSpec {
+        name: "static_lobby".to_string(),
+        fps: 15.0,
+        num_frames: 450,
+        width: 640,
+        height: 480,
+        camera: CameraMotion::Static,
+        min_objects: 1,
+        max_objects: 2,
+        min_speed: 0.005,
+        max_speed: 0.03,
+        min_height: 0.18,
+        max_height: 0.35,
+        seed,
+    }
+}
+
+/// Fixed highway camera (content-dynamics preset): static mount but
+/// constant fast traffic — moderate, sustained motion energy.
+pub fn highway_cam(seed: u64) -> ClipSpec {
+    ClipSpec {
+        name: "highway_cam".to_string(),
+        fps: 25.0,
+        num_frames: 500,
+        width: 1280,
+        height: 720,
+        camera: CameraMotion::Static,
+        min_objects: 3,
+        max_objects: 6,
+        min_speed: 0.35,
+        max_speed: 0.7,
+        min_height: 0.12,
+        max_height: 0.30,
+        seed,
+    }
+}
+
+/// Broadcast sports feed (content-dynamics preset): panning camera,
+/// many fast large objects — nearly every frame needs a detection.
+pub fn sports_feed(seed: u64) -> ClipSpec {
+    ClipSpec {
+        name: "sports_feed".to_string(),
+        fps: 30.0,
+        num_frames: 600,
+        width: 1280,
+        height: 720,
+        camera: CameraMotion::Pan { speed: 0.25 },
+        min_objects: 6,
+        max_objects: 10,
+        min_speed: 0.4,
+        max_speed: 0.9,
+        min_height: 0.15,
+        max_height: 0.40,
+        seed,
+    }
+}
+
 /// Look up a preset by name (CLI surface).
 pub fn by_name(name: &str, seed: u64) -> Option<ClipSpec> {
     match name {
         "eth_sunnyday" | "eth" => Some(eth_sunnyday(seed)),
         "adl_rundle6" | "adl" => Some(adl_rundle6(seed)),
+        "static_lobby" | "lobby" => Some(static_lobby(seed)),
+        "highway_cam" | "highway" => Some(highway_cam(seed)),
+        "sports_feed" | "sports" => Some(sports_feed(seed)),
         _ => None,
     }
 }
@@ -98,6 +162,47 @@ mod tests {
     fn lookup_by_name() {
         assert!(by_name("eth", 1).is_some());
         assert!(by_name("adl_rundle6", 1).is_some());
+        assert!(by_name("lobby", 1).is_some());
+        assert!(by_name("highway_cam", 1).is_some());
+        assert!(by_name("sports", 1).is_some());
         assert!(by_name("nope", 1).is_none());
+    }
+
+    #[test]
+    fn content_dynamics_parameters() {
+        let lobby = static_lobby(0);
+        assert_eq!(lobby.camera, CameraMotion::Static);
+        assert!(lobby.max_speed <= 0.03);
+        assert_eq!(lobby.fps, 15.0);
+        assert_eq!(lobby.num_frames, 450);
+
+        let highway = highway_cam(0);
+        assert_eq!(highway.camera, CameraMotion::Static);
+        assert!(highway.min_speed > lobby.max_speed);
+
+        let sports = sports_feed(0);
+        assert!(matches!(sports.camera, CameraMotion::Pan { .. }));
+        assert!(sports.max_speed >= highway.max_speed);
+        assert!(sports.max_objects >= highway.max_objects);
+    }
+
+    #[test]
+    fn pixel_energy_separates_lobby_from_sports() {
+        // Rasterised at a small size to keep the test fast; the widest
+        // preset gap (lobby vs sports) must survive the raster noise
+        // floor. The full three-way ordering is pinned on the synthetic
+        // motion models in `gate::signal`.
+        use crate::gate::signal::clip_mean_energy;
+        use crate::video::generate;
+        let mut lobby = static_lobby(7);
+        lobby.num_frames = 24;
+        let mut sports = sports_feed(7);
+        sports.num_frames = 24;
+        let e_lobby = clip_mean_energy(&generate(&lobby, Some(64)));
+        let e_sports = clip_mean_energy(&generate(&sports, Some(64)));
+        assert!(
+            e_lobby < e_sports,
+            "lobby {e_lobby:.5} must stay below sports {e_sports:.5}"
+        );
     }
 }

@@ -86,6 +86,44 @@ fn json_mode_emits_exactly_one_parseable_document() {
 }
 
 #[test]
+fn gate_subcommand_honours_the_usage_contract() {
+    // Malformed invocations of the gate subcommand follow the same
+    // exit-2 usage contract as every other subcommand.
+    let out = eva(&["gate", "--bogus-flag"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown option --bogus-flag"), "{}", stderr(&out));
+
+    let out = eva(&["gate", "extra"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unexpected argument \"extra\""), "{}", stderr(&out));
+
+    let out = eva(&["gate", "--scenario"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--scenario needs a value"), "{}", stderr(&out));
+
+    // A parsed-but-unknown preset is a runtime failure: exit 1, not 2 —
+    // on the table path and the --json path alike.
+    let out = eva(&["gate", "--scenario", "mall"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown gate preset"), "{}", stderr(&out));
+    let out = eva(&["gate", "--scenario", "mall", "--json"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown gate preset"), "{}", stderr(&out));
+}
+
+#[test]
+fn gate_json_mode_emits_exactly_one_parseable_document() {
+    // CI uploads this stdout as BENCH_gate.json: it must be pure JSON.
+    let out = eva(&["gate", "--json", "--scenario", "lobby"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    let json = eva::util::json::Json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("gate --json stdout is not pure JSON ({e}): {text}"));
+    assert!(json.get("lobby").is_some(), "{text}");
+    assert!(json.get("sports").is_none(), "{text}");
+}
+
+#[test]
 fn runtime_failure_keeps_exit_1_distinct_from_usage_errors() {
     // A known subcommand with a semantically invalid value: parsed fine,
     // fails at run time — exit 1, not the usage exit 2.

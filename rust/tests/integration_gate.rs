@@ -1,0 +1,162 @@
+//! Integration tests for motion-gated detection end to end: the gated
+//! wire log's replay contract in the virtual-time engine, and exact
+//! gate-verdict parity between the in-process sharded co-simulation and
+//! its tcp/uds socket twins.
+
+use eva::control::{ControlOrigin, EventLog, WirePayload};
+use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use eva::fleet::{run_fleet_with, AdmissionPolicy, Scenario, StreamSpec};
+use eva::gate::{GateConfig, GateVerdict, MotionDynamics};
+use eva::shard::{
+    run_sharded, run_sharded_remote, RemoteTransport, ShardControl, ShardReport, ShardScenario,
+};
+
+fn pool(n: usize, rate: f64) -> Vec<DeviceInstance> {
+    (0..n)
+        .map(|i| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, rate))
+        .collect()
+}
+
+fn quiet_streams(n: usize, fps: f64, frames: u64) -> Vec<StreamSpec> {
+    (0..n)
+        .map(|i| StreamSpec::new(&format!("lobby{i}"), fps, frames).with_window(4))
+        .collect()
+}
+
+fn gate_events(r: &ShardReport) -> Vec<ShardControl> {
+    r.control_log
+        .iter()
+        .filter(|c| c.event.origin == ControlOrigin::Gate)
+        .cloned()
+        .collect()
+}
+
+/// A gated virtual-time fleet run is deterministic, its wire log
+/// carries the gate verdicts, and the log survives encode → decode
+/// verbatim (the EventLog replay contract).
+#[test]
+fn gated_fleet_wire_log_replays_verbatim() {
+    let scenario = || {
+        Scenario::new(
+            pool(1, 18.0),
+            vec![StreamSpec::new("lobby", 15.0, 450).with_window(4)],
+        )
+        .with_admission(AdmissionPolicy::admit_all())
+        .with_seed(7)
+        .with_gate(GateConfig::for_dynamics(MotionDynamics::lobby()))
+    };
+    let a = run_fleet_with(&scenario(), None);
+    let b = run_fleet_with(&scenario(), None);
+    let log = a.wire_log();
+    assert_eq!(log, b.wire_log(), "gated runs must be deterministic");
+
+    let verdicts = log
+        .events
+        .iter()
+        .filter(|e| e.origin == ControlOrigin::Gate)
+        .count();
+    assert!(verdicts > 100, "expected a skip-heavy lobby log, got {verdicts}");
+    let skips = log
+        .events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.payload,
+                WirePayload::Gate { verdict: GateVerdict::Skip, .. }
+            )
+        })
+        .count();
+    let caps = log
+        .events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.payload,
+                WirePayload::Gate { verdict: GateVerdict::SkipCap, .. }
+            )
+        })
+        .count();
+    assert!(skips > 0 && caps > 0, "skips {skips}, caps {caps}");
+
+    let decoded = EventLog::decode(&log.encode()).expect("gated wire log must decode");
+    assert_eq!(decoded, log, "encode -> decode must be verbatim");
+}
+
+/// Acceptance: a gated sharded run's control log — gate verdicts
+/// included, remapped to global stream ids and shard-shifted times —
+/// is identical event for event between the in-process co-simulation
+/// and the socket runners over tcp and uds, and the audit log replays
+/// verbatim on both sides. Seed comes from `EVA_SOAK_SEED` when set.
+#[test]
+fn gated_shard_parity_is_exact_over_tcp_and_uds() {
+    let seed = std::env::var("EVA_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(53);
+    let scenario = ShardScenario::new(
+        vec![pool(3, 2.5), pool(3, 2.5)],
+        quiet_streams(4, 5.0, 100),
+    )
+    .with_gossip(10.0)
+    .with_epochs(6)
+    .with_seed(seed)
+    .with_gate(GateConfig::for_dynamics(MotionDynamics::lobby()));
+
+    let inproc = run_sharded(&scenario);
+    let local = gate_events(&inproc);
+    assert!(local.len() > 50, "seed {seed}: only {} gate events", local.len());
+    let audit = inproc.audit_log();
+    assert_eq!(
+        EventLog::decode(&audit.encode()).expect("inproc audit log must decode"),
+        audit,
+        "seed {seed}"
+    );
+
+    for transport in [RemoteTransport::Tcp, RemoteTransport::Uds] {
+        let label = transport.label();
+        let remote = run_sharded_remote(&scenario, transport).expect("remote gated run");
+        assert_eq!(remote.total_frames(), inproc.total_frames(), "{label} seed {seed}");
+        assert_eq!(
+            remote.total_processed(),
+            inproc.total_processed(),
+            "{label} seed {seed}"
+        );
+        assert_eq!(remote.epochs_run, inproc.epochs_run, "{label} seed {seed}");
+        // The gate-verdict sequence — shard attribution, times, stream
+        // ids, payloads — crossed the wire unchanged.
+        assert_eq!(gate_events(&remote), local, "{label} seed {seed}");
+        let remote_audit = remote.audit_log();
+        assert_eq!(
+            EventLog::decode(&remote_audit.encode()).expect("remote audit log must decode"),
+            remote_audit,
+            "{label} seed {seed}"
+        );
+    }
+}
+
+/// Gating quiet content frees device capacity without shrinking frame
+/// accounting: same offered frames, fewer detector runs.
+#[test]
+fn gated_shard_run_detects_fewer_frames_at_equal_coverage() {
+    let plain = ShardScenario::new(
+        vec![pool(3, 2.5), pool(3, 2.5)],
+        quiet_streams(4, 5.0, 100),
+    )
+    .with_gossip(10.0)
+    .with_epochs(6)
+    .with_seed(23);
+    let gated = plain
+        .clone()
+        .with_gate(GateConfig::for_dynamics(MotionDynamics::lobby()));
+    let plain_report = run_sharded(&plain);
+    let gated_report = run_sharded(&gated);
+    assert_eq!(plain_report.total_frames(), gated_report.total_frames());
+    assert!(
+        gated_report.total_processed() < plain_report.total_processed(),
+        "gated {} vs plain {}",
+        gated_report.total_processed(),
+        plain_report.total_processed()
+    );
+    assert!(gate_events(&gated_report).len() > 50);
+    assert!(gate_events(&plain_report).is_empty());
+}

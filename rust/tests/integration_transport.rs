@@ -156,6 +156,7 @@ fn remote_serve_consumer_matches_local_decisions() {
         admission: AdmissionPolicy::default(),
         device_rates: vec![60.0],
         paced: false,
+        gate: None,
     };
     let consumer_config = config.clone();
     let consumer = std::thread::spawn(move || {
@@ -231,6 +232,7 @@ fn consumer_survives_driver_going_silent_after_bye() {
         admission: AdmissionPolicy::default(),
         device_rates: vec![50.0],
         paced: false,
+        gate: None,
     };
     let consumer = std::thread::spawn(move || {
         run_serve_consumer(&listener, &config, |_| {
