@@ -95,7 +95,7 @@ fn main() {
         }]);
 
     println!("== virtual-time fleet: 8 streams vs fast-CPU + 3×NCS2 (+1 NCS2 at t=30s) ==\n");
-    let mut report = run_fleet(&scenario);
+    let report = run_fleet(&scenario);
     print!("{}", report.stream_table().render());
     println!();
     print!("{}", report.device_table().render());
@@ -125,7 +125,7 @@ fn main() {
     };
 
     println!("== wall-clock fleet: 3 × 20-FPS streams vs 2 workers (25 ms service) ==\n");
-    let mut wall_report = serve_fleet(&wall_streams, &config, |_| {
+    let wall_report = serve_fleet(&wall_streams, &config, |_| {
         Ok(Box::new(EchoDetector {
             delay: Duration::from_millis(25),
         }) as Box<dyn Detector>)

@@ -114,7 +114,7 @@ fn main() {
         gate: Some(GateConfig::for_dynamics(MotionDynamics::lobby())),
     };
     println!("== wall-clock gated serving: 1 x 15-FPS lobby stream, 1 worker ==\n");
-    let (mut report, wire) = serve_fleet_logged(&streams, &config, |_| {
+    let (report, wire) = serve_fleet_logged(&streams, &config, |_| {
         Ok(Box::new(EchoDetector {
             delay: Duration::from_millis(2),
         }) as Box<dyn Detector>)

@@ -176,10 +176,10 @@ where
             gate: None,
         };
         let rung_now = rung;
-        let mut report = serve_fleet(&pairs, &serve_cfg, |w| factory(w, rung_now))?;
+        let report = serve_fleet(&pairs, &serve_cfg, |w| factory(w, rung_now))?;
 
         let mut p99 = 0.0f64;
-        for s in report.streams.iter_mut() {
+        for s in report.streams.iter() {
             p99 = p99.max(s.metrics.latency.p99());
         }
         let drop_rate = report.drop_rate();

@@ -72,7 +72,7 @@ impl RunMetrics {
     }
 
     /// One-line human summary.
-    pub fn summary(&mut self) -> String {
+    pub fn summary(&self) -> String {
         let fps = self.processing_fps();
         let drop = self.drop_rate() * 100.0;
         let p50 = self.latency.p50();
@@ -134,7 +134,7 @@ mod tests {
 
     #[test]
     fn summary_contains_key_numbers() {
-        let mut m = metrics();
+        let m = metrics();
         let s = m.summary();
         assert!(s.contains("80/100"));
         assert!(s.contains("8.00 FPS"));

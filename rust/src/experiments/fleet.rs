@@ -47,13 +47,13 @@ fn uniform_streams(n: usize, fps: f64, frames: u64, window: usize) -> Vec<Stream
         .collect()
 }
 
-fn point(report: &mut FleetReport, devices: usize, streams: usize, ideal: f64) -> ScalePoint {
+fn point(report: &FleetReport, devices: usize, streams: usize, ideal: f64) -> ScalePoint {
     let mut admitted = 0;
     let mut degraded = 0;
     let mut rejected = 0;
     let mut p99_sum = 0.0;
     let mut p99_n = 0usize;
-    for s in report.streams.iter_mut() {
+    for s in report.streams.iter() {
         match s.decision {
             Decision::Admit { .. } => admitted += 1,
             Decision::Degrade { .. } | Decision::SwapModel { .. } => {
@@ -102,8 +102,8 @@ pub fn scaling(seed: u64) -> (Table, Vec<ScalePoint>) {
             uniform_streams(streams, fps, frames, 4),
         )
         .with_seed(seed ^ (m as u64));
-        let mut report = run_fleet(&scenario);
-        let p = point(&mut report, m, streams, 2.5 * m as f64);
+        let report = run_fleet(&scenario);
+        let p = point(&report, m, streams, 2.5 * m as f64);
         t.row(vec![
             format!("{m}"),
             f(p.ideal_rate, 1),
@@ -137,8 +137,8 @@ pub fn saturation_sweep(seed: u64) -> (Table, Vec<ScalePoint>) {
         )
         .with_admission(AdmissionPolicy::admit_all())
         .with_seed(seed ^ (0x5CA1E0 + m as u64));
-        let mut report = run_fleet(&scenario);
-        let p = point(&mut report, m, streams, 2.5 * m as f64);
+        let report = run_fleet(&scenario);
+        let p = point(&report, m, streams, 2.5 * m as f64);
         t.row(vec![
             format!("{m}"),
             f(p.ideal_rate, 1),

@@ -174,7 +174,12 @@ fn gate_admission(ladder: &ModelLadder) -> AdmissionPolicy {
     }
 }
 
-fn preset_run(p: &ContentPreset, gate: Option<GateConfig>, seed: u64) -> FleetRunOutput {
+fn preset_run(
+    p: &ContentPreset,
+    gate: Option<GateConfig>,
+    seed: u64,
+    traced: bool,
+) -> FleetRunOutput {
     let streams = vec![StreamSpec::new(p.name, p.fps, p.frames).with_window(4)];
     // One device with 1.2× headroom: always-detect keeps up, so the
     // sweep isolates what gating buys beyond overload shedding.
@@ -184,7 +189,18 @@ fn preset_run(p: &ContentPreset, gate: Option<GateConfig>, seed: u64) -> FleetRu
     if let Some(cfg) = gate {
         scenario = scenario.with_gate(cfg);
     }
+    if traced {
+        scenario = scenario.with_telemetry();
+    }
     run_fleet_with(&scenario, None)
+}
+
+/// One preset's gated cell re-run with span tracing on (the `eva gate
+/// --metrics-out`/`--trace-out` surface); `None` for unknown presets.
+pub fn traced_gated_run(preset: &str, seed: u64) -> Option<FleetRunOutput> {
+    let p = content_presets().into_iter().find(|p| p.name == preset)?;
+    let cfg = GateConfig::for_dynamics(p.dynamics.clone());
+    Some(preset_run(&p, Some(cfg), seed, true))
 }
 
 fn outcome(
@@ -245,8 +261,8 @@ fn outcome(
 fn preset_pair(p: &ContentPreset, seed: u64, ladder: &ModelLadder) -> [GateOutcome; 2] {
     let cfg = GateConfig::for_dynamics(p.dynamics.clone());
     let stretch = cfg.tracker_stretch;
-    let plain = preset_run(p, None, seed);
-    let gated = preset_run(p, Some(cfg), seed);
+    let plain = preset_run(p, None, seed, false);
+    let gated = preset_run(p, Some(cfg), seed, false);
     [
         outcome(p, "always-detect", &plain, ladder, stretch),
         outcome(p, "gated", &gated, ladder, stretch),
@@ -396,7 +412,7 @@ mod tests {
     fn gated_map_reduces_to_delivered_map_without_a_gate() {
         let p = &content_presets()[0];
         let ladder = eth_ladder();
-        let out = preset_run(p, None, 7);
+        let out = preset_run(p, None, 7, false);
         let gated = gated_delivered_map(
             &out.report.streams,
             &ladder,
@@ -406,6 +422,15 @@ mod tests {
         );
         let plain = delivered_map(&out.report.streams, &ladder, (0.0, f64::INFINITY));
         assert!((gated - plain).abs() < 1e-12, "{gated} vs {plain}");
+    }
+
+    #[test]
+    fn traced_gated_run_carries_telemetry_for_known_presets_only() {
+        let out = traced_gated_run("lobby", 7).expect("known preset");
+        let tel = out.telemetry.as_ref().expect("traced run returns telemetry");
+        assert_eq!(tel.traces.len() as u64, out.report.total_frames());
+        assert!(tel.registry.counter_family_total("eva_frames_total") > 0);
+        assert!(traced_gated_run("bogus", 7).is_none());
     }
 
     #[test]

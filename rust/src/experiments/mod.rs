@@ -18,6 +18,7 @@ pub mod dropping;
 pub mod fleet;
 pub mod gate;
 pub mod shard;
+pub mod telemetry;
 pub mod transport;
 
 pub use common::{online_map, saturated_fps, zero_drop_baseline, CellOutcome};

@@ -356,6 +356,7 @@ fn custom_scenario(
     gossip: f64,
     seed: u64,
     autoscale: Option<AutoscaleConfig>,
+    telemetry: bool,
 ) -> ShardScenario {
     let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
     let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
@@ -368,11 +369,16 @@ fn custom_scenario(
     if let Some(cfg) = autoscale {
         scenario = scenario.with_autoscale(cfg);
     }
+    if telemetry {
+        scenario = scenario.with_telemetry();
+    }
     scenario
 }
 
 /// A one-off sharded run from CLI parameters (the `eva shard
-/// --scenario run [--autoscale]` path).
+/// --scenario run [--autoscale]` path). `telemetry` arms the
+/// per-slice metric snapshot in [`ShardReport::telemetry`] (the
+/// `--metrics-out` surface).
 #[allow(clippy::too_many_arguments)]
 pub fn custom_run(
     shards: Vec<Vec<DeviceInstance>>,
@@ -382,9 +388,10 @@ pub fn custom_run(
     gossip: f64,
     seed: u64,
     autoscale: Option<AutoscaleConfig>,
+    telemetry: bool,
 ) -> ShardReport {
     run_sharded(&custom_scenario(
-        shards, streams, policy, admission, gossip, seed, autoscale,
+        shards, streams, policy, admission, gossip, seed, autoscale, telemetry,
     ))
 }
 
@@ -402,10 +409,13 @@ pub fn custom_run_remote(
     gossip: f64,
     seed: u64,
     autoscale: Option<AutoscaleConfig>,
+    telemetry: bool,
     transport: crate::shard::remote::RemoteTransport,
 ) -> anyhow::Result<ShardReport> {
     crate::shard::remote::run_sharded_remote(
-        &custom_scenario(shards, streams, policy, admission, gossip, seed, autoscale),
+        &custom_scenario(
+            shards, streams, policy, admission, gossip, seed, autoscale, telemetry,
+        ),
         transport,
     )
 }

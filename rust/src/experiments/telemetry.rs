@@ -1,0 +1,387 @@
+//! Telemetry sweeps: where the p99 latency budget goes, and what
+//! watching costs (see EXPERIMENTS.md §Telemetry for measured numbers).
+//!
+//! * [`overload_sweep`] — the acceptance sweep: the same 8-stream fleet
+//!   run at 0.6×..2× offered load with tracing on. Each point
+//!   decomposes the exact p99 frame's latency into its
+//!   ingest/queue/detect/deliver stages ([`p99_breakdown`]); because
+//!   stage timestamps are consecutive the stages sum to the p99 with no
+//!   residue, and the queue stage visibly swallows the budget as load
+//!   crosses capacity.
+//! * [`attribution`] — joins a gated, mid-run-rescaled run's traces
+//!   against its wire log ([`attribute_latency`]): every delivered
+//!   frame's latency buckets under the control class that most recently
+//!   touched its stream (gate verdict, scripted rescale, or nothing).
+//! * [`tracing_overhead`] — tracing is an *observer*: the traced twin
+//!   must reproduce the untraced run's virtual-time results exactly
+//!   (0% simulated overhead, well inside the 2% budget), and the
+//!   min-of-k wall-clock cost of carrying the spans is reported
+//!   alongside.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::control::{ControlAction, ControlEvent};
+use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use crate::experiments::fleet::pool_of;
+use crate::fleet::admission::AdmissionPolicy;
+use crate::fleet::sim::{run_fleet_with, FleetRunOutput, Scenario};
+use crate::fleet::stream::StreamSpec;
+use crate::gate::GateConfig;
+use crate::telemetry::{attribute_latency, p99_breakdown, STAGES};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+/// The sweep's fixed pool: 4 × 2.5-FPS devices (Σμ = 10).
+const POOL_RATE: f64 = 10.0;
+const SWEEP_STREAMS: usize = 8;
+
+/// Offered-load factors swept by [`overload_sweep`] (offered λ / Σμ).
+pub const LOAD_FACTORS: [f64; 4] = [0.6, 1.0, 1.5, 2.0];
+
+fn uniform_streams(n: usize, fps: f64, frames: u64, window: usize) -> Vec<StreamSpec> {
+    (0..n)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), fps, frames).with_window(window))
+        .collect()
+}
+
+/// The traced sweep scenario at one load factor. Admission is off so
+/// overload shows up as queueing and evictions — exactly the stages the
+/// traces are meant to expose — rather than as rejected streams.
+pub fn sweep_scenario(seed: u64, load: f64) -> Scenario {
+    let fps = load * POOL_RATE / SWEEP_STREAMS as f64;
+    Scenario::new(
+        pool_of(4, 2.5),
+        uniform_streams(SWEEP_STREAMS, fps, 240, 4),
+    )
+    .with_admission(AdmissionPolicy::admit_all())
+    .with_seed(seed)
+    .with_telemetry()
+}
+
+/// One load point of the stage-budget sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct StagePoint {
+    /// Offered λ / pool Σμ.
+    pub load: f64,
+    /// Delivered (detected + emitted) frames the p99 rank was drawn from.
+    pub delivered: usize,
+    /// Nearest-rank p99 capture→deliver latency (seconds).
+    pub e2e_p99: f64,
+    /// The p99 frame's `[ingest, queue, detect, deliver]` durations.
+    pub stages: [f64; 4],
+    /// `|Σ stages − p99| / p99` — zero up to float error by construction.
+    pub residue: f64,
+}
+
+/// Stage-budget sweep: 8 traced streams vs Σμ = 10 at 0.6×..2× load.
+pub fn overload_sweep(seed: u64) -> (Table, Vec<StagePoint>) {
+    let mut t = Table::new(
+        "p99 latency budget by stage (8 traced streams vs Σμ = 10)",
+        &[
+            "offered/Σμ", "delivered", "p99 (s)", "ingest", "queue", "detect", "deliver",
+            "residue %",
+        ],
+    );
+    let mut points = Vec::new();
+    for load in LOAD_FACTORS {
+        let out = run_fleet_with(&sweep_scenario(seed, load), None);
+        let tel = out.telemetry.as_ref().expect("sweep runs traced");
+        let b = p99_breakdown(&tel.traces).expect("delivered frames exist");
+        let residue = (b.stages.iter().sum::<f64>() - b.e2e_p99).abs() / b.e2e_p99.max(1e-12);
+        let p = StagePoint {
+            load,
+            delivered: b.delivered,
+            e2e_p99: b.e2e_p99,
+            stages: b.stages,
+            residue,
+        };
+        t.row(vec![
+            f(p.load, 1),
+            format!("{}", p.delivered),
+            f(p.e2e_p99, 3),
+            f(p.stages[0], 3),
+            f(p.stages[1], 3),
+            f(p.stages[2], 3),
+            f(p.stages[3], 3),
+            f(p.residue * 100.0, 4),
+        ]);
+        points.push(p);
+    }
+    (t, points)
+}
+
+/// One control class's latency bucket from [`attribution`].
+#[derive(Debug, Clone)]
+pub struct AttributionRow {
+    /// `origin_class` vocabulary: gate / admission / autoscale /
+    /// migration / scripted / none.
+    pub class: &'static str,
+    pub frames: usize,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+/// The attribution scenario: two busy gated streams with a scene cut
+/// every 10 frames, and a scripted device attach at t = 3 s. Steady
+/// frames always detect (base energy 0.12..0.18 sits above the resume
+/// threshold) and are *unlogged*; every 10th frame spikes to a logged
+/// scene-cut verdict. So, by construction: cut frames bucket "gate",
+/// steady frames captured after the attach bucket "scripted" (pool
+/// capacity moved under every stream), and earlier ones "none".
+fn attribution_scenario(seed: u64) -> Scenario {
+    // pressure_rung 0: overload must not convert steady detects into
+    // logged down-rung verdicts, or the non-gate buckets would starve.
+    let gate = GateConfig {
+        pressure_rung: 0,
+        ..GateConfig::for_dynamics(crate::gate::MotionDynamics {
+            base: 0.12,
+            jitter: 0.06,
+            cut_every: 10,
+        })
+    };
+    Scenario::new(pool_of(1, 18.0), uniform_streams(2, 15.0, 120, 4))
+        .with_admission(AdmissionPolicy::admit_all())
+        .with_seed(seed)
+        .with_gate(gate)
+        .with_events(vec![ControlEvent {
+            at: 3.0,
+            action: ControlAction::AttachDevice(DeviceInstance::with_rate(
+                DeviceKind::Ncs2,
+                DetectorModelId::Yolov3,
+                1,
+                2.5,
+            )),
+        }])
+        .with_telemetry()
+}
+
+/// Latency attribution by control origin on the gated + rescaled run.
+pub fn attribution(seed: u64) -> (Table, Vec<AttributionRow>) {
+    let out = run_fleet_with(&attribution_scenario(seed), None);
+    let tel = out.telemetry.as_ref().expect("attribution runs traced");
+    let buckets = attribute_latency(&tel.traces, &out.wire_log());
+    let mut t = Table::new(
+        "Latency attribution by control origin (gate + scripted rescale)",
+        &["class", "frames", "p50 (s)", "p99 (s)"],
+    );
+    let mut rows = Vec::new();
+    for (class, lat) in &buckets {
+        let row = AttributionRow {
+            class,
+            frames: lat.len(),
+            p50: lat.p50(),
+            p99: lat.p99(),
+        };
+        t.row(vec![
+            row.class.to_string(),
+            format!("{}", row.frames),
+            f(row.p50, 3),
+            f(row.p99, 3),
+        ]);
+        rows.push(row);
+    }
+    (t, rows)
+}
+
+/// What tracing costs, measured both ways.
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadOutcome {
+    /// Min-of-k wall-clock seconds for the traced run.
+    pub traced_wall: f64,
+    /// Min-of-k wall-clock seconds for the untraced twin.
+    pub untraced_wall: f64,
+    /// `traced_wall / untraced_wall − 1` (host-dependent, reported only).
+    pub wall_overhead: f64,
+    /// Whether the traced run reproduced the untraced run's virtual-time
+    /// results exactly (makespan and processed count) — the 0% claim.
+    pub virtual_identical: bool,
+    /// Frames per run (scales the wall numbers).
+    pub frames: u64,
+}
+
+/// Observer-overhead measurement: the 1×-load sweep scenario run `k`
+/// times traced and untraced, interleaved, min-of-k per arm. Virtual
+/// time must be bit-identical (tracing only *watches*); the wall-clock
+/// delta is the cost of carrying spans and is reported, not asserted —
+/// it depends on the host.
+pub fn tracing_overhead(seed: u64) -> (Table, OverheadOutcome) {
+    let traced = sweep_scenario(seed, 1.0);
+    let mut untraced = traced.clone();
+    untraced.telemetry = false;
+
+    let time_run = |s: &Scenario| {
+        let start = Instant::now();
+        let out = run_fleet_with(s, None);
+        (start.elapsed().as_secs_f64(), out)
+    };
+    let k = 5;
+    let (mut t_wall, mut u_wall) = (f64::INFINITY, f64::INFINITY);
+    let (mut t_out, mut u_out) = (None, None);
+    for _ in 0..k {
+        let (dt, out) = time_run(&traced);
+        t_wall = t_wall.min(dt);
+        t_out = Some(out);
+        let (du, out) = time_run(&untraced);
+        u_wall = u_wall.min(du);
+        u_out = Some(out);
+    }
+    let (t_out, u_out) = (t_out.expect("k > 0"), u_out.expect("k > 0"));
+    let outcome = OverheadOutcome {
+        traced_wall: t_wall,
+        untraced_wall: u_wall,
+        wall_overhead: t_wall / u_wall.max(1e-9) - 1.0,
+        virtual_identical: t_out.report.makespan == u_out.report.makespan
+            && t_out.report.total_processed() == u_out.report.total_processed(),
+        frames: u_out.report.total_frames(),
+    };
+    let mut t = Table::new(
+        "Tracing overhead (min-of-5 wall clock; virtual time must be exact)",
+        &["frames", "untraced (ms)", "traced (ms)", "wall Δ %", "virtual time"],
+    );
+    t.row(vec![
+        format!("{}", outcome.frames),
+        f(outcome.untraced_wall * 1e3, 3),
+        f(outcome.traced_wall * 1e3, 3),
+        f(outcome.wall_overhead * 100.0, 1),
+        if outcome.virtual_identical { "identical" } else { "DIVERGED" }.to_string(),
+    ]);
+    (t, outcome)
+}
+
+/// Machine-readable bundle (the `eva trace --json` surface): the stage
+/// budget, the attribution rows, the overhead outcome, and the peak-load
+/// run's full metric snapshot (so the CI artifact carries the schema).
+pub fn telemetry_json(seed: u64) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+
+    let (_, points) = overload_sweep(seed);
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut m = BTreeMap::new();
+            m.insert("load".into(), Json::Num(p.load));
+            m.insert("delivered".into(), Json::Num(p.delivered as f64));
+            m.insert("e2e_p99".into(), Json::Num(p.e2e_p99));
+            m.insert(
+                "stages".into(),
+                Json::Obj(
+                    STAGES
+                        .iter()
+                        .zip(p.stages)
+                        .map(|(name, secs)| (name.to_string(), Json::Num(secs)))
+                        .collect(),
+                ),
+            );
+            m.insert("residue".into(), Json::Num(p.residue));
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("stage_budget".into(), Json::Arr(rows));
+
+    let (_, attr) = attribution(seed);
+    let rows: Vec<Json> = attr
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("class".into(), Json::Str(r.class.to_string()));
+            m.insert("frames".into(), Json::Num(r.frames as f64));
+            m.insert("p50".into(), Json::Num(r.p50));
+            m.insert("p99".into(), Json::Num(r.p99));
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("attribution".into(), Json::Arr(rows));
+
+    let (_, o) = tracing_overhead(seed);
+    let mut m = BTreeMap::new();
+    m.insert("traced_wall".into(), Json::Num(o.traced_wall));
+    m.insert("untraced_wall".into(), Json::Num(o.untraced_wall));
+    m.insert("wall_overhead".into(), Json::Num(o.wall_overhead));
+    m.insert("virtual_identical".into(), Json::Bool(o.virtual_identical));
+    m.insert("frames".into(), Json::Num(o.frames as f64));
+    root.insert("overhead".into(), Json::Obj(m));
+
+    let peak = run_fleet_with(&sweep_scenario(seed, 2.0), None);
+    let tel = peak.telemetry.expect("peak run traced");
+    root.insert("registry".into(), tel.registry.to_json());
+
+    Json::Obj(root)
+}
+
+/// The traced peak-load run backing `eva trace`'s `--metrics-out` /
+/// `--trace-out` files: its registry is the snapshot, its traces the
+/// JSONL export.
+pub fn traced_run(seed: u64) -> FleetRunOutput {
+    run_fleet_with(&sweep_scenario(seed, 2.0), None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_budget_partitions_p99_without_residue() {
+        let (_, points) = overload_sweep(11);
+        assert_eq!(points.len(), LOAD_FACTORS.len());
+        for p in &points {
+            assert!(p.delivered > 0, "{p:?}");
+            // The acceptance bound is 1%; consecutive timestamps make it
+            // float error in practice.
+            assert!(p.residue < 0.01, "{p:?}");
+        }
+        // Overload swallows the budget in the queue: the 2× point's
+        // queue stage dominates its detect stage and dwarfs the 0.6×
+        // point's queue wait.
+        let (light, heavy) = (&points[0], &points[points.len() - 1]);
+        assert!(heavy.e2e_p99 > light.e2e_p99, "{light:?} vs {heavy:?}");
+        assert!(heavy.stages[1] > heavy.stages[2], "{heavy:?}");
+        assert!(heavy.stages[1] > light.stages[1], "{light:?} vs {heavy:?}");
+    }
+
+    #[test]
+    fn attribution_covers_gate_script_and_quiet_frames() {
+        let (table, rows) = attribution(13);
+        let classes: Vec<&str> = rows.iter().map(|r| r.class).collect();
+        assert!(classes.contains(&"gate"), "{classes:?}");
+        assert!(classes.contains(&"scripted"), "{classes:?}");
+        assert!(classes.contains(&"none"), "{classes:?}");
+        for r in &rows {
+            assert!(r.frames > 0, "{r:?}");
+            assert!(r.p99 >= r.p50, "{r:?}");
+        }
+        assert_eq!(table.rows.len(), rows.len());
+    }
+
+    #[test]
+    fn tracing_is_a_pure_observer_in_virtual_time() {
+        let (_, o) = tracing_overhead(17);
+        assert!(o.virtual_identical, "{o:?}");
+        assert!(o.frames > 0, "{o:?}");
+        assert!(o.untraced_wall > 0.0 && o.traced_wall > 0.0, "{o:?}");
+    }
+
+    #[test]
+    fn json_bundle_reparses_with_all_sections() {
+        let j = telemetry_json(5);
+        let back = Json::parse(&j.to_string()).expect("telemetry JSON must reparse");
+        assert_eq!(back.get("seed").and_then(Json::as_i64), Some(5));
+        assert_eq!(
+            back.get("stage_budget").unwrap().as_arr().unwrap().len(),
+            LOAD_FACTORS.len()
+        );
+        assert!(!back.get("attribution").unwrap().as_arr().unwrap().is_empty());
+        let overhead = back.get("overhead").expect("overhead section");
+        assert_eq!(
+            overhead.get("virtual_identical").and_then(Json::as_bool),
+            Some(true)
+        );
+        // The registry snapshot rides along and round-trips through the
+        // snapshot decoder.
+        let reg = back.get("registry").expect("registry section");
+        let decoded =
+            crate::telemetry::Registry::from_json(reg).expect("snapshot must decode");
+        assert!(decoded.counter_family_total("eva_frames_total") > 0);
+    }
+}

@@ -157,8 +157,8 @@ impl FleetReport {
         )
     }
 
-    /// Per-stream table (mutable: percentile queries sort lazily).
-    pub fn stream_table(&mut self) -> Table {
+    /// Per-stream table.
+    pub fn stream_table(&self) -> Table {
         let mut t = Table::new(
             "Per-stream results",
             &[
@@ -166,7 +166,7 @@ impl FleetReport {
                 "drop %", "σ (FPS)", "p50 (ms)", "p99 (ms)",
             ],
         );
-        for s in self.streams.iter_mut() {
+        for s in self.streams.iter() {
             let fps_in = if s.metrics.stream_duration > 0.0 {
                 s.metrics.frames_total as f64 / s.metrics.stream_duration
             } else {
@@ -189,8 +189,8 @@ impl FleetReport {
     }
 
     /// Machine-readable run summary (BENCH_*.json trajectories, `--json`
-    /// CLI output). Mutable because percentile queries sort lazily.
-    pub fn to_json(&mut self) -> Json {
+    /// CLI output).
+    pub fn to_json(&self) -> Json {
         let makespan = self.makespan;
         let aggregate_fps = self.aggregate_fps();
         let drop_rate = self.drop_rate();
@@ -212,7 +212,7 @@ impl FleetReport {
             .collect();
         let streams: Vec<Json> = self
             .streams
-            .iter_mut()
+            .iter()
             .map(|s| {
                 let mut o = BTreeMap::new();
                 o.insert("id".to_string(), Json::Num(s.id as f64));
@@ -356,7 +356,7 @@ mod tests {
         let kinds = [DeviceKind::Ncs2, DeviceKind::Ncs2];
         let a = finish_stream(accum(0, vec![rec(0, false), rec(1, false)]), &kinds);
         let b = finish_stream(accum(1, vec![rec(0, false), rec(1, true)]), &kinds);
-        let mut report = FleetReport {
+        let report = FleetReport {
             streams: vec![a, b],
             makespan: 10.0,
             device_busy: vec![4.0],
@@ -381,7 +381,7 @@ mod tests {
     fn report_json_roundtrips_and_carries_key_fields() {
         let kinds = [DeviceKind::Ncs2];
         let a = finish_stream(accum(0, vec![rec(0, false), rec(1, true)]), &kinds);
-        let mut report = FleetReport {
+        let report = FleetReport {
             streams: vec![a],
             makespan: 10.0,
             device_busy: vec![4.0],

@@ -41,7 +41,7 @@ pub use admission::{AdmissionMode, AdmissionPolicy, Decision, DegradeMode};
 pub use metrics::{jain_index, FleetReport, StreamReport};
 pub use pool::{DevicePool, Job};
 pub use registry::FleetRegistry;
-pub use serve::{serve_fleet, serve_fleet_logged, FleetServeConfig};
+pub use serve::{serve_fleet, serve_fleet_logged, serve_fleet_traced, FleetServeConfig};
 pub use sim::{run_fleet, run_fleet_with, FleetController, FleetRunOutput, Scenario};
 
 // Control-plane vocabulary: defined in `crate::control`, re-exported

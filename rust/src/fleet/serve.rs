@@ -21,6 +21,7 @@
 //! deliver; the nominal rates only gate admission). Rejected streams are
 //! not ingested at all — their records are synthesised as dropped.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Barrier, Condvar, Mutex};
@@ -36,6 +37,7 @@ use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::metrics::{finish_stream, FleetReport, StreamAccum};
 use crate::fleet::stream::StreamSpec;
 use crate::gate::{GateConfig, GatePolicy, GateVerdict, MotionModel};
+use crate::telemetry::{record_traces, FrameTrace, Registry, RunTelemetry, TraceOutcome};
 use crate::types::{Detection, FrameId};
 use crate::util::stats::Percentiles;
 use crate::video::Clip;
@@ -70,6 +72,15 @@ struct State {
     /// Ingest threads still running; workers exit once this hits zero
     /// and every queue is empty.
     open_streams: usize,
+}
+
+/// Ingest-side trace annotation: when the frame cleared (or failed)
+/// admission/gate, and why it dropped if it did. Worker-side times come
+/// from the fate messages, so the hot detect loop is untouched.
+#[derive(Debug, Clone, Copy)]
+struct ServeAnn {
+    admit: f64,
+    dropped: Option<TraceOutcome>,
 }
 
 enum Msg {
@@ -113,6 +124,35 @@ pub fn serve_fleet_logged<F>(
     config: &FleetServeConfig,
     factory: F,
 ) -> Result<(FleetReport, crate::control::EventLog)>
+where
+    F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
+{
+    serve_fleet_inner(streams, config, factory, false).map(|(report, log, _)| (report, log))
+}
+
+/// [`serve_fleet_logged`] plus per-frame span traces and a metrics
+/// registry ([`crate::telemetry`]): capture/admit stamps from the ingest
+/// clocks, detect start/end from the fate messages, deliver from the
+/// synchronizer — wall-clock seconds since run start throughout. The
+/// untraced entry points share this implementation and pay nothing.
+pub fn serve_fleet_traced<F>(
+    streams: &[(&Clip, StreamSpec)],
+    config: &FleetServeConfig,
+    factory: F,
+) -> Result<(FleetReport, crate::control::EventLog, RunTelemetry)>
+where
+    F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
+{
+    serve_fleet_inner(streams, config, factory, true)
+        .map(|(report, log, tel)| (report, log, tel.expect("traced run returns telemetry")))
+}
+
+fn serve_fleet_inner<F>(
+    streams: &[(&Clip, StreamSpec)],
+    config: &FleetServeConfig,
+    factory: F,
+    traced: bool,
+) -> Result<(FleetReport, crate::control::EventLog, Option<RunTelemetry>)>
 where
     F: Fn(usize) -> Result<Box<dyn Detector>> + Send + Sync,
 {
@@ -188,6 +228,11 @@ where
     // gated serve run emits the exact same log as the virtual-time
     // engine on the same streams — the EventLog replay contract.
     let gate_events: Arc<Mutex<Vec<crate::control::WireEvent>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // Trace annotations, allocated only for traced runs (ingest threads
+    // skip the map entirely otherwise).
+    let anns: Option<Arc<Mutex<BTreeMap<(usize, FrameId), ServeAnn>>>> =
+        traced.then(|| Arc::new(Mutex::new(BTreeMap::new())));
 
     // Two barriers: `ready` gates on every worker having built its
     // (possibly expensive) detector; main then stamps t0; `go` releases
@@ -277,7 +322,19 @@ where
             let paced = config.paced;
             let gate_cfg = config.gate.clone();
             let gate_events = Arc::clone(&gate_events);
+            let anns = anns.clone();
             scope.spawn(move || {
+                let mark = |fid: FrameId, at: f64, outcome: Option<TraceOutcome>| {
+                    if let Some(a) = anns.as_ref() {
+                        let mut m = a.lock().unwrap();
+                        let e = m
+                            .entry((sid, fid))
+                            .or_insert(ServeAnn { admit: at, dropped: None });
+                        if outcome.is_some() {
+                            e.dropped = outcome;
+                        }
+                    }
+                };
                 // Per-stream gate state: the motion model is keyed by the
                 // stream *name*, so the same stream gates identically here
                 // and in the virtual-time engine.
@@ -299,9 +356,11 @@ where
                     let now_s = t0.elapsed().as_secs_f64();
                     if fid % stride != 0 {
                         // Admission-mandated subsampling: dropped on arrival.
+                        mark(fid, now_s, Some(TraceOutcome::DroppedStride));
                         let _ = tx.send(Msg::Dropped { sid, fid, at: now_s });
                         continue;
                     }
+                    mark(fid, now_s, None);
                     if let Some((policy, model)) = gate.as_mut() {
                         // Skips only on the wall-clock path: workers are
                         // rung-agnostic, so pressure is pinned to 0 and a
@@ -316,6 +375,7 @@ where
                             ));
                         }
                         if !verdict.detects() {
+                            mark(fid, now_s, Some(TraceOutcome::DroppedGate));
                             let _ = tx.send(Msg::Dropped { sid, fid, at: now_s });
                             continue;
                         }
@@ -325,6 +385,7 @@ where
                         st.queues[sid].arrive(fid).evicted
                     };
                     if let Some(old) = evicted {
+                        mark(old, now_s, Some(TraceOutcome::DroppedEvicted));
                         let _ = tx.send(Msg::Dropped { sid, fid: old, at: now_s });
                     }
                     shared.cond.notify_one();
@@ -393,6 +454,14 @@ where
         }
     }
 
+    // Snapshot of the ingest-side annotations (threads have joined, so
+    // this is the final state). Empty when untraced.
+    let anns_map: BTreeMap<(usize, FrameId), ServeAnn> = match &anns {
+        Some(a) => a.lock().unwrap().clone(),
+        None => BTreeMap::new(),
+    };
+    let mut all_traces: Vec<FrameTrace> = Vec::new();
+
     let kinds = vec![DeviceKind::FastCpu; n_workers];
     let mut reports = Vec::with_capacity(n_streams);
     for (sid, mut stream_fates) in fates.into_iter().enumerate() {
@@ -403,6 +472,8 @@ where
         let mut s_busy = vec![0.0f64; n_workers];
         let mut s_frames = vec![0u64; n_workers];
         let fps = spec.fps;
+        // fid → (device, detect end, service) for traced runs.
+        let mut done: BTreeMap<FrameId, (usize, f64, f64)> = BTreeMap::new();
 
         if decisions[sid].is_admitted() {
             stream_fates.sort_by(|a, b| {
@@ -413,6 +484,9 @@ where
                     Some((device, detections, service)) => {
                         s_busy[device] += service;
                         s_frames[device] += 1;
+                        if traced {
+                            done.insert(fid, (device, at, service));
+                        }
                         Fate::Processed { detections, device }
                     }
                     None => Fate::Dropped,
@@ -429,6 +503,43 @@ where
                 for r in sync.resolve(fid, Fate::Dropped, ts, |f| f as f64 / fps) {
                     latency.push((r.emit_ts - r.capture_ts).max(0.0));
                 }
+            }
+        }
+
+        if traced {
+            for r in sync.emitted() {
+                let dropped = r.was_dropped();
+                let ann = anns_map.get(&(sid, r.frame_id)).copied();
+                let admit = ann.map(|a| a.admit).unwrap_or(r.capture_ts);
+                let (detect_start, detect_end, device) = match done.get(&r.frame_id) {
+                    // The fate message carries end + service; start is
+                    // recovered as `end - service`, clamped so a paced
+                    // stream's stage partition stays monotone.
+                    Some(&(dev, end, service)) => {
+                        (Some((end - service).max(admit)), Some(end), Some(dev))
+                    }
+                    None => (None, None, None),
+                };
+                let outcome = if !dropped {
+                    TraceOutcome::Delivered
+                } else if !decisions[sid].is_admitted() {
+                    TraceOutcome::DroppedRejected
+                } else {
+                    ann.and_then(|a| a.dropped)
+                        .unwrap_or(TraceOutcome::DroppedDrained)
+                };
+                all_traces.push(FrameTrace {
+                    stream: sid,
+                    frame: r.frame_id,
+                    capture: r.capture_ts,
+                    admit,
+                    detect_start,
+                    detect_end,
+                    deliver: Some(r.emit_ts),
+                    outcome,
+                    rung: if dropped { None } else { Some(decisions[sid].rung()) },
+                    device,
+                });
             }
         }
 
@@ -449,6 +560,17 @@ where
         reports.push(finish_stream(acc, &kinds));
     }
 
+    let telemetry = if traced {
+        let mut registry = Registry::new();
+        record_traces(&mut registry, &all_traces);
+        Some(RunTelemetry {
+            registry,
+            traces: all_traces,
+        })
+    } else {
+        None
+    };
+
     Ok((
         FleetReport {
             streams: reports,
@@ -463,6 +585,7 @@ where
                 .collect(),
         },
         wire_log,
+        telemetry,
     ))
 }
 
@@ -674,6 +797,52 @@ mod tests {
                 other => panic!("expected a decision payload, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn traced_serve_partitions_wall_clock_latency() {
+        let clip_a = generate(&presets::tiny_clip(32, 30, 15.0, 12), None);
+        let clip_b = generate(&presets::tiny_clip(32, 30, 15.0, 13), None);
+        let streams = [
+            (&clip_a, StreamSpec::new("a", 15.0, 30).with_window(4)),
+            (&clip_b, StreamSpec::new("b", 15.0, 30).with_window(4)),
+        ];
+        let config = FleetServeConfig {
+            admission: AdmissionPolicy::admit_all(),
+            device_rates: vec![200.0, 200.0],
+            paced: true,
+            gate: None,
+        };
+        let (report, _log, tel) = serve_fleet_traced(&streams, &config, |_| {
+            Ok(Box::new(EchoDetector {
+                delay: Duration::from_millis(5),
+            }) as Box<dyn Detector>)
+        })
+        .unwrap();
+        // One trace per frame; delivered count agrees with the report.
+        assert_eq!(tel.traces.len() as u64, report.total_frames());
+        let delivered: Vec<_> = tel
+            .traces
+            .iter()
+            .filter(|t| t.outcome == TraceOutcome::Delivered)
+            .collect();
+        assert_eq!(delivered.len() as u64, report.total_processed());
+        // Paced ingest keeps the stamps monotone, so every delivered
+        // frame's stage durations partition its e2e latency exactly.
+        for t in &delivered {
+            assert!(t.admit >= t.capture, "paced admit trails capture");
+            let stages = t.stage_seconds().expect("delivered frames have stages");
+            let e2e = t.e2e().expect("delivered frames have e2e");
+            assert!(
+                (stages.iter().sum::<f64>() - e2e).abs() < 1e-9,
+                "stages {stages:?} vs e2e {e2e}"
+            );
+            assert!(t.device.is_some());
+        }
+        assert_eq!(
+            tel.registry.counter_family_total("eva_frames_total"),
+            report.total_frames()
+        );
     }
 
     #[test]

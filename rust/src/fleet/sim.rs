@@ -39,6 +39,7 @@ use crate::fleet::registry::FleetRegistry;
 use crate::fleet::stream::{StreamId, StreamSpec, StreamState};
 use crate::gate::{GateConfig, GatePolicy, GateVerdict, MotionModel};
 use crate::sim::EventQueue;
+use crate::telemetry::{record_traces, FrameTrace, Registry, RunTelemetry, TraceOutcome};
 use crate::types::{FrameId, OutputRecord};
 use crate::util::Rng;
 
@@ -56,6 +57,10 @@ pub struct Scenario {
     /// Per-frame motion gate ([`crate::gate`]); `None` detects every
     /// admitted frame (the pre-gate behaviour).
     pub gate: Option<GateConfig>,
+    /// Record per-frame span traces and a metrics registry
+    /// ([`crate::telemetry`]); off by default — untraced runs pay
+    /// nothing.
+    pub telemetry: bool,
 }
 
 impl Scenario {
@@ -67,6 +72,7 @@ impl Scenario {
             admission: AdmissionPolicy::default(),
             seed: 0,
             gate: None,
+            telemetry: false,
         }
     }
 
@@ -88,6 +94,36 @@ impl Scenario {
     pub fn with_gate(mut self, gate: GateConfig) -> Scenario {
         self.gate = Some(gate);
         self
+    }
+
+    pub fn with_telemetry(mut self) -> Scenario {
+        self.telemetry = true;
+        self
+    }
+}
+
+/// Per-frame annotations the trace assembly joins against the
+/// synchronizer's record log at report time. Only the facts the records
+/// don't already carry: dispatch/completion times, the serving device
+/// and rung, and the drop reason.
+#[derive(Debug, Clone, Copy, Default)]
+struct FrameAnn {
+    detect_start: Option<f64>,
+    detect_end: Option<f64>,
+    device: Option<usize>,
+    rung: Option<usize>,
+    dropped: Option<TraceOutcome>,
+}
+
+/// Telemetry accumulator, allocated only when `Scenario::telemetry`.
+#[derive(Debug, Default)]
+struct TraceState {
+    anns: BTreeMap<(StreamId, FrameId), FrameAnn>,
+}
+
+fn mark_drop(trace: &mut Option<TraceState>, sid: StreamId, fid: FrameId, outcome: TraceOutcome) {
+    if let Some(t) = trace.as_mut() {
+        t.anns.entry((sid, fid)).or_default().dropped = Some(outcome);
     }
 }
 
@@ -167,6 +203,9 @@ pub struct FleetRunOutput {
     pub control_log: Vec<ControlRecord>,
     /// Per-frame gate verdicts (empty when the scenario has no gate).
     pub gate_log: Vec<WireEvent>,
+    /// Per-frame spans + metrics registry; `Some` iff the scenario ran
+    /// with [`Scenario::with_telemetry`].
+    pub telemetry: Option<RunTelemetry>,
 }
 
 impl FleetRunOutput {
@@ -240,6 +279,7 @@ fn arrival(
     now: f64,
     controller: &mut Option<&mut dyn FleetController>,
     gate: &mut Option<GateState>,
+    trace: &mut Option<TraceState>,
 ) {
     let n_new = {
         let s = &mut reg.streams[sid];
@@ -250,9 +290,11 @@ fn arrival(
         if !s.decision.is_admitted() {
             // Rejected stream: every frame is dropped on arrival, so the
             // record log still covers the whole stream.
+            mark_drop(trace, sid, fid, TraceOutcome::DroppedRejected);
             s.resolve(fid, Fate::Dropped, now)
         } else if !s.keeps(fid) {
             // Degraded stream: admission-mandated subsampling.
+            mark_drop(trace, sid, fid, TraceOutcome::DroppedStride);
             s.resolve(fid, Fate::Dropped, now)
         } else if gate
             .as_mut()
@@ -263,8 +305,10 @@ fn arrival(
             // no device time; the synchronizer's stale-fill stands in
             // for the constant-velocity tracker and delivered-mAP
             // charges it the (stretched) staleness decay.
+            mark_drop(trace, sid, fid, TraceOutcome::DroppedGate);
             s.resolve(fid, Fate::Dropped, now)
         } else if let Some(evicted) = s.window.arrive(fid).evicted {
+            mark_drop(trace, sid, evicted, TraceOutcome::DroppedEvicted);
             s.resolve(evicted, Fate::Dropped, now)
         } else {
             0
@@ -281,6 +325,7 @@ fn dispatch(
     queue: &mut EventQueue<Ev>,
     rng: &mut Rng,
     gate: &mut Option<GateState>,
+    trace: &mut Option<TraceState>,
 ) -> usize {
     let mut started = 0;
     loop {
@@ -304,6 +349,12 @@ fn dispatch(
             None => base_rung,
         };
         let speedup = reg.admission.rung_speedup(rung);
+        if let Some(tr) = trace.as_mut() {
+            let ann = tr.anns.entry((sid, fid)).or_default();
+            ann.detect_start = Some(queue.now());
+            ann.device = Some(dev);
+            ann.rung = Some(rung);
+        }
         let t = reg
             .pool
             .start_scaled(dev, Job { stream: sid, fid }, speedup, rng);
@@ -365,6 +416,7 @@ pub fn run_fleet_with(
     let mut rng = Rng::new(scenario.seed ^ 0x0F1E_E75E_ED00_0001);
     let mut control_log: Vec<ControlRecord> = Vec::new();
     let mut gate = scenario.gate.clone().map(GateState::new);
+    let mut trace: Option<TraceState> = scenario.telemetry.then(TraceState::default);
 
     // Outstanding-work counters: a controller tick re-arms only while
     // any of these is non-zero, so the run terminates.
@@ -392,7 +444,7 @@ pub fn run_fleet_with(
         queue.schedule(dt, Ev::Tick);
     }
 
-    in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
+    in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate, &mut trace);
 
     while let Some((now, ev)) = queue.pop() {
         match ev {
@@ -402,13 +454,16 @@ pub fn run_fleet_with(
                 if schedule_next_arrival(&mut queue, &reg, sid, fid + 1) {
                     pending_arrivals += 1;
                 }
-                arrival(&mut reg, sid, fid, now, &mut controller, &mut gate);
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
+                arrival(&mut reg, sid, fid, now, &mut controller, &mut gate, &mut trace);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate, &mut trace);
             }
             Ev::ServiceDone { dev } => {
                 last_activity = now;
                 in_flight -= 1;
                 let (job, service) = reg.pool.complete(dev);
+                if let Some(tr) = trace.as_mut() {
+                    tr.anns.entry((job.stream, job.fid)).or_default().detect_end = Some(now);
+                }
                 let n_new = {
                     let s = &mut reg.streams[job.stream];
                     if dev < s.device_busy.len() {
@@ -425,7 +480,7 @@ pub fn run_fleet_with(
                     )
                 };
                 feed(&mut controller, &reg.streams[job.stream], n_new, now);
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate, &mut trace);
             }
             Ev::Control { idx } => {
                 last_activity = now;
@@ -444,7 +499,7 @@ pub fn run_fleet_with(
                     action,
                     origin: ControlOrigin::Scripted,
                 });
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate, &mut trace);
             }
             Ev::Tick => {
                 let actions = match controller.as_mut() {
@@ -466,7 +521,7 @@ pub fn run_fleet_with(
                         origin: ControlOrigin::Controller,
                     });
                 }
-                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate);
+                in_flight += dispatch(&mut reg, &mut queue, &mut rng, &mut gate, &mut trace);
                 if pending_arrivals > 0 || in_flight > 0 || pending_controls > 0 {
                     queue.schedule_in(tick.expect("tick scheduled only with controller"), Ev::Tick);
                 }
@@ -485,6 +540,43 @@ pub fn run_fleet_with(
             feed(&mut controller, &reg.streams[sid], n, t_end);
         }
     }
+
+    // Assemble frame traces: join the synchronizer's record log (one
+    // record per arrived frame, with capture/emit times) against the
+    // dispatch annotations. Frames that died in the window with no
+    // explicit drop mark were drained at shutdown or detach.
+    let telemetry = trace.map(|tr| {
+        let mut traces: Vec<FrameTrace> = Vec::new();
+        for s in &reg.streams {
+            for r in s.sync.emitted() {
+                let ann = tr
+                    .anns
+                    .get(&(s.id, r.frame_id))
+                    .copied()
+                    .unwrap_or_default();
+                let dropped = r.was_dropped();
+                traces.push(FrameTrace {
+                    stream: s.id,
+                    frame: r.frame_id,
+                    capture: r.capture_ts,
+                    admit: r.capture_ts,
+                    detect_start: ann.detect_start,
+                    detect_end: ann.detect_end,
+                    deliver: Some(r.emit_ts),
+                    outcome: if dropped {
+                        ann.dropped.unwrap_or(TraceOutcome::DroppedDrained)
+                    } else {
+                        TraceOutcome::Delivered
+                    },
+                    rung: ann.rung,
+                    device: ann.device,
+                });
+            }
+        }
+        let mut registry = Registry::new();
+        record_traces(&mut registry, &traces);
+        RunTelemetry { registry, traces }
+    });
 
     let kinds = reg.pool.kinds();
     let device_labels = reg.pool.labels();
@@ -536,6 +628,7 @@ pub fn run_fleet_with(
         },
         control_log,
         gate_log: gate.map(|g| g.events).unwrap_or_default(),
+        telemetry,
     }
 }
 
@@ -949,6 +1042,77 @@ mod tests {
                 "cut frame {f} must be freshly detected"
             );
         }
+    }
+
+    #[test]
+    fn traced_run_covers_every_frame_and_partitions_latency() {
+        use crate::telemetry::p99_breakdown;
+        let scenario = Scenario::new(devices(&[2.5, 2.5]), specs(2, 10.0, 80, 4))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(7)
+            .with_telemetry();
+        let out = run_fleet_with(&scenario, None);
+        let tel = out.telemetry.as_ref().expect("telemetry requested");
+        // Exactly one trace per arrived frame; delivered count agrees
+        // with the report.
+        assert_eq!(tel.traces.len() as u64, out.report.total_frames());
+        let delivered: Vec<_> = tel
+            .traces
+            .iter()
+            .filter(|t| t.outcome == TraceOutcome::Delivered)
+            .collect();
+        assert_eq!(delivered.len() as u64, out.report.total_processed());
+        // Every delivered trace partitions its own e2e latency exactly
+        // and knows which device/rung served it.
+        for t in &delivered {
+            let stages = t.stage_seconds().expect("delivered frames have stages");
+            let e2e = t.e2e().expect("delivered frames have e2e");
+            assert!(
+                (stages.iter().sum::<f64>() - e2e).abs() < 1e-9,
+                "stages {stages:?} vs e2e {e2e}"
+            );
+            assert!(t.device.is_some() && t.rung.is_some());
+        }
+        // Registry totals agree with the report, and the p99 budget
+        // decomposes without residue.
+        assert_eq!(
+            tel.registry.counter_family_total("eva_frames_total"),
+            out.report.total_frames()
+        );
+        let b = p99_breakdown(&tel.traces).expect("delivered frames exist");
+        assert!((b.stages.iter().sum::<f64>() - b.e2e_p99).abs() < 1e-9);
+        // Tracing is an observer: the untraced twin reports identically.
+        let mut plain = scenario.clone();
+        plain.telemetry = false;
+        let base = run_fleet_with(&plain, None);
+        assert!(base.telemetry.is_none());
+        assert_eq!(base.report.total_processed(), out.report.total_processed());
+        assert_eq!(base.report.makespan, out.report.makespan);
+    }
+
+    #[test]
+    fn traced_gated_run_attributes_skips_to_the_gate() {
+        // The lobby-quiet gate scenario from above, traced: 60 skipped
+        // frames carry the gate drop reason, and joining traces with
+        // the wire log buckets every gate-logged frame under "gate".
+        let scenario = Scenario::new(devices(&[18.0]), specs(1, 15.0, 90, 4))
+            .with_admission(AdmissionPolicy::admit_all())
+            .with_seed(21)
+            .with_gate(GateConfig::default())
+            .with_telemetry();
+        let out = run_fleet_with(&scenario, None);
+        let tel = out.telemetry.as_ref().expect("telemetry requested");
+        let gate_drops = tel
+            .traces
+            .iter()
+            .filter(|t| t.outcome == TraceOutcome::DroppedGate)
+            .count();
+        assert_eq!(gate_drops, 60);
+        let buckets = crate::telemetry::attribute_latency(&tel.traces, &out.wire_log());
+        // 89 frames got a gate verdict (skips + forced refreshes);
+        // frame 0's steady Detect is unlogged, so it buckets "none".
+        assert_eq!(buckets.get("gate").map(|p| p.len()), Some(89));
+        assert_eq!(buckets.get("none").map(|p| p.len()), Some(1));
     }
 
     #[test]

@@ -64,6 +64,15 @@
 //!   frames along the model ladder, and always re-detects on scene
 //!   cuts. Verdicts ride the control plane as origin-tagged
 //!   `WireEvent`s, so gated runs replay — locally and across shards.
+//! * [`telemetry`] — end-to-end observability: a zero-dependency
+//!   metrics registry (labelled counters/gauges, log-scale latency
+//!   histograms with exact percentiles, Prometheus-style exposition,
+//!   JSON snapshots that merge across shards) and per-frame span
+//!   tracing (capture → admit/gate → queue → detect → deliver) in both
+//!   engines. Stage durations partition the capture→emit latency
+//!   exactly, traces join against the replayable `EventLog` to
+//!   attribute latency to the control class that caused it, and remote
+//!   shards ship cumulative snapshots over the wire each epoch.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
 //!   bench binaries and the CLI.
 
@@ -83,4 +92,5 @@ pub mod fleet;
 pub mod autoscale;
 pub mod shard;
 pub mod gate;
+pub mod telemetry;
 pub mod experiments;

@@ -7,6 +7,7 @@
 //!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
 //!   shard      stream sharding across fleet instances (split|skew|failure|autoscale|run|transport)
 //!   gate       motion-gated detection vs always-detect (lobby|highway|sports|all)
+//!   trace      end-to-end telemetry: p99 stage budgets, origin attribution, overhead
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
 //!   nselect    recommend the parallel-detection parameter n (§III-B)
 //!   visualize  dump Figure 2/3-style PPM frames with box overlays
@@ -24,9 +25,10 @@ use eva::detector::pjrt::PjrtDetectorFactory;
 use eva::detector::Detector;
 use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use eva::experiments;
-use eva::fleet::{run_fleet, AdmissionPolicy, Scenario, StreamSpec};
+use eva::fleet::{run_fleet_with, AdmissionPolicy, Scenario, StreamSpec};
 use eva::runtime::{load_manifest, ModelSpec};
 use eva::server::{serve, ServeConfig};
+use eva::telemetry::RunTelemetry;
 use eva::util::cli::{usage, Args, Spec};
 use eva::video::{generate, presets, raster};
 
@@ -50,20 +52,22 @@ fn specs() -> Vec<Spec> {
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
         Spec { name: "scenario", takes_value: true, help: "autoscale/shard/gate: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|all|run|transport; gate: lobby|highway|sports|all)", default: Some("step") },
-        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/gate: emit machine-readable JSON instead of tables", default: None },
+        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/gate/trace: emit machine-readable JSON instead of tables", default: None },
         Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
         Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
         Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
         Spec { name: "transport", takes_value: true, help: "shard: control-plane transport for --scenario run (inproc|tcp|uds; sockets bind loopback)", default: Some("inproc") },
         Spec { name: "autoscale", takes_value: false, help: "shard: embed an AutoscaleController in every shard (--scenario run), or select the autoscale overload sweep", default: None },
+        Spec { name: "metrics-out", takes_value: true, help: "fleet/gate/shard/trace: write the run's metric snapshot (Prometheus text exposition) to this file", default: None },
+        Spec { name: "trace-out", takes_value: true, help: "fleet/gate/trace: write the run's per-frame span traces (JSONL) to this file", default: None },
     ]
 }
 
 /// The one canonical subcommand list: the validity gate in `main`, the
 /// usage strings and `run`'s dispatch must never drift apart.
-const SUBCOMMANDS: [&str; 10] = [
-    "serve", "offline", "fleet", "autoscale", "shard", "gate", "table", "nselect",
-    "visualize", "inspect",
+const SUBCOMMANDS: [&str; 11] = [
+    "serve", "offline", "fleet", "autoscale", "shard", "gate", "trace", "table",
+    "nselect", "visualize", "inspect",
 ];
 
 fn subcommand_list() -> String {
@@ -107,6 +111,15 @@ fn main() {
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
+    // `--metrics-out` / `--trace-out` only apply where a run produces a
+    // registry / span traces; anywhere else they would be silently
+    // ignored, and the CLI contract is that nothing is.
+    if args.get("metrics-out").is_some() && !matches!(cmd, "fleet" | "gate" | "shard" | "trace") {
+        usage_error(&format!("--metrics-out does not apply to {cmd} (fleet|gate|shard|trace)"));
+    }
+    if args.get("trace-out").is_some() && !matches!(cmd, "fleet" | "gate" | "trace") {
+        usage_error(&format!("--trace-out does not apply to {cmd} (fleet|gate|trace)"));
+    }
     match cmd {
         "serve" => cmd_serve(args, false),
         "offline" => cmd_serve(args, true),
@@ -114,6 +127,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "autoscale" => cmd_autoscale(args),
         "shard" => cmd_shard(args),
         "gate" => cmd_gate(args),
+        "trace" => cmd_trace(args),
         "table" => cmd_table(args),
         "nselect" => cmd_nselect(args),
         "visualize" => cmd_visualize(args),
@@ -166,7 +180,7 @@ fn cmd_serve(args: &Args, offline: bool) -> Result<()> {
         Ok(Box::new(det) as Box<dyn Detector>)
     })?;
 
-    let mut metrics = report.metrics;
+    let metrics = report.metrics;
     println!("[eva] {}", metrics.summary());
     let dets: Vec<Vec<eva::types::Detection>> =
         report.records.iter().map(|r| r.detections.clone()).collect();
@@ -227,7 +241,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let scenario = Scenario::new(devices, specs)
         .with_admission(admission)
         .with_seed(seed);
-    let mut report = run_fleet(&scenario);
+    // `--metrics-out`/`--trace-out` flip span tracing on for this run;
+    // without them the fleet runs untraced (identical virtual-time
+    // outputs either way — tracing is a pure observer).
+    let traced = args.get("metrics-out").is_some() || args.get("trace-out").is_some();
+    let scenario = if traced { scenario.with_telemetry() } else { scenario };
+    let out = run_fleet_with(&scenario, None);
+    if let Some(tel) = out.telemetry.as_ref() {
+        write_run_files(args, tel)?;
+    }
+    let report = out.report;
     if args.flag("json") {
         println!("{}", report.to_json().to_string());
         return Ok(());
@@ -235,6 +258,20 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     print!("{}", report.stream_table().render());
     print!("{}", report.device_table().render());
     println!("[fleet] {}", report.summary());
+    Ok(())
+}
+
+/// Write the optional `--metrics-out` (Prometheus text exposition) and
+/// `--trace-out` (span-trace JSONL) artifacts for a traced run.
+fn write_run_files(args: &Args, tel: &RunTelemetry) -> Result<()> {
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, tel.registry.text_exposition())
+            .map_err(|e| anyhow!("--metrics-out {path:?}: {e}"))?;
+    }
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, tel.traces_jsonl())
+            .map_err(|e| anyhow!("--trace-out {path:?}: {e}"))?;
+    }
     Ok(())
 }
 
@@ -316,6 +353,13 @@ fn cmd_shard(args: &Args) -> Result<()> {
     if scenario != "run" && args.str_or("transport", "inproc") != "inproc" {
         bail!("--transport applies only to --scenario run (the transport sweep runs all of them)");
     }
+    // `--metrics-out` only applies to `--scenario run`: the sweeps run
+    // many co-simulations, each with its own registry, so there is no
+    // single snapshot to write.
+    let telemetry = args.get("metrics-out").is_some();
+    if telemetry && scenario != "run" {
+        bail!("--metrics-out applies only to --scenario run (sweeps aggregate many co-simulations)");
+    }
 
     if scenario == "run" {
         // One-off run from CLI parameters: `--shards` pools of `--rates`
@@ -389,6 +433,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
                 gossip,
                 seed,
                 autoscale_cfg,
+                telemetry,
             ),
             "tcp" | "uds" => {
                 let remote = if transport == "tcp" {
@@ -404,11 +449,16 @@ fn cmd_shard(args: &Args) -> Result<()> {
                     gossip,
                     seed,
                     autoscale_cfg,
+                    telemetry,
                     remote,
                 )?
             }
             other => bail!("unknown transport {other:?} (inproc|tcp|uds)"),
         };
+        if let Some(path) = args.get("metrics-out") {
+            std::fs::write(path, report.telemetry.text_exposition())
+                .map_err(|e| anyhow!("--metrics-out {path:?}: {e}"))?;
+        }
         if args.flag("json") {
             println!("{}", report.to_json().to_string());
             return Ok(());
@@ -504,6 +554,17 @@ fn cmd_gate(args: &Args) -> Result<()> {
     } else {
         raw_scenario
     };
+    // `--metrics-out`/`--trace-out` re-run one preset's gated cell with
+    // span tracing on; "all" has no single run to dump.
+    if args.get("metrics-out").is_some() || args.get("trace-out").is_some() {
+        if scenario == "all" {
+            bail!("--metrics-out/--trace-out need a single gate preset (lobby|highway|sports)");
+        }
+        let out = experiments::gate::traced_gated_run(&scenario, seed)
+            .ok_or_else(|| anyhow!("unknown gate preset {scenario:?} (lobby|highway|sports|all)"))?;
+        let tel = out.telemetry.as_ref().expect("traced gated run carries telemetry");
+        write_run_files(args, tel)?;
+    }
     if args.flag("json") {
         // Stdout must be exactly one parseable document here (CI
         // uploads it as BENCH_gate.json).
@@ -540,6 +601,37 @@ fn cmd_gate(args: &Args) -> Result<()> {
     let refreshes: u64 = gated.iter().map(|o| o.refreshes).sum();
     let downrungs: u64 = gated.iter().map(|o| o.downrungs).sum();
     println!("[gate] {skips} skips, {refreshes} forced refreshes, {downrungs} down-rungs across gated runs");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    // `--metrics-out`/`--trace-out` dump the peak-load sweep cell (the
+    // 2.0× overload run) rather than the whole sweep: one run, one
+    // registry, one trace stream.
+    if args.get("metrics-out").is_some() || args.get("trace-out").is_some() {
+        let out = experiments::telemetry::traced_run(seed);
+        let tel = out.telemetry.as_ref().expect("traced run carries telemetry");
+        write_run_files(args, tel)?;
+    }
+    if args.flag("json") {
+        // Stdout must be exactly one parseable document here (CI
+        // uploads it as BENCH_telemetry.json).
+        println!("{}", experiments::telemetry::telemetry_json(seed).to_string());
+        return Ok(());
+    }
+    let (t1, _) = experiments::telemetry::overload_sweep(seed);
+    let (t2, _) = experiments::telemetry::attribution(seed);
+    let (t3, overhead) = experiments::telemetry::tracing_overhead(seed);
+    print!("{}", t1.render());
+    print!("{}", t2.render());
+    print!("{}", t3.render());
+    println!(
+        "[trace] virtual-time outputs {} under tracing; wall overhead {:.2}% over {} frames",
+        if overhead.virtual_identical { "identical" } else { "DIVERGED" },
+        overhead.wall_overhead * 100.0,
+        overhead.frames,
+    );
     Ok(())
 }
 

@@ -41,4 +41,7 @@ pub use autoscale::{projected_capacity, ShardAutoscaler};
 pub use gossip::{plan_moves, GossipTable, Headroom, Migration};
 pub use placement::{fnv1a, PlacementPolicy, ShardView};
 pub use remote::{run_sharded_remote, serve_shard, RemoteShard, RemoteTransport};
-pub use sim::{run_sharded, ShardControl, ShardReport, ShardScenario, ShardStreamReport};
+pub use sim::{
+    record_coordinator_telemetry, record_slice_telemetry, run_sharded, EpochPhases, ShardControl,
+    ShardReport, ShardScenario, ShardStreamReport,
+};

@@ -56,7 +56,11 @@ use crate::gate::GateConfig;
 use crate::shard::autoscale::ShardAutoscaler;
 use crate::shard::gossip::{plan_moves, GossipTable};
 use crate::shard::placement::ShardView;
-use crate::shard::sim::{ShardControl, ShardReport, ShardScenario, ShardStreamReport};
+use crate::shard::sim::{
+    record_coordinator_telemetry, record_slice_telemetry, EpochPhases, ShardControl, ShardReport,
+    ShardScenario, ShardStreamReport,
+};
+use crate::telemetry::Registry;
 use crate::transport::msg::{SliceStream, TransportMsg, TRANSPORT_VERSION};
 use crate::transport::net::{connect_with_backoff, Endpoint, FrameConn, Listener, TransportError};
 use crate::util::stats::Percentiles;
@@ -156,6 +160,10 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
         s.set_gate(gate.clone());
         s
     });
+    // Cumulative metric snapshot, armed by the coordinator's Hello: a
+    // fresh copy ships home ahead of every Slice (cumulative counters,
+    // not deltas, so the latest snapshot supersedes the rest).
+    let mut telemetry: Option<Registry> = None;
 
     loop {
         let msg = match conn.recv() {
@@ -171,6 +179,7 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 roster: r,
                 autoscale,
                 gate: hello_gate,
+                telemetry: wants_telemetry,
                 ..
             } => {
                 if protocol != TRANSPORT_VERSION {
@@ -196,6 +205,7 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 if let Some(s) = scaler.as_mut() {
                     s.set_gate(gate.clone());
                 }
+                telemetry = wants_telemetry.then(Registry::new);
                 let capacity = pool.iter().map(|d| d.rate()).sum::<f64>()
                     * admission.target_utilization;
                 conn.send(&TransportMsg::Welcome {
@@ -313,6 +323,27 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                         streams,
                     )
                 };
+                if let Some(reg) = telemetry.as_mut() {
+                    // Mirror the in-process lowering exactly: an empty
+                    // slice records nothing there (the coordinator never
+                    // ticks one), so it must record nothing here either.
+                    if !streams.is_empty() {
+                        record_slice_telemetry(
+                            reg,
+                            shard.id,
+                            busy,
+                            frames,
+                            streams
+                                .iter()
+                                .map(|s| (s.total, s.processed, s.latencies.as_slice())),
+                        );
+                    }
+                    conn.send(&TransportMsg::Telemetry {
+                        shard: shard.id,
+                        epoch,
+                        snapshot: reg.clone(),
+                    })?;
+                }
                 conn.send(&TransportMsg::Slice {
                     epoch,
                     busy,
@@ -414,6 +445,7 @@ pub fn run_sharded_remote(
             roster: roster.clone(),
             autoscale: scenario.autoscale.clone(),
             gate: scenario.gate.clone(),
+            telemetry: scenario.telemetry,
         })
         .map_err(|e| anyhow!("shard {sh}: hello failed: {e}"))?;
         match conn.recv() {
@@ -450,6 +482,10 @@ pub fn run_sharded_remote(
     let mut migrations = 0usize;
     let mut initial_committed = vec![0.0f64; m];
     let mut epochs_run = 0usize;
+    // Latest scraped snapshot per shard (each supersedes the previous —
+    // shards ship cumulative counters, not deltas).
+    let mut snapshots: Vec<Option<Registry>> = vec![None; m];
+    let mut phase_timings: Vec<EpochPhases> = Vec::new();
 
     // Kill a shard in the coordinator's view: drop the connection,
     // orphan its residents (they re-place at the next placement pass).
@@ -516,6 +552,7 @@ pub fn run_sharded_remote(
 
     for epoch in 0..scenario.epochs {
         let t0 = epoch as f64 * tick;
+        let epoch_clock = scenario.telemetry.then(std::time::Instant::now);
 
         // 1. Gossip round over the wire: poll every live shard for its
         //    digest; a peer that cannot answer is a lost shard.
@@ -538,6 +575,7 @@ pub fn run_sharded_remote(
         }
         table.sweep(t0, 0.5 * tick);
         let mut views: Vec<ShardView> = table.views();
+        let after_gossip = scenario.telemetry.then(std::time::Instant::now);
 
         // 2. Place unplaced streams (initial placement + orphans).
         for i in 0..streams.len() {
@@ -604,6 +642,8 @@ pub fn run_sharded_remote(
             }
         }
 
+        let after_plan = scenario.telemetry.then(std::time::Instant::now);
+
         // 4. Serve the epoch: ship per-shard quotas, fold slices back.
         //    (Same arrival-credit arithmetic as the in-process runner.)
         let mut quotas: Vec<u64> = vec![0; streams.len()];
@@ -651,6 +691,9 @@ pub fn run_sharded_remote(
                     Ok(()) => loop {
                         match conn.recv() {
                             Ok(TransportMsg::Control(ev)) => scale_events.push(ev),
+                            Ok(TransportMsg::Telemetry { snapshot, .. }) => {
+                                snapshots[sh] = Some(snapshot);
+                            }
                             Ok(TransportMsg::Slice {
                                 busy,
                                 frames,
@@ -720,6 +763,16 @@ pub fn run_sharded_remote(
         }
 
         epochs_run = epoch + 1;
+        if let (Some(t_start), Some(t_gossip), Some(t_plan)) =
+            (epoch_clock, after_gossip, after_plan)
+        {
+            phase_timings.push(EpochPhases {
+                epoch,
+                gossip: (t_gossip - t_start).as_secs_f64(),
+                plan: (t_plan - t_gossip).as_secs_f64(),
+                serve: t_plan.elapsed().as_secs_f64(),
+            });
+        }
         if streams.iter().all(|s| !s.active()) {
             break;
         }
@@ -735,8 +788,20 @@ pub fn run_sharded_remote(
         let _ = handle.join();
     }
 
+    // Assemble the run snapshot from the shards' latest scraped
+    // registries (shard-labelled series merge disjointly) plus the
+    // coordinator's own control counters — the same lowering the
+    // in-process runner applies, so the registries match exactly.
+    let mut telemetry = Registry::new();
+    if scenario.telemetry {
+        for snap in snapshots.iter().flatten() {
+            telemetry.merge(snap);
+        }
+        record_coordinator_telemetry(&mut telemetry, epochs_run, migrations, &log);
+    }
+
     let stream_reports: Vec<ShardStreamReport> = streams
-        .iter_mut()
+        .iter()
         .map(|s| ShardStreamReport {
             name: s.spec.name.clone(),
             demand: s.spec.demand(),
@@ -767,6 +832,8 @@ pub fn run_sharded_remote(
         policy: scenario.policy,
         gossip_interval: tick,
         epochs_run,
+        telemetry,
+        phase_timings,
     })
 }
 
@@ -830,13 +897,19 @@ mod tests {
         .with_admission(AdmissionPolicy::admit_all())
         .with_gossip(10.0)
         .with_epochs(5)
-        .with_seed(47);
+        .with_seed(47)
+        .with_telemetry();
         let inproc = crate::shard::sim::run_sharded(&scenario);
         let remote = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
         assert_eq!(remote.total_frames(), inproc.total_frames());
         assert_eq!(remote.total_processed(), inproc.total_processed());
         assert_eq!(remote.epochs_run, inproc.epochs_run);
         assert_eq!(remote.initial_committed, inproc.initial_committed);
+        // The wire-scraped metric snapshot is the in-process registry,
+        // bit for bit: every counter, gauge and histogram sample crossed
+        // the frame codec unchanged.
+        assert_eq!(remote.telemetry, inproc.telemetry);
+        assert_eq!(remote.phase_timings.len(), remote.epochs_run);
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::gate::GateConfig;
 use crate::shard::autoscale::ShardAutoscaler;
 use crate::shard::gossip::{plan_moves, GossipTable, Headroom};
 use crate::shard::placement::{PlacementPolicy, ShardView};
+use crate::telemetry::{origin_class, MetricKey, Registry};
 use crate::util::json::Json;
 use crate::util::stats::Percentiles;
 use crate::util::table::{f, Table};
@@ -77,6 +78,11 @@ pub struct ShardScenario {
     /// state is slice-local; the motion signal is keyed by stream name,
     /// so a migrated stream gates identically on its new shard.
     pub gate: Option<GateConfig>,
+    /// Collect run telemetry: a deterministic metric snapshot
+    /// ([`ShardReport::telemetry`]) lowered from every served slice,
+    /// plus wall-clock coordinator phase timings
+    /// ([`ShardReport::phase_timings`]).
+    pub telemetry: bool,
 }
 
 impl ShardScenario {
@@ -92,6 +98,7 @@ impl ShardScenario {
             failures: Vec::new(),
             autoscale: None,
             gate: None,
+            telemetry: false,
         }
     }
 
@@ -133,6 +140,98 @@ impl ShardScenario {
     pub fn with_gate(mut self, gate: GateConfig) -> ShardScenario {
         self.gate = Some(gate);
         self
+    }
+
+    pub fn with_telemetry(mut self) -> ShardScenario {
+        self.telemetry = true;
+        self
+    }
+}
+
+/// Wall-clock seconds the coordinator spent in each phase of one gossip
+/// epoch: ingesting digests (`gossip`), planning placement, rebalance
+/// and failures (`plan`), and fanning the epoch slices out to shards
+/// (`serve`). Wall-clock, so excluded from cross-mode parity checks —
+/// the deterministic run outcome lives everywhere else in the report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochPhases {
+    pub epoch: usize,
+    pub gossip: f64,
+    pub plan: f64,
+    pub serve: f64,
+}
+
+/// Lower one served epoch slice into a shard's cumulative metric
+/// registry. A pure function of the slice outcome — exactly the data a
+/// remote shard ships in a `Slice` message — so the in-process
+/// coordinator and a remote shard build bit-identical snapshots from
+/// the same run: per-stream arrival/processed counters, the pool's
+/// busy-seconds gauge and frame counter, and every capture→emit
+/// latency observed into the shard's `eva_e2e_seconds` histogram.
+pub fn record_slice_telemetry<'a, I>(
+    reg: &mut Registry,
+    shard: usize,
+    busy: f64,
+    pool_frames: u64,
+    streams: I,
+) where
+    I: IntoIterator<Item = (u64, u64, &'a [f64])>,
+{
+    let sh = format!("{shard}");
+    reg.inc(
+        MetricKey::with_labels("eva_shard_slices_total", &[("shard", &sh)]),
+        1,
+    );
+    reg.inc(
+        MetricKey::with_labels("eva_shard_pool_frames_total", &[("shard", &sh)]),
+        pool_frames,
+    );
+    let busy_key = MetricKey::with_labels("eva_shard_busy_seconds", &[("shard", &sh)]);
+    let prior = reg.gauge(&busy_key).unwrap_or(0.0);
+    reg.set_gauge(busy_key, prior + busy);
+    let lat_key = MetricKey::with_labels("eva_e2e_seconds", &[("shard", &sh)]);
+    for (total, processed, latencies) in streams {
+        reg.inc(
+            MetricKey::with_labels(
+                "eva_shard_frames_total",
+                &[("shard", &sh), ("kind", "arrived")],
+            ),
+            total,
+        );
+        reg.inc(
+            MetricKey::with_labels(
+                "eva_shard_frames_total",
+                &[("shard", &sh), ("kind", "processed")],
+            ),
+            processed,
+        );
+        for &l in latencies {
+            reg.observe(lat_key.clone(), l);
+        }
+    }
+}
+
+/// Coordinator-side metrics lowered from a finished run: epochs,
+/// migrations, and every routed control event bucketed by the same
+/// attribution class [`crate::telemetry::attribute_latency`] uses.
+/// Shared by the in-process and remote coordinators so both modes
+/// produce the same snapshot for the same run.
+pub fn record_coordinator_telemetry(
+    reg: &mut Registry,
+    epochs_run: usize,
+    migrations: usize,
+    log: &[ShardControl],
+) {
+    reg.inc(MetricKey::new("eva_epochs_total"), epochs_run as u64);
+    reg.inc(MetricKey::new("eva_migrations_total"), migrations as u64);
+    for c in log {
+        reg.inc(
+            MetricKey::with_labels(
+                "eva_control_events_total",
+                &[("class", origin_class(&c.event))],
+            ),
+            1,
+        );
     }
 }
 
@@ -190,6 +289,16 @@ pub struct ShardReport {
     pub policy: PlacementPolicy,
     pub gossip_interval: f64,
     pub epochs_run: usize,
+    /// Deterministic metric snapshot of the run (empty unless
+    /// [`ShardScenario::telemetry`] was set): per-shard slice counters
+    /// and latency histograms plus coordinator-side control counters.
+    /// A remote run assembles the identical registry from shipped
+    /// [`crate::transport::TransportMsg::Telemetry`] snapshots.
+    pub telemetry: Registry,
+    /// Wall-clock coordinator phase timings, one entry per epoch run
+    /// (empty unless [`ShardScenario::telemetry`] was set). Not part of
+    /// any determinism or cross-mode parity contract.
+    pub phase_timings: Vec<EpochPhases>,
 }
 
 impl ShardReport {
@@ -587,9 +696,12 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
     let mut migrations = 0usize;
     let mut initial_committed = vec![0.0f64; m];
     let mut epochs_run = 0usize;
+    let mut telemetry = Registry::new();
+    let mut phase_timings: Vec<EpochPhases> = Vec::new();
 
     for epoch in 0..scenario.epochs {
         let t0 = epoch as f64 * tick;
+        let epoch_clock = scenario.telemetry.then(std::time::Instant::now);
 
         // 1. Gossip round: alive shards publish, stale digests expire.
         for sh in 0..m {
@@ -617,6 +729,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
         }
         table.sweep(t0, 0.5 * tick);
         let mut views: Vec<ShardView> = table.views();
+        let after_gossip = scenario.telemetry.then(std::time::Instant::now);
 
         // 2. Place unplaced streams (initial placement + orphans from a
         //    lost shard) against the fresh views, updating committed as
@@ -696,6 +809,8 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 }
             }
         }
+
+        let after_plan = scenario.telemetry.then(std::time::Instant::now);
 
         // 5. Serve the epoch: each alive shard runs its residents' slice
         //    through the virtual-time fleet engine; unplaced streams'
@@ -792,8 +907,36 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                         .push((rec.emit_ts - rec.capture_ts).max(0.0));
                 }
             }
-            shard_busy[sh] += report.device_busy.iter().sum::<f64>();
-            shard_frames[sh] += report.device_frames.iter().sum::<u64>();
+            let slice_busy = report.device_busy.iter().sum::<f64>();
+            let slice_frames = report.device_frames.iter().sum::<u64>();
+            shard_busy[sh] += slice_busy;
+            shard_frames[sh] += slice_frames;
+            if scenario.telemetry {
+                // Lower the slice through the same shape a remote shard
+                // ships in its `Slice`, so both modes build the same
+                // snapshot (pinned in `integration_transport`).
+                let slice: Vec<(u64, u64, Vec<f64>)> = report
+                    .streams
+                    .iter()
+                    .map(|sr| {
+                        (
+                            sr.metrics.frames_total,
+                            sr.metrics.frames_processed,
+                            sr.records
+                                .iter()
+                                .map(|r| (r.emit_ts - r.capture_ts).max(0.0))
+                                .collect(),
+                        )
+                    })
+                    .collect();
+                record_slice_telemetry(
+                    &mut telemetry,
+                    sh,
+                    slice_busy,
+                    slice_frames,
+                    slice.iter().map(|(t, p, l)| (*t, *p, l.as_slice())),
+                );
+            }
         }
         for (i, s) in streams.iter_mut().enumerate() {
             if s.shard.is_none() && s.active() && quotas[i] > 0 {
@@ -803,13 +946,27 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
         }
 
         epochs_run = epoch + 1;
+        if let (Some(t_start), Some(t_gossip), Some(t_plan)) =
+            (epoch_clock, after_gossip, after_plan)
+        {
+            phase_timings.push(EpochPhases {
+                epoch,
+                gossip: (t_gossip - t_start).as_secs_f64(),
+                plan: (t_plan - t_gossip).as_secs_f64(),
+                serve: t_plan.elapsed().as_secs_f64(),
+            });
+        }
         if streams.iter().all(|s| !s.active()) {
             break;
         }
     }
 
+    if scenario.telemetry {
+        record_coordinator_telemetry(&mut telemetry, epochs_run, migrations, &log);
+    }
+
     let stream_reports: Vec<ShardStreamReport> = streams
-        .iter_mut()
+        .iter()
         .map(|s| ShardStreamReport {
             name: s.spec.name.clone(),
             demand: s.spec.demand(),
@@ -840,6 +997,8 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
         policy: scenario.policy,
         gossip_interval: tick,
         epochs_run,
+        telemetry,
+        phase_timings,
     }
 }
 
@@ -1062,6 +1221,58 @@ mod tests {
         assert_eq!(again.control_log, gated.control_log);
         let audit = gated.audit_log();
         assert_eq!(EventLog::decode(&audit.encode()).expect("decodes"), audit);
+    }
+
+    #[test]
+    fn telemetry_snapshot_is_deterministic_and_accounts_every_slice() {
+        let scenario = ShardScenario::new(
+            vec![pool(2, 2.5), pool(2, 2.5)],
+            uniform_streams(4, 2.5, 50, 4),
+        )
+        .with_gossip(10.0)
+        .with_epochs(6)
+        .with_seed(13)
+        .with_telemetry();
+        let a = run_sharded(&scenario);
+        let b = run_sharded(&scenario);
+        // The registry is part of the deterministic run outcome; only
+        // the wall-clock phase timings may differ between runs.
+        assert_eq!(a.telemetry, b.telemetry);
+        assert_eq!(a.phase_timings.len(), a.epochs_run);
+        assert!(a
+            .phase_timings
+            .iter()
+            .all(|p| p.gossip >= 0.0 && p.plan >= 0.0 && p.serve >= 0.0));
+        // Every frame arrived through a served slice (all four streams
+        // place at epoch 0), so the counters reconcile with the report.
+        let by_kind = |kind: &str| -> u64 {
+            (0..2)
+                .map(|sh| {
+                    a.telemetry.counter(&MetricKey::with_labels(
+                        "eva_shard_frames_total",
+                        &[("shard", &format!("{sh}")), ("kind", kind)],
+                    ))
+                })
+                .sum()
+        };
+        assert_eq!(by_kind("arrived"), a.total_frames());
+        assert_eq!(by_kind("processed"), a.total_processed());
+        assert_eq!(
+            a.telemetry.counter(&MetricKey::new("eva_epochs_total")),
+            a.epochs_run as u64
+        );
+        assert_eq!(
+            a.telemetry
+                .counter_family_total("eva_control_events_total"),
+            a.control_log.len() as u64
+        );
+        // The same scenario without the flag carries no registry.
+        let off = run_sharded(&ShardScenario {
+            telemetry: false,
+            ..scenario
+        });
+        assert_eq!(off.telemetry, Registry::new());
+        assert!(off.phase_timings.is_empty());
     }
 
     #[test]

@@ -1,0 +1,39 @@
+//! End-to-end telemetry: metrics registry + per-frame span tracing.
+//!
+//! The paper's diagnosis method is rate/latency accounting — finding the
+//! mismatch among incoming stream rate, detection processing rate and
+//! output rate (§ III). The rest of the crate could only report that
+//! mismatch as end-of-run aggregates; this layer makes the *inside* of a
+//! frame's life observable:
+//!
+//! * [`registry`] — a zero-dependency metrics registry: labelled
+//!   counters, gauges and fixed-bucket log-scale latency [`Histogram`]s
+//!   with exact p50/p99 queries (the bucket counts answer "roughly
+//!   where", the embedded exact reservoir answers "exactly what"), a
+//!   Prometheus-style text exposition and a JSON snapshot over
+//!   [`crate::util::json`]. Registries merge, so per-shard snapshots
+//!   shipped over the wire fold into one fleet view.
+//! * [`trace`] — per-frame span tracing: every frame gets a
+//!   [`FrameTrace`] of stage timestamps (capture → admit/gate → queue →
+//!   detect → deliver), recorded by both the virtual-time
+//!   ([`crate::fleet::sim`]) and wall-clock ([`crate::fleet::serve`])
+//!   engines. Consecutive timestamps partition the capture→emit latency
+//!   *exactly*, so a p99 budget decomposes into stage contributions
+//!   without residue. Traces export as JSONL and join against the
+//!   replayable [`crate::control::EventLog`]
+//!   ([`trace::attribute_latency`]) so latency buckets by the control
+//!   class that touched the frame: gate verdict, admission decision,
+//!   autoscale action, migration.
+//!
+//! Everything here is engine-agnostic plain data; the engines opt in
+//! (`Scenario::with_telemetry`, `serve_fleet_traced`) and pay nothing
+//! when they don't.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Histogram, MetricKey, Registry, SNAPSHOT_VERSION};
+pub use trace::{
+    attribute_latency, origin_class, p99_breakdown, record_traces, FrameTrace, RunTelemetry,
+    StageBreakdown, TraceOutcome, STAGES,
+};

@@ -1,0 +1,696 @@
+//! Zero-dependency metrics registry: counters, gauges, log-scale
+//! latency histograms, text exposition and a JSON snapshot.
+//!
+//! Design constraints, in order:
+//!
+//! * **Deterministic.** Metrics are keyed by [`MetricKey`] in
+//!   `BTreeMap`s, labels are kept sorted, and the exposition walks keys
+//!   in order — two registries fed the same observations render
+//!   byte-identical text and JSON. That is what lets the transport
+//!   parity tests compare snapshots scraped over tcp/uds against the
+//!   in-process run *exactly*.
+//! * **Exact quantiles.** A [`Histogram`] is a fixed set of log-scale
+//!   bucket counts (cheap to merge and ship) *plus* the exact sample
+//!   reservoir ([`crate::util::stats::Percentiles`]) — per-run sample
+//!   volumes are bounded, so "p99" can mean the real 99th sample, not a
+//!   bucket interpolation.
+//! * **Mergeable.** [`Registry::merge`] folds another registry in
+//!   (counters add, gauges overwrite, histograms merge bucket-wise), so
+//!   per-shard snapshots shipped over the wire aggregate into one fleet
+//!   view at the coordinator.
+
+use std::collections::BTreeMap;
+
+use crate::control::wire::WireError;
+use crate::util::json::Json;
+use crate::util::stats::Percentiles;
+
+/// Snapshot format version stamped on every encoded registry.
+pub const SNAPSHOT_VERSION: i64 = 1;
+
+/// A metric identity: family name plus sorted `(label, value)` pairs.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    pub fn new(name: &str) -> MetricKey {
+        MetricKey {
+            name: name.to_string(),
+            labels: Vec::new(),
+        }
+    }
+
+    /// Key with labels (sorted by label name, so insertion order cannot
+    /// split one logical series into two).
+    pub fn with_labels(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        let mut labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|&(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        MetricKey {
+            name: name.to_string(),
+            labels,
+        }
+    }
+
+    /// `name{k="v",...}` (or bare `name` without labels).
+    fn render(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let inner: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect();
+        format!("{}{{{}}}", self.name, inner.join(","))
+    }
+
+    fn labels_json(&self) -> Json {
+        Json::Obj(
+            self.labels
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        )
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Format an f64 the way [`crate::util::json`] does (integral values
+/// without a fraction, shortest round-trip otherwise), so the text
+/// exposition and the JSON snapshot agree on every number.
+fn fmt_f64(n: f64) -> String {
+    if !n.is_finite() {
+        "null".to_string()
+    } else if n.fract() == 0.0 && n.abs() < 9e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Fixed-bucket log-scale histogram with an embedded exact-quantile
+/// reservoir. Buckets are upper bounds (`value <= bound` counts toward
+/// the bucket); values above the last bound land in a saturating
+/// overflow bucket.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// One count per bound, plus the trailing overflow bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    exact: Percentiles,
+}
+
+impl Histogram {
+    /// The default latency scale: 18 log-2 buckets from 1 ms to ~131 s.
+    /// Virtual-time service times and wall-clock stage latencies both
+    /// live comfortably inside this range; anything slower saturates
+    /// into the overflow bucket.
+    pub fn latency() -> Histogram {
+        Histogram::with_bounds((0..18).map(|i| 1e-3 * f64::powi(2.0, i)).collect())
+    }
+
+    /// Custom bucket upper bounds (must be non-empty and ascending).
+    pub fn with_bounds(bounds: Vec<f64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must ascend"
+        );
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            counts: vec![0; n + 1],
+            sum: 0.0,
+            exact: Percentiles::new(),
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] = self.counts[idx].saturating_add(1);
+        self.sum += v;
+        self.exact.push(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.exact.len() as u64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts, overflow bucket last (not cumulative).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Exact percentile over the observed samples (0 when empty).
+    pub fn pct(&self, p: f64) -> f64 {
+        self.exact.pct(p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.pct(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.pct(99.0)
+    }
+
+    /// Fold another histogram in. Panics on mismatched bucket bounds —
+    /// merging across scales silently would corrupt both.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram bounds differ");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c = c.saturating_add(*o);
+        }
+        self.sum += other.sum;
+        for &s in other.exact.samples() {
+            self.exact.push(s);
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "bounds".to_string(),
+            Json::Arr(self.bounds.iter().map(|&b| Json::Num(b)).collect()),
+        );
+        o.insert(
+            "counts".to_string(),
+            Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        o.insert("sum".to_string(), Json::Num(self.sum));
+        o.insert(
+            "samples".to_string(),
+            Json::Arr(self.exact.samples().iter().map(|&s| Json::Num(s)).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    fn from_json(v: &Json) -> Result<Histogram, WireError> {
+        let bounds = num_array(v, "bounds")?;
+        let counts = num_array(v, "counts")?;
+        let samples = num_array(v, "samples")?;
+        if bounds.is_empty() || counts.len() != bounds.len() + 1 {
+            return Err(WireError::new("histogram bounds/counts shape mismatch"));
+        }
+        let mut h = Histogram::with_bounds(bounds);
+        h.counts = counts.iter().map(|&c| c as u64).collect();
+        h.sum = v
+            .get("sum")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| WireError::new("missing or mistyped field \"sum\""))?;
+        for s in samples {
+            h.exact.push(s);
+        }
+        Ok(h)
+    }
+}
+
+impl PartialEq for Histogram {
+    fn eq(&self, other: &Histogram) -> bool {
+        self.bounds == other.bounds
+            && self.counts == other.counts
+            && self.sum == other.sum
+            && self.exact.samples() == other.exact.samples()
+    }
+}
+
+fn num_array(v: &Json, key: &str) -> Result<Vec<f64>, WireError> {
+    let raw = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| WireError::new(format!("missing or mistyped field {key:?}")))?;
+    let mut out = Vec::with_capacity(raw.len());
+    for x in raw {
+        out.push(
+            x.as_f64()
+                .ok_or_else(|| WireError::new(format!("{key} entries must be numbers")))?,
+        );
+    }
+    Ok(out)
+}
+
+/// The registry: every metric of a run, deterministically ordered.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<MetricKey, u64>,
+    gauges: BTreeMap<MetricKey, f64>,
+    histograms: BTreeMap<MetricKey, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Add to a counter (creating it at zero).
+    pub fn inc(&mut self, key: MetricKey, by: u64) {
+        let c = self.counters.entry(key).or_insert(0);
+        *c = c.saturating_add(by);
+    }
+
+    pub fn set_gauge(&mut self, key: MetricKey, v: f64) {
+        self.gauges.insert(key, v);
+    }
+
+    /// Observe into a histogram, creating it on the default latency
+    /// scale ([`Histogram::latency`]) if absent.
+    pub fn observe(&mut self, key: MetricKey, v: f64) {
+        self.histograms
+            .entry(key)
+            .or_insert_with(Histogram::latency)
+            .observe(v);
+    }
+
+    pub fn counter(&self, key: &MetricKey) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, key: &MetricKey) -> Option<f64> {
+        self.gauges.get(key).copied()
+    }
+
+    pub fn histogram(&self, key: &MetricKey) -> Option<&Histogram> {
+        self.histograms.get(key)
+    }
+
+    /// Sum of every counter in family `name` across its label sets.
+    pub fn counter_family_total(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(k, _)| k.name == name)
+            .map(|(_, &v)| v)
+            .sum()
+    }
+
+    /// Fold `other` in: counters add, gauges overwrite (last writer
+    /// wins), histograms merge bucket-wise.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, &v) in &other.counters {
+            self.inc(k.clone(), v);
+        }
+        for (k, &v) in &other.gauges {
+            self.set_gauge(k.clone(), v);
+        }
+        for (k, h) in &other.histograms {
+            match self.histograms.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` headers, one sample
+    /// per line, histograms as cumulative `_bucket{le=...}` series with
+    /// `_sum` / `_count`. Deterministic: keys render in `BTreeMap`
+    /// order.
+    pub fn text_exposition(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (k, &v) in &self.counters {
+            if k.name != last_family {
+                out.push_str(&format!("# TYPE {} counter\n", k.name));
+                last_family = k.name.clone();
+            }
+            out.push_str(&format!("{} {v}\n", k.render()));
+        }
+        last_family.clear();
+        for (k, &v) in &self.gauges {
+            if k.name != last_family {
+                out.push_str(&format!("# TYPE {} gauge\n", k.name));
+                last_family = k.name.clone();
+            }
+            out.push_str(&format!("{} {}\n", k.render(), fmt_f64(v)));
+        }
+        last_family.clear();
+        for (k, h) in &self.histograms {
+            if k.name != last_family {
+                out.push_str(&format!("# TYPE {} histogram\n", k.name));
+                last_family = k.name.clone();
+            }
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum = cum.saturating_add(c);
+                let le = if i < h.bounds.len() {
+                    fmt_f64(h.bounds[i])
+                } else {
+                    "+Inf".to_string()
+                };
+                let mut bk = k.clone();
+                bk.name = format!("{}_bucket", k.name);
+                bk.labels.push(("le".to_string(), le));
+                bk.labels.sort();
+                out.push_str(&format!("{} {cum}\n", bk.render()));
+            }
+            let mut sk = k.clone();
+            sk.name = format!("{}_sum", k.name);
+            out.push_str(&format!("{} {}\n", sk.render(), fmt_f64(h.sum)));
+            let mut ck = k.clone();
+            ck.name = format!("{}_count", k.name);
+            out.push_str(&format!("{} {}\n", ck.render(), h.count()));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn series(key: &MetricKey, value: Json) -> Json {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(key.name.clone()));
+            o.insert("labels".to_string(), key.labels_json());
+            o.insert("value".to_string(), value);
+            Json::Obj(o)
+        }
+        let mut o = BTreeMap::new();
+        o.insert("format".to_string(), Json::Num(SNAPSHOT_VERSION as f64));
+        o.insert(
+            "counters".to_string(),
+            Json::Arr(
+                self.counters
+                    .iter()
+                    .map(|(k, &v)| series(k, Json::Num(v as f64)))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "gauges".to_string(),
+            Json::Arr(
+                self.gauges
+                    .iter()
+                    .map(|(k, &v)| series(k, Json::Num(v)))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "histograms".to_string(),
+            Json::Arr(
+                self.histograms
+                    .iter()
+                    .map(|(k, h)| series(k, h.to_json()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Registry, WireError> {
+        let format = v
+            .get("format")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| WireError::new("missing snapshot format"))?;
+        if format != SNAPSHOT_VERSION {
+            return Err(WireError::new(format!(
+                "unsupported snapshot format {format} (expected {SNAPSHOT_VERSION})"
+            )));
+        }
+        fn key_of(s: &Json) -> Result<MetricKey, WireError> {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| WireError::new("series missing name"))?
+                .to_string();
+            let raw = s
+                .get("labels")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| WireError::new("series missing labels"))?;
+            let mut labels = Vec::with_capacity(raw.len());
+            for (k, v) in raw {
+                labels.push((
+                    k.clone(),
+                    v.as_str()
+                        .ok_or_else(|| WireError::new("label values must be strings"))?
+                        .to_string(),
+                ));
+            }
+            labels.sort();
+            Ok(MetricKey { name, labels })
+        }
+        fn arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json], WireError> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| WireError::new(format!("missing or mistyped field {key:?}")))
+        }
+        let mut reg = Registry::new();
+        for s in arr(v, "counters")? {
+            let value = s
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| WireError::new("counter missing value"))?;
+            reg.counters.insert(key_of(s)?, value as u64);
+        }
+        for s in arr(v, "gauges")? {
+            let value = s
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| WireError::new("gauge missing value"))?;
+            reg.gauges.insert(key_of(s)?, value);
+        }
+        for s in arr(v, "histograms")? {
+            let value = s
+                .get("value")
+                .ok_or_else(|| WireError::new("histogram missing value"))?;
+            reg.histograms.insert(key_of(s)?, Histogram::from_json(value)?);
+        }
+        Ok(reg)
+    }
+
+    /// Serialise the snapshot to a compact JSON string.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a string produced by [`Registry::encode`].
+    pub fn decode(text: &str) -> Result<Registry, WireError> {
+        let v = Json::parse(text).map_err(|e| WireError::new(e.to_string()))?;
+        Registry::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::stats::Running;
+
+    fn sample_registry() -> Registry {
+        let mut r = Registry::new();
+        r.inc(MetricKey::with_labels("eva_frames_total", &[("stream", "cam0")]), 10);
+        r.inc(MetricKey::with_labels("eva_frames_total", &[("stream", "cam1")]), 4);
+        r.inc(MetricKey::new("eva_decode_errors_total"), 1);
+        r.set_gauge(MetricKey::new("eva_queue_depth"), 3.5);
+        for v in [0.002, 0.004, 0.05, 2.0] {
+            r.observe(MetricKey::with_labels("eva_stage_seconds", &[("stage", "detect")]), v);
+        }
+        r
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = Histogram::latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.pct(0.0), 0.0);
+        assert!(h.bucket_counts().iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn single_sample_is_every_quantile() {
+        let mut h = Histogram::latency();
+        h.observe(0.125);
+        assert_eq!(h.count(), 1);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.pct(p), 0.125, "p{p}");
+        }
+        assert_eq!(h.sum(), 0.125);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn bucket_boundary_values_land_in_their_bucket() {
+        // `value <= bound` counts toward the bucket: an observation
+        // exactly on a bound must not spill into the next one.
+        let mut h = Histogram::with_bounds(vec![1.0, 2.0, 4.0]);
+        h.observe(1.0);
+        h.observe(2.0);
+        h.observe(2.0000001);
+        h.observe(4.0);
+        assert_eq!(h.bucket_counts(), &[1, 1, 2, 0]);
+    }
+
+    #[test]
+    fn overflow_bucket_saturates_instead_of_wrapping() {
+        let mut h = Histogram::with_bounds(vec![1.0]);
+        h.observe(5.0);
+        assert_eq!(h.bucket_counts(), &[0, 1]);
+        // Pin the overflow bucket one shy of the ceiling (direct field
+        // access — same module): further observations and merges must
+        // saturate, not wrap to zero.
+        h.counts[1] = u64::MAX - 1;
+        h.observe(7.0);
+        assert_eq!(h.bucket_counts()[1], u64::MAX);
+        h.observe(7.0);
+        assert_eq!(h.bucket_counts()[1], u64::MAX);
+        let mut other = Histogram::with_bounds(vec![1.0]);
+        other.observe(9.0);
+        h.merge(&other);
+        assert_eq!(h.bucket_counts()[1], u64::MAX);
+    }
+
+    #[test]
+    fn prop_histogram_quantiles_match_running_on_random_data() {
+        // Cross-check the exact-quantile reservoir against the Welford
+        // accumulator: count/min/max/mean must agree on arbitrary data.
+        check("histogram vs running", Config::default(), |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let mut h = Histogram::latency();
+            let mut r = Running::new();
+            let mut p = crate::util::stats::Percentiles::new();
+            for _ in 0..n {
+                let v = rng.range(1e-4, 50.0);
+                h.observe(v);
+                r.push(v);
+                p.push(v);
+            }
+            if h.count() != r.count() {
+                return Err(format!("count {} vs {}", h.count(), r.count()));
+            }
+            if (h.pct(0.0) - r.min()).abs() > 1e-12 {
+                return Err(format!("min {} vs {}", h.pct(0.0), r.min()));
+            }
+            if (h.pct(100.0) - r.max()).abs() > 1e-12 {
+                return Err(format!("max {} vs {}", h.pct(100.0), r.max()));
+            }
+            if (h.sum() / h.count() as f64 - r.mean()).abs() > 1e-9 {
+                return Err(format!("mean {} vs {}", h.sum() / h.count() as f64, r.mean()));
+            }
+            for pctl in [25.0, 50.0, 90.0, 99.0] {
+                if h.pct(pctl) != p.pct(pctl) {
+                    return Err(format!("p{pctl}: {} vs {}", h.pct(pctl), p.pct(pctl)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_adds_counters_and_folds_histograms() {
+        let mut a = sample_registry();
+        let b = sample_registry();
+        a.merge(&b);
+        assert_eq!(
+            a.counter(&MetricKey::with_labels("eva_frames_total", &[("stream", "cam0")])),
+            20
+        );
+        assert_eq!(a.counter_family_total("eva_frames_total"), 28);
+        let h = a
+            .histogram(&MetricKey::with_labels("eva_stage_seconds", &[("stage", "detect")]))
+            .expect("histogram");
+        assert_eq!(h.count(), 8);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_exactly() {
+        let reg = sample_registry();
+        let text = reg.encode();
+        let back = Registry::decode(&text).expect("decode");
+        assert_eq!(back, reg, "snapshot text: {text}");
+        // Re-encoding the decoded registry is byte-identical: the
+        // snapshot is deterministic, not just equivalent.
+        assert_eq!(back.encode(), text);
+    }
+
+    #[test]
+    fn snapshot_rejects_malformed_documents() {
+        assert!(Registry::decode("not json").is_err());
+        assert!(Registry::decode("{}").is_err());
+        let bad_version = sample_registry().encode().replacen("\"format\":1", "\"format\":9", 1);
+        assert!(Registry::decode(&bad_version).is_err());
+    }
+
+    #[test]
+    fn schema_lock_text_exposition_and_json_agree() {
+        // CI schema lock: every metric family name and label set in the
+        // JSON snapshot appears in the text exposition (and vice versa —
+        // the exposition has no families the snapshot lacks), so a
+        // renamed metric cannot slip through one format unnoticed.
+        let reg = sample_registry();
+        let text = reg.text_exposition();
+        let snap = reg.to_json();
+        for section in ["counters", "gauges", "histograms"] {
+            for s in snap.get(section).and_then(Json::as_arr).expect(section) {
+                let name = s.get("name").and_then(Json::as_str).expect("name");
+                assert!(text.contains(name), "{section} family {name} missing from text");
+                for (k, v) in s.get("labels").and_then(Json::as_obj).expect("labels") {
+                    let pair = format!("{k}=\"{}\"", v.as_str().expect("label"));
+                    assert!(text.contains(&pair), "label {pair} missing from text");
+                }
+            }
+        }
+        // TYPE headers are present and typed correctly.
+        assert!(text.contains("# TYPE eva_frames_total counter"));
+        assert!(text.contains("# TYPE eva_queue_depth gauge"));
+        assert!(text.contains("# TYPE eva_stage_seconds histogram"));
+        // Histogram series carry the cumulative +Inf bucket and the
+        // sum/count pair.
+        assert!(text.contains("le=\"+Inf\""));
+        assert!(text.contains("eva_stage_seconds_sum"));
+        assert!(text.contains("eva_stage_seconds_count"));
+        // And the exposition parses back: every sample line's family is
+        // declared by a TYPE header above it.
+        let mut declared = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                declared.push(rest.split(' ').next().unwrap().to_string());
+            } else if !line.is_empty() {
+                let family = line.split(['{', ' ']).next().unwrap();
+                let base = family
+                    .trim_end_matches("_bucket")
+                    .trim_end_matches("_sum")
+                    .trim_end_matches("_count");
+                assert!(
+                    declared.iter().any(|d| d == family || d == base),
+                    "undeclared family in line: {line}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exposition_is_deterministic_across_insertion_orders() {
+        let mut a = Registry::new();
+        a.inc(MetricKey::with_labels("f", &[("s", "0")]), 1);
+        a.inc(MetricKey::with_labels("f", &[("s", "1")]), 2);
+        let mut b = Registry::new();
+        b.inc(MetricKey::with_labels("f", &[("s", "1")]), 2);
+        b.inc(MetricKey::with_labels("f", &[("s", "0")]), 1);
+        assert_eq!(a.text_exposition(), b.text_exposition());
+        assert_eq!(a.encode(), b.encode());
+    }
+}

@@ -1,0 +1,444 @@
+//! Per-frame span tracing: stage timestamps, JSONL export, and the
+//! join against the replayable control-plane event log.
+//!
+//! A [`FrameTrace`] carries consecutive timestamps through one frame's
+//! life — capture → admit/gate → queue exit (detect start) → detect end
+//! → deliver — so stage durations *partition* the capture→emit latency
+//! exactly: `ingest + queue + detect + deliver == e2e` by construction,
+//! with no residue for a p99 budget to hide in. Frames that never reach
+//! a detector (stride-dropped, gate-skipped, evicted, rejected, drained
+//! at shutdown) still get a trace with the drop reason, so the
+//! accounting closes over every captured frame.
+//!
+//! [`attribute_latency`] joins delivered traces against a run's
+//! [`EventLog`]: each frame buckets under the control class that most
+//! recently touched its stream at capture time (an exact per-frame gate
+//! verdict wins outright), lowering "where did the p99 go" to "which
+//! controller put it there".
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::control::{ControlAction, ControlOrigin, EventLog, WireEvent, WirePayload};
+use crate::telemetry::registry::{MetricKey, Registry};
+use crate::util::json::Json;
+use crate::util::stats::Percentiles;
+
+/// Stage names, in frame-life order (shared by metric labels, tables
+/// and the JSONL export so they cannot drift apart).
+pub const STAGES: [&str; 4] = ["ingest", "queue", "detect", "deliver"];
+
+/// How one captured frame left the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOutcome {
+    /// Detected and emitted by the synchronizer.
+    Delivered,
+    /// Stream was rejected by admission; the frame never entered.
+    DroppedRejected,
+    /// Dropped by the admission stride before the window.
+    DroppedStride,
+    /// Skipped by a motion-gate verdict.
+    DroppedGate,
+    /// Evicted from a full window by a newer arrival.
+    DroppedEvicted,
+    /// Still queued when the run drained.
+    DroppedDrained,
+}
+
+impl TraceOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceOutcome::Delivered => "delivered",
+            TraceOutcome::DroppedRejected => "rejected",
+            TraceOutcome::DroppedStride => "stride",
+            TraceOutcome::DroppedGate => "gate",
+            TraceOutcome::DroppedEvicted => "evicted",
+            TraceOutcome::DroppedDrained => "drained",
+        }
+    }
+}
+
+/// One frame's span record. Times are engine time — virtual seconds in
+/// [`crate::fleet::sim`], wall-clock seconds since run start in
+/// [`crate::fleet::serve`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameTrace {
+    pub stream: usize,
+    pub frame: u64,
+    /// Capture timestamp (`frame / fps` in virtual time).
+    pub capture: f64,
+    /// Admission/gate verdict applied; equals `capture` in virtual time
+    /// (the gate decides at arrival), trails it in wall clock.
+    pub admit: f64,
+    /// Queue exit = detector start (`None` if never dispatched).
+    pub detect_start: Option<f64>,
+    pub detect_end: Option<f64>,
+    /// Synchronizer emit time (set for every emitted record, including
+    /// stale-box emissions of dropped frames).
+    pub deliver: Option<f64>,
+    pub outcome: TraceOutcome,
+    /// Model-ladder rung the frame was served at.
+    pub rung: Option<usize>,
+    /// Device (virtual-time pool index / wall-clock worker index).
+    pub device: Option<usize>,
+}
+
+impl FrameTrace {
+    /// Capture→deliver latency, when the frame was emitted.
+    pub fn e2e(&self) -> Option<f64> {
+        self.deliver.map(|d| (d - self.capture).max(0.0))
+    }
+
+    /// Stage durations `[ingest, queue, detect, deliver]` for a
+    /// delivered, detected frame. They sum to [`FrameTrace::e2e`]
+    /// exactly (consecutive timestamps; nothing is measured twice).
+    pub fn stage_seconds(&self) -> Option<[f64; 4]> {
+        let (ds, de, dl) = (self.detect_start?, self.detect_end?, self.deliver?);
+        Some([
+            (self.admit - self.capture).max(0.0),
+            (ds - self.admit).max(0.0),
+            (de - ds).max(0.0),
+            (dl - de).max(0.0),
+        ])
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("stream".to_string(), Json::Num(self.stream as f64));
+        o.insert("frame".to_string(), Json::Num(self.frame as f64));
+        o.insert("capture".to_string(), Json::Num(self.capture));
+        o.insert("admit".to_string(), Json::Num(self.admit));
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        o.insert("detect_start".to_string(), opt(self.detect_start));
+        o.insert("detect_end".to_string(), opt(self.detect_end));
+        o.insert("deliver".to_string(), opt(self.deliver));
+        o.insert(
+            "outcome".to_string(),
+            Json::Str(self.outcome.label().to_string()),
+        );
+        o.insert(
+            "rung".to_string(),
+            self.rung.map(|r| Json::Num(r as f64)).unwrap_or(Json::Null),
+        );
+        o.insert(
+            "device".to_string(),
+            self.device.map(|d| Json::Num(d as f64)).unwrap_or(Json::Null),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Render traces as JSONL (one compact object per line), the
+/// `--trace-out` file format.
+pub fn traces_jsonl(traces: &[FrameTrace]) -> String {
+    let mut out = String::new();
+    for t in traces {
+        out.push_str(&t.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Everything a traced run hands back: the metrics registry and the
+/// per-frame spans.
+#[derive(Debug, Clone, Default)]
+pub struct RunTelemetry {
+    pub registry: Registry,
+    pub traces: Vec<FrameTrace>,
+}
+
+impl RunTelemetry {
+    pub fn traces_jsonl(&self) -> String {
+        traces_jsonl(&self.traces)
+    }
+}
+
+/// Standard metric names for a traced fleet run. [`record_traces`] is
+/// the single place that lowers traces into the registry, so the metric
+/// schema cannot drift between the two engines.
+pub fn record_traces(reg: &mut Registry, traces: &[FrameTrace]) {
+    for t in traces {
+        reg.inc(
+            MetricKey::with_labels("eva_frames_total", &[("outcome", t.outcome.label())]),
+            1,
+        );
+        if let Some(e2e) = t.e2e() {
+            if t.outcome == TraceOutcome::Delivered {
+                reg.observe(MetricKey::new("eva_e2e_seconds"), e2e);
+            }
+        }
+        if let Some(stages) = t.stage_seconds() {
+            for (name, secs) in STAGES.iter().zip(stages) {
+                reg.observe(
+                    MetricKey::with_labels("eva_stage_seconds", &[("stage", name)]),
+                    secs,
+                );
+            }
+        }
+    }
+}
+
+/// Per-stage decomposition of the exact p99 frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageBreakdown {
+    /// The nearest-rank p99 capture→deliver latency.
+    pub e2e_p99: f64,
+    /// That frame's `[ingest, queue, detect, deliver]` durations — they
+    /// sum to `e2e_p99` exactly.
+    pub stages: [f64; 4],
+    /// Delivered frames the rank was drawn from.
+    pub delivered: usize,
+}
+
+/// Decompose the p99 latency budget across stages: find the delivered
+/// frame holding the nearest-rank p99 end-to-end latency and return its
+/// exact stage partition (not per-stage p99s, which need not sum to
+/// anything). `None` without delivered, detected frames.
+pub fn p99_breakdown(traces: &[FrameTrace]) -> Option<StageBreakdown> {
+    let delivered: Vec<&FrameTrace> = traces
+        .iter()
+        .filter(|t| t.outcome == TraceOutcome::Delivered && t.stage_seconds().is_some())
+        .collect();
+    if delivered.is_empty() {
+        return None;
+    }
+    let mut lat = Percentiles::new();
+    for t in &delivered {
+        lat.push(t.e2e().unwrap_or(0.0));
+    }
+    let p99 = lat.p99();
+    // The nearest-rank quantile is an actual sample: recover its frame
+    // (first match; ties share the same e2e by definition).
+    let frame = delivered
+        .iter()
+        .find(|t| t.e2e() == Some(p99))
+        .expect("p99 is a sample");
+    Some(StageBreakdown {
+        e2e_p99: p99,
+        stages: frame.stage_seconds().expect("delivered frame has stages"),
+        delivered: delivered.len(),
+    })
+}
+
+/// Coarse attribution class of one wire event (the vocabulary of
+/// [`attribute_latency`] buckets).
+pub fn origin_class(ev: &WireEvent) -> &'static str {
+    match &ev.payload {
+        WirePayload::Gate { .. } => "gate",
+        WirePayload::Decision { .. } => "admission",
+        WirePayload::Action(_) => match ev.origin {
+            ControlOrigin::Controller => "autoscale",
+            ControlOrigin::Placement => "migration",
+            ControlOrigin::Gate => "gate",
+            ControlOrigin::Admission => "admission",
+            ControlOrigin::Scripted => "scripted",
+        },
+    }
+}
+
+/// Whether `ev` touches stream `sid` (stream-scoped payloads) or every
+/// stream (device-scoped actions: pool capacity moved under everyone).
+fn touches_stream(ev: &WireEvent, sid: usize) -> bool {
+    match &ev.payload {
+        WirePayload::Gate { stream, .. } | WirePayload::Decision { stream, .. } => *stream == sid,
+        WirePayload::Action(a) => match a {
+            ControlAction::AttachStream(_) => false,
+            ControlAction::DetachStream(id) => *id == sid,
+            ControlAction::SwapModel { stream, .. } => *stream == sid,
+            ControlAction::AttachDevice(_) | ControlAction::DetachDevice(_) => true,
+        },
+    }
+}
+
+/// Join delivered traces against the run's wire log: bucket each
+/// frame's end-to-end latency by the class of the most recent event
+/// touching its stream at or before capture time. An exact per-frame
+/// gate verdict wins outright; frames no event ever touched bucket
+/// under `"none"`. Returns `class → latency samples`, deterministic
+/// (BTreeMap, log order).
+pub fn attribute_latency(
+    traces: &[FrameTrace],
+    log: &EventLog,
+) -> BTreeMap<&'static str, Percentiles> {
+    // Exact (stream, frame) gate verdicts.
+    let gated: BTreeSet<(usize, u64)> = log
+        .events
+        .iter()
+        .filter_map(|e| match &e.payload {
+            WirePayload::Gate { stream, frame, .. } => Some((*stream, *frame)),
+            _ => None,
+        })
+        .collect();
+    let mut out: BTreeMap<&'static str, Percentiles> = BTreeMap::new();
+    for t in traces {
+        let Some(e2e) = t.e2e() else { continue };
+        let class = if gated.contains(&(t.stream, t.frame)) {
+            "gate"
+        } else {
+            log.events
+                .iter()
+                .rev()
+                .find(|e| e.at <= t.capture + 1e-12 && touches_stream(e, t.stream))
+                .map(origin_class)
+                .unwrap_or("none")
+        };
+        out.entry(class).or_default().push(e2e);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::admission::Decision;
+    use crate::gate::GateVerdict;
+
+    fn delivered(stream: usize, frame: u64, capture: f64) -> FrameTrace {
+        FrameTrace {
+            stream,
+            frame,
+            capture,
+            admit: capture,
+            detect_start: Some(capture + 0.2),
+            detect_end: Some(capture + 0.5),
+            deliver: Some(capture + 0.6),
+            outcome: TraceOutcome::Delivered,
+            rung: Some(0),
+            device: Some(0),
+        }
+    }
+
+    #[test]
+    fn stage_durations_partition_e2e_exactly() {
+        let t = delivered(0, 3, 1.5);
+        let stages = t.stage_seconds().expect("stages");
+        let e2e = t.e2e().expect("e2e");
+        assert!((stages.iter().sum::<f64>() - e2e).abs() < 1e-12);
+        assert_eq!(stages[0], 0.0);
+        assert!((stages[1] - 0.2).abs() < 1e-12);
+        assert!((stages[2] - 0.3).abs() < 1e-12);
+        assert!((stages[3] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dropped_frames_have_no_stage_partition_but_keep_their_reason() {
+        let t = FrameTrace {
+            stream: 1,
+            frame: 9,
+            capture: 2.0,
+            admit: 2.0,
+            detect_start: None,
+            detect_end: None,
+            deliver: Some(2.4),
+            outcome: TraceOutcome::DroppedGate,
+            rung: None,
+            device: None,
+        };
+        assert_eq!(t.stage_seconds(), None);
+        assert_eq!(t.e2e(), Some(0.4));
+        assert_eq!(t.outcome.label(), "gate");
+    }
+
+    #[test]
+    fn p99_breakdown_sums_to_the_p99_frame() {
+        let traces: Vec<FrameTrace> = (0..100)
+            .map(|i| {
+                let mut t = delivered(0, i, i as f64 * 0.1);
+                // Frame 99 is the slowpoke: a long queue wait.
+                if i == 99 {
+                    t.detect_start = Some(t.capture + 3.0);
+                    t.detect_end = Some(t.capture + 3.3);
+                    t.deliver = Some(t.capture + 3.4);
+                }
+                t
+            })
+            .collect();
+        let b = p99_breakdown(&traces).expect("breakdown");
+        assert_eq!(b.delivered, 100);
+        assert!((b.stages.iter().sum::<f64>() - b.e2e_p99).abs() < 1e-12);
+        assert!((b.e2e_p99 - 3.4).abs() < 1e-12);
+        assert!(b.stages[1] > b.stages[2], "queue dominates: {:?}", b.stages);
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_line() {
+        let traces = vec![delivered(0, 0, 0.0), delivered(1, 1, 0.5)];
+        let jsonl = traces_jsonl(&traces);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).expect("parse");
+            assert!(v.get("stream").is_some());
+            assert_eq!(v.get("outcome").and_then(Json::as_str), Some("delivered"));
+        }
+    }
+
+    #[test]
+    fn record_traces_populates_the_standard_schema() {
+        let mut reg = Registry::new();
+        let mut traces = vec![delivered(0, 0, 0.0)];
+        traces.push(FrameTrace {
+            outcome: TraceOutcome::DroppedStride,
+            detect_start: None,
+            detect_end: None,
+            deliver: None,
+            ..delivered(0, 1, 0.1)
+        });
+        record_traces(&mut reg, &traces);
+        assert_eq!(
+            reg.counter(&MetricKey::with_labels("eva_frames_total", &[("outcome", "delivered")])),
+            1
+        );
+        assert_eq!(
+            reg.counter(&MetricKey::with_labels("eva_frames_total", &[("outcome", "stride")])),
+            1
+        );
+        for stage in STAGES {
+            let h = reg
+                .histogram(&MetricKey::with_labels("eva_stage_seconds", &[("stage", stage)]))
+                .expect(stage);
+            assert_eq!(h.count(), 1, "{stage}");
+        }
+    }
+
+    #[test]
+    fn attribution_joins_traces_with_the_event_log() {
+        let mut log = EventLog::new();
+        // Stream 0 frame 5 gets an exact gate verdict; stream 1 is
+        // admitted (decision at t=0); a device attaches at t=0.35 with
+        // Controller origin (autoscale class) touching every stream.
+        log.push(WireEvent::gate(0.5, 0, 5, GateVerdict::Skip));
+        log.push(WireEvent::decision(0.0, 1, Decision::Admit { share: 5.0 }));
+        log.push(WireEvent::action(
+            0.35,
+            ControlOrigin::Controller,
+            ControlAction::AttachDevice(crate::device::DeviceInstance::new(
+                crate::device::DeviceKind::FastCpu,
+                crate::device::DetectorModelId::Yolov3,
+                7,
+            )),
+        ));
+        let traces = vec![
+            delivered(0, 5, 0.5), // exact gate hit
+            delivered(1, 0, 0.1), // after its admission decision, before the attach
+            delivered(1, 9, 0.9), // after the attach → autoscale
+            delivered(2, 0, 0.0), // untouched stream at t=0... attach at 0.35 is later
+        ];
+        let buckets = attribute_latency(&traces, &log);
+        assert_eq!(buckets.get("gate").map(|p| p.len()), Some(1));
+        assert_eq!(buckets.get("admission").map(|p| p.len()), Some(1));
+        assert_eq!(buckets.get("autoscale").map(|p| p.len()), Some(1));
+        assert_eq!(buckets.get("none").map(|p| p.len()), Some(1));
+    }
+
+    #[test]
+    fn origin_class_covers_the_vocabulary() {
+        let gate = WireEvent::gate(0.0, 0, 0, GateVerdict::Skip);
+        assert_eq!(origin_class(&gate), "gate");
+        let dec = WireEvent::decision(0.0, 0, Decision::Admit { share: 1.0 });
+        assert_eq!(origin_class(&dec), "admission");
+        let mig = WireEvent::action(0.0, ControlOrigin::Placement, ControlAction::DetachStream(0));
+        assert_eq!(origin_class(&mig), "migration");
+        let scale = WireEvent::action(0.0, ControlOrigin::Controller, ControlAction::DetachDevice(0));
+        assert_eq!(origin_class(&scale), "autoscale");
+    }
+}

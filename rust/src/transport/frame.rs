@@ -30,7 +30,10 @@
 //!   begin with the magic are rejected as soon as they are seen.
 //!
 //! All decode failures are fatal for the stream (framing is lost); the
-//! session layer surfaces them as peer loss.
+//! session layer surfaces them as peer loss — but not *silently*: the
+//! decoder keeps per-cause [`DecoderStats`] (bad magic, version
+//! mismatch, oversized, payload errors) so a run report can distinguish
+//! "the peer went away" from "the peer spoke garbage".
 
 use std::fmt;
 
@@ -101,11 +104,40 @@ pub fn encode_frame(msg: &TransportMsg) -> Result<Vec<u8>, FrameError> {
     Ok(out)
 }
 
+/// Per-cause decode accounting, updated by [`FrameDecoder::feed`] and
+/// [`FrameDecoder::try_next`]. Counters saturate rather than wrap.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DecoderStats {
+    /// Complete frames successfully decoded.
+    pub frames_decoded: u64,
+    /// Raw bytes handed to [`FrameDecoder::feed`].
+    pub bytes_fed: u64,
+    /// Streams that desynchronised (bytes that cannot start a frame).
+    pub bad_magic: u64,
+    /// Frames stamped with a codec version other than [`FRAME_VERSION`].
+    pub version_mismatch: u64,
+    /// Length prefixes above [`MAX_PAYLOAD_BYTES`].
+    pub oversized: u64,
+    /// Complete frames whose payload was not a valid [`TransportMsg`].
+    pub payload_errors: u64,
+}
+
+impl DecoderStats {
+    /// Total decode failures across every cause.
+    pub fn errors(&self) -> u64 {
+        self.bad_magic
+            .saturating_add(self.version_mismatch)
+            .saturating_add(self.oversized)
+            .saturating_add(self.payload_errors)
+    }
+}
+
 /// Incremental frame decoder; feed it whatever `read()` returned and
 /// drain complete messages with [`FrameDecoder::try_next`].
 #[derive(Debug, Default)]
 pub struct FrameDecoder {
     buf: Vec<u8>,
+    stats: DecoderStats,
 }
 
 impl FrameDecoder {
@@ -115,6 +147,7 @@ impl FrameDecoder {
 
     /// Buffer more bytes from the stream.
     pub fn feed(&mut self, bytes: &[u8]) {
+        self.stats.bytes_fed = self.stats.bytes_fed.saturating_add(bytes.len() as u64);
         self.buf.extend_from_slice(bytes);
     }
 
@@ -124,6 +157,11 @@ impl FrameDecoder {
         self.buf.len()
     }
 
+    /// Decode accounting so far (frames, bytes, per-cause errors).
+    pub fn stats(&self) -> DecoderStats {
+        self.stats
+    }
+
     /// Decode the next complete frame. `Ok(None)` means the buffer holds
     /// only a frame prefix (possibly empty) — feed more bytes. Errors
     /// are fatal: framing is lost and the stream must be dropped.
@@ -131,11 +169,13 @@ impl FrameDecoder {
         // Validate magic/version as soon as the bytes exist, so garbage
         // is caught even when the stream ends before a full header.
         if self.buf.len() >= 2 && self.buf[..2] != FRAME_MAGIC {
+            self.stats.bad_magic = self.stats.bad_magic.saturating_add(1);
             return Err(FrameError::BadMagic {
                 got: [self.buf[0], self.buf[1]],
             });
         }
         if self.buf.len() >= 3 && self.buf[2] != FRAME_VERSION {
+            self.stats.version_mismatch = self.stats.version_mismatch.saturating_add(1);
             return Err(FrameError::Version { got: self.buf[2] });
         }
         if self.buf.len() < HEADER_BYTES {
@@ -143,16 +183,27 @@ impl FrameDecoder {
         }
         let len = u32::from_be_bytes([self.buf[4], self.buf[5], self.buf[6], self.buf[7]]) as usize;
         if len > MAX_PAYLOAD_BYTES {
+            self.stats.oversized = self.stats.oversized.saturating_add(1);
             return Err(FrameError::Oversized { len });
         }
         if self.buf.len() < HEADER_BYTES + len {
             return Ok(None);
         }
         let payload = &self.buf[HEADER_BYTES..HEADER_BYTES + len];
-        let text = std::str::from_utf8(payload)
-            .map_err(|e| FrameError::Payload(format!("payload is not UTF-8: {e}")))?;
-        let msg = TransportMsg::decode(text).map_err(|e| FrameError::Payload(e.msg))?;
+        let decoded = std::str::from_utf8(payload)
+            .map_err(|e| FrameError::Payload(format!("payload is not UTF-8: {e}")))
+            .and_then(|text| {
+                TransportMsg::decode(text).map_err(|e| FrameError::Payload(e.msg))
+            });
+        let msg = match decoded {
+            Ok(msg) => msg,
+            Err(e) => {
+                self.stats.payload_errors = self.stats.payload_errors.saturating_add(1);
+                return Err(e);
+            }
+        };
         self.buf.drain(..HEADER_BYTES + len);
+        self.stats.frames_decoded = self.stats.frames_decoded.saturating_add(1);
         Ok(Some(msg))
     }
 }
@@ -170,7 +221,7 @@ mod tests {
     /// A random message drawn across every variant, with the f64 fields
     /// exercised on awkward fractional values.
     fn arbitrary_msg(rng: &mut Rng) -> TransportMsg {
-        match rng.below(8) {
+        match rng.below(9) {
             0 => TransportMsg::Hello {
                 shard: rng.below(16) as usize,
                 protocol: TRANSPORT_VERSION,
@@ -195,6 +246,7 @@ mod tests {
                         ..crate::gate::GateConfig::default()
                     }
                 }),
+                telemetry: rng.chance(0.5),
             },
             1 => TransportMsg::Welcome {
                 shard: rng.below(16) as usize,
@@ -241,6 +293,29 @@ mod tests {
                     })
                     .collect(),
             },
+            7 => {
+                let mut snapshot = crate::telemetry::Registry::new();
+                for i in 0..rng.below(3) {
+                    snapshot.inc(
+                        crate::telemetry::MetricKey::with_labels(
+                            "eva_frames_total",
+                            &[("stream", &format!("cam{i}"))],
+                        ),
+                        rng.below(500),
+                    );
+                }
+                for _ in 0..rng.below(8) {
+                    snapshot.observe(
+                        crate::telemetry::MetricKey::new("eva_e2e_seconds"),
+                        rng.range(0.0, 10.0),
+                    );
+                }
+                TransportMsg::Telemetry {
+                    shard: rng.below(16) as usize,
+                    epoch: rng.below(1000) as usize,
+                    snapshot,
+                }
+            }
             _ => TransportMsg::Bye,
         }
     }
@@ -279,6 +354,13 @@ mod tests {
             if dec.buffered() != 0 {
                 return Err(format!("{} stray bytes buffered", dec.buffered()));
             }
+            let stats = dec.stats();
+            if stats.frames_decoded != msgs.len() as u64
+                || stats.bytes_fed != stream.len() as u64
+                || stats.errors() != 0
+            {
+                return Err(format!("clean stream mis-counted: {stats:?}"));
+            }
             Ok(())
         });
     }
@@ -301,9 +383,14 @@ mod tests {
             }
             dec.feed(&frame[cut..]);
             match dec.try_next() {
-                Ok(Some(m)) if m == msg => Ok(()),
-                other => Err(format!("completion failed: {other:?}")),
+                Ok(Some(m)) if m == msg => {}
+                other => return Err(format!("completion failed: {other:?}")),
             }
+            let stats = dec.stats();
+            if stats.frames_decoded != 1 || stats.errors() != 0 {
+                return Err(format!("truncation mis-counted: {stats:?}"));
+            }
+            Ok(())
         });
     }
 
@@ -319,9 +406,14 @@ mod tests {
             let mut dec = FrameDecoder::new();
             dec.feed(&header);
             match dec.try_next() {
-                Err(FrameError::Oversized { len: got }) if got == len as usize => Ok(()),
-                other => Err(format!("expected Oversized, got {other:?}")),
+                Err(FrameError::Oversized { len: got }) if got == len as usize => {}
+                other => return Err(format!("expected Oversized, got {other:?}")),
             }
+            let stats = dec.stats();
+            if stats.oversized != 1 || stats.frames_decoded != 0 || stats.errors() != 1 {
+                return Err(format!("oversized mis-counted: {stats:?}"));
+            }
+            Ok(())
         });
     }
 
@@ -339,9 +431,14 @@ mod tests {
             let mut dec = FrameDecoder::new();
             dec.feed(&frame);
             match dec.try_next() {
-                Err(FrameError::Version { got }) if got == bogus => Ok(()),
-                other => Err(format!("expected Version, got {other:?}")),
+                Err(FrameError::Version { got }) if got == bogus => {}
+                other => return Err(format!("expected Version, got {other:?}")),
             }
+            let stats = dec.stats();
+            if stats.version_mismatch != 1 || stats.frames_decoded != 0 {
+                return Err(format!("version mismatch mis-counted: {stats:?}"));
+            }
+            Ok(())
         });
     }
 
@@ -364,9 +461,14 @@ mod tests {
                 other => return Err(format!("valid frame lost: {other:?}")),
             }
             match dec.try_next() {
-                Err(FrameError::BadMagic { .. }) => Ok(()),
-                other => Err(format!("expected BadMagic after frame, got {other:?}")),
+                Err(FrameError::BadMagic { .. }) => {}
+                other => return Err(format!("expected BadMagic after frame, got {other:?}")),
             }
+            let stats = dec.stats();
+            if stats.frames_decoded != 1 || stats.bad_magic != 1 || stats.errors() != 1 {
+                return Err(format!("garbage mis-counted: {stats:?}"));
+            }
+            Ok(())
         });
     }
 
@@ -384,6 +486,8 @@ mod tests {
         let mut dec = FrameDecoder::new();
         dec.feed(&frame);
         assert!(matches!(dec.try_next(), Err(FrameError::Payload(_))));
+        assert_eq!(dec.stats().payload_errors, 1);
+        assert_eq!(dec.stats().frames_decoded, 0);
         // Non-UTF-8 payloads likewise.
         let mut frame = Vec::new();
         frame.extend_from_slice(&FRAME_MAGIC);
@@ -394,6 +498,8 @@ mod tests {
         let mut dec = FrameDecoder::new();
         dec.feed(&frame);
         assert!(matches!(dec.try_next(), Err(FrameError::Payload(_))));
+        assert_eq!(dec.stats().payload_errors, 1);
+        assert_eq!(dec.stats().bytes_fed, frame.len() as u64);
     }
 
     #[test]

@@ -31,10 +31,12 @@ pub mod msg;
 pub mod net;
 pub mod serve;
 
-pub use frame::{encode_frame, FrameDecoder, FrameError, FRAME_VERSION, MAX_PAYLOAD_BYTES};
+pub use frame::{
+    encode_frame, DecoderStats, FrameDecoder, FrameError, FRAME_VERSION, MAX_PAYLOAD_BYTES,
+};
 pub use msg::{SliceStream, TransportMsg, TRANSPORT_VERSION};
 pub use net::{
-    connect, connect_with_backoff, Endpoint, FrameConn, Listener, TransportError,
+    connect, connect_with_backoff, ConnStats, Endpoint, FrameConn, Listener, TransportError,
 };
 pub use serve::{
     drive_remote_serve, run_serve_consumer, serve_from_log, specs_from_log, RemoteServeOutcome,

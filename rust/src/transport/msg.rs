@@ -19,6 +19,9 @@
 //!   virtual-time serving: the coordinator ships per-stream arrival
 //!   quotas and the epoch seed (as a decimal string — u64 seeds do not
 //!   survive a JSON f64), the shard answers with per-stream outcomes.
+//! * [`TransportMsg::Telemetry`] — an optional per-epoch metric
+//!   snapshot ([`crate::telemetry::Registry`]) a shard ships ahead of
+//!   its `Slice` when the coordinator's `Hello` asked for one.
 //! * [`TransportMsg::Bye`] — orderly session end; anything else ending
 //!   the connection is peer loss.
 //!
@@ -37,6 +40,7 @@ use crate::control::{WireError, WireEvent};
 use crate::fleet::admission::AdmissionPolicy;
 use crate::gate::GateConfig;
 use crate::shard::Headroom;
+use crate::telemetry::Registry;
 use crate::util::json::Json;
 
 /// Session-protocol version stamped on every [`TransportMsg::Hello`];
@@ -68,7 +72,10 @@ pub enum TransportMsg {
     /// shard serves its static pool. `gate` likewise arms per-frame
     /// motion gating ([`crate::gate`]) on the shard; `None` (and a
     /// missing field, for pre-gate peers) means every frame is
-    /// detected.
+    /// detected. `telemetry` asks the shard to ship a
+    /// [`TransportMsg::Telemetry`] snapshot ahead of every `Slice`;
+    /// `false` (and a missing field, for pre-telemetry peers) means
+    /// none are sent.
     Hello {
         shard: usize,
         protocol: i64,
@@ -76,6 +83,7 @@ pub enum TransportMsg {
         roster: Vec<String>,
         autoscale: Option<AutoscaleConfig>,
         gate: Option<GateConfig>,
+        telemetry: bool,
     },
     /// Shard → coordinator: handshake reply with the shard's
     /// util-adjusted admission capacity (FPS).
@@ -109,6 +117,15 @@ pub enum TransportMsg {
         /// Frames processed summed over the shard's pool.
         frames: u64,
         streams: Vec<SliceStream>,
+    },
+    /// Shard → coordinator: the shard's metric snapshot after serving
+    /// `epoch`. Sent ahead of the epoch's `Slice`, and only when the
+    /// session's `Hello` set `telemetry`; each snapshot supersedes the
+    /// previous one (cumulative counters, not deltas).
+    Telemetry {
+        shard: usize,
+        epoch: usize,
+        snapshot: Registry,
     },
     /// Orderly session end.
     Bye,
@@ -149,6 +166,9 @@ impl TransportMsg {
             TransportMsg::Slice { epoch, streams, .. } => {
                 format!("slice(epoch {epoch}, {} streams)", streams.len())
             }
+            TransportMsg::Telemetry { shard, epoch, .. } => {
+                format!("telemetry(shard {shard}, epoch {epoch})")
+            }
             TransportMsg::Bye => "bye".to_string(),
         }
     }
@@ -163,6 +183,7 @@ impl TransportMsg {
                 roster,
                 autoscale,
                 gate,
+                telemetry,
             } => {
                 o.insert("msg".to_string(), Json::Str("hello".to_string()));
                 o.insert("shard".to_string(), Json::Num(*shard as f64));
@@ -177,6 +198,11 @@ impl TransportMsg {
                 }
                 if let Some(cfg) = gate {
                     o.insert("gate".to_string(), gate_config_to_json(cfg));
+                }
+                // Only a requesting coordinator writes the key, so the
+                // Hello stays byte-identical for pre-telemetry peers.
+                if *telemetry {
+                    o.insert("telemetry".to_string(), Json::Bool(true));
                 }
             }
             TransportMsg::Welcome { shard, capacity } => {
@@ -260,6 +286,16 @@ impl TransportMsg {
                     ),
                 );
             }
+            TransportMsg::Telemetry {
+                shard,
+                epoch,
+                snapshot,
+            } => {
+                o.insert("msg".to_string(), Json::Str("telemetry".to_string()));
+                o.insert("shard".to_string(), Json::Num(*shard as f64));
+                o.insert("epoch".to_string(), Json::Num(*epoch as f64));
+                o.insert("snapshot".to_string(), snapshot.to_json());
+            }
             TransportMsg::Bye => {
                 o.insert("msg".to_string(), Json::Str("bye".to_string()));
             }
@@ -297,6 +333,14 @@ impl TransportMsg {
                     None | Some(Json::Null) => None,
                     Some(j) => Some(gate_config_from_json(j)?),
                 };
+                // And again for the telemetry request: pre-telemetry
+                // peers omit the key, meaning "ship no snapshots".
+                let telemetry = match v.get("telemetry") {
+                    None | Some(Json::Null) => false,
+                    Some(j) => j
+                        .as_bool()
+                        .ok_or_else(|| WireError::new("hello telemetry must be a bool"))?,
+                };
                 Ok(TransportMsg::Hello {
                     shard: req_usize(v, "shard")?,
                     protocol: req_u64(v, "protocol")? as i64,
@@ -304,6 +348,7 @@ impl TransportMsg {
                     roster,
                     autoscale,
                     gate,
+                    telemetry,
                 })
             }
             "welcome" => Ok(TransportMsg::Welcome {
@@ -377,6 +422,16 @@ impl TransportMsg {
                     streams,
                 })
             }
+            "telemetry" => {
+                let snap = v
+                    .get("snapshot")
+                    .ok_or_else(|| WireError::new("missing or mistyped field \"snapshot\""))?;
+                Ok(TransportMsg::Telemetry {
+                    shard: req_usize(v, "shard")?,
+                    epoch: req_usize(v, "epoch")?,
+                    snapshot: Registry::from_json(snap)?,
+                })
+            }
             "bye" => Ok(TransportMsg::Bye),
             other => Err(WireError::new(format!("unknown transport message {other:?}"))),
         }
@@ -415,6 +470,7 @@ mod tests {
             roster: vec!["cam0".to_string(), "cam1".to_string()],
             autoscale: None,
             gate: None,
+            telemetry: false,
         });
         roundtrip(&TransportMsg::Hello {
             shard: 0,
@@ -431,6 +487,7 @@ mod tests {
                 tracker_stretch: 2.5,
                 ..GateConfig::default()
             }),
+            telemetry: true,
         });
         roundtrip(&TransportMsg::Welcome {
             shard: 1,
@@ -467,6 +524,17 @@ mod tests {
                 latencies: vec![0.125, 0.5, 1.0],
             }],
         });
+        let mut snapshot = Registry::new();
+        snapshot.inc(
+            crate::telemetry::MetricKey::with_labels("eva_frames_total", &[("shard", "1")]),
+            37,
+        );
+        snapshot.observe(crate::telemetry::MetricKey::new("eva_e2e_seconds"), 0.125);
+        roundtrip(&TransportMsg::Telemetry {
+            shard: 1,
+            epoch: 3,
+            snapshot,
+        });
         roundtrip(&TransportMsg::Bye);
     }
 
@@ -481,6 +549,7 @@ mod tests {
             roster: vec![],
             autoscale: None,
             gate: None,
+            telemetry: false,
         };
         let text = msg.encode();
         assert!(!text.contains("autoscale"), "None must omit the key: {text}");
@@ -502,12 +571,46 @@ mod tests {
             roster: vec!["cam0".to_string()],
             autoscale: None,
             gate: None,
+            telemetry: false,
         };
         let text = msg.encode();
         assert!(!text.contains("gate"), "None must omit the key: {text}");
         assert_eq!(TransportMsg::decode(&text).unwrap(), msg);
         let with_null = text.replacen("\"msg\"", "\"gate\":null,\"msg\"", 1);
         assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
+    }
+
+    #[test]
+    fn hello_without_telemetry_key_decodes_as_false() {
+        // Pre-telemetry peers omit the key entirely; decode must not
+        // reject their Hello (the `Hello.autoscale` interop contract,
+        // applied to the telemetry request flag).
+        let msg = TransportMsg::Hello {
+            shard: 1,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::default(),
+            roster: vec!["cam0".to_string()],
+            autoscale: None,
+            gate: None,
+            telemetry: false,
+        };
+        let text = msg.encode();
+        assert!(
+            !text.contains("telemetry"),
+            "false must omit the key: {text}"
+        );
+        assert_eq!(TransportMsg::decode(&text).unwrap(), msg);
+        // An explicit null reads the same way; an explicit true flips it.
+        let with_null = text.replacen("\"msg\"", "\"telemetry\":null,\"msg\"", 1);
+        assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
+        let with_true = text.replacen("\"msg\"", "\"telemetry\":true,\"msg\"", 1);
+        match TransportMsg::decode(&with_true).unwrap() {
+            TransportMsg::Hello { telemetry, .. } => assert!(telemetry),
+            other => panic!("not a hello: {other:?}"),
+        }
+        // A non-bool value is malformed, not silently coerced.
+        let with_num = text.replacen("\"msg\"", "\"telemetry\":3,\"msg\"", 1);
+        assert!(TransportMsg::decode(&with_num).is_err());
     }
 
     #[test]
@@ -544,6 +647,7 @@ mod tests {
                 roster: (0..rng.below(4)).map(|i| format!("cam{i}")).collect(),
                 autoscale: rng.chance(0.3).then(AutoscaleConfig::default),
                 gate,
+                telemetry: rng.chance(0.5),
             };
             let bytes = encode_frame(&msg).map_err(|e| e.to_string())?;
             let mut dec = FrameDecoder::new();
@@ -658,5 +762,11 @@ mod tests {
             quotas: vec![(0, 1)],
         };
         assert_eq!(tick.label(), "tick(epoch 1, 1 streams)");
+        let snap = TransportMsg::Telemetry {
+            shard: 2,
+            epoch: 5,
+            snapshot: Registry::new(),
+        };
+        assert_eq!(snap.label(), "telemetry(shard 2, epoch 5)");
     }
 }

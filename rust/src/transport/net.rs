@@ -22,7 +22,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
-use crate::transport::frame::{encode_frame, FrameDecoder, FrameError};
+use crate::transport::frame::{encode_frame, DecoderStats, FrameDecoder, FrameError};
 use crate::transport::msg::TransportMsg;
 
 /// Default blocking-read deadline on accepted/dialled sockets.
@@ -142,10 +142,24 @@ impl Write for Stream {
     }
 }
 
+/// Per-connection traffic accounting: what this side sent plus the
+/// receive decoder's [`DecoderStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConnStats {
+    /// Frames written (send side).
+    pub sent_frames: u64,
+    /// Bytes written, headers included (send side).
+    pub sent_bytes: u64,
+    /// Receive-side decode accounting.
+    pub recv: DecoderStats,
+}
+
 /// One framed, blocking transport connection.
 pub struct FrameConn {
     stream: Stream,
     decoder: FrameDecoder,
+    sent_frames: u64,
+    sent_bytes: u64,
 }
 
 impl FrameConn {
@@ -154,6 +168,8 @@ impl FrameConn {
         Ok(FrameConn {
             stream,
             decoder: FrameDecoder::new(),
+            sent_frames: 0,
+            sent_bytes: 0,
         })
     }
 
@@ -162,11 +178,22 @@ impl FrameConn {
         self.stream.set_read_timeout(t)
     }
 
+    /// Traffic accounting so far, both directions.
+    pub fn stats(&self) -> ConnStats {
+        ConnStats {
+            sent_frames: self.sent_frames,
+            sent_bytes: self.sent_bytes,
+            recv: self.decoder.stats(),
+        }
+    }
+
     /// Send one message as a frame (write-all + flush).
     pub fn send(&mut self, msg: &TransportMsg) -> Result<(), TransportError> {
         let frame = encode_frame(msg)?;
         self.stream.write_all(&frame)?;
         self.stream.flush()?;
+        self.sent_frames = self.sent_frames.saturating_add(1);
+        self.sent_bytes = self.sent_bytes.saturating_add(frame.len() as u64);
         Ok(())
     }
 
@@ -309,6 +336,13 @@ mod tests {
             assert_eq!(conn.recv().expect("recv"), ping(epoch));
         }
         server.join().unwrap();
+        // Both directions are accounted: 3 frames out, 3 echoed back.
+        let stats = conn.stats();
+        assert_eq!(stats.sent_frames, 3);
+        assert_eq!(stats.recv.frames_decoded, 3);
+        assert_eq!(stats.recv.errors(), 0);
+        assert!(stats.sent_bytes > 3 * crate::transport::frame::HEADER_BYTES as u64);
+        assert_eq!(stats.recv.bytes_fed, stats.sent_bytes, "echo symmetry");
     }
 
     #[test]

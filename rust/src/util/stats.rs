@@ -147,24 +147,36 @@ impl Percentiles {
         self.samples.is_empty()
     }
 
+    /// The raw samples, in push order (telemetry snapshots serialise
+    /// and merge reservoirs through this).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     /// Percentile in [0, 100], nearest-rank on the sorted samples.
-    pub fn pct(&mut self, p: f64) -> f64 {
+    ///
+    /// Takes `&self` so report accessors stay read-only: the already-
+    /// sorted fast path indexes directly; otherwise a local sorted copy
+    /// answers the query (queries happen at report granularity, so the
+    /// copy is cheap relative to keeping every caller `&mut`).
+    pub fn pct(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            self.sorted = true;
-        }
         let rank = ((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
-        self.samples[rank.min(self.samples.len() - 1)]
+        let rank = rank.min(self.samples.len() - 1);
+        if self.sorted {
+            return self.samples[rank];
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        sorted[rank]
     }
 
-    pub fn p50(&mut self) -> f64 {
+    pub fn p50(&self) -> f64 {
         self.pct(50.0)
     }
-    pub fn p99(&mut self) -> f64 {
+    pub fn p99(&self) -> f64 {
         self.pct(99.0)
     }
     pub fn mean(&self) -> f64 {
@@ -254,8 +266,22 @@ mod tests {
 
     #[test]
     fn percentiles_empty() {
-        let mut p = Percentiles::new();
+        let p = Percentiles::new();
         assert_eq!(p.p50(), 0.0);
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn percentiles_answer_without_mutation() {
+        // pct takes &self: unsorted reservoirs answer from a local copy
+        // and the stored push order is untouched.
+        let mut p = Percentiles::new();
+        for x in [3.0, 1.0, 2.0] {
+            p.push(x);
+        }
+        let p = p; // freeze: queries must not need &mut
+        assert_eq!(p.pct(0.0), 1.0);
+        assert_eq!(p.pct(100.0), 3.0);
+        assert_eq!(p.samples(), &[3.0, 1.0, 2.0]);
     }
 }

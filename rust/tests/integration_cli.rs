@@ -124,6 +124,94 @@ fn gate_json_mode_emits_exactly_one_parseable_document() {
 }
 
 #[test]
+fn trace_subcommand_honours_the_usage_contract() {
+    // Malformed invocations of the trace subcommand follow the same
+    // exit-2 usage contract as every other subcommand.
+    let out = eva(&["trace", "--bogus-flag"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown option --bogus-flag"), "{}", stderr(&out));
+
+    let out = eva(&["trace", "extra"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unexpected argument \"extra\""), "{}", stderr(&out));
+
+    let out = eva(&["trace", "--metrics-out"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--metrics-out needs a value"), "{}", stderr(&out));
+}
+
+#[test]
+fn telemetry_flags_are_rejected_where_they_cannot_apply() {
+    // `--metrics-out`/`--trace-out` on a subcommand that never produces
+    // a registry / span traces is a usage error (exit 2), not a flag
+    // that silently does nothing.
+    let out = eva(&["nselect", "--metrics-out", "/tmp/eva_m.prom"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--metrics-out does not apply"), "{}", stderr(&out));
+
+    let out = eva(&["autoscale", "--trace-out", "/tmp/eva_t.jsonl"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--trace-out does not apply"), "{}", stderr(&out));
+
+    // Shards aggregate per-shard registries but have no single trace
+    // stream: `--trace-out` is a usage error there.
+    let out = eva(&["shard", "--trace-out", "/tmp/eva_t.jsonl"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--trace-out does not apply"), "{}", stderr(&out));
+
+    // Understood subcommand, but a sub-scenario with no single run to
+    // dump: runtime failure (exit 1), not usage (exit 2).
+    let out = eva(&["shard", "--scenario", "split", "--metrics-out", "/tmp/eva_m.prom"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--metrics-out applies only to --scenario run"), "{}", stderr(&out));
+
+    let out = eva(&["gate", "--metrics-out", "/tmp/eva_m.prom"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("single gate preset"), "{}", stderr(&out));
+}
+
+#[test]
+fn trace_json_mode_emits_exactly_one_parseable_document() {
+    // CI uploads this stdout as BENCH_telemetry.json: it must be pure
+    // JSON with every section present.
+    let out = eva(&["trace", "--json"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    let json = eva::util::json::Json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("trace --json stdout is not pure JSON ({e}): {text}"));
+    for section in ["stage_budget", "attribution", "overhead", "registry"] {
+        assert!(json.get(section).is_some(), "missing {section}: {text}");
+    }
+}
+
+#[test]
+fn trace_writes_metrics_and_span_trace_artifacts() {
+    let dir = std::env::temp_dir();
+    let metrics_path = dir.join(format!("eva_cli_metrics_{}.prom", std::process::id()));
+    let traces_path = dir.join(format!("eva_cli_traces_{}.jsonl", std::process::id()));
+    let out = eva(&[
+        "trace",
+        "--metrics-out",
+        metrics_path.to_str().unwrap(),
+        "--trace-out",
+        traces_path.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+
+    let metrics = std::fs::read_to_string(&metrics_path).expect("metrics file written");
+    assert!(metrics.contains("eva_frames_total"), "{metrics}");
+    let traces = std::fs::read_to_string(&traces_path).expect("trace file written");
+    let first = traces.lines().next().expect("at least one span trace");
+    let line = eva::util::json::Json::parse(first)
+        .unwrap_or_else(|e| panic!("trace line is not JSON ({e}): {first}"));
+    assert!(line.get("stream").is_some(), "{first}");
+    assert!(line.get("outcome").is_some(), "{first}");
+
+    let _ = std::fs::remove_file(&metrics_path);
+    let _ = std::fs::remove_file(&traces_path);
+}
+
+#[test]
 fn runtime_failure_keeps_exit_1_distinct_from_usage_errors() {
     // A known subcommand with a semantically invalid value: parsed fine,
     // fails at run time — exit 1, not the usage exit 2.

@@ -77,14 +77,11 @@ fn admission_bounds_p99_latency_under_2x_overload() {
             s.decision
         );
     }
-    // (percentile queries need mutable access)
-    let mut enforced = enforced;
-    for s in enforced.streams.iter_mut() {
+    for s in enforced.streams.iter() {
         enforced_p99.push(s.metrics.latency.p99());
     }
-    let mut admit_all = admit_all;
     let mut admit_all_p99 = Vec::new();
-    for s in admit_all.streams.iter_mut() {
+    for s in admit_all.streams.iter() {
         admit_all_p99.push(s.metrics.latency.p99());
     }
 
@@ -210,13 +207,13 @@ fn fleet_report_json_schema_locks_key_fields() {
         uniform_streams(6, 5.0, 200, 4),
     )
     .with_seed(71);
-    let mut report = run_fleet(&scenario);
+    let report = run_fleet(&scenario);
 
-    // Ground truth from the in-memory report (percentile queries sort
-    // lazily, hence the mutable pass first).
+    // Ground truth from the in-memory report (percentile queries are
+    // read-only: they sort a local copy).
     let expected: Vec<(String, f64, f64)> = report
         .streams
-        .iter_mut()
+        .iter()
         .map(|s| (s.name.clone(), s.metrics.latency.p99(), s.metrics.drop_rate()))
         .collect();
     let expected_fairness = report.fairness();

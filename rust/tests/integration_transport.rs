@@ -145,6 +145,40 @@ fn sharded_autoscale_parity_is_exact_over_tcp_and_uds() {
     }
 }
 
+/// Telemetry pin: the metric registry a remote coordinator assembles
+/// from per-epoch `TransportMsg::Telemetry` snapshots over tcp and uds
+/// is *byte-identical* (JSON snapshot and text exposition alike) to the
+/// in-process co-simulation's — under autoscale, where shard-local
+/// scale actions also feed the registry. Seed comes from
+/// `EVA_SOAK_SEED` when set, same as the parity pin above.
+#[test]
+fn telemetry_snapshots_match_inproc_exactly_with_autoscale() {
+    let seed = std::env::var("EVA_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(137);
+    let scenario = eva::experiments::shard::overload_scenario(seed, true).with_telemetry();
+    let inproc = run_sharded(&scenario);
+    assert!(
+        inproc.telemetry.counter_family_total("eva_frames_total") > 0,
+        "seed {seed}: traced run must populate the registry"
+    );
+    for transport in [RemoteTransport::Tcp, RemoteTransport::Uds] {
+        let remote = run_sharded_remote(&scenario, transport).expect("remote traced run");
+        let label = transport.label();
+        assert_eq!(
+            remote.telemetry.to_json().to_string(),
+            inproc.telemetry.to_json().to_string(),
+            "{label} seed {seed}: wire-assembled registry snapshot must match in-process exactly"
+        );
+        assert_eq!(
+            remote.telemetry.text_exposition(),
+            inproc.telemetry.text_exposition(),
+            "{label} seed {seed}"
+        );
+    }
+}
+
 /// The remote serve consumer takes exactly the admission decisions the
 /// in-process wall-clock engine takes for the same specs and pool, and
 /// ships them back as decoded control frames.
