@@ -1,0 +1,92 @@
+//! Coordinator-scale bench: per-epoch planning cost and control-plane
+//! bytes at 100k+ simulated streams.
+//!
+//! Asserts the acceptance shapes on deterministic counters — grouped
+//! planner reads grow sub-linearly in shard count while the flat
+//! planner is exactly linear, and the binary digest codec holds a ≥3×
+//! payload-size advantage over JSON at the 102 400-stream point — then
+//! measures what one coordinator epoch costs in wall-clock.
+
+use eva::experiments::scale::{coordinator_scale_at, scale_point};
+use eva::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::standard();
+
+    // The ladder: 4× shard steps at 25 streams per shard, topping out
+    // at 4096 shards × 25 = 102 400 simulated streams.
+    let (table, points) = coordinator_scale_at(&[256, 1024, 4096], 25, 47);
+    print!("{}", table.render());
+
+    for w in points.windows(2) {
+        let (small, big) = (&w[0], &w[1]);
+        assert_eq!(
+            big.flat.reads(),
+            4 * small.flat.reads(),
+            "flat planning must be exactly linear in shard count"
+        );
+        let growth = big.grouped.reads() as f64 / small.grouped.reads() as f64;
+        assert!(
+            growth < 2.5,
+            "grouped reads grew {growth:.2}x on a 4x fleet ({} -> {} shards)",
+            small.shards,
+            big.shards,
+        );
+    }
+    let top = points.last().expect("ladder has points");
+    assert!(
+        top.streams >= 100_000,
+        "top rung must cover 100k+ streams, got {}",
+        top.streams
+    );
+    assert!(
+        top.grouped.reads() < top.flat.reads() / 4,
+        "grouped must read far fewer digests than flat at scale: {} vs {}",
+        top.grouped.reads(),
+        top.flat.reads(),
+    );
+    println!(
+        "shape OK: grouped planning is sub-linear (top rung reads {} of {} flat at {} streams)",
+        top.grouped.reads(),
+        top.flat.reads(),
+        top.streams,
+    );
+
+    assert!(
+        top.json_digest_bytes >= 3 * top.binary_digest_bytes,
+        "binary digests must be >=3x smaller than JSON at scale: {} vs {}",
+        top.binary_digest_bytes,
+        top.json_digest_bytes,
+    );
+    assert!(
+        top.delta_ratio() >= 3.0,
+        "delta stream must be >=3x smaller than snapshots: {} vs {}",
+        top.delta_bytes,
+        top.snapshot_bytes,
+    );
+    println!(
+        "shape OK: binary digests {:.2}x smaller than JSON, deltas {:.2}x smaller than snapshots",
+        top.codec_ratio(),
+        top.delta_ratio(),
+    );
+
+    // Wall-clock corroboration for the counters above: one coordinator
+    // epoch's worth of work (flat + grouped plan, digest + delta
+    // encoding) at two fleet sizes.
+    bench.run(
+        "scale: coordinator epoch at 1024 shards (25.6k streams)",
+        Some(1024.0 * 25.0),
+        || {
+            let p = scale_point(1024, 25, 47);
+            black_box(p.grouped.reads() as u64)
+        },
+    );
+    bench.run(
+        "scale: coordinator epoch at 4096 shards (102.4k streams)",
+        Some(4096.0 * 25.0),
+        || {
+            let p = scale_point(4096, 25, 47);
+            black_box(p.grouped.reads() as u64)
+        },
+    );
+}

@@ -1,0 +1,1016 @@
+//! Compact binary payload codec for control-plane hot-path frames.
+//!
+//! JSON ([`crate::control::wire`]) stays the audit/debug format; this
+//! module is the *transport* format for the frames a 100k-stream
+//! coordinator sends every epoch — digests, ticks, slices and control
+//! events — behind the [`crate::transport::frame::FRAME_VERSION_BINARY`]
+//! frame version byte. Design:
+//!
+//! * **varint integers** — LEB128, so stream/shard ids, epochs, frame
+//!   counts and quotas cost 1–2 bytes instead of their decimal JSON
+//!   rendering plus a quoted key.
+//! * **adaptive floats** — a rate/timestamp whose value survives an
+//!   `f32` round trip is shipped as 4 bytes (tag `0`), everything else
+//!   as full 8-byte `f64` bits (tag `1`). Decoding is therefore *exact*:
+//!   the value read equals the value written bit for bit, which is what
+//!   keeps the replayable [`crate::control::EventLog`] contract intact —
+//!   a binary-transported event decodes to the identical [`WireEvent`]
+//!   the JSON path produces.
+//! * **interned strings** — each message carries a string table; the
+//!   first occurrence of a name is written literally, every repeat is a
+//!   1–2 byte back-reference (rosters and per-stream labels repeat
+//!   heavily at scale).
+//! * **structured configs ride as compact JSON** — the rarely-sent,
+//!   deeply nested payloads (admission policy, autoscale/gate configs,
+//!   telemetry snapshots) are embedded as their existing compact-JSON
+//!   encodings, so their validation rules and exact round-trip semantics
+//!   are shared with the audit path by construction.
+//!
+//! Exact parity with the JSON codec is property-tested here and in
+//! [`crate::transport::frame`]: for every [`WireEvent`] and
+//! [`TransportMsg`], `decode(encode(m)) == m`, and both codecs decode to
+//! equal values.
+
+use crate::autoscale::policy::AutoscaleConfig;
+use crate::control::plane::{ControlAction, ControlOrigin};
+use crate::control::wire::{
+    admission_from_json, admission_to_json, autoscale_config_from_json, autoscale_config_to_json,
+    gate_config_from_json, gate_config_to_json, WireError, WireEvent, WirePayload,
+};
+use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use crate::fleet::admission::Decision;
+use crate::fleet::stream::StreamSpec;
+use crate::gate::{GateConfig, GateVerdict};
+use crate::telemetry::Registry;
+use crate::transport::msg::{SliceStream, TransportMsg};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Version byte leading every standalone binary payload; decode rejects
+/// a mismatch (same role as the JSON envelope's `format` stamp).
+pub const BINARY_VERSION: u8 = 1;
+
+// ---- primitive writer --------------------------------------------------
+
+/// Append-only binary writer with LEB128 varints, adaptive floats and a
+/// per-message string intern table.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+    interned: HashMap<String, u64>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, b: u8) {
+        self.buf.push(b);
+    }
+
+    /// LEB128 unsigned varint: 7 payload bits per byte, high bit = more.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// Raw little-endian u64 (bit-exact seeds).
+    pub fn u64_raw(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bool(&mut self, b: bool) {
+        self.buf.push(b as u8);
+    }
+
+    /// Adaptive float: tag `0` + 4 LE bytes when the value survives an
+    /// f32 round trip (most rates and small timestamps), tag `1` + 8 LE
+    /// bytes otherwise. Decoding is bit-exact either way.
+    pub fn f64(&mut self, v: f64) {
+        let narrow = v as f32;
+        if f64::from(narrow).to_bits() == v.to_bits() {
+            self.buf.push(0);
+            self.buf.extend_from_slice(&narrow.to_le_bytes());
+        } else {
+            self.buf.push(1);
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Interned string: varint `0` + len + UTF-8 on first sight, varint
+    /// `index + 1` back-reference on every repeat.
+    pub fn string(&mut self, s: &str) {
+        if let Some(&idx) = self.interned.get(s) {
+            self.varint(idx + 1);
+            return;
+        }
+        let idx = self.interned.len() as u64;
+        self.interned.insert(s.to_string(), idx);
+        self.varint(0);
+        self.varint(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// A nested structured payload as its compact JSON text.
+    pub fn json(&mut self, v: &Json) {
+        let text = v.to_string();
+        self.varint(text.len() as u64);
+        self.buf.extend_from_slice(text.as_bytes());
+    }
+}
+
+// ---- primitive reader --------------------------------------------------
+
+/// Mirror of [`ByteWriter`]; every read validates bounds and surfaces
+/// malformed input as [`WireError`] (never a panic).
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    interned: Vec<String>,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader {
+            buf,
+            pos: 0,
+            interned: Vec::new(),
+        }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::new("binary payload truncated"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn varint(&mut self) -> Result<u64, WireError> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift >= 64 || (shift == 63 && byte > 1) {
+                return Err(WireError::new("varint overflows u64"));
+            }
+            v |= u64::from(byte & 0x7F) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn usize(&mut self) -> Result<usize, WireError> {
+        Ok(self.varint()? as usize)
+    }
+
+    pub fn u64_raw(&mut self) -> Result<u64, WireError> {
+        let bytes = self.take(8)?;
+        Ok(u64::from_le_bytes(bytes.try_into().expect("8 bytes")))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(WireError::new(format!("bad bool byte {other}"))),
+        }
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        match self.u8()? {
+            0 => {
+                let bytes = self.take(4)?;
+                Ok(f64::from(f32::from_le_bytes(
+                    bytes.try_into().expect("4 bytes"),
+                )))
+            }
+            1 => {
+                let bytes = self.take(8)?;
+                Ok(f64::from_le_bytes(bytes.try_into().expect("8 bytes")))
+            }
+            other => Err(WireError::new(format!("bad float width tag {other}"))),
+        }
+    }
+
+    pub fn string(&mut self) -> Result<String, WireError> {
+        let tag = self.varint()?;
+        if tag == 0 {
+            let len = self.usize()?;
+            let bytes = self.take(len)?;
+            let s = std::str::from_utf8(bytes)
+                .map_err(|_| WireError::new("interned string is not UTF-8"))?
+                .to_string();
+            self.interned.push(s.clone());
+            return Ok(s);
+        }
+        let idx = (tag - 1) as usize;
+        self.interned
+            .get(idx)
+            .cloned()
+            .ok_or_else(|| WireError::new(format!("string back-reference {idx} out of range")))
+    }
+
+    pub fn json(&mut self) -> Result<Json, WireError> {
+        let len = self.usize()?;
+        let bytes = self.take(len)?;
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| WireError::new("embedded JSON is not UTF-8"))?;
+        Json::parse(text).map_err(|e| WireError::new(e.to_string()))
+    }
+}
+
+// ---- enum tags ---------------------------------------------------------
+
+fn origin_tag(origin: ControlOrigin) -> u8 {
+    match origin {
+        ControlOrigin::Scripted => 0,
+        ControlOrigin::Controller => 1,
+        ControlOrigin::Placement => 2,
+        ControlOrigin::Admission => 3,
+        ControlOrigin::Gate => 4,
+    }
+}
+
+fn origin_from_tag(tag: u8) -> Result<ControlOrigin, WireError> {
+    Ok(match tag {
+        0 => ControlOrigin::Scripted,
+        1 => ControlOrigin::Controller,
+        2 => ControlOrigin::Placement,
+        3 => ControlOrigin::Admission,
+        4 => ControlOrigin::Gate,
+        other => return Err(WireError::new(format!("unknown origin tag {other}"))),
+    })
+}
+
+fn kind_tag(kind: DeviceKind) -> u8 {
+    match kind {
+        DeviceKind::Ncs2 => 0,
+        DeviceKind::FastCpu => 1,
+        DeviceKind::SlowCpu => 2,
+        DeviceKind::TitanX => 3,
+    }
+}
+
+fn kind_from_tag(tag: u8) -> Result<DeviceKind, WireError> {
+    Ok(match tag {
+        0 => DeviceKind::Ncs2,
+        1 => DeviceKind::FastCpu,
+        2 => DeviceKind::SlowCpu,
+        3 => DeviceKind::TitanX,
+        other => return Err(WireError::new(format!("unknown device kind tag {other}"))),
+    })
+}
+
+fn model_tag(model: DetectorModelId) -> u8 {
+    match model {
+        DetectorModelId::Ssd300 => 0,
+        DetectorModelId::Yolov3 => 1,
+    }
+}
+
+fn model_from_tag(tag: u8) -> Result<DetectorModelId, WireError> {
+    Ok(match tag {
+        0 => DetectorModelId::Ssd300,
+        1 => DetectorModelId::Yolov3,
+        other => return Err(WireError::new(format!("unknown model tag {other}"))),
+    })
+}
+
+// ---- nested structs ----------------------------------------------------
+
+fn write_spec(w: &mut ByteWriter, spec: &StreamSpec) {
+    w.string(&spec.name);
+    w.f64(spec.fps);
+    w.varint(spec.num_frames);
+    w.f64(spec.weight);
+    w.varint(spec.window as u64);
+}
+
+fn read_spec(r: &mut ByteReader) -> Result<StreamSpec, WireError> {
+    let name = r.string()?;
+    let fps = r.f64()?;
+    if !fps.is_finite() || fps <= 0.0 {
+        return Err(WireError::new("stream fps must be positive"));
+    }
+    let num_frames = r.varint()?;
+    let weight = r.f64()?;
+    if !weight.is_finite() || weight <= 0.0 {
+        return Err(WireError::new("stream weight must be positive"));
+    }
+    let window = r.usize()?.max(1);
+    let mut spec = StreamSpec::new(&name, fps, num_frames);
+    spec.weight = weight;
+    spec.window = window;
+    Ok(spec)
+}
+
+fn write_device(w: &mut ByteWriter, d: &DeviceInstance) {
+    w.u8(kind_tag(d.kind));
+    w.u8(model_tag(d.model));
+    w.varint(d.replica as u64);
+    w.f64(d.jitter_cv);
+    match d.rate_override {
+        Some(rate) => {
+            w.bool(true);
+            w.f64(rate);
+        }
+        None => w.bool(false),
+    }
+}
+
+fn read_device(r: &mut ByteReader) -> Result<DeviceInstance, WireError> {
+    let kind = kind_from_tag(r.u8()?)?;
+    let model = model_from_tag(r.u8()?)?;
+    let replica = r.usize()?;
+    let mut d = DeviceInstance::new(kind, model, replica);
+    d.jitter_cv = r.f64()?;
+    d.rate_override = if r.bool()? { Some(r.f64()?) } else { None };
+    Ok(d)
+}
+
+fn write_decision(w: &mut ByteWriter, d: &Decision) {
+    match d {
+        Decision::Admit { share } => {
+            w.u8(0);
+            w.f64(*share);
+        }
+        Decision::Degrade { stride, share } => {
+            w.u8(1);
+            w.varint(*stride);
+            w.f64(*share);
+        }
+        Decision::SwapModel { rung, stride, share } => {
+            w.u8(2);
+            w.varint(*rung as u64);
+            w.varint(*stride);
+            w.f64(*share);
+        }
+        Decision::Reject => w.u8(3),
+    }
+}
+
+fn read_decision(r: &mut ByteReader) -> Result<Decision, WireError> {
+    Ok(match r.u8()? {
+        0 => Decision::Admit { share: r.f64()? },
+        1 => Decision::Degrade {
+            stride: r.varint()?,
+            share: r.f64()?,
+        },
+        2 => Decision::SwapModel {
+            rung: r.usize()?,
+            stride: r.varint()?,
+            share: r.f64()?,
+        },
+        3 => Decision::Reject,
+        other => return Err(WireError::new(format!("unknown decision tag {other}"))),
+    })
+}
+
+fn write_verdict(w: &mut ByteWriter, v: &GateVerdict) {
+    match v {
+        GateVerdict::Detect => w.u8(0),
+        GateVerdict::SceneCut => w.u8(1),
+        GateVerdict::SkipCap => w.u8(2),
+        GateVerdict::Skip => w.u8(3),
+        GateVerdict::DownRung(rung) => {
+            w.u8(4);
+            w.varint(*rung as u64);
+        }
+    }
+}
+
+fn read_verdict(r: &mut ByteReader) -> Result<GateVerdict, WireError> {
+    Ok(match r.u8()? {
+        0 => GateVerdict::Detect,
+        1 => GateVerdict::SceneCut,
+        2 => GateVerdict::SkipCap,
+        3 => GateVerdict::Skip,
+        4 => GateVerdict::DownRung(r.usize()?),
+        other => return Err(WireError::new(format!("unknown gate verdict tag {other}"))),
+    })
+}
+
+// ---- WireEvent ---------------------------------------------------------
+
+/// Write one event (no leading version byte) into an existing writer —
+/// shared by the standalone event codec and `TransportMsg::Control`.
+fn write_event(w: &mut ByteWriter, ev: &WireEvent) {
+    w.f64(ev.at);
+    w.u8(origin_tag(ev.origin));
+    match &ev.payload {
+        WirePayload::Action(ControlAction::AttachStream(spec)) => {
+            w.u8(0);
+            write_spec(w, spec);
+        }
+        WirePayload::Action(ControlAction::DetachStream(id)) => {
+            w.u8(1);
+            w.varint(*id as u64);
+        }
+        WirePayload::Action(ControlAction::AttachDevice(d)) => {
+            w.u8(2);
+            write_device(w, d);
+        }
+        WirePayload::Action(ControlAction::DetachDevice(dev)) => {
+            w.u8(3);
+            w.varint(*dev as u64);
+        }
+        WirePayload::Action(ControlAction::SwapModel { stream, rung }) => {
+            w.u8(4);
+            w.varint(*stream as u64);
+            w.varint(*rung as u64);
+        }
+        WirePayload::Decision { stream, decision } => {
+            w.u8(5);
+            w.varint(*stream as u64);
+            write_decision(w, decision);
+        }
+        WirePayload::Gate { stream, frame, verdict } => {
+            w.u8(6);
+            w.varint(*stream as u64);
+            w.varint(*frame);
+            write_verdict(w, verdict);
+        }
+    }
+}
+
+fn read_event(r: &mut ByteReader) -> Result<WireEvent, WireError> {
+    let at = r.f64()?;
+    let origin = origin_from_tag(r.u8()?)?;
+    let payload = match r.u8()? {
+        0 => WirePayload::Action(ControlAction::AttachStream(read_spec(r)?)),
+        1 => WirePayload::Action(ControlAction::DetachStream(r.usize()?)),
+        2 => WirePayload::Action(ControlAction::AttachDevice(read_device(r)?)),
+        3 => WirePayload::Action(ControlAction::DetachDevice(r.usize()?)),
+        4 => WirePayload::Action(ControlAction::SwapModel {
+            stream: r.usize()?,
+            rung: r.usize()?,
+        }),
+        5 => WirePayload::Decision {
+            stream: r.usize()?,
+            decision: read_decision(r)?,
+        },
+        6 => WirePayload::Gate {
+            stream: r.usize()?,
+            frame: r.varint()?,
+            verdict: read_verdict(r)?,
+        },
+        other => return Err(WireError::new(format!("unknown event payload tag {other}"))),
+    };
+    Ok(WireEvent { at, origin, payload })
+}
+
+/// Encode one [`WireEvent`] as a standalone binary payload.
+pub fn encode_event(ev: &WireEvent) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u8(BINARY_VERSION);
+    write_event(&mut w, ev);
+    w.into_bytes()
+}
+
+/// Decode a standalone binary payload produced by [`encode_event`].
+pub fn decode_event(bytes: &[u8]) -> Result<WireEvent, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let version = r.u8()?;
+    if version != BINARY_VERSION {
+        return Err(WireError::new(format!(
+            "unsupported binary payload version {version}"
+        )));
+    }
+    let ev = read_event(&mut r)?;
+    if r.remaining() > 0 {
+        return Err(WireError::new("trailing bytes after event"));
+    }
+    Ok(ev)
+}
+
+// ---- TransportMsg ------------------------------------------------------
+
+const MSG_HELLO: u8 = 0;
+const MSG_WELCOME: u8 = 1;
+const MSG_CONTROL: u8 = 2;
+const MSG_POLL: u8 = 3;
+const MSG_DIGEST: u8 = 4;
+const MSG_TICK: u8 = 5;
+const MSG_SLICE: u8 = 6;
+const MSG_TELEMETRY: u8 = 7;
+const MSG_BYE: u8 = 8;
+
+fn write_optional_json(w: &mut ByteWriter, v: Option<Json>) {
+    match v {
+        Some(j) => {
+            w.bool(true);
+            w.json(&j);
+        }
+        None => w.bool(false),
+    }
+}
+
+/// Encode one [`TransportMsg`] as a binary frame payload.
+pub fn encode_msg(msg: &TransportMsg) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u8(BINARY_VERSION);
+    match msg {
+        TransportMsg::Hello {
+            shard,
+            protocol,
+            admission,
+            roster,
+            autoscale,
+            gate,
+            telemetry,
+        } => {
+            w.u8(MSG_HELLO);
+            w.varint(*shard as u64);
+            w.varint(*protocol as u64);
+            w.json(&admission_to_json(admission));
+            w.varint(roster.len() as u64);
+            for name in roster {
+                w.string(name);
+            }
+            write_optional_json(&mut w, autoscale.as_ref().map(autoscale_config_to_json));
+            write_optional_json(&mut w, gate.as_ref().map(gate_config_to_json));
+            w.bool(*telemetry);
+        }
+        TransportMsg::Welcome { shard, capacity } => {
+            w.u8(MSG_WELCOME);
+            w.varint(*shard as u64);
+            w.f64(*capacity);
+        }
+        TransportMsg::Control(ev) => {
+            w.u8(MSG_CONTROL);
+            write_event(&mut w, ev);
+        }
+        TransportMsg::Poll { epoch, at } => {
+            w.u8(MSG_POLL);
+            w.varint(*epoch as u64);
+            w.f64(*at);
+        }
+        TransportMsg::Digest {
+            shard,
+            at,
+            capacity,
+            committed,
+        } => {
+            w.u8(MSG_DIGEST);
+            w.varint(*shard as u64);
+            w.f64(*at);
+            w.f64(*capacity);
+            w.f64(*committed);
+        }
+        TransportMsg::Tick {
+            epoch,
+            at,
+            seed,
+            quotas,
+        } => {
+            w.u8(MSG_TICK);
+            w.varint(*epoch as u64);
+            w.f64(*at);
+            w.u64_raw(*seed);
+            w.varint(quotas.len() as u64);
+            for &(id, frames) in quotas {
+                w.varint(id as u64);
+                w.varint(frames);
+            }
+        }
+        TransportMsg::Slice {
+            epoch,
+            busy,
+            frames,
+            streams,
+        } => {
+            w.u8(MSG_SLICE);
+            w.varint(*epoch as u64);
+            w.f64(*busy);
+            w.varint(*frames);
+            w.varint(streams.len() as u64);
+            for s in streams {
+                w.varint(s.id as u64);
+                w.varint(s.total);
+                w.varint(s.processed);
+                w.varint(s.latencies.len() as u64);
+                for &l in &s.latencies {
+                    w.f64(l);
+                }
+            }
+        }
+        TransportMsg::Telemetry {
+            shard,
+            epoch,
+            snapshot,
+        } => {
+            w.u8(MSG_TELEMETRY);
+            w.varint(*shard as u64);
+            w.varint(*epoch as u64);
+            w.json(&snapshot.to_json());
+        }
+        TransportMsg::Bye => w.u8(MSG_BYE),
+    }
+    w.into_bytes()
+}
+
+/// Decode a binary frame payload produced by [`encode_msg`].
+pub fn decode_msg(bytes: &[u8]) -> Result<TransportMsg, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let version = r.u8()?;
+    if version != BINARY_VERSION {
+        return Err(WireError::new(format!(
+            "unsupported binary payload version {version}"
+        )));
+    }
+    let msg = match r.u8()? {
+        MSG_HELLO => {
+            let shard = r.usize()?;
+            let protocol = r.varint()? as i64;
+            let admission = admission_from_json(&r.json()?)?;
+            let count = r.usize()?;
+            let mut roster = Vec::with_capacity(count.min(1 << 16));
+            for _ in 0..count {
+                roster.push(r.string()?);
+            }
+            let autoscale: Option<AutoscaleConfig> = if r.bool()? {
+                Some(autoscale_config_from_json(&r.json()?)?)
+            } else {
+                None
+            };
+            let gate: Option<GateConfig> = if r.bool()? {
+                Some(gate_config_from_json(&r.json()?)?)
+            } else {
+                None
+            };
+            let telemetry = r.bool()?;
+            TransportMsg::Hello {
+                shard,
+                protocol,
+                admission,
+                roster,
+                autoscale,
+                gate,
+                telemetry,
+            }
+        }
+        MSG_WELCOME => TransportMsg::Welcome {
+            shard: r.usize()?,
+            capacity: r.f64()?,
+        },
+        MSG_CONTROL => TransportMsg::Control(read_event(&mut r)?),
+        MSG_POLL => TransportMsg::Poll {
+            epoch: r.usize()?,
+            at: r.f64()?,
+        },
+        MSG_DIGEST => TransportMsg::Digest {
+            shard: r.usize()?,
+            at: r.f64()?,
+            capacity: r.f64()?,
+            committed: r.f64()?,
+        },
+        MSG_TICK => {
+            let epoch = r.usize()?;
+            let at = r.f64()?;
+            let seed = r.u64_raw()?;
+            let count = r.usize()?;
+            let mut quotas = Vec::with_capacity(count.min(1 << 16));
+            for _ in 0..count {
+                quotas.push((r.usize()?, r.varint()?));
+            }
+            TransportMsg::Tick {
+                epoch,
+                at,
+                seed,
+                quotas,
+            }
+        }
+        MSG_SLICE => {
+            let epoch = r.usize()?;
+            let busy = r.f64()?;
+            let frames = r.varint()?;
+            let count = r.usize()?;
+            let mut streams = Vec::with_capacity(count.min(1 << 16));
+            for _ in 0..count {
+                let id = r.usize()?;
+                let total = r.varint()?;
+                let processed = r.varint()?;
+                let lat_count = r.usize()?;
+                let mut latencies = Vec::with_capacity(lat_count.min(1 << 16));
+                for _ in 0..lat_count {
+                    latencies.push(r.f64()?);
+                }
+                streams.push(SliceStream {
+                    id,
+                    total,
+                    processed,
+                    latencies,
+                });
+            }
+            TransportMsg::Slice {
+                epoch,
+                busy,
+                frames,
+                streams,
+            }
+        }
+        MSG_TELEMETRY => TransportMsg::Telemetry {
+            shard: r.usize()?,
+            epoch: r.usize()?,
+            snapshot: Registry::from_json(&r.json()?)?,
+        },
+        MSG_BYE => TransportMsg::Bye,
+        other => return Err(WireError::new(format!("unknown transport message tag {other}"))),
+    };
+    if r.remaining() > 0 {
+        return Err(WireError::new("trailing bytes after message"));
+    }
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::admission::AdmissionPolicy;
+    use crate::transport::msg::TRANSPORT_VERSION;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.varint(0);
+        w.varint(127);
+        w.varint(128);
+        w.varint(u64::MAX);
+        w.u64_raw(0xDEAD_BEEF_CAFE_F00D);
+        w.f64(2.5); // f32-exact → narrow
+        w.f64(0.1); // not f32-exact → wide
+        w.bool(true);
+        w.string("cam0");
+        w.string("cam1");
+        w.string("cam0"); // back-reference
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.varint().unwrap(), 0);
+        assert_eq!(r.varint().unwrap(), 127);
+        assert_eq!(r.varint().unwrap(), 128);
+        assert_eq!(r.varint().unwrap(), u64::MAX);
+        assert_eq!(r.u64_raw().unwrap(), 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(r.f64().unwrap(), 2.5);
+        assert_eq!(r.f64().unwrap(), 0.1);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.string().unwrap(), "cam0");
+        assert_eq!(r.string().unwrap(), "cam1");
+        assert_eq!(r.string().unwrap(), "cam0");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn adaptive_floats_are_bit_exact() {
+        // Shortest-round-trip JSON and the adaptive binary float must
+        // agree bit for bit on both branches.
+        for v in [
+            0.0,
+            -0.0,
+            1.0,
+            2.5,
+            0.1,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            1e300,
+            -7.25,
+        ] {
+            let mut w = ByteWriter::new();
+            w.f64(v);
+            let bytes = w.into_bytes();
+            let got = ByteReader::new(&bytes).f64().unwrap();
+            assert_eq!(got.to_bits(), v.to_bits(), "value {v}");
+        }
+    }
+
+    #[test]
+    fn truncated_and_garbage_payloads_are_errors_not_panics() {
+        let ev = WireEvent::action(
+            1.5,
+            ControlOrigin::Placement,
+            ControlAction::DetachStream(3),
+        );
+        let bytes = encode_event(&ev);
+        for cut in 0..bytes.len() {
+            assert!(decode_event(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing bytes are rejected, not ignored.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_event(&long).is_err());
+        // A bogus version byte is rejected up front.
+        let mut bad = bytes;
+        bad[0] = 99;
+        assert!(decode_event(&bad).is_err());
+        assert!(decode_msg(&[BINARY_VERSION, 200]).is_err());
+    }
+
+    fn arbitrary_event(rng: &mut Rng) -> WireEvent {
+        let origin = *rng.choose(&[
+            ControlOrigin::Scripted,
+            ControlOrigin::Controller,
+            ControlOrigin::Placement,
+            ControlOrigin::Admission,
+        ]);
+        let at = rng.range(0.0, 1e4);
+        match rng.below(8) {
+            0 => WireEvent::action(
+                at,
+                origin,
+                ControlAction::AttachStream(
+                    StreamSpec::new(
+                        &format!("cam{}", rng.below(64)),
+                        rng.range(0.5, 40.0),
+                        rng.int_in(1, 5_000) as u64,
+                    )
+                    .with_weight(rng.range(0.25, 4.0))
+                    .with_window(rng.int_in(1, 16) as usize),
+                ),
+            ),
+            1 => WireEvent::action(at, origin, ControlAction::DetachStream(rng.below(1 << 20) as usize)),
+            2 => {
+                let mut d = DeviceInstance::new(
+                    *rng.choose(&[
+                        DeviceKind::Ncs2,
+                        DeviceKind::FastCpu,
+                        DeviceKind::SlowCpu,
+                        DeviceKind::TitanX,
+                    ]),
+                    *rng.choose(&[DetectorModelId::Ssd300, DetectorModelId::Yolov3]),
+                    rng.below(256) as usize,
+                );
+                d.jitter_cv = rng.range(0.0, 0.3);
+                if rng.chance(0.5) {
+                    d.rate_override = Some(rng.range(0.5, 60.0));
+                }
+                WireEvent::action(at, origin, ControlAction::AttachDevice(d))
+            }
+            3 => WireEvent::action(at, origin, ControlAction::DetachDevice(rng.below(256) as usize)),
+            4 => WireEvent::action(
+                at,
+                origin,
+                ControlAction::SwapModel {
+                    stream: rng.below(1 << 20) as usize,
+                    rung: rng.below(4) as usize,
+                },
+            ),
+            5 => WireEvent::decision(
+                at,
+                rng.below(1 << 20) as usize,
+                match rng.below(4) {
+                    0 => Decision::Admit { share: rng.range(0.1, 30.0) },
+                    1 => Decision::Degrade {
+                        stride: rng.int_in(2, 16) as u64,
+                        share: rng.range(0.1, 30.0),
+                    },
+                    2 => Decision::SwapModel {
+                        rung: rng.below(4) as usize,
+                        stride: rng.int_in(1, 16) as u64,
+                        share: rng.range(0.1, 30.0),
+                    },
+                    _ => Decision::Reject,
+                },
+            ),
+            6 => WireEvent::gate(
+                at,
+                rng.below(1 << 20) as usize,
+                rng.below(1 << 30),
+                *rng.choose(&[
+                    GateVerdict::Detect,
+                    GateVerdict::SceneCut,
+                    GateVerdict::SkipCap,
+                    GateVerdict::Skip,
+                ]),
+            ),
+            _ => WireEvent::gate(
+                at,
+                rng.below(1 << 20) as usize,
+                rng.below(1 << 30),
+                GateVerdict::DownRung(rng.below(4) as usize),
+            ),
+        }
+    }
+
+    #[test]
+    fn prop_events_roundtrip_binary_and_match_the_json_path() {
+        // The tentpole parity pin at the event level: the binary codec
+        // decodes to the *identical* WireEvent the JSON path produces.
+        check("binary event parity", Config::default(), |rng| {
+            let ev = arbitrary_event(rng);
+            let bin = decode_event(&encode_event(&ev)).map_err(|e| e.to_string())?;
+            let json = WireEvent::decode(&ev.encode()).map_err(|e| e.to_string())?;
+            if bin != ev {
+                return Err(format!("binary round trip: {bin:?} != {ev:?}"));
+            }
+            if bin != json {
+                return Err(format!("codec divergence: {bin:?} != {json:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn binary_events_are_smaller_than_json() {
+        // Honest at the event level too, not just for digests: a detach
+        // event is a handful of bytes against ~70 of JSON.
+        let ev = WireEvent::action(
+            12.5,
+            ControlOrigin::Placement,
+            ControlAction::DetachStream(90_000),
+        );
+        let bin = encode_event(&ev).len();
+        let json = ev.encode().len();
+        assert!(
+            bin * 3 <= json,
+            "binary {bin}B should be ≤ a third of JSON {json}B"
+        );
+    }
+
+    #[test]
+    fn hello_with_options_roundtrips_and_interns_the_roster() {
+        let msg = TransportMsg::Hello {
+            shard: 3,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
+            roster: vec!["cam0".into(), "cam1".into(), "cam0".into()],
+            autoscale: Some(AutoscaleConfig {
+                max_devices: 7,
+                device_rate: 3.25,
+                ..AutoscaleConfig::default()
+            }),
+            gate: Some(GateConfig::default()),
+            telemetry: true,
+        };
+        let bytes = encode_msg(&msg);
+        assert_eq!(decode_msg(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn tick_seed_is_bit_exact() {
+        // The seed that does not survive a JSON f64 must survive the
+        // binary codec verbatim (it travels as raw LE bytes).
+        let msg = TransportMsg::Tick {
+            epoch: 3,
+            at: 30.0,
+            seed: 0xDEAD_BEEF_CAFE_F00D,
+            quotas: vec![(0, 25), (3, 12)],
+        };
+        match decode_msg(&encode_msg(&msg)).unwrap() {
+            TransportMsg::Tick { seed, .. } => assert_eq!(seed, 0xDEAD_BEEF_CAFE_F00D),
+            other => panic!("not a tick: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn digest_is_at_least_3x_smaller_than_json() {
+        // The scale acceptance pin at the message level: one headroom
+        // digest with realistic (non-round) float values.
+        let msg = TransportMsg::Digest {
+            shard: 137,
+            at: 1234.5678901,
+            capacity: 9.466666666666667,
+            committed: 7.183333333333334,
+        };
+        let bin = encode_msg(&msg).len();
+        let json = msg.encode().len();
+        assert!(
+            bin * 3 <= json,
+            "binary digest {bin}B should be ≤ a third of JSON {json}B"
+        );
+    }
+}

@@ -19,7 +19,14 @@
 //! * [`log`] — [`EventLog`], the versioned, replayable event log: the
 //!   audit trail of a run, decodable back into scripted events that
 //!   reproduce its control plane verbatim.
+//! * [`binary`] — the compact binary codec for hot-path frames (varint
+//!   ints, interned strings, adaptive f32/f64 rates) behind
+//!   [`crate::transport::frame::FRAME_VERSION_BINARY`]. JSON remains
+//!   the audit/debug format; binary decodes to the identical
+//!   [`WireEvent`] the JSON path produces, so the [`EventLog`] replay
+//!   contract survives the swap bit for bit.
 
+pub mod binary;
 pub mod log;
 pub mod plane;
 pub mod wire;

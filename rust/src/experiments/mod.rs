@@ -17,6 +17,7 @@ pub mod energy;
 pub mod dropping;
 pub mod fleet;
 pub mod gate;
+pub mod scale;
 pub mod shard;
 pub mod telemetry;
 pub mod transport;

@@ -1,0 +1,378 @@
+//! Coordinator scale sweep: per-epoch planning cost at 100k+ streams.
+//!
+//! The sharded co-simulation runs whole fleets through the serving
+//! engine, which caps how many shards an experiment can afford. This
+//! driver isolates the *coordinator's* per-epoch work — digest reads,
+//! rebalance planning, control-plane payload bytes — over a synthetic
+//! fleet large enough to expose asymptotics (the default sweep tops out
+//! at 4096 shards × 25 streams = 102 400 streams):
+//!
+//! * **Flat vs grouped planning** ([`crate::shard::plan`]): with
+//!   overload localised to a bounded set of hot shards, the flat
+//!   planner reads all M views per epoch while the grouped planner
+//!   reads ⌈M/k⌉ digests plus the members of the few descended groups —
+//!   with k ≈ √M that is O(√M) reads, and the sweep's
+//!   [`PlanStats::reads`] column shows the gap widening as M grows
+//!   (the deterministic counters are what
+//!   `benches/coordinator_scale.rs` pins; wall-clock is reported as
+//!   corroboration).
+//! * **Binary vs JSON digest frames** ([`crate::control::binary`]):
+//!   the same per-shard digest, framed in both codecs, summed over the
+//!   fleet — the compact codec must hold a ≥3× size advantage at scale.
+//! * **Delta vs snapshot digest streams** ([`crate::shard::group`]):
+//!   epochs where only churned shards ship vs full-fleet snapshots,
+//!   under bounded churn.
+//!
+//! See EXPERIMENTS.md §Scale for the measured numbers.
+
+use std::collections::BTreeMap;
+
+use crate::shard::gossip::Headroom;
+use crate::shard::group::{encode_delta, DeltaEncoder, DigestDelta};
+use crate::shard::placement::ShardView;
+use crate::shard::plan::{plan_flat, plan_grouped, PlanStats};
+use crate::transport::frame::Codec;
+use crate::transport::msg::TransportMsg;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::{f, Table};
+
+/// Hot shards per fleet: overload stays localised (a fixed count, not a
+/// fixed fraction), which is what makes sub-linear coordination
+/// possible at all — and is how real incidents look: a few cameras
+/// spike, the fleet does not. The hot set is contiguous (one rack, one
+/// venue), so it lands in O(1) shard groups rather than salting every
+/// group with one hot member.
+pub const HOT_SHARDS: usize = 8;
+
+/// One fleet size's measurements.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub shards: usize,
+    pub streams: usize,
+    /// Planner group size k ≈ √M.
+    pub group_size: usize,
+    pub flat: PlanStats,
+    pub grouped: PlanStats,
+    /// Wall-clock seconds for one flat / grouped plan invocation.
+    pub flat_secs: f64,
+    pub grouped_secs: f64,
+    /// One gossip round's digest frames, summed over the fleet.
+    pub json_digest_bytes: usize,
+    pub binary_digest_bytes: usize,
+    /// Digest-stream bytes over the churn epochs: deltas vs full
+    /// snapshots (both in the binary codec).
+    pub delta_bytes: usize,
+    pub snapshot_bytes: usize,
+}
+
+impl ScalePoint {
+    /// JSON-over-binary digest size ratio (the ≥3× criterion).
+    pub fn codec_ratio(&self) -> f64 {
+        self.json_digest_bytes as f64 / (self.binary_digest_bytes as f64).max(1.0)
+    }
+
+    /// Snapshot-over-delta stream size ratio.
+    pub fn delta_ratio(&self) -> f64 {
+        self.snapshot_bytes as f64 / (self.delta_bytes as f64).max(1.0)
+    }
+}
+
+/// A deterministic synthetic fleet: M shard views (a bounded hot set
+/// over capacity, the rest comfortably in band) plus the resident list
+/// the planner consumes. Demands carry per-stream jitter so the digest
+/// floats are not round numbers — codec size comparisons stay honest.
+fn synthetic_fleet(
+    shards: usize,
+    streams_per_shard: usize,
+    seed: u64,
+) -> (Vec<ShardView>, Vec<(usize, f64, usize)>) {
+    let mut rng = Rng::new(seed ^ 0x5CA1_EB10);
+    let capacity = 23.75; // 10 × 2.5-FPS replicas at 95% target util
+    let hot_count = HOT_SHARDS.min(shards / 2);
+    let mut views = Vec::with_capacity(shards);
+    let mut residents = Vec::with_capacity(shards * streams_per_shard);
+    for sh in 0..shards {
+        let hot = sh < hot_count;
+        // Hot shards commit ~130% of capacity, the rest ~70%.
+        let load = if hot { 1.3 } else { 0.7 };
+        let mut committed = 0.0;
+        for i in 0..streams_per_shard {
+            let demand = capacity * load / streams_per_shard as f64
+                * rng.range(0.9, 1.1);
+            committed += demand;
+            residents.push((sh * streams_per_shard + i, demand, sh));
+        }
+        views.push(ShardView {
+            shard: sh,
+            alive: true,
+            capacity,
+            committed,
+        });
+    }
+    (views, residents)
+}
+
+/// One gossip round's digest payload bytes, summed over the fleet.
+/// Payload bytes, not framed bytes: the 8-byte frame header is codec-
+/// independent overhead, and the codec claim is about the payloads
+/// (`payload_cap_is_configurable_but_defaults_hold` covers framing).
+fn digest_payload_bytes(views: &[ShardView], at: f64, codec: Codec) -> usize {
+    views
+        .iter()
+        .map(|v| {
+            let msg = TransportMsg::Digest {
+                shard: v.shard,
+                at,
+                capacity: v.capacity,
+                committed: v.committed,
+            };
+            match codec {
+                Codec::Json => msg.encode().len(),
+                Codec::Binary => crate::control::binary::encode_msg(&msg).len(),
+            }
+        })
+        .sum()
+}
+
+/// Delta vs snapshot digest-stream bytes over `epochs` epochs with
+/// `churn` shards changing materially per epoch (binary codec both
+/// ways, same [`Headroom`] content).
+fn delta_stream_bytes(
+    views: &[ShardView],
+    epochs: usize,
+    churn: usize,
+    seed: u64,
+) -> (usize, usize) {
+    let m = views.len();
+    let mut rng = Rng::new(seed ^ 0xD1_6E57);
+    let mut current: Vec<Option<Headroom>> = views
+        .iter()
+        .map(|v| {
+            Some(Headroom {
+                shard: v.shard,
+                at: 0.0,
+                capacity: v.capacity,
+                committed: v.committed,
+            })
+        })
+        .collect();
+    // Resync far beyond the horizon: epoch 0 is the one full frame.
+    let mut enc = DeltaEncoder::new(m, 0.05, epochs + 1);
+    let (mut delta_bytes, mut snapshot_bytes) = (0, 0);
+    for epoch in 0..epochs {
+        let at = epoch as f64 * 5.0;
+        for slot in current.iter_mut().flatten() {
+            slot.at = at;
+        }
+        if epoch > 0 {
+            for _ in 0..churn {
+                let sh = rng.below(m as u64) as usize;
+                if let Some(h) = current[sh].as_mut() {
+                    h.committed += rng.range(0.5, 1.5);
+                }
+            }
+        }
+        let delta = enc.encode(epoch, at, &current);
+        delta_bytes += encode_delta(&delta).len();
+        let full = DigestDelta {
+            epoch,
+            at,
+            full: true,
+            entries: current.iter().flatten().copied().collect(),
+            dead: Vec::new(),
+        };
+        snapshot_bytes += encode_delta(&full).len();
+    }
+    (delta_bytes, snapshot_bytes)
+}
+
+/// Integer √M, the default planner group size.
+pub fn default_group_size(shards: usize) -> usize {
+    ((shards as f64).sqrt().round() as usize).max(1)
+}
+
+/// Measure one fleet size.
+pub fn scale_point(shards: usize, streams_per_shard: usize, seed: u64) -> ScalePoint {
+    let (views, residents) = synthetic_fleet(shards, streams_per_shard, seed);
+    let group_size = default_group_size(shards);
+
+    let t = std::time::Instant::now();
+    let (_, flat) = plan_flat(&views, &residents);
+    let flat_secs = t.elapsed().as_secs_f64();
+
+    let t = std::time::Instant::now();
+    let (_, grouped) = plan_grouped(&views, &residents, group_size);
+    let grouped_secs = t.elapsed().as_secs_f64();
+
+    // Non-round timestamp: keeps the JSON number rendering honest.
+    let at = 5.125;
+    let json_digest_bytes = digest_payload_bytes(&views, at, Codec::Json);
+    let binary_digest_bytes = digest_payload_bytes(&views, at, Codec::Binary);
+
+    // Churn 1% of the fleet (at least one shard) per epoch.
+    let churn = (shards / 100).max(1);
+    let (delta_bytes, snapshot_bytes) = delta_stream_bytes(&views, 8, churn, seed);
+
+    ScalePoint {
+        shards,
+        streams: shards * streams_per_shard,
+        group_size,
+        flat,
+        grouped,
+        flat_secs,
+        grouped_secs,
+        json_digest_bytes,
+        binary_digest_bytes,
+        delta_bytes,
+        snapshot_bytes,
+    }
+}
+
+/// The scale sweep over a shard-count ladder (default: 256 → 4096,
+/// 25 streams per shard, topping out at 102 400 streams).
+pub fn coordinator_scale_at(
+    shard_counts: &[usize],
+    streams_per_shard: usize,
+    seed: u64,
+) -> (Table, Vec<ScalePoint>) {
+    let mut t = Table::new(
+        "Coordinator per-epoch cost at scale (bounded hot set, k ≈ √M)",
+        &[
+            "shards", "streams", "k", "flat reads", "grouped reads", "descended",
+            "codec ratio", "delta ratio", "flat (ms)", "grouped (ms)",
+        ],
+    );
+    let mut points = Vec::new();
+    for &m in shard_counts {
+        let p = scale_point(m, streams_per_shard, seed);
+        t.row(vec![
+            format!("{}", p.shards),
+            format!("{}", p.streams),
+            format!("{}", p.group_size),
+            format!("{}", p.flat.reads()),
+            format!("{}", p.grouped.reads()),
+            format!("{}", p.grouped.groups_descended),
+            f(p.codec_ratio(), 2),
+            f(p.delta_ratio(), 2),
+            f(p.flat_secs * 1e3, 3),
+            f(p.grouped_secs * 1e3, 3),
+        ]);
+        points.push(p);
+    }
+    (t, points)
+}
+
+/// Default ladder: 4× shard steps to 4096 shards (102 400 streams).
+pub fn coordinator_scale(seed: u64) -> (Table, Vec<ScalePoint>) {
+    coordinator_scale_at(&[256, 1024, 4096], 25, seed)
+}
+
+fn point_json(p: &ScalePoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("shards".into(), Json::Num(p.shards as f64));
+    m.insert("streams".into(), Json::Num(p.streams as f64));
+    m.insert("group_size".into(), Json::Num(p.group_size as f64));
+    m.insert("flat_reads".into(), Json::Num(p.flat.reads() as f64));
+    m.insert("grouped_reads".into(), Json::Num(p.grouped.reads() as f64));
+    m.insert(
+        "groups_descended".into(),
+        Json::Num(p.grouped.groups_descended as f64),
+    );
+    m.insert(
+        "flat_migrations".into(),
+        Json::Num(p.flat.migrations as f64),
+    );
+    m.insert(
+        "grouped_migrations".into(),
+        Json::Num(p.grouped.migrations as f64),
+    );
+    m.insert("flat_secs".into(), Json::Num(p.flat_secs));
+    m.insert("grouped_secs".into(), Json::Num(p.grouped_secs));
+    m.insert(
+        "json_digest_bytes".into(),
+        Json::Num(p.json_digest_bytes as f64),
+    );
+    m.insert(
+        "binary_digest_bytes".into(),
+        Json::Num(p.binary_digest_bytes as f64),
+    );
+    m.insert("codec_ratio".into(), Json::Num(p.codec_ratio()));
+    m.insert("delta_bytes".into(), Json::Num(p.delta_bytes as f64));
+    m.insert("snapshot_bytes".into(), Json::Num(p.snapshot_bytes as f64));
+    m.insert("delta_ratio".into(), Json::Num(p.delta_ratio()));
+    Json::Obj(m)
+}
+
+/// Machine-readable sweep (the `eva shard --scenario scale --json`
+/// surface; CI uploads it as `BENCH_coordinator_scale.json`).
+pub fn scale_json(seed: u64) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+    let (_, points) = coordinator_scale(seed);
+    root.insert(
+        "coordinator_scale".into(),
+        Json::Arr(points.iter().map(point_json).collect()),
+    );
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_reads_grow_sublinearly_on_a_small_ladder() {
+        // 4× the shards must cost the grouped planner well under 4× the
+        // reads (k ≈ √M ⇒ ~2×), while the flat planner is exactly
+        // linear. Small ladder here; the bench pins the 100k+ point.
+        let (_, points) = coordinator_scale_at(&[64, 256], 4, 11);
+        let (small, big) = (&points[0], &points[1]);
+        assert_eq!(big.flat.reads(), 4 * small.flat.reads());
+        let growth = big.grouped.reads() as f64 / small.grouped.reads() as f64;
+        assert!(growth < 2.5, "grouped reads grew {growth:.2}× on a 4× fleet");
+        assert!(big.grouped.reads() < big.flat.reads());
+        // Hot-set overload is what the planner actually sees.
+        assert!(big.grouped.groups_descended >= 1);
+        assert!(big.flat.migrations >= 1);
+    }
+
+    #[test]
+    fn binary_digests_beat_json_by_3x_and_deltas_beat_snapshots() {
+        let p = scale_point(128, 4, 13);
+        assert!(
+            p.codec_ratio() >= 3.0,
+            "binary {} vs json {} (ratio {:.2})",
+            p.binary_digest_bytes,
+            p.json_digest_bytes,
+            p.codec_ratio()
+        );
+        // 1% churn over 8 epochs: the delta stream is a fraction of
+        // shipping full snapshots every epoch.
+        assert!(
+            p.delta_ratio() >= 3.0,
+            "delta {} vs snapshot {} (ratio {:.2})",
+            p.delta_bytes,
+            p.snapshot_bytes,
+            p.delta_ratio()
+        );
+    }
+
+    #[test]
+    fn scale_json_reparses_with_one_row_per_point() {
+        // Tiny ladder through the same JSON shape the CLI emits.
+        let mut root = BTreeMap::new();
+        root.insert("seed".into(), Json::Num(3.0));
+        let (_, points) = coordinator_scale_at(&[32, 64], 3, 3);
+        root.insert(
+            "coordinator_scale".into(),
+            Json::Arr(points.iter().map(point_json).collect()),
+        );
+        let j = Json::Obj(root);
+        let back = Json::parse(&j.to_string()).expect("scale JSON must reparse");
+        let rows = back.get("coordinator_scale").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("shards").and_then(Json::as_i64), Some(32));
+        assert!(rows[1].get("codec_ratio").and_then(Json::as_f64).unwrap() > 1.0);
+    }
+}

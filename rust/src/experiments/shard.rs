@@ -22,6 +22,7 @@ use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::stream::StreamSpec;
 use crate::shard::placement::PlacementPolicy;
 use crate::shard::sim::{run_sharded, ShardReport, ShardScenario};
+use crate::transport::frame::Codec;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 use std::collections::BTreeMap;
@@ -357,6 +358,8 @@ fn custom_scenario(
     seed: u64,
     autoscale: Option<AutoscaleConfig>,
     telemetry: bool,
+    codec: Codec,
+    groups: Option<usize>,
 ) -> ShardScenario {
     let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
     let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
@@ -365,7 +368,11 @@ fn custom_scenario(
         .with_admission(admission)
         .with_gossip(gossip)
         .with_epochs(epochs)
-        .with_seed(seed);
+        .with_seed(seed)
+        .with_codec(codec);
+    if let Some(size) = groups {
+        scenario = scenario.with_groups(size);
+    }
     if let Some(cfg) = autoscale {
         scenario = scenario.with_autoscale(cfg);
     }
@@ -378,7 +385,8 @@ fn custom_scenario(
 /// A one-off sharded run from CLI parameters (the `eva shard
 /// --scenario run [--autoscale]` path). `telemetry` arms the
 /// per-slice metric snapshot in [`ShardReport::telemetry`] (the
-/// `--metrics-out` surface).
+/// `--metrics-out` surface); `codec` picks the control-plane payload
+/// encoding and `groups` switches the rebalancer to grouped planning.
 #[allow(clippy::too_many_arguments)]
 pub fn custom_run(
     shards: Vec<Vec<DeviceInstance>>,
@@ -389,9 +397,11 @@ pub fn custom_run(
     seed: u64,
     autoscale: Option<AutoscaleConfig>,
     telemetry: bool,
+    codec: Codec,
+    groups: Option<usize>,
 ) -> ShardReport {
     run_sharded(&custom_scenario(
-        shards, streams, policy, admission, gossip, seed, autoscale, telemetry,
+        shards, streams, policy, admission, gossip, seed, autoscale, telemetry, codec, groups,
     ))
 }
 
@@ -410,11 +420,13 @@ pub fn custom_run_remote(
     seed: u64,
     autoscale: Option<AutoscaleConfig>,
     telemetry: bool,
+    codec: Codec,
+    groups: Option<usize>,
     transport: crate::shard::remote::RemoteTransport,
 ) -> anyhow::Result<ShardReport> {
     crate::shard::remote::run_sharded_remote(
         &custom_scenario(
-            shards, streams, policy, admission, gossip, seed, autoscale, telemetry,
+            shards, streams, policy, admission, gossip, seed, autoscale, telemetry, codec, groups,
         ),
         transport,
     )

@@ -31,7 +31,10 @@
 //!   (`WireEvent` over [`util::json`]) and a replayable `EventLog`.
 //!   Scenario scripts, the autoscale controller and the shard placement
 //!   layer all speak this layer, so control decisions can cross a
-//!   process boundary.
+//!   process boundary. `control::binary` is the compact hot-path twin
+//!   of the JSON codec (varints, interned strings, adaptive floats):
+//!   same events, a fraction of the bytes, exact-parity pinned — JSON
+//!   stays the audit/debug format.
 //! * [`autoscale`] — closed-loop adaptation above the fleet: windowed
 //!   per-stream signals drive a generalised-nselect device controller
 //!   (attach/detach replicas with hysteresis + cooldown) and a
@@ -49,13 +52,22 @@
 //!   `shard::autoscale` embeds the closed loop *inside* each shard:
 //!   capacity grows locally before the gossip migrates load away,
 //!   digests advertise post-scale headroom, and every scale action
-//!   rides the wire into the coordinator's audit log.
+//!   rides the wire into the coordinator's audit log. At scale the
+//!   coordinator goes hierarchical: `shard::group` aggregates member
+//!   digests into shard-group summaries with delta-encoded digest
+//!   streams (changed shards only, periodic full resync), and
+//!   `shard::plan` is the extracted migration planner — flat or
+//!   two-level over those group aggregates, descending into members
+//!   only on imbalance, with deterministic read counters benches pin.
 //! * [`transport`] — the cross-host seam under all of it: a
 //!   length-prefixed, versioned frame codec for `WireEvent` traffic
 //!   over blocking TCP / Unix-domain sockets (split frames, oversized
-//!   lengths, version mismatch and peer loss handled explicitly), a
-//!   dial-with-backoff client, and a remote `fleet::serve` consumer
-//!   driven by a decoded `EventLog` stream instead of in-process calls.
+//!   lengths — with a configurable payload cap — version mismatch and
+//!   peer loss handled explicitly), a dial-with-backoff client, and a
+//!   remote `fleet::serve` consumer driven by a decoded `EventLog`
+//!   stream instead of in-process calls. The frame version byte selects
+//!   the payload codec (JSON or `control::binary`), and connections
+//!   mirror whatever codec the peer last spoke.
 //! * [`gate`] — per-frame motion-gated detection: a per-stream motion
 //!   energy signal (frame-diff MSE over rastered clips, or calibrated
 //!   content-dynamics models for pixel-free paths) feeds a transprecision
@@ -74,7 +86,10 @@
 //!   attribute latency to the control class that caused it, and remote
 //!   shards ship cumulative snapshots over the wire each epoch.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
-//!   bench binaries and the CLI.
+//!   bench binaries and the CLI. `experiments::scale` is the
+//!   coordinator-cost sweep: flat vs grouped planning reads, JSON vs
+//!   binary digest bytes and delta vs snapshot streams at 100k+
+//!   simulated streams (EXPERIMENTS.md §Scale).
 
 pub mod util;
 pub mod types;

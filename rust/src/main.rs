@@ -5,7 +5,7 @@
 //!   offline    zero-drop offline detection (Figure 1a reference)
 //!   fleet      multi-stream serving over a shared device pool (virtual time)
 //!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
-//!   shard      stream sharding across fleet instances (split|skew|failure|autoscale|run|transport)
+//!   shard      stream sharding across fleet instances (split|skew|failure|autoscale|run|transport|scale)
 //!   gate       motion-gated detection vs always-detect (lobby|highway|sports|all)
 //!   trace      end-to-end telemetry: p99 stage budgets, origin attribution, overhead
 //!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
@@ -51,12 +51,14 @@ fn specs() -> Vec<Spec> {
         Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
-        Spec { name: "scenario", takes_value: true, help: "autoscale/shard/gate: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|all|run|transport; gate: lobby|highway|sports|all)", default: Some("step") },
+        Spec { name: "scenario", takes_value: true, help: "autoscale/shard/gate: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|all|run|transport|scale; gate: lobby|highway|sports|all)", default: Some("step") },
         Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/gate/trace: emit machine-readable JSON instead of tables", default: None },
         Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
         Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
         Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
         Spec { name: "transport", takes_value: true, help: "shard: control-plane transport for --scenario run (inproc|tcp|uds; sockets bind loopback)", default: Some("inproc") },
+        Spec { name: "codec", takes_value: true, help: "shard: control-plane payload codec for --scenario run (json|binary; json is the audit format)", default: None },
+        Spec { name: "groups", takes_value: true, help: "shard: rebalance over shard groups of this size for --scenario run (default: flat planning)", default: None },
         Spec { name: "autoscale", takes_value: false, help: "shard: embed an AutoscaleController in every shard (--scenario run), or select the autoscale overload sweep", default: None },
         Spec { name: "metrics-out", takes_value: true, help: "fleet/gate/shard/trace: write the run's metric snapshot (Prometheus text exposition) to this file", default: None },
         Spec { name: "trace-out", takes_value: true, help: "fleet/gate/trace: write the run's per-frame span traces (JSONL) to this file", default: None },
@@ -119,6 +121,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     }
     if args.get("trace-out").is_some() && !matches!(cmd, "fleet" | "gate" | "trace") {
         usage_error(&format!("--trace-out does not apply to {cmd} (fleet|gate|trace)"));
+    }
+    // `--codec`/`--groups` steer the sharded control plane only; the
+    // specs carry no default so "was it passed?" is observable here.
+    if args.get("codec").is_some() && cmd != "shard" {
+        usage_error(&format!("--codec does not apply to {cmd} (shard)"));
+    }
+    if args.get("groups").is_some() && cmd != "shard" {
+        usage_error(&format!("--groups does not apply to {cmd} (shard)"));
     }
     match cmd {
         "serve" => cmd_serve(args, false),
@@ -360,6 +370,44 @@ fn cmd_shard(args: &Args) -> Result<()> {
     if telemetry && scenario != "run" {
         bail!("--metrics-out applies only to --scenario run (sweeps aggregate many co-simulations)");
     }
+    // `--codec` picks the control-plane wire encoding for `--scenario
+    // run`; every other sweep fixes its own codecs (the scale sweep
+    // measures both), so a stray flag is a usage error, not a no-op.
+    let codec = match args.get("codec") {
+        None => eva::transport::Codec::Json,
+        Some(name) => {
+            if scenario != "run" {
+                usage_error("--codec applies only to --scenario run (the scale sweep measures both codecs itself)");
+            }
+            eva::transport::Codec::parse(name)
+                .unwrap_or_else(|| usage_error(&format!("unknown codec {name:?} (json|binary)")))
+        }
+    };
+    // `--groups` switches the rebalancer to two-level planning; like
+    // `--codec` it only has meaning on the one-off run.
+    let groups = match args.get("groups") {
+        None => None,
+        Some(_) => {
+            if scenario != "run" {
+                usage_error("--groups applies only to --scenario run (the scale sweep derives its own group size)");
+            }
+            Some(args.usize_or("groups", 1).map_err(|e| anyhow!(e))?.max(1))
+        }
+    };
+
+    if scenario == "scale" {
+        // Coordinator-cost sweep: flat vs grouped planning and JSON vs
+        // binary digests over a synthetic 100k-stream fleet. Stdout on
+        // the --json path must be exactly one parseable document (CI
+        // uploads it as BENCH_coordinator_scale.json).
+        if args.flag("json") {
+            println!("{}", experiments::scale::scale_json(seed).to_string());
+            return Ok(());
+        }
+        let (table, _) = experiments::scale::coordinator_scale(seed);
+        print!("{}", table.render());
+        return Ok(());
+    }
 
     if scenario == "run" {
         // One-off run from CLI parameters: `--shards` pools of `--rates`
@@ -419,8 +467,9 @@ fn cmd_shard(args: &Args) -> Result<()> {
         // one parseable document there (CI uploads it as BENCH_shard.json).
         if !args.flag("json") {
             println!(
-                "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, transport {transport}, autoscale {}, seed {seed}",
+                "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, transport {transport}, codec {}, autoscale {}, seed {seed}",
                 policy.label(),
+                codec.label(),
                 if autoscale { "on" } else { "off" },
             );
         }
@@ -434,6 +483,8 @@ fn cmd_shard(args: &Args) -> Result<()> {
                 seed,
                 autoscale_cfg,
                 telemetry,
+                codec,
+                groups,
             ),
             "tcp" | "uds" => {
                 let remote = if transport == "tcp" {
@@ -450,6 +501,8 @@ fn cmd_shard(args: &Args) -> Result<()> {
                     seed,
                     autoscale_cfg,
                     telemetry,
+                    codec,
+                    groups,
                     remote,
                 )?
             }
@@ -513,7 +566,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
 
     if args.flag("json") {
         let json = experiments::shard::shard_json(seed, &scenario).ok_or_else(|| {
-            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|autoscale|all|run|transport)")
+            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|autoscale|all|run|transport|scale)")
         })?;
         println!("{}", json.to_string());
         return Ok(());
@@ -539,7 +592,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
             print!("{}", t2.render());
             print!("{}", t3.render());
         }
-        other => bail!("unknown shard scenario {other:?} (split|skew|failure|autoscale|all|run|transport)"),
+        other => bail!("unknown shard scenario {other:?} (split|skew|failure|autoscale|all|run|transport|scale)"),
     }
     Ok(())
 }

@@ -1,0 +1,637 @@
+//! Two-level coordination: shard groups and delta-encoded digests.
+//!
+//! Flat gossip makes the coordinator read M per-shard digests and the
+//! planner walk M views every epoch — linear in fleet size, a ceiling of
+//! maybe thousands of streams. This module adds the hierarchy that
+//! breaks it:
+//!
+//! * **Shard groups** ([`ShardGroup`], [`GroupDigest`]) — contiguous
+//!   blocks of shards whose digests aggregate member headroom: Σμ
+//!   (capacity), Σλ (committed), and the min/max per-member headroom so
+//!   a group-level read can tell *whether any member is out of band*
+//!   without listing members. The coordinator plans over G = ⌈M/k⌉
+//!   group digests and descends into a group's members only on
+//!   imbalance (see [`crate::shard::plan`]). In a real deployment the
+//!   per-group aggregation runs on a group leader, so the coordinator's
+//!   own epoch cost is O(G + descended members), sub-linear in M while
+//!   the fleet is mostly in band.
+//! * **Delta digests** ([`DeltaEncoder`], [`DeltaDecoder`],
+//!   [`DigestDelta`]) — a digest epoch carries only the shards whose
+//!   capacity or committed Σλ moved beyond a threshold since the last
+//!   acked epoch (plus deaths), with periodic full-snapshot resync
+//!   frames bounding how long a lost delta can skew a view. The delta's
+//!   uniform timestamp doubles as the heartbeat for *unchanged* shards,
+//!   so at threshold 0 a delta stream reconstructs views identical to
+//!   shipping full snapshots every epoch.
+//!
+//! Both have a JSON codec (audit/debug) and a compact binary codec
+//! ([`encode_delta`]/[`decode_delta`] over [`crate::control::binary`])
+//! with property-tested exact parity.
+
+use crate::control::binary::{ByteReader, ByteWriter};
+use crate::control::wire::{req_f64, req_usize, WireError};
+use crate::shard::gossip::Headroom;
+use crate::shard::placement::ShardView;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// A contiguous block of shard ids coordinated as one unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardGroup {
+    pub id: usize,
+    /// Member shard ids (global, ascending).
+    pub members: Vec<usize>,
+}
+
+/// Partition `num_shards` shards into contiguous groups of (up to)
+/// `group_size` members. `group_size` is clamped to ≥ 1; the last group
+/// may be short.
+pub fn group_shards(num_shards: usize, group_size: usize) -> Vec<ShardGroup> {
+    let k = group_size.max(1);
+    (0..num_shards)
+        .step_by(k)
+        .enumerate()
+        .map(|(id, lo)| ShardGroup {
+            id,
+            members: (lo..(lo + k).min(num_shards)).collect(),
+        })
+        .collect()
+}
+
+/// A group's aggregate headroom digest — what the coordinator reads
+/// instead of the members' per-shard digests while the group is in band.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupDigest {
+    pub group: usize,
+    /// Members with a live gossip view.
+    pub alive: usize,
+    /// Σμ over live members (FPS).
+    pub capacity: f64,
+    /// Σλ over live members (FPS).
+    pub committed: f64,
+    /// Worst per-member headroom (negative ⇒ some member out of band).
+    pub min_headroom: f64,
+    /// Best per-member headroom (what the group can absorb in one shard).
+    pub max_headroom: f64,
+}
+
+impl GroupDigest {
+    /// Aggregate headroom Σμ − Σλ.
+    pub fn headroom(&self) -> f64 {
+        self.capacity - self.committed
+    }
+
+    /// Whether the coordinator must descend into members: some member is
+    /// out of its §III-B band (same tolerance as
+    /// [`ShardView::in_band`]), even if the group nets out positive.
+    pub fn needs_descent(&self) -> bool {
+        self.alive > 0 && self.min_headroom < -1e-9
+    }
+}
+
+/// Fold the members' placement views into one [`GroupDigest`]. Dead
+/// members contribute nothing (their slot reads as zero capacity).
+pub fn aggregate(group: &ShardGroup, views: &[ShardView]) -> GroupDigest {
+    let mut d = GroupDigest {
+        group: group.id,
+        alive: 0,
+        capacity: 0.0,
+        committed: 0.0,
+        min_headroom: f64::INFINITY,
+        max_headroom: f64::NEG_INFINITY,
+    };
+    for &m in &group.members {
+        let Some(v) = views.get(m) else { continue };
+        if !v.alive {
+            continue;
+        }
+        d.alive += 1;
+        d.capacity += v.capacity;
+        d.committed += v.committed;
+        d.min_headroom = d.min_headroom.min(v.headroom());
+        d.max_headroom = d.max_headroom.max(v.headroom());
+    }
+    if d.alive == 0 {
+        d.min_headroom = 0.0;
+        d.max_headroom = 0.0;
+    }
+    d
+}
+
+// ---- delta-encoded digest streams -------------------------------------
+
+/// One digest epoch on the wire: either a full snapshot (`full`) or the
+/// shards that changed beyond the encoder's threshold since the last
+/// epoch, plus deaths. `at` is uniform across the epoch and acts as the
+/// heartbeat for every live shard, changed or not.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DigestDelta {
+    pub epoch: usize,
+    pub at: f64,
+    pub full: bool,
+    pub entries: Vec<Headroom>,
+    /// Shards that lost their digest since the last epoch.
+    pub dead: Vec<usize>,
+}
+
+/// Coordinator/leader side: tracks the last state the peer acked and
+/// emits minimal [`DigestDelta`]s, with a full snapshot every
+/// `resync_every` epochs (and on the first).
+#[derive(Debug, Clone)]
+pub struct DeltaEncoder {
+    threshold: f64,
+    resync_every: usize,
+    epochs_sent: usize,
+    last: Vec<Option<Headroom>>,
+}
+
+impl DeltaEncoder {
+    /// `threshold` is the absolute change in capacity *or* committed Σλ
+    /// (FPS) below which a shard is considered unchanged; 0 means every
+    /// change ships. `resync_every` ≥ 1: every n-th epoch is a full
+    /// snapshot regardless.
+    pub fn new(num_shards: usize, threshold: f64, resync_every: usize) -> DeltaEncoder {
+        DeltaEncoder {
+            threshold: threshold.max(0.0),
+            resync_every: resync_every.max(1),
+            epochs_sent: 0,
+            last: vec![None; num_shards],
+        }
+    }
+
+    fn changed(&self, prev: &Option<Headroom>, cur: &Option<Headroom>) -> bool {
+        match (prev, cur) {
+            (None, None) => false,
+            (Some(_), None) | (None, Some(_)) => true,
+            (Some(p), Some(c)) => {
+                (p.capacity - c.capacity).abs() > self.threshold
+                    || (p.committed - c.committed).abs() > self.threshold
+            }
+        }
+    }
+
+    /// Encode the digest epoch for `current` (one slot per shard, `None`
+    /// = no live digest) against the last encoded state.
+    pub fn encode(&mut self, epoch: usize, at: f64, current: &[Option<Headroom>]) -> DigestDelta {
+        let full = self.epochs_sent % self.resync_every == 0;
+        self.epochs_sent += 1;
+        let mut entries = Vec::new();
+        let mut dead = Vec::new();
+        for (shard, cur) in current.iter().enumerate() {
+            let prev = self.last.get(shard).cloned().flatten();
+            match cur {
+                Some(h) => {
+                    if full || self.changed(&prev, cur) {
+                        entries.push(Headroom { at, ..*h });
+                    }
+                }
+                None => {
+                    if prev.is_some() && !full {
+                        dead.push(shard);
+                    }
+                }
+            }
+        }
+        if full {
+            // A snapshot lists every live shard; absence means dead.
+            dead.clear();
+        }
+        // A full frame resets the reference state; a delta advances only
+        // the shards it shipped, so unshipped drift keeps accumulating
+        // against the *acked* state rather than silently vanishing.
+        if full {
+            self.last = current.to_vec();
+        } else {
+            for e in &entries {
+                if let Some(slot) = self.last.get_mut(e.shard) {
+                    *slot = Some(*e);
+                }
+            }
+            for &shard in &dead {
+                if let Some(slot) = self.last.get_mut(shard) {
+                    *slot = None;
+                }
+            }
+        }
+        DigestDelta {
+            epoch,
+            at,
+            full,
+            entries,
+            dead,
+        }
+    }
+}
+
+/// Receiver side: folds [`DigestDelta`]s back into a per-shard view.
+#[derive(Debug, Clone)]
+pub struct DeltaDecoder {
+    view: Vec<Option<Headroom>>,
+}
+
+impl DeltaDecoder {
+    pub fn new(num_shards: usize) -> DeltaDecoder {
+        DeltaDecoder {
+            view: vec![None; num_shards],
+        }
+    }
+
+    /// Apply one epoch. The delta's uniform `at` refreshes the heartbeat
+    /// of *every* surviving shard — unchanged shards stay alive without
+    /// being re-listed.
+    pub fn apply(&mut self, d: &DigestDelta) {
+        if d.full {
+            for slot in self.view.iter_mut() {
+                *slot = None;
+            }
+        }
+        for &shard in &d.dead {
+            if let Some(slot) = self.view.get_mut(shard) {
+                *slot = None;
+            }
+        }
+        for e in &d.entries {
+            if let Some(slot) = self.view.get_mut(e.shard) {
+                *slot = Some(*e);
+            }
+        }
+        for slot in self.view.iter_mut().flatten() {
+            slot.at = d.at;
+        }
+    }
+
+    /// The reconstructed per-shard digests (one slot per shard).
+    pub fn view(&self) -> &[Option<Headroom>] {
+        &self.view
+    }
+}
+
+// ---- JSON codec (audit/debug) ------------------------------------------
+
+fn headroom_to_json(h: &Headroom) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("shard".to_string(), Json::Num(h.shard as f64));
+    o.insert("capacity".to_string(), Json::Num(h.capacity));
+    o.insert("committed".to_string(), Json::Num(h.committed));
+    Json::Obj(o)
+}
+
+fn headroom_from_json(v: &Json, at: f64) -> Result<Headroom, WireError> {
+    Ok(Headroom {
+        shard: req_usize(v, "shard")?,
+        at,
+        capacity: req_f64(v, "capacity")?,
+        committed: req_f64(v, "committed")?,
+    })
+}
+
+/// Serialise a [`DigestDelta`]. Entry timestamps are uniform by
+/// construction, so only the epoch-level `at` is carried.
+pub fn delta_to_json(d: &DigestDelta) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("epoch".to_string(), Json::Num(d.epoch as f64));
+    o.insert("at".to_string(), Json::Num(d.at));
+    o.insert("full".to_string(), Json::Bool(d.full));
+    o.insert(
+        "entries".to_string(),
+        Json::Arr(d.entries.iter().map(headroom_to_json).collect()),
+    );
+    o.insert(
+        "dead".to_string(),
+        Json::Arr(d.dead.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    Json::Obj(o)
+}
+
+pub fn delta_from_json(v: &Json) -> Result<DigestDelta, WireError> {
+    let epoch = req_usize(v, "epoch")?;
+    let at = req_f64(v, "at")?;
+    let full = v
+        .get("full")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| WireError::new("missing or mistyped field \"full\""))?;
+    let mut entries = Vec::new();
+    match v.get("entries") {
+        Some(Json::Arr(xs)) => {
+            for x in xs {
+                entries.push(headroom_from_json(x, at)?);
+            }
+        }
+        _ => return Err(WireError::new("missing or mistyped field \"entries\"")),
+    }
+    let mut dead = Vec::new();
+    match v.get("dead") {
+        Some(Json::Arr(xs)) => {
+            for x in xs {
+                let n = x
+                    .as_f64()
+                    .ok_or_else(|| WireError::new("dead entry must be a shard id"))?;
+                if n < 0.0 || n.fract() != 0.0 {
+                    return Err(WireError::new("dead entry must be a shard id"));
+                }
+                dead.push(n as usize);
+            }
+        }
+        _ => return Err(WireError::new("missing or mistyped field \"dead\"")),
+    }
+    Ok(DigestDelta {
+        epoch,
+        at,
+        full,
+        entries,
+        dead,
+    })
+}
+
+// ---- binary codec (hot path) -------------------------------------------
+
+/// Compact binary [`DigestDelta`]: varint epoch/ids, adaptive floats,
+/// per-entry capacity+committed only (the uniform `at` ships once).
+pub fn encode_delta(d: &DigestDelta) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.varint(d.epoch as u64);
+    w.f64(d.at);
+    w.bool(d.full);
+    w.varint(d.entries.len() as u64);
+    for e in &d.entries {
+        w.varint(e.shard as u64);
+        w.f64(e.capacity);
+        w.f64(e.committed);
+    }
+    w.varint(d.dead.len() as u64);
+    for &s in &d.dead {
+        w.varint(s as u64);
+    }
+    w.into_bytes()
+}
+
+pub fn decode_delta(bytes: &[u8]) -> Result<DigestDelta, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let epoch = r.usize()?;
+    let at = r.f64()?;
+    let full = r.bool()?;
+    let n = r.usize()?;
+    let mut entries = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        entries.push(Headroom {
+            shard: r.usize()?,
+            at,
+            capacity: r.f64()?,
+            committed: r.f64()?,
+        });
+    }
+    let n = r.usize()?;
+    let mut dead = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        dead.push(r.usize()?);
+    }
+    if r.remaining() > 0 {
+        return Err(WireError::new("trailing bytes after digest delta"));
+    }
+    Ok(DigestDelta {
+        epoch,
+        at,
+        full,
+        entries,
+        dead,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    fn view(shard: usize, alive: bool, capacity: f64, committed: f64) -> ShardView {
+        ShardView {
+            shard,
+            alive,
+            capacity,
+            committed,
+        }
+    }
+
+    #[test]
+    fn groups_partition_every_shard_exactly_once() {
+        let groups = group_shards(10, 4);
+        assert_eq!(groups.len(), 3);
+        let all: Vec<usize> = groups.iter().flat_map(|g| g.members.clone()).collect();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        assert_eq!(groups[2].members, vec![8, 9]);
+        // Degenerate sizes still partition.
+        assert_eq!(group_shards(3, 0).len(), 3);
+        assert_eq!(group_shards(0, 4).len(), 0);
+    }
+
+    #[test]
+    fn aggregate_sums_live_members_and_tracks_worst_headroom() {
+        let groups = group_shards(4, 2);
+        let views = vec![
+            view(0, true, 10.0, 4.0),  // headroom +6
+            view(1, true, 10.0, 12.0), // headroom -2: out of band
+            view(2, true, 8.0, 8.0),   // headroom 0: in band (≤ tolerance)
+            view(3, false, 0.0, 0.0),  // dead
+        ];
+        let d0 = aggregate(&groups[0], &views);
+        assert_eq!(d0.alive, 2);
+        assert_eq!(d0.capacity, 20.0);
+        assert_eq!(d0.committed, 16.0);
+        assert_eq!(d0.headroom(), 4.0);
+        assert_eq!(d0.min_headroom, -2.0);
+        assert_eq!(d0.max_headroom, 6.0);
+        // Group nets out positive but a member is out of band: descend.
+        assert!(d0.needs_descent());
+        let d1 = aggregate(&groups[1], &views);
+        assert_eq!(d1.alive, 1);
+        assert!(!d1.needs_descent());
+        // All-dead group is inert.
+        let dead = aggregate(&groups[1], &[view(0, true, 1.0, 0.0)]);
+        assert_eq!(dead.alive, 0);
+        assert!(!dead.needs_descent());
+    }
+
+    fn random_state(rng: &mut Rng, n: usize) -> Vec<Option<Headroom>> {
+        (0..n)
+            .map(|shard| {
+                if rng.chance(0.15) {
+                    None
+                } else {
+                    Some(Headroom {
+                        shard,
+                        at: 0.0,
+                        capacity: rng.range(5.0, 20.0),
+                        committed: rng.range(0.0, 25.0),
+                    })
+                }
+            })
+            .collect()
+    }
+
+    fn drift(rng: &mut Rng, state: &mut [Option<Headroom>]) {
+        for (shard, slot) in state.iter_mut().enumerate() {
+            if slot.is_some() {
+                if rng.chance(0.1) {
+                    *slot = None;
+                } else if let Some(h) = slot.as_mut() {
+                    // Most shards drift a little; a few jump.
+                    let step = if rng.chance(0.2) { 3.0 } else { 0.05 };
+                    h.committed = (h.committed + rng.range(-step, step)).max(0.0);
+                }
+            } else if rng.chance(0.2) {
+                *slot = Some(Headroom {
+                    shard,
+                    at: 0.0,
+                    capacity: rng.range(5.0, 20.0),
+                    committed: rng.range(0.0, 25.0),
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn prop_threshold_zero_delta_stream_reconstructs_full_snapshots_exactly() {
+        check("delta stream == snapshots", Config::default(), |rng| {
+            let n = rng.int_in(1, 12) as usize;
+            let mut enc = DeltaEncoder::new(n, 0.0, rng.int_in(2, 6) as usize);
+            let mut dec = DeltaDecoder::new(n);
+            let mut state = random_state(rng, n);
+            for epoch in 0..10 {
+                let at = epoch as f64 * 10.0;
+                let stamped: Vec<Option<Headroom>> = state
+                    .iter()
+                    .map(|s| s.map(|h| Headroom { at, ..h }))
+                    .collect();
+                let delta = enc.encode(epoch, at, &stamped);
+                // The wire hop must be lossless too.
+                let wired =
+                    decode_delta(&encode_delta(&delta)).map_err(|e| e.to_string())?;
+                if wired != delta {
+                    return Err(format!("binary delta round trip: {wired:?} != {delta:?}"));
+                }
+                let json =
+                    delta_from_json(&delta_to_json(&delta)).map_err(|e| e.to_string())?;
+                if json != delta {
+                    return Err(format!("json delta round trip: {json:?} != {delta:?}"));
+                }
+                dec.apply(&delta);
+                if dec.view() != stamped.as_slice() {
+                    return Err(format!(
+                        "epoch {epoch}: decoded view {:?} != snapshot {stamped:?}",
+                        dec.view()
+                    ));
+                }
+                drift(rng, &mut state);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_thresholded_views_stay_within_threshold_of_truth() {
+        check("delta threshold error bound", Config::default(), |rng| {
+            let n = rng.int_in(2, 10) as usize;
+            let threshold = rng.range(0.1, 1.0);
+            let mut enc = DeltaEncoder::new(n, threshold, 4);
+            let mut dec = DeltaDecoder::new(n);
+            let mut state = random_state(rng, n);
+            for epoch in 0..12 {
+                let at = epoch as f64 * 10.0;
+                let stamped: Vec<Option<Headroom>> = state
+                    .iter()
+                    .map(|s| s.map(|h| Headroom { at, ..h }))
+                    .collect();
+                dec.apply(&enc.encode(epoch, at, &stamped));
+                for (truth, got) in stamped.iter().zip(dec.view()) {
+                    match (truth, got) {
+                        (Some(t), Some(g)) => {
+                            // Drift below the threshold may be withheld,
+                            // but never more than the threshold's worth.
+                            if (t.committed - g.committed).abs() > threshold + 1e-9 {
+                                return Err(format!(
+                                    "epoch {epoch}: committed skew {} > threshold {threshold}",
+                                    (t.committed - g.committed).abs()
+                                ));
+                            }
+                            if (t.capacity - g.capacity).abs() > threshold + 1e-9 {
+                                return Err("capacity skew past threshold".to_string());
+                            }
+                            if g.at != at {
+                                return Err(format!("heartbeat not refreshed at {epoch}"));
+                            }
+                        }
+                        // Presence changes always ship.
+                        (None, Some(_)) | (Some(_), None) => {
+                            return Err(format!("epoch {epoch}: presence skew"))
+                        }
+                        (None, None) => {}
+                    }
+                }
+                drift(rng, &mut state);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deltas_ship_fewer_entries_than_snapshots_under_small_churn() {
+        // The point of the exercise: with mostly-idle shards, a delta
+        // epoch is much smaller than a snapshot epoch.
+        let n = 64;
+        let mut enc = DeltaEncoder::new(n, 0.5, 1000);
+        let mut state: Vec<Option<Headroom>> = (0..n)
+            .map(|shard| {
+                Some(Headroom {
+                    shard,
+                    at: 0.0,
+                    capacity: 10.0,
+                    committed: 5.0,
+                })
+            })
+            .collect();
+        let snapshot = enc.encode(0, 0.0, &state);
+        assert!(snapshot.full);
+        assert_eq!(snapshot.entries.len(), n);
+        // One shard moves materially; the rest jitter below threshold.
+        for (i, slot) in state.iter_mut().enumerate() {
+            let h = slot.as_mut().unwrap();
+            h.at = 10.0;
+            h.committed += if i == 7 { 4.0 } else { 0.01 };
+        }
+        let delta = enc.encode(1, 10.0, &state);
+        assert!(!delta.full);
+        assert_eq!(delta.entries.len(), 1);
+        assert_eq!(delta.entries[0].shard, 7);
+        assert!(delta.dead.is_empty());
+        let bytes = encode_delta(&delta).len();
+        let snap_bytes = encode_delta(&snapshot).len();
+        assert!(
+            bytes * 10 < snap_bytes,
+            "delta {bytes}B should be ≪ snapshot {snap_bytes}B"
+        );
+    }
+
+    #[test]
+    fn malformed_delta_payloads_are_errors() {
+        let d = DigestDelta {
+            epoch: 2,
+            at: 20.0,
+            full: false,
+            entries: vec![Headroom {
+                shard: 1,
+                at: 20.0,
+                capacity: 9.5,
+                committed: 3.25,
+            }],
+            dead: vec![0],
+        };
+        let bytes = encode_delta(&d);
+        for cut in 0..bytes.len() {
+            assert!(decode_delta(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut long = bytes;
+        long.push(0);
+        assert!(decode_delta(&long).is_err());
+        assert!(delta_from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

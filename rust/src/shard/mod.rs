@@ -24,6 +24,16 @@
 //!   polls and serve epoch slices over length-prefixed frames, and a
 //!   dropped connection surfaces as shard loss — the gossip planner
 //!   re-places the orphans within one interval.
+//! * [`group`] — two-level coordination: shard *groups* whose digests
+//!   aggregate member headroom (Σμ, Σλ, min/max per-member), so the
+//!   coordinator plans over ⌈M/k⌉ aggregates and descends into members
+//!   only on imbalance; plus delta-encoded digest streams (changed
+//!   shards only, periodic full-snapshot resync) with exact-parity
+//!   JSON and binary codecs.
+//! * [`plan`] — the migration planner split out of event fan-out:
+//!   flat or grouped planning as a pure function from gossip state to
+//!   migrations plus deterministic work counters ([`plan::PlanStats`]),
+//!   independently benchable (`benches/coordinator_scale.rs`).
 //! * [`autoscale`] — shard-local capacity control: an embedded
 //!   [`crate::autoscale::AutoscaleController`] runs the §III-B closed
 //!   loop against the shard's own pool between epoch slices, digests
@@ -33,12 +43,19 @@
 
 pub mod autoscale;
 pub mod gossip;
+pub mod group;
 pub mod placement;
+pub mod plan;
 pub mod remote;
 pub mod sim;
 
 pub use autoscale::{projected_capacity, ShardAutoscaler};
 pub use gossip::{plan_moves, GossipTable, Headroom, Migration};
+pub use group::{
+    aggregate, decode_delta, delta_from_json, delta_to_json, encode_delta, group_shards,
+    DeltaDecoder, DeltaEncoder, DigestDelta, GroupDigest, ShardGroup,
+};
+pub use plan::{plan, plan_flat, plan_grouped, PlanStats};
 pub use placement::{fnv1a, PlacementPolicy, ShardView};
 pub use remote::{run_sharded_remote, serve_shard, RemoteShard, RemoteTransport};
 pub use sim::{

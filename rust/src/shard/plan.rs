@@ -1,0 +1,364 @@
+//! The migration planner, split out of event fan-out.
+//!
+//! Before this module the epoch loop called
+//! [`crate::shard::gossip::plan_moves`] inline and immediately fanned
+//! the resulting detach→attach events out to shards — the two concerns
+//! were inseparable and neither was benchable alone. Now the *plan*
+//! phase is a pure function from gossip state to migrations plus
+//! deterministic work counters ([`PlanStats`]), and the runners keep
+//! only the fan-out.
+//!
+//! Two strategies share one entry point ([`plan`]):
+//!
+//! * **flat** — the original single-level planner: examine every shard
+//!   view, O(M) per epoch.
+//! * **grouped** — two-level: fold views into [`GroupDigest`]s
+//!   ([`crate::shard::group`]), plan over G = ⌈M/k⌉ aggregates, and
+//!   *descend* into a group's members only when its digest shows a
+//!   member out of band. Target capacity comes from the best-headroom
+//!   in-band groups until the gathered headroom covers the measured
+//!   excess; everything else stays masked. The per-epoch coordinator
+//!   cost is O(G + descended members) — sub-linear in M while overload
+//!   is localised, which is exactly what `benches/coordinator_scale.rs`
+//!   pins.
+//!
+//! The grouped planner degrades to the flat one: when every group needs
+//! descent the candidate set is every shard and the move list is
+//! *identical* (the underlying [`plan_moves`] is shared), a property the
+//! tests pin.
+
+use crate::shard::gossip::{plan_moves, Migration};
+use crate::shard::group::{aggregate, group_shards, GroupDigest};
+use crate::shard::placement::ShardView;
+
+/// Deterministic work counters for one plan invocation. Wall-clock
+/// timings ride the PR 7 phase histograms; these counters are the
+/// noise-free sub-linearity witness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlanStats {
+    /// Group digests read (0 for the flat planner).
+    pub groups_total: usize,
+    /// Groups whose members the planner descended into.
+    pub groups_descended: usize,
+    /// Per-shard views examined (flat: all of them; grouped: members of
+    /// descended + target groups only).
+    pub shards_examined: usize,
+    /// Migrations planned.
+    pub migrations: usize,
+}
+
+impl PlanStats {
+    /// Total coordinator-side reads this epoch: group digests plus
+    /// per-shard views. The bench pins this growing sub-linearly in M.
+    pub fn reads(&self) -> usize {
+        self.groups_total + self.shards_examined
+    }
+
+    /// Fold counters across epochs (for per-run reporting).
+    pub fn absorb(&mut self, other: &PlanStats) {
+        self.groups_total += other.groups_total;
+        self.groups_descended += other.groups_descended;
+        self.shards_examined += other.shards_examined;
+        self.migrations += other.migrations;
+    }
+}
+
+/// Single-level planning: examine every view.
+pub fn plan_flat(
+    views: &[ShardView],
+    residents: &[(usize, f64, usize)],
+) -> (Vec<Migration>, PlanStats) {
+    let moves = plan_moves(views, residents);
+    let stats = PlanStats {
+        groups_total: 0,
+        groups_descended: 0,
+        shards_examined: views.len(),
+        migrations: moves.len(),
+    };
+    (moves, stats)
+}
+
+/// Two-level planning over groups of `group_size` shards.
+pub fn plan_grouped(
+    views: &[ShardView],
+    residents: &[(usize, f64, usize)],
+    group_size: usize,
+) -> (Vec<Migration>, PlanStats) {
+    let groups = group_shards(views.len(), group_size);
+    let digests: Vec<GroupDigest> = groups.iter().map(|g| aggregate(g, views)).collect();
+
+    // Sources: any group whose digest shows a member out of band.
+    let mut descended = vec![false; groups.len()];
+    let mut excess = 0.0;
+    for (gi, d) in digests.iter().enumerate() {
+        if d.needs_descent() {
+            descended[gi] = true;
+            for &m in &groups[gi].members {
+                let v = &views[m];
+                if v.alive && !v.in_band() {
+                    excess += v.committed - v.capacity;
+                }
+            }
+        }
+    }
+
+    let mut stats = PlanStats {
+        groups_total: groups.len(),
+        groups_descended: 0,
+        shards_examined: 0,
+        migrations: 0,
+    };
+    if excess <= 0.0 {
+        // Every group in band: nothing to plan, nothing descended.
+        return (Vec::new(), stats);
+    }
+
+    // Targets: best-headroom in-band groups until the gathered headroom
+    // covers the excess. In-band groups have no negative-headroom
+    // member, so the aggregate headroom is exactly the absorbable slack.
+    let mut order: Vec<usize> = (0..groups.len()).filter(|&gi| !descended[gi]).collect();
+    order.sort_by(|&a, &b| {
+        digests[b]
+            .max_headroom
+            .partial_cmp(&digests[a].max_headroom)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut gathered = 0.0;
+    for gi in order {
+        if gathered >= excess {
+            break;
+        }
+        descended[gi] = true;
+        gathered += digests[gi].headroom().max(0.0);
+    }
+
+    // Mask every shard outside the descended groups and reuse the flat
+    // planner on the shrunken candidate set — identical move semantics,
+    // smaller working set.
+    let mut masked = views.to_vec();
+    let mut candidate = vec![false; views.len()];
+    for (gi, g) in groups.iter().enumerate() {
+        if !descended[gi] {
+            continue;
+        }
+        stats.groups_descended += 1;
+        for &m in &g.members {
+            candidate[m] = true;
+        }
+    }
+    for v in masked.iter_mut() {
+        if !candidate[v.shard] {
+            v.alive = false;
+        }
+    }
+    stats.shards_examined = candidate.iter().filter(|&&c| c).count();
+
+    let moves = plan_moves(&masked, residents);
+    stats.migrations = moves.len();
+    (moves, stats)
+}
+
+/// Plan band-restoring migrations. `group_size = None` is the flat
+/// planner; `Some(k)` plans over ⌈M/k⌉ group aggregates and descends
+/// only on imbalance.
+pub fn plan(
+    views: &[ShardView],
+    residents: &[(usize, f64, usize)],
+    group_size: Option<usize>,
+) -> (Vec<Migration>, PlanStats) {
+    match group_size {
+        None => plan_flat(views, residents),
+        Some(k) => plan_grouped(views, residents, k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    fn view(shard: usize, capacity: f64, committed: f64) -> ShardView {
+        ShardView {
+            shard,
+            alive: true,
+            capacity,
+            committed,
+        }
+    }
+
+    #[test]
+    fn flat_and_grouped_agree_when_every_group_descends() {
+        // Both groups hold an out-of-band shard: the grouped candidate
+        // set is every shard and the plans must be identical.
+        let views = vec![
+            view(0, 10.0, 14.0),
+            view(1, 10.0, 2.0),
+            view(2, 10.0, 13.0),
+            view(3, 10.0, 1.0),
+        ];
+        let residents = [
+            (0, 4.0, 0),
+            (1, 10.0, 0),
+            (2, 2.0, 1),
+            (3, 3.0, 2),
+            (4, 10.0, 2),
+            (5, 1.0, 3),
+        ];
+        let (flat_moves, flat_stats) = plan_flat(&views, &residents);
+        let (grouped_moves, grouped_stats) = plan_grouped(&views, &residents, 2);
+        assert!(!flat_moves.is_empty());
+        assert_eq!(grouped_moves, flat_moves);
+        assert_eq!(grouped_stats.shards_examined, 4);
+        assert_eq!(grouped_stats.groups_descended, 2);
+        assert_eq!(flat_stats.shards_examined, 4);
+        assert_eq!(flat_stats.groups_total, 0);
+    }
+
+    #[test]
+    fn in_band_fleet_examines_zero_shards() {
+        let views: Vec<ShardView> = (0..64).map(|i| view(i, 10.0, 5.0)).collect();
+        let residents: Vec<(usize, f64, usize)> =
+            (0..64).map(|i| (i, 5.0, i)).collect();
+        let (moves, stats) = plan_grouped(&views, &residents, 8);
+        assert!(moves.is_empty());
+        assert_eq!(stats.groups_total, 8);
+        assert_eq!(stats.groups_descended, 0);
+        assert_eq!(stats.shards_examined, 0);
+        assert_eq!(stats.reads(), 8);
+        // The flat planner reads 8× as much for the same (empty) answer.
+        let (_, flat) = plan_flat(&views, &residents);
+        assert_eq!(flat.reads(), 64);
+    }
+
+    #[test]
+    fn localized_overload_descends_only_the_involved_groups() {
+        // 64 shards in 8 groups; one shard in group 0 is overloaded and
+        // group capacity exists nearby. Only source + enough target
+        // groups are examined.
+        let mut views: Vec<ShardView> = (0..64).map(|i| view(i, 10.0, 8.0)).collect();
+        for v in views.iter_mut().skip(56) {
+            v.committed = 3.0; // group 7 holds the slack: 7 FPS/shard
+        }
+        let mut residents: Vec<(usize, f64, usize)> = (0..64)
+            .map(|i| (i, views[i].committed, i))
+            .collect();
+        residents[3] = (3, 8.0, 3);
+        residents.push((64, 6.0, 3)); // the misfit the planner can shed
+        views[3].committed = 14.0; // 4 FPS over the band
+        let (moves, stats) = plan_grouped(&views, &residents, 8);
+        assert_eq!(stats.groups_total, 8);
+        // Source group 0 plus best-headroom target group 7: 16 shards
+        // examined, not 64.
+        assert_eq!(stats.groups_descended, 2);
+        assert_eq!(stats.shards_examined, 16);
+        assert!(stats.reads() < 64, "reads {} vs flat 64", stats.reads());
+        // The 6-FPS stream lands on the best-headroom shard of group 7.
+        assert_eq!(moves, vec![Migration { stream: 64, from: 3, to: 56 }]);
+        assert_eq!(stats.migrations, 1);
+    }
+
+    #[test]
+    fn intra_group_overload_is_fixed_inside_the_source_group() {
+        // The overloaded member's own group has the headroom: the move
+        // stays in-group (one conservative target group is still
+        // reserved, but nothing lands there).
+        let mut views: Vec<ShardView> = (0..16).map(|i| view(i, 10.0, 9.0)).collect();
+        views[1].committed = 12.0;
+        views[2].committed = 2.0;
+        let mut residents: Vec<(usize, f64, usize)> =
+            (0..16).map(|i| (i, views[i].committed, i)).collect();
+        residents[1] = (1, 9.0, 1);
+        residents.push((16, 3.0, 1));
+        let (moves, stats) = plan_grouped(&views, &residents, 4);
+        assert_eq!(moves, vec![Migration { stream: 16, from: 1, to: 2 }]);
+        assert_eq!(stats.groups_descended, 2);
+        assert_eq!(stats.shards_examined, 8);
+    }
+
+    #[test]
+    fn prop_one_group_spanning_the_fleet_is_the_flat_planner() {
+        check("one group == flat", Config::default(), |rng| {
+            let m = rng.int_in(2, 12) as usize;
+            let mut views = Vec::new();
+            let mut residents = Vec::new();
+            let mut next_stream = 0usize;
+            for shard in 0..m {
+                let capacity = rng.range(5.0, 15.0);
+                let mut committed = 0.0;
+                for _ in 0..rng.int_in(0, 4) {
+                    let demand = rng.range(0.5, 6.0);
+                    residents.push((next_stream, demand, shard));
+                    committed += demand;
+                    next_stream += 1;
+                }
+                views.push(ShardView {
+                    shard,
+                    alive: rng.chance(0.9),
+                    capacity,
+                    committed,
+                });
+            }
+            let (flat_moves, _) = plan_flat(&views, &residents);
+            // One group spanning the fleet descends iff anything is out
+            // of band, and then the candidate set is every shard.
+            let (grouped_moves, stats) = plan_grouped(&views, &residents, m);
+            if grouped_moves != flat_moves {
+                return Err(format!("{grouped_moves:?} != {flat_moves:?}"));
+            }
+            if !flat_moves.is_empty() && stats.shards_examined != m {
+                return Err(format!(
+                    "single group with moves should examine all {m} shards, examined {}",
+                    stats.shards_examined
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_grouped_moves_restore_the_band_no_worse_than_masked_flat() {
+        // Safety, not optimality: every grouped move is one the flat
+        // planner could have made (same shared plan_moves), and no move
+        // pushes a target out of band.
+        check("grouped moves are band-safe", Config::default(), |rng| {
+            let m = rng.int_in(4, 16) as usize;
+            let k = rng.int_in(2, 5) as usize;
+            let mut views = Vec::new();
+            let mut residents = Vec::new();
+            let mut next_stream = 0usize;
+            for shard in 0..m {
+                let capacity = rng.range(5.0, 15.0);
+                let mut committed = 0.0;
+                for _ in 0..rng.int_in(0, 5) {
+                    let demand = rng.range(0.5, 6.0);
+                    residents.push((next_stream, demand, shard));
+                    committed += demand;
+                    next_stream += 1;
+                }
+                views.push(ShardView {
+                    shard,
+                    alive: true,
+                    capacity,
+                    committed,
+                });
+            }
+            let (moves, _) = plan_grouped(&views, &residents, k);
+            let mut after = views.clone();
+            for mv in &moves {
+                let demand = residents
+                    .iter()
+                    .find(|&&(idx, _, _)| idx == mv.stream)
+                    .map(|&(_, d, _)| d)
+                    .ok_or_else(|| format!("move of unknown stream {}", mv.stream))?;
+                after[mv.from].committed -= demand;
+                after[mv.to].committed += demand;
+                if !after[mv.to].in_band() {
+                    return Err(format!("move {mv:?} pushed target out of band"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

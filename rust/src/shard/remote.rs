@@ -54,13 +54,15 @@ use crate::fleet::sim::{run_fleet_with, Scenario};
 use crate::fleet::stream::StreamSpec;
 use crate::gate::GateConfig;
 use crate::shard::autoscale::ShardAutoscaler;
-use crate::shard::gossip::{plan_moves, GossipTable};
+use crate::shard::gossip::GossipTable;
 use crate::shard::placement::ShardView;
+use crate::shard::plan::{plan, PlanStats};
 use crate::shard::sim::{
     record_coordinator_telemetry, record_slice_telemetry, EpochPhases, ShardControl, ShardReport,
     ShardScenario, ShardStreamReport,
 };
 use crate::telemetry::Registry;
+use crate::transport::frame::Codec;
 use crate::transport::msg::{SliceStream, TransportMsg, TRANSPORT_VERSION};
 use crate::transport::net::{connect_with_backoff, Endpoint, FrameConn, Listener, TransportError};
 use crate::util::stats::Percentiles;
@@ -172,6 +174,11 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
             Err(TransportError::PeerClosed { .. }) => return Ok(()),
             Err(e) => return Err(e),
         };
+        // Codec mirroring: answer in whatever codec the coordinator
+        // last spoke, so a coordinator switching to the compact binary
+        // frames after the handshake gets binary digests and slices
+        // back without any negotiation message.
+        conn.set_codec(conn.last_recv_codec());
         match msg {
             TransportMsg::Hello {
                 protocol,
@@ -453,6 +460,9 @@ pub fn run_sharded_remote(
             Ok(other) => return Err(anyhow!("shard {sh}: expected welcome, got {}", other.label())),
             Err(e) => return Err(anyhow!("shard {sh}: handshake failed: {e}")),
         }
+        // The handshake always rides JSON frames; everything after it
+        // uses the scenario codec, which the shard mirrors per frame.
+        conn.set_codec(scenario.codec);
         conns.push(Some(conn));
     }
 
@@ -486,6 +496,7 @@ pub fn run_sharded_remote(
     // shards ship cumulative counters, not deltas).
     let mut snapshots: Vec<Option<Registry>> = vec![None; m];
     let mut phase_timings: Vec<EpochPhases> = Vec::new();
+    let mut plan_stats = PlanStats::default();
 
     // Kill a shard in the coordinator's view: drop the connection,
     // orphan its residents (they re-place at the next placement pass).
@@ -622,7 +633,9 @@ pub fn run_sharded_remote(
                     }
                 })
                 .collect();
-            for mv in plan_moves(&views, &residents) {
+            let (moves, stats) = plan(&views, &residents, scenario.groups);
+            plan_stats.absorb(&stats);
+            for mv in moves {
                 if !route(
                     mv.from,
                     t0,
@@ -834,6 +847,7 @@ pub fn run_sharded_remote(
         epochs_run,
         telemetry,
         phase_timings,
+        plan_stats,
     })
 }
 
@@ -935,6 +949,56 @@ mod tests {
             assert!(matches!(s.final_shard, Some(1) | Some(2)), "{:?}", s.final_shard);
             assert!(s.frames_processed > 0);
         }
+    }
+
+    #[test]
+    fn binary_codec_remote_run_matches_the_json_run_exactly() {
+        // Everything after the handshake — polls, digests, control,
+        // ticks, slices, telemetry — rides binary frames, with the
+        // shard mirroring the coordinator's codec per frame. The run
+        // outcome (frames, control log, scraped registry) must be
+        // bit-identical to the JSON-framed run.
+        let mk = || {
+            ShardScenario::new(
+                vec![pool(3, 2.5), pool(3, 2.5)],
+                uniform_streams(6, 2.5, 120, 4),
+            )
+            .with_gossip(10.0)
+            .with_epochs(6)
+            .with_seed(83)
+            .with_telemetry()
+        };
+        let json_run = run_sharded_remote(&mk(), RemoteTransport::Uds).expect("json run");
+        let bin_run = run_sharded_remote(&mk().with_codec(Codec::Binary), RemoteTransport::Uds)
+            .expect("binary run");
+        assert_eq!(bin_run.total_frames(), json_run.total_frames());
+        assert_eq!(bin_run.total_processed(), json_run.total_processed());
+        assert_eq!(bin_run.control_log, json_run.control_log);
+        assert_eq!(bin_run.telemetry, json_run.telemetry);
+        assert_eq!(bin_run.plan_stats, json_run.plan_stats);
+    }
+
+    #[test]
+    fn grouped_remote_planner_matches_the_inproc_counters() {
+        // The remote coordinator runs the same grouped planner over the
+        // same shard-computed digests, so the deterministic work
+        // counters land identically in both modes.
+        let mk = || {
+            ShardScenario::new(
+                vec![pool(3, 2.5), pool(3, 2.5), pool(3, 2.5), pool(3, 2.5)],
+                uniform_streams(8, 2.0, 160, 4),
+            )
+            .with_gossip(10.0)
+            .with_epochs(6)
+            .with_seed(9)
+            .with_groups(2)
+        };
+        let inproc = crate::shard::sim::run_sharded(&mk());
+        let remote = run_sharded_remote(&mk(), RemoteTransport::Tcp).expect("remote run");
+        assert_eq!(remote.plan_stats, inproc.plan_stats);
+        assert_eq!(remote.plan_stats.shards_examined, 0);
+        assert!(remote.plan_stats.groups_total > 0);
+        assert_eq!(remote.migrations, 0);
     }
 
     #[test]

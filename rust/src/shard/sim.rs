@@ -33,15 +33,17 @@
 use std::collections::BTreeMap;
 
 use crate::autoscale::policy::AutoscaleConfig;
-use crate::control::{ControlAction, ControlOrigin, EventLog, WireEvent};
+use crate::control::{binary, ControlAction, ControlOrigin, EventLog, WireEvent};
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::sim::{run_fleet_with, Scenario};
 use crate::fleet::stream::StreamSpec;
 use crate::gate::GateConfig;
 use crate::shard::autoscale::ShardAutoscaler;
-use crate::shard::gossip::{plan_moves, GossipTable, Headroom};
+use crate::shard::gossip::{GossipTable, Headroom};
 use crate::shard::placement::{PlacementPolicy, ShardView};
+use crate::shard::plan::{plan, PlanStats};
+use crate::transport::frame::Codec;
 use crate::telemetry::{origin_class, MetricKey, Registry};
 use crate::util::json::Json;
 use crate::util::stats::Percentiles;
@@ -83,6 +85,18 @@ pub struct ShardScenario {
     /// plus wall-clock coordinator phase timings
     /// ([`ShardReport::phase_timings`]).
     pub telemetry: bool,
+    /// Wire codec for the encode→decode hop every routed control event
+    /// crosses: JSON ([`Codec::Json`], the audit/debug format, default)
+    /// or the compact binary codec ([`Codec::Binary`],
+    /// [`crate::control::binary`]). The codecs are exact-parity — both
+    /// decode to the identical [`WireEvent`], so the run outcome and
+    /// audit log are codec-independent (pinned in tests).
+    pub codec: Codec,
+    /// Two-level coordination: plan rebalances over ⌈M/k⌉ shard groups
+    /// of size `k` ([`crate::shard::group`]), descending into member
+    /// views only where a group digest shows imbalance. `None` (the
+    /// default) plans flat over every shard.
+    pub groups: Option<usize>,
 }
 
 impl ShardScenario {
@@ -99,6 +113,8 @@ impl ShardScenario {
             autoscale: None,
             gate: None,
             telemetry: false,
+            codec: Codec::Json,
+            groups: None,
         }
     }
 
@@ -144,6 +160,16 @@ impl ShardScenario {
 
     pub fn with_telemetry(mut self) -> ShardScenario {
         self.telemetry = true;
+        self
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> ShardScenario {
+        self.codec = codec;
+        self
+    }
+
+    pub fn with_groups(mut self, group_size: usize) -> ShardScenario {
+        self.groups = Some(group_size);
         self
     }
 }
@@ -299,6 +325,13 @@ pub struct ShardReport {
     /// (empty unless [`ShardScenario::telemetry`] was set). Not part of
     /// any determinism or cross-mode parity contract.
     pub phase_timings: Vec<EpochPhases>,
+    /// Deterministic planner work counters accumulated over every
+    /// rebalance round: group digests read, groups descended, per-shard
+    /// views examined, migrations planned. Identical between the
+    /// in-process and remote runners for the same scenario (part of the
+    /// cross-mode parity surface); `reads()` is the sub-linearity
+    /// witness `benches/coordinator_scale.rs` pins.
+    pub plan_stats: PlanStats,
 }
 
 impl ShardReport {
@@ -564,6 +597,24 @@ impl ShardReport {
             })
             .collect();
         root.insert("streams".to_string(), Json::Arr(streams));
+        let mut plan = BTreeMap::new();
+        plan.insert(
+            "groups_total".to_string(),
+            Json::Num(self.plan_stats.groups_total as f64),
+        );
+        plan.insert(
+            "groups_descended".to_string(),
+            Json::Num(self.plan_stats.groups_descended as f64),
+        );
+        plan.insert(
+            "shards_examined".to_string(),
+            Json::Num(self.plan_stats.shards_examined as f64),
+        );
+        plan.insert(
+            "reads".to_string(),
+            Json::Num(self.plan_stats.reads() as f64),
+        );
+        root.insert("plan_stats".to_string(), Json::Obj(plan));
         root.insert(
             "control_log".to_string(),
             Json::Arr(
@@ -612,18 +663,34 @@ impl StreamRun {
     }
 }
 
-/// Route one control action to `shard` **through the wire**: encode to
-/// JSON, decode, apply the decoded action to the residency map, log it.
+/// Push one event through the chosen wire codec: encode, decode, return
+/// the decoded event — the hop every routed control event crosses. The
+/// codecs are exact-parity (property-tested in [`crate::control::binary`]),
+/// so the decoded event is identical either way.
+pub(crate) fn wire_hop(event: &WireEvent, codec: Codec) -> WireEvent {
+    match codec {
+        Codec::Json => {
+            WireEvent::decode(&event.encode()).expect("control wire must round-trip")
+        }
+        Codec::Binary => binary::decode_event(&binary::encode_event(event))
+            .expect("control wire must round-trip"),
+    }
+}
+
+/// Route one control action to `shard` **through the wire**: encode in
+/// the scenario's codec, decode, apply the decoded action to the
+/// residency map, log it.
+#[allow(clippy::too_many_arguments)]
 fn route(
     log: &mut Vec<ShardControl>,
     streams: &mut [StreamRun],
+    codec: Codec,
     shard: usize,
     at: f64,
     origin: ControlOrigin,
     action: ControlAction,
 ) {
-    let encoded = WireEvent::action(at, origin, action).encode();
-    let decoded = WireEvent::decode(&encoded).expect("control wire must round-trip");
+    let decoded = wire_hop(&WireEvent::action(at, origin, action), codec);
     match decoded.as_action() {
         Some(ControlAction::AttachStream(spec)) => {
             if let Some(i) = streams.iter().position(|s| s.spec.name == spec.name) {
@@ -698,6 +765,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
     let mut epochs_run = 0usize;
     let mut telemetry = Registry::new();
     let mut phase_timings: Vec<EpochPhases> = Vec::new();
+    let mut plan_stats = PlanStats::default();
 
     for epoch in 0..scenario.epochs {
         let t0 = epoch as f64 * tick;
@@ -743,7 +811,15 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 continue;
             };
             let attach = ControlAction::AttachStream(streams[i].spec.clone());
-            route(&mut log, &mut streams, dst, t0, ControlOrigin::Placement, attach);
+            route(
+                &mut log,
+                &mut streams,
+                scenario.codec,
+                dst,
+                t0,
+                ControlOrigin::Placement,
+                attach,
+            );
             views[dst].committed += streams[i].spec.demand();
             if let Some(lost_at) = streams[i].orphaned_at.take() {
                 let gap = (t0 - lost_at).max(0.0);
@@ -778,17 +854,28 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                     }
                 })
                 .collect();
-            for mv in plan_moves(&views, &residents) {
+            let (moves, stats) = plan(&views, &residents, scenario.groups);
+            plan_stats.absorb(&stats);
+            for mv in moves {
                 route(
                     &mut log,
                     &mut streams,
+                    scenario.codec,
                     mv.from,
                     t0,
                     ControlOrigin::Placement,
                     ControlAction::DetachStream(mv.stream),
                 );
                 let attach = ControlAction::AttachStream(streams[mv.stream].spec.clone());
-                route(&mut log, &mut streams, mv.to, t0, ControlOrigin::Placement, attach);
+                route(
+                    &mut log,
+                    &mut streams,
+                    scenario.codec,
+                    mv.to,
+                    t0,
+                    ControlOrigin::Placement,
+                    attach,
+                );
                 streams[mv.stream].migrations += 1;
                 migrations += 1;
             }
@@ -865,8 +952,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                         slice_seed,
                     );
                     for event in scale_events {
-                        let decoded = WireEvent::decode(&event.encode())
-                            .expect("scale wire must round-trip");
+                        let decoded = wire_hop(&event, scenario.codec);
                         log.push(ShardControl { shard: sh, event: decoded });
                     }
                     report
@@ -888,8 +974,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                         {
                             let Some(&global) = idx_map.get(stream) else { continue };
                             let event = WireEvent::gate(t0 + ev.at, global, frame, verdict);
-                            let decoded = WireEvent::decode(&event.encode())
-                                .expect("gate wire must round-trip");
+                            let decoded = wire_hop(&event, scenario.codec);
                             log.push(ShardControl { shard: sh, event: decoded });
                         }
                     }
@@ -999,6 +1084,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
         epochs_run,
         telemetry,
         phase_timings,
+        plan_stats,
     }
 }
 
@@ -1299,8 +1385,101 @@ mod tests {
         assert_eq!(shards.len(), 2);
         let streams = back.get("streams").unwrap().as_arr().unwrap();
         assert_eq!(streams.len(), 4);
+        // Planner counters surface in the JSON (flat: every alive view
+        // examined at each rebalance round).
+        let plan = back.get("plan_stats").unwrap();
+        assert_eq!(
+            plan.get("reads").and_then(Json::as_i64),
+            Some(report.plan_stats.reads() as i64)
+        );
         // Tables render with one row per entity.
         assert_eq!(report.stream_table().rows.len(), 4);
         assert_eq!(report.shard_table().rows.len(), 2);
+    }
+
+    #[test]
+    fn binary_codec_run_is_bit_identical_to_the_json_run() {
+        // Same scenario, both wire codecs, with autoscale + gate so the
+        // log carries every payload family: the run outcome and the
+        // audit log must be exactly equal — the codec changes bytes on
+        // the wire, never the decoded events.
+        let base = ShardScenario::new(
+            vec![pool(4, 2.5), pool(4, 2.5)],
+            uniform_streams(6, 3.0, 120, 4),
+        )
+        .with_policy(PlacementPolicy::RoundRobin)
+        .with_gossip(10.0)
+        .with_epochs(8)
+        .with_seed(23)
+        .with_autoscale(AutoscaleConfig::default())
+        .with_gate(GateConfig::default());
+        let json_run = run_sharded(&base);
+        let bin_run = run_sharded(&base.with_codec(Codec::Binary));
+        assert_eq!(bin_run.control_log, json_run.control_log);
+        assert_eq!(bin_run.total_processed(), json_run.total_processed());
+        assert_eq!(bin_run.migrations, json_run.migrations);
+        assert_eq!(bin_run.audit_log(), json_run.audit_log());
+    }
+
+    #[test]
+    fn grouped_planning_spanning_the_fleet_matches_flat_exactly() {
+        // One group covering every shard always descends, so grouped
+        // planning degenerates to the flat planner: identical control
+        // log and migrations, with the group overhead visible only in
+        // the counters.
+        let mk = || {
+            let mut streams = Vec::new();
+            for (i, fps) in [9.0, 1.0, 9.0, 1.0].iter().enumerate() {
+                streams.push(
+                    StreamSpec::new(&format!("s{i}"), *fps, (*fps * 60.0) as u64).with_window(4),
+                );
+            }
+            ShardScenario::new(vec![pool(6, 2.5), pool(6, 2.5)], streams)
+                .with_policy(PlacementPolicy::RoundRobin)
+                .with_gossip(10.0)
+                .with_epochs(8)
+                .with_seed(5)
+        };
+        let flat = run_sharded(&mk());
+        let grouped = run_sharded(&mk().with_groups(2));
+        assert_eq!(grouped.control_log, flat.control_log);
+        assert_eq!(grouped.migrations, flat.migrations);
+        assert_eq!(grouped.total_processed(), flat.total_processed());
+        assert!(grouped.plan_stats.groups_total > 0);
+        assert_eq!(
+            grouped.plan_stats.shards_examined,
+            flat.plan_stats.shards_examined
+        );
+    }
+
+    #[test]
+    fn in_band_fleet_plans_from_group_digests_alone() {
+        // Balanced fleet: no group ever shows negative member headroom,
+        // so the grouped planner never descends — per-shard views read
+        // at rebalance drop to zero while the flat run reads M per
+        // epoch. The run outcome is identical (nothing to move either
+        // way).
+        let mk = || {
+            ShardScenario::new(
+                vec![pool(3, 2.5), pool(3, 2.5), pool(3, 2.5), pool(3, 2.5)],
+                uniform_streams(8, 2.0, 160, 4),
+            )
+            .with_gossip(10.0)
+            .with_epochs(8)
+            .with_seed(9)
+        };
+        let flat = run_sharded(&mk());
+        let grouped = run_sharded(&mk().with_groups(2));
+        assert_eq!(flat.migrations, 0);
+        assert_eq!(grouped.migrations, 0);
+        assert_eq!(grouped.control_log, flat.control_log);
+        assert_eq!(grouped.plan_stats.shards_examined, 0);
+        assert!(flat.plan_stats.shards_examined > 0);
+        assert!(
+            grouped.plan_stats.reads() < flat.plan_stats.reads(),
+            "grouped {} vs flat {}",
+            grouped.plan_stats.reads(),
+            flat.plan_stats.reads()
+        );
     }
 }

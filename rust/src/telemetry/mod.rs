@@ -8,8 +8,9 @@
 //!
 //! * [`registry`] — a zero-dependency metrics registry: labelled
 //!   counters, gauges and fixed-bucket log-scale latency [`Histogram`]s
-//!   with exact p50/p99 queries (the bucket counts answer "roughly
-//!   where", the embedded exact reservoir answers "exactly what"), a
+//!   with exact p50/p99 queries up to a bounded reservoir
+//!   ([`registry::RESERVOIR_CAP`]; past it, deterministic stride
+//!   thinning keeps memory flat and quantiles approximate), a
 //!   Prometheus-style text exposition and a JSON snapshot over
 //!   [`crate::util::json`]. Registries merge, so per-shard snapshots
 //!   shipped over the wire fold into one fleet view.
@@ -32,7 +33,7 @@
 pub mod registry;
 pub mod trace;
 
-pub use registry::{Histogram, MetricKey, Registry, SNAPSHOT_VERSION};
+pub use registry::{Histogram, MetricKey, Registry, RESERVOIR_CAP, SNAPSHOT_VERSION};
 pub use trace::{
     attribute_latency, origin_class, p99_breakdown, record_traces, FrameTrace, RunTelemetry,
     StageBreakdown, TraceOutcome, STAGES,

@@ -9,11 +9,14 @@
 //!   byte-identical text and JSON. That is what lets the transport
 //!   parity tests compare snapshots scraped over tcp/uds against the
 //!   in-process run *exactly*.
-//! * **Exact quantiles.** A [`Histogram`] is a fixed set of log-scale
-//!   bucket counts (cheap to merge and ship) *plus* the exact sample
-//!   reservoir ([`crate::util::stats::Percentiles`]) — per-run sample
-//!   volumes are bounded, so "p99" can mean the real 99th sample, not a
-//!   bucket interpolation.
+//! * **Exact quantiles while small, bounded memory always.** A
+//!   [`Histogram`] is a fixed set of log-scale bucket counts (cheap to
+//!   merge and ship) *plus* a sample reservoir
+//!   ([`crate::util::stats::Percentiles`]) that is exact up to
+//!   [`RESERVOIR_CAP`] observations — "p99" means the real 99th sample
+//!   — and past the cap thins deterministically (keep-every-nth with a
+//!   doubling stride), so a long-running shard cannot grow its
+//!   registry without bound.
 //! * **Mergeable.** [`Registry::merge`] folds another registry in
 //!   (counters add, gauges overwrite, histograms merge bucket-wise), so
 //!   per-shard snapshots shipped over the wire aggregate into one fleet
@@ -97,10 +100,26 @@ fn fmt_f64(n: f64) -> String {
     }
 }
 
-/// Fixed-bucket log-scale histogram with an embedded exact-quantile
+/// Retained-sample ceiling for a [`Histogram`]'s quantile reservoir.
+/// Up to this many observations the reservoir is exact; past it, a
+/// deterministic keep-every-other compaction halves the retained set
+/// and doubles the keep stride, bounding memory at the cap while the
+/// bucket counts and sum stay exact forever.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-bucket log-scale histogram with an embedded quantile
 /// reservoir. Buckets are upper bounds (`value <= bound` counts toward
 /// the bucket); values above the last bound land in a saturating
 /// overflow bucket.
+///
+/// The reservoir holds every sample up to [`RESERVOIR_CAP`], so small
+/// runs keep the original exact-quantile contract ("p99" is the real
+/// 99th sample). Past the cap it keeps every `stride`-th observation
+/// (stride doubling on each compaction) — a deterministic, seedless
+/// thinning, so two histograms fed the same observation sequence stay
+/// byte-identical, which the cross-mode telemetry parity tests rely
+/// on. Quantiles over the thinned reservoir are approximations whose
+/// error the tests bound.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     bounds: Vec<f64>,
@@ -108,6 +127,10 @@ pub struct Histogram {
     counts: Vec<u64>,
     sum: f64,
     exact: Percentiles,
+    /// Total observations (retained or not).
+    observed: u64,
+    /// Current keep-every-`stride` retention (1 = keeping everything).
+    stride: u64,
 }
 
 impl Histogram {
@@ -132,6 +155,8 @@ impl Histogram {
             counts: vec![0; n + 1],
             sum: 0.0,
             exact: Percentiles::new(),
+            observed: 0,
+            stride: 1,
         }
     }
 
@@ -143,11 +168,43 @@ impl Histogram {
             .unwrap_or(self.bounds.len());
         self.counts[idx] = self.counts[idx].saturating_add(1);
         self.sum += v;
-        self.exact.push(v);
+        // Keep every stride-th observation (0-based), compacting when
+        // the reservoir outgrows the cap.
+        if (self.observed % self.stride) == 0 {
+            self.exact.push(v);
+            if self.exact.len() > RESERVOIR_CAP {
+                self.compact();
+            }
+        }
+        self.observed = self.observed.saturating_add(1);
+    }
+
+    /// Halve the reservoir: drop every other retained sample (in push
+    /// order) and double the stride. Deterministic — no RNG, no clock.
+    fn compact(&mut self) {
+        let mut thinned = Percentiles::new();
+        for &s in self.exact.samples().iter().step_by(2) {
+            thinned.push(s);
+        }
+        self.exact = thinned;
+        self.stride = self.stride.saturating_mul(2);
     }
 
     pub fn count(&self) -> u64 {
-        self.exact.len() as u64
+        self.observed
+    }
+
+    /// Samples currently retained by the quantile reservoir (≤
+    /// [`RESERVOIR_CAP`]; equals [`Histogram::count`] until the first
+    /// compaction).
+    pub fn retained(&self) -> usize {
+        self.exact.len()
+    }
+
+    /// Current keep-every-nth retention stride (1 until the reservoir
+    /// first overflows the cap).
+    pub fn stride(&self) -> u64 {
+        self.stride
     }
 
     pub fn sum(&self) -> f64 {
@@ -177,15 +234,24 @@ impl Histogram {
     }
 
     /// Fold another histogram in. Panics on mismatched bucket bounds —
-    /// merging across scales silently would corrupt both.
+    /// merging across scales silently would corrupt both. Bucket counts
+    /// and sum merge exactly; the reservoirs concatenate (ours first,
+    /// then the other's, both in push order) and re-compact until the
+    /// result fits the cap — deterministic, and exact as long as the
+    /// combined reservoirs were (both strides 1, total ≤ cap).
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.bounds, other.bounds, "histogram bounds differ");
         for (c, o) in self.counts.iter_mut().zip(&other.counts) {
             *c = c.saturating_add(*o);
         }
         self.sum += other.sum;
+        self.observed = self.observed.saturating_add(other.observed);
+        self.stride = self.stride.max(other.stride);
         for &s in other.exact.samples() {
             self.exact.push(s);
+        }
+        while self.exact.len() > RESERVOIR_CAP {
+            self.compact();
         }
     }
 
@@ -204,6 +270,8 @@ impl Histogram {
             "samples".to_string(),
             Json::Arr(self.exact.samples().iter().map(|&s| Json::Num(s)).collect()),
         );
+        o.insert("observed".to_string(), Json::Num(self.observed as f64));
+        o.insert("stride".to_string(), Json::Num(self.stride as f64));
         Json::Obj(o)
     }
 
@@ -214,15 +282,42 @@ impl Histogram {
         if bounds.is_empty() || counts.len() != bounds.len() + 1 {
             return Err(WireError::new("histogram bounds/counts shape mismatch"));
         }
+        if samples.len() > RESERVOIR_CAP {
+            return Err(WireError::new("histogram reservoir exceeds the cap"));
+        }
         let mut h = Histogram::with_bounds(bounds);
         h.counts = counts.iter().map(|&c| c as u64).collect();
         h.sum = v
             .get("sum")
             .and_then(Json::as_f64)
             .ok_or_else(|| WireError::new("missing or mistyped field \"sum\""))?;
+        // Restore the reservoir verbatim — re-observing would re-thin.
+        // `observed`/`stride` default for pre-compaction snapshots
+        // (every sample retained, stride 1).
+        let observed = match v.get("observed") {
+            Some(x) => x
+                .as_f64()
+                .ok_or_else(|| WireError::new("mistyped field \"observed\""))?
+                as u64,
+            None => samples.len() as u64,
+        };
+        let stride = match v.get("stride") {
+            Some(x) => {
+                let s = x
+                    .as_f64()
+                    .ok_or_else(|| WireError::new("mistyped field \"stride\""))?;
+                if s < 1.0 {
+                    return Err(WireError::new("histogram stride must be >= 1"));
+                }
+                s as u64
+            }
+            None => 1,
+        };
         for s in samples {
             h.exact.push(s);
         }
+        h.observed = observed;
+        h.stride = stride;
         Ok(h)
     }
 }
@@ -232,6 +327,8 @@ impl PartialEq for Histogram {
         self.bounds == other.bounds
             && self.counts == other.counts
             && self.sum == other.sum
+            && self.observed == other.observed
+            && self.stride == other.stride
             && self.exact.samples() == other.exact.samples()
     }
 }
@@ -597,6 +694,117 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn reservoir_is_bounded_past_the_cap_and_exact_below_it() {
+        let mut h = Histogram::latency();
+        for i in 0..RESERVOIR_CAP {
+            h.observe(1e-3 + i as f64 * 1e-6);
+        }
+        // At the cap: still exact, nothing thinned.
+        assert_eq!(h.retained(), RESERVOIR_CAP);
+        assert_eq!(h.stride(), 1);
+        // Push well past it: memory stays bounded, counters stay exact.
+        let total = 5 * RESERVOIR_CAP;
+        for i in RESERVOIR_CAP..total {
+            h.observe(1e-3 + i as f64 * 1e-6);
+        }
+        assert!(h.retained() <= RESERVOIR_CAP, "retained {}", h.retained());
+        assert!(h.stride() > 1);
+        assert_eq!(h.count(), total as u64);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), total as u64);
+        let expected_sum: f64 = (0..total).map(|i| 1e-3 + i as f64 * 1e-6).sum();
+        assert!((h.sum() - expected_sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compacted_percentiles_stay_close_to_the_truth() {
+        // A deterministic ramp 20× the cap: stride thinning keeps an
+        // evenly-spaced subset, so quantiles of the thinned reservoir
+        // sit within 1% (relative) of the true order statistics.
+        let n = 20 * RESERVOIR_CAP;
+        let mut h = Histogram::latency();
+        for i in 0..n {
+            h.observe((i + 1) as f64 / n as f64);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            let truth = p / 100.0;
+            let got = h.pct(p);
+            assert!(
+                (got - truth).abs() <= 0.01 * truth.max(0.1),
+                "p{p}: got {got}, truth {truth}"
+            );
+        }
+        assert_eq!(h.pct(100.0), 1.0, "the ramp's maximum is retained");
+    }
+
+    #[test]
+    fn merged_compacted_histograms_stay_bounded_and_account_everything() {
+        let mk = |offset: f64, n: usize| {
+            let mut h = Histogram::latency();
+            for i in 0..n {
+                h.observe(offset + i as f64 * 1e-5);
+            }
+            h
+        };
+        let mut a = mk(0.001, 3 * RESERVOIR_CAP);
+        let b = mk(0.002, 2 * RESERVOIR_CAP);
+        let (ca, cb) = (a.count(), b.count());
+        a.merge(&b);
+        assert_eq!(a.count(), ca + cb);
+        assert!(a.retained() <= RESERVOIR_CAP);
+        assert_eq!(
+            a.bucket_counts().iter().sum::<u64>(),
+            ca + cb,
+            "bucket counts merge exactly regardless of thinning"
+        );
+        // Small merges stay exact: both under the cap, nothing thinned.
+        let mut small = mk(0.001, 10);
+        small.merge(&mk(0.002, 10));
+        assert_eq!(small.retained(), 20);
+        assert_eq!(small.stride(), 1);
+    }
+
+    #[test]
+    fn compacted_snapshot_roundtrips_exactly() {
+        let mut reg = Registry::new();
+        let key = MetricKey::with_labels("eva_e2e_seconds", &[("shard", "0")]);
+        for i in 0..(3 * RESERVOIR_CAP) {
+            reg.observe(key.clone(), 1e-3 + (i % 977) as f64 * 1e-5);
+        }
+        let text = reg.encode();
+        let back = Registry::decode(&text).expect("decode");
+        assert_eq!(back, reg);
+        assert_eq!(back.encode(), text);
+        let h = back.histogram(&key).expect("histogram");
+        assert_eq!(h.count(), 3 * RESERVOIR_CAP as u64);
+        assert!(h.stride() > 1);
+    }
+
+    #[test]
+    fn pre_compaction_snapshots_without_reservoir_fields_still_decode() {
+        // Older snapshots carry no observed/stride keys: they default to
+        // "every sample retained, stride 1".
+        let v = Json::parse(r#"{"bounds":[1,2],"counts":[1,0,1],"sum":3.5,"samples":[0.5,3]}"#)
+            .expect("parse");
+        let h = Histogram::from_json(&v).expect("decode");
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.stride(), 1);
+        assert_eq!(h.pct(100.0), 3.0);
+        // A reservoir claiming more samples than the cap is malformed.
+        let huge: Vec<String> = (0..=RESERVOIR_CAP).map(|i| format!("{i}")).collect();
+        let doc = format!(
+            r#"{{"bounds":[1],"counts":[0,0],"sum":0,"samples":[{}]}}"#,
+            huge.join(",")
+        );
+        assert!(Histogram::from_json(&Json::parse(&doc).expect("parse")).is_err());
+        // And a sub-1 stride is rejected rather than wrapped to zero.
+        let bad = Json::parse(
+            r#"{"bounds":[1],"counts":[0,0],"sum":0,"samples":[],"stride":0}"#,
+        )
+        .expect("parse");
+        assert!(Histogram::from_json(&bad).is_err());
     }
 
     #[test]

@@ -5,10 +5,13 @@
 //! bottom-up:
 //!
 //! * [`frame`] — the length-prefixed, versioned frame codec: an 8-byte
-//!   header (magic, codec version, u32 payload length) around one JSON
-//!   payload, with an incremental decoder that handles split frames,
-//!   truncated prefixes, oversized-length rejection, version mismatch
-//!   and garbage between frames (property-tested).
+//!   header (magic, codec version, u32 payload length) around one
+//!   payload — JSON ([`frame::Codec::Json`], the audit format) or
+//!   compact binary ([`frame::Codec::Binary`],
+//!   [`crate::control::binary`]) selected per frame by the version byte
+//!   — with an incremental decoder that handles split frames, truncated
+//!   prefixes, oversized-length rejection (configurable cap), version
+//!   mismatch and garbage between frames (property-tested).
 //! * [`msg`] — the session vocabulary ([`TransportMsg`]): control
 //!   traffic is always a [`crate::control::WireEvent`] inside a
 //!   `Control` frame; around it sit the handshake (`Hello`/`Welcome`),
@@ -32,7 +35,8 @@ pub mod net;
 pub mod serve;
 
 pub use frame::{
-    encode_frame, DecoderStats, FrameDecoder, FrameError, FRAME_VERSION, MAX_PAYLOAD_BYTES,
+    encode_frame, encode_frame_with, Codec, DecoderStats, FrameDecoder, FrameError,
+    FRAME_VERSION, FRAME_VERSION_BINARY, MAX_PAYLOAD_BYTES,
 };
 pub use msg::{SliceStream, TransportMsg, TRANSPORT_VERSION};
 pub use net::{

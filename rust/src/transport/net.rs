@@ -22,7 +22,9 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
-use crate::transport::frame::{encode_frame, DecoderStats, FrameDecoder, FrameError};
+use crate::transport::frame::{
+    encode_frame_with, Codec, DecoderStats, FrameDecoder, FrameError, MAX_PAYLOAD_BYTES,
+};
 use crate::transport::msg::TransportMsg;
 
 /// Default blocking-read deadline on accepted/dialled sockets.
@@ -158,6 +160,7 @@ pub struct ConnStats {
 pub struct FrameConn {
     stream: Stream,
     decoder: FrameDecoder,
+    codec: Codec,
     sent_frames: u64,
     sent_bytes: u64,
 }
@@ -168,6 +171,7 @@ impl FrameConn {
         Ok(FrameConn {
             stream,
             decoder: FrameDecoder::new(),
+            codec: Codec::Json,
             sent_frames: 0,
             sent_bytes: 0,
         })
@@ -176,6 +180,25 @@ impl FrameConn {
     /// Override the blocking-read deadline (`None` blocks forever).
     pub fn set_read_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
         self.stream.set_read_timeout(t)
+    }
+
+    /// Switch the payload codec for frames *sent* on this connection
+    /// (the decoder always accepts both). Defaults to JSON for audit
+    /// compatibility.
+    pub fn set_codec(&mut self, codec: Codec) {
+        self.codec = codec;
+    }
+
+    /// The codec frames are currently sent in.
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// The codec of the most recently received frame — a responder can
+    /// mirror it ([`FrameConn::set_codec`]) to answer a peer in whatever
+    /// codec it speaks, without any handshake field.
+    pub fn last_recv_codec(&self) -> Codec {
+        self.decoder.last_codec()
     }
 
     /// Traffic accounting so far, both directions.
@@ -187,9 +210,10 @@ impl FrameConn {
         }
     }
 
-    /// Send one message as a frame (write-all + flush).
+    /// Send one message as a frame (write-all + flush) in the
+    /// connection's current codec.
     pub fn send(&mut self, msg: &TransportMsg) -> Result<(), TransportError> {
-        let frame = encode_frame(msg)?;
+        let frame = encode_frame_with(msg, self.codec, MAX_PAYLOAD_BYTES)?;
         self.stream.write_all(&frame)?;
         self.stream.flush()?;
         self.sent_frames = self.sent_frames.saturating_add(1);
@@ -362,6 +386,34 @@ mod tests {
         }
         // Listener drop removed the socket file.
         assert!(!path.exists(), "stale socket at {}", path.display());
+    }
+
+    #[test]
+    fn responder_mirrors_the_codec_the_peer_speaks() {
+        // The client switches to binary mid-session; the echo server
+        // mirrors whatever codec the last received frame used, with no
+        // handshake field involved.
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let server = std::thread::spawn(move || {
+            let mut conn = listener.accept().expect("accept");
+            for _ in 0..2 {
+                let msg = conn.recv().expect("server recv");
+                conn.set_codec(conn.last_recv_codec());
+                conn.send(&msg).expect("server send");
+            }
+        });
+        let mut conn = connect(&endpoint).expect("connect");
+        assert_eq!(conn.codec(), Codec::Json);
+        conn.send(&ping(0)).expect("send json");
+        assert_eq!(conn.recv().expect("recv"), ping(0));
+        assert_eq!(conn.last_recv_codec(), Codec::Json);
+        conn.set_codec(Codec::Binary);
+        conn.send(&ping(1)).expect("send binary");
+        assert_eq!(conn.recv().expect("recv"), ping(1));
+        assert_eq!(conn.last_recv_codec(), Codec::Binary, "reply not mirrored");
+        server.join().unwrap();
+        assert_eq!(conn.stats().recv.errors(), 0);
     }
 
     #[test]

@@ -212,6 +212,79 @@ fn trace_writes_metrics_and_span_trace_artifacts() {
 }
 
 #[test]
+fn codec_flag_is_rejected_where_it_cannot_apply() {
+    // `--codec` steers the sharded control plane only: any other
+    // subcommand is a usage error (exit 2), not a silent no-op.
+    let out = eva(&["fleet", "--codec", "binary"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--codec does not apply"), "{}", stderr(&out));
+
+    // On `eva shard` but outside `--scenario run`: the sweeps fix their
+    // own codecs, so the flag is a usage error there too.
+    let out = eva(&["shard", "--scenario", "split", "--codec", "binary"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--codec applies only to --scenario run"), "{}", stderr(&out));
+
+    // An unparseable codec name is malformed command line: exit 2.
+    let out = eva(&["shard", "--scenario", "run", "--codec", "protobuf"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown codec"), "{}", stderr(&out));
+
+    // Same contract for `--groups` (two-level planning).
+    let out = eva(&["nselect", "--groups", "4"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--groups does not apply"), "{}", stderr(&out));
+    let out = eva(&["shard", "--scenario", "skew", "--groups", "4"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--groups applies only to --scenario run"), "{}", stderr(&out));
+}
+
+#[test]
+fn binary_codec_run_emits_the_same_report_as_json_codec() {
+    // The codec changes the wire encoding, never the outcome: the
+    // one-off run's JSON report must be byte-identical across codecs
+    // (the EventLog parity pin, end to end through the real binary).
+    let base = [
+        "shard", "--scenario", "run", "--shards", "2", "--streams", "4",
+        "--stream-fps", "3", "--frames", "30", "--json",
+    ];
+    let with = |extra: &[&str]| {
+        let mut args = base.to_vec();
+        args.extend_from_slice(extra);
+        eva(&args)
+    };
+    let json_run = with(&["--codec", "json"]);
+    assert_eq!(json_run.status.code(), Some(0), "stderr: {}", stderr(&json_run));
+    let binary_run = with(&["--codec", "binary"]);
+    assert_eq!(binary_run.status.code(), Some(0), "stderr: {}", stderr(&binary_run));
+    assert_eq!(stdout(&json_run), stdout(&binary_run), "codec must not change the run");
+    // And with grouped planning on: still a clean exit + parseable doc.
+    let grouped = with(&["--codec", "binary", "--groups", "2"]);
+    assert_eq!(grouped.status.code(), Some(0), "stderr: {}", stderr(&grouped));
+    let text = stdout(&grouped);
+    let json = eva::util::json::Json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("shard run --json stdout is not pure JSON ({e}): {text}"));
+    assert!(json.get("plan_stats").is_some(), "{text}");
+}
+
+#[test]
+fn scale_json_mode_emits_exactly_one_parseable_document() {
+    // CI uploads this stdout as BENCH_coordinator_scale.json: it must
+    // be pure JSON with the sweep rows present.
+    let out = eva(&["shard", "--scenario", "scale", "--json"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    let json = eva::util::json::Json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("scale --json stdout is not pure JSON ({e}): {text}"));
+    let rows = json
+        .get("coordinator_scale")
+        .and_then(|j| j.as_arr())
+        .unwrap_or_else(|| panic!("missing coordinator_scale rows: {text}"));
+    assert!(!rows.is_empty(), "{text}");
+    assert!(rows.iter().all(|r| r.get("grouped_reads").is_some()), "{text}");
+}
+
+#[test]
 fn runtime_failure_keeps_exit_1_distinct_from_usage_errors() {
     // A known subcommand with a semantically invalid value: parsed fine,
     // fails at run time — exit 1, not the usage exit 2.

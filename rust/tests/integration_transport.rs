@@ -179,6 +179,38 @@ fn telemetry_snapshots_match_inproc_exactly_with_autoscale() {
     }
 }
 
+/// Tentpole pin: a binary-codec remote run is indistinguishable from
+/// the JSON-codec run once decoded — same frame accounting, same
+/// control log — and the coordinator's audit [`eva::control::EventLog`]
+/// of the binary-transported run replays verbatim through
+/// encode→decode.
+#[test]
+fn binary_codec_remote_run_replays_the_same_audit_log() {
+    let scenario = ShardScenario::new(
+        vec![pool(3, 2.5), pool(3, 2.5)],
+        uniform_streams(6, 2.5, 120, 4),
+    )
+    .with_gossip(10.0)
+    .with_epochs(8)
+    .with_seed(97);
+    let json_run = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("json run");
+    let binary_run = run_sharded_remote(
+        &scenario.clone().with_codec(eva::transport::Codec::Binary),
+        RemoteTransport::Tcp,
+    )
+    .expect("binary run");
+    assert_eq!(binary_run.total_frames(), json_run.total_frames());
+    assert_eq!(binary_run.total_processed(), json_run.total_processed());
+    assert_eq!(binary_run.control_log, json_run.control_log);
+    // The audit contract survives the codec swap bit-for-bit: the
+    // binary run's log equals the JSON run's and replays through
+    // another encode→decode hop unchanged.
+    let audit = binary_run.audit_log();
+    assert_eq!(audit, json_run.audit_log());
+    let replayed = eva::control::EventLog::decode(&audit.encode()).expect("audit log decodes");
+    assert_eq!(replayed, audit);
+}
+
 /// The remote serve consumer takes exactly the admission decisions the
 /// in-process wall-clock engine takes for the same specs and pool, and
 /// ships them back as decoded control frames.
