@@ -109,11 +109,12 @@ fn main() {
             })
             .collect()
     };
-    let scenario = eva::shard::ShardScenario::new(vec![pool(4), pool(4)], streams)
-        .with_admission(eva::fleet::AdmissionPolicy::admit_all())
-        .with_gossip(10.0)
-        .with_epochs(5)
-        .with_seed(43);
+    let scenario = eva::shard::ShardScenario::builder(vec![pool(4), pool(4)], streams)
+        .admission(eva::fleet::AdmissionPolicy::admit_all())
+        .gossip(10.0)
+        .epochs(5)
+        .seed(43)
+        .build();
     bench.run("co-sim: 8 streams × 2 shards over loopback TCP", Some(8.0 * 300.0), || {
         let report = eva::shard::run_sharded_remote(&scenario, eva::shard::RemoteTransport::Tcp)
             .expect("remote co-sim");

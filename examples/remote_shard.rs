@@ -62,10 +62,11 @@ fn main() {
             StreamSpec::new(&format!("cam{i}"), fps, (fps * 40.0) as u64).with_window(4)
         })
         .collect();
-    let scenario = ShardScenario::new(vec![pool(5, 2.5), pool(5, 2.5)], streams)
-        .with_gossip(5.0)
-        .with_epochs(10)
-        .with_seed(7);
+    let scenario = ShardScenario::builder(vec![pool(5, 2.5), pool(5, 2.5)], streams)
+        .gossip(5.0)
+        .epochs(10)
+        .seed(7)
+        .build();
 
     println!("== remote sharding: 8 streams over 2 fleet instances behind TCP sockets ==\n");
     let remote = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
@@ -84,14 +85,15 @@ fn main() {
     let streams: Vec<StreamSpec> = (0..9)
         .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 150).with_window(4))
         .collect();
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool(4, 2.5), pool(4, 2.5), pool(4, 2.5)],
         streams,
     )
-    .with_gossip(10.0)
-    .with_epochs(8)
-    .with_seed(11)
-    .with_failure(2, 0);
+    .gossip(10.0)
+    .epochs(8)
+    .seed(11)
+    .failure(2, 0)
+    .build();
     let report = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
 
     println!("== connection loss: shard 0's socket drops at epoch 2, no goodbye ==\n");

@@ -1,0 +1,168 @@
+//! The `eva` binary's argument layer: one flag table every subcommand
+//! parses against, the exit-2 usage contract (unknown subcommand,
+//! unknown flag, stray positional, flag on a subcommand it cannot
+//! steer), and the shared value parsers — device rates and socket
+//! endpoints — that `fleet`, `shard` and `shard-server` all use.
+//!
+//! Exit codes: 2 means the command line itself is malformed; 1 means
+//! the command was understood but failed at run time; 0 is success.
+
+use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use eva::transport::Endpoint;
+use eva::util::cli::{usage, Args, Spec};
+
+use anyhow::{anyhow, bail, Result};
+
+pub fn specs() -> Vec<Spec> {
+    vec![
+        Spec { name: "model", takes_value: true, help: "TinyDet variant (essd|eyolo)", default: Some("essd") },
+        Spec { name: "workers", takes_value: true, help: "parallel detector replicas", default: Some("2") },
+        Spec { name: "frames", takes_value: true, help: "clip length in frames (default 60; fleet default 300)", default: None },
+        Spec { name: "fps", takes_value: true, help: "input stream rate λ", default: Some("10") },
+        Spec { name: "seed", takes_value: true, help: "experiment seed", default: Some("7") },
+        Spec { name: "id", takes_value: true, help: "table id for `table` (1..10|fig5|fig23|ablation|links|energy-frame|fleet|fleet-saturation)", default: None },
+        Spec { name: "artifacts", takes_value: true, help: "artifact directory", default: Some("artifacts") },
+        Spec { name: "lambda", takes_value: true, help: "input rate for nselect", default: Some("14") },
+        Spec { name: "mu", takes_value: true, help: "per-model rate for nselect", default: Some("2.5") },
+        Spec { name: "out", takes_value: true, help: "output directory for visualize", default: Some("/tmp/eva_frames") },
+        Spec { name: "csv", takes_value: false, help: "emit CSV instead of framed table", default: None },
+        Spec { name: "saturated", takes_value: false, help: "serve: feed frames as fast as possible", default: None },
+        Spec { name: "streams", takes_value: true, help: "fleet: number of concurrent streams", default: Some("8") },
+        Spec { name: "stream-fps", takes_value: true, help: "fleet: per-stream input rate λ", default: Some("5") },
+        Spec { name: "rates", takes_value: true, help: "fleet/shard-server: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
+        Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
+        Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
+        Spec { name: "scenario", takes_value: true, help: "autoscale/shard/gate: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|churn|all|run|transport|scale; gate: lobby|highway|sports|all)", default: Some("step") },
+        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/gate/trace: emit machine-readable JSON instead of tables", default: None },
+        Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
+        Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
+        Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
+        Spec { name: "transport", takes_value: true, help: "shard: control-plane transport for --scenario run (inproc|tcp|uds; sockets bind loopback)", default: Some("inproc") },
+        Spec { name: "codec", takes_value: true, help: "shard: control-plane payload codec for --scenario run (json|binary; json is the audit format)", default: None },
+        Spec { name: "groups", takes_value: true, help: "shard: rebalance over shard groups of this size for --scenario run (default: flat planning)", default: None },
+        Spec { name: "autoscale", takes_value: false, help: "shard: embed an AutoscaleController in every shard (--scenario run), or select the autoscale overload sweep", default: None },
+        Spec { name: "metrics-out", takes_value: true, help: "fleet/gate/shard/trace: write the run's metric snapshot (Prometheus text exposition) to this file", default: None },
+        Spec { name: "trace-out", takes_value: true, help: "fleet/gate/trace: write the run's per-frame span traces (JSONL) to this file", default: None },
+        Spec { name: "listen", takes_value: true, help: "shard-server: bind address (host:port, or unix:<path> for a Unix socket)", default: None },
+        Spec { name: "token", takes_value: true, help: "shard/shard-server: shared session secret; handshakes without it get a typed reject", default: None },
+        Spec { name: "sessions", takes_value: true, help: "shard-server: coordinator sessions to serve before exiting", default: Some("1") },
+        Spec { name: "probe", takes_value: false, help: "shard-server: dial --listen, handshake, and exit instead of serving", default: None },
+    ]
+}
+
+/// The one canonical subcommand list: the validity gate in `main`, the
+/// usage strings and `run`'s dispatch must never drift apart.
+pub const SUBCOMMANDS: [&str; 12] = [
+    "serve", "offline", "fleet", "autoscale", "shard", "shard-server", "gate", "trace",
+    "table", "nselect", "visualize", "inspect",
+];
+
+fn subcommand_list() -> String {
+    SUBCOMMANDS.join(" | ")
+}
+
+/// Exit 2 with a usage pointer: the command line itself is malformed
+/// (unknown subcommand/flag, stray positional), as opposed to a command
+/// that was understood but failed (exit 1).
+pub fn usage_error(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    eprintln!("usage: eva <subcommand> [options]  ({})", subcommand_list());
+    eprintln!("run `eva --help` for the full option list");
+    std::process::exit(2);
+}
+
+/// The binary's front door: `--help`/empty prints usage and exits 0;
+/// anything malformed exits 2; otherwise returns the validated
+/// subcommand and its parsed flags.
+pub fn parse_argv(raw: &[String]) -> (String, Args) {
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print!("{}", usage("eva", "parallel detection for edge video analytics", &specs()));
+        println!("\nsubcommands: {}", subcommand_list());
+        std::process::exit(0);
+    }
+    let cmd = raw[0].clone();
+    if !SUBCOMMANDS.contains(&cmd.as_str()) {
+        usage_error(&format!("unknown subcommand {cmd:?}"));
+    }
+    let args = match Args::parse(&raw[1..], &specs()) {
+        Ok(a) => a,
+        Err(e) => usage_error(&e),
+    };
+    // No subcommand takes positional arguments; a stray one is almost
+    // always a typo'd flag value and must not be silently ignored.
+    if let [stray, ..] = args.positional() {
+        usage_error(&format!("unexpected argument {stray:?}"));
+    }
+    (cmd, args)
+}
+
+/// Flag-applicability gate, applied before dispatch: a flag passed to a
+/// subcommand it cannot steer would be silently ignored, and the CLI
+/// contract is that nothing is. Exits 2 on violation.
+pub fn check_applicability(cmd: &str, args: &Args) {
+    // `--metrics-out` / `--trace-out` only apply where a run produces a
+    // registry / span traces.
+    if args.get("metrics-out").is_some() && !matches!(cmd, "fleet" | "gate" | "shard" | "trace") {
+        usage_error(&format!("--metrics-out does not apply to {cmd} (fleet|gate|shard|trace)"));
+    }
+    if args.get("trace-out").is_some() && !matches!(cmd, "fleet" | "gate" | "trace") {
+        usage_error(&format!("--trace-out does not apply to {cmd} (fleet|gate|trace)"));
+    }
+    // `--codec`/`--groups` steer the sharded control plane only; the
+    // specs carry no default so "was it passed?" is observable here.
+    if args.get("codec").is_some() && cmd != "shard" {
+        usage_error(&format!("--codec does not apply to {cmd} (shard)"));
+    }
+    if args.get("groups").is_some() && cmd != "shard" {
+        usage_error(&format!("--groups does not apply to {cmd} (shard)"));
+    }
+    // The session layer: `--listen`/`--sessions`/`--probe` are the
+    // shard-server surface; `--token` also rides the coordinator side
+    // (`eva shard --scenario run --transport tcp|uds`).
+    for flag in ["listen", "sessions", "probe"] {
+        let passed = args.get(flag).is_some() || args.flag(flag);
+        if passed && cmd != "shard-server" {
+            usage_error(&format!("--{flag} does not apply to {cmd} (shard-server)"));
+        }
+    }
+    if args.get("token").is_some() && !matches!(cmd, "shard" | "shard-server") {
+        usage_error(&format!("--token does not apply to {cmd} (shard|shard-server)"));
+    }
+}
+
+/// Parse `--rates` into a non-empty device-rate vector.
+pub fn parse_rates(args: &Args) -> Result<Vec<f64>> {
+    let raw = args.str_or("rates", "13.5,2.5,2.5,2.5");
+    let rates: Vec<f64> = raw
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--rates: cannot parse {:?}", p.trim()))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    if rates.is_empty() {
+        bail!("--rates: need at least one device rate");
+    }
+    Ok(rates)
+}
+
+/// One device pool shaped by `--rates` (NCS2-class instances, slot per
+/// rate).
+pub fn device_pool(rates: &[f64]) -> Vec<DeviceInstance> {
+    rates
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r))
+        .collect()
+}
+
+/// Parse a `--listen` address: `unix:<path>` binds a Unix-domain
+/// socket, anything else is a TCP `host:port` (non-loopback binds are
+/// the point of `shard-server`).
+pub fn parse_endpoint(addr: &str) -> Endpoint {
+    match addr.strip_prefix("unix:") {
+        Some(path) => Endpoint::Uds(std::path::PathBuf::from(path)),
+        None => Endpoint::Tcp(addr.to_string()),
+    }
+}

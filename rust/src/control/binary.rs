@@ -31,16 +31,15 @@
 //! [`TransportMsg`], `decode(encode(m)) == m`, and both codecs decode to
 //! equal values.
 
-use crate::autoscale::policy::AutoscaleConfig;
+use crate::control::caps::SessionCaps;
 use crate::control::plane::{ControlAction, ControlOrigin};
 use crate::control::wire::{
-    admission_from_json, admission_to_json, autoscale_config_from_json, autoscale_config_to_json,
-    gate_config_from_json, gate_config_to_json, WireError, WireEvent, WirePayload,
+    admission_from_json, admission_to_json, WireError, WireEvent, WirePayload,
 };
 use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use crate::fleet::admission::Decision;
 use crate::fleet::stream::StreamSpec;
-use crate::gate::{GateConfig, GateVerdict};
+use crate::gate::GateVerdict;
 use crate::telemetry::Registry;
 use crate::transport::msg::{SliceStream, TransportMsg};
 use crate::util::json::Json;
@@ -528,16 +527,7 @@ const MSG_TICK: u8 = 5;
 const MSG_SLICE: u8 = 6;
 const MSG_TELEMETRY: u8 = 7;
 const MSG_BYE: u8 = 8;
-
-fn write_optional_json(w: &mut ByteWriter, v: Option<Json>) {
-    match v {
-        Some(j) => {
-            w.bool(true);
-            w.json(&j);
-        }
-        None => w.bool(false),
-    }
-}
+const MSG_REJECT: u8 = 9;
 
 /// Encode one [`TransportMsg`] as a binary frame payload.
 pub fn encode_msg(msg: &TransportMsg) -> Vec<u8> {
@@ -549,9 +539,7 @@ pub fn encode_msg(msg: &TransportMsg) -> Vec<u8> {
             protocol,
             admission,
             roster,
-            autoscale,
-            gate,
-            telemetry,
+            caps,
         } => {
             w.u8(MSG_HELLO);
             w.varint(*shard as u64);
@@ -561,14 +549,20 @@ pub fn encode_msg(msg: &TransportMsg) -> Vec<u8> {
             for name in roster {
                 w.string(name);
             }
-            write_optional_json(&mut w, autoscale.as_ref().map(autoscale_config_to_json));
-            write_optional_json(&mut w, gate.as_ref().map(gate_config_to_json));
-            w.bool(*telemetry);
+            // The capability set rides as its one JSON rendering in
+            // both codecs — a single forward-compatibility surface
+            // (handshakes are rare; compactness does not matter here).
+            w.json(&caps.to_json());
         }
         TransportMsg::Welcome { shard, capacity } => {
             w.u8(MSG_WELCOME);
             w.varint(*shard as u64);
             w.f64(*capacity);
+        }
+        TransportMsg::Reject { code, detail } => {
+            w.u8(MSG_REJECT);
+            w.string(code);
+            w.string(detail);
         }
         TransportMsg::Control(ev) => {
             w.u8(MSG_CONTROL);
@@ -662,30 +656,22 @@ pub fn decode_msg(bytes: &[u8]) -> Result<TransportMsg, WireError> {
             for _ in 0..count {
                 roster.push(r.string()?);
             }
-            let autoscale: Option<AutoscaleConfig> = if r.bool()? {
-                Some(autoscale_config_from_json(&r.json()?)?)
-            } else {
-                None
-            };
-            let gate: Option<GateConfig> = if r.bool()? {
-                Some(gate_config_from_json(&r.json()?)?)
-            } else {
-                None
-            };
-            let telemetry = r.bool()?;
+            let caps = SessionCaps::from_json(&r.json()?)?;
             TransportMsg::Hello {
                 shard,
                 protocol,
                 admission,
                 roster,
-                autoscale,
-                gate,
-                telemetry,
+                caps,
             }
         }
         MSG_WELCOME => TransportMsg::Welcome {
             shard: r.usize()?,
             capacity: r.f64()?,
+        },
+        MSG_REJECT => TransportMsg::Reject {
+            code: r.string()?,
+            detail: r.string()?,
         },
         MSG_CONTROL => TransportMsg::Control(read_event(&mut r)?),
         MSG_POLL => TransportMsg::Poll {
@@ -962,22 +948,40 @@ mod tests {
     }
 
     #[test]
-    fn hello_with_options_roundtrips_and_interns_the_roster() {
+    fn hello_with_caps_roundtrips_and_interns_the_roster() {
+        use crate::autoscale::policy::AutoscaleConfig;
+        use crate::gate::GateConfig;
         let msg = TransportMsg::Hello {
             shard: 3,
             protocol: TRANSPORT_VERSION,
             admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
             roster: vec!["cam0".into(), "cam1".into(), "cam0".into()],
-            autoscale: Some(AutoscaleConfig {
-                max_devices: 7,
-                device_rate: 3.25,
-                ..AutoscaleConfig::default()
-            }),
-            gate: Some(GateConfig::default()),
-            telemetry: true,
+            caps: SessionCaps {
+                autoscale: Some(AutoscaleConfig {
+                    max_devices: 7,
+                    device_rate: 3.25,
+                    ..AutoscaleConfig::default()
+                }),
+                gate: Some(GateConfig::default()),
+                telemetry: true,
+                token: Some("s3cret".into()),
+                ..SessionCaps::default()
+            },
         };
         let bytes = encode_msg(&msg);
         assert_eq!(decode_msg(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn reject_roundtrips_binary_and_matches_the_json_path() {
+        // The typed refusal frame exists precisely so a rejected peer
+        // never hangs; both codecs must carry it identically.
+        let msg = TransportMsg::Reject {
+            code: "auth".into(),
+            detail: "bad or missing session token".into(),
+        };
+        assert_eq!(decode_msg(&encode_msg(&msg)).unwrap(), msg);
+        assert_eq!(TransportMsg::decode(&msg.encode()).unwrap(), msg);
     }
 
     #[test]

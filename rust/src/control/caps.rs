@@ -1,0 +1,252 @@
+//! Versioned session capabilities carried on the transport handshake.
+//!
+//! PRs 5–7 grew the `Hello` message one optional field at a time —
+//! `autoscale`, then `gate`, then `telemetry` — each hand-threading its
+//! own absent-means-off rule through the JSON and binary codecs. That
+//! sprawl made version-skew tolerance accidental: every new capability
+//! re-derived the compatibility story from scratch. [`SessionCaps`]
+//! collapses them into one struct with one explicit contract:
+//!
+//! * **absent fields default** — a capability a peer does not mention is
+//!   off (`None` / `false`), exactly as if the field were never invented;
+//! * **unknown fields are tolerated** — a decoder ignores keys it does
+//!   not know, so a newer peer can add capabilities without breaking an
+//!   older one;
+//! * **any version value is tolerated** — [`CAPS_VERSION`] stamps what
+//!   this build speaks, but decode never rejects a different number; the
+//!   field exists so peers can *report* skew, not refuse it.
+//!
+//! The struct rides the wire as one JSON object in *both* codecs — the
+//! binary `Hello` embeds the same rendering — so there is exactly one
+//! compatibility surface to test. Legacy peers are bridged in
+//! [`crate::transport::msg`]: a new `Hello` still writes the flat
+//! PR 5/6/7-era keys (which old decoders read and new decoders fall back
+//! to), and [`SessionCaps::from_legacy`] lifts them when the `caps`
+//! object is absent.
+//!
+//! `token` is the shared-secret session auth introduced with the
+//! multi-machine deploy layer: a listening shard configured with a token
+//! rejects a handshake that does not present the same one (a typed
+//! [`crate::transport::TransportMsg::Reject`] frame, never a hang). It
+//! intentionally has *no* flat legacy key — pre-auth peers cannot
+//! present a token, and against a token-requiring server they are
+//! rejected exactly like a missing one.
+
+use std::collections::BTreeMap;
+
+use crate::autoscale::policy::AutoscaleConfig;
+use crate::control::wire::{
+    autoscale_config_from_json, autoscale_config_to_json, gate_config_from_json,
+    gate_config_to_json,
+};
+use crate::control::WireError;
+use crate::gate::GateConfig;
+use crate::util::json::Json;
+
+/// The capability-schema version this build writes. Decode tolerates
+/// any value — see the module contract.
+pub const CAPS_VERSION: u64 = 1;
+
+/// Everything a coordinator asks of a shard session beyond the
+/// admission policy and roster: optional capability configs plus the
+/// session auth token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionCaps {
+    /// Schema version stamp ([`CAPS_VERSION`]); informational on decode.
+    pub version: u64,
+    /// Shard-local autoscaling for the session
+    /// ([`crate::shard::autoscale`]); `None` = serve the static pool.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Per-frame motion gating ([`crate::gate`]); `None` = detect every
+    /// frame.
+    pub gate: Option<GateConfig>,
+    /// Ship a telemetry snapshot ahead of every epoch slice.
+    pub telemetry: bool,
+    /// Shared-secret session auth; must match the token the listening
+    /// shard was started with (when it requires one).
+    pub token: Option<String>,
+}
+
+impl Default for SessionCaps {
+    fn default() -> SessionCaps {
+        SessionCaps {
+            version: CAPS_VERSION,
+            autoscale: None,
+            gate: None,
+            telemetry: false,
+            token: None,
+        }
+    }
+}
+
+impl SessionCaps {
+    /// Lift the flat PR 5/6/7-era `Hello` fields into the unified
+    /// struct (the decode fallback when no `caps` object rides the
+    /// handshake).
+    pub fn from_legacy(
+        autoscale: Option<AutoscaleConfig>,
+        gate: Option<GateConfig>,
+        telemetry: bool,
+    ) -> SessionCaps {
+        SessionCaps {
+            autoscale,
+            gate,
+            telemetry,
+            ..SessionCaps::default()
+        }
+    }
+
+    /// True when every capability is at its default (nothing asked of
+    /// the peer beyond the base session).
+    pub fn is_default(&self) -> bool {
+        self.autoscale.is_none() && self.gate.is_none() && !self.telemetry && self.token.is_none()
+    }
+
+    /// Consuming setter for the auth token.
+    pub fn with_token(mut self, token: &str) -> SessionCaps {
+        self.token = Some(token.to_string());
+        self
+    }
+
+    /// One JSON rendering for both codecs. Fields at their default are
+    /// omitted, so a caps object never mentions a capability the sender
+    /// does not use.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("version".to_string(), Json::Num(self.version as f64));
+        if let Some(cfg) = &self.autoscale {
+            o.insert("autoscale".to_string(), autoscale_config_to_json(cfg));
+        }
+        if let Some(cfg) = &self.gate {
+            o.insert("gate".to_string(), gate_config_to_json(cfg));
+        }
+        if self.telemetry {
+            o.insert("telemetry".to_string(), Json::Bool(true));
+        }
+        if let Some(token) = &self.token {
+            o.insert("token".to_string(), Json::Str(token.clone()));
+        }
+        Json::Obj(o)
+    }
+
+    /// Decode under the forward-compatibility contract: unknown keys
+    /// ignored, absent or null known keys defaulted, any version number
+    /// tolerated. A *malformed* known field (wrong type) is still an
+    /// error — skew is tolerated, corruption is not.
+    pub fn from_json(v: &Json) -> Result<SessionCaps, WireError> {
+        let version = match v.get("version") {
+            None | Some(Json::Null) => CAPS_VERSION,
+            Some(j) => j
+                .as_f64()
+                .ok_or_else(|| WireError::new("caps version must be a number"))?
+                as u64,
+        };
+        let autoscale = match v.get("autoscale") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(autoscale_config_from_json(j)?),
+        };
+        let gate = match v.get("gate") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(gate_config_from_json(j)?),
+        };
+        let telemetry = match v.get("telemetry") {
+            None | Some(Json::Null) => false,
+            Some(j) => j
+                .as_bool()
+                .ok_or_else(|| WireError::new("caps telemetry must be a bool"))?,
+        };
+        let token = match v.get("token") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(
+                j.as_str()
+                    .ok_or_else(|| WireError::new("caps token must be a string"))?
+                    .to_string(),
+            ),
+        };
+        Ok(SessionCaps {
+            version,
+            autoscale,
+            gate,
+            telemetry,
+            token,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_caps_render_to_a_bare_version_stamp() {
+        let caps = SessionCaps::default();
+        assert!(caps.is_default());
+        let text = caps.to_json().to_string();
+        assert_eq!(text, r#"{"version":1}"#);
+        assert_eq!(SessionCaps::from_json(&Json::parse(&text).unwrap()).unwrap(), caps);
+    }
+
+    #[test]
+    fn every_field_roundtrips() {
+        let caps = SessionCaps {
+            autoscale: Some(AutoscaleConfig {
+                max_devices: 9,
+                device_rate: 3.25,
+                ..AutoscaleConfig::default()
+            }),
+            gate: Some(GateConfig {
+                max_skip_run: 4,
+                tracker_stretch: 2.5,
+                ..GateConfig::default()
+            }),
+            telemetry: true,
+            token: Some("s3cret".to_string()),
+            ..SessionCaps::default()
+        };
+        assert!(!caps.is_default());
+        let v = caps.to_json();
+        assert_eq!(SessionCaps::from_json(&v).unwrap(), caps);
+    }
+
+    #[test]
+    fn unknown_fields_and_future_versions_are_tolerated() {
+        // A "future" peer: higher version, a capability this build has
+        // never heard of. Decode keeps what it knows, ignores the rest.
+        let text = r#"{"version":99,"telemetry":true,"holograms":{"depth":3},"token":"t"}"#;
+        let caps = SessionCaps::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(caps.version, 99);
+        assert!(caps.telemetry);
+        assert_eq!(caps.token.as_deref(), Some("t"));
+        assert!(caps.autoscale.is_none());
+        // An empty object is all defaults — absent fields never reject.
+        let empty = SessionCaps::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(empty, SessionCaps::default());
+    }
+
+    #[test]
+    fn malformed_known_fields_are_errors_not_defaults() {
+        for text in [
+            r#"{"version":"one"}"#,
+            r#"{"telemetry":3}"#,
+            r#"{"token":17}"#,
+            r#"{"autoscale":"yes"}"#,
+        ] {
+            assert!(
+                SessionCaps::from_json(&Json::parse(text).unwrap()).is_err(),
+                "accepted corrupt caps: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn legacy_lift_matches_field_by_field() {
+        let caps = SessionCaps::from_legacy(None, Some(GateConfig::default()), true);
+        assert_eq!(caps.version, CAPS_VERSION);
+        assert!(caps.autoscale.is_none());
+        assert!(caps.gate.is_some());
+        assert!(caps.telemetry);
+        assert!(caps.token.is_none(), "legacy peers cannot present a token");
+        let with = SessionCaps::default().with_token("k");
+        assert_eq!(with.token.as_deref(), Some("k"));
+    }
+}

@@ -25,12 +25,21 @@
 //!   the audit/debug format; binary decodes to the identical
 //!   [`WireEvent`] the JSON path produces, so the [`EventLog`] replay
 //!   contract survives the swap bit for bit.
+//! * [`caps`] — [`SessionCaps`], the versioned session-capability set
+//!   the transport handshake carries (autoscale / gate / telemetry /
+//!   auth token) under one forward-compatibility contract: unknown
+//!   fields tolerated, absent fields defaulted, any version number
+//!   accepted. It replaced the flat optional-field sprawl PRs 5–7 grew
+//!   on `Hello`; the JSON handshake still writes the legacy keys so
+//!   old peers interoperate.
 
 pub mod binary;
+pub mod caps;
 pub mod log;
 pub mod plane;
 pub mod wire;
 
+pub use caps::{SessionCaps, CAPS_VERSION};
 pub use log::EventLog;
 pub use plane::{ControlAction, ControlEvent, ControlOrigin, ControlRecord};
 pub use wire::{

@@ -1,0 +1,247 @@
+//! Churn chaos sweep: shards join and leave continuously under 2×
+//! load — rolling-restart style — while the delivered-FPS floor and
+//! the orphan re-placement deadline hold (see EXPERIMENTS.md §Churn
+//! for the measured numbers).
+//!
+//! * [`churn_chaos`] — the acceptance sweep: every shard in a 3-shard
+//!   fleet is restarted once (fail at epochs 2/4/6, rejoin at 4/6/8,
+//!   exactly one shard down at any time) under twice the fleet's raw
+//!   capacity, run in-process and with every shard behind a loopback
+//!   TCP socket. Each cell must deliver at least [`CHURN_FPS_FLOOR`]
+//!   of the churn-free baseline on the same load, re-place every
+//!   orphan within one gossip interval, and end with all three shards
+//!   back in gossip.
+//!
+//! The churn cells run with [`ShardScenario::handover`] on: re-placed
+//! and migrated streams pay the window-rebuild toll in their reported
+//! latency, so the floor prices realistic handover cost, not free
+//! state teleportation.
+
+use std::collections::BTreeMap;
+
+use crate::experiments::fleet::pool_of;
+use crate::fleet::stream::StreamSpec;
+use crate::shard::remote::{run_sharded_remote, RemoteTransport};
+use crate::shard::sim::{run_sharded, ShardReport, ShardScenario};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+/// Delivered-FPS floor under rolling restarts, as a fraction of the
+/// churn-free baseline on the same 2× load. Conservative on purpose —
+/// one of three shards is down for half the run, so raw capacity dips
+/// to 2/3 for those epochs — but low enough that a wedged rejoin or a
+/// double-placed orphan (which double-charges admission) breaks it.
+pub const CHURN_FPS_FLOOR: f64 = 0.6;
+
+/// The rolling-restart schedule: `(shard, fail epoch, rejoin epoch)`.
+/// Staggered so exactly one shard is down at any time, and the last
+/// rejoin (epoch 8) still leaves epochs to prove the planner re-levels
+/// onto the returned capacity.
+pub const CHURN_RESTARTS: [(usize, usize, usize); 3] = [(0, 2, 4), (1, 4, 6), (2, 6, 8)];
+
+/// Gossip interval of both cells (seconds). The orphan re-placement
+/// deadline is exactly one interval.
+pub const CHURN_GOSSIP: f64 = 10.0;
+
+/// 12 × 5-FPS cams = 60 FPS offered against Σμ = 30: twice the raw
+/// fleet capacity, so every epoch is an overload epoch even before a
+/// shard drops.
+fn churn_streams() -> Vec<StreamSpec> {
+    (0..12)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 5.0, 600).with_window(4))
+        .collect()
+}
+
+fn churn_pools() -> Vec<Vec<crate::device::DeviceInstance>> {
+    vec![pool_of(4, 2.5), pool_of(4, 2.5), pool_of(4, 2.5)]
+}
+
+/// The churn-free 2×-load baseline: same pools, streams, epochs and
+/// seed, no restarts. Failure-free runs are transport-exact, so one
+/// in-process baseline anchors both cells.
+pub fn baseline_scenario(seed: u64) -> ShardScenario {
+    ShardScenario::builder(churn_pools(), churn_streams())
+        .gossip(CHURN_GOSSIP)
+        .epochs(12)
+        .seed(seed)
+        .build()
+}
+
+/// The chaos cell: the baseline plus the rolling-restart schedule,
+/// with the handover toll armed.
+pub fn churn_scenario(seed: u64) -> ShardScenario {
+    let mut b = ShardScenario::builder(churn_pools(), churn_streams())
+        .gossip(CHURN_GOSSIP)
+        .epochs(12)
+        .seed(seed)
+        .handover();
+    for &(shard, fail, rejoin) in &CHURN_RESTARTS {
+        b = b.restart(shard, fail, rejoin);
+    }
+    b.build()
+}
+
+/// One cell's outcome under rolling restarts.
+#[derive(Debug, Clone)]
+pub struct ChurnOutcome {
+    /// "inproc" or "tcp".
+    pub mode: &'static str,
+    pub delivered_fps: f64,
+    /// The churn-free baseline on the same load.
+    pub baseline_fps: f64,
+    /// delivered / baseline — pinned ≥ [`CHURN_FPS_FLOOR`].
+    pub fps_ratio: f64,
+    /// Streams orphaned by any of the three losses.
+    pub orphans: usize,
+    /// Every orphan re-placed within one gossip interval.
+    pub replaced_within_deadline: bool,
+    /// Worst loss→re-placement gap (seconds).
+    pub worst_gap: f64,
+    pub migrations: usize,
+    /// Shards in gossip at the end — all three, since every restart
+    /// rejoins.
+    pub shards_alive: usize,
+    pub drop_rate: f64,
+}
+
+impl ChurnOutcome {
+    pub fn holds_floor(&self) -> bool {
+        self.fps_ratio >= CHURN_FPS_FLOOR
+    }
+}
+
+fn churn_outcome(mode: &'static str, report: &ShardReport, baseline_fps: f64) -> ChurnOutcome {
+    ChurnOutcome {
+        mode,
+        delivered_fps: report.delivered_fps(),
+        baseline_fps,
+        fps_ratio: report.delivered_fps() / baseline_fps.max(1e-9),
+        orphans: report.orphan_count(),
+        replaced_within_deadline: report.orphans_replaced_within(report.gossip_interval),
+        worst_gap: report.worst_orphan_gap(),
+        migrations: report.migrations,
+        shards_alive: report.shard_alive.iter().filter(|&&a| a).count(),
+        drop_rate: report.drop_rate(),
+    }
+}
+
+/// Churn chaos sweep: rolling restarts of all three shards at 2× load,
+/// in-process and over loopback TCP.
+pub fn churn_chaos(seed: u64) -> (Table, Vec<ChurnOutcome>) {
+    let baseline_fps = run_sharded(&baseline_scenario(seed)).delivered_fps();
+    let scenario = churn_scenario(seed);
+    let mut t = Table::new(
+        "Rolling restarts at 2× load (3 shards, each down for 2 of 12 epochs)",
+        &[
+            "mode", "delivered σ", "baseline σ", "ratio", "floor ok", "orphans",
+            "re-placed ≤ 1 interval", "worst gap (s)", "migrations", "shards alive",
+        ],
+    );
+    let mut outcomes = Vec::new();
+    for (mode, report) in [
+        ("inproc", run_sharded(&scenario)),
+        (
+            "tcp",
+            run_sharded_remote(&scenario, RemoteTransport::Tcp)
+                .expect("loopback TCP churn co-simulation"),
+        ),
+    ] {
+        let o = churn_outcome(mode, &report, baseline_fps);
+        t.row(vec![
+            o.mode.to_string(),
+            f(o.delivered_fps, 2),
+            f(o.baseline_fps, 2),
+            f(o.fps_ratio, 3),
+            if o.holds_floor() { "yes" } else { "no" }.to_string(),
+            format!("{}", o.orphans),
+            if o.replaced_within_deadline { "yes" } else { "no" }.to_string(),
+            f(o.worst_gap, 1),
+            format!("{}", o.migrations),
+            format!("{}", o.shards_alive),
+        ]);
+        outcomes.push(o);
+    }
+    (t, outcomes)
+}
+
+fn churn_outcome_json(o: &ChurnOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("mode".into(), Json::Str(o.mode.to_string()));
+    m.insert("delivered_fps".into(), Json::Num(o.delivered_fps));
+    m.insert("baseline_fps".into(), Json::Num(o.baseline_fps));
+    m.insert("fps_ratio".into(), Json::Num(o.fps_ratio));
+    m.insert("holds_floor".into(), Json::Bool(o.holds_floor()));
+    m.insert("orphans".into(), Json::Num(o.orphans as f64));
+    m.insert(
+        "replaced_within_deadline".into(),
+        Json::Bool(o.replaced_within_deadline),
+    );
+    m.insert("worst_gap".into(), Json::Num(o.worst_gap));
+    m.insert("migrations".into(), Json::Num(o.migrations as f64));
+    m.insert("shards_alive".into(), Json::Num(o.shards_alive as f64));
+    m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+    Json::Obj(m)
+}
+
+/// Machine-readable churn bundle (the `eva shard --scenario churn
+/// --json` surface).
+pub fn churn_json(seed: u64) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+    root.insert("fps_floor".into(), Json::Num(CHURN_FPS_FLOOR));
+    root.insert("deadline_intervals".into(), Json::Num(1.0));
+    let (_, outcomes) = churn_chaos(seed);
+    root.insert(
+        "churn_chaos".into(),
+        Json::Arr(outcomes.iter().map(churn_outcome_json).collect()),
+    );
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_holds_the_floor_and_replaces_every_orphan_in_both_modes() {
+        // The acceptance criterion: rolling restarts at 2× load hold
+        // the pinned FPS floor, every orphan is re-placed within one
+        // gossip interval, and all three shards end up back in gossip.
+        let (_, outcomes) = churn_chaos(137);
+        assert_eq!(outcomes.len(), 2);
+        for o in &outcomes {
+            assert!(o.holds_floor(), "{o:?}");
+            assert!(o.orphans > 0, "{o:?}");
+            assert!(o.replaced_within_deadline, "{o:?}");
+            assert!(o.worst_gap <= CHURN_GOSSIP + 1e-9, "{o:?}");
+            assert_eq!(o.shards_alive, 3, "{o:?}");
+        }
+    }
+
+    #[test]
+    fn churn_never_double_places_a_stream() {
+        // Frame conservation: a stream re-placed while its rejoin races
+        // shard-loss detection must be charged exactly once — every cam
+        // sees exactly its 600 arrivals, in both runners.
+        let scenario = churn_scenario(211);
+        for report in [
+            run_sharded(&scenario),
+            run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("tcp churn"),
+        ] {
+            for s in &report.streams {
+                assert_eq!(s.frames_total, 600, "{}: {s:?}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn churn_json_reparses() {
+        let j = churn_json(7);
+        let back = Json::parse(&j.to_string()).expect("churn JSON must reparse");
+        assert_eq!(back.get("seed").and_then(Json::as_i64), Some(7));
+        let rows = back.get("churn_chaos").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("mode").and_then(Json::as_str), Some("inproc"));
+        assert_eq!(rows[1].get("mode").and_then(Json::as_str), Some("tcp"));
+    }
+}

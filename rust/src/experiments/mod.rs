@@ -7,6 +7,7 @@
 //! points) against the measured values.
 
 pub mod autoscale;
+pub mod churn;
 pub mod common;
 pub mod configs;
 pub mod parallel;

@@ -64,11 +64,12 @@ pub fn balanced_split(seed: u64) -> (Table, Vec<SplitOutcome>) {
         let streams: Vec<StreamSpec> = (0..8)
             .map(|i| StreamSpec::new(&format!("cam{i}"), 10.0, 300).with_window(4))
             .collect();
-        let scenario = ShardScenario::new(equal_pools(shards, 8, 2.5), streams)
-            .with_admission(AdmissionPolicy::admit_all())
-            .with_gossip(10.0)
-            .with_epochs(5)
-            .with_seed(seed ^ shards as u64);
+        let scenario = ShardScenario::builder(equal_pools(shards, 8, 2.5), streams)
+            .admission(AdmissionPolicy::admit_all())
+            .gossip(10.0)
+            .epochs(5)
+            .seed(seed ^ shards as u64)
+            .build();
         let report = run_sharded(&scenario);
         let outcome = SplitOutcome {
             label: format!("{shards} shard(s) × {} devices", 8 / shards),
@@ -117,11 +118,12 @@ fn skew_scenario(policy: PlacementPolicy, seed: u64) -> ShardScenario {
         streams.push(StreamSpec::new(&format!("light{i}"), 2.0, 80).with_window(4));
     }
     // Interleave as arrival order heavy, light, heavy, light, ...
-    ShardScenario::new(vec![pool_of(6, 2.5), pool_of(6, 2.5)], streams)
-        .with_policy(policy)
-        .with_gossip(5.0)
-        .with_epochs(10)
-        .with_seed(seed)
+    ShardScenario::builder(vec![pool_of(6, 2.5), pool_of(6, 2.5)], streams)
+        .policy(policy)
+        .gossip(5.0)
+        .epochs(10)
+        .seed(seed)
+        .build()
 }
 
 /// Skewed-load sweep: placement policy vs initial imbalance and the
@@ -179,14 +181,15 @@ pub fn shard_failure(seed: u64) -> (Table, FailoverOutcome) {
     let streams: Vec<StreamSpec> = (0..9)
         .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 200).with_window(4))
         .collect();
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool_of(4, 2.5), pool_of(4, 2.5), pool_of(4, 2.5)],
         streams,
     )
-    .with_gossip(10.0)
-    .with_epochs(10)
-    .with_seed(seed)
-    .with_failure(2, 0);
+    .gossip(10.0)
+    .epochs(10)
+    .seed(seed)
+    .failure(2, 0)
+    .build();
     let report = run_sharded(&scenario);
     let outcome = FailoverOutcome {
         orphans: report.orphan_count(),
@@ -239,15 +242,15 @@ pub fn overload_scenario(seed: u64, autoscale: bool) -> ShardScenario {
         streams.push(StreamSpec::new(&format!("heavy{i}"), 4.75, 285).with_window(4));
         streams.push(StreamSpec::new(&format!("light{i}"), 0.5, 30).with_window(4));
     }
-    let scenario = ShardScenario::new(vec![pool_of(4, 2.5), pool_of(4, 2.5)], streams)
-        .with_policy(PlacementPolicy::RoundRobin)
-        .with_gossip(10.0)
-        .with_epochs(8)
-        .with_seed(seed);
+    let builder = ShardScenario::builder(vec![pool_of(4, 2.5), pool_of(4, 2.5)], streams)
+        .policy(PlacementPolicy::RoundRobin)
+        .gossip(10.0)
+        .epochs(8)
+        .seed(seed);
     if autoscale {
-        scenario.with_autoscale(overload_autoscale_cfg())
+        builder.autoscale(overload_autoscale_cfg()).build()
     } else {
-        scenario
+        builder.build()
     }
 }
 
@@ -360,26 +363,30 @@ fn custom_scenario(
     telemetry: bool,
     codec: Codec,
     groups: Option<usize>,
+    token: Option<String>,
 ) -> ShardScenario {
     let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
     let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
-    let mut scenario = ShardScenario::new(shards, streams)
-        .with_policy(policy)
-        .with_admission(admission)
-        .with_gossip(gossip)
-        .with_epochs(epochs)
-        .with_seed(seed)
-        .with_codec(codec);
+    let mut builder = ShardScenario::builder(shards, streams)
+        .policy(policy)
+        .admission(admission)
+        .gossip(gossip)
+        .epochs(epochs)
+        .seed(seed)
+        .codec(codec);
     if let Some(size) = groups {
-        scenario = scenario.with_groups(size);
+        builder = builder.groups(size);
     }
     if let Some(cfg) = autoscale {
-        scenario = scenario.with_autoscale(cfg);
+        builder = builder.autoscale(cfg);
     }
     if telemetry {
-        scenario = scenario.with_telemetry();
+        builder = builder.telemetry();
     }
-    scenario
+    if let Some(t) = &token {
+        builder = builder.token(t);
+    }
+    builder.build()
 }
 
 /// A one-off sharded run from CLI parameters (the `eva shard
@@ -402,14 +409,15 @@ pub fn custom_run(
 ) -> ShardReport {
     run_sharded(&custom_scenario(
         shards, streams, policy, admission, gossip, seed, autoscale, telemetry, codec, groups,
+        None,
     ))
 }
 
 /// [`custom_run`] with every shard behind a real loopback socket (the
 /// `eva shard --scenario run --transport tcp|uds` path): same epoch
 /// budget, but the co-simulation crosses [`crate::transport`] frames —
-/// including the autoscale config (in the handshake) and every
-/// shard-local scale action (as control frames).
+/// including the session capabilities and auth `token` (in the
+/// handshake) and every shard-local scale action (as control frames).
 #[allow(clippy::too_many_arguments)]
 pub fn custom_run_remote(
     shards: Vec<Vec<DeviceInstance>>,
@@ -422,11 +430,13 @@ pub fn custom_run_remote(
     telemetry: bool,
     codec: Codec,
     groups: Option<usize>,
+    token: Option<String>,
     transport: crate::shard::remote::RemoteTransport,
 ) -> anyhow::Result<ShardReport> {
     crate::shard::remote::run_sharded_remote(
         &custom_scenario(
             shards, streams, policy, admission, gossip, seed, autoscale, telemetry, codec, groups,
+            token,
         ),
         transport,
     )

@@ -43,11 +43,12 @@ fn parity_scenario(seed: u64) -> ShardScenario {
     let streams: Vec<StreamSpec> = (0..8)
         .map(|i| StreamSpec::new(&format!("cam{i}"), 10.0, 300).with_window(4))
         .collect();
-    ShardScenario::new(vec![pool_of(4, 2.5), pool_of(4, 2.5)], streams)
-        .with_admission(AdmissionPolicy::admit_all())
-        .with_gossip(10.0)
-        .with_epochs(5)
-        .with_seed(seed)
+    ShardScenario::builder(vec![pool_of(4, 2.5), pool_of(4, 2.5)], streams)
+        .admission(AdmissionPolicy::admit_all())
+        .gossip(10.0)
+        .epochs(5)
+        .seed(seed)
+        .build()
 }
 
 /// Parity sweep: in-process vs loopback TCP vs Unix-domain sockets on
@@ -189,14 +190,15 @@ pub fn connection_loss(seed: u64) -> (Table, LossOutcome) {
     let streams: Vec<StreamSpec> = (0..9)
         .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 200).with_window(4))
         .collect();
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool_of(4, 2.5), pool_of(4, 2.5), pool_of(4, 2.5)],
         streams,
     )
-    .with_gossip(10.0)
-    .with_epochs(10)
-    .with_seed(seed)
-    .with_failure(2, 0);
+    .gossip(10.0)
+    .epochs(10)
+    .seed(seed)
+    .failure(2, 0)
+    .build();
     let report = run_sharded_remote(&scenario, RemoteTransport::Tcp)
         .expect("loopback TCP co-simulation");
     let outcome = LossOutcome {

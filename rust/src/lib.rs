@@ -48,7 +48,13 @@
 //!   Σμ-vs-Σλ band) and drives stream migration — and shard-loss
 //!   re-placement — via serialised detach→attach control events.
 //!   `shard::remote` runs the same co-simulation with every fleet
-//!   instance behind a real socket; a dropped connection is shard loss.
+//!   instance behind a real socket; a dropped connection is shard loss,
+//!   and a scripted rejoin redials with backoff, re-handshakes as a
+//!   fresh session and re-enters gossip — the planner re-levels onto
+//!   the returning shard, and `ShardScenario::handover` charges
+//!   detach→attach migrations a window-refill toll so frames in
+//!   flight price the move. Scenarios are built through one surface,
+//!   `ShardScenario::builder(..)`.
 //!   `shard::autoscale` embeds the closed loop *inside* each shard:
 //!   capacity grows locally before the gossip migrates load away,
 //!   digests advertise post-scale headroom, and every scale action
@@ -67,7 +73,12 @@
 //!   remote `fleet::serve` consumer driven by a decoded `EventLog`
 //!   stream instead of in-process calls. The frame version byte selects
 //!   the payload codec (JSON or `control::binary`), and connections
-//!   mirror whatever codec the peer last spoke.
+//!   mirror whatever codec the peer last spoke. Sessions open with a
+//!   versioned capability set (`control::SessionCaps` on `Hello`:
+//!   autoscale, gate, telemetry, shared-secret auth token) under one
+//!   forward-compat contract; a bad token or protocol skew gets a
+//!   typed `Reject` frame, never a hang, and `eva shard-server
+//!   --listen <addr>` serves a shard on a real (non-loopback) bind.
 //! * [`gate`] — per-frame motion-gated detection: a per-stream motion
 //!   energy signal (frame-diff MSE over rastered clips, or calibrated
 //!   content-dynamics models for pixel-free paths) feeds a transprecision
@@ -89,7 +100,11 @@
 //!   bench binaries and the CLI. `experiments::scale` is the
 //!   coordinator-cost sweep: flat vs grouped planning reads, JSON vs
 //!   binary digest bytes and delta vs snapshot streams at 100k+
-//!   simulated streams (EXPERIMENTS.md §Scale).
+//!   simulated streams (EXPERIMENTS.md §Scale). `experiments::churn`
+//!   is the rolling-restart chaos sweep: every shard down in turn at
+//!   2× load with handover costs armed, pinned to a delivered-FPS
+//!   floor and a one-interval orphan re-placement deadline
+//!   (EXPERIMENTS.md §Churn).
 
 pub mod util;
 pub mod types;

@@ -1,111 +1,47 @@
 //! `eva` — the EVA-RS command-line launcher.
 //!
 //! Subcommands:
-//!   serve      run the real-time PJRT serving pipeline on a synthetic clip
-//!   offline    zero-drop offline detection (Figure 1a reference)
-//!   fleet      multi-stream serving over a shared device pool (virtual time)
-//!   autoscale  closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
-//!   shard      stream sharding across fleet instances (split|skew|failure|autoscale|run|transport|scale)
-//!   gate       motion-gated detection vs always-detect (lobby|highway|sports|all)
-//!   trace      end-to-end telemetry: p99 stage budgets, origin attribution, overhead
-//!   table      regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
-//!   nselect    recommend the parallel-detection parameter n (§III-B)
-//!   visualize  dump Figure 2/3-style PPM frames with box overlays
-//!   inspect    print video/model/device registries
+//!   serve        run the real-time PJRT serving pipeline on a synthetic clip
+//!   offline      zero-drop offline detection (Figure 1a reference)
+//!   fleet        multi-stream serving over a shared device pool (virtual time)
+//!   autoscale    closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
+//!   shard        stream sharding across fleet instances (split|skew|failure|autoscale|churn|run|transport|scale)
+//!   shard-server serve one shard on a real socket (--listen host:port|unix:<path>, --token auth)
+//!   gate         motion-gated detection vs always-detect (lobby|highway|sports|all)
+//!   trace        end-to-end telemetry: p99 stage budgets, origin attribution, overhead
+//!   table        regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
+//!   nselect      recommend the parallel-detection parameter n (§III-B)
+//!   visualize    dump Figure 2/3-style PPM frames with box overlays
+//!   inspect      print video/model/device registries
 //!
-//! Python never runs here: `make artifacts` must have produced
-//! `artifacts/*.hlo.txt` + `manifest.json` for the PJRT paths.
+//! The flag table, the exit-2 usage contract and the shared value
+//! parsers live in [`args`]; Python never runs here: `make artifacts`
+//! must have produced `artifacts/*.hlo.txt` + `manifest.json` for the
+//! PJRT paths.
+
+mod args;
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::args::usage_error;
 use eva::coordinator::nselect;
 use eva::detector::pjrt::PjrtDetectorFactory;
 use eva::detector::Detector;
-use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use eva::device::DeviceInstance;
 use eva::experiments;
 use eva::fleet::{run_fleet_with, AdmissionPolicy, Scenario, StreamSpec};
 use eva::runtime::{load_manifest, ModelSpec};
 use eva::server::{serve, ServeConfig};
 use eva::telemetry::RunTelemetry;
-use eva::util::cli::{usage, Args, Spec};
+use eva::util::cli::Args;
 use eva::video::{generate, presets, raster};
-
-fn specs() -> Vec<Spec> {
-    vec![
-        Spec { name: "model", takes_value: true, help: "TinyDet variant (essd|eyolo)", default: Some("essd") },
-        Spec { name: "workers", takes_value: true, help: "parallel detector replicas", default: Some("2") },
-        Spec { name: "frames", takes_value: true, help: "clip length in frames (default 60; fleet default 300)", default: None },
-        Spec { name: "fps", takes_value: true, help: "input stream rate λ", default: Some("10") },
-        Spec { name: "seed", takes_value: true, help: "experiment seed", default: Some("7") },
-        Spec { name: "id", takes_value: true, help: "table id for `table` (1..10|fig5|fig23|ablation|links|energy-frame|fleet|fleet-saturation)", default: None },
-        Spec { name: "artifacts", takes_value: true, help: "artifact directory", default: Some("artifacts") },
-        Spec { name: "lambda", takes_value: true, help: "input rate for nselect", default: Some("14") },
-        Spec { name: "mu", takes_value: true, help: "per-model rate for nselect", default: Some("2.5") },
-        Spec { name: "out", takes_value: true, help: "output directory for visualize", default: Some("/tmp/eva_frames") },
-        Spec { name: "csv", takes_value: false, help: "emit CSV instead of framed table", default: None },
-        Spec { name: "saturated", takes_value: false, help: "serve: feed frames as fast as possible", default: None },
-        Spec { name: "streams", takes_value: true, help: "fleet: number of concurrent streams", default: Some("8") },
-        Spec { name: "stream-fps", takes_value: true, help: "fleet: per-stream input rate λ", default: Some("5") },
-        Spec { name: "rates", takes_value: true, help: "fleet: comma-separated device rates μ", default: Some("13.5,2.5,2.5,2.5") },
-        Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
-        Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
-        Spec { name: "scenario", takes_value: true, help: "autoscale/shard/gate: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|all|run|transport|scale; gate: lobby|highway|sports|all)", default: Some("step") },
-        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/gate/trace: emit machine-readable JSON instead of tables", default: None },
-        Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
-        Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
-        Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
-        Spec { name: "transport", takes_value: true, help: "shard: control-plane transport for --scenario run (inproc|tcp|uds; sockets bind loopback)", default: Some("inproc") },
-        Spec { name: "codec", takes_value: true, help: "shard: control-plane payload codec for --scenario run (json|binary; json is the audit format)", default: None },
-        Spec { name: "groups", takes_value: true, help: "shard: rebalance over shard groups of this size for --scenario run (default: flat planning)", default: None },
-        Spec { name: "autoscale", takes_value: false, help: "shard: embed an AutoscaleController in every shard (--scenario run), or select the autoscale overload sweep", default: None },
-        Spec { name: "metrics-out", takes_value: true, help: "fleet/gate/shard/trace: write the run's metric snapshot (Prometheus text exposition) to this file", default: None },
-        Spec { name: "trace-out", takes_value: true, help: "fleet/gate/trace: write the run's per-frame span traces (JSONL) to this file", default: None },
-    ]
-}
-
-/// The one canonical subcommand list: the validity gate in `main`, the
-/// usage strings and `run`'s dispatch must never drift apart.
-const SUBCOMMANDS: [&str; 11] = [
-    "serve", "offline", "fleet", "autoscale", "shard", "gate", "trace", "table",
-    "nselect", "visualize", "inspect",
-];
-
-fn subcommand_list() -> String {
-    SUBCOMMANDS.join(" | ")
-}
-
-/// Exit 2 with a usage pointer: the command line itself is malformed
-/// (unknown subcommand/flag, stray positional), as opposed to a command
-/// that was understood but failed (exit 1).
-fn usage_error(msg: &str) -> ! {
-    eprintln!("error: {msg}");
-    eprintln!("usage: eva <subcommand> [options]  ({})", subcommand_list());
-    eprintln!("run `eva --help` for the full option list");
-    std::process::exit(2);
-}
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
-        print!("{}", usage("eva", "parallel detection for edge video analytics", &specs()));
-        println!("\nsubcommands: {}", subcommand_list());
-        return;
-    }
-    let cmd = raw[0].clone();
-    if !SUBCOMMANDS.contains(&cmd.as_str()) {
-        usage_error(&format!("unknown subcommand {cmd:?}"));
-    }
-    let args = match Args::parse(&raw[1..], &specs()) {
-        Ok(a) => a,
-        Err(e) => usage_error(&e),
-    };
-    // No subcommand takes positional arguments; a stray one is almost
-    // always a typo'd flag value and must not be silently ignored.
-    if let [stray, ..] = args.positional() {
-        usage_error(&format!("unexpected argument {stray:?}"));
-    }
+    let (cmd, args) = args::parse_argv(&raw);
+    args::check_applicability(&cmd, &args);
     if let Err(e) = run(&cmd, &args) {
         eprintln!("error: {e}");
         std::process::exit(1);
@@ -113,29 +49,13 @@ fn main() {
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
-    // `--metrics-out` / `--trace-out` only apply where a run produces a
-    // registry / span traces; anywhere else they would be silently
-    // ignored, and the CLI contract is that nothing is.
-    if args.get("metrics-out").is_some() && !matches!(cmd, "fleet" | "gate" | "shard" | "trace") {
-        usage_error(&format!("--metrics-out does not apply to {cmd} (fleet|gate|shard|trace)"));
-    }
-    if args.get("trace-out").is_some() && !matches!(cmd, "fleet" | "gate" | "trace") {
-        usage_error(&format!("--trace-out does not apply to {cmd} (fleet|gate|trace)"));
-    }
-    // `--codec`/`--groups` steer the sharded control plane only; the
-    // specs carry no default so "was it passed?" is observable here.
-    if args.get("codec").is_some() && cmd != "shard" {
-        usage_error(&format!("--codec does not apply to {cmd} (shard)"));
-    }
-    if args.get("groups").is_some() && cmd != "shard" {
-        usage_error(&format!("--groups does not apply to {cmd} (shard)"));
-    }
     match cmd {
         "serve" => cmd_serve(args, false),
         "offline" => cmd_serve(args, true),
         "fleet" => cmd_fleet(args),
         "autoscale" => cmd_autoscale(args),
         "shard" => cmd_shard(args),
+        "shard-server" => cmd_shard_server(args),
         "gate" => cmd_gate(args),
         "trace" => cmd_trace(args),
         "table" => cmd_table(args),
@@ -211,29 +131,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let frames = args.u64_or("frames", 300).map_err(|e| anyhow!(e))?;
     let window = args.usize_or("window", 4).map_err(|e| anyhow!(e))?;
     let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
-    let rates_raw = args.str_or("rates", "13.5,2.5,2.5,2.5");
-    let rates: Vec<f64> = rates_raw
-        .split(',')
-        .map(|p| {
-            p.trim()
-                .parse::<f64>()
-                .map_err(|_| anyhow!("--rates: cannot parse {:?}", p.trim()))
-        })
-        .collect::<Result<Vec<f64>>>()?;
-    if rates.is_empty() {
-        bail!("--rates: need at least one device rate");
-    }
+    let rates = args::parse_rates(args)?;
     let admission = if args.flag("no-admission") {
         AdmissionPolicy::admit_all()
     } else {
         AdmissionPolicy::default()
     };
 
-    let devices: Vec<DeviceInstance> = rates
-        .iter()
-        .enumerate()
-        .map(|(i, &r)| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r))
-        .collect();
+    let devices = args::device_pool(&rates);
     let specs: Vec<StreamSpec> = (0..streams)
         .map(|s| StreamSpec::new(&format!("stream{s}"), fps, frames).with_window(window))
         .collect();
@@ -363,6 +268,13 @@ fn cmd_shard(args: &Args) -> Result<()> {
     if scenario != "run" && args.str_or("transport", "inproc") != "inproc" {
         bail!("--transport applies only to --scenario run (the transport sweep runs all of them)");
     }
+    // `--token` authenticates the dial side of a socket run; an
+    // in-process run has no session to authenticate, so a token there
+    // would be a silent no-op.
+    let token = args.get("token").map(str::to_string);
+    if token.is_some() && (scenario != "run" || args.str_or("transport", "inproc") == "inproc") {
+        bail!("--token applies to --scenario run with --transport tcp|uds (sessions to authenticate)");
+    }
     // `--metrics-out` only applies to `--scenario run`: the sweeps run
     // many co-simulations, each with its own registry, so there is no
     // single snapshot to write.
@@ -418,18 +330,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
         let frames = args.u64_or("frames", 300).map_err(|e| anyhow!(e))?;
         let window = args.usize_or("window", 4).map_err(|e| anyhow!(e))?;
         let gossip = args.f64_or("gossip", 5.0).map_err(|e| anyhow!(e))?;
-        let rates_raw = args.str_or("rates", "13.5,2.5,2.5,2.5");
-        let rates: Vec<f64> = rates_raw
-            .split(',')
-            .map(|p| {
-                p.trim()
-                    .parse::<f64>()
-                    .map_err(|_| anyhow!("--rates: cannot parse {:?}", p.trim()))
-            })
-            .collect::<Result<Vec<f64>>>()?;
-        if rates.is_empty() {
-            bail!("--rates: need at least one device rate");
-        }
+        let rates = args::parse_rates(args)?;
         let policy_name = args.str_or("policy", "least-loaded");
         let policy = eva::shard::PlacementPolicy::parse(&policy_name)
             .ok_or_else(|| anyhow!("unknown placement policy {policy_name:?} (least-loaded|hash|round-robin)"))?;
@@ -438,17 +339,8 @@ fn cmd_shard(args: &Args) -> Result<()> {
         } else {
             AdmissionPolicy::default()
         };
-        let pools: Vec<Vec<DeviceInstance>> = (0..shards)
-            .map(|_| {
-                rates
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &r)| {
-                        DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, r)
-                    })
-                    .collect()
-            })
-            .collect();
+        let pools: Vec<Vec<DeviceInstance>> =
+            (0..shards).map(|_| args::device_pool(&rates)).collect();
         let specs: Vec<StreamSpec> = (0..streams)
             .map(|s| StreamSpec::new(&format!("stream{s}"), fps, frames).with_window(window))
             .collect();
@@ -503,6 +395,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
                     telemetry,
                     codec,
                     groups,
+                    token,
                     remote,
                 )?
             }
@@ -544,6 +437,31 @@ fn cmd_shard(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    if scenario == "churn" {
+        // Rolling-restart chaos at 2× load: every shard dies and
+        // rejoins once, in-process and over loopback TCP, against the
+        // pinned delivered-FPS floor and the one-interval orphan
+        // re-placement deadline. Stdout on the --json path must be
+        // exactly one parseable document (CI uploads it as
+        // BENCH_churn.json).
+        if args.flag("json") {
+            println!("{}", experiments::churn::churn_json(seed).to_string());
+            return Ok(());
+        }
+        let (table, outcomes) = experiments::churn::churn_chaos(seed);
+        print!("{}", table.render());
+        for o in &outcomes {
+            println!(
+                "[churn] {}: {:.3}× baseline (floor {}), worst orphan gap {:.1}s",
+                o.mode,
+                o.fps_ratio,
+                experiments::churn::CHURN_FPS_FLOOR,
+                o.worst_gap,
+            );
+        }
+        return Ok(());
+    }
+
     if scenario == "transport" {
         // The cross-host sweeps: loopback-socket co-simulation vs the
         // in-process twin, connection-loss recovery, and the
@@ -566,7 +484,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
 
     if args.flag("json") {
         let json = experiments::shard::shard_json(seed, &scenario).ok_or_else(|| {
-            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|autoscale|all|run|transport|scale)")
+            anyhow!("unknown shard scenario {scenario:?} (split|skew|failure|autoscale|churn|all|run|transport|scale)")
         })?;
         println!("{}", json.to_string());
         return Ok(());
@@ -592,9 +510,82 @@ fn cmd_shard(args: &Args) -> Result<()> {
             print!("{}", t2.render());
             print!("{}", t3.render());
         }
-        other => bail!("unknown shard scenario {other:?} (split|skew|failure|autoscale|all|run|transport|scale)"),
+        other => bail!("unknown shard scenario {other:?} (split|skew|failure|autoscale|churn|all|run|transport|scale)"),
     }
     Ok(())
+}
+
+/// `eva shard-server`: serve one shard on a real socket — the
+/// multi-machine deployment surface. `--listen host:port` binds TCP
+/// (non-loopback binds are the point; `0.0.0.0:port` serves the LAN),
+/// `unix:<path>` a Unix socket. `--token` arms session auth: a
+/// handshake without the secret gets a typed reject, never a hang.
+/// `--sessions` is how many coordinator sessions to serve before a
+/// clean exit — a coordinator that redials after a crash is a new
+/// session. `--probe` dials `--listen` instead of serving: handshake,
+/// goodbye, exit 0 — the smoke-test surface.
+fn cmd_shard_server(args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow!("--listen required (host:port, or unix:<path>)"))?;
+    let endpoint = args::parse_endpoint(listen);
+    let token = args.get("token");
+    if args.flag("probe") {
+        return probe_shard_server(&endpoint, token);
+    }
+    let rates = args::parse_rates(args)?;
+    let sessions = args.usize_or("sessions", 1).map_err(|e| anyhow!(e))?.max(1);
+    let mut shard = eva::shard::RemoteShard::new(0, args::device_pool(&rates));
+    if let Some(t) = token {
+        shard = shard.with_token(t);
+    }
+    let listener = eva::transport::Listener::bind(&endpoint)
+        .map_err(|e| anyhow!("--listen {listen:?}: {e}"))?;
+    let local = listener
+        .local_endpoint()
+        .map_err(|e| anyhow!("--listen {listen:?}: {e}"))?;
+    println!(
+        "[shard-server] shard 0 ({} devices, Σμ {:.1}) listening on {} — {} session(s), auth {}",
+        rates.len(),
+        rates.iter().sum::<f64>(),
+        local.label(),
+        sessions,
+        if token.is_some() { "token" } else { "open" },
+    );
+    eva::shard::serve_shard_sessions(listener, shard, sessions)
+        .map_err(|e| anyhow!("shard-server: {e}"))?;
+    println!("[shard-server] served {sessions} session(s), exiting");
+    Ok(())
+}
+
+/// Dial a running `shard-server`, handshake (with `--token` if given),
+/// print the shard's advertised capacity and exit: 0 on a Welcome, 1 on
+/// a typed reject or any transport error.
+fn probe_shard_server(endpoint: &eva::transport::Endpoint, token: Option<&str>) -> Result<()> {
+    use eva::transport::{connect_with_backoff, TransportMsg, TRANSPORT_VERSION};
+    let mut conn = connect_with_backoff(endpoint, 20, std::time::Duration::from_millis(25))
+        .map_err(|e| anyhow!("probe: cannot reach {}: {e}", endpoint.label()))?;
+    let caps = eva::control::SessionCaps {
+        token: token.map(str::to_string),
+        ..eva::control::SessionCaps::default()
+    };
+    conn.send(&TransportMsg::Hello {
+        shard: 0,
+        protocol: TRANSPORT_VERSION,
+        admission: AdmissionPolicy::default(),
+        roster: Vec::new(),
+        caps,
+    })
+    .map_err(|e| anyhow!("probe: handshake send: {e}"))?;
+    match conn.recv().map_err(|e| anyhow!("probe: handshake reply: {e}"))? {
+        TransportMsg::Welcome { shard, capacity } => {
+            println!("[shard-server] probe ok: shard {shard}, capacity {capacity:.2} FPS");
+            let _ = conn.send(&TransportMsg::Bye);
+            Ok(())
+        }
+        TransportMsg::Reject { code, detail } => bail!("probe rejected ({code}): {detail}"),
+        other => bail!("probe: unexpected reply {}", other.label()),
+    }
 }
 
 fn cmd_gate(args: &Args) -> Result<()> {

@@ -23,7 +23,10 @@
 //!   behind a real socket ([`crate::transport`]): shards answer gossip
 //!   polls and serve epoch slices over length-prefixed frames, and a
 //!   dropped connection surfaces as shard loss — the gossip planner
-//!   re-places the orphans within one interval.
+//!   re-places the orphans within one interval. Sessions authenticate
+//!   via [`crate::control::SessionCaps`] tokens, rejected handshakes
+//!   get a typed `Reject` frame, and a restarted shard redials and
+//!   rejoins gossip as a fresh session.
 //! * [`group`] — two-level coordination: shard *groups* whose digests
 //!   aggregate member headroom (Σμ, Σλ, min/max per-member), so the
 //!   coordinator plans over ⌈M/k⌉ aggregates and descends into members
@@ -57,8 +60,10 @@ pub use group::{
 };
 pub use plan::{plan, plan_flat, plan_grouped, PlanStats};
 pub use placement::{fnv1a, PlacementPolicy, ShardView};
-pub use remote::{run_sharded_remote, serve_shard, RemoteShard, RemoteTransport};
+pub use remote::{
+    run_sharded_remote, serve_shard, serve_shard_sessions, RemoteShard, RemoteTransport,
+};
 pub use sim::{
-    record_coordinator_telemetry, record_slice_telemetry, run_sharded, EpochPhases, ShardControl,
-    ShardReport, ShardScenario, ShardStreamReport,
+    record_coordinator_telemetry, record_slice_telemetry, run_sharded, EpochPhases,
+    ScenarioBuilder, ShardControl, ShardReport, ShardScenario, ShardStreamReport,
 };

@@ -30,6 +30,23 @@
 //! silent shard (the error is synchronous), and never slower than the
 //! one-gossip-interval bound the in-process co-sim guarantees.
 //!
+//! **Sessions, auth, rejoin.** A listening shard serves a configurable
+//! number of coordinator sessions back to back
+//! ([`serve_shard_sessions`]); every session starts from a fresh
+//! resident set and device pool, so a coordinator redialling after a
+//! crash talks to a fresh shard, never a haunted one. The handshake
+//! carries a versioned [`SessionCaps`]: a shard started with a session
+//! token answers a mismatched or missing one with a typed
+//! [`TransportMsg::Reject`] frame — never a hang — and protocol skew is
+//! refused the same way. Scenario `rejoins` redial a dead shard at a
+//! scheduled epoch ahead of that epoch's gossip round: it re-enters the
+//! table as a fresh shard (full capacity, zero committed) and the
+//! planner re-levels onto it. With `handover` enabled, migrated and
+//! re-placed streams charge a warm-up toll — their first
+//! window's worth of frames carries the detach→attach (or orphan-gap)
+//! delay — so churn sweeps price what a real handover costs instead of
+//! teleporting state for free.
+//!
 //! The epoch arithmetic (arrival credit, quota clipping, sub-scenario
 //! seeds) mirrors [`crate::shard::sim::run_sharded`] term for term, so
 //! a loopback run is comparable to the in-process co-simulation — the
@@ -47,7 +64,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::autoscale::policy::AutoscaleConfig;
-use crate::control::{ControlAction, ControlOrigin, WireEvent, WirePayload};
+use crate::control::{ControlAction, ControlOrigin, SessionCaps, WireEvent, WirePayload};
 use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::sim::{run_fleet_with, Scenario};
@@ -112,6 +129,11 @@ pub struct RemoteShard {
     /// carried in the coordinator's `Hello` overrides it for the
     /// session.
     pub gate: Option<GateConfig>,
+    /// Shared-secret session auth. When set, a `Hello` whose
+    /// [`SessionCaps`] does not carry the identical token is answered
+    /// with a typed `Reject("auth")` frame and the session ends — the
+    /// dialler gets a decodable refusal, never a hang.
+    pub token: Option<String>,
 }
 
 impl RemoteShard {
@@ -122,6 +144,7 @@ impl RemoteShard {
             fail_at_epoch: None,
             autoscale: None,
             gate: None,
+            token: None,
         }
     }
 
@@ -139,6 +162,11 @@ impl RemoteShard {
         self.gate = Some(gate);
         self
     }
+
+    pub fn with_token(mut self, token: &str) -> RemoteShard {
+        self.token = Some(token.to_string());
+        self
+    }
 }
 
 /// Serve one shard behind `listener`: accept a single coordinator
@@ -149,7 +177,40 @@ impl RemoteShard {
 /// through the same virtual-time fleet engine the in-process runner
 /// uses.
 pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), TransportError> {
-    let mut conn = listener.accept()?;
+    serve_shard_sessions(listener, shard, 1)
+}
+
+/// Serve `sessions` coordinator sessions back to back on one listener.
+///
+/// Each accepted connection gets a *fresh* session — empty resident
+/// set, the shard's original device pool, standing autoscale/gate
+/// configs — so a coordinator that redials after a crash rejoins a
+/// shard with no stale state. A scripted death
+/// ([`RemoteShard::fail_at_epoch`]) fires at most once across the
+/// whole run: the session it kills consumes it, and the rejoin session
+/// serves to completion. A session that dies mid-flight — coordinator
+/// crash, broken pipe, framing lost, read deadline — ends *that*
+/// session only: the listener survives to serve the redial, which is
+/// the whole point of running more than one session.
+pub fn serve_shard_sessions(
+    listener: Listener,
+    shard: RemoteShard,
+    sessions: usize,
+) -> Result<(), TransportError> {
+    let mut fail_at = shard.fail_at_epoch;
+    for _ in 0..sessions {
+        let conn = listener.accept()?;
+        let _ = serve_session(&shard, conn, &mut fail_at);
+    }
+    Ok(())
+}
+
+/// One coordinator session against a fresh copy of the shard's state.
+fn serve_session(
+    shard: &RemoteShard,
+    mut conn: FrameConn,
+    fail_at: &mut Option<usize>,
+) -> Result<(), TransportError> {
     let mut admission = AdmissionPolicy::default();
     let mut roster: Vec<String> = Vec::new();
     // Residents keyed by global stream id (assigned by the roster).
@@ -166,6 +227,10 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
     // fresh copy ships home ahead of every Slice (cumulative counters,
     // not deltas, so the latest snapshot supersedes the rest).
     let mut telemetry: Option<Registry> = None;
+    // Flipped by a token-checked Hello. A token-requiring shard answers
+    // any pre-handshake traffic with the same typed refusal a bad token
+    // gets — capability probes don't leak behaviour past auth.
+    let mut authed = false;
 
     loop {
         let msg = match conn.recv() {
@@ -179,40 +244,66 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
         // frames after the handshake gets binary digests and slices
         // back without any negotiation message.
         conn.set_codec(conn.last_recv_codec());
+        let handshake_msg = matches!(msg, TransportMsg::Hello { .. } | TransportMsg::Bye);
+        if shard.token.is_some() && !authed && !handshake_msg {
+            let _ = conn.send(&TransportMsg::Reject {
+                code: "auth".to_string(),
+                detail: "handshake required before traffic".to_string(),
+            });
+            return Ok(());
+        }
         match msg {
             TransportMsg::Hello {
                 protocol,
                 admission: adm,
                 roster: r,
-                autoscale,
-                gate: hello_gate,
-                telemetry: wants_telemetry,
+                caps,
                 ..
             } => {
+                // Both refusal paths send a typed frame and end the
+                // session cleanly: the dialler always gets a decodable
+                // answer, and the listener survives to serve the next
+                // session (a redial with the right credentials).
                 if protocol != TRANSPORT_VERSION {
-                    return Err(TransportError::Frame(
-                        crate::transport::frame::FrameError::Payload(format!(
-                            "protocol {protocol} != {TRANSPORT_VERSION}"
-                        )),
-                    ));
+                    let _ = conn.send(&TransportMsg::Reject {
+                        code: "protocol".to_string(),
+                        detail: format!(
+                            "peer speaks protocol {protocol}, shard speaks {TRANSPORT_VERSION}"
+                        ),
+                    });
+                    return Ok(());
                 }
+                if let Some(required) = &shard.token {
+                    if caps.token.as_deref() != Some(required.as_str()) {
+                        let detail = match &caps.token {
+                            None => "session token required".to_string(),
+                            Some(_) => "session token mismatch".to_string(),
+                        };
+                        let _ = conn.send(&TransportMsg::Reject {
+                            code: "auth".to_string(),
+                            detail,
+                        });
+                        return Ok(());
+                    }
+                }
+                authed = true;
                 admission = adm;
                 roster = r;
                 // A session-scoped autoscale config overrides the
                 // shard's standing one: the coordinator decides whether
                 // (and how) this shard scales itself.
-                if let Some(cfg) = autoscale {
+                if let Some(cfg) = caps.autoscale {
                     scaler = Some(ShardAutoscaler::new(cfg));
                 }
                 // Same session-override rule for the gate; whichever
                 // config wins, the (possibly fresh) scaler runs with it.
-                if let Some(cfg) = hello_gate {
+                if let Some(cfg) = caps.gate {
                     gate = Some(cfg);
                 }
                 if let Some(s) = scaler.as_mut() {
                     s.set_gate(gate.clone());
                 }
-                telemetry = wants_telemetry.then(Registry::new);
+                telemetry = caps.telemetry.then(Registry::new);
                 let capacity = pool.iter().map(|d| d.rate()).sum::<f64>()
                     * admission.target_utilization;
                 conn.send(&TransportMsg::Welcome {
@@ -232,8 +323,11 @@ pub fn serve_shard(listener: Listener, shard: RemoteShard) -> Result<(), Transpo
                 _ => {}
             },
             TransportMsg::Poll { epoch, at } => {
-                if shard.fail_at_epoch.is_some_and(|e| epoch >= e) {
+                if fail_at.is_some_and(|e| epoch >= e) {
                     // Scripted death: vanish mid-session, no goodbye.
+                    // Taking the trigger consumes it, so a rejoin
+                    // session on the same listener serves normally.
+                    *fail_at = None;
                     return Ok(());
                 }
                 // Post-scale headroom: an autoscaling shard advertises
@@ -383,6 +477,11 @@ struct RemoteStream {
     orphaned_at: Option<f64>,
     worst_gap: f64,
     ever_orphaned: bool,
+    /// Frames still carrying the handover toll: a migrated or
+    /// re-placed stream's first window of frames lands late by
+    /// `handover_lag` (scenario `handover` mode only).
+    carried_backlog: u64,
+    handover_lag: f64,
 }
 
 impl RemoteStream {
@@ -392,6 +491,54 @@ impl RemoteStream {
 
     fn active(&self) -> bool {
         self.remaining() > 0
+    }
+}
+
+/// Dial `endpoint` and run the capability handshake for shard `sh`,
+/// returning the live connection (already switched to the scenario
+/// codec) and the capacity the shard advertised.
+///
+/// One path for the initial connect *and* a scheduled rejoin: the
+/// coordinator's asks (autoscale / gate / telemetry / auth token) ride
+/// the versioned [`SessionCaps`], and a typed `Reject` answer becomes a
+/// typed error here — an auth or protocol refusal can fail a dial, but
+/// can never hang one.
+fn open_session(
+    endpoint: &Endpoint,
+    sh: usize,
+    scenario: &ShardScenario,
+    roster: &[String],
+) -> Result<(FrameConn, f64)> {
+    let mut conn = connect_with_backoff(endpoint, 10, std::time::Duration::from_millis(5))
+        .map_err(|e| anyhow!("shard {sh}: dial {} failed: {e}", endpoint.label()))?;
+    let caps = SessionCaps {
+        autoscale: scenario.autoscale.clone(),
+        gate: scenario.gate.clone(),
+        telemetry: scenario.telemetry,
+        token: scenario.token.clone(),
+        ..SessionCaps::default()
+    };
+    conn.send(&TransportMsg::Hello {
+        shard: sh,
+        protocol: TRANSPORT_VERSION,
+        admission: scenario.admission.clone(),
+        roster: roster.to_vec(),
+        caps,
+    })
+    .map_err(|e| anyhow!("shard {sh}: hello failed: {e}"))?;
+    match conn.recv() {
+        Ok(TransportMsg::Welcome { capacity, .. }) => {
+            // The handshake always rides JSON frames; everything after
+            // it uses the scenario codec, which the shard mirrors per
+            // frame.
+            conn.set_codec(scenario.codec);
+            Ok((conn, capacity))
+        }
+        Ok(TransportMsg::Reject { code, detail }) => {
+            Err(anyhow!("shard {sh}: session rejected ({code}): {detail}"))
+        }
+        Ok(other) => Err(anyhow!("shard {sh}: expected welcome, got {}", other.label())),
+        Err(e) => Err(anyhow!("shard {sh}: handshake failed: {e}")),
     }
 }
 
@@ -405,7 +552,12 @@ impl RemoteStream {
 /// drops ([`RemoteShard::fail_at_epoch`]); killing a connection orphans
 /// the shard's streams and the next placement pass re-places them, so
 /// the report's orphan-gap accounting is comparable to the in-process
-/// runner's.
+/// runner's. Scenario `rejoins` redial the dead shard's listener at
+/// the scheduled epoch (a fresh session against the original pool),
+/// scenario `token` arms shared-secret auth on every shard and
+/// presents the matching credential on every dial, and `handover`
+/// prices migrations and re-placements realistically instead of
+/// teleporting window state.
 pub fn run_sharded_remote(
     scenario: &ShardScenario,
     transport: RemoteTransport,
@@ -417,14 +569,21 @@ pub fn run_sharded_remote(
     let tick = scenario.gossip_interval.max(1e-3);
 
     // Bind every listener first (endpoints must be known before the
-    // coordinator dials), then spawn the shard servers.
+    // coordinator dials), then spawn the shard servers. A shard with
+    // scheduled rejoins serves one extra session per rejoin: each
+    // redial gets a fresh accept.
     let mut endpoints = Vec::with_capacity(m);
     let mut handles = Vec::with_capacity(m);
+    let mut sessions_expected = vec![0usize; m];
+    let mut sessions_opened = vec![0usize; m];
     for (sh, pool) in scenario.shards.iter().enumerate() {
         let listener = Listener::bind(&transport.endpoint(sh))
             .map_err(|e| anyhow!("shard {sh}: bind failed: {e}"))?;
         endpoints.push(listener.local_endpoint()?);
         let mut shard = RemoteShard::new(sh, pool.clone());
+        if let Some(token) = &scenario.token {
+            shard = shard.with_token(token);
+        }
         // Earliest scheduled death wins, matching the in-process runner
         // (which applies whichever failure entry's epoch comes first).
         if let Some(epoch) = scenario
@@ -436,33 +595,20 @@ pub fn run_sharded_remote(
         {
             shard = shard.with_failure(epoch);
         }
-        handles.push(std::thread::spawn(move || serve_shard(listener, shard)));
+        let sessions = 1 + scenario.rejoins.iter().filter(|&&(_, s)| s == sh).count();
+        sessions_expected[sh] = sessions;
+        handles.push(std::thread::spawn(move || {
+            serve_shard_sessions(listener, shard, sessions)
+        }));
     }
 
     let roster: Vec<String> = scenario.streams.iter().map(|s| s.name.clone()).collect();
     let mut conns: Vec<Option<FrameConn>> = Vec::with_capacity(m);
     let mut capacity = vec![0.0f64; m];
     for (sh, endpoint) in endpoints.iter().enumerate() {
-        let mut conn = connect_with_backoff(endpoint, 10, std::time::Duration::from_millis(5))
-            .map_err(|e| anyhow!("shard {sh}: dial {} failed: {e}", endpoint.label()))?;
-        conn.send(&TransportMsg::Hello {
-            shard: sh,
-            protocol: TRANSPORT_VERSION,
-            admission: scenario.admission.clone(),
-            roster: roster.clone(),
-            autoscale: scenario.autoscale.clone(),
-            gate: scenario.gate.clone(),
-            telemetry: scenario.telemetry,
-        })
-        .map_err(|e| anyhow!("shard {sh}: hello failed: {e}"))?;
-        match conn.recv() {
-            Ok(TransportMsg::Welcome { capacity: cap, .. }) => capacity[sh] = cap,
-            Ok(other) => return Err(anyhow!("shard {sh}: expected welcome, got {}", other.label())),
-            Err(e) => return Err(anyhow!("shard {sh}: handshake failed: {e}")),
-        }
-        // The handshake always rides JSON frames; everything after it
-        // uses the scenario codec, which the shard mirrors per frame.
-        conn.set_codec(scenario.codec);
+        let (conn, cap) = open_session(endpoint, sh, scenario, &roster)?;
+        capacity[sh] = cap;
+        sessions_opened[sh] += 1;
         conns.push(Some(conn));
     }
 
@@ -485,6 +631,8 @@ pub fn run_sharded_remote(
             orphaned_at: None,
             worst_gap: 0.0,
             ever_orphaned: false,
+            carried_backlog: 0,
+            handover_lag: 0.0,
         })
         .collect();
     let mut log: Vec<ShardControl> = Vec::new();
@@ -565,6 +713,26 @@ pub fn run_sharded_remote(
         let t0 = epoch as f64 * tick;
         let epoch_clock = scenario.telemetry.then(std::time::Instant::now);
 
+        // 0. Scheduled rejoins, ahead of the gossip round so a shard
+        //    that comes back this epoch publishes a digest this epoch.
+        //    The redial runs the same capability handshake as the
+        //    initial dial; the listener hands it a fresh session, so
+        //    the shard re-enters the table at full capacity with zero
+        //    committed and the next plan pass re-levels onto it. A
+        //    refused or failed redial leaves the shard dead — churn
+        //    must never wedge the run.
+        for &(re, sh) in &scenario.rejoins {
+            if re != epoch || alive[sh] {
+                continue;
+            }
+            if let Ok((conn, cap)) = open_session(&endpoints[sh], sh, scenario, &roster) {
+                conns[sh] = Some(conn);
+                alive[sh] = true;
+                capacity[sh] = cap;
+                sessions_opened[sh] += 1;
+            }
+        }
+
         // 1. Gossip round over the wire: poll every live shard for its
         //    digest; a peer that cannot answer is a lost shard.
         for sh in 0..m {
@@ -606,6 +774,14 @@ pub fn run_sharded_remote(
                 let gap = (t0 - lost_at).max(0.0);
                 if gap > streams[i].worst_gap {
                     streams[i].worst_gap = gap;
+                }
+                if scenario.handover {
+                    // A re-placed orphan re-buffers on its new shard:
+                    // its first window of frames carries the outage gap
+                    // plus the window refill time.
+                    let s = &mut streams[i];
+                    s.carried_backlog = s.spec.window as u64;
+                    s.handover_lag = gap + s.spec.window as f64 / s.spec.fps.max(1e-9);
                 }
             }
         }
@@ -651,6 +827,15 @@ pub fn run_sharded_remote(
                 if route(mv.to, t0, attach, &mut alive, &mut conns, &mut streams, &mut log) {
                     streams[mv.stream].migrations += 1;
                     migrations += 1;
+                    if scenario.handover {
+                        // Planned detach→attach: the stream's window
+                        // backlog and synchronizer state rebuild on the
+                        // target, so its first window of frames lands a
+                        // refill time late.
+                        let s = &mut streams[mv.stream];
+                        s.carried_backlog = s.spec.window as u64;
+                        s.handover_lag = s.spec.window as f64 / s.spec.fps.max(1e-9);
+                    }
                 }
             }
         }
@@ -736,7 +921,15 @@ pub fn run_sharded_remote(
                         s.frames_processed += ss.processed;
                         s.next_frame += ss.total;
                         for lat in ss.latencies {
-                            s.latency.push(lat);
+                            // Handover toll: the first carried-backlog
+                            // frames after a migration or re-placement
+                            // land late by the rebuild time.
+                            if s.carried_backlog > 0 {
+                                s.carried_backlog -= 1;
+                                s.latency.push(lat + s.handover_lag);
+                            } else {
+                                s.latency.push(lat);
+                            }
                         }
                     }
                 }
@@ -791,12 +984,23 @@ pub fn run_sharded_remote(
         }
     }
 
-    // Orderly teardown: goodbye to every survivor, then join the shard
-    // threads (dead ones already returned).
+    // Orderly teardown: goodbye to every survivor, then drain session
+    // slots the run never used (a rejoin scheduled past the last epoch,
+    // or a shard that never died) with dial-and-Bye so no server thread
+    // is left blocking in accept(), then join the shard threads.
     for conn in conns.iter_mut().flatten() {
         let _ = conn.send(&TransportMsg::Bye);
     }
     drop(conns);
+    for sh in 0..m {
+        for _ in sessions_opened[sh]..sessions_expected[sh] {
+            if let Ok(mut conn) =
+                connect_with_backoff(&endpoints[sh], 3, std::time::Duration::from_millis(5))
+            {
+                let _ = conn.send(&TransportMsg::Bye);
+            }
+        }
+    }
     for handle in handles {
         let _ = handle.join();
     }
@@ -870,13 +1074,14 @@ mod tests {
 
     #[test]
     fn remote_run_over_uds_serves_everything_and_logs_placements() {
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(3, 2.5), pool(3, 2.5)],
             uniform_streams(4, 2.5, 100, 4),
         )
-        .with_gossip(10.0)
-        .with_epochs(6)
-        .with_seed(61);
+        .gossip(10.0)
+        .epochs(6)
+        .seed(61)
+        .build();
         let report = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("remote run");
         assert_eq!(report.orphan_count(), 0);
         assert!(report.shard_alive.iter().all(|&a| a));
@@ -904,15 +1109,16 @@ mod tests {
         // Same scenario, same seeds, same epoch arithmetic: the remote
         // run is not just "within tolerance" — frame counts match the
         // in-process co-simulation exactly on a failure-free run.
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(4, 2.5), pool(4, 2.5)],
             uniform_streams(8, 10.0, 300, 4),
         )
-        .with_admission(AdmissionPolicy::admit_all())
-        .with_gossip(10.0)
-        .with_epochs(5)
-        .with_seed(47)
-        .with_telemetry();
+        .admission(AdmissionPolicy::admit_all())
+        .gossip(10.0)
+        .epochs(5)
+        .seed(47)
+        .telemetry()
+        .build();
         let inproc = crate::shard::sim::run_sharded(&scenario);
         let remote = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
         assert_eq!(remote.total_frames(), inproc.total_frames());
@@ -928,14 +1134,15 @@ mod tests {
 
     #[test]
     fn connection_drop_orphans_and_replaces_within_one_interval() {
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(4, 2.5), pool(4, 2.5), pool(4, 2.5)],
             uniform_streams(9, 2.5, 200, 4),
         )
-        .with_gossip(10.0)
-        .with_epochs(10)
-        .with_seed(67)
-        .with_failure(2, 0);
+        .gossip(10.0)
+        .epochs(10)
+        .seed(67)
+        .failure(2, 0)
+        .build();
         let report = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
         assert!(!report.shard_alive[0]);
         assert_eq!(report.orphan_count(), 3);
@@ -959,17 +1166,17 @@ mod tests {
         // outcome (frames, control log, scraped registry) must be
         // bit-identical to the JSON-framed run.
         let mk = || {
-            ShardScenario::new(
+            ShardScenario::builder(
                 vec![pool(3, 2.5), pool(3, 2.5)],
                 uniform_streams(6, 2.5, 120, 4),
             )
-            .with_gossip(10.0)
-            .with_epochs(6)
-            .with_seed(83)
-            .with_telemetry()
+            .gossip(10.0)
+            .epochs(6)
+            .seed(83)
+            .telemetry()
         };
-        let json_run = run_sharded_remote(&mk(), RemoteTransport::Uds).expect("json run");
-        let bin_run = run_sharded_remote(&mk().with_codec(Codec::Binary), RemoteTransport::Uds)
+        let json_run = run_sharded_remote(&mk().build(), RemoteTransport::Uds).expect("json run");
+        let bin_run = run_sharded_remote(&mk().codec(Codec::Binary).build(), RemoteTransport::Uds)
             .expect("binary run");
         assert_eq!(bin_run.total_frames(), json_run.total_frames());
         assert_eq!(bin_run.total_processed(), json_run.total_processed());
@@ -984,14 +1191,15 @@ mod tests {
         // same shard-computed digests, so the deterministic work
         // counters land identically in both modes.
         let mk = || {
-            ShardScenario::new(
+            ShardScenario::builder(
                 vec![pool(3, 2.5), pool(3, 2.5), pool(3, 2.5), pool(3, 2.5)],
                 uniform_streams(8, 2.0, 160, 4),
             )
-            .with_gossip(10.0)
-            .with_epochs(6)
-            .with_seed(9)
-            .with_groups(2)
+            .gossip(10.0)
+            .epochs(6)
+            .seed(9)
+            .groups(2)
+            .build()
         };
         let inproc = crate::shard::sim::run_sharded(&mk());
         let remote = run_sharded_remote(&mk(), RemoteTransport::Tcp).expect("remote run");
@@ -1003,16 +1211,206 @@ mod tests {
 
     #[test]
     fn remote_run_is_deterministic_given_seed() {
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(2, 2.5), pool(2, 2.5)],
             uniform_streams(4, 5.0, 100, 4),
         )
-        .with_gossip(5.0)
-        .with_epochs(8)
-        .with_seed(71);
+        .gossip(5.0)
+        .epochs(8)
+        .seed(71)
+        .build();
         let a = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("run a");
         let b = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("run b");
         assert_eq!(a.total_processed(), b.total_processed());
         assert_eq!(a.control_log, b.control_log);
+    }
+
+    #[test]
+    fn rejoined_shard_serves_again_and_planner_relevels_onto_it() {
+        // Shard 0 dies at epoch 2 and redials at epoch 4. Its orphans
+        // re-place onto shard 1 (overloading it), and once shard 0 is
+        // back as a fresh shard the band rebalancer must move load
+        // onto it again.
+        let scenario = ShardScenario::builder(
+            vec![pool(3, 2.5), pool(3, 2.5)],
+            uniform_streams(6, 2.5, 300, 4),
+        )
+        .gossip(10.0)
+        .epochs(14)
+        .seed(29)
+        .restart(0, 2, 4)
+        .build();
+        let report = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
+        assert!(report.shard_alive[0], "rejoined shard must finish alive");
+        assert!(report.shard_alive[1]);
+        assert!(report.orphan_count() > 0, "the failure must orphan streams");
+        assert!(
+            report.streams.iter().all(|s| s.orphaned_for != Some(f64::INFINITY)),
+            "every orphan must be re-placed"
+        );
+        assert!(
+            report.streams.iter().any(|s| s.final_shard == Some(0)),
+            "planner must re-level streams onto the rejoined shard"
+        );
+        for s in &report.streams {
+            assert_eq!(s.frames_total, 300, "stream {}", s.name);
+            assert!(s.frames_processed > 0, "stream {}", s.name);
+        }
+    }
+
+    #[test]
+    fn handover_mode_charges_the_rebuild_toll_without_changing_frame_counts() {
+        // Survivors keep plenty of headroom, so served latencies stay
+        // well under the 1.6 s window-refill toll — the toll, not
+        // queueing, must own the p99 tail of the re-placed streams.
+        let mk = || {
+            ShardScenario::builder(
+                vec![pool(6, 2.5), pool(6, 2.5), pool(6, 2.5)],
+                uniform_streams(9, 2.5, 200, 4),
+            )
+            .gossip(10.0)
+            .epochs(10)
+            .seed(67)
+            .failure(2, 0)
+        };
+        let free = run_sharded_remote(&mk().build(), RemoteTransport::Tcp).expect("free run");
+        let tolled =
+            run_sharded_remote(&mk().handover().build(), RemoteTransport::Tcp).expect("tolled");
+        // Frame accounting is identical — the toll prices latency, not
+        // throughput.
+        assert_eq!(tolled.total_frames(), free.total_frames());
+        assert_eq!(tolled.total_processed(), free.total_processed());
+        // Every re-placed stream's p99 is at least as bad under the
+        // toll, and strictly worse for at least one (its first window
+        // lands a full outage gap late).
+        let mut strictly_worse = 0;
+        for (t, f) in tolled.streams.iter().zip(&free.streams) {
+            if f.orphaned_for.is_some() {
+                assert!(t.p99_latency >= f.p99_latency - 1e-9, "stream {}", t.name);
+                if t.p99_latency > f.p99_latency + 1e-9 {
+                    strictly_worse += 1;
+                }
+            }
+        }
+        assert!(strictly_worse > 0, "the toll must show up in some orphan's p99");
+    }
+
+    #[test]
+    fn token_protected_run_succeeds_end_to_end() {
+        let scenario = ShardScenario::builder(
+            vec![pool(3, 2.5), pool(3, 2.5)],
+            uniform_streams(4, 2.5, 100, 4),
+        )
+        .gossip(10.0)
+        .epochs(6)
+        .seed(61)
+        .token("edge-fleet-key")
+        .build();
+        let report = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("authed run");
+        assert_eq!(report.orphan_count(), 0);
+        assert!(report.total_processed() > 0);
+    }
+
+    #[test]
+    fn bad_token_gets_a_typed_reject_and_a_redial_with_the_right_one_serves() {
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let shard = RemoteShard::new(0, pool(2, 2.5)).with_token("right");
+        let server = std::thread::spawn(move || serve_shard_sessions(listener, shard, 3));
+
+        let hello = |token: Option<&str>| TransportMsg::Hello {
+            shard: 0,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::default(),
+            roster: vec!["s0".to_string()],
+            caps: SessionCaps {
+                token: token.map(str::to_string),
+                ..SessionCaps::default()
+            },
+        };
+        let dial = || {
+            connect_with_backoff(&endpoint, 10, std::time::Duration::from_millis(5))
+                .expect("dial")
+        };
+
+        // Wrong token: typed reject, not a hang and not a bare close.
+        let mut conn = dial();
+        conn.send(&hello(Some("wrong"))).expect("send hello");
+        match conn.recv().expect("recv answer") {
+            TransportMsg::Reject { code, detail } => {
+                assert_eq!(code, "auth");
+                assert!(detail.contains("mismatch"), "{detail}");
+            }
+            other => panic!("expected reject, got {}", other.label()),
+        }
+        drop(conn);
+
+        // Missing token: same typed refusal, different detail.
+        let mut conn = dial();
+        conn.send(&hello(None)).expect("send hello");
+        match conn.recv().expect("recv answer") {
+            TransportMsg::Reject { code, detail } => {
+                assert_eq!(code, "auth");
+                assert!(detail.contains("required"), "{detail}");
+            }
+            other => panic!("expected reject, got {}", other.label()),
+        }
+        drop(conn);
+
+        // The listener survived both refusals: a redial presenting the
+        // right credential completes the handshake.
+        let mut conn = dial();
+        conn.send(&hello(Some("right"))).expect("send hello");
+        match conn.recv().expect("recv answer") {
+            TransportMsg::Welcome { shard, .. } => assert_eq!(shard, 0),
+            other => panic!("expected welcome, got {}", other.label()),
+        }
+        conn.send(&TransportMsg::Bye).expect("bye");
+        drop(conn);
+        server.join().expect("server thread").expect("server ok");
+    }
+
+    #[test]
+    fn protocol_skew_gets_a_typed_reject_not_a_hang() {
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let shard = RemoteShard::new(3, pool(1, 2.5));
+        let server = std::thread::spawn(move || serve_shard(listener, shard));
+        let mut conn = connect_with_backoff(&endpoint, 10, std::time::Duration::from_millis(5))
+            .expect("dial");
+        conn.send(&TransportMsg::Hello {
+            shard: 3,
+            protocol: TRANSPORT_VERSION + 40,
+            admission: AdmissionPolicy::default(),
+            roster: Vec::new(),
+            caps: SessionCaps::default(),
+        })
+        .expect("send hello");
+        match conn.recv().expect("recv answer") {
+            TransportMsg::Reject { code, detail } => {
+                assert_eq!(code, "protocol");
+                assert!(detail.contains(&format!("{TRANSPORT_VERSION}")), "{detail}");
+            }
+            other => panic!("expected reject, got {}", other.label()),
+        }
+        drop(conn);
+        server.join().expect("server thread").expect("server ok");
+    }
+
+    #[test]
+    fn token_requiring_shard_rejects_pre_handshake_traffic() {
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let shard = RemoteShard::new(0, pool(1, 2.5)).with_token("k");
+        let server = std::thread::spawn(move || serve_shard(listener, shard));
+        let mut conn = connect_with_backoff(&endpoint, 10, std::time::Duration::from_millis(5))
+            .expect("dial");
+        conn.send(&TransportMsg::Poll { epoch: 0, at: 0.0 }).expect("send poll");
+        match conn.recv().expect("recv answer") {
+            TransportMsg::Reject { code, .. } => assert_eq!(code, "auth"),
+            other => panic!("expected reject, got {}", other.label()),
+        }
+        drop(conn);
+        server.join().expect("server thread").expect("server ok");
     }
 }

@@ -6,17 +6,26 @@
 //! co-simulation advances in **gossip epochs** of `gossip_interval`
 //! seconds:
 //!
-//! 1. every alive shard publishes its [`Headroom`] digest; digests that
+//! 1. shards scheduled to *rejoin* this epoch come back first — fresh
+//!    pool, fresh controller state, zero residents — in time to attend
+//!    the gossip round, so the planner re-levels onto them;
+//! 2. every alive shard publishes its [`Headroom`] digest; digests that
 //!    miss a round expire (shard loss = missed heartbeat);
-//! 2. the placement layer re-places unplaced streams (initial placement
+//! 3. the placement layer re-places unplaced streams (initial placement
 //!    and orphans from a lost shard) against the fresh views;
-//! 3. the gossip rebalancer plans band-restoring migrations, executed
+//! 4. the gossip rebalancer plans band-restoring migrations, executed
 //!    as serialised **detach→attach** control events;
-//! 4. scheduled shard failures for this epoch take effect (their
+//! 5. scheduled shard failures for this epoch take effect (their
 //!    residents are orphaned until the next round — at most one gossip
 //!    interval);
-//! 5. each alive shard serves its residents' epoch slice through the
+//! 6. each alive shard serves its residents' epoch slice through the
 //!    virtual-time fleet engine ([`crate::fleet::sim::run_fleet`]).
+//!
+//! With `handover` set, a migrated or re-placed stream additionally
+//! pays a realistic state-rebuild toll: its first window of post-move
+//! frames is charged the window refill time (plus the orphan gap, for
+//! re-placements) on top of its served latency — detach→attach stops
+//! teleporting window backlog and synchronizer state for free.
 //!
 //! Every control decision the coordinator takes crosses the wire: it is
 //! encoded to a [`WireEvent`] JSON string, decoded back, and only the
@@ -68,6 +77,14 @@ pub struct ShardScenario {
     /// `(epoch, shard)`: the shard dies at the start of that epoch,
     /// right after the gossip round it last attended.
     pub failures: Vec<(usize, usize)>,
+    /// `(epoch, shard)`: a dead shard comes back at the start of that
+    /// epoch — fresh pool, fresh controller state, zero residents —
+    /// ahead of the gossip round, so it publishes a digest the same
+    /// epoch and the rebalancer re-levels onto it. A rejoin for a shard
+    /// that is still alive is a no-op. The remote runner implements the
+    /// same schedule as a redial-and-rehandshake against the shard's
+    /// listener.
+    pub rejoins: Vec<(usize, usize)>,
     /// Shard-local capacity control: when set, every shard embeds a
     /// [`crate::shard::autoscale::ShardAutoscaler`] built from this
     /// config — pools scale between epoch slices, digests advertise
@@ -97,6 +114,15 @@ pub struct ShardScenario {
     /// views only where a group digest shows imbalance. `None` (the
     /// default) plans flat over every shard.
     pub groups: Option<usize>,
+    /// Shared-secret session auth for the remote runner: every shard
+    /// listener requires this token and the coordinator presents it in
+    /// its handshake [`crate::control::SessionCaps`]. Ignored by the
+    /// in-process runner (there is no session to authenticate).
+    pub token: Option<String>,
+    /// Charge migrations and orphan re-placements a state-rebuild toll
+    /// (see the module docs) instead of moving window state for free.
+    /// Off by default so baseline pins are unchanged.
+    pub handover: bool,
 }
 
 impl ShardScenario {
@@ -110,67 +136,122 @@ impl ShardScenario {
             epochs: 12,
             seed: 0,
             failures: Vec::new(),
+            rejoins: Vec::new(),
             autoscale: None,
             gate: None,
             telemetry: false,
             codec: Codec::Json,
             groups: None,
+            token: None,
+            handover: false,
         }
     }
 
-    pub fn with_policy(mut self, policy: PlacementPolicy) -> ShardScenario {
-        self.policy = policy;
+    /// Start a [`ScenarioBuilder`] — the one configuration surface for
+    /// sharded runs (the per-field `with_*` setters it replaced grew
+    /// one-per-PR and each re-invented the same consuming-setter
+    /// pattern).
+    pub fn builder(shards: Vec<Vec<DeviceInstance>>, streams: Vec<StreamSpec>) -> ScenarioBuilder {
+        ScenarioBuilder {
+            scenario: ShardScenario::new(shards, streams),
+        }
+    }
+}
+
+/// Fluent builder for [`ShardScenario`]. Every knob a sharded run has
+/// lives here; `build()` hands back the plain scenario struct (whose
+/// fields stay public, so tests can still tweak a built scenario with
+/// struct-update syntax).
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    scenario: ShardScenario,
+}
+
+impl ScenarioBuilder {
+    pub fn policy(mut self, policy: PlacementPolicy) -> ScenarioBuilder {
+        self.scenario.policy = policy;
         self
     }
 
-    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ShardScenario {
-        self.admission = admission;
+    pub fn admission(mut self, admission: AdmissionPolicy) -> ScenarioBuilder {
+        self.scenario.admission = admission;
         self
     }
 
-    pub fn with_gossip(mut self, interval: f64) -> ShardScenario {
-        self.gossip_interval = interval;
+    pub fn gossip(mut self, interval: f64) -> ScenarioBuilder {
+        self.scenario.gossip_interval = interval;
         self
     }
 
-    pub fn with_epochs(mut self, epochs: usize) -> ShardScenario {
-        self.epochs = epochs;
+    pub fn epochs(mut self, epochs: usize) -> ScenarioBuilder {
+        self.scenario.epochs = epochs;
         self
     }
 
-    pub fn with_seed(mut self, seed: u64) -> ShardScenario {
-        self.seed = seed;
+    pub fn seed(mut self, seed: u64) -> ScenarioBuilder {
+        self.scenario.seed = seed;
         self
     }
 
-    pub fn with_failure(mut self, epoch: usize, shard: usize) -> ShardScenario {
-        self.failures.push((epoch, shard));
+    /// Kill `shard` at the start of `epoch`.
+    pub fn failure(mut self, epoch: usize, shard: usize) -> ScenarioBuilder {
+        self.scenario.failures.push((epoch, shard));
         self
     }
 
-    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> ShardScenario {
-        self.autoscale = Some(cfg);
+    /// Bring a dead `shard` back at the start of `epoch` (fresh pool,
+    /// zero residents), ahead of that epoch's gossip round.
+    pub fn rejoin(mut self, epoch: usize, shard: usize) -> ScenarioBuilder {
+        self.scenario.rejoins.push((epoch, shard));
         self
     }
 
-    pub fn with_gate(mut self, gate: GateConfig) -> ShardScenario {
-        self.gate = Some(gate);
+    /// Rolling-restart shorthand: kill `shard` at `fail_epoch` and
+    /// rejoin it at `rejoin_epoch`.
+    pub fn restart(self, shard: usize, fail_epoch: usize, rejoin_epoch: usize) -> ScenarioBuilder {
+        self.failure(fail_epoch, shard).rejoin(rejoin_epoch, shard)
+    }
+
+    pub fn autoscale(mut self, cfg: AutoscaleConfig) -> ScenarioBuilder {
+        self.scenario.autoscale = Some(cfg);
         self
     }
 
-    pub fn with_telemetry(mut self) -> ShardScenario {
-        self.telemetry = true;
+    pub fn gate(mut self, gate: GateConfig) -> ScenarioBuilder {
+        self.scenario.gate = Some(gate);
         self
     }
 
-    pub fn with_codec(mut self, codec: Codec) -> ShardScenario {
-        self.codec = codec;
+    pub fn telemetry(mut self) -> ScenarioBuilder {
+        self.scenario.telemetry = true;
         self
     }
 
-    pub fn with_groups(mut self, group_size: usize) -> ShardScenario {
-        self.groups = Some(group_size);
+    pub fn codec(mut self, codec: Codec) -> ScenarioBuilder {
+        self.scenario.codec = codec;
         self
+    }
+
+    pub fn groups(mut self, group_size: usize) -> ScenarioBuilder {
+        self.scenario.groups = Some(group_size);
+        self
+    }
+
+    /// Arm shared-secret session auth on every remote shard listener
+    /// and present the same token on every coordinator dial.
+    pub fn token(mut self, token: &str) -> ScenarioBuilder {
+        self.scenario.token = Some(token.to_string());
+        self
+    }
+
+    /// Charge migrations and re-placements the state-rebuild toll.
+    pub fn handover(mut self) -> ScenarioBuilder {
+        self.scenario.handover = true;
+        self
+    }
+
+    pub fn build(self) -> ShardScenario {
+        self.scenario
     }
 }
 
@@ -651,6 +732,11 @@ struct StreamRun {
     /// Worst re-placement gap seen so far.
     worst_gap: f64,
     ever_orphaned: bool,
+    /// Frames still carrying the handover toll: after a migration or
+    /// re-placement (scenario `handover` mode), the stream's first
+    /// window of frames lands `handover_lag` late.
+    carried_backlog: u64,
+    handover_lag: f64,
 }
 
 impl StreamRun {
@@ -756,6 +842,8 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
             orphaned_at: None,
             worst_gap: 0.0,
             ever_orphaned: false,
+            carried_backlog: 0,
+            handover_lag: 0.0,
         })
         .collect();
     let mut log: Vec<ShardControl> = Vec::new();
@@ -770,6 +858,24 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
     for epoch in 0..scenario.epochs {
         let t0 = epoch as f64 * tick;
         let epoch_clock = scenario.telemetry.then(std::time::Instant::now);
+
+        // 0. Scheduled rejoins, ahead of the gossip round: the shard
+        //    comes back as a fresh instance — original pool, fresh
+        //    controller — publishes a digest this very epoch, and the
+        //    rebalance pass below re-levels onto it. Mirrors the remote
+        //    runner's redial-and-rehandshake term for term.
+        for &(re, sh) in &scenario.rejoins {
+            if re != epoch || sh >= m || alive[sh] {
+                continue;
+            }
+            alive[sh] = true;
+            pools[sh] = scenario.shards[sh].clone();
+            scalers[sh] = scenario.autoscale.clone().map(|cfg| {
+                let mut scaler = ShardAutoscaler::new(cfg);
+                scaler.set_gate(scenario.gate.clone());
+                scaler
+            });
+        }
 
         // 1. Gossip round: alive shards publish, stale digests expire.
         for sh in 0..m {
@@ -826,6 +932,14 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 if gap > streams[i].worst_gap {
                     streams[i].worst_gap = gap;
                 }
+                if scenario.handover {
+                    // A re-placed orphan re-buffers on its new shard:
+                    // its first window of frames carries the outage gap
+                    // plus the window refill time.
+                    let s = &mut streams[i];
+                    s.carried_backlog = s.spec.window as u64;
+                    s.handover_lag = gap + s.spec.window as f64 / s.spec.fps.max(1e-9);
+                }
             }
         }
 
@@ -878,6 +992,14 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 );
                 streams[mv.stream].migrations += 1;
                 migrations += 1;
+                if scenario.handover {
+                    // Planned detach→attach: window backlog and
+                    // synchronizer state rebuild on the target, so the
+                    // first post-move window lands a refill time late.
+                    let s = &mut streams[mv.stream];
+                    s.carried_backlog = s.spec.window as u64;
+                    s.handover_lag = s.spec.window as f64 / s.spec.fps.max(1e-9);
+                }
             }
         }
 
@@ -987,9 +1109,19 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 streams[i].frames_processed += sr.metrics.frames_processed;
                 streams[i].next_frame += sr.metrics.frames_total;
                 for rec in &sr.records {
-                    streams[i]
-                        .latency
-                        .push((rec.emit_ts - rec.capture_ts).max(0.0));
+                    let lat = (rec.emit_ts - rec.capture_ts).max(0.0);
+                    // Handover toll: the first carried-backlog frames
+                    // after a migration or re-placement land late by
+                    // the rebuild time. Report-side only — telemetry
+                    // below lowers the raw slice, exactly as a remote
+                    // shard (which cannot know coordinator history)
+                    // records it.
+                    if streams[i].carried_backlog > 0 {
+                        streams[i].carried_backlog -= 1;
+                        streams[i].latency.push(lat + streams[i].handover_lag);
+                    } else {
+                        streams[i].latency.push(lat);
+                    }
                 }
             }
             let slice_busy = report.device_busy.iter().sum::<f64>();
@@ -1117,10 +1249,11 @@ mod tests {
                 StreamSpec::new(&format!("s{i}"), fps, (fps * 40.0) as u64).with_window(4)
             })
             .collect();
-        let scenario = ShardScenario::new(vec![pool(3, 2.5), pool(3, 2.5)], streams)
-            .with_gossip(10.0)
-            .with_epochs(8)
-            .with_seed(3);
+        let scenario = ShardScenario::builder(vec![pool(3, 2.5), pool(3, 2.5)], streams)
+            .gossip(10.0)
+            .epochs(8)
+            .seed(3)
+            .build();
         let report = run_sharded(&scenario);
         assert_eq!(report.migrations, 0);
         assert_eq!(report.orphan_count(), 0);
@@ -1160,11 +1293,12 @@ mod tests {
         for (i, fps) in [9.0, 1.0, 9.0, 1.0].iter().enumerate() {
             streams.push(StreamSpec::new(&format!("s{i}"), *fps, (*fps * 60.0) as u64).with_window(4));
         }
-        let scenario = ShardScenario::new(vec![pool(6, 2.5), pool(6, 2.5)], streams)
-            .with_policy(PlacementPolicy::RoundRobin)
-            .with_gossip(10.0)
-            .with_epochs(8)
-            .with_seed(5);
+        let scenario = ShardScenario::builder(vec![pool(6, 2.5), pool(6, 2.5)], streams)
+            .policy(PlacementPolicy::RoundRobin)
+            .gossip(10.0)
+            .epochs(8)
+            .seed(5)
+            .build();
         let report = run_sharded(&scenario);
         // RR initial split: shard 0 gets s0+s2 (18 > 14.25), shard 1 gets
         // s1+s3 (2).
@@ -1181,14 +1315,15 @@ mod tests {
     fn shard_loss_orphans_are_replaced_within_one_gossip_interval() {
         // 3 shards × 3 streams; shard 0 dies at epoch 2. Its 3 streams
         // must be back on surviving shards by the next gossip round.
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(4, 2.5), pool(4, 2.5), pool(4, 2.5)],
             uniform_streams(9, 2.5, 200, 4),
         )
-        .with_gossip(10.0)
-        .with_epochs(10)
-        .with_seed(7)
-        .with_failure(2, 0);
+        .gossip(10.0)
+        .epochs(10)
+        .seed(7)
+        .failure(2, 0)
+        .build();
         let report = run_sharded(&scenario);
         assert!(!report.shard_alive[0]);
         assert_eq!(report.orphan_count(), 3);
@@ -1203,6 +1338,83 @@ mod tests {
             assert!(matches!(s.final_shard, Some(1) | Some(2)), "{:?}", s.final_shard);
             assert!(s.frames_processed > 0);
         }
+    }
+
+    #[test]
+    fn restarted_shard_rejoins_gossip_and_takes_load_back() {
+        // Rolling restart of shard 0: die at epoch 2, rejoin at epoch 4.
+        // The rejoined shard attends the epoch-4 gossip round as a fresh
+        // instance, and the band rebalancer re-levels streams onto it
+        // (the survivor is far over band with all six residents).
+        let scenario = ShardScenario::builder(
+            vec![pool(3, 2.5), pool(3, 2.5)],
+            uniform_streams(6, 2.5, 300, 4),
+        )
+        .gossip(10.0)
+        .epochs(14)
+        .seed(29)
+        .restart(0, 2, 4)
+        .build();
+        let report = run_sharded(&scenario);
+        assert!(report.shard_alive[0], "restarted shard must finish alive");
+        assert!(report.orphan_count() > 0, "the failure must orphan streams");
+        assert!(
+            report.streams.iter().all(|s| s.orphaned_for != Some(f64::INFINITY)),
+            "every orphan must be re-placed"
+        );
+        assert!(
+            report.streams.iter().any(|s| s.final_shard == Some(0)),
+            "planner must re-level onto the rejoined shard"
+        );
+        assert!(report.migrations > 0, "re-levelling takes migrations");
+        for s in &report.streams {
+            assert_eq!(s.frames_total, 300, "stream {}", s.name);
+        }
+        // A rejoin scheduled for a shard that never died is a no-op.
+        let noop = ShardScenario::builder(
+            vec![pool(3, 2.5), pool(3, 2.5)],
+            uniform_streams(4, 2.5, 100, 4),
+        )
+        .gossip(10.0)
+        .epochs(6)
+        .seed(29)
+        .rejoin(3, 1)
+        .build();
+        let clean = run_sharded(&noop);
+        assert_eq!(clean.orphan_count(), 0);
+        assert!(clean.shard_alive.iter().all(|&a| a));
+    }
+
+    #[test]
+    fn handover_toll_prices_migrations_without_changing_frame_accounting() {
+        // Same restart scenario with and without the handover toll: the
+        // frame counts are identical (the toll prices latency, never
+        // throughput), but some migrated or re-placed stream's p99 gets
+        // strictly worse once its first post-move window pays the
+        // rebuild time.
+        let mk = || {
+            ShardScenario::builder(
+                vec![pool(3, 2.5), pool(3, 2.5)],
+                uniform_streams(6, 2.5, 300, 4),
+            )
+            .gossip(10.0)
+            .epochs(14)
+            .seed(29)
+            .restart(0, 2, 4)
+        };
+        let free = run_sharded(&mk().build());
+        let tolled = run_sharded(&mk().handover().build());
+        assert_eq!(tolled.total_frames(), free.total_frames());
+        assert_eq!(tolled.total_processed(), free.total_processed());
+        assert_eq!(tolled.control_log, free.control_log);
+        let mut strictly_worse = 0;
+        for (t, f) in tolled.streams.iter().zip(&free.streams) {
+            assert!(t.p99_latency >= f.p99_latency - 1e-9, "stream {}", t.name);
+            if t.p99_latency > f.p99_latency + 1e-9 {
+                strictly_worse += 1;
+            }
+        }
+        assert!(strictly_worse > 0, "the toll must show up in some p99");
     }
 
     #[test]
@@ -1221,12 +1433,12 @@ mod tests {
                 })
                 .collect()
         };
-        let base = ShardScenario::new(vec![pool(4, 2.5), pool(4, 2.5)], mk_streams())
-            .with_policy(PlacementPolicy::RoundRobin)
-            .with_gossip(10.0)
-            .with_epochs(8)
-            .with_seed(31);
-        let migrate_only = run_sharded(&base);
+        let base = ShardScenario::builder(vec![pool(4, 2.5), pool(4, 2.5)], mk_streams())
+            .policy(PlacementPolicy::RoundRobin)
+            .gossip(10.0)
+            .epochs(8)
+            .seed(31);
+        let migrate_only = run_sharded(&base.clone().build());
         assert!(migrate_only.migrations >= 1, "{}", migrate_only.migrations);
         assert_eq!(migrate_only.scale_actions(), 0);
 
@@ -1234,7 +1446,7 @@ mod tests {
             max_devices: 8,
             ..AutoscaleConfig::default()
         };
-        let scaled = run_sharded(&base.clone().with_autoscale(cfg));
+        let scaled = run_sharded(&base.clone().autoscale(cfg).build());
         assert_eq!(
             scaled.migrations, 0,
             "local scaling must pre-empt migration: {:?}",
@@ -1249,10 +1461,12 @@ mod tests {
         assert_eq!(decoded, audit);
         // Deterministic given the seed (the wire path must not wobble).
         let again = run_sharded(
-            &base.with_autoscale(AutoscaleConfig {
-                max_devices: 8,
-                ..AutoscaleConfig::default()
-            }),
+            &base
+                .autoscale(AutoscaleConfig {
+                    max_devices: 8,
+                    ..AutoscaleConfig::default()
+                })
+                .build(),
         );
         assert_eq!(again.control_log, scaled.control_log);
         assert_eq!(again.total_processed(), scaled.total_processed());
@@ -1260,13 +1474,14 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(2, 2.5), pool(2, 2.5)],
             uniform_streams(4, 5.0, 100, 4),
         )
-        .with_gossip(5.0)
-        .with_epochs(8)
-        .with_seed(11);
+        .gossip(5.0)
+        .epochs(8)
+        .seed(11)
+        .build();
         let a = run_sharded(&scenario);
         let b = run_sharded(&scenario);
         assert_eq!(a.total_processed(), b.total_processed());
@@ -1280,15 +1495,15 @@ mod tests {
         // Quiet streams under the default (lobby-dynamics) gate: most
         // frames skip, and every verdict crosses the wire into the
         // coordinator's control log with [`ControlOrigin::Gate`].
-        let scenario = ShardScenario::new(
+        let base = ShardScenario::builder(
             vec![pool(4, 2.5), pool(4, 2.5)],
             uniform_streams(4, 5.0, 100, 4),
         )
-        .with_gossip(10.0)
-        .with_epochs(6)
-        .with_seed(17);
-        let plain = run_sharded(&scenario);
-        let gated = run_sharded(&scenario.clone().with_gate(GateConfig::default()));
+        .gossip(10.0)
+        .epochs(6)
+        .seed(17);
+        let plain = run_sharded(&base.clone().build());
+        let gated = run_sharded(&base.clone().gate(GateConfig::default()).build());
         let gate_events = gated
             .control_log
             .iter()
@@ -1303,7 +1518,7 @@ mod tests {
         );
         // Deterministic and wire-clean: the audit log (placement verbs
         // and gate verdicts interleaved) survives another round trip.
-        let again = run_sharded(&scenario.with_gate(GateConfig::default()));
+        let again = run_sharded(&base.gate(GateConfig::default()).build());
         assert_eq!(again.control_log, gated.control_log);
         let audit = gated.audit_log();
         assert_eq!(EventLog::decode(&audit.encode()).expect("decodes"), audit);
@@ -1311,14 +1526,15 @@ mod tests {
 
     #[test]
     fn telemetry_snapshot_is_deterministic_and_accounts_every_slice() {
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(2, 2.5), pool(2, 2.5)],
             uniform_streams(4, 2.5, 50, 4),
         )
-        .with_gossip(10.0)
-        .with_epochs(6)
-        .with_seed(13)
-        .with_telemetry();
+        .gossip(10.0)
+        .epochs(6)
+        .seed(13)
+        .telemetry()
+        .build();
         let a = run_sharded(&scenario);
         let b = run_sharded(&scenario);
         // The registry is part of the deterministic run outcome; only
@@ -1363,13 +1579,14 @@ mod tests {
 
     #[test]
     fn report_json_reparses() {
-        let scenario = ShardScenario::new(
+        let scenario = ShardScenario::builder(
             vec![pool(2, 2.5), pool(2, 2.5)],
             uniform_streams(4, 2.5, 50, 4),
         )
-        .with_gossip(10.0)
-        .with_epochs(4)
-        .with_seed(13);
+        .gossip(10.0)
+        .epochs(4)
+        .seed(13)
+        .build();
         let report = run_sharded(&scenario);
         let j = report.to_json();
         let back = Json::parse(&j.to_string()).expect("shard JSON must reparse");
@@ -1403,18 +1620,18 @@ mod tests {
         // log carries every payload family: the run outcome and the
         // audit log must be exactly equal — the codec changes bytes on
         // the wire, never the decoded events.
-        let base = ShardScenario::new(
+        let base = ShardScenario::builder(
             vec![pool(4, 2.5), pool(4, 2.5)],
             uniform_streams(6, 3.0, 120, 4),
         )
-        .with_policy(PlacementPolicy::RoundRobin)
-        .with_gossip(10.0)
-        .with_epochs(8)
-        .with_seed(23)
-        .with_autoscale(AutoscaleConfig::default())
-        .with_gate(GateConfig::default());
-        let json_run = run_sharded(&base);
-        let bin_run = run_sharded(&base.with_codec(Codec::Binary));
+        .policy(PlacementPolicy::RoundRobin)
+        .gossip(10.0)
+        .epochs(8)
+        .seed(23)
+        .autoscale(AutoscaleConfig::default())
+        .gate(GateConfig::default());
+        let json_run = run_sharded(&base.clone().build());
+        let bin_run = run_sharded(&base.codec(Codec::Binary).build());
         assert_eq!(bin_run.control_log, json_run.control_log);
         assert_eq!(bin_run.total_processed(), json_run.total_processed());
         assert_eq!(bin_run.migrations, json_run.migrations);
@@ -1434,14 +1651,14 @@ mod tests {
                     StreamSpec::new(&format!("s{i}"), *fps, (*fps * 60.0) as u64).with_window(4),
                 );
             }
-            ShardScenario::new(vec![pool(6, 2.5), pool(6, 2.5)], streams)
-                .with_policy(PlacementPolicy::RoundRobin)
-                .with_gossip(10.0)
-                .with_epochs(8)
-                .with_seed(5)
+            ShardScenario::builder(vec![pool(6, 2.5), pool(6, 2.5)], streams)
+                .policy(PlacementPolicy::RoundRobin)
+                .gossip(10.0)
+                .epochs(8)
+                .seed(5)
         };
-        let flat = run_sharded(&mk());
-        let grouped = run_sharded(&mk().with_groups(2));
+        let flat = run_sharded(&mk().build());
+        let grouped = run_sharded(&mk().groups(2).build());
         assert_eq!(grouped.control_log, flat.control_log);
         assert_eq!(grouped.migrations, flat.migrations);
         assert_eq!(grouped.total_processed(), flat.total_processed());
@@ -1460,16 +1677,16 @@ mod tests {
         // epoch. The run outcome is identical (nothing to move either
         // way).
         let mk = || {
-            ShardScenario::new(
+            ShardScenario::builder(
                 vec![pool(3, 2.5), pool(3, 2.5), pool(3, 2.5), pool(3, 2.5)],
                 uniform_streams(8, 2.0, 160, 4),
             )
-            .with_gossip(10.0)
-            .with_epochs(8)
-            .with_seed(9)
+            .gossip(10.0)
+            .epochs(8)
+            .seed(9)
         };
-        let flat = run_sharded(&mk());
-        let grouped = run_sharded(&mk().with_groups(2));
+        let flat = run_sharded(&mk().build());
+        let grouped = run_sharded(&mk().groups(2).build());
         assert_eq!(flat.migrations, 0);
         assert_eq!(grouped.migrations, 0);
         assert_eq!(grouped.control_log, flat.control_log);

@@ -354,32 +354,36 @@ mod tests {
     /// A random message drawn across every variant, with the f64 fields
     /// exercised on awkward fractional values.
     fn arbitrary_msg(rng: &mut Rng) -> TransportMsg {
-        match rng.below(9) {
+        match rng.below(10) {
             0 => TransportMsg::Hello {
                 shard: rng.below(16) as usize,
                 protocol: TRANSPORT_VERSION,
                 admission: AdmissionPolicy::default(),
                 roster: (0..rng.below(4)).map(|i| format!("cam{i}")).collect(),
-                autoscale: rng.chance(0.5).then(|| {
-                    crate::autoscale::policy::AutoscaleConfig {
-                        cooldown: rng.range(0.5, 30.0),
-                        max_devices: rng.below(32) as usize + 1,
-                        device_rate: rng.range(0.5, 40.0),
-                        target_utilization: rng.range(0.5, 1.0),
-                        ..crate::autoscale::policy::AutoscaleConfig::default()
-                    }
-                }),
-                gate: rng.chance(0.5).then(|| {
-                    let skip = rng.range(0.0, 0.2);
-                    crate::gate::GateConfig {
-                        skip_threshold: skip,
-                        resume_threshold: skip + rng.range(0.0, 0.2),
-                        max_skip_run: rng.below(8) + 1,
-                        tracker_stretch: rng.range(1.0, 10.0),
-                        ..crate::gate::GateConfig::default()
-                    }
-                }),
-                telemetry: rng.chance(0.5),
+                caps: crate::control::caps::SessionCaps {
+                    autoscale: rng.chance(0.5).then(|| {
+                        crate::autoscale::policy::AutoscaleConfig {
+                            cooldown: rng.range(0.5, 30.0),
+                            max_devices: rng.below(32) as usize + 1,
+                            device_rate: rng.range(0.5, 40.0),
+                            target_utilization: rng.range(0.5, 1.0),
+                            ..crate::autoscale::policy::AutoscaleConfig::default()
+                        }
+                    }),
+                    gate: rng.chance(0.5).then(|| {
+                        let skip = rng.range(0.0, 0.2);
+                        crate::gate::GateConfig {
+                            skip_threshold: skip,
+                            resume_threshold: skip + rng.range(0.0, 0.2),
+                            max_skip_run: rng.below(8) + 1,
+                            tracker_stretch: rng.range(1.0, 10.0),
+                            ..crate::gate::GateConfig::default()
+                        }
+                    }),
+                    telemetry: rng.chance(0.5),
+                    token: rng.chance(0.5).then(|| format!("tok{}", rng.below(1000))),
+                    ..crate::control::caps::SessionCaps::default()
+                },
             },
             1 => TransportMsg::Welcome {
                 shard: rng.below(16) as usize,
@@ -449,6 +453,14 @@ mod tests {
                     snapshot,
                 }
             }
+            8 => TransportMsg::Reject {
+                code: ["auth", "protocol", "quota"][rng.below(3) as usize].to_string(),
+                detail: if rng.chance(0.5) {
+                    format!("refused at attempt {}", rng.below(10))
+                } else {
+                    String::new()
+                },
+            },
             _ => TransportMsg::Bye,
         }
     }

@@ -9,9 +9,14 @@
 //!
 //! * [`TransportMsg::Hello`] / [`TransportMsg::Welcome`] — session
 //!   handshake: the coordinator ships the admission policy (over the
-//!   existing [`crate::control::wire::admission_to_json`] codec) and the
+//!   existing [`crate::control::wire::admission_to_json`] codec), the
 //!   global stream roster (so `DetachStream(StreamId)` ids resolve
-//!   remotely); the shard answers with its util-adjusted capacity.
+//!   remotely), and one versioned [`SessionCaps`] object covering every
+//!   optional capability (autoscale / gate / telemetry / auth token);
+//!   the shard answers with its util-adjusted capacity.
+//! * [`TransportMsg::Reject`] — typed handshake refusal (bad auth
+//!   token, protocol mismatch): the peer learns *why* and fails fast
+//!   instead of watching a silent close or a read timeout.
 //! * [`TransportMsg::Poll`] / [`TransportMsg::Digest`] — the capacity
 //!   gossip over the wire: one [`crate::shard::Headroom`]-shaped digest
 //!   per epoch. A peer that cannot answer is a lost shard.
@@ -31,14 +36,13 @@
 
 use std::collections::BTreeMap;
 
-use crate::autoscale::policy::AutoscaleConfig;
+use crate::control::caps::SessionCaps;
 use crate::control::wire::{
     admission_from_json, admission_to_json, autoscale_config_from_json, autoscale_config_to_json,
     gate_config_from_json, gate_config_to_json, req_f64, req_str, req_u64, req_usize,
 };
 use crate::control::{WireError, WireEvent};
 use crate::fleet::admission::AdmissionPolicy;
-use crate::gate::GateConfig;
 use crate::shard::Headroom;
 use crate::telemetry::Registry;
 use crate::util::json::Json;
@@ -66,28 +70,31 @@ pub struct SliceStream {
 pub enum TransportMsg {
     /// Coordinator → shard: open a session. `roster[i]` is the name of
     /// global stream id `i`, so wire `StreamId`s resolve remotely.
-    /// `autoscale` configures shard-local capacity control for the
-    /// session ([`crate::shard::autoscale`]); `None` (and a missing
-    /// field, for peers speaking the pre-autoscale dialect) means the
-    /// shard serves its static pool. `gate` likewise arms per-frame
-    /// motion gating ([`crate::gate`]) on the shard; `None` (and a
-    /// missing field, for pre-gate peers) means every frame is
-    /// detected. `telemetry` asks the shard to ship a
-    /// [`TransportMsg::Telemetry`] snapshot ahead of every `Slice`;
-    /// `false` (and a missing field, for pre-telemetry peers) means
-    /// none are sent.
+    /// `caps` is the versioned capability set for the session —
+    /// shard-local autoscaling, per-frame gating, telemetry snapshots
+    /// and the shared-secret auth token — under one forward-compatible
+    /// contract ([`SessionCaps`]). On the JSON wire a `Hello` *also*
+    /// writes the flat PR 5/6/7-era keys (`autoscale` / `gate` /
+    /// `telemetry`, each only when set) so old peers keep decoding it;
+    /// decode prefers the `caps` object and falls back to lifting the
+    /// flat keys when a legacy peer omitted it.
     Hello {
         shard: usize,
         protocol: i64,
         admission: AdmissionPolicy,
         roster: Vec<String>,
-        autoscale: Option<AutoscaleConfig>,
-        gate: Option<GateConfig>,
-        telemetry: bool,
+        caps: SessionCaps,
     },
     /// Shard → coordinator: handshake reply with the shard's
     /// util-adjusted admission capacity (FPS).
     Welcome { shard: usize, capacity: f64 },
+    /// Shard → coordinator: typed handshake refusal, sent *before* the
+    /// connection closes so the dialler fails fast with a reason
+    /// instead of a read timeout. `code` is a stable machine-readable
+    /// string (`"auth"` for a bad/missing session token, `"protocol"`
+    /// for a session-version mismatch; decoders must tolerate codes
+    /// they do not know); `detail` is for humans and logs.
+    Reject { code: String, detail: String },
     /// A control-plane event (either direction; the coordinator ships
     /// placement verbs, a remote-serve consumer ships decisions back).
     Control(WireEvent),
@@ -157,6 +164,7 @@ impl TransportMsg {
             TransportMsg::Welcome { shard, capacity } => {
                 format!("welcome(shard {shard}, {capacity:.1} FPS)")
             }
+            TransportMsg::Reject { code, .. } => format!("reject({code})"),
             TransportMsg::Control(ev) => format!("control({})", ev.label()),
             TransportMsg::Poll { epoch, .. } => format!("poll(epoch {epoch})"),
             TransportMsg::Digest { shard, .. } => format!("digest(shard {shard})"),
@@ -181,9 +189,7 @@ impl TransportMsg {
                 protocol,
                 admission,
                 roster,
-                autoscale,
-                gate,
-                telemetry,
+                caps,
             } => {
                 o.insert("msg".to_string(), Json::Str("hello".to_string()));
                 o.insert("shard".to_string(), Json::Num(*shard as f64));
@@ -193,22 +199,31 @@ impl TransportMsg {
                     "roster".to_string(),
                     Json::Arr(roster.iter().map(|n| Json::Str(n.clone())).collect()),
                 );
-                if let Some(cfg) = autoscale {
+                // The flat PR 5/6/7-era keys ride alongside the caps
+                // object (each only when set, the original contract) so
+                // pre-caps peers keep decoding a new coordinator's
+                // Hello. The auth token has no flat key on purpose:
+                // pre-auth peers cannot be asked for one.
+                if let Some(cfg) = &caps.autoscale {
                     o.insert("autoscale".to_string(), autoscale_config_to_json(cfg));
                 }
-                if let Some(cfg) = gate {
+                if let Some(cfg) = &caps.gate {
                     o.insert("gate".to_string(), gate_config_to_json(cfg));
                 }
-                // Only a requesting coordinator writes the key, so the
-                // Hello stays byte-identical for pre-telemetry peers.
-                if *telemetry {
+                if caps.telemetry {
                     o.insert("telemetry".to_string(), Json::Bool(true));
                 }
+                o.insert("caps".to_string(), caps.to_json());
             }
             TransportMsg::Welcome { shard, capacity } => {
                 o.insert("msg".to_string(), Json::Str("welcome".to_string()));
                 o.insert("shard".to_string(), Json::Num(*shard as f64));
                 o.insert("capacity".to_string(), Json::Num(*capacity));
+            }
+            TransportMsg::Reject { code, detail } => {
+                o.insert("msg".to_string(), Json::Str("reject".to_string()));
+                o.insert("code".to_string(), Json::Str(code.clone()));
+                o.insert("detail".to_string(), Json::Str(detail.clone()));
             }
             TransportMsg::Control(ev) => {
                 o.insert("msg".to_string(), Json::Str("control".to_string()));
@@ -321,39 +336,52 @@ impl TransportMsg {
                             .to_string(),
                     );
                 }
-                // Absent and null both read as "no local scaling":
-                // pre-autoscale peers omit the key entirely.
-                let autoscale = match v.get("autoscale") {
-                    None | Some(Json::Null) => None,
-                    Some(j) => Some(autoscale_config_from_json(j)?),
-                };
-                // Same contract for the gate config: pre-gate peers
-                // omit the key, meaning "detect every frame".
-                let gate = match v.get("gate") {
-                    None | Some(Json::Null) => None,
-                    Some(j) => Some(gate_config_from_json(j)?),
-                };
-                // And again for the telemetry request: pre-telemetry
-                // peers omit the key, meaning "ship no snapshots".
-                let telemetry = match v.get("telemetry") {
-                    None | Some(Json::Null) => false,
-                    Some(j) => j
-                        .as_bool()
-                        .ok_or_else(|| WireError::new("hello telemetry must be a bool"))?,
+                // The caps object is authoritative when present. A
+                // legacy peer omits it, so the flat PR 5/6/7-era keys
+                // are lifted instead — absent and null both read as
+                // "capability off", the contract every one of those PRs
+                // pinned individually and SessionCaps now owns.
+                let caps = match v.get("caps") {
+                    None | Some(Json::Null) => {
+                        let autoscale = match v.get("autoscale") {
+                            None | Some(Json::Null) => None,
+                            Some(j) => Some(autoscale_config_from_json(j)?),
+                        };
+                        let gate = match v.get("gate") {
+                            None | Some(Json::Null) => None,
+                            Some(j) => Some(gate_config_from_json(j)?),
+                        };
+                        let telemetry = match v.get("telemetry") {
+                            None | Some(Json::Null) => false,
+                            Some(j) => j
+                                .as_bool()
+                                .ok_or_else(|| WireError::new("hello telemetry must be a bool"))?,
+                        };
+                        SessionCaps::from_legacy(autoscale, gate, telemetry)
+                    }
+                    Some(j) => SessionCaps::from_json(j)?,
                 };
                 Ok(TransportMsg::Hello {
                     shard: req_usize(v, "shard")?,
                     protocol: req_u64(v, "protocol")? as i64,
                     admission: admission_from_json(adm)?,
                     roster,
-                    autoscale,
-                    gate,
-                    telemetry,
+                    caps,
                 })
             }
             "welcome" => Ok(TransportMsg::Welcome {
                 shard: req_usize(v, "shard")?,
                 capacity: req_f64(v, "capacity")?,
+            }),
+            "reject" => Ok(TransportMsg::Reject {
+                code: req_str(v, "code")?.to_string(),
+                // Tolerate a missing detail — only the code is load-
+                // bearing for the dialler's error path.
+                detail: v
+                    .get("detail")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
             }),
             "control" => {
                 let ev = v
@@ -452,8 +480,10 @@ impl TransportMsg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autoscale::policy::AutoscaleConfig;
     use crate::control::{ControlAction, ControlOrigin};
     use crate::fleet::stream::StreamSpec;
+    use crate::gate::GateConfig;
 
     fn roundtrip(msg: &TransportMsg) {
         let text = msg.encode();
@@ -468,30 +498,36 @@ mod tests {
             protocol: TRANSPORT_VERSION,
             admission: AdmissionPolicy::with_ladder(vec![1.0, 2.6, 3.2]),
             roster: vec!["cam0".to_string(), "cam1".to_string()],
-            autoscale: None,
-            gate: None,
-            telemetry: false,
+            caps: SessionCaps::default(),
         });
         roundtrip(&TransportMsg::Hello {
             shard: 0,
             protocol: TRANSPORT_VERSION,
             admission: AdmissionPolicy::default(),
             roster: vec!["cam0".to_string()],
-            autoscale: Some(AutoscaleConfig {
-                max_devices: 9,
-                device_rate: 3.25,
-                ..AutoscaleConfig::default()
-            }),
-            gate: Some(GateConfig {
-                max_skip_run: 4,
-                tracker_stretch: 2.5,
-                ..GateConfig::default()
-            }),
-            telemetry: true,
+            caps: SessionCaps {
+                autoscale: Some(AutoscaleConfig {
+                    max_devices: 9,
+                    device_rate: 3.25,
+                    ..AutoscaleConfig::default()
+                }),
+                gate: Some(GateConfig {
+                    max_skip_run: 4,
+                    tracker_stretch: 2.5,
+                    ..GateConfig::default()
+                }),
+                telemetry: true,
+                token: Some("s3cret".to_string()),
+                ..SessionCaps::default()
+            },
         });
         roundtrip(&TransportMsg::Welcome {
             shard: 1,
             capacity: 7.125,
+        });
+        roundtrip(&TransportMsg::Reject {
+            code: "auth".to_string(),
+            detail: "bad or missing session token".to_string(),
         });
         roundtrip(&TransportMsg::Control(WireEvent::action(
             2.5,
@@ -538,79 +574,151 @@ mod tests {
         roundtrip(&TransportMsg::Bye);
     }
 
+    /// A hand-written legacy Hello: exactly the keys a PR 4/5/6/7-era
+    /// encoder wrote (no `caps` object), with `extra` spliced in after
+    /// the admission blob. The admission codec itself has been wire-
+    /// stable since PR 3, so it is rendered rather than transcribed.
+    fn era_hello(extra: &str) -> String {
+        let adm = admission_to_json(&AdmissionPolicy::default()).to_string();
+        format!(
+            r#"{{"admission":{adm},{extra}"msg":"hello","protocol":1,"roster":["cam0"],"shard":1}}"#
+        )
+    }
+
+    fn decode_hello_caps(text: &str) -> SessionCaps {
+        match TransportMsg::decode(text).expect("era hello must decode") {
+            TransportMsg::Hello { caps, .. } => caps,
+            other => panic!("not a hello: {other:?}"),
+        }
+    }
+
     #[test]
-    fn hello_without_autoscale_key_decodes_as_none() {
-        // Pre-autoscale peers omit the key entirely; decode must not
-        // reject their Hello.
-        let msg = TransportMsg::Hello {
+    fn pr4_era_hello_without_optional_keys_decodes_as_default_caps() {
+        // The oldest dialect: no autoscale, no gate, no telemetry, no
+        // caps. Every capability must come back defaulted.
+        let caps = decode_hello_caps(&era_hello(""));
+        assert_eq!(caps, SessionCaps::default());
+        // Explicit nulls read identically (the original PR 5 contract).
+        let caps = decode_hello_caps(&era_hello(
+            r#""autoscale":null,"gate":null,"telemetry":null,"#,
+        ));
+        assert_eq!(caps, SessionCaps::default());
+    }
+
+    #[test]
+    fn pr5_era_hello_with_flat_autoscale_lifts_into_caps() {
+        let cfg = AutoscaleConfig {
+            max_devices: 9,
+            device_rate: 3.25,
+            ..AutoscaleConfig::default()
+        };
+        let auto = autoscale_config_to_json(&cfg).to_string();
+        let caps = decode_hello_caps(&era_hello(&format!(r#""autoscale":{auto},"#)));
+        assert_eq!(caps.autoscale, Some(cfg));
+        assert!(caps.gate.is_none() && !caps.telemetry && caps.token.is_none());
+    }
+
+    #[test]
+    fn pr6_era_hello_with_flat_gate_lifts_into_caps() {
+        let cfg = GateConfig {
+            max_skip_run: 4,
+            tracker_stretch: 2.5,
+            ..GateConfig::default()
+        };
+        let gate = gate_config_to_json(&cfg).to_string();
+        let caps = decode_hello_caps(&era_hello(&format!(r#""gate":{gate},"#)));
+        assert_eq!(caps.gate, Some(cfg));
+        assert!(caps.autoscale.is_none() && !caps.telemetry);
+    }
+
+    #[test]
+    fn pr7_era_hello_with_flat_telemetry_lifts_into_caps() {
+        let caps = decode_hello_caps(&era_hello(r#""telemetry":true,"#));
+        assert!(caps.telemetry);
+        // A non-bool value on the legacy key is malformed, not coerced
+        // — skew is tolerated, corruption is not.
+        assert!(TransportMsg::decode(&era_hello(r#""telemetry":3,"#)).is_err());
+    }
+
+    #[test]
+    fn caps_object_wins_over_flat_keys() {
+        // A peer that writes both (every new encoder does) is read from
+        // the caps object alone; contradictory flat keys are ignored
+        // rather than merged.
+        let caps = decode_hello_caps(&era_hello(r#""telemetry":true,"caps":{"version":1},"#));
+        assert!(!caps.telemetry, "flat telemetry must lose to the caps object");
+        let caps = decode_hello_caps(&era_hello(
+            r#""caps":{"telemetry":true,"token":"k","version":1},"#,
+        ));
+        assert!(caps.telemetry);
+        assert_eq!(caps.token.as_deref(), Some("k"));
+    }
+
+    #[test]
+    fn new_hello_keeps_flat_keys_an_old_decoder_can_read() {
+        // Version-skew, new → old: an old decoder knows nothing of
+        // `caps`, so the flat keys it *does* read must mirror the caps
+        // content exactly — and must stay omitted when unset so the
+        // PR 5/6/7-era "absent means off" byte contract survives.
+        let plain = TransportMsg::Hello {
             shard: 2,
             protocol: TRANSPORT_VERSION,
             admission: AdmissionPolicy::default(),
             roster: vec![],
-            autoscale: None,
-            gate: None,
-            telemetry: false,
-        };
-        let text = msg.encode();
-        assert!(!text.contains("autoscale"), "None must omit the key: {text}");
-        assert_eq!(TransportMsg::decode(&text).unwrap(), msg);
-        // An explicit null reads the same way.
-        let with_null = text.replacen("\"msg\"", "\"autoscale\":null,\"msg\"", 1);
-        assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
-    }
-
-    #[test]
-    fn hello_without_gate_key_decodes_as_none() {
-        // Pre-gate peers omit the key entirely; decode must not reject
-        // their Hello (the `Hello.autoscale` interop contract, applied
-        // to the gate field).
-        let msg = TransportMsg::Hello {
-            shard: 0,
-            protocol: TRANSPORT_VERSION,
-            admission: AdmissionPolicy::default(),
-            roster: vec!["cam0".to_string()],
-            autoscale: None,
-            gate: None,
-            telemetry: false,
-        };
-        let text = msg.encode();
-        assert!(!text.contains("gate"), "None must omit the key: {text}");
-        assert_eq!(TransportMsg::decode(&text).unwrap(), msg);
-        let with_null = text.replacen("\"msg\"", "\"gate\":null,\"msg\"", 1);
-        assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
-    }
-
-    #[test]
-    fn hello_without_telemetry_key_decodes_as_false() {
-        // Pre-telemetry peers omit the key entirely; decode must not
-        // reject their Hello (the `Hello.autoscale` interop contract,
-        // applied to the telemetry request flag).
-        let msg = TransportMsg::Hello {
-            shard: 1,
-            protocol: TRANSPORT_VERSION,
-            admission: AdmissionPolicy::default(),
-            roster: vec!["cam0".to_string()],
-            autoscale: None,
-            gate: None,
-            telemetry: false,
-        };
-        let text = msg.encode();
-        assert!(
-            !text.contains("telemetry"),
-            "false must omit the key: {text}"
-        );
-        assert_eq!(TransportMsg::decode(&text).unwrap(), msg);
-        // An explicit null reads the same way; an explicit true flips it.
-        let with_null = text.replacen("\"msg\"", "\"telemetry\":null,\"msg\"", 1);
-        assert_eq!(TransportMsg::decode(&with_null).unwrap(), msg);
-        let with_true = text.replacen("\"msg\"", "\"telemetry\":true,\"msg\"", 1);
-        match TransportMsg::decode(&with_true).unwrap() {
-            TransportMsg::Hello { telemetry, .. } => assert!(telemetry),
-            other => panic!("not a hello: {other:?}"),
+            caps: SessionCaps::default(),
         }
-        // A non-bool value is malformed, not silently coerced.
-        let with_num = text.replacen("\"msg\"", "\"telemetry\":3,\"msg\"", 1);
-        assert!(TransportMsg::decode(&with_num).is_err());
+        .encode();
+        assert!(!plain.contains("autoscale"), "unset key leaked: {plain}");
+        assert!(!plain.contains("gate"), "unset key leaked: {plain}");
+        assert!(!plain.contains("telemetry"), "unset key leaked: {plain}");
+
+        let full = TransportMsg::Hello {
+            shard: 2,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::default(),
+            roster: vec![],
+            caps: SessionCaps {
+                autoscale: Some(AutoscaleConfig::default()),
+                gate: Some(GateConfig::default()),
+                telemetry: true,
+                token: Some("s3cret".to_string()),
+                ..SessionCaps::default()
+            },
+        }
+        .encode();
+        let v = Json::parse(&full).unwrap();
+        // Simulated old decoder: reads only the flat keys.
+        assert_eq!(
+            autoscale_config_from_json(v.get("autoscale").unwrap()).unwrap(),
+            AutoscaleConfig::default()
+        );
+        assert_eq!(
+            gate_config_from_json(v.get("gate").unwrap()).unwrap(),
+            GateConfig::default()
+        );
+        assert_eq!(v.get("telemetry"), Some(&Json::Bool(true)));
+        // The token rides only inside caps — no flat key exists for an
+        // old peer to misread.
+        assert_eq!(full.matches("\"token\"").count(), 1, "wire: {full}");
+        assert!(v.get("token").is_none());
+    }
+
+    #[test]
+    fn reject_decodes_with_unknown_codes_and_missing_detail() {
+        // Forward compatibility on the refusal path: a future peer may
+        // reject for reasons this build has never heard of, with or
+        // without prose.
+        let msg = TransportMsg::decode(r#"{"code":"quota-exhausted","msg":"reject"}"#).unwrap();
+        assert_eq!(
+            msg,
+            TransportMsg::Reject {
+                code: "quota-exhausted".to_string(),
+                detail: String::new(),
+            }
+        );
+        assert_eq!(msg.label(), "reject(quota-exhausted)");
+        // A reject without a code is malformed.
+        assert!(TransportMsg::decode(r#"{"msg":"reject"}"#).is_err());
     }
 
     #[test]
@@ -645,9 +753,13 @@ mod tests {
                 protocol: TRANSPORT_VERSION,
                 admission: AdmissionPolicy::default(),
                 roster: (0..rng.below(4)).map(|i| format!("cam{i}")).collect(),
-                autoscale: rng.chance(0.3).then(AutoscaleConfig::default),
-                gate,
-                telemetry: rng.chance(0.5),
+                caps: SessionCaps {
+                    autoscale: rng.chance(0.3).then(AutoscaleConfig::default),
+                    gate,
+                    telemetry: rng.chance(0.5),
+                    token: rng.chance(0.5).then(|| format!("tok{}", rng.below(100))),
+                    ..SessionCaps::default()
+                },
             };
             let bytes = encode_frame(&msg).map_err(|e| e.to_string())?;
             let mut dec = FrameDecoder::new();

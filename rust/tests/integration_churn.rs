@@ -1,0 +1,245 @@
+//! Integration tests for operational hardening under churn: the
+//! rolling-restart chaos sweep's pinned delivered-FPS floor and orphan
+//! re-placement deadline, reconnect edge cases (a coordinator crash
+//! mid-slice, an auth failure mid-backoff), frame conservation when a
+//! rejoin races shard-loss detection, and version skew proven on raw
+//! bytes — a hand-built PR 4/5/7-era `Hello` frame handshaking against
+//! a new shard. Seeds come from `EVA_SOAK_SEED` when set.
+
+use std::io::{Read, Write};
+
+use eva::autoscale::AutoscaleConfig;
+use eva::control::wire::autoscale_config_to_json;
+use eva::control::{admission_to_json, ControlAction, ControlOrigin, SessionCaps, WireEvent};
+use eva::device::{DetectorModelId, DeviceInstance, DeviceKind};
+use eva::experiments::churn::{churn_chaos, churn_scenario, CHURN_GOSSIP};
+use eva::fleet::{AdmissionPolicy, StreamSpec};
+use eva::shard::{
+    run_sharded, run_sharded_remote, serve_shard, serve_shard_sessions, RemoteShard,
+    RemoteTransport,
+};
+use eva::transport::{
+    connect_with_backoff, Endpoint, FrameDecoder, Listener, TransportMsg, TRANSPORT_VERSION,
+};
+
+fn pool(n: usize, rate: f64) -> Vec<DeviceInstance> {
+    (0..n)
+        .map(|i| DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, rate))
+        .collect()
+}
+
+fn soak_seed(default: u64) -> u64 {
+    std::env::var("EVA_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(default)
+}
+
+fn hello(roster: Vec<String>, token: Option<&str>) -> TransportMsg {
+    TransportMsg::Hello {
+        shard: 0,
+        protocol: TRANSPORT_VERSION,
+        admission: AdmissionPolicy::default(),
+        roster,
+        caps: SessionCaps {
+            token: token.map(str::to_string),
+            ..SessionCaps::default()
+        },
+    }
+}
+
+/// Acceptance: rolling restarts of every shard at 2× load — in-process
+/// and with each shard behind a loopback TCP socket — hold the pinned
+/// delivered-FPS floor, re-place every orphan within one gossip
+/// interval, and end with all three shards back in gossip.
+#[test]
+fn churn_chaos_holds_the_pinned_floor_in_both_runners() {
+    let seed = soak_seed(151);
+    let (_, outcomes) = churn_chaos(seed);
+    assert_eq!(outcomes.len(), 2);
+    for o in &outcomes {
+        assert!(o.holds_floor(), "seed {seed}: {o:?}");
+        assert!(o.orphans > 0, "seed {seed}: the restarts must orphan streams: {o:?}");
+        assert!(o.replaced_within_deadline, "seed {seed}: {o:?}");
+        assert!(o.worst_gap <= CHURN_GOSSIP + 1e-9, "seed {seed}: {o:?}");
+        assert_eq!(o.shards_alive, 3, "seed {seed}: every restart must rejoin: {o:?}");
+    }
+}
+
+/// Reconnect edge case: a rejoin racing shard-loss detection must never
+/// double-place a stream. Frame conservation is the tell — every cam is
+/// charged exactly its 600 arrivals in both runners, and no orphan is
+/// left unplaced at the end.
+#[test]
+fn rejoin_racing_loss_detection_never_double_places_a_stream() {
+    let seed = soak_seed(193);
+    let scenario = churn_scenario(seed);
+    let inproc = run_sharded(&scenario);
+    let remote = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("tcp churn run");
+    for (mode, report) in [("inproc", &inproc), ("tcp", &remote)] {
+        for s in &report.streams {
+            assert_eq!(s.frames_total, 600, "{mode} seed {seed}: stream {}", s.name);
+        }
+        assert!(
+            report.streams.iter().all(|s| s.orphaned_for != Some(f64::INFINITY)),
+            "{mode} seed {seed}: an orphan was never re-placed"
+        );
+    }
+}
+
+/// Reconnect edge case: the coordinator crashes with an epoch slice in
+/// flight (Tick sent, Slice never read). The listener must survive the
+/// broken session and hand the redial a fresh one that serves end to
+/// end.
+#[test]
+fn redial_during_an_inflight_epoch_slice_gets_a_fresh_session() {
+    let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+    let endpoint = listener.local_endpoint().expect("endpoint");
+    let shard = RemoteShard::new(0, pool(2, 2.5));
+    let server = std::thread::spawn(move || serve_shard_sessions(listener, shard, 2));
+
+    let roster = vec!["cam0".to_string()];
+    let spec = StreamSpec::new("cam0", 5.0, 100).with_window(4);
+    let attach = TransportMsg::Control(WireEvent::action(
+        0.0,
+        ControlOrigin::Placement,
+        ControlAction::AttachStream(spec),
+    ));
+    let tick = TransportMsg::Tick {
+        epoch: 0,
+        at: 0.0,
+        seed: 11,
+        quotas: vec![(0, 10)],
+    };
+    let dial = || {
+        connect_with_backoff(&endpoint, 20, std::time::Duration::from_millis(10)).expect("dial")
+    };
+
+    // Session 1: handshake, put a slice in flight, crash without
+    // reading the answer.
+    let mut conn = dial();
+    conn.send(&hello(roster.clone(), None)).expect("hello 1");
+    assert!(matches!(conn.recv().expect("welcome 1"), TransportMsg::Welcome { .. }));
+    conn.send(&attach).expect("attach 1");
+    conn.send(&tick).expect("tick 1");
+    drop(conn);
+
+    // Session 2: the redial starts from a fresh resident set (the
+    // attach must be re-sent) and serves the slice to completion.
+    let mut conn = dial();
+    conn.send(&hello(roster, None)).expect("hello 2");
+    assert!(matches!(conn.recv().expect("welcome 2"), TransportMsg::Welcome { .. }));
+    conn.send(&attach).expect("attach 2");
+    conn.send(&tick).expect("tick 2");
+    let slice = loop {
+        match conn.recv().expect("recv after tick") {
+            TransportMsg::Slice { streams, .. } => break streams,
+            TransportMsg::Control(_) => continue,
+            other => panic!("unexpected reply {}", other.label()),
+        }
+    };
+    assert_eq!(slice.len(), 1);
+    assert_eq!(slice[0].total, 10);
+    assert!(slice[0].processed > 0);
+    conn.send(&TransportMsg::Bye).expect("bye");
+    drop(conn);
+    server
+        .join()
+        .expect("server thread")
+        .expect("listener must survive the crashed session");
+}
+
+/// Reconnect edge case: an auth failure during the redial-with-backoff
+/// loop gets a typed refusal and consumes only its own session — the
+/// next dial with the right credential completes the handshake.
+#[test]
+fn auth_failure_mid_backoff_leaves_the_listener_serving() {
+    let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+    let endpoint = listener.local_endpoint().expect("endpoint");
+    let shard = RemoteShard::new(0, pool(2, 2.5)).with_token("fleet-key");
+    let server = std::thread::spawn(move || serve_shard_sessions(listener, shard, 2));
+    let dial = || {
+        connect_with_backoff(&endpoint, 20, std::time::Duration::from_millis(10)).expect("dial")
+    };
+
+    let mut conn = dial();
+    conn.send(&hello(Vec::new(), Some("stale-key"))).expect("bad hello");
+    match conn.recv().expect("typed refusal, not a hang") {
+        TransportMsg::Reject { code, detail } => {
+            assert_eq!(code, "auth");
+            assert!(detail.contains("mismatch"), "{detail}");
+        }
+        other => panic!("expected reject, got {}", other.label()),
+    }
+    drop(conn);
+
+    let mut conn = dial();
+    conn.send(&hello(Vec::new(), Some("fleet-key"))).expect("good hello");
+    assert!(matches!(conn.recv().expect("welcome"), TransportMsg::Welcome { .. }));
+    conn.send(&TransportMsg::Bye).expect("bye");
+    drop(conn);
+    server.join().expect("server thread").expect("server ok");
+}
+
+/// The 8-byte frame header + JSON payload a pre-caps encoder wrote,
+/// byte for byte: magic "EV", JSON codec version 1, reserved 0,
+/// big-endian u32 payload length.
+fn era_frame(payload: &str) -> Vec<u8> {
+    let mut f = vec![0x45, 0x56, 1, 0];
+    f.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    f.extend_from_slice(payload.as_bytes());
+    f
+}
+
+fn read_raw_msg(sock: &mut std::net::TcpStream, dec: &mut FrameDecoder) -> TransportMsg {
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(msg) = dec.try_next().expect("answer frame decodes") {
+            return msg;
+        }
+        let n = sock.read(&mut buf).expect("read answer");
+        assert!(n > 0, "shard closed before answering");
+        dec.feed(&buf[..n]);
+    }
+}
+
+/// Version-skew matrix, old → new, proven on raw bytes: hellos written
+/// in each pre-caps dialect — PR 4 (no optional keys), PR 5 (flat
+/// `autoscale`), PR 7 (flat `telemetry`) — are hand-framed and written
+/// straight to the socket; a new shard must answer every one with a
+/// `Welcome`.
+#[test]
+fn legacy_era_hello_bytes_handshake_against_a_new_shard() {
+    let adm = admission_to_json(&AdmissionPolicy::default()).to_string();
+    let auto = autoscale_config_to_json(&AutoscaleConfig::default()).to_string();
+    let dialects = [
+        ("pr4", String::new()),
+        ("pr5", format!(r#""autoscale":{auto},"#)),
+        ("pr7", r#""telemetry":true,"#.to_string()),
+    ];
+    for (era, extra) in &dialects {
+        let payload = format!(
+            r#"{{"admission":{adm},{extra}"msg":"hello","protocol":1,"roster":["cam0"],"shard":5}}"#
+        );
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let shard = RemoteShard::new(5, pool(2, 2.5));
+        let server = std::thread::spawn(move || serve_shard(listener, shard));
+        let Endpoint::Tcp(addr) = &endpoint else {
+            panic!("loopback endpoint must be tcp")
+        };
+        let mut sock = std::net::TcpStream::connect(addr.as_str()).expect("raw dial");
+        sock.write_all(&era_frame(&payload)).expect("send era hello");
+        let mut dec = FrameDecoder::new();
+        match read_raw_msg(&mut sock, &mut dec) {
+            TransportMsg::Welcome { shard, capacity } => {
+                assert_eq!(shard, 5, "{era}");
+                assert!(capacity > 0.0, "{era}");
+            }
+            other => panic!("{era}: expected welcome, got {}", other.label()),
+        }
+        sock.write_all(&era_frame(r#"{"msg":"bye"}"#)).expect("send era bye");
+        drop(sock);
+        server.join().expect("server thread").expect("server ok");
+    }
+}

@@ -285,6 +285,95 @@ fn scale_json_mode_emits_exactly_one_parseable_document() {
 }
 
 #[test]
+fn session_flags_are_rejected_where_they_cannot_apply() {
+    // `--listen`/`--sessions`/`--probe` are the shard-server surface;
+    // anywhere else they are usage errors (exit 2), not silent no-ops.
+    let out = eva(&["fleet", "--listen", "127.0.0.1:0"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--listen does not apply"), "{}", stderr(&out));
+
+    let out = eva(&["shard", "--probe"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--probe does not apply"), "{}", stderr(&out));
+
+    let out = eva(&["nselect", "--sessions", "2"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--sessions does not apply"), "{}", stderr(&out));
+
+    // `--token` also rides `eva shard` (the coordinator dial side), so
+    // its applicability set is wider — but not universal.
+    let out = eva(&["nselect", "--token", "fleet-key"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--token does not apply"), "{}", stderr(&out));
+}
+
+#[test]
+fn session_flags_runtime_contract_keeps_exit_1_distinct() {
+    // `shard-server` without a bind address is understood-but-failed:
+    // exit 1 with the missing flag named, not a usage error.
+    let out = eva(&["shard-server"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("--listen required"), "{}", stderr(&out));
+
+    // `--token` on an in-process run has no session to authenticate:
+    // runtime failure naming the transports that do.
+    let out = eva(&["shard", "--token", "fleet-key"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(
+        stderr(&out).contains("--token applies to --scenario run with --transport tcp|uds"),
+        "{}",
+        stderr(&out)
+    );
+}
+
+#[test]
+fn shard_server_serves_a_probe_handshake_over_a_unix_socket() {
+    // The multi-machine smoke path, end to end through the real binary:
+    // a backgrounded `shard-server` on a Unix socket, a `--probe` dial
+    // with the matching token, and a clean exit on both sides.
+    let sock = std::env::temp_dir().join(format!("eva_cli_srv_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let addr = format!("unix:{}", sock.display());
+    let mut server = Command::new(env!("CARGO_BIN_EXE_eva"))
+        .args(["shard-server", "--listen", addr.as_str(), "--sessions", "1", "--token", "k1"])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn shard-server");
+    // Wait for the bind (the probe's own dial backoff covers the rest).
+    for _ in 0..100 {
+        if sock.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let probe = eva(&["shard-server", "--listen", addr.as_str(), "--probe", "--token", "k1"]);
+    assert_eq!(probe.status.code(), Some(0), "stderr: {}", stderr(&probe));
+    assert!(stdout(&probe).contains("probe ok"), "{}", stdout(&probe));
+    // One session served: the server exits on its own, successfully.
+    let status = server.wait().expect("server exits");
+    assert!(status.success(), "server exit: {status:?}");
+    let _ = std::fs::remove_file(&sock);
+}
+
+#[test]
+fn churn_json_mode_emits_exactly_one_parseable_document() {
+    // CI uploads this stdout as BENCH_churn.json: it must be pure JSON
+    // with both chaos cells present.
+    let out = eva(&["shard", "--scenario", "churn", "--json"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    let json = eva::util::json::Json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("churn --json stdout is not pure JSON ({e}): {text}"));
+    let rows = json
+        .get("churn_chaos")
+        .and_then(|j| j.as_arr())
+        .unwrap_or_else(|| panic!("missing churn_chaos rows: {text}"));
+    assert_eq!(rows.len(), 2, "{text}");
+    assert!(rows.iter().all(|r| r.get("holds_floor").is_some()), "{text}");
+}
+
+#[test]
 fn runtime_failure_keeps_exit_1_distinct_from_usage_errors() {
     // A known subcommand with a semantically invalid value: parsed fine,
     // fails at run time — exit 1, not the usage exit 2.

@@ -93,14 +93,15 @@ fn gated_shard_parity_is_exact_over_tcp_and_uds() {
         .ok()
         .and_then(|s| s.parse::<u64>().ok())
         .unwrap_or(53);
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool(3, 2.5), pool(3, 2.5)],
         quiet_streams(4, 5.0, 100),
     )
-    .with_gossip(10.0)
-    .with_epochs(6)
-    .with_seed(seed)
-    .with_gate(GateConfig::for_dynamics(MotionDynamics::lobby()));
+    .gossip(10.0)
+    .epochs(6)
+    .seed(seed)
+    .gate(GateConfig::for_dynamics(MotionDynamics::lobby()))
+    .build();
 
     let inproc = run_sharded(&scenario);
     let local = gate_events(&inproc);
@@ -138,16 +139,17 @@ fn gated_shard_parity_is_exact_over_tcp_and_uds() {
 /// accounting: same offered frames, fewer detector runs.
 #[test]
 fn gated_shard_run_detects_fewer_frames_at_equal_coverage() {
-    let plain = ShardScenario::new(
+    let base = ShardScenario::builder(
         vec![pool(3, 2.5), pool(3, 2.5)],
         quiet_streams(4, 5.0, 100),
     )
-    .with_gossip(10.0)
-    .with_epochs(6)
-    .with_seed(23);
-    let gated = plain
-        .clone()
-        .with_gate(GateConfig::for_dynamics(MotionDynamics::lobby()));
+    .gossip(10.0)
+    .epochs(6)
+    .seed(23);
+    let plain = base.clone().build();
+    let gated = base
+        .gate(GateConfig::for_dynamics(MotionDynamics::lobby()))
+        .build();
     let plain_report = run_sharded(&plain);
     let gated_report = run_sharded(&gated);
     assert_eq!(plain_report.total_frames(), gated_report.total_frames());

@@ -127,11 +127,12 @@ fn two_shard_split_matches_single_pool_within_5_percent() {
     let mk = |shards: usize| {
         let per = 8 / shards;
         let pools: Vec<Vec<DeviceInstance>> = (0..shards).map(|_| pool(per, 2.5)).collect();
-        let scenario = ShardScenario::new(pools, uniform_streams(8, 10.0, 300, 4))
-            .with_admission(AdmissionPolicy::admit_all())
-            .with_gossip(10.0)
-            .with_epochs(5)
-            .with_seed(47);
+        let scenario = ShardScenario::builder(pools, uniform_streams(8, 10.0, 300, 4))
+            .admission(AdmissionPolicy::admit_all())
+            .gossip(10.0)
+            .epochs(5)
+            .seed(47)
+            .build();
         run_sharded(&scenario)
     };
     let single = mk(1);
@@ -151,14 +152,15 @@ fn two_shard_split_matches_single_pool_within_5_percent() {
 /// shards within one gossip interval.
 #[test]
 fn shard_loss_replaces_all_orphans_within_one_gossip_interval() {
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool(4, 2.5), pool(4, 2.5), pool(4, 2.5)],
         uniform_streams(9, 2.5, 200, 4),
     )
-    .with_gossip(10.0)
-    .with_epochs(10)
-    .with_seed(53)
-    .with_failure(3, 1);
+    .gossip(10.0)
+    .epochs(10)
+    .seed(53)
+    .failure(3, 1)
+    .build();
     let report = run_sharded(&scenario);
     assert!(!report.shard_alive[1]);
     assert_eq!(report.orphan_count(), 3);
@@ -226,14 +228,15 @@ fn sharded_autoscale_audit_log_replays_verbatim() {
 /// its JSON encoding, and the whole log survives another wire hop.
 #[test]
 fn shard_control_log_is_wire_clean() {
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool(2, 2.5), pool(2, 2.5)],
         uniform_streams(4, 2.5, 100, 4),
     )
-    .with_policy(PlacementPolicy::RoundRobin)
-    .with_gossip(10.0)
-    .with_epochs(6)
-    .with_seed(59);
+    .policy(PlacementPolicy::RoundRobin)
+    .gossip(10.0)
+    .epochs(6)
+    .seed(59)
+    .build();
     let report = run_sharded(&scenario);
     assert!(!report.control_log.is_empty());
     let mut log = EventLog::new();

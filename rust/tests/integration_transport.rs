@@ -83,13 +83,14 @@ fn killed_connection_replaces_orphans_within_one_gossip_interval() {
 /// identical frame accounting and control logs across runs.
 #[test]
 fn remote_runs_are_deterministic_and_transport_agnostic() {
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool(3, 2.5), pool(3, 2.5)],
         uniform_streams(6, 2.5, 120, 4),
     )
-    .with_gossip(10.0)
-    .with_epochs(8)
-    .with_seed(97);
+    .gossip(10.0)
+    .epochs(8)
+    .seed(97)
+    .build();
     let tcp_a = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("tcp a");
     let tcp_b = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("tcp b");
     assert_eq!(tcp_a.total_processed(), tcp_b.total_processed());
@@ -157,7 +158,10 @@ fn telemetry_snapshots_match_inproc_exactly_with_autoscale() {
         .ok()
         .and_then(|s| s.parse::<u64>().ok())
         .unwrap_or(137);
-    let scenario = eva::experiments::shard::overload_scenario(seed, true).with_telemetry();
+    let scenario = ShardScenario {
+        telemetry: true,
+        ..eva::experiments::shard::overload_scenario(seed, true)
+    };
     let inproc = run_sharded(&scenario);
     assert!(
         inproc.telemetry.counter_family_total("eva_frames_total") > 0,
@@ -186,19 +190,20 @@ fn telemetry_snapshots_match_inproc_exactly_with_autoscale() {
 /// encode→decode.
 #[test]
 fn binary_codec_remote_run_replays_the_same_audit_log() {
-    let scenario = ShardScenario::new(
+    let scenario = ShardScenario::builder(
         vec![pool(3, 2.5), pool(3, 2.5)],
         uniform_streams(6, 2.5, 120, 4),
     )
-    .with_gossip(10.0)
-    .with_epochs(8)
-    .with_seed(97);
+    .gossip(10.0)
+    .epochs(8)
+    .seed(97)
+    .build();
     let json_run = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("json run");
-    let binary_run = run_sharded_remote(
-        &scenario.clone().with_codec(eva::transport::Codec::Binary),
-        RemoteTransport::Tcp,
-    )
-    .expect("binary run");
+    let binary = ShardScenario {
+        codec: eva::transport::Codec::Binary,
+        ..scenario.clone()
+    };
+    let binary_run = run_sharded_remote(&binary, RemoteTransport::Tcp).expect("binary run");
     assert_eq!(binary_run.total_frames(), json_run.total_frames());
     assert_eq!(binary_run.total_processed(), json_run.total_processed());
     assert_eq!(binary_run.control_log, json_run.control_log);
@@ -270,11 +275,12 @@ fn remote_migration_crosses_the_wire_as_detach_attach() {
     for (i, fps) in [9.0, 1.0, 9.0, 1.0].iter().enumerate() {
         streams.push(StreamSpec::new(&format!("s{i}"), *fps, (*fps * 60.0) as u64).with_window(4));
     }
-    let scenario = ShardScenario::new(vec![pool(6, 2.5), pool(6, 2.5)], streams)
-        .with_policy(eva::shard::PlacementPolicy::RoundRobin)
-        .with_gossip(10.0)
-        .with_epochs(8)
-        .with_seed(101);
+    let scenario = ShardScenario::builder(vec![pool(6, 2.5), pool(6, 2.5)], streams)
+        .policy(eva::shard::PlacementPolicy::RoundRobin)
+        .gossip(10.0)
+        .epochs(8)
+        .seed(101)
+        .build();
     let report = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
     assert_eq!(report.migrations, 1, "{:?}", report.control_log.len());
     let detaches = report
