@@ -100,32 +100,34 @@ pub fn parse_argv(raw: &[String]) -> (String, Args) {
 /// subcommand it cannot steer would be silently ignored, and the CLI
 /// contract is that nothing is. Exits 2 on violation.
 pub fn check_applicability(cmd: &str, args: &Args) {
+    // All gates test `Args::passed` — did the user actually write the
+    // flag — never `get`, which also sees values filled in from spec
+    // defaults (a defaulted flag must not trip the gate on every run).
+    //
     // `--metrics-out` / `--trace-out` only apply where a run produces a
     // registry / span traces.
-    if args.get("metrics-out").is_some() && !matches!(cmd, "fleet" | "gate" | "shard" | "trace") {
+    if args.passed("metrics-out") && !matches!(cmd, "fleet" | "gate" | "shard" | "trace") {
         usage_error(&format!("--metrics-out does not apply to {cmd} (fleet|gate|shard|trace)"));
     }
-    if args.get("trace-out").is_some() && !matches!(cmd, "fleet" | "gate" | "trace") {
+    if args.passed("trace-out") && !matches!(cmd, "fleet" | "gate" | "trace") {
         usage_error(&format!("--trace-out does not apply to {cmd} (fleet|gate|trace)"));
     }
-    // `--codec`/`--groups` steer the sharded control plane only; the
-    // specs carry no default so "was it passed?" is observable here.
-    if args.get("codec").is_some() && cmd != "shard" {
+    // `--codec`/`--groups` steer the sharded control plane only.
+    if args.passed("codec") && cmd != "shard" {
         usage_error(&format!("--codec does not apply to {cmd} (shard)"));
     }
-    if args.get("groups").is_some() && cmd != "shard" {
+    if args.passed("groups") && cmd != "shard" {
         usage_error(&format!("--groups does not apply to {cmd} (shard)"));
     }
     // The session layer: `--listen`/`--sessions`/`--probe` are the
     // shard-server surface; `--token` also rides the coordinator side
     // (`eva shard --scenario run --transport tcp|uds`).
     for flag in ["listen", "sessions", "probe"] {
-        let passed = args.get(flag).is_some() || args.flag(flag);
-        if passed && cmd != "shard-server" {
+        if args.passed(flag) && cmd != "shard-server" {
             usage_error(&format!("--{flag} does not apply to {cmd} (shard-server)"));
         }
     }
-    if args.get("token").is_some() && !matches!(cmd, "shard" | "shard-server") {
+    if args.passed("token") && !matches!(cmd, "shard" | "shard-server") {
         usage_error(&format!("--token does not apply to {cmd} (shard|shard-server)"));
     }
 }

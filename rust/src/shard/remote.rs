@@ -509,8 +509,21 @@ fn open_session(
     scenario: &ShardScenario,
     roster: &[String],
 ) -> Result<(FrameConn, f64)> {
-    let mut conn = connect_with_backoff(endpoint, 10, std::time::Duration::from_millis(5))
+    let conn = connect_with_backoff(endpoint, 10, std::time::Duration::from_millis(5))
         .map_err(|e| anyhow!("shard {sh}: dial {} failed: {e}", endpoint.label()))?;
+    handshake_session(conn, sh, scenario, roster)
+}
+
+/// The post-connect half of [`open_session`]: Hello with the session
+/// capabilities, await Welcome/Reject. Split out so a rejoin dial can
+/// account the accepted connection (which consumed one of the
+/// listener's session slots) separately from handshake success.
+fn handshake_session(
+    mut conn: FrameConn,
+    sh: usize,
+    scenario: &ShardScenario,
+    roster: &[String],
+) -> Result<(FrameConn, f64)> {
     let caps = SessionCaps {
         autoscale: scenario.autoscale.clone(),
         gate: scenario.gate.clone(),
@@ -575,7 +588,10 @@ pub fn run_sharded_remote(
     let mut endpoints = Vec::with_capacity(m);
     let mut handles = Vec::with_capacity(m);
     let mut sessions_expected = vec![0usize; m];
-    let mut sessions_opened = vec![0usize; m];
+    // Session slots this coordinator consumed per shard: every accepted
+    // connection counts, handshake-rejected rejoin dials included, so
+    // teardown drains exactly the slots the listener still holds open.
+    let mut sessions_used = vec![0usize; m];
     for (sh, pool) in scenario.shards.iter().enumerate() {
         let listener = Listener::bind(&transport.endpoint(sh))
             .map_err(|e| anyhow!("shard {sh}: bind failed: {e}"))?;
@@ -608,7 +624,7 @@ pub fn run_sharded_remote(
     for (sh, endpoint) in endpoints.iter().enumerate() {
         let (conn, cap) = open_session(endpoint, sh, scenario, &roster)?;
         capacity[sh] = cap;
-        sessions_opened[sh] += 1;
+        sessions_used[sh] += 1;
         conns.push(Some(conn));
     }
 
@@ -722,14 +738,25 @@ pub fn run_sharded_remote(
         //    refused or failed redial leaves the shard dead — churn
         //    must never wedge the run.
         for &(re, sh) in &scenario.rejoins {
-            if re != epoch || alive[sh] {
+            // `sh >= m` mirrors the in-process runner's guard: a rejoin
+            // entry naming a nonexistent shard is ignored, not a panic.
+            if re != epoch || sh >= m || alive[sh] {
                 continue;
             }
-            if let Ok((conn, cap)) = open_session(&endpoints[sh], sh, scenario, &roster) {
+            // An accepted connection consumes one of the listener's
+            // session slots even when the handshake is then rejected
+            // (bad token, version skew), so the slot is accounted on
+            // connect — otherwise teardown would dial for it again.
+            let Ok(conn) =
+                connect_with_backoff(&endpoints[sh], 10, std::time::Duration::from_millis(5))
+            else {
+                continue;
+            };
+            sessions_used[sh] += 1;
+            if let Ok((conn, cap)) = handshake_session(conn, sh, scenario, &roster) {
                 conns[sh] = Some(conn);
                 alive[sh] = true;
                 capacity[sh] = cap;
-                sessions_opened[sh] += 1;
             }
         }
 
@@ -993,7 +1020,7 @@ pub fn run_sharded_remote(
     }
     drop(conns);
     for sh in 0..m {
-        for _ in sessions_opened[sh]..sessions_expected[sh] {
+        for _ in sessions_used[sh]..sessions_expected[sh] {
             if let Ok(mut conn) =
                 connect_with_backoff(&endpoints[sh], 3, std::time::Duration::from_millis(5))
             {

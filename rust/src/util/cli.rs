@@ -11,6 +11,10 @@ pub struct Args {
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
     positional: Vec<String>,
+    // Option names the user wrote on the command line, as opposed to
+    // values filled in from spec defaults: `opts` cannot distinguish
+    // the two, and applicability gating must only fire on user intent.
+    provided: Vec<String>,
 }
 
 /// Option/flag declaration used for usage text and validation.
@@ -49,6 +53,7 @@ impl Args {
                                 .ok_or_else(|| format!("--{name} needs a value"))?
                         }
                     };
+                    out.provided.push(name.clone());
                     out.opts.insert(name, v);
                 } else {
                     if inline.is_some() {
@@ -78,6 +83,14 @@ impl Args {
 
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// True only if the user wrote `--name` on the command line —
+    /// whether value-taking or boolean. A value filled in from a spec
+    /// default does *not* count, which is what makes this the right
+    /// predicate for "does this flag apply to this subcommand" gating.
+    pub fn passed(&self, name: &str) -> bool {
+        self.provided.iter().any(|p| p == name) || self.flag(name)
     }
 
     pub fn str_or(&self, name: &str, default: &str) -> String {
@@ -167,6 +180,17 @@ mod tests {
         let a = Args::parse(&raw(&[]), &specs()).unwrap();
         assert_eq!(a.get("model"), Some("eyolo"));
         assert_eq!(a.get("n"), None);
+    }
+
+    #[test]
+    fn defaults_do_not_count_as_passed() {
+        let a = Args::parse(&raw(&["--verbose"]), &specs()).unwrap();
+        assert_eq!(a.get("model"), Some("eyolo"), "default still readable");
+        assert!(!a.passed("model"), "spec default must not register as user intent");
+        assert!(a.passed("verbose"));
+        let b = Args::parse(&raw(&["--model", "essd"]), &specs()).unwrap();
+        assert!(b.passed("model"));
+        assert!(!b.passed("verbose"));
     }
 
     #[test]

@@ -308,6 +308,21 @@ fn session_flags_are_rejected_where_they_cannot_apply() {
 }
 
 #[test]
+fn spec_defaults_never_trip_the_applicability_gate() {
+    // Regression pin: `--sessions` carries a spec default, and a default
+    // filled into the parsed args must not register as "the user passed
+    // --sessions" — that once made every non-shard-server subcommand
+    // exit 2. Any defaulted flag added later rides the same contract.
+    let out = eva(&["nselect", "--lambda", "14", "--mu", "2.5"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(
+        !stderr(&out).contains("does not apply"),
+        "default-valued flag tripped the applicability gate: {}",
+        stderr(&out)
+    );
+}
+
+#[test]
 fn session_flags_runtime_contract_keeps_exit_1_distinct() {
     // `shard-server` without a bind address is understood-but-failed:
     // exit 1 with the missing flag named, not a usage error.
