@@ -1,0 +1,77 @@
+//! Forecast bench: the fused-control acceptance shapes, then what the
+//! forecast layer costs — the per-epoch observe→predict hot path and a
+//! full fused diurnal co-simulation.
+//!
+//! Asserts the shapes first (fused control attaches ahead of the ramp
+//! where reactive control cannot; no extra migrations; delivered
+//! quality at least matches), then measures.
+
+use eva::autoscale::ladder::ModelLadder;
+use eva::experiments::forecast::{
+    attach_phases, delivered_quality, diurnal_scenario, forecast_tuning, DIURNAL_CAMS,
+};
+use eva::forecast::ShardForecast;
+use eva::shard::run_sharded;
+use eva::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::new(1, 3);
+
+    // ---- Shapes: the diurnal acceptance sweep, in-process ------------
+    let reactive = run_sharded(&diurnal_scenario(29, false));
+    let fused = run_sharded(&diurnal_scenario(29, true));
+    let (re_pre, re_post) = attach_phases(&reactive);
+    let (fu_pre, fu_post) = attach_phases(&fused);
+    assert!(re_post >= 1, "the ramp must force reactive repair attaches");
+    assert!(
+        fu_pre > re_pre,
+        "fused control must attach ahead of the ramp: {fu_pre} vs {re_pre}"
+    );
+    assert!(
+        fused.migrations <= reactive.migrations,
+        "forecast fusion must not add migrations: {} vs {}",
+        fused.migrations,
+        reactive.migrations
+    );
+    let ladder = ModelLadder::from_profiles("eth_sunnyday");
+    let q_fused = delivered_quality(&fused, &ladder);
+    let q_reactive = delivered_quality(&reactive, &ladder);
+    assert!(
+        q_fused >= q_reactive - 1e-9,
+        "fused delivered quality must at least match: {q_fused:.4} vs {q_reactive:.4}"
+    );
+    assert!(!fused.forecast_trace.is_empty() && reactive.forecast_trace.is_empty());
+    println!(
+        "shape OK: fused {fu_pre} pre-ramp / {fu_post} post-step attaches vs reactive {re_pre}/{re_post}, migrations {} vs {}",
+        fused.migrations, reactive.migrations
+    );
+
+    // ---- Cost: the per-epoch forecaster hot path ---------------------
+    // 6 streams × 1000 epochs of observe + aggregate predict — what one
+    // shard pays per gossip epoch, times a long run.
+    let cfg = forecast_tuning();
+    bench.run("forecast: observe+predict, 6 streams × 1k epochs", Some(6_000.0), || {
+        let mut fc = ShardForecast::new(cfg.clone());
+        let mut acc = 0u64;
+        for epoch in 0..1000usize {
+            let mult = if epoch % 4 >= 2 { 2.0 } else { 1.0 };
+            for s in 0..DIURNAL_CAMS {
+                fc.observe(s, 1.4 * mult);
+            }
+            if let Some(rate) = fc.digest_rate() {
+                acc = acc.wrapping_add(rate.to_bits());
+            }
+        }
+        black_box(acc)
+    });
+
+    // ---- Cost: one fused diurnal co-simulation (a sweep cell) --------
+    bench.run(
+        "shard sim: fused diurnal co-sim (6 streams × 24 epochs)",
+        Some(6.0 * 24.0),
+        || {
+            let report = run_sharded(&diurnal_scenario(37, true));
+            black_box(((report.migrations as u64) << 32) | report.forecast_trace.len() as u64)
+        },
+    );
+}

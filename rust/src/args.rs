@@ -33,7 +33,7 @@ pub fn specs() -> Vec<Spec> {
         Spec { name: "window", takes_value: true, help: "fleet: per-stream freshness window", default: Some("4") },
         Spec { name: "no-admission", takes_value: false, help: "fleet: admit everything (overload shows as drops)", default: None },
         Spec { name: "scenario", takes_value: true, help: "autoscale/shard/gate: sweep to run (autoscale: step|diurnal|failure|all; shard: split|skew|failure|autoscale|churn|all|run|transport|scale; gate: lobby|highway|sports|all)", default: Some("step") },
-        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/gate/trace: emit machine-readable JSON instead of tables", default: None },
+        Spec { name: "json", takes_value: false, help: "fleet/autoscale/shard/forecast/gate/trace: emit machine-readable JSON instead of tables", default: None },
         Spec { name: "shards", takes_value: true, help: "shard: number of fleet instances (each gets a --rates pool)", default: Some("2") },
         Spec { name: "policy", takes_value: true, help: "shard: placement policy (least-loaded|hash|round-robin)", default: Some("least-loaded") },
         Spec { name: "gossip", takes_value: true, help: "shard: capacity-gossip interval in seconds", default: Some("5") },
@@ -41,6 +41,7 @@ pub fn specs() -> Vec<Spec> {
         Spec { name: "codec", takes_value: true, help: "shard: control-plane payload codec for --scenario run (json|binary; json is the audit format)", default: None },
         Spec { name: "groups", takes_value: true, help: "shard: rebalance over shard groups of this size for --scenario run (default: flat planning)", default: None },
         Spec { name: "autoscale", takes_value: false, help: "shard: embed an AutoscaleController in every shard (--scenario run), or select the autoscale overload sweep", default: None },
+        Spec { name: "forecast", takes_value: false, help: "shard: arm per-stream arrival forecasting on --scenario run (predicted Σλ rides gossip, fuses into scaling/placement/admission)", default: None },
         Spec { name: "metrics-out", takes_value: true, help: "fleet/gate/shard/trace: write the run's metric snapshot (Prometheus text exposition) to this file", default: None },
         Spec { name: "trace-out", takes_value: true, help: "fleet/gate/trace: write the run's per-frame span traces (JSONL) to this file", default: None },
         Spec { name: "listen", takes_value: true, help: "shard-server: bind address (host:port, or unix:<path> for a Unix socket)", default: None },
@@ -52,9 +53,9 @@ pub fn specs() -> Vec<Spec> {
 
 /// The one canonical subcommand list: the validity gate in `main`, the
 /// usage strings and `run`'s dispatch must never drift apart.
-pub const SUBCOMMANDS: [&str; 12] = [
-    "serve", "offline", "fleet", "autoscale", "shard", "shard-server", "gate", "trace",
-    "table", "nselect", "visualize", "inspect",
+pub const SUBCOMMANDS: [&str; 13] = [
+    "serve", "offline", "fleet", "autoscale", "shard", "shard-server", "forecast", "gate",
+    "trace", "table", "nselect", "visualize", "inspect",
 ];
 
 fn subcommand_list() -> String {
@@ -129,6 +130,12 @@ pub fn check_applicability(cmd: &str, args: &Args) {
     }
     if args.passed("token") && !matches!(cmd, "shard" | "shard-server") {
         usage_error(&format!("--token does not apply to {cmd} (shard|shard-server)"));
+    }
+    // `--forecast` arms the forecaster on the one-off sharded run; the
+    // `forecast` subcommand's sweeps arm it themselves, so the flag
+    // there would be a silent no-op.
+    if args.passed("forecast") && cmd != "shard" {
+        usage_error(&format!("--forecast does not apply to {cmd} (shard --scenario run)"));
     }
 }
 

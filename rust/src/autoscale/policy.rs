@@ -158,6 +158,11 @@ pub struct AutoscaleController {
     signals: FleetSignals,
     last_device_action: f64,
     next_replica: usize,
+    /// Forecast Σλ one horizon ahead (FPS of offered load), armed by the
+    /// shard runner when the forecaster's confidence band is tight. Only
+    /// a prediction *above* the current demand band moves the controller
+    /// — see [`AutoscaleController::device_control`].
+    forecast_hint: Option<f64>,
     // Per-stream quality-controller state (indexed by StreamId).
     last_rung_action: Vec<f64>,
     last_step_up: Vec<f64>,
@@ -175,6 +180,7 @@ impl AutoscaleController {
             signals: FleetSignals::new(window),
             last_device_action: f64::NEG_INFINITY,
             next_replica: 0,
+            forecast_hint: None,
             last_rung_action: Vec::new(),
             last_step_up: Vec::new(),
             up_backoff: Vec::new(),
@@ -182,13 +188,37 @@ impl AutoscaleController {
         }
     }
 
+    /// Device-controller continuity state: the cooldown clock and the
+    /// replica-id counter. This is what distinguishes a *warm* rejoin
+    /// from a cold join — see [`crate::shard::autoscale::ScalerState`].
+    pub fn device_state(&self) -> (f64, usize) {
+        (self.last_device_action, self.next_replica)
+    }
+
+    /// Restore continuity state captured by
+    /// [`AutoscaleController::device_state`] on a fresh controller.
+    pub fn restore_device_state(&mut self, last_device_action: f64, next_replica: usize) {
+        self.last_device_action = last_device_action;
+        self.next_replica = next_replica;
+    }
+
+    /// Arm (or clear) the forecast demand hint for subsequent ticks.
+    /// The runner re-arms this each gossip epoch from the shard's
+    /// [`crate::forecast::ShardForecast`]; `None` (no forecast, or a
+    /// loose confidence band) restores pure reactive control.
+    pub fn set_forecast_demand(&mut self, hint: Option<f64>) {
+        self.forecast_hint = hint;
+    }
+
     /// Epoch-slice boundary reset for drivers that feed the controller
     /// one sub-run at a time ([`crate::shard::autoscale`]): stream ids
     /// are slice-local and residency changes between slices, so signal
     /// windows and per-stream quality state must not carry across. The
-    /// device-action cooldown clock and the replica-id counter *do*
-    /// persist — a cooldown legitimately spans a gossip epoch, and
-    /// replica ids must stay fresh across the whole shard run.
+    /// device-action cooldown clock, the replica-id counter, and the
+    /// forecast hint *do* persist — a cooldown legitimately spans a
+    /// gossip epoch, replica ids must stay fresh across the whole shard
+    /// run, and the hint is epoch-scoped state the runner re-arms
+    /// itself.
     pub fn begin_slice(&mut self) {
         self.signals = FleetSignals::new(self.cfg.signal_window.max(1e-3));
         self.last_rung_action.clear();
@@ -283,7 +313,22 @@ impl AutoscaleController {
             .iter()
             .map(|&sid| reg.streams[sid].spec.demand())
             .collect();
-        let (cap_lo, cap_hi) = capacity_band(&demands, self.cfg.target_utilization);
+        let (mut cap_lo, mut cap_hi) = capacity_band(&demands, self.cfg.target_utilization);
+        if let Some(hint) = self.forecast_hint {
+            // Provision toward the predicted band, not the current one —
+            // the attach then lands *before* the ramp instead of after
+            // the p99 spike it would have caused, and a detach that the
+            // forecast says would be regretted within a horizon is
+            // blocked by the raised floor. Only a prediction strictly
+            // above today's demand ceiling moves anything: a forecast
+            // equal to committed load (constant-rate streams) leaves the
+            // reactive band bit-identical.
+            let predicted = hint / self.cfg.target_utilization.max(1e-6);
+            if predicted > cap_hi + 1e-9 {
+                cap_lo = cap_lo.max(predicted);
+                cap_hi = predicted;
+            }
+        }
         let capacity = reg.pool.attached_rate();
         let n_attached = reg.pool.devices().iter().filter(|d| d.attached).count();
 
@@ -588,6 +633,66 @@ mod tests {
             })
             .collect();
         assert!(ids[1] > ids[0], "replica ids {ids:?}");
+    }
+
+    #[test]
+    fn forecast_hint_attaches_ahead_of_the_ramp_and_blocks_detach() {
+        let cfg = AutoscaleConfig {
+            target_utilization: 1.0,
+            ..AutoscaleConfig::default()
+        };
+        // Band exactly met (2 × 2.5 = Σλ = 5): reactively quiescent.
+        let mut ctl = AutoscaleController::new(cfg.clone());
+        let devices: Vec<DeviceInstance> = (0..2)
+            .map(|i| {
+                DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, 2.5)
+            })
+            .collect();
+        let mut reg = crate::fleet::registry::FleetRegistry::new(
+            devices,
+            AdmissionPolicy::admit_all(),
+        );
+        reg.attach_stream(crate::fleet::stream::StreamSpec::new("a", 5.0, 10_000), 0.0);
+        assert!(FleetController::act(&mut ctl, 0.0, &reg).is_empty());
+        // A tight forecast of 9 FPS raises the provisioning floor: the
+        // attach fires now, one cooldown ahead of the ramp, with no
+        // breach signal at all.
+        ctl.set_forecast_demand(Some(9.0));
+        let acted = FleetController::act(&mut ctl, cfg.cooldown + 0.1, &reg);
+        assert_eq!(acted.len(), 1, "{acted:?}");
+        assert!(matches!(acted[0], ControlAction::AttachDevice(_)));
+        // A forecast equal to committed demand is a no-op: clearing back
+        // to reactive control stays quiescent too.
+        let mut ctl = AutoscaleController::new(cfg.clone());
+        ctl.set_forecast_demand(Some(5.0));
+        assert!(FleetController::act(&mut ctl, 0.0, &reg).is_empty());
+        ctl.set_forecast_demand(None);
+        assert!(FleetController::act(&mut ctl, cfg.cooldown + 0.1, &reg).is_empty());
+
+        // Over-provisioned pool (4 × 2.5 = 10 against Σλ = 5): reactive
+        // control sheds the idle replica…
+        let devices: Vec<DeviceInstance> = (0..4)
+            .map(|i| {
+                DeviceInstance::with_rate(DeviceKind::Ncs2, DetectorModelId::Yolov3, i, 2.5)
+            })
+            .collect();
+        let mut reg = crate::fleet::registry::FleetRegistry::new(
+            devices,
+            AdmissionPolicy::admit_all(),
+        );
+        reg.attach_stream(crate::fleet::stream::StreamSpec::new("a", 5.0, 10_000), 0.0);
+        let mut ctl = AutoscaleController::new(cfg.clone());
+        let acted = FleetController::act(&mut ctl, 0.0, &reg);
+        assert!(
+            matches!(acted.as_slice(), [ControlAction::DetachDevice(_)]),
+            "{acted:?}"
+        );
+        // …but a forecast of 8 FPS says the capacity is about to be
+        // needed: the detach is blocked (and 10 ≥ 8, so no attach
+        // either).
+        let mut ctl = AutoscaleController::new(cfg);
+        ctl.set_forecast_demand(Some(8.0));
+        assert!(FleetController::act(&mut ctl, 0.0, &reg).is_empty());
     }
 
     #[test]

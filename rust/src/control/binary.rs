@@ -317,6 +317,20 @@ fn write_spec(w: &mut ByteWriter, spec: &StreamSpec) {
     w.varint(spec.num_frames);
     w.f64(spec.weight);
     w.varint(spec.window as u64);
+    // Presence-flagged periodic rate profile (same idiom as a device's
+    // rate_override; this codec is gated by BINARY_VERSION, unlike the
+    // JSON twin whose absent-key contract carries the compatibility).
+    match &spec.profile {
+        Some(p) => {
+            w.bool(true);
+            w.f64(p.period);
+            w.varint(p.mults.len() as u64);
+            for &m in &p.mults {
+                w.f64(m);
+            }
+        }
+        None => w.bool(false),
+    }
 }
 
 fn read_spec(r: &mut ByteReader) -> Result<StreamSpec, WireError> {
@@ -334,6 +348,25 @@ fn read_spec(r: &mut ByteReader) -> Result<StreamSpec, WireError> {
     let mut spec = StreamSpec::new(&name, fps, num_frames);
     spec.weight = weight;
     spec.window = window;
+    if r.bool()? {
+        let period = r.f64()?;
+        if !period.is_finite() || period <= 0.0 {
+            return Err(WireError::new("rate profile period must be positive"));
+        }
+        let count = r.usize()?;
+        if count == 0 {
+            return Err(WireError::new("rate profile needs at least one bucket"));
+        }
+        let mut mults = Vec::with_capacity(count.min(1 << 16));
+        for _ in 0..count {
+            let m = r.f64()?;
+            if !m.is_finite() || m <= 0.0 {
+                return Err(WireError::new("rate profile multipliers must be positive"));
+            }
+            mults.push(m);
+        }
+        spec.profile = Some(crate::fleet::stream::RateProfile { period, mults });
+    }
     Ok(spec)
 }
 
@@ -578,12 +611,21 @@ pub fn encode_msg(msg: &TransportMsg) -> Vec<u8> {
             at,
             capacity,
             committed,
+            forecast,
         } => {
             w.u8(MSG_DIGEST);
             w.varint(*shard as u64);
             w.f64(*at);
             w.f64(*capacity);
             w.f64(*committed);
+            // Forecast-Σλ rides as an optional *trailing* section: absent
+            // forecasts write nothing, so forecast-free runs stay
+            // byte-identical to pre-forecast builds and legacy digests
+            // (which end at `committed`) decode with the slot absent.
+            if let Some(f) = forecast {
+                w.bool(true);
+                w.f64(*f);
+            }
         }
         TransportMsg::Tick {
             epoch,
@@ -678,12 +720,26 @@ pub fn decode_msg(bytes: &[u8]) -> Result<TransportMsg, WireError> {
             epoch: r.usize()?,
             at: r.f64()?,
         },
-        MSG_DIGEST => TransportMsg::Digest {
-            shard: r.usize()?,
-            at: r.f64()?,
-            capacity: r.f64()?,
-            committed: r.f64()?,
-        },
+        MSG_DIGEST => {
+            let shard = r.usize()?;
+            let at = r.f64()?;
+            let capacity = r.f64()?;
+            let committed = r.f64()?;
+            // Legacy digests end here; the forecast slot is a trailing
+            // optional section.
+            let forecast = if r.remaining() > 0 {
+                if r.bool()? { Some(r.f64()?) } else { None }
+            } else {
+                None
+            };
+            TransportMsg::Digest {
+                shard,
+                at,
+                capacity,
+                committed,
+                forecast,
+            }
+        }
         MSG_TICK => {
             let epoch = r.usize()?;
             let at = r.f64()?;
@@ -835,19 +891,23 @@ mod tests {
         ]);
         let at = rng.range(0.0, 1e4);
         match rng.below(8) {
-            0 => WireEvent::action(
-                at,
-                origin,
-                ControlAction::AttachStream(
-                    StreamSpec::new(
-                        &format!("cam{}", rng.below(64)),
-                        rng.range(0.5, 40.0),
-                        rng.int_in(1, 5_000) as u64,
-                    )
-                    .with_weight(rng.range(0.25, 4.0))
-                    .with_window(rng.int_in(1, 16) as usize),
-                ),
-            ),
+            0 => {
+                let mut spec = StreamSpec::new(
+                    &format!("cam{}", rng.below(64)),
+                    rng.range(0.5, 40.0),
+                    rng.int_in(1, 5_000) as u64,
+                )
+                .with_weight(rng.range(0.25, 4.0))
+                .with_window(rng.int_in(1, 16) as usize);
+                if rng.chance(0.3) {
+                    let buckets = rng.int_in(1, 8) as usize;
+                    spec = spec.with_profile(crate::fleet::stream::RateProfile::new(
+                        rng.range(1.0, 240.0),
+                        (0..buckets).map(|_| rng.range(0.25, 4.0)).collect(),
+                    ));
+                }
+                WireEvent::action(at, origin, ControlAction::AttachStream(spec))
+            }
             1 => WireEvent::action(at, origin, ControlAction::DetachStream(rng.below(1 << 20) as usize)),
             2 => {
                 let mut d = DeviceInstance::new(
@@ -1009,6 +1069,7 @@ mod tests {
             at: 1234.5678901,
             capacity: 9.466666666666667,
             committed: 7.183333333333334,
+            forecast: None,
         };
         let bin = encode_msg(&msg).len();
         let json = msg.encode().len();

@@ -40,6 +40,7 @@ use crate::control::wire::{
     gate_config_to_json,
 };
 use crate::control::WireError;
+use crate::forecast::{forecast_config_from_json, forecast_config_to_json, ForecastConfig};
 use crate::gate::GateConfig;
 use crate::util::json::Json;
 
@@ -65,6 +66,11 @@ pub struct SessionCaps {
     /// Shared-secret session auth; must match the token the listening
     /// shard was started with (when it requires one).
     pub token: Option<String>,
+    /// Per-stream arrival forecasting ([`crate::forecast`]); the shard
+    /// publishes its predicted Σλ in every gossip digest and fuses the
+    /// prediction into its autoscaler and admission hold. `None` = run
+    /// purely reactive control (and publish no forecast slot).
+    pub forecast: Option<ForecastConfig>,
 }
 
 impl Default for SessionCaps {
@@ -75,6 +81,7 @@ impl Default for SessionCaps {
             gate: None,
             telemetry: false,
             token: None,
+            forecast: None,
         }
     }
 }
@@ -99,7 +106,11 @@ impl SessionCaps {
     /// True when every capability is at its default (nothing asked of
     /// the peer beyond the base session).
     pub fn is_default(&self) -> bool {
-        self.autoscale.is_none() && self.gate.is_none() && !self.telemetry && self.token.is_none()
+        self.autoscale.is_none()
+            && self.gate.is_none()
+            && !self.telemetry
+            && self.token.is_none()
+            && self.forecast.is_none()
     }
 
     /// Consuming setter for the auth token.
@@ -125,6 +136,9 @@ impl SessionCaps {
         }
         if let Some(token) = &self.token {
             o.insert("token".to_string(), Json::Str(token.clone()));
+        }
+        if let Some(cfg) = &self.forecast {
+            o.insert("forecast".to_string(), forecast_config_to_json(cfg));
         }
         Json::Obj(o)
     }
@@ -163,12 +177,17 @@ impl SessionCaps {
                     .to_string(),
             ),
         };
+        let forecast = match v.get("forecast") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(forecast_config_from_json(j)?),
+        };
         Ok(SessionCaps {
             version,
             autoscale,
             gate,
             telemetry,
             token,
+            forecast,
         })
     }
 }
@@ -201,6 +220,11 @@ mod tests {
             }),
             telemetry: true,
             token: Some("s3cret".to_string()),
+            forecast: Some(ForecastConfig {
+                period: 24,
+                band: 0.15,
+                ..ForecastConfig::default()
+            }),
             ..SessionCaps::default()
         };
         assert!(!caps.is_default());
@@ -230,6 +254,7 @@ mod tests {
             r#"{"telemetry":3}"#,
             r#"{"token":17}"#,
             r#"{"autoscale":"yes"}"#,
+            r#"{"forecast":"tight"}"#,
         ] {
             assert!(
                 SessionCaps::from_json(&Json::parse(text).unwrap()).is_err(),

@@ -26,7 +26,7 @@ use crate::autoscale::policy::AutoscaleConfig;
 use crate::control::plane::{ControlAction, ControlOrigin};
 use crate::device::{DetectorModelId, DeviceInstance, DeviceKind};
 use crate::fleet::admission::{AdmissionMode, AdmissionPolicy, Decision, DegradeMode};
-use crate::fleet::stream::{StreamId, StreamSpec};
+use crate::fleet::stream::{RateProfile, StreamId, StreamSpec};
 use crate::gate::signal::MotionDynamics;
 use crate::gate::{GateConfig, GateVerdict};
 use crate::util::json::Json;
@@ -293,7 +293,46 @@ pub fn stream_spec_to_json(spec: &StreamSpec) -> Json {
     o.insert("num_frames".to_string(), Json::Num(spec.num_frames as f64));
     o.insert("weight".to_string(), Json::Num(spec.weight));
     o.insert("window".to_string(), Json::Num(spec.window as f64));
+    // The periodic rate profile is optional and omitted when absent, so
+    // flat-stream wire text is byte-identical to pre-profile builds (and
+    // pre-profile decoders, which ignore unknown keys, stay compatible).
+    if let Some(p) = &spec.profile {
+        let mut m = BTreeMap::new();
+        m.insert("period".to_string(), Json::Num(p.period));
+        m.insert(
+            "mults".to_string(),
+            Json::Arr(p.mults.iter().map(|&x| Json::Num(x)).collect()),
+        );
+        o.insert("profile".to_string(), Json::Obj(m));
+    }
     Json::Obj(o)
+}
+
+/// Decode the optional periodic rate profile (absent or `null` → flat).
+pub(crate) fn rate_profile_from_json(v: &Json) -> Result<Option<RateProfile>, WireError> {
+    let p = match v.get("profile") {
+        None | Some(Json::Null) => return Ok(None),
+        Some(p) => p,
+    };
+    let period = req_f64(p, "period")?;
+    if !period.is_finite() || period <= 0.0 {
+        return Err(WireError::new("rate profile period must be positive"));
+    }
+    let mults = match p.get("mults") {
+        Some(Json::Arr(a)) if !a.is_empty() => {
+            let mut mults = Vec::with_capacity(a.len());
+            for x in a {
+                let m = x.as_f64().ok_or_else(|| WireError::missing("mults"))?;
+                if !m.is_finite() || m <= 0.0 {
+                    return Err(WireError::new("rate profile multipliers must be positive"));
+                }
+                mults.push(m);
+            }
+            mults
+        }
+        _ => return Err(WireError::missing("mults")),
+    };
+    Ok(Some(RateProfile { period, mults }))
 }
 
 pub fn stream_spec_from_json(v: &Json) -> Result<StreamSpec, WireError> {
@@ -308,6 +347,7 @@ pub fn stream_spec_from_json(v: &Json) -> Result<StreamSpec, WireError> {
     let mut spec = StreamSpec::new(req_str(v, "name")?, fps, req_u64(v, "num_frames")?);
     spec.weight = weight;
     spec.window = req_usize(v, "window")?.max(1);
+    spec.profile = rate_profile_from_json(v)?;
     Ok(spec)
 }
 
@@ -477,6 +517,9 @@ pub fn admission_from_json(v: &Json) -> Result<AdmissionPolicy, WireError> {
         min_rate: req_f64(v, "min_rate")?,
         mode,
         degrade,
+        // Runtime burst-hold state is armed per epoch by the local
+        // forecaster, never carried in the handshake.
+        hold: false,
     })
 }
 
@@ -737,6 +780,30 @@ mod tests {
             Decision::SwapModel { rung: 1, stride: 2, share: 1.25 },
         ));
         roundtrip(&WireEvent::decision(2.0, 3, Decision::Reject));
+    }
+
+    #[test]
+    fn profiled_stream_specs_roundtrip_and_flat_text_is_unchanged() {
+        use crate::fleet::stream::RateProfile;
+        let spec = StreamSpec::new("diurnal", 8.0, 160)
+            .with_profile(RateProfile::new(40.0, vec![0.5, 1.0, 2.0, 1.0]));
+        roundtrip(&WireEvent::action(
+            0.0,
+            ControlOrigin::Scripted,
+            ControlAction::AttachStream(spec),
+        ));
+        // Flat streams omit the key entirely — legacy decoders (which
+        // ignore unknown keys) and legacy text (no "profile") both work.
+        let flat = stream_spec_to_json(&StreamSpec::new("flat", 8.0, 160));
+        assert!(!flat.to_string().contains("profile"));
+        let legacy = r#"{"name":"old","fps":5,"num_frames":10,"weight":1,"window":4}"#;
+        let spec = stream_spec_from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert!(spec.profile.is_none());
+        // Malformed profiles are rejected, not defaulted.
+        let bad = r#"{"name":"x","fps":5,"num_frames":10,"weight":1,"window":4,"profile":{"period":0,"mults":[1]}}"#;
+        assert!(stream_spec_from_json(&Json::parse(bad).unwrap()).is_err());
+        let bad = r#"{"name":"x","fps":5,"num_frames":10,"weight":1,"window":4,"profile":{"period":10,"mults":[]}}"#;
+        assert!(stream_spec_from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,617 @@
+//! Forecast-fusion sweeps: reactive vs forecast-fused control on a
+//! diurnal load, plus the offline deployment-space search (see
+//! EXPERIMENTS.md §Forecast for the measured numbers).
+//!
+//! * [`diurnal_sweep`] — the acceptance sweep: the same day-shaped
+//!   square-wave load (two low epochs, two ×2 epochs, repeating) served
+//!   by identical autoscaled shards with and without the forecast layer
+//!   ([`crate::forecast`]), in the in-process co-simulation **and** over
+//!   loopback TCP. Reactive control only sees the ramp after it has
+//!   landed: every device attach fires inside a high phase, after the
+//!   breach already cost dropped frames. Fused control learns the shape
+//!   after a couple of cycles and attaches *inside the low phase right
+//!   before the ramp* — the pre-ramp attach the paper's
+//!   arrival-vs-processing-rate mismatch (§ III) calls for.
+//! * [`deployment_search`] — AyE-Edge-style offline search: sweep
+//!   (devices per shard, model ladder, placement policy, autoscale p99
+//!   band) per load scenario over the virtual-time engine, score every
+//!   cell, and emit the recommended deployment as JSON (the `eva
+//!   forecast --json` surface, uploaded by CI as `BENCH_forecast.json`).
+//!
+//! Delivered quality here is the shard-level analytic mAP proxy
+//! ([`delivered_quality`]): sharded runs keep per-stream frame counters
+//! and the routed control log, not per-record detection output, so each
+//! processed frame contributes its stream's current ladder-rung quality
+//! ([`ModelLadder::quality`], rung timeline reconstructed from the
+//! audited `SwapModel` events) and every dropped frame contributes
+//! zero. It is a proxy with the same calibrated anchors as the fleet
+//! sweeps, not an mAP measurement.
+
+use crate::autoscale::ladder::ModelLadder;
+use crate::autoscale::policy::AutoscaleConfig;
+use crate::control::{ControlAction, ControlOrigin};
+use crate::experiments::fleet::pool_of;
+use crate::fleet::stream::{RateProfile, StreamSpec};
+use crate::forecast::{forecast_config_to_json, ForecastConfig};
+use crate::shard::placement::PlacementPolicy;
+use crate::shard::remote::{run_sharded_remote, RemoteTransport};
+use crate::shard::sim::{run_sharded, ShardReport, ShardScenario};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+use std::collections::BTreeMap;
+
+/// Gossip interval of every forecast sweep (seconds). The diurnal
+/// profile buckets are aligned to it so each gossip epoch sits entirely
+/// inside one phase of the day shape.
+pub const FORECAST_GOSSIP: f64 = 5.0;
+
+/// Diurnal cycle length in seconds: four gossip epochs — two low, two
+/// high — so [`forecast_tuning`]'s seasonal period of 4 observes one
+/// bucket per epoch.
+pub const DIURNAL_CYCLE: f64 = 20.0;
+
+/// Epochs of the acceptance sweep (six full diurnal cycles: the
+/// forecaster needs two to three cycles of scored residuals before its
+/// confidence band tightens, leaving several cycles of fused control).
+pub const DIURNAL_EPOCHS: usize = 24;
+
+/// Per-camera base rate (FPS) and the peak multiplier of the high
+/// phase. Six cameras over two shards: committed Σλ per shard swings
+/// 4.2 → 8.4 FPS against a 3 × 2.5-FPS seed pool, so the high phase
+/// breaches admission capacity until the autoscaler attaches.
+pub const DIURNAL_BASE_FPS: f64 = 1.4;
+pub const DIURNAL_PEAK_MULT: f64 = 2.0;
+pub const DIURNAL_CAMS: usize = 6;
+
+/// The day shape: two low buckets then two ×2 buckets per cycle.
+pub fn diurnal_profile() -> RateProfile {
+    RateProfile::new(
+        DIURNAL_CYCLE,
+        vec![1.0, 1.0, DIURNAL_PEAK_MULT, DIURNAL_PEAK_MULT],
+    )
+}
+
+/// The forecast tuning every sweep runs: seasonal period matched to the
+/// four-epoch cycle, horizon 2 so the prediction armed while serving
+/// epoch *e* covers epoch *e + 1* (the pre-ramp lead), and a band gate
+/// loose enough that the square wave's persistent EWMA residual still
+/// qualifies as tight once the shape is learned.
+pub fn forecast_tuning() -> ForecastConfig {
+    ForecastConfig {
+        alpha: 0.3,
+        season_alpha: 0.3,
+        period: 4,
+        horizon: 2,
+        band: 0.75,
+        hold_window: 2,
+    }
+}
+
+/// Shard-local scaling of the sweeps: 2.5-FPS template replicas up to
+/// twice the seed pool, with a short cooldown so the forecast hint can
+/// finish pre-provisioning inside one low epoch.
+fn diurnal_autoscale() -> AutoscaleConfig {
+    AutoscaleConfig {
+        device_rate: 2.5,
+        max_devices: 6,
+        cooldown: 2.0,
+        ..AutoscaleConfig::default()
+    }
+}
+
+/// The acceptance scenario: six diurnal cameras over two autoscaled
+/// shards; `fused` arms the forecast layer (everything else identical,
+/// so the delta is purely the predicted-Σλ signal).
+pub fn diurnal_scenario(seed: u64, fused: bool) -> ShardScenario {
+    let profile = diurnal_profile();
+    let streams: Vec<StreamSpec> = (0..DIURNAL_CAMS)
+        .map(|i| {
+            StreamSpec::new(&format!("cam{i}"), DIURNAL_BASE_FPS, 400)
+                .with_window(4)
+                .with_profile(profile.clone())
+        })
+        .collect();
+    let builder = ShardScenario::builder(vec![pool_of(3, 2.5), pool_of(3, 2.5)], streams)
+        .policy(PlacementPolicy::LeastLoaded)
+        .gossip(FORECAST_GOSSIP)
+        .epochs(DIURNAL_EPOCHS)
+        .seed(seed)
+        .autoscale(diurnal_autoscale());
+    if fused {
+        builder.forecast(forecast_tuning()).build()
+    } else {
+        builder.build()
+    }
+}
+
+/// Controller device attaches split by the diurnal phase they fired in:
+/// a low-phase attach provisions *ahead* of the ramp (only a forecast
+/// hint can cause one — reactive control has no breach signal to act on
+/// while the load is low), a high-phase attach is reactive repair after
+/// the step already landed. Returns `(pre_ramp, post_step)`.
+pub fn attach_phases(report: &ShardReport) -> (usize, usize) {
+    let profile = diurnal_profile();
+    let mut pre = 0usize;
+    let mut post = 0usize;
+    for c in &report.control_log {
+        if c.event.origin != ControlOrigin::Controller {
+            continue;
+        }
+        if let Some(ControlAction::AttachDevice(_)) = c.event.as_action() {
+            if profile.multiplier_at(c.event.at) <= 1.0 + 1e-9 {
+                pre += 1;
+            } else {
+                post += 1;
+            }
+        }
+    }
+    (pre, post)
+}
+
+/// Shard-level delivered-quality proxy (analytic delivered mAP): each
+/// processed frame contributes its stream's ladder-rung quality at the
+/// time it was served — the rung timeline reconstructed from the routed
+/// `SwapModel` audit events (rung 0 until the first swap) — and every
+/// dropped frame contributes zero. Frame-weighted over all arrivals.
+pub fn delivered_quality(report: &ShardReport, ladder: &ModelLadder) -> f64 {
+    let end = report.makespan();
+    let mut total = 0.0;
+    let mut frames = 0u64;
+    for (i, s) in report.streams.iter().enumerate() {
+        let mut swaps: Vec<(f64, usize)> = report
+            .control_log
+            .iter()
+            .filter_map(|c| match c.event.as_action() {
+                Some(ControlAction::SwapModel { stream, rung }) if *stream == i => {
+                    Some((c.event.at, *rung))
+                }
+                _ => None,
+            })
+            .collect();
+        swaps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        // Time-weighted mean rung quality stands in for frame-weighted:
+        // the per-epoch frame quota tracks the offered rate, so epochs
+        // weigh in proportion to the frames they served.
+        let mean_q = if end > 0.0 {
+            let mut q_time = 0.0;
+            let mut t_prev = 0.0;
+            let mut rung = 0usize;
+            for (t, r) in swaps {
+                q_time += ladder.quality(rung) * (t.min(end) - t_prev).max(0.0);
+                t_prev = t.min(end);
+                rung = r;
+            }
+            q_time += ladder.quality(rung) * (end - t_prev).max(0.0);
+            q_time / end
+        } else {
+            ladder.quality(0)
+        };
+        total += mean_q * s.frames_processed as f64;
+        frames += s.frames_total;
+    }
+    if frames == 0 {
+        0.0
+    } else {
+        total / frames as f64
+    }
+}
+
+/// One mode × runner cell of the diurnal acceptance sweep.
+#[derive(Debug, Clone)]
+pub struct DiurnalOutcome {
+    /// "reactive" or "fused".
+    pub mode: &'static str,
+    /// "inproc" or "tcp".
+    pub runner: &'static str,
+    pub migrations: usize,
+    pub scale_actions: usize,
+    /// Device attaches inside a low phase (provisioned ahead of the ramp).
+    pub pre_ramp_attaches: usize,
+    /// Device attaches inside a high phase (reactive repair).
+    pub post_step_attaches: usize,
+    pub worst_p99: f64,
+    pub drop_rate: f64,
+    /// Analytic delivered-mAP proxy ([`delivered_quality`]).
+    pub delivered_quality: f64,
+    /// Forecast-Σλ slots that rode gossip digests (0 in reactive mode).
+    pub forecast_digests: usize,
+}
+
+fn diurnal_outcome(
+    mode: &'static str,
+    runner: &'static str,
+    report: &ShardReport,
+    ladder: &ModelLadder,
+) -> DiurnalOutcome {
+    let (pre, post) = attach_phases(report);
+    DiurnalOutcome {
+        mode,
+        runner,
+        migrations: report.migrations,
+        scale_actions: report.scale_actions(),
+        pre_ramp_attaches: pre,
+        post_step_attaches: post,
+        worst_p99: report.worst_p99(),
+        drop_rate: report.drop_rate(),
+        delivered_quality: delivered_quality(report, ladder),
+        forecast_digests: report.forecast_trace.len(),
+    }
+}
+
+/// The diurnal acceptance sweep: reactive vs fused, each in the
+/// in-process co-simulation and over loopback TCP (four runs). The
+/// fused cells must place their first attach of a cycle *before* the
+/// ramp once the shape is learned; the reactive cells never can.
+pub fn diurnal_sweep(seed: u64) -> (Table, Vec<DiurnalOutcome>) {
+    let ladder = ModelLadder::from_profiles("eth_sunnyday");
+    let mut t = Table::new(
+        "Diurnal ramp (Σλ 8.4 → 16.8 FPS): reactive vs forecast-fused control",
+        &[
+            "mode", "runner", "migrations", "scale actions", "pre-ramp attach",
+            "post-step attach", "worst p99 (s)", "drop %", "delivered mAP*",
+        ],
+    );
+    let mut outcomes = Vec::new();
+    for (mode, fused) in [("reactive", false), ("fused", true)] {
+        let scenario = diurnal_scenario(seed, fused);
+        for (runner, report) in [
+            ("inproc", run_sharded(&scenario)),
+            (
+                "tcp",
+                run_sharded_remote(&scenario, RemoteTransport::Tcp)
+                    .expect("loopback TCP forecast co-simulation"),
+            ),
+        ] {
+            let o = diurnal_outcome(mode, runner, &report, &ladder);
+            t.row(vec![
+                o.mode.to_string(),
+                o.runner.to_string(),
+                format!("{}", o.migrations),
+                format!("{}", o.scale_actions),
+                format!("{}", o.pre_ramp_attaches),
+                format!("{}", o.post_step_attaches),
+                f(o.worst_p99, 2),
+                f(o.drop_rate * 100.0, 1),
+                f(o.delivered_quality * 100.0, 1),
+            ]);
+            outcomes.push(o);
+        }
+    }
+    (t, outcomes)
+}
+
+/// Provisioning cost per device slot in the deployment score: quality
+/// points a deployment must earn back per device per shard, so the
+/// search does not trivially recommend the biggest pool.
+pub const SEARCH_DEVICE_COST: f64 = 0.012;
+/// Score penalty per completed migration (placement churn is not free).
+pub const SEARCH_MIGRATION_COST: f64 = 0.004;
+/// Epochs per search cell (five diurnal cycles — enough for the
+/// forecast to warm up and the deployment differences to show).
+pub const SEARCH_EPOCHS: usize = 20;
+
+/// The load scenarios the deployment space is searched under.
+pub const SEARCH_SCENARIOS: [&str; 2] = ["diurnal", "burst"];
+/// Devices per shard sweep.
+pub const SEARCH_DEVICES: [usize; 3] = [2, 3, 4];
+/// Autoscale p99-band sweep (seconds).
+pub const SEARCH_BANDS: [f64; 2] = [1.5, 3.0];
+
+/// Load shape per search scenario: "diurnal" is the acceptance ramp,
+/// "burst" a one-epoch ×2 spike per cycle — the transient the admission
+/// hold ([`crate::forecast::should_hold`]) is designed to ride out.
+pub fn search_profile(scenario: &str) -> RateProfile {
+    match scenario {
+        "burst" => RateProfile::new(DIURNAL_CYCLE, vec![1.0, 1.0, 1.0, DIURNAL_PEAK_MULT]),
+        _ => diurnal_profile(),
+    }
+}
+
+/// One evaluated deployment cell.
+#[derive(Debug, Clone)]
+pub struct SearchPoint {
+    pub scenario: &'static str,
+    pub devices_per_shard: usize,
+    /// Ladder preset name, "none" for device-only scaling.
+    pub ladder: &'static str,
+    pub policy: &'static str,
+    /// Autoscale p99 bound (seconds) — the band dimension.
+    pub band: f64,
+    pub migrations: usize,
+    pub scale_actions: usize,
+    pub worst_p99: f64,
+    pub drop_rate: f64,
+    pub delivered_quality: f64,
+    /// `delivered_quality − SEARCH_DEVICE_COST·n − SEARCH_MIGRATION_COST·migrations`.
+    pub score: f64,
+}
+
+fn search_cell(
+    seed: u64,
+    scenario: &'static str,
+    devices: usize,
+    ladder_name: &'static str,
+    ladder: Option<&ModelLadder>,
+    policy: PlacementPolicy,
+    policy_name: &'static str,
+    band: f64,
+) -> SearchPoint {
+    let profile = search_profile(scenario);
+    let streams: Vec<StreamSpec> = (0..DIURNAL_CAMS)
+        .map(|i| {
+            StreamSpec::new(&format!("cam{i}"), DIURNAL_BASE_FPS, 400)
+                .with_window(4)
+                .with_profile(profile.clone())
+        })
+        .collect();
+    let mut cfg = AutoscaleConfig {
+        p99_bound: band,
+        device_rate: 2.5,
+        max_devices: devices * 2,
+        cooldown: 2.0,
+        ..AutoscaleConfig::default()
+    };
+    if let Some(l) = ladder {
+        cfg = cfg.with_ladder(l.clone());
+    }
+    // Ladder cells degrade by model swap at admission time; the others
+    // keep the default stride degradation.
+    let admission = cfg.admission();
+    let scenario_built =
+        ShardScenario::builder(vec![pool_of(devices, 2.5), pool_of(devices, 2.5)], streams)
+            .policy(policy)
+            .admission(admission)
+            .gossip(FORECAST_GOSSIP)
+            .epochs(SEARCH_EPOCHS)
+            .seed(seed)
+            .autoscale(cfg)
+            .forecast(forecast_tuning())
+            .build();
+    let report = run_sharded(&scenario_built);
+    let reference = ModelLadder::from_profiles("eth_sunnyday");
+    let quality = delivered_quality(&report, ladder.unwrap_or(&reference));
+    let score = quality
+        - SEARCH_DEVICE_COST * devices as f64
+        - SEARCH_MIGRATION_COST * report.migrations as f64;
+    SearchPoint {
+        scenario,
+        devices_per_shard: devices,
+        ladder: ladder_name,
+        policy: policy_name,
+        band,
+        migrations: report.migrations,
+        scale_actions: report.scale_actions(),
+        worst_p99: report.worst_p99(),
+        drop_rate: report.drop_rate(),
+        delivered_quality: quality,
+        score,
+    }
+}
+
+/// The full deployment-space search: every (n, ladder, policy, band)
+/// cell under every load scenario, scored in virtual time. Returns the
+/// table of per-scenario recommendations plus every evaluated cell.
+pub fn deployment_search(seed: u64) -> (Table, Vec<SearchPoint>) {
+    let eth = ModelLadder::from_profiles("eth_sunnyday");
+    let ladders: [(&'static str, Option<&ModelLadder>); 2] =
+        [("none", None), ("eth_sunnyday", Some(&eth))];
+    let policies = [
+        (PlacementPolicy::LeastLoaded, "least-loaded"),
+        (PlacementPolicy::RoundRobin, "round-robin"),
+        (PlacementPolicy::Hash, "hash"),
+    ];
+    let mut points = Vec::new();
+    for &scenario in &SEARCH_SCENARIOS {
+        for &devices in &SEARCH_DEVICES {
+            for &(ladder_name, ladder) in &ladders {
+                for &(policy, policy_name) in &policies {
+                    for &band in &SEARCH_BANDS {
+                        points.push(search_cell(
+                            seed, scenario, devices, ladder_name, ladder, policy,
+                            policy_name, band,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    let mut t = Table::new(
+        "Deployment-space search (n × ladder × policy × band), forecast-fused",
+        &[
+            "scenario", "cells", "best n/shard", "ladder", "policy", "band (s)",
+            "delivered mAP*", "score",
+        ],
+    );
+    for &scenario in &SEARCH_SCENARIOS {
+        let best = recommended(&points, scenario).expect("non-empty grid");
+        let cells = points.iter().filter(|p| p.scenario == scenario).count();
+        t.row(vec![
+            scenario.to_string(),
+            format!("{cells}"),
+            format!("{}", best.devices_per_shard),
+            best.ladder.to_string(),
+            best.policy.to_string(),
+            f(best.band, 1),
+            f(best.delivered_quality * 100.0, 1),
+            f(best.score, 3),
+        ]);
+    }
+    (t, points)
+}
+
+/// The recommended cell for one scenario: highest score, ties broken by
+/// grid order (fewest devices first — the grid ascends in n), so the
+/// recommendation is deterministic for a deterministic engine.
+pub fn recommended<'a>(points: &'a [SearchPoint], scenario: &str) -> Option<&'a SearchPoint> {
+    let mut best: Option<&SearchPoint> = None;
+    for p in points.iter().filter(|p| p.scenario == scenario) {
+        match best {
+            None => best = Some(p),
+            Some(b) if p.score > b.score + 1e-12 => best = Some(p),
+            Some(_) => {}
+        }
+    }
+    best
+}
+
+fn outcome_json(o: &DiurnalOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("mode".into(), Json::Str(o.mode.to_string()));
+    m.insert("runner".into(), Json::Str(o.runner.to_string()));
+    m.insert("migrations".into(), Json::Num(o.migrations as f64));
+    m.insert("scale_actions".into(), Json::Num(o.scale_actions as f64));
+    m.insert("pre_ramp_attaches".into(), Json::Num(o.pre_ramp_attaches as f64));
+    m.insert("post_step_attaches".into(), Json::Num(o.post_step_attaches as f64));
+    m.insert("worst_p99".into(), Json::Num(o.worst_p99));
+    m.insert("drop_rate".into(), Json::Num(o.drop_rate));
+    m.insert("delivered_quality".into(), Json::Num(o.delivered_quality));
+    m.insert("forecast_digests".into(), Json::Num(o.forecast_digests as f64));
+    Json::Obj(m)
+}
+
+fn point_json(p: &SearchPoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("scenario".into(), Json::Str(p.scenario.to_string()));
+    m.insert("devices_per_shard".into(), Json::Num(p.devices_per_shard as f64));
+    m.insert("ladder".into(), Json::Str(p.ladder.to_string()));
+    m.insert("policy".into(), Json::Str(p.policy.to_string()));
+    m.insert("band".into(), Json::Num(p.band));
+    m.insert("migrations".into(), Json::Num(p.migrations as f64));
+    m.insert("scale_actions".into(), Json::Num(p.scale_actions as f64));
+    m.insert("worst_p99".into(), Json::Num(p.worst_p99));
+    m.insert("drop_rate".into(), Json::Num(p.drop_rate));
+    m.insert("delivered_quality".into(), Json::Num(p.delivered_quality));
+    m.insert("score".into(), Json::Num(p.score));
+    m.insert("forecast".into(), forecast_config_to_json(&forecast_tuning()));
+    Json::Obj(m)
+}
+
+/// Machine-readable bundle (the `eva forecast --json` surface; CI
+/// uploads it as `BENCH_forecast.json`): the diurnal acceptance sweep,
+/// every evaluated deployment cell, and the per-scenario recommended
+/// configs.
+pub fn forecast_json(seed: u64) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("seed".into(), Json::Num(seed as f64));
+    let (_, diurnal) = diurnal_sweep(seed);
+    root.insert("diurnal".into(), Json::Arr(diurnal.iter().map(outcome_json).collect()));
+    let (_, points) = deployment_search(seed);
+    root.insert("search".into(), Json::Arr(points.iter().map(point_json).collect()));
+    let mut rec = BTreeMap::new();
+    for &scenario in &SEARCH_SCENARIOS {
+        if let Some(best) = recommended(&points, scenario) {
+            rec.insert(scenario.to_string(), point_json(best));
+        }
+    }
+    root.insert("recommended".into(), Json::Obj(rec));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance criterion, both runners in one sweep: fused
+    /// control pre-provisions ahead of the ramp, never does worse than
+    /// reactive on migrations, and at least matches it on the delivered
+    /// quality proxy — while the tcp runner mirrors every counter of
+    /// the in-process one exactly (the forecast path keeps the
+    /// cross-transport parity contract).
+    #[test]
+    fn diurnal_fused_control_pre_provisions_and_beats_reactive() {
+        let (_, outcomes) = diurnal_sweep(29);
+        assert_eq!(outcomes.len(), 4);
+        let get = |mode: &str, runner: &str| {
+            outcomes
+                .iter()
+                .find(|o| o.mode == mode && o.runner == runner)
+                .expect("sweep cell")
+        };
+        let reactive = get("reactive", "inproc");
+        let fused = get("fused", "inproc");
+        // The day shape must actually bite: reactive control pays at
+        // least one post-step repair attach and publishes no forecasts.
+        assert!(reactive.post_step_attaches >= 1, "{reactive:?}");
+        assert_eq!(reactive.forecast_digests, 0, "{reactive:?}");
+        // Fused control provisions ahead of the ramp (an attach inside
+        // a low phase — reactive control has no signal that can do
+        // that) once the seasonal shape is learned.
+        assert!(fused.forecast_digests >= 1, "{fused:?}");
+        assert!(
+            fused.pre_ramp_attaches > reactive.pre_ramp_attaches,
+            "fused {fused:?} vs reactive {reactive:?}"
+        );
+        // No worse on migrations, no worse on delivered quality, and no
+        // post-step p99 spike beyond what reactive control pays.
+        assert!(
+            fused.migrations <= reactive.migrations,
+            "fused {} vs reactive {}",
+            fused.migrations,
+            reactive.migrations
+        );
+        assert!(
+            fused.delivered_quality >= reactive.delivered_quality - 1e-9,
+            "fused {:.4} vs reactive {:.4}",
+            fused.delivered_quality,
+            reactive.delivered_quality
+        );
+        assert!(
+            fused.worst_p99 <= reactive.worst_p99 + 1e-9,
+            "fused p99 {:.3} vs reactive {:.3}",
+            fused.worst_p99,
+            reactive.worst_p99
+        );
+        // Both runners agree exactly, per mode — the parity contract.
+        for mode in ["reactive", "fused"] {
+            let a = get(mode, "inproc");
+            let b = get(mode, "tcp");
+            assert_eq!(a.migrations, b.migrations, "{mode}");
+            assert_eq!(a.scale_actions, b.scale_actions, "{mode}");
+            assert_eq!(a.pre_ramp_attaches, b.pre_ramp_attaches, "{mode}");
+            assert_eq!(a.post_step_attaches, b.post_step_attaches, "{mode}");
+            assert_eq!(a.forecast_digests, b.forecast_digests, "{mode}");
+            assert!((a.drop_rate - b.drop_rate).abs() < 1e-12, "{mode}");
+            assert!(
+                (a.delivered_quality - b.delivered_quality).abs() < 1e-12,
+                "{mode}"
+            );
+        }
+    }
+
+    #[test]
+    fn deployment_search_covers_the_grid_and_recommends_a_best_cell() {
+        let (_, points) = deployment_search(31);
+        let per_scenario =
+            SEARCH_DEVICES.len() * 2 /* ladders */ * 3 /* policies */ * SEARCH_BANDS.len();
+        assert_eq!(points.len(), SEARCH_SCENARIOS.len() * per_scenario);
+        for &scenario in &SEARCH_SCENARIOS {
+            let best = recommended(&points, scenario).expect("recommendation");
+            assert_eq!(best.scenario, scenario);
+            // The recommendation is the argmax of its scenario's cells.
+            for p in points.iter().filter(|p| p.scenario == scenario) {
+                assert!(
+                    best.score >= p.score - 1e-12,
+                    "{scenario}: {best:?} not best vs {p:?}"
+                );
+            }
+            // And it must be a deployment that actually delivers.
+            assert!(best.delivered_quality > 0.0, "{best:?}");
+        }
+    }
+
+    #[test]
+    fn forecast_json_bundle_reparses() {
+        let j = forecast_json(11);
+        let back = Json::parse(&j.to_string()).expect("forecast JSON must reparse");
+        assert_eq!(back.get("seed").and_then(Json::as_i64), Some(11));
+        assert_eq!(back.get("diurnal").unwrap().as_arr().unwrap().len(), 4);
+        let search = back.get("search").unwrap().as_arr().unwrap();
+        assert!(!search.is_empty());
+        let rec = back.get("recommended").unwrap();
+        for scenario in SEARCH_SCENARIOS {
+            let r = rec.get(scenario).expect("per-scenario recommendation");
+            assert!(r.get("devices_per_shard").and_then(Json::as_i64).is_some());
+            assert!(r.get("forecast").and_then(|f| f.get("period")).is_some());
+        }
+    }
+}

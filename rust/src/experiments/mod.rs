@@ -17,6 +17,7 @@ pub mod lang;
 pub mod energy;
 pub mod dropping;
 pub mod fleet;
+pub mod forecast;
 pub mod gate;
 pub mod scale;
 pub mod shard;

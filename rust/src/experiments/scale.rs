@@ -108,6 +108,7 @@ fn synthetic_fleet(
             alive: true,
             capacity,
             committed,
+            forecast: None,
         });
     }
     (views, residents)
@@ -126,6 +127,7 @@ fn digest_payload_bytes(views: &[ShardView], at: f64, codec: Codec) -> usize {
                 at,
                 capacity: v.capacity,
                 committed: v.committed,
+                forecast: None,
             };
             match codec {
                 Codec::Json => msg.encode().len(),
@@ -154,6 +156,7 @@ fn delta_stream_bytes(
                 at: 0.0,
                 capacity: v.capacity,
                 committed: v.committed,
+                forecast: None,
             })
         })
         .collect();

@@ -364,6 +364,7 @@ fn custom_scenario(
     codec: Codec,
     groups: Option<usize>,
     token: Option<String>,
+    forecast: Option<crate::forecast::ForecastConfig>,
 ) -> ShardScenario {
     let longest = streams.iter().map(|s| s.duration()).fold(0.0, f64::max);
     let epochs = ((longest / gossip.max(1e-3)).ceil() as usize).max(1) + 1;
@@ -386,6 +387,9 @@ fn custom_scenario(
     if let Some(t) = &token {
         builder = builder.token(t);
     }
+    if let Some(cfg) = forecast {
+        builder = builder.forecast(cfg);
+    }
     builder.build()
 }
 
@@ -406,10 +410,11 @@ pub fn custom_run(
     telemetry: bool,
     codec: Codec,
     groups: Option<usize>,
+    forecast: Option<crate::forecast::ForecastConfig>,
 ) -> ShardReport {
     run_sharded(&custom_scenario(
         shards, streams, policy, admission, gossip, seed, autoscale, telemetry, codec, groups,
-        None,
+        None, forecast,
     ))
 }
 
@@ -431,12 +436,13 @@ pub fn custom_run_remote(
     codec: Codec,
     groups: Option<usize>,
     token: Option<String>,
+    forecast: Option<crate::forecast::ForecastConfig>,
     transport: crate::shard::remote::RemoteTransport,
 ) -> anyhow::Result<ShardReport> {
     crate::shard::remote::run_sharded_remote(
         &custom_scenario(
             shards, streams, policy, admission, gossip, seed, autoscale, telemetry, codec, groups,
-            token,
+            token, forecast,
         ),
         transport,
     )

@@ -65,6 +65,16 @@ pub struct AdmissionPolicy {
     pub mode: AdmissionMode,
     /// How unsatisfied streams trade demand for their share.
     pub degrade: DegradeMode,
+    /// Forecast-armed burst hold: while true, a stream whose fair share
+    /// falls short is admitted at full rate anyway instead of being
+    /// degraded — the queue absorbs the transient. The shard runner arms
+    /// this per gossip epoch only when a tight forecast says the burst
+    /// clears within its hold window ([`crate::forecast::should_hold`]);
+    /// it is runtime state, never serialised, and rejection of joining
+    /// candidates is unaffected. Degrade/restore churn costs a model
+    /// swap or stride change *twice* for a burst that was going to clear
+    /// anyway; holding costs a bounded latency bump.
+    pub hold: bool,
 }
 
 impl Default for AdmissionPolicy {
@@ -74,6 +84,7 @@ impl Default for AdmissionPolicy {
             min_rate: 1.0,
             mode: AdmissionMode::Enforce,
             degrade: DegradeMode::Stride,
+            hold: false,
         }
     }
 }
@@ -147,6 +158,12 @@ impl AdmissionPolicy {
     /// (cheapest sufficient rung), stride as the last resort.
     fn level(&self, share: f64, demand: f64) -> Decision {
         if share + 1e-9 >= demand {
+            return Decision::Admit { share };
+        }
+        if self.hold {
+            // Burst hold: the forecast says this overload clears within
+            // a window, so keep the stream at full rate rather than
+            // paying the degrade-then-restore round trip.
             return Decision::Admit { share };
         }
         match &self.degrade {
@@ -569,6 +586,30 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn hold_admits_full_rate_but_still_rejects_starved_candidates() {
+        let p = AdmissionPolicy {
+            hold: true,
+            ..AdmissionPolicy::default()
+        };
+        // Contention that would normally stride to 1/2: held at full
+        // rate instead.
+        let d = p.decide(10.0, &[(5.0, 1.0), (5.0, 1.0)], (5.0, 1.0));
+        assert!(matches!(d, Decision::Admit { .. }), "{d:?}");
+        // Running streams are held too.
+        for d in p.rebalance(10.0, &[(5.0, 1.0); 4]) {
+            assert!(matches!(d, Decision::Admit { .. }), "{d:?}");
+        }
+        // The reject path is untouched: a candidate whose share falls
+        // below min_rate still never joins mid-burst.
+        let admitted: Vec<(f64, f64)> = (0..9).map(|_| (5.0, 1.0)).collect();
+        assert_eq!(p.decide(10.0, &admitted, (5.0, 1.0)), Decision::Reject);
+        // Disarming restores the reactive stride immediately.
+        let p = AdmissionPolicy { hold: false, ..p };
+        let d = p.decide(10.0, &[(5.0, 1.0), (5.0, 1.0)], (5.0, 1.0));
+        assert!(matches!(d, Decision::Degrade { stride: 2, .. }), "{d:?}");
     }
 
     #[test]

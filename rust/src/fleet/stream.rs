@@ -18,6 +18,41 @@ use crate::util::stats::Percentiles;
 /// Stream identifier within one fleet run (index into the registry).
 pub type StreamId = usize;
 
+/// A periodic rate shape over a stream's base λ: a piecewise-constant
+/// multiplier cycling every `period` seconds (the diurnal pattern the
+/// forecast layer learns). Bucket `i` of `mults` covers fleet times
+/// `[i·period/len, (i+1)·period/len)` within each cycle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateProfile {
+    /// Cycle length in seconds (> 0).
+    pub period: f64,
+    /// Per-bucket rate multipliers (non-empty, each > 0).
+    pub mults: Vec<f64>,
+}
+
+impl RateProfile {
+    pub fn new(period: f64, mults: Vec<f64>) -> RateProfile {
+        assert!(
+            period.is_finite() && period > 0.0,
+            "rate profile period must be positive"
+        );
+        assert!(!mults.is_empty(), "rate profile needs at least one bucket");
+        assert!(
+            mults.iter().all(|&m| m.is_finite() && m > 0.0),
+            "rate profile multipliers must be positive"
+        );
+        RateProfile { period, mults }
+    }
+
+    /// Multiplier in effect at fleet time `t` (periodic; negative times
+    /// wrap like any other).
+    pub fn multiplier_at(&self, t: f64) -> f64 {
+        let phase = t.rem_euclid(self.period) / self.period;
+        let idx = ((phase * self.mults.len() as f64) as usize).min(self.mults.len() - 1);
+        self.mults[idx]
+    }
+}
+
 /// Static description of one stream joining the fleet.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StreamSpec {
@@ -31,6 +66,10 @@ pub struct StreamSpec {
     /// Freshness window (≥ 1): max unclaimed frames held before the
     /// oldest is dropped.
     pub window: usize,
+    /// Optional periodic rate shape: the instantaneous offered rate is
+    /// `fps × profile.multiplier_at(t)`. `None` means flat λ (every
+    /// pre-profile behaviour is unchanged).
+    pub profile: Option<RateProfile>,
 }
 
 impl StreamSpec {
@@ -42,6 +81,7 @@ impl StreamSpec {
             num_frames,
             weight: 1.0,
             window: 4,
+            profile: None,
         }
     }
 
@@ -56,6 +96,11 @@ impl StreamSpec {
         self
     }
 
+    pub fn with_profile(mut self, profile: RateProfile) -> StreamSpec {
+        self.profile = Some(profile);
+        self
+    }
+
     /// Nominal stream duration in seconds.
     pub fn duration(&self) -> Seconds {
         self.num_frames as f64 / self.fps
@@ -64,6 +109,21 @@ impl StreamSpec {
     /// Offered load (what admission accounts the stream at).
     pub fn demand(&self) -> f64 {
         self.fps
+    }
+
+    /// Instantaneous offered rate at fleet time `t` (the profiled λ;
+    /// equals `fps` for flat streams).
+    pub fn rate_at(&self, t: Seconds) -> f64 {
+        match &self.profile {
+            Some(p) => self.fps * p.multiplier_at(t),
+            None => self.fps,
+        }
+    }
+
+    /// Offered load at fleet time `t` (what time-aware admission and
+    /// gossip digests account the stream at).
+    pub fn demand_at(&self, t: Seconds) -> f64 {
+        self.rate_at(t)
     }
 }
 
@@ -193,6 +253,26 @@ mod tests {
 
     fn state(decision: Decision) -> StreamState {
         StreamState::new(0, StreamSpec::new("s", 10.0, 100), decision, 2.0, 3)
+    }
+
+    #[test]
+    fn rate_profile_cycles_and_flat_streams_are_unchanged() {
+        let flat = StreamSpec::new("flat", 10.0, 100);
+        assert_eq!(flat.rate_at(0.0), 10.0);
+        assert_eq!(flat.rate_at(1e6), 10.0);
+        assert_eq!(flat.demand_at(3.0), flat.demand());
+
+        // 40-second cycle, four 10-second buckets: night/morning/peak/evening.
+        let p = RateProfile::new(40.0, vec![0.5, 1.0, 2.0, 1.0]);
+        let s = StreamSpec::new("diurnal", 10.0, 100).with_profile(p);
+        assert!((s.rate_at(0.0) - 5.0).abs() < 1e-12);
+        assert!((s.rate_at(12.0) - 10.0).abs() < 1e-12);
+        assert!((s.rate_at(25.0) - 20.0).abs() < 1e-12);
+        assert!((s.rate_at(39.9) - 10.0).abs() < 1e-12);
+        // Periodic: one full cycle later the same bucket applies.
+        assert!((s.rate_at(65.0) - s.rate_at(25.0)).abs() < 1e-12);
+        // Base demand (admission's static view) stays the declared fps.
+        assert_eq!(s.demand(), 10.0);
     }
 
     #[test]

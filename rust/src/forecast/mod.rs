@@ -1,0 +1,466 @@
+//! Per-stream λ forecasting: one predicted Σλ signal shared by all three
+//! control loops (ROADMAP item 4).
+//!
+//! Every control loop in the stack — admission, per-shard autoscale, and
+//! the migration planner — reacts to *committed* Σλ after the
+//! arrival-rate/processing-rate mismatch (§ III of the paper) has already
+//! cost dropped frames. This module builds the one forecast layer they
+//! all consume:
+//!
+//! * [`StreamForecaster`] — per-stream rate prediction from windowed
+//!   arrival observations: an EWMA level ([`crate::util::stats::Ewma`])
+//!   plus a seasonal decomposition that learns the diurnal shape from
+//!   repeated windows (per-phase EWMA of the deviation from the level).
+//!   Until one full seasonal period has been observed the seasonal term
+//!   is unavailable and the forecaster degrades to EWMA-only; with no
+//!   observations at all it predicts nothing.
+//! * [`ShardForecast`] — the per-shard aggregate over resident streams.
+//!   Both runners (the in-process co-simulation and the socket shard
+//!   server) drive the *same* container at the same point of the epoch
+//!   loop, so forecast-carrying digests stay bit-identical across
+//!   transports by construction.
+//! * Fusion verdicts — [`ShardForecast::digest_rate`] gates the digest
+//!   slot on a tight confidence band, [`should_hold`] decides when
+//!   admission rides out a transient burst, and the planner consumes the
+//!   slot through `ShardView::load`.
+//!
+//! The forecaster observes *realised* per-epoch arrival rates (the
+//! integer frame quotas the coordinator grants, divided by the tick), not
+//! the stream's declared profile — predictions are learned, never peeked.
+
+use std::collections::BTreeMap;
+
+use crate::control::wire::{req_f64, req_usize, WireError};
+use crate::util::json::Json;
+use crate::util::stats::{Ewma, Running};
+
+/// Tuning for the forecast layer. Rides the session handshake (an
+/// optional [`crate::control::SessionCaps`] field) so remote shards run
+/// exactly the coordinator's parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastConfig {
+    /// EWMA weight of the newest window on the level term.
+    pub alpha: f64,
+    /// EWMA weight of the newest deviation on each seasonal bucket.
+    pub season_alpha: f64,
+    /// Seasonal cycle length in epochs (buckets of the diurnal shape).
+    /// 0 disables the seasonal term entirely (pure EWMA).
+    pub period: usize,
+    /// How many epochs ahead the published prediction looks.
+    pub horizon: usize,
+    /// Confidence gate: a forecast is *tight* (trusted by the fused
+    /// control loops) when its residual band is within this fraction of
+    /// the predicted rate.
+    pub band: f64,
+    /// Admission hold window: a burst the forecast says clears within
+    /// this many epochs is ridden out instead of degraded.
+    pub hold_window: usize,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> ForecastConfig {
+        ForecastConfig {
+            alpha: 0.4,
+            season_alpha: 0.3,
+            period: 12,
+            horizon: 1,
+            band: 0.2,
+            hold_window: 2,
+        }
+    }
+}
+
+/// Serialise a forecast configuration (full-field, like the autoscale
+/// config codec: the handshake carries exactly the coordinator's tuning).
+pub fn forecast_config_to_json(cfg: &ForecastConfig) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("alpha".to_string(), Json::Num(cfg.alpha));
+    o.insert("season_alpha".to_string(), Json::Num(cfg.season_alpha));
+    o.insert("period".to_string(), Json::Num(cfg.period as f64));
+    o.insert("horizon".to_string(), Json::Num(cfg.horizon as f64));
+    o.insert("band".to_string(), Json::Num(cfg.band));
+    o.insert("hold_window".to_string(), Json::Num(cfg.hold_window as f64));
+    Json::Obj(o)
+}
+
+pub fn forecast_config_from_json(v: &Json) -> Result<ForecastConfig, WireError> {
+    let alpha = req_f64(v, "alpha")?;
+    if !alpha.is_finite() || alpha <= 0.0 || alpha > 1.0 {
+        return Err(WireError::new("forecast alpha must be in (0, 1]"));
+    }
+    let season_alpha = req_f64(v, "season_alpha")?;
+    if !season_alpha.is_finite() || season_alpha <= 0.0 || season_alpha > 1.0 {
+        return Err(WireError::new("forecast season_alpha must be in (0, 1]"));
+    }
+    let band = req_f64(v, "band")?;
+    if !band.is_finite() || band < 0.0 {
+        return Err(WireError::new("forecast band must be >= 0"));
+    }
+    Ok(ForecastConfig {
+        alpha,
+        season_alpha,
+        period: req_usize(v, "period")?,
+        horizon: req_usize(v, "horizon")?,
+        band,
+        hold_window: req_usize(v, "hold_window")?,
+    })
+}
+
+/// One prediction: the expected rate at the configured horizon plus the
+/// one-step residual band around it (infinite until enough prediction
+/// errors have been scored to estimate it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Forecast {
+    pub rate: f64,
+    pub band: f64,
+}
+
+impl Forecast {
+    /// Is the band tight enough for the fused control loops to act on?
+    pub fn is_tight(&self, cfg: &ForecastConfig) -> bool {
+        self.band.is_finite() && self.band <= cfg.band * self.rate.max(1.0)
+    }
+}
+
+/// EWMA + seasonal-decomposition predictor for one stream's arrival rate.
+#[derive(Debug, Clone)]
+pub struct StreamForecaster {
+    cfg: ForecastConfig,
+    level: Ewma,
+    /// Per-phase EWMA of `observation - level` (the learned shape).
+    season: Vec<Ewma>,
+    /// One-step-ahead prediction errors (band estimate).
+    residual: Running,
+    /// Windows observed so far; also the phase clock.
+    ticks: usize,
+}
+
+impl StreamForecaster {
+    pub fn new(cfg: ForecastConfig) -> StreamForecaster {
+        let season = (0..cfg.period)
+            .map(|_| Ewma::new(cfg.season_alpha))
+            .collect();
+        StreamForecaster {
+            level: Ewma::new(cfg.alpha),
+            season,
+            residual: Running::new(),
+            cfg,
+            ticks: 0,
+        }
+    }
+
+    /// Has at least one full seasonal cycle been observed? Before that
+    /// the forecaster is EWMA-only.
+    pub fn seasonal_ready(&self) -> bool {
+        self.cfg.period > 0 && self.ticks >= self.cfg.period
+    }
+
+    /// Windows observed so far.
+    pub fn observations(&self) -> usize {
+        self.ticks
+    }
+
+    /// Prediction for phase-clock tick `tick`, or `None` before any
+    /// observation.
+    fn predict_at(&self, tick: usize) -> Option<f64> {
+        let level = self.level.get()?;
+        let seasonal = if self.seasonal_ready() {
+            self.season[tick % self.cfg.period].get_or(0.0)
+        } else {
+            0.0
+        };
+        Some((level + seasonal).max(0.0))
+    }
+
+    /// Feed one windowed arrival-rate observation (frames/second over
+    /// the epoch just served).
+    pub fn observe(&mut self, rate: f64) {
+        // Score the prediction this observation falsifies *before*
+        // absorbing it, so the band measures genuine forecast error.
+        if let Some(predicted) = self.predict_at(self.ticks) {
+            self.residual.push(rate - predicted);
+        }
+        self.level.push(rate);
+        if self.cfg.period > 0 {
+            let level = self.level.get_or(rate);
+            self.season[self.ticks % self.cfg.period].push(rate - level);
+        }
+        self.ticks += 1;
+    }
+
+    /// Predicted rate `cfg.horizon` epochs ahead, or `None` on an empty
+    /// window (nothing observed yet).
+    pub fn forecast(&self) -> Option<Forecast> {
+        let rate = self.predict_at(self.ticks + self.cfg.horizon.saturating_sub(1))?;
+        let band = if self.residual.count() >= 2 {
+            // Symmetric ~95% band from the scored one-step errors.
+            2.0 * self.residual.std() + self.residual.mean().abs()
+        } else {
+            f64::INFINITY
+        };
+        Some(Forecast { rate, band })
+    }
+}
+
+/// Per-shard forecast state: one [`StreamForecaster`] per resident
+/// stream, keyed by global stream id, aggregated into the shard's
+/// forecast-Σλ digest slot.
+#[derive(Debug, Clone)]
+pub struct ShardForecast {
+    cfg: ForecastConfig,
+    streams: BTreeMap<usize, StreamForecaster>,
+}
+
+impl ShardForecast {
+    pub fn new(cfg: ForecastConfig) -> ShardForecast {
+        ShardForecast {
+            cfg,
+            streams: BTreeMap::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &ForecastConfig {
+        &self.cfg
+    }
+
+    /// Feed one stream's realised rate for the epoch just served. A
+    /// newly resident stream gets a fresh forecaster (migrated streams
+    /// re-learn on the target; state is shard-local by design).
+    pub fn observe(&mut self, stream: usize, rate: f64) {
+        self.streams
+            .entry(stream)
+            .or_insert_with(|| StreamForecaster::new(self.cfg.clone()))
+            .observe(rate);
+    }
+
+    /// Drop state for a stream that left the shard.
+    pub fn detach(&mut self, stream: usize) {
+        self.streams.remove(&stream);
+    }
+
+    /// Keep only streams still resident (bulk sweep after migrations).
+    pub fn retain_streams<F: FnMut(usize) -> bool>(&mut self, mut live: F) {
+        self.streams.retain(|&id, _| live(id));
+    }
+
+    /// Aggregate shard prediction: Σ of per-stream predicted rates, band
+    /// summed conservatively. `None` when no resident stream has
+    /// produced a prediction yet.
+    pub fn predict(&self) -> Option<Forecast> {
+        let mut rate = 0.0;
+        let mut band = 0.0;
+        let mut any = false;
+        for f in self.streams.values().filter_map(StreamForecaster::forecast) {
+            rate += f.rate;
+            band += f.band;
+            any = true;
+        }
+        if any {
+            Some(Forecast { rate, band })
+        } else {
+            None
+        }
+    }
+
+    /// The value published in the gossip digest's forecast slot: the
+    /// aggregate prediction *only when its band is tight* — consumers
+    /// (planner, group aggregates) may then use it unconditionally.
+    pub fn digest_rate(&self) -> Option<f64> {
+        self.predict()
+            .filter(|f| f.is_tight(&self.cfg))
+            .map(|f| f.rate)
+    }
+}
+
+/// Admission fusion verdict: hold (serve at current quality, let the
+/// freshness window absorb the burst) instead of degrading, when the
+/// shard is over-committed *now* but a tight forecast says the offered
+/// load falls back within capacity — i.e. the burst clears on its own
+/// within the hold window.
+pub fn should_hold(
+    cfg: &ForecastConfig,
+    committed: f64,
+    capacity: f64,
+    forecast: Option<&Forecast>,
+) -> bool {
+    if cfg.hold_window == 0 || committed <= capacity + 1e-9 {
+        return false;
+    }
+    match forecast {
+        Some(f) => f.is_tight(cfg) && f.rate <= capacity + 1e-9,
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn cfg(period: usize) -> ForecastConfig {
+        ForecastConfig { period, ..ForecastConfig::default() }
+    }
+
+    #[test]
+    fn empty_window_predicts_nothing() {
+        let f = StreamForecaster::new(cfg(8));
+        assert!(f.forecast().is_none());
+        let s = ShardForecast::new(cfg(8));
+        assert!(s.predict().is_none());
+        assert!(s.digest_rate().is_none());
+    }
+
+    #[test]
+    fn constant_rate_forecast_equals_committed_with_zero_band() {
+        // A constant-rate stream must forecast exactly its committed
+        // rate (zero fusion delta): the EWMA level locks to the rate and
+        // every seasonal bucket learns a zero deviation.
+        let mut f = StreamForecaster::new(cfg(4));
+        for _ in 0..20 {
+            f.observe(12.5);
+        }
+        let fc = f.forecast().expect("forecast after observations");
+        assert!((fc.rate - 12.5).abs() < 1e-12, "rate {}", fc.rate);
+        assert!(fc.band.abs() < 1e-12, "band {}", fc.band);
+        assert!(fc.is_tight(&cfg(4)));
+    }
+
+    #[test]
+    fn window_shorter_than_one_period_falls_back_to_ewma_only() {
+        // 3 observations against a 10-epoch period: the seasonal term
+        // must not fire; the prediction is the bare EWMA level.
+        let c = cfg(10);
+        let mut f = StreamForecaster::new(c.clone());
+        let mut level = None::<f64>;
+        for &x in &[4.0, 8.0, 6.0] {
+            f.observe(x);
+            level = Some(match level {
+                None => x,
+                Some(v) => c.alpha * x + (1.0 - c.alpha) * v,
+            });
+        }
+        assert!(!f.seasonal_ready());
+        let fc = f.forecast().expect("ewma-only forecast");
+        assert!((fc.rate - level.unwrap()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seasonal_shape_is_learned_from_repeated_windows() {
+        // A square diurnal wave (low, low, high, high) repeated: after a
+        // few cycles the phase-ahead prediction must sit much closer to
+        // the upcoming phase's rate than the flat EWMA level does.
+        let c = ForecastConfig { period: 4, horizon: 1, ..ForecastConfig::default() };
+        let shape = [5.0, 5.0, 15.0, 15.0];
+        let mut f = StreamForecaster::new(c);
+        for _cycle in 0..12 {
+            for &x in &shape {
+                f.observe(x);
+            }
+        }
+        // Next phase is 0 (rate 5.0).
+        let fc = f.forecast().expect("seasonal forecast");
+        assert!(
+            (fc.rate - 5.0).abs() < 2.0,
+            "phase-ahead prediction {} should approach 5.0",
+            fc.rate
+        );
+        // And mid-cycle the high phase is predicted high.
+        f.observe(5.0);
+        f.observe(5.0);
+        let fc = f.forecast().expect("seasonal forecast");
+        assert!(
+            fc.rate > 10.0,
+            "phase-ahead prediction {} should approach 15.0",
+            fc.rate
+        );
+    }
+
+    #[test]
+    fn band_stays_loose_until_predictions_score_well() {
+        let mut f = StreamForecaster::new(cfg(0));
+        f.observe(10.0);
+        let fc = f.forecast().unwrap();
+        assert!(fc.band.is_infinite());
+        assert!(!fc.is_tight(&cfg(0)));
+    }
+
+    #[test]
+    fn shard_aggregate_sums_resident_streams_and_detach_drops_state() {
+        let mut s = ShardForecast::new(cfg(0));
+        for _ in 0..8 {
+            s.observe(1, 4.0);
+            s.observe(2, 6.0);
+        }
+        let f = s.predict().expect("aggregate");
+        assert!((f.rate - 10.0).abs() < 1e-9);
+        assert_eq!(s.digest_rate().map(|r| r.round()), Some(10.0));
+        s.detach(2);
+        let f = s.predict().expect("aggregate");
+        assert!((f.rate - 4.0).abs() < 1e-9);
+        s.retain_streams(|_| false);
+        assert!(s.predict().is_none());
+    }
+
+    #[test]
+    fn hold_fires_only_for_tight_clearing_bursts() {
+        let c = cfg(0);
+        let clearing = Forecast { rate: 8.0, band: 0.1 };
+        let persistent = Forecast { rate: 14.0, band: 0.1 };
+        let loose = Forecast { rate: 8.0, band: f64::INFINITY };
+        // Over-committed now, tight forecast back under capacity: hold.
+        assert!(should_hold(&c, 12.0, 10.0, Some(&clearing)));
+        // Not over-committed: nothing to hold.
+        assert!(!should_hold(&c, 9.0, 10.0, Some(&clearing)));
+        // Forecast says the load persists: degrade as usual.
+        assert!(!should_hold(&c, 12.0, 10.0, Some(&persistent)));
+        // Loose band: never trusted.
+        assert!(!should_hold(&c, 12.0, 10.0, Some(&loose)));
+        assert!(!should_hold(&c, 12.0, 10.0, None));
+        // hold_window 0 disables the behaviour.
+        let off = ForecastConfig { hold_window: 0, ..c };
+        assert!(!should_hold(&off, 12.0, 10.0, Some(&clearing)));
+    }
+
+    #[test]
+    fn config_roundtrips_and_rejects_malformed() {
+        let cfg = ForecastConfig {
+            alpha: 0.25,
+            season_alpha: 0.5,
+            period: 6,
+            horizon: 2,
+            band: 0.35,
+            hold_window: 3,
+        };
+        let text = forecast_config_to_json(&cfg).to_string();
+        let back =
+            forecast_config_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(forecast_config_from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = forecast_config_to_json(&cfg);
+        if let Json::Obj(o) = &mut j {
+            o.insert("alpha".to_string(), Json::Num(1.5));
+        }
+        assert!(forecast_config_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn random_configs_survive_the_codec() {
+        check("forecast config roundtrip", Config::default(), |rng| {
+            let cfg = ForecastConfig {
+                alpha: rng.range(0.05, 1.0),
+                season_alpha: rng.range(0.05, 1.0),
+                period: rng.int_in(0, 24) as usize,
+                horizon: rng.int_in(0, 4) as usize,
+                band: rng.range(0.0, 1.0),
+                hold_window: rng.int_in(0, 6) as usize,
+            };
+            let text = forecast_config_to_json(&cfg).to_string();
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let back = forecast_config_from_json(&parsed).map_err(|e| e.to_string())?;
+            if back != cfg {
+                return Err(format!("decoded {back:?} != original {cfg:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -96,6 +96,17 @@
 //!   exactly, traces join against the replayable `EventLog` to
 //!   attribute latency to the control class that caused it, and remote
 //!   shards ship cumulative snapshots over the wire each epoch.
+//! * [`forecast`] — the predicted-Σλ layer over all three control
+//!   loops: per-stream EWMA + seasonal-decomposition rate forecasters
+//!   ([`util::stats::Ewma`] substrate) learn the diurnal shape from
+//!   repeated windows, aggregate per shard, and publish a
+//!   confidence-gated forecast-Σλ slot in the gossip digest (forward-
+//!   compatible in both codecs: legacy digests decode with the slot
+//!   absent). The migration planner places against
+//!   `max(committed, forecast)` so load sheds ahead of predicted
+//!   ramps, the per-shard autoscaler attaches ahead of the step when
+//!   the band is tight, and admission holds (rather than degrades)
+//!   transient bursts the forecast says will clear within a window.
 //! * [`experiments`] — table/figure reproduction drivers shared by the
 //!   bench binaries and the CLI. `experiments::scale` is the
 //!   coordinator-cost sweep: flat vs grouped planning reads, JSON vs
@@ -123,4 +134,5 @@ pub mod autoscale;
 pub mod shard;
 pub mod gate;
 pub mod telemetry;
+pub mod forecast;
 pub mod experiments;

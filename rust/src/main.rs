@@ -7,6 +7,7 @@
 //!   autoscale    closed-loop device scaling + model-ladder sweeps (step|diurnal|failure)
 //!   shard        stream sharding across fleet instances (split|skew|failure|autoscale|churn|run|transport|scale)
 //!   shard-server serve one shard on a real socket (--listen host:port|unix:<path>, --token auth)
+//!   forecast     forecast-fused control: diurnal pre-ramp sweep + deployment-space search
 //!   gate         motion-gated detection vs always-detect (lobby|highway|sports|all)
 //!   trace        end-to-end telemetry: p99 stage budgets, origin attribution, overhead
 //!   table        regenerate a paper table/figure (1,2,3,4,5,6,7,8,9,10,fig5,fig23)
@@ -56,6 +57,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "autoscale" => cmd_autoscale(args),
         "shard" => cmd_shard(args),
         "shard-server" => cmd_shard_server(args),
+        "forecast" => cmd_forecast(args),
         "gate" => cmd_gate(args),
         "trace" => cmd_trace(args),
         "table" => cmd_table(args),
@@ -234,6 +236,21 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_forecast(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    // Stdout on the --json path must be exactly one parseable document
+    // (CI uploads it as BENCH_forecast.json).
+    if args.flag("json") {
+        println!("{}", experiments::forecast::forecast_json(seed).to_string());
+        return Ok(());
+    }
+    let (t1, _) = experiments::forecast::diurnal_sweep(seed);
+    let (t2, _) = experiments::forecast::deployment_search(seed);
+    print!("{}", t1.render());
+    print!("{}", t2.render());
+    Ok(())
+}
+
 fn cmd_shard(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
     // `--scenario` is shared with `eva autoscale`, whose default is
@@ -274,6 +291,14 @@ fn cmd_shard(args: &Args) -> Result<()> {
     let token = args.get("token").map(str::to_string);
     if token.is_some() && (scenario != "run" || args.str_or("transport", "inproc") == "inproc") {
         bail!("--token applies to --scenario run with --transport tcp|uds (sessions to authenticate)");
+    }
+    // `--forecast` arms the per-stream arrival forecaster on the one-off
+    // run: the predicted Σλ rides every gossip digest and fuses into the
+    // migration planner, the autoscaler floor and the admission hold.
+    // The dedicated sweeps (`eva forecast`) arm it themselves.
+    let forecast = args.flag("forecast");
+    if forecast && scenario != "run" {
+        bail!("--forecast applies only to --scenario run (`eva forecast` runs the fused sweeps)");
     }
     // `--metrics-out` only applies to `--scenario run`: the sweeps run
     // many co-simulations, each with its own registry, so there is no
@@ -353,16 +378,18 @@ fn cmd_shard(args: &Args) -> Result<()> {
             max_devices: (rates.len() * 4).max(8),
             ..eva::autoscale::AutoscaleConfig::default()
         });
+        let forecast_cfg = forecast.then(experiments::forecast::forecast_tuning);
         let offered = fps * streams as f64;
         let pool: f64 = rates.iter().sum::<f64>() * shards as f64;
         // The banner stays off the --json path: stdout must be exactly
         // one parseable document there (CI uploads it as BENCH_shard.json).
         if !args.flag("json") {
             println!(
-                "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, transport {transport}, codec {}, autoscale {}, seed {seed}",
+                "[shard] {streams} streams × {fps} FPS (offered {offered:.1}) over {shards} shards (Σμ {pool:.1}), policy {}, gossip {gossip}s, transport {transport}, codec {}, autoscale {}, forecast {}, seed {seed}",
                 policy.label(),
                 codec.label(),
                 if autoscale { "on" } else { "off" },
+                if forecast { "on" } else { "off" },
             );
         }
         let report = match transport.as_str() {
@@ -377,6 +404,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
                 telemetry,
                 codec,
                 groups,
+                forecast_cfg,
             ),
             "tcp" | "uds" => {
                 let remote = if transport == "tcp" {
@@ -396,6 +424,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
                     codec,
                     groups,
                     token,
+                    forecast_cfg,
                     remote,
                 )?
             }

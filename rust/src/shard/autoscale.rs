@@ -83,6 +83,23 @@ impl FleetController for Shifted<'_> {
     }
 }
 
+/// Warm-rejoin snapshot of a shard's scaling state: the device pool the
+/// shard had scaled to, plus the controller's continuity state (cooldown
+/// clock, replica counter). A shard that restarts and rejoins with this
+/// state resumes serving at its scaled capacity immediately; a cold
+/// join restarts from the seed pool and pays the whole scale-up ramp
+/// again — `rust/tests/integration_churn.rs` pins the difference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalerState {
+    /// Shard time of the controller's last device action.
+    pub last_device_action: f64,
+    /// Next template replica id (keeps replica ids unique across the
+    /// restart).
+    pub next_replica: usize,
+    /// The scaled device pool at capture time.
+    pub pool: Vec<DeviceInstance>,
+}
+
 /// One shard's local capacity controller, persistent across the gossip
 /// epochs of a sharded run.
 pub struct ShardAutoscaler {
@@ -105,6 +122,32 @@ impl ShardAutoscaler {
     /// Arm (or disarm) the per-frame motion gate for subsequent slices.
     pub fn set_gate(&mut self, gate: Option<GateConfig>) {
         self.gate = gate;
+    }
+
+    /// Arm (or clear) the forecast Σλ hint on the embedded controller
+    /// for subsequent slices (see
+    /// [`AutoscaleController::set_forecast_demand`]).
+    pub fn set_forecast_demand(&mut self, hint: Option<f64>) {
+        self.ctl.set_forecast_demand(hint);
+    }
+
+    /// Capture the warm-rejoin snapshot: `pool` is the shard's current
+    /// scaled pool (kept outside the scaler by the runners).
+    pub fn export_state(&self, pool: &[DeviceInstance]) -> ScalerState {
+        let (last_device_action, next_replica) = self.ctl.device_state();
+        ScalerState {
+            last_device_action,
+            next_replica,
+            pool: pool.to_vec(),
+        }
+    }
+
+    /// Restore a [`ScalerState`] captured before a restart; returns the
+    /// pool the shard should resume serving with.
+    pub fn restore_state(&mut self, state: &ScalerState) -> Vec<DeviceInstance> {
+        self.ctl
+            .restore_device_state(state.last_device_action, state.next_replica);
+        state.pool.clone()
     }
 
     /// The configuration the embedded controller runs with.
@@ -265,6 +308,94 @@ mod tests {
             .count();
         assert!(attaches >= 1);
         assert_eq!(pool.len(), 1 + attaches, "pool must mirror the attaches");
+    }
+
+    #[test]
+    fn restored_scaler_resumes_pool_cooldown_and_replica_ids() {
+        // Scale a pool up in epoch 0, snapshot, then "restart" into a
+        // fresh scaler. The restored scaler must (a) resume the scaled
+        // pool, (b) still honour the pre-restart cooldown, and (c) keep
+        // replica ids advancing — while a cold scaler restarts from the
+        // seed pool and re-attaches from scratch.
+        let cfg = AutoscaleConfig {
+            cooldown: 15.0,
+            max_devices: 8,
+            ..AutoscaleConfig::default()
+        };
+        let mut scaler = ShardAutoscaler::new(cfg.clone());
+        let mut pool = vec![dev(0, 2.5)];
+        let specs = vec![StreamSpec::new("s0", 5.0, 50).with_window(4)];
+        let (_, events) =
+            scaler.run_slice(&mut pool, &AdmissionPolicy::default(), specs, &[0], 0.0, 7);
+        assert!(pool.len() > 1, "epoch 0 must scale up");
+        let state = scaler.export_state(&pool);
+        assert_eq!(state.pool, pool);
+        assert!(state.last_device_action >= 0.0 && state.next_replica > 1);
+        let first_attach = events
+            .iter()
+            .find_map(|e| match e.as_action() {
+                Some(ControlAction::AttachDevice(_)) => Some(e.at),
+                _ => None,
+            })
+            .expect("an attach in epoch 0");
+
+        // Warm rejoin at t0 = 10: same scaled pool, and with the 15 s
+        // cooldown carried over no device action may fire before
+        // `first_attach + cooldown`.
+        let mut warm = ShardAutoscaler::new(cfg.clone());
+        let mut warm_pool = warm.restore_state(&state);
+        assert_eq!(warm_pool, pool);
+        let specs = vec![StreamSpec::new("s0", 5.0, 50).with_window(4)];
+        let (_, warm_events) = warm.run_slice(
+            &mut warm_pool,
+            &AdmissionPolicy::default(),
+            specs,
+            &[0],
+            10.0,
+            9,
+        );
+        for e in &warm_events {
+            if matches!(
+                e.as_action(),
+                Some(ControlAction::AttachDevice(_) | ControlAction::DetachDevice(_))
+            ) {
+                assert!(
+                    e.at >= first_attach + 15.0 - 1e-9,
+                    "warm rejoin broke the cooldown: {warm_events:?}"
+                );
+            }
+        }
+        // Any replica the warm scaler does attach has a fresh id.
+        for e in &warm_events {
+            if let Some(ControlAction::AttachDevice(d)) = e.as_action() {
+                assert!(d.replica >= state.next_replica, "{warm_events:?}");
+            }
+        }
+
+        // A cold join restarts from the seed pool: its first attach
+        // fires immediately (no carried cooldown), replaying the ramp.
+        let mut cold = ShardAutoscaler::new(cfg);
+        let mut cold_pool = vec![dev(0, 2.5)];
+        let specs = vec![StreamSpec::new("s0", 5.0, 50).with_window(4)];
+        let (_, cold_events) = cold.run_slice(
+            &mut cold_pool,
+            &AdmissionPolicy::default(),
+            specs,
+            &[0],
+            10.0,
+            9,
+        );
+        let cold_attach = cold_events
+            .iter()
+            .find_map(|e| match e.as_action() {
+                Some(ControlAction::AttachDevice(_)) => Some(e.at),
+                _ => None,
+            })
+            .expect("cold join must re-attach");
+        assert!(
+            cold_attach < first_attach + 15.0,
+            "cold join should act before the warm cooldown expires"
+        );
     }
 
     #[test]

@@ -8,12 +8,25 @@
 //! failure message, which is why orphan re-placement takes (at most) one
 //! gossip interval.
 //!
+//! Digests may also carry a forecast-Σλ slot ([`Headroom::forecast`],
+//! ROADMAP item 4): the shard's confidence-gated prediction of its
+//! offered load one horizon ahead. Planning then works against
+//! `max(committed, forecast)` ([`ShardView::load`]), so load sheds
+//! *ahead* of predicted ramps; digests without the slot (legacy peers,
+//! forecast disabled) behave exactly as before.
+//!
 //! The table also plans load-band rebalancing ([`GossipTable::plan_moves`]):
 //! a shard whose committed load exceeds its capacity sheds the largest
 //! streams the survivors can absorb — restoring the band in the fewest
 //! (costly) migrations — as long as no move pushes a target out of
 //! band. Moves are executed by the runner as serialised detach→attach
-//! control events.
+//! control events. Both sides of the plan carry real hysteresis margins,
+//! not float epsilons: a shard sheds only when overloaded by more than
+//! [`SHED_HYSTERESIS`] (sub-margin digest jitter is left to admission),
+//! and targets whose headroom differs by less than [`TARGET_HYSTERESIS`]
+//! are treated as tied, breaking deterministically to the lowest shard
+//! id — so jittering views of near-equal shards can never ping-pong a
+//! stream between them.
 
 use crate::shard::placement::ShardView;
 
@@ -27,6 +40,10 @@ pub struct Headroom {
     pub capacity: f64,
     /// Committed offered load Σλ of resident streams (FPS).
     pub committed: f64,
+    /// Forecast-Σλ: the shard's predicted offered load one horizon
+    /// ahead, published only when its confidence band is tight. `None`
+    /// on legacy digests and forecast-free runs.
+    pub forecast: Option<f64>,
 }
 
 /// A planned stream migration (executed as detach→attach wire events).
@@ -37,6 +54,22 @@ pub struct Migration {
     pub from: usize,
     pub to: usize,
 }
+
+/// Migration-target hysteresis (FPS): a candidate target must beat the
+/// incumbent's headroom by at least this margin to displace it. Within
+/// the margin the two are considered tied and the lowest shard id wins —
+/// deterministically, and robustly against per-epoch view jitter that a
+/// bare float epsilon would amplify into stream ping-pong.
+pub const TARGET_HYSTERESIS: f64 = 0.25;
+
+/// Shed hysteresis (FPS): a shard plans migrations away only when its
+/// projected load exceeds capacity by more than this margin. Published
+/// digests jitter (autoscale capacity moves, quota quantisation); with
+/// the old bare `1e-9` band check, sub-margin noise alternately tipped
+/// two symmetric shards "out of band" and bounced a stream between them
+/// every epoch. Sub-margin overloads are left to admission degradation,
+/// which is free to undo.
+pub const SHED_HYSTERESIS: f64 = 0.25;
 
 /// Freshest per-shard digests, with heartbeat expiry.
 #[derive(Debug, Clone)]
@@ -89,12 +122,14 @@ impl GossipTable {
                     alive: true,
                     capacity: h.capacity,
                     committed: h.committed,
+                    forecast: h.forecast,
                 },
                 None => ShardView {
                     shard: i,
                     alive: false,
                     capacity: 0.0,
                     committed: 0.0,
+                    forecast: None,
                 },
             })
             .collect()
@@ -108,19 +143,21 @@ impl GossipTable {
 }
 
 /// Plan band-restoring migrations. `residents` lists every placed
-/// stream as `(global stream index, demand λ, shard)`. Out-of-band
-/// shards shed **largest-that-fits** streams first — each migration has
-/// real handover cost, so the band is restored in the fewest moves;
-/// smaller streams are tried only when no target can absorb a larger
-/// one. A move is planned only when the target stays in band after
-/// absorbing the stream. Deterministic: ties break to the lowest stream
-/// index / shard id.
+/// stream as `(global stream index, demand λ, shard)`. Shards overloaded
+/// by more than [`SHED_HYSTERESIS`] — on projected load, so a tight
+/// forecast sheds ahead of the ramp — shed **largest-that-fits** streams
+/// first: each migration has real handover cost, so the band is restored
+/// in the fewest moves; smaller streams are tried only when no target
+/// can absorb a larger one. A move is planned only when the target stays
+/// in band after absorbing the stream. Deterministic: ties break to the
+/// lowest stream index / shard id, with targets within
+/// [`TARGET_HYSTERESIS`] of each other's headroom counting as tied.
 pub fn plan_moves(views: &[ShardView], residents: &[(usize, f64, usize)]) -> Vec<Migration> {
     let mut views = views.to_vec();
     let mut moves = Vec::new();
     let overloaded: Vec<usize> = views
         .iter()
-        .filter(|v| v.alive && !v.in_band())
+        .filter(|v| v.alive && v.load() > v.capacity + SHED_HYSTERESIS)
         .map(|v| v.shard)
         .collect();
     for src in overloaded {
@@ -139,19 +176,24 @@ pub fn plan_moves(views: &[ShardView], residents: &[(usize, f64, usize)]) -> Vec
             if views[src].in_band() {
                 break;
             }
-            // Best target: alive, not src, max headroom, stays in
-            // band after the move.
+            // Best target: alive, not src, max headroom (with hysteresis
+            // — near-ties go to the lowest shard id), stays in band
+            // after the move. Fit and headroom are judged on projected
+            // load, so a target about to ramp is not overfilled.
             let mut target: Option<usize> = None;
             for v in &views {
                 if !v.alive || v.shard == src {
                     continue;
                 }
-                if v.committed + demand > v.capacity + 1e-9 {
+                if v.load() + demand > v.capacity + 1e-9 {
                     continue;
                 }
                 let better = match target {
                     None => true,
-                    Some(t) => v.headroom() > views[t].headroom() + 1e-9,
+                    // Strictly better only beyond the hysteresis margin;
+                    // within it the incumbent (lower shard id, since
+                    // views iterate in ascending order) keeps the slot.
+                    Some(t) => v.headroom() > views[t].headroom() + TARGET_HYSTERESIS,
                 };
                 if better {
                     target = Some(v.shard);
@@ -160,6 +202,15 @@ pub fn plan_moves(views: &[ShardView], residents: &[(usize, f64, usize)]) -> Vec
             let Some(dst) = target else { continue };
             views[src].committed -= demand;
             views[dst].committed += demand;
+            // The stream's predicted contribution moves with it — without
+            // this a ramping shard would keep shedding against a stale
+            // projection until it was empty.
+            if let Some(f) = views[src].forecast.as_mut() {
+                *f = (*f - demand).max(0.0);
+            }
+            if let Some(f) = views[dst].forecast.as_mut() {
+                *f += demand;
+            }
             moves.push(Migration {
                 stream: idx,
                 from: src,
@@ -175,7 +226,7 @@ mod tests {
     use super::*;
 
     fn digest(shard: usize, at: f64, capacity: f64, committed: f64) -> Headroom {
-        Headroom { shard, at, capacity, committed }
+        Headroom { shard, at, capacity, committed, forecast: None }
     }
 
     #[test]
@@ -239,5 +290,87 @@ mod tests {
         t.publish(digest(0, 0.0, 10.0, 9.0));
         t.publish(digest(1, 0.0, 10.0, 1.0));
         assert!(t.plan_moves(&[(0, 9.0, 0), (1, 1.0, 1)]).is_empty());
+    }
+
+    #[test]
+    fn near_tied_targets_break_deterministically_to_the_lowest_shard() {
+        // Shards 1 and 2 differ in headroom by less than the hysteresis
+        // margin; whichever order views jitter into, the planned target
+        // must be shard 1 (lowest id), never a function of sub-margin
+        // float noise.
+        let mut t = GossipTable::new(3);
+        t.publish(digest(0, 0.0, 10.0, 14.0));
+        t.publish(digest(1, 0.0, 10.0, 3.0));
+        t.publish(digest(2, 0.0, 10.0, 3.0 - 0.9 * TARGET_HYSTERESIS));
+        let residents = [(0, 4.0, 0), (1, 10.0, 0)];
+        let moves = t.plan_moves(&residents);
+        assert_eq!(moves, vec![Migration { stream: 0, from: 0, to: 1 }]);
+        // Beyond the margin, genuine headroom differences still win.
+        t.publish(digest(2, 0.0, 10.0, 3.0 - 2.0 * TARGET_HYSTERESIS));
+        let moves = t.plan_moves(&residents);
+        assert_eq!(moves, vec![Migration { stream: 0, from: 0, to: 2 }]);
+    }
+
+    #[test]
+    fn symmetric_near_tied_shards_never_ping_pong_a_stream() {
+        // Regression for the bare `+1e-9` band check: two symmetric
+        // shards each carry 8.0 FPS of pinned load plus one 1.9-FPS
+        // stream that fits either side. Published committed estimates
+        // jitter by sub-margin noise (quota quantisation), so the
+        // resident shard's digest reads 10.15 — "out of band" to the old
+        // epsilon comparison, which shed the stream to the peer every
+        // epoch, forever. With shed hysteresis the sub-margin overload
+        // is left to admission: zero migrations over 20 epochs.
+        let mut resident = 0usize;
+        let mut migrations = Vec::new();
+        for epoch in 0..20 {
+            let noise = 0.6 * SHED_HYSTERESIS; // sub-margin view jitter
+            let mut t = GossipTable::new(2);
+            for shard in 0..2 {
+                let committed =
+                    8.0 + if shard == resident { 1.9 + noise } else { -noise };
+                t.publish(digest(shard, epoch as f64, 10.0, committed));
+            }
+            let residents = [
+                (0, 4.5, 0),
+                (1, 3.5, 0),
+                (2, 4.5, 1),
+                (3, 3.5, 1),
+                (4, 1.9, resident),
+            ];
+            for m in t.plan_moves(&residents) {
+                migrations.push((epoch, m));
+                if m.stream == 4 {
+                    resident = m.to;
+                }
+            }
+        }
+        assert!(migrations.is_empty(), "streams ping-ponged: {migrations:?}");
+    }
+
+    #[test]
+    fn forecast_slot_rides_views_and_sheds_ahead_of_the_ramp() {
+        let mut t = GossipTable::new(2);
+        // Shard 0 is comfortably in band *now* (6 < 10) but forecasts a
+        // ramp to 13; shard 1 is quiet with no forecast.
+        t.publish(Headroom {
+            shard: 0,
+            at: 0.0,
+            capacity: 10.0,
+            committed: 6.0,
+            forecast: Some(13.0),
+        });
+        t.publish(digest(1, 0.0, 10.0, 2.0));
+        let views = t.views();
+        assert_eq!(views[0].forecast, Some(13.0));
+        assert!((views[0].load() - 13.0).abs() < 1e-12);
+        assert!(!views[0].in_band(), "projected overload must plan ahead");
+        // The planner sheds ahead of the ramp: a 4-FPS stream moves now,
+        // before any frame is dropped.
+        let moves = t.plan_moves(&[(0, 4.0, 0), (1, 2.0, 0), (2, 2.0, 1)]);
+        assert_eq!(moves, vec![Migration { stream: 0, from: 0, to: 1 }]);
+        // Without the slot the same committed load plans nothing.
+        t.publish(digest(0, 0.0, 10.0, 6.0));
+        assert!(t.plan_moves(&[(0, 4.0, 0), (1, 2.0, 0), (2, 2.0, 1)]).is_empty());
     }
 }

@@ -69,6 +69,10 @@ pub struct GroupDigest {
     pub capacity: f64,
     /// Σλ over live members (FPS).
     pub committed: f64,
+    /// Projected Σλ over live members: each member contributes
+    /// `max(committed, forecast)` ([`ShardView::load`]). Equal to
+    /// `committed` when no member carries a forecast slot.
+    pub forecast: f64,
     /// Worst per-member headroom (negative ⇒ some member out of band).
     pub min_headroom: f64,
     /// Best per-member headroom (what the group can absorb in one shard).
@@ -79,6 +83,12 @@ impl GroupDigest {
     /// Aggregate headroom Σμ − Σλ.
     pub fn headroom(&self) -> f64 {
         self.capacity - self.committed
+    }
+
+    /// Aggregate headroom against projected load Σμ − max(Σλ, forecast):
+    /// what the group can still absorb *after* its predicted ramps land.
+    pub fn projected_headroom(&self) -> f64 {
+        self.capacity - self.forecast
     }
 
     /// Whether the coordinator must descend into members: some member is
@@ -97,6 +107,7 @@ pub fn aggregate(group: &ShardGroup, views: &[ShardView]) -> GroupDigest {
         alive: 0,
         capacity: 0.0,
         committed: 0.0,
+        forecast: 0.0,
         min_headroom: f64::INFINITY,
         max_headroom: f64::NEG_INFINITY,
     };
@@ -108,6 +119,7 @@ pub fn aggregate(group: &ShardGroup, views: &[ShardView]) -> GroupDigest {
         d.alive += 1;
         d.capacity += v.capacity;
         d.committed += v.committed;
+        d.forecast += v.load();
         d.min_headroom = d.min_headroom.min(v.headroom());
         d.max_headroom = d.max_headroom.max(v.headroom());
     }
@@ -146,10 +158,12 @@ pub struct DeltaEncoder {
 }
 
 impl DeltaEncoder {
-    /// `threshold` is the absolute change in capacity *or* committed Σλ
-    /// (FPS) below which a shard is considered unchanged; 0 means every
-    /// change ships. `resync_every` ≥ 1: every n-th epoch is a full
-    /// snapshot regardless.
+    /// `threshold` bounds the *cumulative* drift (FPS) a shard may
+    /// accumulate against the last shipped state before it is forced
+    /// onto the wire: the L1 sum of capacity, committed, and forecast
+    /// movement since the last emit. 0 means every change ships.
+    /// `resync_every` ≥ 1: every n-th epoch is a full snapshot
+    /// regardless.
     pub fn new(num_shards: usize, threshold: f64, resync_every: usize) -> DeltaEncoder {
         DeltaEncoder {
             threshold: threshold.max(0.0),
@@ -164,8 +178,22 @@ impl DeltaEncoder {
             (None, None) => false,
             (Some(_), None) | (None, Some(_)) => true,
             (Some(p), Some(c)) => {
-                (p.capacity - c.capacity).abs() > self.threshold
-                    || (p.committed - c.committed).abs() > self.threshold
+                // Cumulative L1 drift since the last *emitted* state.
+                // Gating each field independently let capacity and
+                // committed creep in opposite directions, each below
+                // threshold, compounding up to 2× threshold of headroom
+                // skew before anything shipped; the combined bound keeps
+                // the receiver's headroom within one threshold of truth.
+                let fdrift = match (p.forecast, c.forecast) {
+                    (None, None) => 0.0,
+                    (Some(a), Some(b)) => (a - b).abs(),
+                    // A forecast slot appearing or vanishing always ships.
+                    _ => f64::INFINITY,
+                };
+                (p.capacity - c.capacity).abs()
+                    + (p.committed - c.committed).abs()
+                    + fdrift
+                    > self.threshold
             }
         }
     }
@@ -273,15 +301,28 @@ fn headroom_to_json(h: &Headroom) -> Json {
     o.insert("shard".to_string(), Json::Num(h.shard as f64));
     o.insert("capacity".to_string(), Json::Num(h.capacity));
     o.insert("committed".to_string(), Json::Num(h.committed));
+    // Optional slot: absent on legacy digests and forecast-free runs, so
+    // forecast-free encodings are byte-identical to pre-forecast builds.
+    if let Some(f) = h.forecast {
+        o.insert("forecast".to_string(), Json::Num(f));
+    }
     Json::Obj(o)
 }
 
 fn headroom_from_json(v: &Json, at: f64) -> Result<Headroom, WireError> {
+    let forecast = match v.get("forecast") {
+        None | Some(Json::Null) => None,
+        Some(j) => Some(
+            j.as_f64()
+                .ok_or_else(|| WireError::new("digest forecast must be a number"))?,
+        ),
+    };
     Ok(Headroom {
         shard: req_usize(v, "shard")?,
         at,
         capacity: req_f64(v, "capacity")?,
         committed: req_f64(v, "committed")?,
+        forecast,
     })
 }
 
@@ -347,6 +388,10 @@ pub fn delta_from_json(v: &Json) -> Result<DigestDelta, WireError> {
 
 /// Compact binary [`DigestDelta`]: varint epoch/ids, adaptive floats,
 /// per-entry capacity+committed only (the uniform `at` ships once).
+/// Forecast slots ride a trailing optional section — `(entry index,
+/// forecast)` pairs — written only when some entry carries one, so
+/// forecast-free deltas are byte-identical to pre-forecast builds and
+/// legacy bytes decode with every forecast absent.
 pub fn encode_delta(d: &DigestDelta) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.varint(d.epoch as u64);
@@ -361,6 +406,19 @@ pub fn encode_delta(d: &DigestDelta) -> Vec<u8> {
     w.varint(d.dead.len() as u64);
     for &s in &d.dead {
         w.varint(s as u64);
+    }
+    let forecasts: Vec<(usize, f64)> = d
+        .entries
+        .iter()
+        .enumerate()
+        .filter_map(|(i, e)| e.forecast.map(|f| (i, f)))
+        .collect();
+    if !forecasts.is_empty() {
+        w.varint(forecasts.len() as u64);
+        for (i, f) in forecasts {
+            w.varint(i as u64);
+            w.f64(f);
+        }
     }
     w.into_bytes()
 }
@@ -378,12 +436,25 @@ pub fn decode_delta(bytes: &[u8]) -> Result<DigestDelta, WireError> {
             at,
             capacity: r.f64()?,
             committed: r.f64()?,
+            forecast: None,
         });
     }
     let n = r.usize()?;
     let mut dead = Vec::with_capacity(n.min(1 << 16));
     for _ in 0..n {
         dead.push(r.usize()?);
+    }
+    // Trailing optional forecast section (absent on legacy encoders).
+    if r.remaining() > 0 {
+        let n = r.usize()?;
+        for _ in 0..n {
+            let idx = r.usize()?;
+            let f = r.f64()?;
+            let slot = entries
+                .get_mut(idx)
+                .ok_or_else(|| WireError::new("forecast index out of range"))?;
+            slot.forecast = Some(f);
+        }
     }
     if r.remaining() > 0 {
         return Err(WireError::new("trailing bytes after digest delta"));
@@ -409,6 +480,7 @@ mod tests {
             alive,
             capacity,
             committed,
+            forecast: None,
         }
     }
 
@@ -438,6 +510,9 @@ mod tests {
         assert_eq!(d0.capacity, 20.0);
         assert_eq!(d0.committed, 16.0);
         assert_eq!(d0.headroom(), 4.0);
+        // No forecast slots: projected load degenerates to committed.
+        assert_eq!(d0.forecast, 16.0);
+        assert_eq!(d0.projected_headroom(), 4.0);
         assert_eq!(d0.min_headroom, -2.0);
         assert_eq!(d0.max_headroom, 6.0);
         // Group nets out positive but a member is out of band: descend.
@@ -451,18 +526,53 @@ mod tests {
         assert!(!dead.needs_descent());
     }
 
+    #[test]
+    fn aggregate_folds_forecast_slots_into_projection_and_descent() {
+        let groups = group_shards(2, 2);
+        let views = vec![
+            // In band now (4 < 10) but forecasting a ramp past capacity.
+            ShardView {
+                shard: 0,
+                alive: true,
+                capacity: 10.0,
+                committed: 4.0,
+                forecast: Some(11.0),
+            },
+            view(1, true, 10.0, 6.0),
+        ];
+        let d = aggregate(&groups[0], &views);
+        assert_eq!(d.committed, 10.0);
+        // Projected: max(4, 11) + 6.
+        assert_eq!(d.forecast, 17.0);
+        assert_eq!(d.headroom(), 10.0);
+        assert_eq!(d.projected_headroom(), 3.0);
+        // The worst *projected* member headroom is 10 − 11 = −1: the
+        // coordinator descends ahead of the ramp, not after it.
+        assert_eq!(d.min_headroom, -1.0);
+        assert!(d.needs_descent());
+    }
+
+    fn random_digest(rng: &mut Rng, shard: usize) -> Headroom {
+        Headroom {
+            shard,
+            at: 0.0,
+            capacity: rng.range(5.0, 20.0),
+            committed: rng.range(0.0, 25.0),
+            forecast: if rng.chance(0.4) {
+                Some(rng.range(0.0, 30.0))
+            } else {
+                None
+            },
+        }
+    }
+
     fn random_state(rng: &mut Rng, n: usize) -> Vec<Option<Headroom>> {
         (0..n)
             .map(|shard| {
                 if rng.chance(0.15) {
                     None
                 } else {
-                    Some(Headroom {
-                        shard,
-                        at: 0.0,
-                        capacity: rng.range(5.0, 20.0),
-                        committed: rng.range(0.0, 25.0),
-                    })
+                    Some(random_digest(rng, shard))
                 }
             })
             .collect()
@@ -477,14 +587,19 @@ mod tests {
                     // Most shards drift a little; a few jump.
                     let step = if rng.chance(0.2) { 3.0 } else { 0.05 };
                     h.committed = (h.committed + rng.range(-step, step)).max(0.0);
+                    if rng.chance(0.1) {
+                        // Forecast slots come and go with confidence.
+                        h.forecast = if rng.chance(0.5) {
+                            Some(rng.range(0.0, 30.0))
+                        } else {
+                            None
+                        };
+                    } else if let Some(f) = h.forecast.as_mut() {
+                        *f = (*f + rng.range(-step, step)).max(0.0);
+                    }
                 }
             } else if rng.chance(0.2) {
-                *slot = Some(Headroom {
-                    shard,
-                    at: 0.0,
-                    capacity: rng.range(5.0, 20.0),
-                    committed: rng.range(0.0, 25.0),
-                });
+                *slot = Some(random_digest(rng, shard));
             }
         }
     }
@@ -546,15 +661,27 @@ mod tests {
                     match (truth, got) {
                         (Some(t), Some(g)) => {
                             // Drift below the threshold may be withheld,
-                            // but never more than the threshold's worth.
-                            if (t.committed - g.committed).abs() > threshold + 1e-9 {
+                            // but the *cumulative* skew across all three
+                            // fields never exceeds one threshold — this
+                            // is the bound the per-field gating of the
+                            // old encoder violated (up to 2× threshold
+                            // of headroom error).
+                            let fskew = match (t.forecast, g.forecast) {
+                                (None, None) => 0.0,
+                                (Some(a), Some(b)) => (a - b).abs(),
+                                _ => {
+                                    return Err(format!(
+                                        "epoch {epoch}: forecast presence skew"
+                                    ))
+                                }
+                            };
+                            let skew = (t.committed - g.committed).abs()
+                                + (t.capacity - g.capacity).abs()
+                                + fskew;
+                            if skew > threshold + 1e-9 {
                                 return Err(format!(
-                                    "epoch {epoch}: committed skew {} > threshold {threshold}",
-                                    (t.committed - g.committed).abs()
+                                    "epoch {epoch}: cumulative skew {skew} > threshold {threshold}"
                                 ));
-                            }
-                            if (t.capacity - g.capacity).abs() > threshold + 1e-9 {
-                                return Err("capacity skew past threshold".to_string());
                             }
                             if g.at != at {
                                 return Err(format!("heartbeat not refreshed at {epoch}"));
@@ -574,6 +701,52 @@ mod tests {
     }
 
     #[test]
+    fn monotone_creep_forces_emit_before_headroom_error_compounds() {
+        // Regression: the old encoder gated capacity and committed
+        // *independently* against the threshold, so opposed sub-threshold
+        // creeps — capacity up 0.09/epoch, committed down 0.09/epoch —
+        // compounded to ~1.9 FPS of headroom skew (just under 2×
+        // threshold) before either field shipped. The cumulative-drift
+        // gate must force an emit once the combined movement crosses one
+        // threshold, bounding headroom skew to threshold + one epoch's
+        // step.
+        let threshold = 1.0;
+        let step = 0.09;
+        let mut enc = DeltaEncoder::new(1, threshold, 1000);
+        let mut dec = DeltaDecoder::new(1);
+        let mut truth = Headroom {
+            shard: 0,
+            at: 0.0,
+            capacity: 10.0,
+            committed: 5.0,
+            forecast: None,
+        };
+        dec.apply(&enc.encode(0, 0.0, &[Some(truth)]));
+        let mut worst = 0.0f64;
+        let mut emitted_midstream = false;
+        for epoch in 1..40 {
+            truth.at = epoch as f64;
+            truth.capacity += step;
+            truth.committed = (truth.committed - step).max(0.0);
+            let d = enc.encode(epoch, truth.at, &[Some(truth)]);
+            emitted_midstream |= !d.entries.is_empty();
+            dec.apply(&d);
+            let got = dec.view()[0].expect("shard stays live");
+            let skew = (truth.capacity - got.capacity)
+                + (got.committed - truth.committed);
+            worst = worst.max(skew);
+        }
+        assert!(emitted_midstream, "creep never forced an emit");
+        // Old encoder: worst ≈ 1.89 (21 epochs of silent 0.18/epoch
+        // creep). Fixed: the emit fires once |Δcap|+|Δcom| > 1.0, i.e.
+        // at 1.08 combined.
+        assert!(
+            worst <= threshold + 2.0 * step + 1e-9,
+            "headroom skew compounded to {worst}"
+        );
+    }
+
+    #[test]
     fn deltas_ship_fewer_entries_than_snapshots_under_small_churn() {
         // The point of the exercise: with mostly-idle shards, a delta
         // epoch is much smaller than a snapshot epoch.
@@ -586,6 +759,7 @@ mod tests {
                     at: 0.0,
                     capacity: 10.0,
                     committed: 5.0,
+                    forecast: None,
                 })
             })
             .collect();
@@ -622,16 +796,40 @@ mod tests {
                 at: 20.0,
                 capacity: 9.5,
                 committed: 3.25,
+                forecast: Some(4.5),
             }],
             dead: vec![0],
         };
+        // The same frame minus its forecast slot is what a legacy
+        // encoder would emit — a strict byte prefix of `bytes`.
+        let legacy = DigestDelta {
+            entries: vec![Headroom { forecast: None, ..d.entries[0] }],
+            dead: d.dead.clone(),
+            ..d.clone()
+        };
+        let legacy_bytes = encode_delta(&legacy);
         let bytes = encode_delta(&d);
+        assert!(bytes.starts_with(&legacy_bytes) && bytes.len() > legacy_bytes.len());
         for cut in 0..bytes.len() {
+            if cut == legacy_bytes.len() {
+                // Exactly the legacy frame: decodes, forecast absent —
+                // the forward-compat contract.
+                let rt = decode_delta(&bytes[..cut]).unwrap();
+                assert_eq!(rt, legacy);
+                continue;
+            }
             assert!(decode_delta(&bytes[..cut]).is_err(), "cut at {cut}");
         }
-        let mut long = bytes;
+        // Trailing bytes after a complete forecast section are an error…
+        let mut long = bytes.clone();
         long.push(0);
         assert!(decode_delta(&long).is_err());
+        // …as is a forecast pair pointing past the entry list (varints
+        // 1 = one pair, 3 = entry index of a 1-entry frame).
+        let mut bad_idx = legacy_bytes;
+        bad_idx.push(1);
+        bad_idx.push(3);
+        assert!(decode_delta(&bad_idx).is_err());
         assert!(delta_from_json(&Json::parse("{}").unwrap()).is_err());
     }
 }

@@ -25,18 +25,34 @@ pub struct ShardView {
     pub capacity: f64,
     /// Committed offered load: Σλ of the shard's resident streams (FPS).
     pub committed: f64,
+    /// Forecast-Σλ one horizon ahead, when the publishing shard's
+    /// confidence band was tight. `None` on legacy digests and
+    /// forecast-free runs — every consumer then falls back to
+    /// `committed` via [`ShardView::load`].
+    pub forecast: Option<f64>,
 }
 
 impl ShardView {
-    /// Uncommitted capacity (may be negative when overloaded).
-    pub fn headroom(&self) -> f64 {
-        self.capacity - self.committed
+    /// Projected offered load: the larger of committed and forecast Σλ.
+    /// Planning against this is what lets placement act *ahead* of a
+    /// predicted ramp; with no forecast slot it is exactly `committed`.
+    pub fn load(&self) -> f64 {
+        match self.forecast {
+            Some(f) => self.committed.max(f),
+            None => self.committed,
+        }
     }
 
-    /// Inside the §III-B-style band: committed load at or below the
+    /// Uncommitted capacity against projected load (may be negative when
+    /// overloaded).
+    pub fn headroom(&self) -> f64 {
+        self.capacity - self.load()
+    }
+
+    /// Inside the §III-B-style band: projected load at or below the
     /// util-adjusted pool rate.
     pub fn in_band(&self) -> bool {
-        self.committed <= self.capacity + 1e-9
+        self.load() <= self.capacity + 1e-9
     }
 }
 
@@ -117,6 +133,7 @@ mod tests {
                 alive: true,
                 capacity,
                 committed,
+                forecast: None,
             })
             .collect()
     }
@@ -184,11 +201,53 @@ mod tests {
 
     #[test]
     fn view_band_and_headroom() {
-        let v = ShardView { shard: 0, alive: true, capacity: 9.5, committed: 7.5 };
+        let v = ShardView {
+            shard: 0,
+            alive: true,
+            capacity: 9.5,
+            committed: 7.5,
+            forecast: None,
+        };
         assert!((v.headroom() - 2.0).abs() < 1e-12);
         assert!(v.in_band());
         let v = ShardView { committed: 12.0, ..v };
         assert!(!v.in_band());
         assert!(v.headroom() < 0.0);
+    }
+
+    #[test]
+    fn forecast_slot_projects_load_but_never_shrinks_it() {
+        let v = ShardView {
+            shard: 0,
+            alive: true,
+            capacity: 10.0,
+            committed: 6.0,
+            forecast: Some(9.0),
+        };
+        // A ramp forecast raises projected load and eats headroom…
+        assert!((v.load() - 9.0).abs() < 1e-12);
+        assert!((v.headroom() - 1.0).abs() < 1e-12);
+        assert!(v.in_band());
+        // …but a forecast *below* committed never frees capacity that is
+        // already spoken for.
+        let v = ShardView { forecast: Some(2.0), ..v };
+        assert!((v.load() - 6.0).abs() < 1e-12);
+        // Least-loaded placement steers around the shard about to ramp.
+        let quiet = ShardView {
+            shard: 1,
+            alive: true,
+            capacity: 10.0,
+            committed: 7.0,
+            forecast: None,
+        };
+        let ramping = ShardView {
+            shard: 0,
+            alive: true,
+            capacity: 10.0,
+            committed: 6.0,
+            forecast: Some(9.5),
+        };
+        let got = PlacementPolicy::LeastLoaded.place("s", 0, &[ramping, quiet]);
+        assert_eq!(got, Some(1));
     }
 }

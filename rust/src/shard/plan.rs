@@ -96,7 +96,9 @@ pub fn plan_grouped(
             for &m in &groups[gi].members {
                 let v = &views[m];
                 if v.alive && !v.in_band() {
-                    excess += v.committed - v.capacity;
+                    // Projected load, so a forecast ramp counts as excess
+                    // before it lands.
+                    excess += v.load() - v.capacity;
                 }
             }
         }
@@ -130,7 +132,8 @@ pub fn plan_grouped(
             break;
         }
         descended[gi] = true;
-        gathered += digests[gi].headroom().max(0.0);
+        // Projected headroom: a target group about to ramp is not slack.
+        gathered += digests[gi].projected_headroom().max(0.0);
     }
 
     // Mask every shard outside the descended groups and reuse the flat
@@ -185,6 +188,7 @@ mod tests {
             alive: true,
             capacity,
             committed,
+            forecast: None,
         }
     }
 
@@ -278,6 +282,36 @@ mod tests {
     }
 
     #[test]
+    fn forecast_ramp_descends_and_moves_before_load_lands() {
+        // Shard 1 is in band *now* (6 < 10) but forecasts 14; group 1
+        // has the slack. The grouped planner must treat the ramp as
+        // excess, descend both groups, and move a stream pre-emptively.
+        let mut views: Vec<ShardView> = (0..8).map(|i| view(i, 10.0, 6.0)).collect();
+        views[1].forecast = Some(14.0);
+        for v in views.iter_mut().skip(4) {
+            v.committed = 2.0; // group 1 holds the slack
+        }
+        let mut residents: Vec<(usize, f64, usize)> =
+            (0..8).map(|i| (i, views[i].committed, i)).collect();
+        // Shard 1's 6 FPS committed = a 1-FPS pinned stream + this 5-FPS
+        // one; its forecast projects the total ramping to 14.
+        residents[1] = (1, 1.0, 1);
+        residents.push((8, 5.0, 1));
+        let (moves, stats) = plan_grouped(&views, &residents, 4);
+        assert_eq!(stats.groups_descended, 2);
+        // Shedding the 5-FPS stream brings projected load (14 − 5 = 9)
+        // back inside the band, onto the slack group's lowest shard.
+        assert_eq!(moves, vec![Migration { stream: 8, from: 1, to: 4 }]);
+        // Without the forecast slot nothing is out of band and the
+        // planner never descends at all.
+        views[1].forecast = None;
+        let (moves, stats) = plan_grouped(&views, &residents, 4);
+        assert!(moves.is_empty());
+        assert_eq!(stats.groups_descended, 0);
+        assert_eq!(stats.shards_examined, 0);
+    }
+
+    #[test]
     fn prop_one_group_spanning_the_fleet_is_the_flat_planner() {
         check("one group == flat", Config::default(), |rng| {
             let m = rng.int_in(2, 12) as usize;
@@ -298,6 +332,7 @@ mod tests {
                     alive: rng.chance(0.9),
                     capacity,
                     committed,
+                    forecast: None,
                 });
             }
             let (flat_moves, _) = plan_flat(&views, &residents);
@@ -342,6 +377,7 @@ mod tests {
                     alive: true,
                     capacity,
                     committed,
+                    forecast: None,
                 });
             }
             let (moves, _) = plan_grouped(&views, &residents, k);

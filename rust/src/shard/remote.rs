@@ -69,8 +69,9 @@ use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::sim::{run_fleet_with, Scenario};
 use crate::fleet::stream::StreamSpec;
+use crate::forecast::{should_hold, ForecastConfig, ShardForecast};
 use crate::gate::GateConfig;
-use crate::shard::autoscale::ShardAutoscaler;
+use crate::shard::autoscale::{ScalerState, ShardAutoscaler};
 use crate::shard::gossip::GossipTable;
 use crate::shard::placement::ShardView;
 use crate::shard::plan::{plan, PlanStats};
@@ -129,6 +130,12 @@ pub struct RemoteShard {
     /// carried in the coordinator's `Hello` overrides it for the
     /// session.
     pub gate: Option<GateConfig>,
+    /// Standing arrival-forecast config ([`crate::forecast`]); same
+    /// session-override rule — a forecast config in the coordinator's
+    /// `Hello` wins. When armed, every digest this shard sends carries
+    /// its predicted Σλ and its serve loop fuses the prediction into
+    /// the autoscaler hint and the admission burst-hold.
+    pub forecast: Option<ForecastConfig>,
     /// Shared-secret session auth. When set, a `Hello` whose
     /// [`SessionCaps`] does not carry the identical token is answered
     /// with a typed `Reject("auth")` frame and the session ends — the
@@ -144,6 +151,7 @@ impl RemoteShard {
             fail_at_epoch: None,
             autoscale: None,
             gate: None,
+            forecast: None,
             token: None,
         }
     }
@@ -160,6 +168,11 @@ impl RemoteShard {
 
     pub fn with_gate(mut self, gate: GateConfig) -> RemoteShard {
         self.gate = Some(gate);
+        self
+    }
+
+    pub fn with_forecast(mut self, cfg: ForecastConfig) -> RemoteShard {
+        self.forecast = Some(cfg);
         self
     }
 
@@ -198,9 +211,15 @@ pub fn serve_shard_sessions(
     sessions: usize,
 ) -> Result<(), TransportError> {
     let mut fail_at = shard.fail_at_epoch;
+    // Autoscaler state snapshotted at a scripted death, restored into
+    // the next session's scaler at its handshake: a rejoin dial resumes
+    // the pool, cooldown clock and replica numbering the shard had
+    // already learned (warm rejoin) instead of replaying the attach
+    // ramp — mirroring the in-process runner's saved-scaler snapshot.
+    let mut carry: Option<ScalerState> = None;
     for _ in 0..sessions {
         let conn = listener.accept()?;
-        let _ = serve_session(&shard, conn, &mut fail_at);
+        let _ = serve_session(&shard, conn, &mut fail_at, &mut carry);
     }
     Ok(())
 }
@@ -210,6 +229,7 @@ fn serve_session(
     shard: &RemoteShard,
     mut conn: FrameConn,
     fail_at: &mut Option<usize>,
+    carry: &mut Option<ScalerState>,
 ) -> Result<(), TransportError> {
     let mut admission = AdmissionPolicy::default();
     let mut roster: Vec<String> = Vec::new();
@@ -223,6 +243,14 @@ fn serve_session(
         s.set_gate(gate.clone());
         s
     });
+    // Shard-local arrival forecasting, armed by the handshake (or the
+    // shard's standing config). Served slices buffer their realised
+    // arrivals raw; the buffer flushes at the next poll — the first
+    // moment the server can recover the epoch interval (`at / epoch`)
+    // — so the forecast visible at digest and hint time matches the
+    // in-process runner's exactly.
+    let mut forecaster: Option<ShardForecast> = shard.forecast.clone().map(ShardForecast::new);
+    let mut pending_obs: Vec<(usize, f64)> = Vec::new();
     // Cumulative metric snapshot, armed by the coordinator's Hello: a
     // fresh copy ships home ahead of every Slice (cumulative counters,
     // not deltas, so the latest snapshot supersedes the rest).
@@ -303,8 +331,23 @@ fn serve_session(
                 if let Some(s) = scaler.as_mut() {
                     s.set_gate(gate.clone());
                 }
+                if let Some(cfg) = caps.forecast {
+                    forecaster = Some(ShardForecast::new(cfg));
+                }
+                // Warm rejoin: a scaler snapshot carried from a
+                // scripted death on this listener resumes the pool,
+                // cooldown clock and replica numbering (the same
+                // tuple-take the in-process restore uses — the snapshot
+                // is consumed even when this session runs no scaler).
+                if let (Some(s), Some(state)) = (scaler.as_mut(), carry.take()) {
+                    pool = s.restore_state(&state);
+                }
                 telemetry = caps.telemetry.then(Registry::new);
-                let capacity = pool.iter().map(|d| d.rate()).sum::<f64>()
+                // Welcome advertises the seed pool — the pre-scale
+                // baseline the in-process report pins as
+                // `shard_capacity` — never the live pool a warm restore
+                // may have grown.
+                let capacity = shard.devices.iter().map(|d| d.rate()).sum::<f64>()
                     * admission.target_utilization;
                 conn.send(&TransportMsg::Welcome {
                     shard: shard.id,
@@ -328,8 +371,31 @@ fn serve_session(
                     // Taking the trigger consumes it, so a rejoin
                     // session on the same listener serves normally.
                     *fail_at = None;
+                    // Snapshot the autoscaler for a warm rejoin: the
+                    // state it had after the last slice it served.
+                    *carry = scaler.as_ref().map(|s| s.export_state(&pool));
                     return Ok(());
                 }
+                // Settle forecast state for the round at exactly the
+                // in-process sweep/observe visibility: drop state for
+                // streams no longer resident — unless this flush is
+                // about to re-observe them, so a stream that played out
+                // last epoch still backs this digest, exactly once —
+                // then flush the buffered arrivals over the recovered
+                // epoch interval.
+                if let Some(fc) = forecaster.as_mut() {
+                    fc.retain_streams(|id| {
+                        residents.contains_key(&id)
+                            || pending_obs.iter().any(|&(o, _)| o == id)
+                    });
+                    if epoch >= 1 {
+                        let interval = at / epoch as f64;
+                        for (id, frames) in pending_obs.drain(..) {
+                            fc.observe(id, frames / interval);
+                        }
+                    }
+                }
+                pending_obs.clear();
                 // Post-scale headroom: an autoscaling shard advertises
                 // what it can reach locally, so the coordinator's
                 // planner migrates only when local scaling is exhausted.
@@ -338,12 +404,17 @@ fn serve_session(
                     Some(s) => s.projected_capacity(&pool, util),
                     None => pool.iter().map(|d| d.rate()).sum::<f64>() * util,
                 };
-                let committed: f64 = residents.values().map(|s| s.demand()).sum();
+                // Offered load at the epoch base: `demand_at` follows a
+                // stream's rate profile (equal to the flat demand for
+                // unprofiled streams).
+                let committed: f64 = residents.values().map(|s| s.demand_at(at)).sum();
+                let forecast = forecaster.as_ref().and_then(|f| f.digest_rate());
                 conn.send(&TransportMsg::Digest {
                     shard: shard.id,
                     at,
                     capacity,
                     committed,
+                    forecast,
                 })?;
             }
             TransportMsg::Tick {
@@ -366,12 +437,39 @@ fn serve_session(
                     }
                     let mut s = spec.clone();
                     s.num_frames = frames;
+                    // The slice serves this epoch's quota at the
+                    // profiled instantaneous rate, so a ramp phase
+                    // arrives as a genuinely faster process (unchanged
+                    // for flat streams).
+                    s.fps = spec.rate_at(at);
                     specs.push(s);
                     ids.push(id);
                 }
                 let (busy, frames, streams) = if specs.is_empty() {
                     (0.0, 0, Vec::new())
                 } else {
+                    // Forecast fusion at the serve boundary — the same
+                    // couplings, at the same visibility, as the
+                    // in-process runner: prune to the settled resident
+                    // set, arm the admission burst-hold when a tight
+                    // prediction says the overload clears, and hand the
+                    // autoscaler the predicted Σλ as its demand hint.
+                    let mut admission = admission.clone();
+                    if let Some(fc) = forecaster.as_mut() {
+                        fc.retain_streams(|id| residents.contains_key(&id));
+                        let offered: f64 = ids
+                            .iter()
+                            .filter_map(|id| residents.get(id))
+                            .map(|s| s.demand_at(at))
+                            .sum();
+                        let cap_now = pool.iter().map(|d| d.rate()).sum::<f64>()
+                            * admission.target_utilization;
+                        admission.hold =
+                            should_hold(fc.cfg(), offered, cap_now, fc.predict().as_ref());
+                        if let Some(s) = scaler.as_mut() {
+                            s.set_forecast_demand(fc.digest_rate());
+                        }
+                    }
                     let (report, scale_events) = match scaler.as_mut() {
                         Some(s) => {
                             // Closed-loop slice: the local controller
@@ -403,6 +501,15 @@ fn serve_session(
                     };
                     for event in scale_events {
                         conn.send(&TransportMsg::Control(event))?;
+                    }
+                    // Buffer the slice's realised arrivals for the
+                    // forecaster — learned from what was served, never
+                    // peeked from the declared profile; flushed over
+                    // the epoch interval at the next poll.
+                    if forecaster.is_some() {
+                        for (&id, sr) in ids.iter().zip(&report.streams) {
+                            pending_obs.push((id, sr.metrics.frames_total as f64));
+                        }
                     }
                     let streams: Vec<SliceStream> = ids
                         .iter()
@@ -529,6 +636,7 @@ fn handshake_session(
         gate: scenario.gate.clone(),
         telemetry: scenario.telemetry,
         token: scenario.token.clone(),
+        forecast: scenario.forecast.clone(),
         ..SessionCaps::default()
     };
     conn.send(&TransportMsg::Hello {
@@ -661,6 +769,10 @@ pub fn run_sharded_remote(
     let mut snapshots: Vec<Option<Registry>> = vec![None; m];
     let mut phase_timings: Vec<EpochPhases> = Vec::new();
     let mut plan_stats = PlanStats::default();
+    // Forecast-Σλ slots scraped off the received digests, in poll order
+    // — the same publish order the in-process runner traces, so the two
+    // traces compare bit for bit on a failure-free run.
+    let mut forecast_trace: Vec<(usize, usize, f64)> = Vec::new();
 
     // Kill a shard in the coordinator's view: drop the connection,
     // orphan its residents (they re-place at the next placement pass).
@@ -773,7 +885,12 @@ pub fn run_sharded_remote(
             };
             match polled {
                 Ok(msg) => match msg.as_digest() {
-                    Some(digest) => table.publish(digest),
+                    Some(digest) => {
+                        if let Some(rate) = digest.forecast {
+                            forecast_trace.push((epoch, sh, rate));
+                        }
+                        table.publish(digest);
+                    }
                     None => kill(sh, t0, &mut alive, &mut conns, &mut streams),
                 },
                 Err(_) => kill(sh, t0, &mut alive, &mut conns, &mut streams),
@@ -796,7 +913,7 @@ pub fn run_sharded_remote(
             if !route(dst, t0, attach, &mut alive, &mut conns, &mut streams, &mut log) {
                 continue;
             }
-            views[dst].committed += streams[i].spec.demand();
+            views[dst].committed += streams[i].spec.demand_at(t0);
             if let Some(lost_at) = streams[i].orphaned_at.take() {
                 let gap = (t0 - lost_at).max(0.0);
                 if gap > streams[i].worst_gap {
@@ -830,7 +947,7 @@ pub fn run_sharded_remote(
                 .enumerate()
                 .filter_map(|(i, s)| {
                     if s.active() {
-                        s.shard.map(|sh| (i, s.spec.demand(), sh))
+                        s.shard.map(|sh| (i, s.spec.demand_at(t0), sh))
                     } else {
                         None
                     }
@@ -876,7 +993,7 @@ pub fn run_sharded_remote(
             if !s.active() {
                 continue;
             }
-            s.arrival_credit += s.spec.fps * tick;
+            s.arrival_credit += s.spec.rate_at(t0) * tick;
             let q = (s.arrival_credit.floor().max(0.0) as u64).min(s.remaining());
             s.arrival_credit -= q as f64;
             quotas[i] = q;
@@ -1079,6 +1196,7 @@ pub fn run_sharded_remote(
         telemetry,
         phase_timings,
         plan_stats,
+        forecast_trace,
     })
 }
 
@@ -1420,6 +1538,174 @@ mod tests {
             }
             other => panic!("expected reject, got {}", other.label()),
         }
+        drop(conn);
+        server.join().expect("server thread").expect("server ok");
+    }
+
+    #[test]
+    fn forecast_digests_are_bit_identical_across_transports() {
+        // Forecast-armed run: the shard-side forecasters must observe,
+        // predict and publish exactly what the in-process runner's do —
+        // the traced forecast-Σλ slots, and the run they steered,
+        // compare bit for bit.
+        let scenario = ShardScenario::builder(
+            vec![pool(4, 2.5), pool(4, 2.5)],
+            uniform_streams(6, 2.5, 200, 4),
+        )
+        .gossip(10.0)
+        .epochs(10)
+        .seed(53)
+        .forecast(crate::forecast::ForecastConfig::default())
+        .build();
+        let inproc = crate::shard::sim::run_sharded(&scenario);
+        let remote = run_sharded_remote(&scenario, RemoteTransport::Tcp).expect("remote run");
+        assert!(
+            !inproc.forecast_trace.is_empty(),
+            "steady streams must tighten the band into published slots"
+        );
+        assert_eq!(remote.forecast_trace, inproc.forecast_trace);
+        assert_eq!(remote.total_frames(), inproc.total_frames());
+        assert_eq!(remote.total_processed(), inproc.total_processed());
+        assert_eq!(remote.control_log, inproc.control_log);
+    }
+
+    #[test]
+    fn profiled_arrivals_mirror_exactly_across_transports() {
+        // A diurnal rate profile drives quotas, digests and slice rates
+        // through `rate_at`/`demand_at` on both runners; with
+        // forecasting armed on top, outcomes must still match exactly.
+        let profile = crate::fleet::stream::RateProfile::new(40.0, vec![1.0, 2.0]);
+        let streams: Vec<StreamSpec> = (0..6)
+            .map(|i| {
+                let spec = StreamSpec::new(&format!("s{i}"), 2.5, 160).with_window(4);
+                if i % 2 == 0 {
+                    spec.with_profile(profile.clone())
+                } else {
+                    spec
+                }
+            })
+            .collect();
+        let scenario = ShardScenario::builder(vec![pool(4, 2.5), pool(4, 2.5)], streams)
+            .gossip(10.0)
+            .epochs(8)
+            .seed(17)
+            .forecast(crate::forecast::ForecastConfig::default())
+            .build();
+        let inproc = crate::shard::sim::run_sharded(&scenario);
+        let remote = run_sharded_remote(&scenario, RemoteTransport::Uds).expect("remote run");
+        assert_eq!(remote.forecast_trace, inproc.forecast_trace);
+        assert_eq!(remote.total_frames(), inproc.total_frames());
+        assert_eq!(remote.total_processed(), inproc.total_processed());
+        assert_eq!(remote.control_log, inproc.control_log);
+        assert_eq!(remote.initial_committed, inproc.initial_committed);
+    }
+
+    #[test]
+    fn scripted_death_carries_the_scaler_snapshot_into_the_rejoin_session() {
+        // Session 1 scales the one-device seed pool up under overload,
+        // then the scripted death eats a poll. The redial session must
+        // resume *warm*: Welcome still advertises the seed pool, but any
+        // device the restored scaler attaches continues the replica
+        // numbering past the pre-failure pool instead of replaying the
+        // ramp from the seed ids.
+        let listener = Listener::bind(&Endpoint::loopback()).expect("bind");
+        let endpoint = listener.local_endpoint().expect("endpoint");
+        let cfg = AutoscaleConfig {
+            max_devices: 10,
+            device_rate: 2.5,
+            cooldown: 1.0,
+            ..AutoscaleConfig::default()
+        };
+        let shard = RemoteShard::new(0, pool(1, 2.5))
+            .with_autoscale(cfg)
+            .with_failure(1);
+        let server = std::thread::spawn(move || serve_shard_sessions(listener, shard, 2));
+        let dial = || {
+            connect_with_backoff(&endpoint, 10, std::time::Duration::from_millis(5))
+                .expect("dial")
+        };
+        let hello = || TransportMsg::Hello {
+            shard: 0,
+            protocol: TRANSPORT_VERSION,
+            admission: AdmissionPolicy::default(),
+            roster: vec!["s0".to_string()],
+            caps: SessionCaps::default(),
+        };
+        let attach = |fps: f64| {
+            TransportMsg::Control(WireEvent::action(
+                0.0,
+                ControlOrigin::Placement,
+                ControlAction::AttachStream(StreamSpec::new("s0", fps, 600).with_window(4)),
+            ))
+        };
+        // Drain one tick's answer, collecting attached replica ids.
+        let drain = |conn: &mut FrameConn| {
+            let mut replicas = Vec::new();
+            loop {
+                match conn.recv().expect("tick answer") {
+                    TransportMsg::Control(ev) => {
+                        if let Some(ControlAction::AttachDevice(d)) = ev.as_action() {
+                            replicas.push(d.replica);
+                        }
+                    }
+                    TransportMsg::Slice { .. } => return replicas,
+                    other => panic!("unexpected {}", other.label()),
+                }
+            }
+        };
+
+        // Session 1: overload the seed device so the scaler ramps up,
+        // then hit the scripted death.
+        let mut conn = dial();
+        conn.send(&hello()).expect("hello");
+        match conn.recv().expect("welcome") {
+            TransportMsg::Welcome { .. } => {}
+            other => panic!("expected welcome, got {}", other.label()),
+        }
+        conn.send(&attach(7.5)).expect("attach stream");
+        conn.send(&TransportMsg::Tick {
+            epoch: 0,
+            at: 0.0,
+            seed: 11,
+            quotas: vec![(0, 75)],
+        })
+        .expect("tick");
+        let pre = drain(&mut conn);
+        assert!(!pre.is_empty(), "overloaded seed pool must scale up");
+        conn.send(&TransportMsg::Poll { epoch: 1, at: 10.0 }).expect("poll");
+        assert!(conn.recv().is_err(), "scripted death must drop the connection");
+        drop(conn);
+
+        // Session 2 (the rejoin): seed-pool Welcome, then a heavier
+        // overload forces another attach — numbered past the snapshot.
+        let mut conn = dial();
+        conn.send(&hello()).expect("rejoin hello");
+        match conn.recv().expect("rejoin welcome") {
+            TransportMsg::Welcome { capacity, .. } => {
+                let util = AdmissionPolicy::default().target_utilization;
+                assert!(
+                    (capacity - 2.5 * util).abs() < 1e-9,
+                    "welcome must advertise the seed pool, got {capacity}"
+                );
+            }
+            other => panic!("expected welcome, got {}", other.label()),
+        }
+        conn.send(&attach(30.0)).expect("re-attach stream");
+        conn.send(&TransportMsg::Tick {
+            epoch: 2,
+            at: 20.0,
+            seed: 13,
+            quotas: vec![(0, 300)],
+        })
+        .expect("rejoin tick");
+        let post = drain(&mut conn);
+        assert!(!post.is_empty(), "the heavier overload must force an attach");
+        let high_water = *pre.iter().max().expect("pre replicas");
+        assert!(
+            post.iter().all(|&r| r > high_water),
+            "warm rejoin must continue replica numbering: pre {pre:?}, post {post:?}"
+        );
+        conn.send(&TransportMsg::Bye).expect("bye");
         drop(conn);
         server.join().expect("server thread").expect("server ok");
     }

@@ -33,6 +33,16 @@
 //! the serialisation surface a cross-process deployment needs (the
 //! remaining gap, a real transport, is tracked in ROADMAP.md).
 //!
+//! With [`ShardScenario::forecast`] set, each shard additionally drives
+//! a [`crate::forecast::ShardForecast`]: it learns per-stream arrival
+//! rates from the slices it serves, publishes tight predicted-Σλ in its
+//! gossip digest (the planner then places ahead of a ramp through
+//! `ShardView::load`), hints its autoscaler ahead of a predicted step,
+//! and arms the admission burst-hold for transients the forecast says
+//! will clear. The remote runner drives the identical container at the
+//! identical points, so forecast-carrying digests are bit-equal across
+//! transports.
+//!
 //! Quantisation caveat: each epoch slice runs to completion inside the
 //! shard's fleet engine, so window backlog at the tick boundary is
 //! drained "into" the next epoch. Keep stream windows shallow relative
@@ -47,8 +57,9 @@ use crate::device::DeviceInstance;
 use crate::fleet::admission::AdmissionPolicy;
 use crate::fleet::sim::{run_fleet_with, Scenario};
 use crate::fleet::stream::StreamSpec;
+use crate::forecast::{should_hold, ForecastConfig, ShardForecast};
 use crate::gate::GateConfig;
-use crate::shard::autoscale::ShardAutoscaler;
+use crate::shard::autoscale::{ScalerState, ShardAutoscaler};
 use crate::shard::gossip::{GossipTable, Headroom};
 use crate::shard::placement::{PlacementPolicy, ShardView};
 use crate::shard::plan::{plan, PlanStats};
@@ -123,6 +134,17 @@ pub struct ShardScenario {
     /// (see the module docs) instead of moving window state for free.
     /// Off by default so baseline pins are unchanged.
     pub handover: bool,
+    /// Forecast-driven control fusion ([`crate::forecast`]): every shard
+    /// learns its residents' arrival rates from the epoch slices it
+    /// serves and, when the prediction's confidence band is tight,
+    /// (a) publishes predicted Σλ in its gossip digest (so the planner
+    /// places ahead of a ramp), (b) feeds the prediction to its
+    /// autoscaler as a demand hint (attach ahead of the step), and
+    /// (c) arms the admission burst-hold for transients the forecast
+    /// says will clear. `None` (the default) runs purely reactive
+    /// control and publishes no forecast slot — bit-identical to
+    /// pre-forecast builds.
+    pub forecast: Option<ForecastConfig>,
 }
 
 impl ShardScenario {
@@ -144,6 +166,7 @@ impl ShardScenario {
             groups: None,
             token: None,
             handover: false,
+            forecast: None,
         }
     }
 
@@ -247,6 +270,13 @@ impl ScenarioBuilder {
     /// Charge migrations and re-placements the state-rebuild toll.
     pub fn handover(mut self) -> ScenarioBuilder {
         self.scenario.handover = true;
+        self
+    }
+
+    /// Fuse forecast-driven control into every shard (see
+    /// [`ShardScenario::forecast`]).
+    pub fn forecast(mut self, cfg: ForecastConfig) -> ScenarioBuilder {
+        self.scenario.forecast = Some(cfg);
         self
     }
 
@@ -413,6 +443,13 @@ pub struct ShardReport {
     /// cross-mode parity surface); `reads()` is the sub-linearity
     /// witness `benches/coordinator_scale.rs` pins.
     pub plan_stats: PlanStats,
+    /// Every forecast-Σλ slot that rode a gossip digest, in publish
+    /// order: `(epoch, shard, predicted Σλ)`. Empty unless
+    /// [`ShardScenario::forecast`] is set (the slot is only published
+    /// when the prediction's band is tight). Part of the deterministic
+    /// cross-mode parity surface: the remote runner's digests must carry
+    /// the identical sequence.
+    pub forecast_trace: Vec<(usize, usize, f64)>,
 }
 
 impl ShardReport {
@@ -696,6 +733,23 @@ impl ShardReport {
             Json::Num(self.plan_stats.reads() as f64),
         );
         root.insert("plan_stats".to_string(), Json::Obj(plan));
+        if !self.forecast_trace.is_empty() {
+            root.insert(
+                "forecast_trace".to_string(),
+                Json::Arr(
+                    self.forecast_trace
+                        .iter()
+                        .map(|&(epoch, shard, rate)| {
+                            let mut o = BTreeMap::new();
+                            o.insert("epoch".to_string(), Json::Num(epoch as f64));
+                            o.insert("shard".to_string(), Json::Num(shard as f64));
+                            o.insert("rate".to_string(), Json::Num(rate));
+                            Json::Obj(o)
+                        })
+                        .collect(),
+                ),
+            );
+        }
         root.insert(
             "control_log".to_string(),
             Json::Arr(
@@ -824,6 +878,18 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
         })
         .collect();
 
+    // Per-shard forecast state, driven at exactly the points of the
+    // epoch loop the remote shard server drives its own copy, so
+    // forecast-carrying digests are bit-identical across transports.
+    let mut forecasters: Vec<Option<ShardForecast>> = (0..m)
+        .map(|_| scenario.forecast.clone().map(ShardForecast::new))
+        .collect();
+    // Autoscaler state snapshotted at a scheduled failure, restored on
+    // rejoin: a restarted shard resumes its scaled pool and cooldown
+    // clock instead of replaying the whole ramp (warm rejoin — the
+    // remote runner carries the same snapshot across listener sessions).
+    let mut saved_scalers: Vec<Option<ScalerState>> = vec![None; m];
+
     let mut alive = vec![true; m];
     let mut shard_busy = vec![0.0f64; m];
     let mut shard_frames = vec![0u64; m];
@@ -854,16 +920,22 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
     let mut telemetry = Registry::new();
     let mut phase_timings: Vec<EpochPhases> = Vec::new();
     let mut plan_stats = PlanStats::default();
+    let mut forecast_trace: Vec<(usize, usize, f64)> = Vec::new();
 
     for epoch in 0..scenario.epochs {
         let t0 = epoch as f64 * tick;
         let epoch_clock = scenario.telemetry.then(std::time::Instant::now);
 
         // 0. Scheduled rejoins, ahead of the gossip round: the shard
-        //    comes back as a fresh instance — original pool, fresh
-        //    controller — publishes a digest this very epoch, and the
-        //    rebalance pass below re-levels onto it. Mirrors the remote
-        //    runner's redial-and-rehandshake term for term.
+        //    comes back — publishes a digest this very epoch, and the
+        //    rebalance pass below re-levels onto it. An autoscaling
+        //    shard rejoins *warm*: the pool, cooldown clock and replica
+        //    numbering snapshotted at its failure are restored, so it
+        //    re-enters at the capacity it had already learned instead
+        //    of replaying the attach ramp from the seed pool. Forecast
+        //    state restarts cold either way (arrivals were not observed
+        //    while down). Mirrors the remote runner's
+        //    redial-and-rehandshake term for term.
         for &(re, sh) in &scenario.rejoins {
             if re != epoch || sh >= m || alive[sh] {
                 continue;
@@ -875,6 +947,11 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 scaler.set_gate(scenario.gate.clone());
                 scaler
             });
+            if let (Some(scaler), Some(state)) = (scalers[sh].as_mut(), saved_scalers[sh].take())
+            {
+                pools[sh] = scaler.restore_state(&state);
+            }
+            forecasters[sh] = scenario.forecast.clone().map(ShardForecast::new);
         }
 
         // 1. Gossip round: alive shards publish, stale digests expire.
@@ -882,10 +959,13 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
             if !alive[sh] {
                 continue;
             }
+            // Offered load at the epoch base: `demand_at` follows a
+            // stream's rate profile (equal to the flat demand for
+            // unprofiled streams, so pre-profile digests are unchanged).
             let committed: f64 = streams
                 .iter()
                 .filter(|s| s.shard == Some(sh) && s.active())
-                .map(|s| s.spec.demand())
+                .map(|s| s.spec.demand_at(t0))
                 .sum();
             // An autoscaling shard advertises post-scale headroom: what
             // it can reach locally, so the planner migrates only once
@@ -894,11 +974,18 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 Some(s) => s.projected_capacity(&pools[sh], util),
                 None => capacity[sh],
             };
+            // The forecast slot: predicted Σλ, published only when the
+            // band is tight (consumers use it unconditionally).
+            let forecast = forecasters[sh].as_ref().and_then(|f| f.digest_rate());
+            if let Some(rate) = forecast {
+                forecast_trace.push((epoch, sh, rate));
+            }
             table.publish(Headroom {
                 shard: sh,
                 at: t0,
                 capacity: advertised,
                 committed,
+                forecast,
             });
         }
         table.sweep(t0, 0.5 * tick);
@@ -926,7 +1013,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 ControlOrigin::Placement,
                 attach,
             );
-            views[dst].committed += streams[i].spec.demand();
+            views[dst].committed += streams[i].spec.demand_at(t0);
             if let Some(lost_at) = streams[i].orphaned_at.take() {
                 let gap = (t0 - lost_at).max(0.0);
                 if gap > streams[i].worst_gap {
@@ -962,7 +1049,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 .enumerate()
                 .filter_map(|(i, s)| {
                     if s.active() {
-                        s.shard.map(|sh| (i, s.spec.demand(), sh))
+                        s.shard.map(|sh| (i, s.spec.demand_at(t0), sh))
                     } else {
                         None
                     }
@@ -1009,6 +1096,11 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
         for &(e, sh) in &scenario.failures {
             if e == epoch && sh < m && alive[sh] {
                 alive[sh] = false;
+                // Snapshot the autoscaler for a warm rejoin: the state
+                // it had after the last slice it served.
+                saved_scalers[sh] = scalers[sh]
+                    .as_ref()
+                    .map(|s| s.export_state(&pools[sh]));
                 for s in streams.iter_mut() {
                     if s.shard == Some(sh) {
                         s.shard = None;
@@ -1019,19 +1111,36 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
             }
         }
 
+        // Residency settled for the epoch: drop forecast state for
+        // streams that migrated away or played out (a moved stream
+        // re-learns on its new shard — the remote shard server applies
+        // the same retain rule against its decoded resident set, at its
+        // tick and poll boundaries).
+        for sh in 0..m {
+            if let Some(fc) = forecasters[sh].as_mut() {
+                fc.retain_streams(|id| {
+                    streams
+                        .get(id)
+                        .is_some_and(|s| s.shard == Some(sh) && s.active())
+                });
+            }
+        }
+
         let after_plan = scenario.telemetry.then(std::time::Instant::now);
 
         // 5. Serve the epoch: each alive shard runs its residents' slice
         //    through the virtual-time fleet engine; unplaced streams'
         //    arrivals drop on the floor. Epoch quotas carry fractional
         //    arrival credit so sub-epoch-rate streams (fps × tick < 1)
-        //    still arrive at their true long-run rate.
+        //    still arrive at their true long-run rate. A rate profile is
+        //    sampled at the epoch base (piecewise-constant over the
+        //    epoch): `rate_at` equals `fps` for flat streams.
         let mut quotas: Vec<u64> = vec![0; streams.len()];
         for (i, s) in streams.iter_mut().enumerate() {
             if !s.active() {
                 continue;
             }
-            s.arrival_credit += s.spec.fps * tick;
+            s.arrival_credit += s.spec.rate_at(t0) * tick;
             let q = (s.arrival_credit.floor().max(0.0) as u64).min(s.remaining());
             s.arrival_credit -= q as f64;
             quotas[i] = q;
@@ -1048,11 +1157,32 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 }
                 let mut spec = s.spec.clone();
                 spec.num_frames = quotas[i];
+                // The slice serves this epoch's quota at the profiled
+                // instantaneous rate, so a ramp phase arrives as a
+                // genuinely faster process (unchanged for flat streams).
+                spec.fps = s.spec.rate_at(t0);
                 specs.push(spec);
                 idx_map.push(i);
             }
             if specs.is_empty() {
                 continue;
+            }
+            // Forecast fusion at the serve boundary: arm the admission
+            // burst-hold when a tight prediction says the current
+            // overload clears, and hand the autoscaler the predicted
+            // Σλ as its demand hint. Both are no-ops when forecasting
+            // is off or the band is loose.
+            let mut admission = scenario.admission.clone();
+            if let Some(fc) = forecasters[sh].as_ref() {
+                let offered: f64 = idx_map
+                    .iter()
+                    .map(|&i| streams[i].spec.demand_at(t0))
+                    .sum();
+                let cap_now = pools[sh].iter().map(|d| d.rate()).sum::<f64>() * util;
+                admission.hold = should_hold(fc.cfg(), offered, cap_now, fc.predict().as_ref());
+                if let Some(scaler) = scalers[sh].as_mut() {
+                    scaler.set_forecast_demand(fc.digest_rate());
+                }
             }
             let slice_seed = scenario
                 .seed
@@ -1067,7 +1197,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                     // every placement verb takes.
                     let (report, scale_events) = scaler.run_slice(
                         &mut pools[sh],
-                        &scenario.admission,
+                        &admission,
                         specs,
                         &idx_map,
                         t0,
@@ -1081,7 +1211,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                 }
                 None => {
                     let mut sub = Scenario::new(pools[sh].clone(), specs)
-                        .with_admission(scenario.admission.clone())
+                        .with_admission(admission.clone())
                         .with_seed(slice_seed);
                     if let Some(gate) = &scenario.gate {
                         sub = sub.with_gate(gate.clone());
@@ -1122,6 +1252,21 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
                     } else {
                         streams[i].latency.push(lat);
                     }
+                }
+            }
+            // Feed the forecaster the slice's realised arrival rates
+            // (granted quota over the tick) — learned from what was
+            // served, never peeked from the declared profile. The
+            // divisor takes the exact FP round-trip the remote shard
+            // server takes when it recovers the interval from its next
+            // poll (`at / epoch` with `at = epoch·tick`), so learned
+            // rates — and therefore forecast digests — stay
+            // bit-identical across transports.
+            if let Some(fc) = forecasters[sh].as_mut() {
+                let next = (epoch + 1) as f64;
+                let flush_tick = next * tick / next;
+                for (k, &i) in idx_map.iter().enumerate() {
+                    fc.observe(i, report.streams[k].metrics.frames_total as f64 / flush_tick);
                 }
             }
             let slice_busy = report.device_busy.iter().sum::<f64>();
@@ -1217,6 +1362,7 @@ pub fn run_sharded(scenario: &ShardScenario) -> ShardReport {
         telemetry,
         phase_timings,
         plan_stats,
+        forecast_trace,
     }
 }
 

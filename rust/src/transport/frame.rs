@@ -382,6 +382,13 @@ mod tests {
                     }),
                     telemetry: rng.chance(0.5),
                     token: rng.chance(0.5).then(|| format!("tok{}", rng.below(1000))),
+                    forecast: rng.chance(0.4).then(|| crate::forecast::ForecastConfig {
+                        alpha: rng.range(0.05, 1.0),
+                        period: rng.below(48) as usize,
+                        band: rng.range(0.0, 0.5),
+                        hold_window: rng.below(6) as usize,
+                        ..crate::forecast::ForecastConfig::default()
+                    }),
                     ..crate::control::caps::SessionCaps::default()
                 },
             },
@@ -410,6 +417,11 @@ mod tests {
                 at: rng.range(0.0, 1e4),
                 capacity: rng.range(0.0, 100.0),
                 committed: rng.range(0.0, 100.0),
+                forecast: if rng.chance(0.5) {
+                    Some(rng.range(0.0, 100.0))
+                } else {
+                    None
+                },
             },
             5 => TransportMsg::Tick {
                 epoch: rng.below(1000) as usize,

@@ -101,11 +101,16 @@ pub enum TransportMsg {
     /// Coordinator → shard: publish your headroom digest for `epoch`.
     Poll { epoch: usize, at: f64 },
     /// Shard → coordinator: the headroom digest ([`Headroom`] shape).
+    /// `forecast` is the shard's confidence-gated forecast-Σλ slot
+    /// (`None` when the shard runs no forecaster or its band is loose);
+    /// both codecs treat it as optional, so legacy digests without the
+    /// slot still decode.
     Digest {
         shard: usize,
         at: f64,
         capacity: f64,
         committed: f64,
+        forecast: Option<f64>,
     },
     /// Coordinator → shard: serve one epoch slice. `quotas` pairs global
     /// stream ids with this epoch's arrival counts, in global id order;
@@ -147,11 +152,13 @@ impl TransportMsg {
                 at,
                 capacity,
                 committed,
+                forecast,
             } => Some(Headroom {
                 shard: *shard,
                 at: *at,
                 capacity: *capacity,
                 committed: *committed,
+                forecast: *forecast,
             }),
             _ => None,
         }
@@ -239,12 +246,19 @@ impl TransportMsg {
                 at,
                 capacity,
                 committed,
+                forecast,
             } => {
                 o.insert("msg".to_string(), Json::Str("digest".to_string()));
                 o.insert("shard".to_string(), Json::Num(*shard as f64));
                 o.insert("at".to_string(), Json::Num(*at));
                 o.insert("capacity".to_string(), Json::Num(*capacity));
                 o.insert("committed".to_string(), Json::Num(*committed));
+                // Optional forecast-Σλ slot: omitted when absent, so
+                // forecast-free digests render byte-identical to
+                // pre-forecast builds (and legacy decoders ignore it).
+                if let Some(f) = forecast {
+                    o.insert("forecast".to_string(), Json::Num(*f));
+                }
             }
             TransportMsg::Tick {
                 epoch,
@@ -398,6 +412,15 @@ impl TransportMsg {
                 at: req_f64(v, "at")?,
                 capacity: req_f64(v, "capacity")?,
                 committed: req_f64(v, "committed")?,
+                // Absent or null → no forecast slot (legacy digests);
+                // present but mistyped is an error, not a default.
+                forecast: match v.get("forecast") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => Some(
+                        j.as_f64()
+                            .ok_or_else(|| WireError::new("digest forecast must be a number"))?,
+                    ),
+                },
             }),
             "tick" => {
                 let seed = req_str(v, "seed")?
@@ -540,6 +563,14 @@ mod tests {
             at: 30.0,
             capacity: 9.5,
             committed: 7.25,
+            forecast: None,
+        });
+        roundtrip(&TransportMsg::Digest {
+            shard: 2,
+            at: 31.0,
+            capacity: 9.5,
+            committed: 7.25,
+            forecast: Some(8.375),
         });
         roundtrip(&TransportMsg::Tick {
             epoch: 3,
@@ -758,6 +789,11 @@ mod tests {
                     gate,
                     telemetry: rng.chance(0.5),
                     token: rng.chance(0.5).then(|| format!("tok{}", rng.below(100))),
+                    forecast: rng.chance(0.3).then(|| crate::forecast::ForecastConfig {
+                        period: rng.below(24) as usize,
+                        band: rng.range(0.05, 0.5),
+                        ..crate::forecast::ForecastConfig::default()
+                    }),
                     ..SessionCaps::default()
                 },
             };
@@ -832,11 +868,82 @@ mod tests {
             at: 10.0,
             capacity: 9.5,
             committed: 4.0,
+            forecast: None,
         };
         let h = msg.as_digest().expect("digest");
         assert_eq!(h.shard, 2);
         assert_eq!(h.capacity, 9.5);
+        assert_eq!(h.forecast, None);
+        let msg = TransportMsg::Digest {
+            shard: 2,
+            at: 10.0,
+            capacity: 9.5,
+            committed: 4.0,
+            forecast: Some(6.5),
+        };
+        assert_eq!(msg.as_digest().expect("digest").forecast, Some(6.5));
         assert!(TransportMsg::Bye.as_digest().is_none());
+    }
+
+    #[test]
+    fn digest_forecast_slot_is_forward_compatible_in_both_codecs() {
+        use crate::control::binary::{decode_msg, encode_msg};
+        use crate::util::prop::{check, Config};
+        // Legacy JSON digest (no forecast key): decodes with the slot
+        // absent, and its re-rendering stays byte-identical (no key).
+        let legacy = r#"{"at":30,"capacity":9.5,"committed":7.25,"msg":"digest","shard":0}"#;
+        let msg = TransportMsg::decode(legacy).expect("legacy digest decodes");
+        assert_eq!(
+            msg.as_digest().expect("headroom shape").forecast,
+            None
+        );
+        assert_eq!(msg.encode(), legacy);
+        // Legacy *binary* digest: bytes that end at `committed` decode
+        // with the slot absent, and a forecast-free encode reproduces
+        // exactly those bytes.
+        let bytes = encode_msg(&msg);
+        let back = decode_msg(&bytes).expect("legacy binary digest decodes");
+        assert_eq!(back, msg);
+        // A null forecast is the explicit absent form.
+        assert!(
+            TransportMsg::decode(
+                r#"{"msg":"digest","shard":0,"at":1,"capacity":2,"committed":1,"forecast":null}"#
+            )
+            .expect("null forecast")
+            .as_digest()
+            .unwrap()
+            .forecast
+            .is_none()
+        );
+        // A mistyped forecast is an error, not a default.
+        assert!(TransportMsg::decode(
+            r#"{"msg":"digest","shard":0,"at":1,"capacity":2,"committed":1,"forecast":"soon"}"#
+        )
+        .is_err());
+        // Property: random digests with and without the slot round-trip
+        // through both codecs, and the two codecs agree.
+        check("digest forecast slot roundtrip", Config::default(), |rng| {
+            let msg = TransportMsg::Digest {
+                shard: rng.below(64) as usize,
+                at: rng.range(0.0, 1e4),
+                capacity: rng.range(0.0, 100.0),
+                committed: rng.range(0.0, 100.0),
+                forecast: if rng.chance(0.5) {
+                    Some(rng.range(0.0, 100.0))
+                } else {
+                    None
+                },
+            };
+            let back = TransportMsg::decode(&msg.encode()).map_err(|e| e.to_string())?;
+            if back != msg {
+                return Err(format!("json decoded {back:?} != original {msg:?}"));
+            }
+            let back = decode_msg(&encode_msg(&msg)).map_err(|e| e.to_string())?;
+            if back != msg {
+                return Err(format!("binary decoded {back:?} != original {msg:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -16,7 +16,7 @@ use eva::experiments::churn::{churn_chaos, churn_scenario, CHURN_GOSSIP};
 use eva::fleet::{AdmissionPolicy, StreamSpec};
 use eva::shard::{
     run_sharded, run_sharded_remote, serve_shard, serve_shard_sessions, RemoteShard,
-    RemoteTransport,
+    RemoteTransport, ShardScenario,
 };
 use eva::transport::{
     connect_with_backoff, Endpoint, FrameDecoder, Listener, TransportMsg, TRANSPORT_VERSION,
@@ -179,6 +179,77 @@ fn auth_failure_mid_backoff_leaves_the_listener_serving() {
     conn.send(&TransportMsg::Bye).expect("bye");
     drop(conn);
     server.join().expect("server thread").expect("server ok");
+}
+
+/// Warm rejoin vs cold join under sustained overload: the scaler
+/// snapshot carried across a restart must shorten the breach transient.
+///
+/// While an autoscaled shard's pool is short of the offered load, its
+/// p99 sits out of bound and the controller attaches one device per
+/// cooldown — so the duration of that attach ramp *is* the p99
+/// transient, measured here as the time from (re)join to the shard's
+/// last breach-driven attach. A cold join at 2.5× load replays the full
+/// cooldown-spaced ramp; a warm rejoin restores the scaled pool and
+/// cooldown clock ([`ScalerState`] carry), so its transient must be
+/// strictly shorter, with strictly fewer repair attaches.
+#[test]
+fn warm_rejoin_transient_is_strictly_shorter_than_the_cold_join_ramp() {
+    let seed = soak_seed(239);
+    const GOSSIP: f64 = 10.0;
+    const FAIL_EPOCH: usize = 4;
+    const REJOIN_EPOCH: usize = 6;
+    // 10 × 2.5-FPS cams vs two 2-device seed pools (Σμ 10): every shard
+    // must roughly triple its pool, so the cold ramp spans several
+    // cooldowns and a carried snapshot has real state to save.
+    let streams: Vec<StreamSpec> = (0..10)
+        .map(|i| StreamSpec::new(&format!("cam{i}"), 2.5, 300).with_window(4))
+        .collect();
+    let scenario = ShardScenario::builder(vec![pool(2, 2.5), pool(2, 2.5)], streams)
+        .gossip(GOSSIP)
+        .epochs(12)
+        .seed(seed)
+        .autoscale(AutoscaleConfig {
+            device_rate: 2.5,
+            max_devices: 8,
+            cooldown: 5.0,
+            ..AutoscaleConfig::default()
+        })
+        .restart(0, FAIL_EPOCH, REJOIN_EPOCH)
+        .build();
+    let report = run_sharded(&scenario);
+    let t_fail = FAIL_EPOCH as f64 * GOSSIP;
+    let t_rejoin = REJOIN_EPOCH as f64 * GOSSIP;
+    // Shard 0's controller attach times, absolute shard-clock seconds.
+    let attaches: Vec<f64> = report
+        .control_log
+        .iter()
+        .filter(|c| c.shard == 0 && c.event.origin == ControlOrigin::Controller)
+        .filter(|c| matches!(c.event.as_action(), Some(ControlAction::AttachDevice(_))))
+        .map(|c| c.event.at)
+        .collect();
+    let cold: Vec<f64> = attaches.iter().copied().filter(|&t| t < t_fail).collect();
+    let warm: Vec<f64> = attaches.iter().copied().filter(|&t| t >= t_rejoin).collect();
+    // The cold join must pay a real cooldown-spaced ramp...
+    assert!(
+        cold.len() >= 2,
+        "seed {seed}: cold join must ramp over several attaches: {attaches:?}"
+    );
+    let cold_transient = cold.iter().cloned().fold(0.0, f64::max);
+    assert!(cold_transient > 0.0, "seed {seed}: {cold:?}");
+    // ...and the warm rejoin must not replay it: strictly fewer repair
+    // attaches, strictly shorter breach window.
+    let warm_transient = warm.iter().cloned().fold(0.0, f64::max).max(t_rejoin) - t_rejoin;
+    assert!(
+        warm.len() < cold.len(),
+        "seed {seed}: warm rejoin replayed the ramp: cold {cold:?} vs warm {warm:?}"
+    );
+    assert!(
+        warm_transient < cold_transient,
+        "seed {seed}: post-rejoin transient {warm_transient:.1}s must be strictly shorter than the cold-join ramp {cold_transient:.1}s"
+    );
+    // The restart actually happened and the shard came back.
+    assert!(report.shard_alive[0], "seed {seed}: shard 0 must rejoin");
+    assert!(report.orphan_count() > 0, "seed {seed}: the failure must orphan streams");
 }
 
 /// The 8-byte frame header + JSON payload a pre-caps encoder wrote,

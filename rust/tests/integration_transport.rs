@@ -146,6 +146,44 @@ fn sharded_autoscale_parity_is_exact_over_tcp_and_uds() {
     }
 }
 
+/// Forecast parity pin: the fused diurnal run — forecasters observing
+/// every epoch, the predicted Σλ riding gossip digests, the hint
+/// steering each shard's autoscale floor — produces *bit-identical*
+/// forecast-Σλ digest sequences (and identical frame accounting and
+/// control logs) in-process and over tcp/uds. Seed comes from
+/// `EVA_SOAK_SEED` when set (the CI soak step re-runs this with
+/// distinct seeds; the name carries "autoscale" so the soak filter
+/// picks it up).
+#[test]
+fn forecast_fused_autoscale_digests_are_exact_over_tcp_and_uds() {
+    let seed = std::env::var("EVA_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(137);
+    let scenario = eva::experiments::forecast::diurnal_scenario(seed, true);
+    let inproc = run_sharded(&scenario);
+    assert!(
+        !inproc.forecast_trace.is_empty(),
+        "seed {seed}: the fused run must publish forecast digests"
+    );
+    for transport in [RemoteTransport::Tcp, RemoteTransport::Uds] {
+        let remote = run_sharded_remote(&scenario, transport).expect("remote fused run");
+        let label = transport.label();
+        // Bit-equality on the published (epoch, shard, Σλ) sequence: the
+        // remote forecaster mirror observed the same windows in the same
+        // order with the same arithmetic.
+        assert_eq!(remote.forecast_trace, inproc.forecast_trace, "{label} seed {seed}");
+        assert_eq!(remote.total_frames(), inproc.total_frames(), "{label} seed {seed}");
+        assert_eq!(
+            remote.total_processed(),
+            inproc.total_processed(),
+            "{label} seed {seed}"
+        );
+        assert_eq!(remote.migrations, inproc.migrations, "{label} seed {seed}");
+        assert_eq!(remote.control_log, inproc.control_log, "{label} seed {seed}");
+    }
+}
+
 /// Telemetry pin: the metric registry a remote coordinator assembles
 /// from per-epoch `TransportMsg::Telemetry` snapshots over tcp and uds
 /// is *byte-identical* (JSON snapshot and text exposition alike) to the
